@@ -1,0 +1,73 @@
+//! Compare sparsity schemes end-to-end on the host executors and the
+//! mobile cost model: the Table 2/3 story in one program.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example prune_compare
+//! ```
+
+use rt3d::codegen;
+use rt3d::device::{self, DeviceProfile, ExecutorClass};
+use rt3d::executors::{EngineKind, NativeEngine};
+use rt3d::model::Model;
+use rt3d::tensor::Tensor5;
+
+fn median_time<F: FnMut() -> ()>(mut f: F, reps: usize) -> f64 {
+    let mut ts: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ts[ts.len() / 2]
+}
+
+fn main() -> rt3d::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    println!(
+        "{:<10} {:<12} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "model", "engine", "host ms", "speedup", "GFLOPs", "simCPU ms", "simGPU ms"
+    );
+    for name in ["c3d", "r2plus1d", "s3d"] {
+        let Ok(model) = Model::load(&dir, name) else { continue };
+        let input = model.manifest.input;
+        let clip =
+            Tensor5::random([1, input[0], input[1], input[2], input[3]], 3);
+        let cpu = DeviceProfile::mobile_cpu();
+        let gpu = DeviceProfile::mobile_gpu();
+        let mut base = None;
+        for (label, kind, sparse) in [
+            ("naive", EngineKind::Naive, false),
+            ("untuned", EngineKind::Untuned, false),
+            ("rt3d-dense", EngineKind::Rt3d, false),
+            ("rt3d-kgs", EngineKind::Rt3d, true),
+        ] {
+            let engine = NativeEngine::new(&model, kind, sparse);
+            let reps = if kind == EngineKind::Naive { 1 } else { 3 };
+            let t = median_time(|| { engine.forward(&clip); }, reps);
+            let convs = codegen::compile_model(&model, sparse);
+            let class = match kind {
+                EngineKind::Naive => ExecutorClass::Naive,
+                EngineKind::Untuned => ExecutorClass::Untuned,
+                EngineKind::Rt3d => ExecutorClass::Rt3d,
+            };
+            let (sc, _) = device::model_cost(&convs, class, &cpu, 1);
+            let (sg, _) = device::model_cost(&convs, class, &gpu, 1);
+            let b = *base.get_or_insert(t);
+            println!(
+                "{:<10} {:<12} {:>9.1} {:>9.1}x {:>10.2} {:>11.1} {:>11.1}",
+                name,
+                label,
+                t * 1e3,
+                b / t,
+                engine.conv_flops() as f64 / 1e9,
+                sc * 1e3,
+                sg * 1e3
+            );
+        }
+    }
+    println!("\n(speedup columns relative to the naive PyTorch-Mobile-class baseline,");
+    println!(" matching the speedup columns of paper Table 2)");
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Quickstart: load the C3D artifact, run one clip through both execution
+//! paths (native RT3D executors and the PJRT-compiled HLO), and print the
+//! predictions.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use rt3d::executors::{EngineKind, NativeEngine};
+use rt3d::model::Model;
+use rt3d::runtime::Runtime;
+use rt3d::workload;
+
+fn main() -> rt3d::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let model = Model::load(&dir, "c3d")?;
+    let input = model.manifest.input;
+    println!(
+        "loaded {}: input={:?}, dense {:.2} GFLOPs/clip",
+        model.manifest.model,
+        input,
+        model.manifest.flops_dense as f64 / 1e9
+    );
+
+    // A labelled synthetic clip (class 4 = clockwise rotation).
+    let label = 4;
+    let clip = workload::make_clip(label, 7, input[1], input[2]);
+
+    // Path 1: native RT3D executors (dense plans).
+    let engine = NativeEngine::new(&model, EngineKind::Rt3d, false);
+    let t0 = std::time::Instant::now();
+    let logits = engine.forward(&clip);
+    println!(
+        "native rt3d: {:?} -> predicted class {} ({:.1} ms)",
+        &logits.row(0)[..model.manifest.num_classes.min(4)],
+        argmax(logits.row(0)),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // Path 2: the AOT-compiled HLO through PJRT (three-layer path).
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let exe = rt.load(
+        model.hlo_path("dense_xla_b1").expect("artifact missing"),
+        [1, input[0], input[1], input[2], input[3]],
+    )?;
+    println!("compiled dense_xla_b1 in {:.2}s", exe.compile_time_s);
+    let t0 = std::time::Instant::now();
+    let pjrt_logits = exe.run(&clip.data)?;
+    println!(
+        "pjrt xla:    {:?} -> predicted class {} ({:.1} ms)",
+        &pjrt_logits[..model.manifest.num_classes.min(4)],
+        argmax(&pjrt_logits),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // Path 3: sparse (pruned) plans — same prediction, fewer FLOPs.
+    let sparse = NativeEngine::new(&model, EngineKind::Rt3d, true);
+    let t0 = std::time::Instant::now();
+    let slogits = sparse.forward(&clip);
+    println!(
+        "native kgs:  {:?} -> predicted class {} ({:.1} ms, {:.2} GFLOPs)",
+        &slogits.row(0)[..model.manifest.num_classes.min(4)],
+        argmax(slogits.row(0)),
+        t0.elapsed().as_secs_f64() * 1e3,
+        sparse.conv_flops() as f64 / 1e9
+    );
+    println!("true label: {label}");
+    Ok(())
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}

@@ -1,0 +1,40 @@
+//! E7 driver: sweep kernel-group sizes (g_M x g_N) on a synthesized conv
+//! layer, reproducing the paper's offline group-size selection (§3: g_N=4,
+//! g_M=4 or 8 "preferred to match the SIMD parallelism").
+//!
+//! ```sh
+//! cargo run --release --example tune_groups
+//! ```
+
+use rt3d::codegen::tuner::time_group_size;
+
+fn main() {
+    println!("KGS layer 64x64x(8,16,16), 3x FLOPs pruning, per group size:");
+    println!("{:>8} {:>12} {:>14}", "g_MxG_N", "latency ms", "flops frac");
+    let mut best: Option<(f64, (usize, usize))> = None;
+    for (g_m, g_n) in [
+        (2usize, 2usize),
+        (2, 4),
+        (4, 2),
+        (4, 4),
+        (8, 4),
+        (4, 8),
+        (8, 8),
+        (16, 8),
+        (16, 16),
+    ] {
+        let (secs, frac) =
+            time_group_size(64, 64, [8, 16, 16], g_m, g_n, 1.0 / 3.0, 5);
+        println!("{:>5}x{:<3} {:>10.2}ms {:>13.3}", g_m, g_n, secs * 1e3, frac);
+        if best.map(|(b, _)| secs < b).unwrap_or(true) {
+            best = Some((secs, (g_m, g_n)));
+        }
+    }
+    if let Some((secs, (g_m, g_n))) = best {
+        println!(
+            "\nbest: {g_m}x{g_n} at {:.2} ms — paper prefers 4x4 / 8x4; larger \
+             groups stop helping speed while costing accuracy (Table 1 side)",
+            secs * 1e3
+        );
+    }
+}

@@ -1,0 +1,1 @@
+"""Experiment harnesses regenerating the paper's tables (DESIGN.md §5)."""

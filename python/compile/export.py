@@ -1,0 +1,312 @@
+"""L2 -> L3 bridge: lower models to HLO text + dump a weights/masks manifest.
+
+Artifacts per model variant (written to ``artifacts/``):
+
+  * ``<tag>.hlo.txt``     — HLO text of the jitted forward pass (dense via the
+    Pallas GEMM kernel, sparse via the compacted KGS/Vanilla Pallas kernels;
+    plus plain-XLA variants for high-throughput serving). HLO **text** is the
+    interchange format — jax>=0.5 serialized protos use 64-bit ids that
+    xla_extension 0.5.1 rejects (see /opt/xla-example/README.md).
+  * ``<model>.manifest.json`` — the nested layer IR annotated with weight /
+    mask tensor refs (offset+shape into the .bin) and the HLO file table.
+    The rust native executors interpret exactly this IR; the rust *codegen*
+    module re-derives the compacted layouts from the masks (the compiler
+    half of the paper lives in rust).
+  * ``<model>.bin``       — little-endian tensor pool (f32 weights, u8 masks).
+"""
+
+from __future__ import annotations
+
+import copy
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import nn
+from .kernels import ref as kref
+from .kernels.conv3d_kgs import compact_kgs, conv3d_kgs
+from .kernels.conv3d_vanilla import compact_vanilla, conv3d_vanilla
+from .pruning import flops as F
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    CRITICAL: the default printer elides big constants as ``constant({...})``
+    which the rust-side text parser silently reads as ZEROS — every baked-in
+    weight tensor would vanish. Print with ``print_large_constants=True``.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax's printer emits source_end_line/... metadata attributes that the
+    # 0.5.1-era HLO text parser rejects; strip metadata entirely.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def lower_forward(specs, params, batch, in_shape, *, mode="pallas",
+                  masks=None):
+    """jit+lower the model forward at a fixed batch size; returns HLO text."""
+
+    def fwd(x):
+        return (nn.forward(specs, params, x, mode=mode, masks=masks),)
+
+    spec = jax.ShapeDtypeStruct((batch, *in_shape), jnp.float32)
+    return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+# ---------------------------------------------------------------------------
+# Sparse deploy forward (compacted Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def build_sparse_forward(specs, params, unit_masks, scheme_name, g_m, g_n):
+    """Forward pass where every masked conv runs the compacted sparse kernel.
+
+    Compaction happens here (export time); the index/weight constants are
+    baked into the lowered HLO — the moral equivalent of the paper's
+    compiler-generated weight layout.
+    """
+    compacted = {}
+    for s in nn.walk_convs(specs):
+        name = s["name"]
+        if name not in unit_masks:
+            continue
+        w = params[name]["w"]
+        um = unit_masks[name]
+        if scheme_name == "kgs":
+            wc, idx, kc = compact_kgs(w, um, g_m, g_n)
+        elif scheme_name == "vanilla":
+            wc, idx, kc = compact_vanilla(w, um, g_m, g_n)
+        else:
+            raise ValueError(f"no compacted kernel for scheme {scheme_name!r}")
+        compacted[name] = (wc, idx)
+
+    def conv_impl(s, p, x):
+        name = s["name"]
+        stride = tuple(s["stride"])
+        padding = tuple(s["padding"])
+        kernel = tuple(s["kernel"])
+        wc, idx = compacted[name]
+        fn = conv3d_kgs if scheme_name == "kgs" else conv3d_vanilla
+        y = fn(
+            x, wc, idx, g_m=g_m, g_n=g_n, out_channels=s["out_ch"],
+            kernel=kernel, stride=stride, padding=padding,
+        )
+        y = y + p["b"][None, :, None, None, None]
+        if s["relu"]:
+            y = jax.nn.relu(y)
+        return y
+
+    def fwd_specs(ss, x):
+        for s in ss:
+            k = s["kind"]
+            if k == "conv3d":
+                if s["name"] in compacted:
+                    x = conv_impl(s, params[s["name"]], x)
+                else:
+                    x = nn.forward([s], params, x, mode="pallas")
+            elif k == "residual":
+                y = fwd_specs(s["body"], x)
+                sc = fwd_specs(s["shortcut"], x) if s["shortcut"] else x
+                x = jax.nn.relu(y + sc)
+            elif k == "concat":
+                x = jnp.concatenate(
+                    [fwd_specs(b, x) for b in s["branches"]], axis=1
+                )
+            else:
+                x = nn.forward([s], params, x, mode="pallas")
+        return x
+
+    return lambda x: fwd_specs(specs, x)
+
+
+def lower_sparse_forward(specs, params, unit_masks, scheme_name, g_m, g_n,
+                         batch, in_shape):
+    fwd = build_sparse_forward(specs, params, unit_masks, scheme_name, g_m, g_n)
+    spec = jax.ShapeDtypeStruct((batch, *in_shape), jnp.float32)
+    return to_hlo_text(jax.jit(lambda x: (fwd(x),)).lower(spec))
+
+
+# ---------------------------------------------------------------------------
+# Tensor pool + manifest
+# ---------------------------------------------------------------------------
+
+
+class TensorPool:
+    """Append-only little-endian tensor pool backing the manifest refs."""
+
+    def __init__(self):
+        self._chunks = []
+        self._offset = 0  # bytes
+
+    def add(self, arr):
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype == np.bool_:
+            arr = arr.astype(np.uint8)
+        dtype = {np.float32: "f32", np.int32: "i32", np.uint8: "u8"}[
+            arr.dtype.type
+        ]
+        ref = {"offset": self._offset, "shape": list(arr.shape), "dtype": dtype}
+        raw = arr.tobytes()
+        self._chunks.append(raw)
+        self._offset += len(raw)
+        # 8-byte alignment for the next tensor.
+        pad = (-self._offset) % 8
+        if pad:
+            self._chunks.append(b"\0" * pad)
+            self._offset += pad
+        return ref
+
+    def write(self, path):
+        with open(path, "wb") as f:
+            for c in self._chunks:
+                f.write(c)
+
+
+def annotate_ir(specs, params, pool, unit_masks=None, weight_masks=None,
+                sparse_params=None):
+    """Deep-copy the IR, attaching weight/mask refs to conv + dense nodes.
+
+    ``params`` are the DENSE model weights (pre-pruning); when the sparse
+    deployment exists, ``sparse_params`` carries the pruned+retrained
+    weights (stored masked under "weights_sparse" so the two deployments
+    are independently correct).
+    """
+    out = []
+    for s in specs:
+        s = copy.copy(s)
+        k = s["kind"]
+        if k in ("conv3d", "dense"):
+            p = params[s["name"]]
+            s["weights"] = {
+                "w": pool.add(np.asarray(p["w"], dtype=np.float32)),
+                "b": pool.add(np.asarray(p["b"], dtype=np.float32)),
+            }
+            if sparse_params is not None:
+                sp = sparse_params[s["name"]]
+                w = np.asarray(sp["w"], dtype=np.float32)
+                if weight_masks and s["name"] in weight_masks:
+                    w = w * np.asarray(
+                        weight_masks[s["name"]], dtype=np.float32
+                    )
+                s["weights_sparse"] = {
+                    "w": pool.add(w),
+                    "b": pool.add(np.asarray(sp["b"], dtype=np.float32)),
+                }
+            if k == "conv3d" and unit_masks and s["name"] in unit_masks:
+                s["unit_mask"] = pool.add(
+                    np.asarray(unit_masks[s["name"]], dtype=bool)
+                )
+        elif k == "residual":
+            s["body"] = annotate_ir(s["body"], params, pool, unit_masks,
+                                    weight_masks, sparse_params)
+            s["shortcut"] = annotate_ir(s["shortcut"], params, pool,
+                                        unit_masks, weight_masks, sparse_params)
+        elif k == "concat":
+            s["branches"] = [
+                annotate_ir(b, params, pool, unit_masks, weight_masks,
+                            sparse_params)
+                for b in s["branches"]
+            ]
+        out.append(s)
+    return out
+
+
+def export_model(outdir, model_name, specs, params, *, in_shape=(3, 16, 32, 32),
+                 sparse=None, batches=(1, 4), eval_acc=None,
+                 pallas_batches=(1,), extra=None):
+    """Write all artifacts for one model.
+
+    sparse: optional dict {scheme, g_m, g_n, rate, unit_masks, weight_masks,
+    acc} — adds the sparse HLO + annotated masks.
+    """
+    os.makedirs(outdir, exist_ok=True)
+    pool = TensorPool()
+    unit_masks = sparse["unit_masks"] if sparse else None
+    weight_masks = sparse["weight_masks"] if sparse else None
+    sparse_params = sparse.get("params") if sparse else None
+    ir = annotate_ir(specs, params, pool, unit_masks, weight_masks,
+                     sparse_params)
+
+    hlo = {}
+    for b in batches:
+        text = lower_forward(specs, params, b, in_shape, mode="train")
+        fn = f"{model_name}_dense_xla_b{b}.hlo.txt"
+        with open(os.path.join(outdir, fn), "w") as f:
+            f.write(text)
+        hlo[f"dense_xla_b{b}"] = fn
+    for b in pallas_batches:
+        text = lower_forward(specs, params, b, in_shape, mode="pallas")
+        fn = f"{model_name}_dense_pallas_b{b}.hlo.txt"
+        with open(os.path.join(outdir, fn), "w") as f:
+            f.write(text)
+        hlo[f"dense_pallas_b{b}"] = fn
+    if sparse:
+        sp_params = sparse.get("params", params)
+        for b in pallas_batches:
+            text = lower_sparse_forward(
+                specs, sp_params, sparse["unit_masks"], sparse["scheme"],
+                sparse["g_m"], sparse["g_n"], b, in_shape,
+            )
+            fn = f"{model_name}_{sparse['scheme']}_pallas_b{b}.hlo.txt"
+            with open(os.path.join(outdir, fn), "w") as f:
+                f.write(text)
+            hlo[f"{sparse['scheme']}_pallas_b{b}"] = fn
+        # Masked-dense XLA variant (same numerics as sparse, fast to run).
+        for b in batches:
+            def mfwd(x):
+                return (
+                    nn.forward(specs, sp_params, x, mode="train",
+                               masks=sparse["weight_masks"]),
+                )
+
+            spec = jax.ShapeDtypeStruct((b, *in_shape), jnp.float32)
+            text = to_hlo_text(jax.jit(mfwd).lower(spec))
+            fn = f"{model_name}_{sparse['scheme']}_xla_b{b}.hlo.txt"
+            with open(os.path.join(outdir, fn), "w") as f:
+                f.write(text)
+            hlo[f"{sparse['scheme']}_xla_b{b}"] = fn
+
+    manifest = {
+        "model": model_name,
+        "input": list(in_shape),
+        "num_classes": int(
+            list(nn.walk_dense(specs))[-1]["out_dim"]
+            if list(nn.walk_dense(specs))
+            else 0
+        ),
+        "flops_dense": int(F.model_flops(specs, in_shape[0], tuple(in_shape[1:]))),
+        "layers": ir,
+        "hlo": hlo,
+        "bin": f"{model_name}.bin",
+        "eval_acc": eval_acc,
+    }
+    if sparse:
+        manifest["sparsity"] = {
+            "scheme": sparse["scheme"],
+            "g_m": sparse["g_m"],
+            "g_n": sparse["g_n"],
+            "rate": sparse["rate"],
+            "eval_acc": sparse.get("acc"),
+            "flops_sparse": int(
+                F.masked_model_flops(
+                    specs, sparse["weight_masks"], in_shape[0],
+                    tuple(in_shape[1:]),
+                )
+            ),
+        }
+    if extra:
+        manifest.update(extra)
+    pool.write(os.path.join(outdir, f"{model_name}.bin"))
+    with open(os.path.join(outdir, f"{model_name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest

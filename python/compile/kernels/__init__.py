@@ -1,0 +1,10 @@
+"""L1: Pallas conv3d kernels (dense, KGS-sparse, vanilla-sparse) + oracles."""
+
+from . import ref  # noqa: F401
+from .conv3d import conv3d, matmul  # noqa: F401
+from .conv3d_kgs import compact_kgs, conv3d_kgs, kgs_group_matmul  # noqa: F401
+from .conv3d_vanilla import (  # noqa: F401
+    compact_vanilla,
+    conv3d_vanilla,
+    vanilla_group_matmul,
+)

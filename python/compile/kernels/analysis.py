@@ -1,0 +1,136 @@
+"""L1 perf analysis: VMEM footprint + MXU utilization estimates per kernel.
+
+Pallas kernels run under ``interpret=True`` on CPU (the CPU PJRT plugin
+cannot execute Mosaic custom-calls), so wall-clock numbers here are
+meaningless for TPU. What *is* meaningful — and what this module computes —
+is the static schedule quality of each BlockSpec (DESIGN.md
+§Hardware-Adaptation):
+
+* **VMEM footprint**: bytes resident per grid step (all input blocks +
+  output block + accumulator). Must fit in ~16 MiB with headroom for
+  double buffering (x2).
+* **MXU utilization**: the fraction of each 128x128 systolic pass that
+  carries real data, from the tile shapes (a (g_M=4)-row GEMM tile wastes
+  124/128 rows; the dense kernel's 128x128 tiles are full).
+* **arithmetic intensity**: FLOPs per HBM byte, against the ~275 FLOP/byte
+  ridge of a TPUv4-class part — tells us whether a kernel is compute- or
+  bandwidth-bound at its tile shape.
+
+These numbers drive the kernel design choices recorded in EXPERIMENTS.md
+§Perf (L1): the KGS kernel batches g_M x g_N kernel groups into one grid
+axis precisely so its GEMM tile stays (g_M*groups_per_tile) wide, and the
+dense kernel uses 128x128x128 tiles.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 1024 * 1024
+MXU = 128  # systolic array dimension
+# TPUv4-class roofline: ~275 bf16 TFLOPs at ~1.2 TB/s HBM.
+RIDGE_FLOPS_PER_BYTE = 230.0
+
+
+@dataclass
+class KernelReport:
+    name: str
+    grid: tuple
+    vmem_bytes: int
+    vmem_frac: float
+    mxu_util: float
+    arithmetic_intensity: float
+    compute_bound: bool
+
+    def row(self):
+        return (
+            f"{self.name:<24} grid={str(self.grid):<18} "
+            f"vmem={self.vmem_bytes/2**20:6.2f}MiB ({self.vmem_frac*100:4.1f}%) "
+            f"mxu={self.mxu_util*100:5.1f}% ai={self.arithmetic_intensity:7.1f} "
+            f"{'compute' if self.compute_bound else 'memory'}-bound"
+        )
+
+
+def _mxu_tile_util(m, n, k):
+    """Fraction of MXU lanes busy for an (m x k) @ (k x n) tile."""
+    um = min(m, MXU) / MXU
+    un = min(n, MXU) / MXU
+    uk = min(k, MXU) / MXU
+    return um * un * uk ** 0  # k streams through; only m/n occupancy matters
+
+
+def dense_report(R, K, M, bm=128, bn=128, bk=128, dtype_bytes=4):
+    """Schedule quality of the dense im2col GEMM kernel (conv3d.py)."""
+    grid = (-(-R // bm), -(-M // bn), -(-K // bk))
+    vmem = dtype_bytes * (bm * bk + bk * bn + bm * bn)
+    # Effective tile occupancy accounts for ragged edges.
+    eff_m = R / (grid[0] * bm)
+    eff_n = M / (grid[1] * bn)
+    util = _mxu_tile_util(bm, bn, bk) * eff_m * eff_n
+    flops = 2 * R * K * M
+    bytes_moved = dtype_bytes * (R * K + K * M * grid[0] + R * M)
+    ai = flops / bytes_moved
+    return KernelReport(
+        "dense_im2col_gemm", grid, 2 * vmem, 2 * vmem / VMEM_BYTES,
+        util, ai, ai > RIDGE_FLOPS_PER_BYTE,
+    )
+
+
+def kgs_report(R, g_m, g_n, ks, kc, P, Q, br=128, dtype_bytes=4):
+    """Schedule quality of the KGS compacted group GEMM (conv3d_kgs.py).
+
+    Per grid step: w (g_m, g_n*kc), x slab (g_n*ks, br), out (g_m, br).
+    The g_m-row tile under-fills the MXU rows — the kernel amortizes this
+    by keeping br=128 output columns busy; utilization reported against a
+    g_m-row systolic pass.
+    """
+    grid = (P, -(-R // br), Q)
+    vmem = dtype_bytes * (g_m * g_n * kc + g_n * ks * br + g_m * br)
+    util = _mxu_tile_util(g_m, br, g_n * kc)
+    flops = 2 * P * Q * g_m * g_n * kc * R
+    bytes_moved = dtype_bytes * (
+        R * g_n * ks * Q  # each channel-group slab read once per p? no: per P
+        * P
+        + P * Q * g_m * g_n * kc
+        + P * g_m * R
+    )
+    ai = flops / bytes_moved
+    return KernelReport(
+        f"kgs_group_gemm(g={g_m}x{g_n},kc={kc})", grid, 2 * vmem,
+        2 * vmem / VMEM_BYTES, util, ai, ai > RIDGE_FLOPS_PER_BYTE,
+    )
+
+
+def c3d_layer_reports(width=8, frames=16, size=32, keep_frac=1 / 3.6):
+    """Reports for every c3d conv layer, dense + KGS variants."""
+    from ..models import build
+    from .. import nn
+    from ..pruning import flops as F
+
+    specs = build("c3d", width=width, frames=frames, size=size)
+    table = F.layer_table(specs, 3, (frames, size, size))
+    out = []
+    for s in nn.walk_convs(specs):
+        name = s["name"]
+        osp = table[name]["out_spatial"]
+        R = int(osp[0] * osp[1] * osp[2])
+        K = s["in_ch"] * 27
+        M = s["out_ch"]
+        out.append((name, dense_report(R, K, M)))
+        ks = 27
+        kc = max(1, round(ks * keep_frac))
+        P, Q = -(-M // 4), -(-s["in_ch"] // 4)
+        out.append((name, kgs_report(R, 4, 4, ks, kc, P, Q)))
+    return out
+
+
+def main():
+    print("L1 kernel schedule analysis (TPU mapping; interpret=True on CPU)")
+    print(f"VMEM budget {VMEM_BYTES>>20} MiB (x2 double-buffered), "
+          f"MXU {MXU}x{MXU}, ridge {RIDGE_FLOPS_PER_BYTE} FLOP/byte\n")
+    for name, rep in c3d_layer_reports():
+        print(f"{name:<10} {rep.row()}")
+
+
+if __name__ == "__main__":
+    main()

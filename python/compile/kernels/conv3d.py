@@ -1,0 +1,93 @@
+"""Dense conv3d as im2col + tiled Pallas GEMM (L1 hot-spot kernel).
+
+The paper's mobile code generator lowers every 3D CONV to an im2col GEMM and
+tiles it for NEON SIMD. The TPU adaptation (DESIGN.md §Hardware-Adaptation)
+tiles the GEMM for the MXU with VMEM staging expressed through BlockSpec:
+
+  grid = (R/bm, M/bn, K/bk)      # K innermost -> sequential accumulation
+  x tile (bm, bk) in VMEM, w tile (bk, bn) in VMEM, out tile (bm, bn)
+
+Run with interpret=True on CPU (Mosaic custom-calls cannot execute on the
+CPU PJRT plugin); the same BlockSpec schedule is what a real TPU would use.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default MXU-friendly tile sizes. bm*bk + bk*bn + bm*bn floats must fit VMEM
+# (~16 MiB); 128x128x128 uses 192 KiB -> deep double-buffering headroom.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile; accumulates over the K grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, w, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Tiled Pallas GEMM: (R, K) @ (K, M) -> (R, M), f32 accumulate."""
+    R, K = x.shape
+    K2, M = w.shape
+    assert K == K2
+    bm = min(bm, max(8, R))
+    bn = min(bn, max(8, M))
+    bk = min(bk, max(8, K))
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    Rp, Kp = xp.shape
+    _, Mp = wp.shape
+    grid = (Rp // bm, Mp // bn, Kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Mp), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:R, :M]
+
+
+def conv3d(x, w, *, stride=(1, 1, 1), padding=(0, 0, 0), bm=DEFAULT_BM,
+           bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Dense 3D convolution through the Pallas GEMM kernel.
+
+    x: (B, C, D, H, W), w: (M, C, Kd, Kh, Kw) -> (B, M, Do, Ho, Wo).
+    """
+    B, C, D, H, W = x.shape
+    M = w.shape[0]
+    kernel = w.shape[2:]
+    Do, Ho, Wo = ref.out_shape((D, H, W), kernel, stride, padding)
+    patches = ref.im2col(x, kernel, stride=stride, padding=padding)
+    out = matmul(patches, w.reshape(M, -1).T, bm=bm, bn=bn, bk=bk)
+    return out.reshape(B, Do, Ho, Wo, M).transpose(0, 4, 1, 2, 3)

@@ -1,0 +1,141 @@
+"""KGS-sparse conv3d: column-compacted per-group Pallas GEMM (paper §3).
+
+KGS prunes the same spatial location (kd,kh,kw) across all g_M x g_N kernels
+of a kernel group. After im2col, a pruned location removes g_N whole columns
+from the group's (g_M, g_N*Ks) weight matrix. Compile-time "codegen" here:
+
+  1. For group (p, q), gather the kept locations -> column index array.
+  2. Compact the weight matrix to (g_M, g_N*Kc) where Kc = kept locations
+     (padded to the per-layer max so the kernel stays a uniform dense GEMM —
+     exactly the paper's point that remaining compute is full-SIMD dense).
+  3. The Pallas kernel gathers the matching patch-matrix rows per group and
+     runs the *smaller dense* GEMM, accumulating across channel groups q.
+
+Grid: (P, R/bR, Qaxis) with q innermost for sequential accumulation.
+VMEM per step: w tile (g_M, g_N*Kc) + x tile (g_N*Ks, bR) + out (g_M, bR).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BR = 128
+
+
+def compact_kgs(w, mask, g_m, g_n):
+    """Compile-time weight compaction for the KGS kernel.
+
+    w: (M, C, Kd, Kh, Kw); mask: (P, Q, Ks) bool (True = kept).
+    Returns (wc, idx, kc):
+      wc:  (P, Q, g_M, g_N*Kc) f32 — compacted per-group weight matrices,
+           zero-padded where a group keeps fewer than Kc locations or where
+           M/C are not multiples of the group size.
+      idx: (P, Q, g_N*Kc) int32 — row indices into the group's im2col slab
+           (g_N*Ks rows, ordered (c_local, loc)); padding rows point at 0
+           with zero weights so they contribute nothing.
+      kc:  int — max kept locations over all groups of this layer.
+    """
+    w = np.asarray(w)
+    mask = np.asarray(mask)
+    M, C, Kd, Kh, Kw = w.shape
+    Ks = Kd * Kh * Kw
+    P, Q = ref.group_counts(M, C, g_m, g_n)
+    kc = max(1, int(mask.sum(axis=2).max()))
+    wc = np.zeros((P, Q, g_m, g_n * kc), dtype=np.float32)
+    idx = np.zeros((P, Q, g_n * kc), dtype=np.int32)
+    wflat = w.reshape(M, C, Ks)
+    for p in range(P):
+        for q in range(Q):
+            kept = np.nonzero(mask[p, q])[0]  # kept locations, ascending
+            for jn in range(g_n):
+                c = q * g_n + jn
+                if c >= C:
+                    continue
+                for t, loc in enumerate(kept):
+                    col = jn * kc + t
+                    # Row in the group's im2col slab: (c_local, loc) with the
+                    # slab ordered channel-major, matching ref.im2col columns.
+                    idx[p, q, col] = jn * Ks + loc
+                    for im in range(g_m):
+                        m = p * g_m + im
+                        if m < M:
+                            wc[p, q, im, col] = wflat[m, c, loc]
+    return jnp.asarray(wc), jnp.asarray(idx), kc
+
+
+def _kgs_kernel(idx_ref, w_ref, x_ref, o_ref):
+    """out[p-block, r-block] += Wc[p,q] @ gather(X[q], idx[p,q])."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    idx = idx_ref[0, 0]  # (g_N*Kc,)
+    xg = x_ref[0][idx, :]  # gather kept rows -> (g_N*Kc, bR)
+    o_ref[...] += jnp.dot(
+        w_ref[0, 0], xg, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("g_n", "ks", "br"))
+def kgs_group_matmul(patches_t, wc, idx, *, g_n, ks, br=DEFAULT_BR):
+    """Per-group compacted GEMM.
+
+    patches_t: (C*Ks, R) — transposed im2col matrix (column-major by channel).
+    wc: (P, Q, g_M, g_N*Kc), idx: (P, Q, g_N*Kc).
+    Returns (P*g_M, R).
+    """
+    P, Q, g_m, _ = wc.shape
+    CK, R = patches_t.shape
+    # Reshape the patch matrix into per-channel-group slabs (Q, g_N*Ks, R).
+    slab = g_n * ks
+    pad_ck = Q * slab - CK
+    if pad_ck:
+        patches_t = jnp.pad(patches_t, ((0, pad_ck), (0, 0)))
+    br = min(br, max(8, R))
+    rem = (-R) % br
+    if rem:
+        patches_t = jnp.pad(patches_t, ((0, 0), (0, rem)))
+    Rp = R + rem
+    xq = patches_t.reshape(Q, slab, Rp)
+    grid = (P, Rp // br, Q)
+    out = pl.pallas_call(
+        _kgs_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, idx.shape[2]), lambda p, r, q: (p, q, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, g_m, wc.shape[3]), lambda p, r, q: (p, q, 0, 0)
+            ),
+            pl.BlockSpec((1, slab, br), lambda p, r, q: (q, 0, r)),
+        ],
+        out_specs=pl.BlockSpec((g_m, br), lambda p, r, q: (p, r)),
+        out_shape=jax.ShapeDtypeStruct((P * g_m, Rp), jnp.float32),
+        interpret=True,
+    )(idx, wc, xq)
+    return out[:, :R]
+
+
+def conv3d_kgs(x, wc, idx, *, g_m, g_n, out_channels, kernel,
+               stride=(1, 1, 1), padding=(0, 0, 0), br=DEFAULT_BR):
+    """KGS-sparse 3D convolution using compile-time compacted weights.
+
+    x: (B, C, D, H, W); (wc, idx) from :func:`compact_kgs`.
+    Returns (B, out_channels, Do, Ho, Wo).
+    """
+    B, C, D, H, W = x.shape
+    Ks = int(np.prod(kernel))
+    Do, Ho, Wo = ref.out_shape((D, H, W), kernel, stride, padding)
+    patches = ref.im2col(x, kernel, stride=stride, padding=padding)
+    out = kgs_group_matmul(patches.T, wc, idx, g_n=g_n, ks=Ks, br=br)
+    out = out[:out_channels]  # drop filter-group padding rows
+    return out.reshape(out_channels, B, Do, Ho, Wo).transpose(1, 0, 2, 3, 4)

@@ -1,0 +1,117 @@
+"""Vanilla-sparse conv3d: whole-kernel-group skipping (paper §3).
+
+The Vanilla scheme prunes entire g_M x g_N kernel groups. Codegen compacts
+each filter-group row p to its list of *kept* channel groups; the Pallas
+kernel then iterates only over kept groups (padded to the per-layer max so
+the grid stays rectangular — padded slots carry zero weights and index 0).
+
+Grid: (P, R/bR, Qkeep) with the kept-group axis innermost for accumulation.
+The per-step GEMM is the full (g_M, g_N*Ks) x (g_N*Ks, bR) block — dense,
+full-SIMD, exactly like the dense kernel but with fewer q iterations.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BR = 128
+
+
+def compact_vanilla(w, mask, g_m, g_n):
+    """Compile-time compaction for the Vanilla kernel.
+
+    w: (M, C, Kd, Kh, Kw); mask: (P, Q) bool (True = group kept).
+    Returns (wc, qidx, qk):
+      wc:   (P, Qk, g_M, g_N*Ks) — kept groups' weight matrices (zero-padded).
+      qidx: (P, Qk) int32 — which channel group each slot reads.
+      qk:   int — max kept channel-groups over filter-group rows (>=1).
+    """
+    w = np.asarray(w)
+    mask = np.asarray(mask)
+    M, C, Kd, Kh, Kw = w.shape
+    Ks = Kd * Kh * Kw
+    P, Q = ref.group_counts(M, C, g_m, g_n)
+    assert mask.shape == (P, Q)
+    qk = max(1, int(mask.sum(axis=1).max()))
+    wc = np.zeros((P, qk, g_m, g_n * Ks), dtype=np.float32)
+    qidx = np.zeros((P, qk), dtype=np.int32)
+    wflat = w.reshape(M, C, Ks)
+    for p in range(P):
+        kept = np.nonzero(mask[p])[0]
+        for t, q in enumerate(kept):
+            qidx[p, t] = q
+            for jn in range(g_n):
+                c = q * g_n + jn
+                if c >= C:
+                    continue
+                for im in range(g_m):
+                    m = p * g_m + im
+                    if m < M:
+                        wc[p, t, im, jn * Ks : (jn + 1) * Ks] = wflat[m, c]
+    return jnp.asarray(wc), jnp.asarray(qidx), qk
+
+
+def _vanilla_kernel(qidx_ref, w_ref, x_ref, o_ref):
+    """out[p, r] += W[p, t] @ X[qidx[p, t]] over kept-group slots t."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = qidx_ref[0, 0]
+    xq = x_ref[q]  # dynamic channel-group select: (g_N*Ks, bR)
+    o_ref[...] += jnp.dot(
+        w_ref[0, 0], xq, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("g_n", "ks", "br"))
+def vanilla_group_matmul(patches_t, wc, qidx, *, g_n, ks, br=DEFAULT_BR):
+    """Group-skipping GEMM. patches_t: (C*Ks, R). Returns (P*g_M, R)."""
+    P, Qk, g_m, slab = wc.shape
+    CK, R = patches_t.shape
+    Q = -(-CK // slab)
+    pad_ck = Q * slab - CK
+    if pad_ck:
+        patches_t = jnp.pad(patches_t, ((0, pad_ck), (0, 0)))
+    br = min(br, max(8, R))
+    rem = (-R) % br
+    if rem:
+        patches_t = jnp.pad(patches_t, ((0, 0), (0, rem)))
+    Rp = R + rem
+    xq = patches_t.reshape(Q, slab, Rp)
+    grid = (P, Rp // br, Qk)
+    out = pl.pallas_call(
+        _vanilla_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda p, r, t: (p, t)),
+            pl.BlockSpec((1, 1, g_m, slab), lambda p, r, t: (p, t, 0, 0)),
+            # Full channel-group axis stays resident; the kernel selects the
+            # slab with a dynamic index (group skipping).
+            pl.BlockSpec((Q, slab, br), lambda p, r, t: (0, 0, r)),
+        ],
+        out_specs=pl.BlockSpec((g_m, br), lambda p, r, t: (p, r)),
+        out_shape=jax.ShapeDtypeStruct((P * g_m, Rp), jnp.float32),
+        interpret=True,
+    )(qidx, wc, xq)
+    return out[:, :R]
+
+
+def conv3d_vanilla(x, wc, qidx, *, g_m, g_n, out_channels, kernel,
+                   stride=(1, 1, 1), padding=(0, 0, 0), br=DEFAULT_BR):
+    """Vanilla-sparse 3D convolution with compile-time compacted weights."""
+    B, C, D, H, W = x.shape
+    Ks = int(np.prod(kernel))
+    Do, Ho, Wo = ref.out_shape((D, H, W), kernel, stride, padding)
+    patches = ref.im2col(x, kernel, stride=stride, padding=padding)
+    out = vanilla_group_matmul(patches.T, wc, qidx, g_n=g_n, ks=Ks, br=br)
+    out = out[:out_channels]
+    return out.reshape(out_channels, B, Do, Ho, Wo).transpose(1, 0, 2, 3, 4)

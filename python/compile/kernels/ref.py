@@ -1,0 +1,160 @@
+"""Pure-jnp correctness oracles for the RT3D conv3d kernels.
+
+Layouts (fixed across the whole stack, documented in DESIGN.md):
+  activations: NCDHW  -> (B, C, D, H, W)
+  weights:     OIDHW  -> (M, C, Kd, Kh, Kw)
+  im2col patch matrix columns are ordered (c, kd, kh, kw) row-major, i.e. the
+  same order as ``w.reshape(M, C*Kd*Kh*Kw)``.
+
+The kernel-group partition follows the paper (Sec. 3): the weight tensor is
+split along filters (M, group size g_M) and input channels (C, group size
+g_N); a *KGS unit* is one spatial location (kd,kh,kw) shared by the whole
+g_M x g_N kernel group.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv3d_ref(x, w, *, stride=(1, 1, 1), padding=(0, 0, 0)):
+    """Dense 3D convolution oracle via lax.conv_general_dilated.
+
+    x: (B, C, D, H, W) f32, w: (M, C, Kd, Kh, Kw) f32.
+    Returns (B, M, Do, Ho, Wo).
+    """
+    pads = [(p, p) for p in padding]
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=stride,
+        padding=pads,
+        dimension_numbers=("NCDHW", "OIDHW", "NCDHW"),
+    )
+
+
+def conv3d_naive(x, w, *, stride=(1, 1, 1), padding=(0, 0, 0)):
+    """Seven-loop numpy oracle (slow; used to validate conv3d_ref itself)."""
+    x = np.asarray(x)
+    w = np.asarray(w)
+    B, C, D, H, W = x.shape
+    M, C2, Kd, Kh, Kw = w.shape
+    assert C == C2
+    sd, sh, sw = stride
+    pd, ph, pw = padding
+    xp = np.pad(x, ((0, 0), (0, 0), (pd, pd), (ph, ph), (pw, pw)))
+    Do = (D + 2 * pd - Kd) // sd + 1
+    Ho = (H + 2 * ph - Kh) // sh + 1
+    Wo = (W + 2 * pw - Kw) // sw + 1
+    out = np.zeros((B, M, Do, Ho, Wo), dtype=np.float32)
+    for b in range(B):
+        for m in range(M):
+            for do in range(Do):
+                for ho in range(Ho):
+                    for wo in range(Wo):
+                        patch = xp[
+                            b,
+                            :,
+                            do * sd : do * sd + Kd,
+                            ho * sh : ho * sh + Kh,
+                            wo * sw : wo * sw + Kw,
+                        ]
+                        out[b, m, do, ho, wo] = np.sum(patch * w[m])
+    return jnp.asarray(out)
+
+
+def out_shape(in_shape, kernel, stride, padding):
+    """Spatial output sizes for a conv3d. All args are (d, h, w) triples."""
+    return tuple(
+        (i + 2 * p - k) // s + 1
+        for i, k, s, p in zip(in_shape, kernel, stride, padding)
+    )
+
+
+def im2col(x, kernel, *, stride=(1, 1, 1), padding=(0, 0, 0)):
+    """Extract conv3d patches as a GEMM-ready matrix.
+
+    Returns (B*Do*Ho*Wo, C*Kd*Kh*Kw) with column order (c, kd, kh, kw),
+    matching ``w.reshape(M, -1)``.
+    """
+    B, C, D, H, W = x.shape
+    Kd, Kh, Kw = kernel
+    pd, ph, pw = padding
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pd, pd), (ph, ph), (pw, pw)))
+    Do, Ho, Wo = out_shape((D, H, W), kernel, stride, padding)
+    sd, sh, sw = stride
+    # Gather index grids: output position o maps to input slice o*s : o*s+K.
+    di = (jnp.arange(Do) * sd)[:, None] + jnp.arange(Kd)[None, :]  # (Do, Kd)
+    hi = (jnp.arange(Ho) * sh)[:, None] + jnp.arange(Kh)[None, :]
+    wi = (jnp.arange(Wo) * sw)[:, None] + jnp.arange(Kw)[None, :]
+    p = xp[:, :, di]  # (B, C, Do, Kd, Hp, Wp)
+    p = p[:, :, :, :, hi]  # (B, C, Do, Kd, Ho, Kh, Wp)
+    p = p[:, :, :, :, :, :, wi]  # (B, C, Do, Kd, Ho, Kh, Wo, Kw)
+    # -> (B, Do, Ho, Wo, C, Kd, Kh, Kw)
+    p = jnp.transpose(p, (0, 2, 4, 6, 1, 3, 5, 7))
+    return p.reshape(B * Do * Ho * Wo, C * Kd * Kh * Kw)
+
+
+def conv3d_im2col_ref(x, w, *, stride=(1, 1, 1), padding=(0, 0, 0)):
+    """Dense conv3d through the im2col + GEMM formulation (pure jnp)."""
+    B, C, D, H, W = x.shape
+    M = w.shape[0]
+    kernel = w.shape[2:]
+    Do, Ho, Wo = out_shape((D, H, W), kernel, stride, padding)
+    patches = im2col(x, kernel, stride=stride, padding=padding)
+    out = patches @ w.reshape(M, -1).T  # (R, M)
+    return out.reshape(B, Do, Ho, Wo, M).transpose(0, 4, 1, 2, 3)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-group partition + masked (sparse) oracles
+# ---------------------------------------------------------------------------
+
+
+def group_counts(M, C, g_m, g_n):
+    """Number of (filter, channel) kernel groups: P = ceil(M/g_m), Q = ceil(C/g_n)."""
+    P = -(-M // g_m)
+    Q = -(-C // g_n)
+    return P, Q
+
+
+def kgs_mask_to_weight_mask(mask, M, C, kernel, g_m, g_n):
+    """Expand a KGS location mask into a full OIDHW weight mask.
+
+    mask: (P, Q, Ks) boolean — True = kept; Ks = Kd*Kh*Kw.
+    Returns (M, C, Kd, Kh, Kw) boolean.
+    """
+    Kd, Kh, Kw = kernel
+    P, Q = group_counts(M, C, g_m, g_n)
+    assert mask.shape == (P, Q, Kd * Kh * Kw), (mask.shape, (P, Q, Kd * Kh * Kw))
+    m_idx = jnp.arange(M) // g_m  # group row of each filter
+    c_idx = jnp.arange(C) // g_n  # group col of each channel
+    full = mask[m_idx][:, c_idx]  # (M, C, Ks)
+    return full.reshape(M, C, Kd, Kh, Kw)
+
+
+def vanilla_mask_to_weight_mask(mask, M, C, kernel, g_m, g_n):
+    """Expand a vanilla group mask (P, Q) boolean into an OIDHW weight mask."""
+    Kd, Kh, Kw = kernel
+    P, Q = group_counts(M, C, g_m, g_n)
+    assert mask.shape == (P, Q)
+    m_idx = jnp.arange(M) // g_m
+    c_idx = jnp.arange(C) // g_n
+    full = mask[m_idx][:, c_idx]  # (M, C)
+    return jnp.broadcast_to(full[:, :, None, None, None], (M, C, Kd, Kh, Kw))
+
+
+def filter_mask_to_weight_mask(mask, M, C, kernel):
+    """Expand a filter mask (M,) boolean into an OIDHW weight mask."""
+    Kd, Kh, Kw = kernel
+    assert mask.shape == (M,)
+    return jnp.broadcast_to(mask[:, None, None, None, None], (M, C, Kd, Kh, Kw))
+
+
+def conv3d_masked_ref(x, w, weight_mask, *, stride=(1, 1, 1), padding=(0, 0, 0)):
+    """Sparse conv oracle: dense conv with masked weights."""
+    return conv3d_ref(
+        x, w * weight_mask.astype(w.dtype), stride=stride, padding=padding
+    )

@@ -1,0 +1,16 @@
+"""Scaled-down C3D / R(2+1)D / S3D model zoo (paper workloads, DESIGN.md §2)."""
+
+from .c3d import c3d_specs  # noqa: F401
+from .r2plus1d import r2plus1d_specs  # noqa: F401
+from .s3d import s3d_specs  # noqa: F401
+
+MODEL_BUILDERS = {
+    "c3d": c3d_specs,
+    "r2plus1d": r2plus1d_specs,
+    "s3d": s3d_specs,
+}
+
+
+def build(name, **kw):
+    """Build the layer-spec IR for a named model."""
+    return MODEL_BUILDERS[name](**kw)

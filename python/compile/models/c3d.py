@@ -1,0 +1,47 @@
+"""Scaled C3D (Tran et al. 2015): 8 conv3d layers + pools + 2 FC.
+
+Same topology as the paper's 299 MB C3D; widths scaled by ``width`` (base
+width 8 vs the original 64) and input 16x32x32 vs 16x112x112 so the full
+train-prune-retrain pipeline runs on a single CPU core (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from .. import nn
+
+
+def c3d_specs(num_classes=8, in_ch=3, width=8, frames=16, size=32):
+    w1, w2, w3, w4, w5 = width, width * 2, width * 4, width * 8, width * 8
+
+    # Track spatial dims so the pool schedule adapts to small inputs
+    # (pools are skipped per-axis once that axis reaches 1).
+    dims = [frames, size, size]
+
+    def pool(kernel):
+        k = tuple(kk if d >= kk else 1 for kk, d in zip(kernel, dims))
+        for i in range(3):
+            dims[i] = (dims[i] - k[i]) // k[i] + 1
+        return nn.maxpool_spec(k)
+
+    specs = [
+        nn.conv3d_spec("conv1", in_ch, w1),
+        pool((1, 2, 2)),
+        nn.conv3d_spec("conv2", w1, w2),
+        pool((2, 2, 2)),
+        nn.conv3d_spec("conv3a", w2, w3),
+        nn.conv3d_spec("conv3b", w3, w3),
+        pool((2, 2, 2)),
+        nn.conv3d_spec("conv4a", w3, w4),
+        nn.conv3d_spec("conv4b", w4, w4),
+        pool((2, 2, 2)),
+        nn.conv3d_spec("conv5a", w4, w5),
+        nn.conv3d_spec("conv5b", w5, w5),
+        pool((2, 2, 2)),
+        nn.flatten_spec(),
+    ]
+    flat = w5 * dims[0] * dims[1] * dims[2]
+    specs += [
+        nn.dense_spec("fc6", flat, w5 * 2, relu=True),
+        nn.dense_spec("fc7", w5 * 2, num_classes),
+    ]
+    return specs

@@ -1,0 +1,58 @@
+"""Scaled S3D (Xie et al. 2018): separable spatio-temporal Inception-style
+network. Each "Sep" unit is a 1x3x3 spatial conv followed by a 3x1x1
+temporal conv; Inception-lite blocks concatenate a 1x1x1 branch with a Sep
+branch.
+"""
+
+from __future__ import annotations
+
+from .. import nn
+
+
+def _sep(name, in_ch, out_ch, stride=(1, 1, 1)):
+    sd, sh, sw = stride
+    return [
+        nn.conv3d_spec(
+            f"{name}_s", in_ch, out_ch, kernel=(1, 3, 3), stride=(1, sh, sw),
+            relu=True,
+        ),
+        nn.conv3d_spec(
+            f"{name}_t", out_ch, out_ch, kernel=(3, 1, 1), stride=(sd, 1, 1),
+            relu=True,
+        ),
+    ]
+
+
+def _inception(name, in_ch, c1, c2):
+    """Two branches: 1x1x1 (c1 ch) and 1x1x1->Sep3x3x3 (c2 ch), concat."""
+    b1 = [
+        nn.conv3d_spec(
+            f"{name}_b1", in_ch, c1, kernel=(1, 1, 1), padding=(0, 0, 0),
+            relu=True,
+        )
+    ]
+    b2 = [
+        nn.conv3d_spec(
+            f"{name}_b2r", in_ch, c2, kernel=(1, 1, 1), padding=(0, 0, 0),
+            relu=True,
+        )
+    ] + _sep(f"{name}_b2", c2, c2)
+    return nn.concat_spec(name, [b1, b2])
+
+
+def s3d_specs(num_classes=8, in_ch=3, width=8, frames=16, size=32):
+    w1, w2, w3 = width, width * 2, width * 4
+    specs = _sep("stem", in_ch, w1, stride=(1, 2, 2))
+    specs += [
+        nn.maxpool_spec((1, 2, 2)),
+        _inception("inc1", w1, w1, w1),
+        _inception("inc2", w1 * 2, w1, w2),
+        nn.maxpool_spec((2, 2, 2)),
+        _inception("inc3", w1 + w2, w2, w2),
+        _inception("inc4", w2 * 2, w2, w3),
+        nn.maxpool_spec((2, 2, 2)),
+        _inception("inc5", w2 + w3, w3, w3),
+        nn.avgpool_global_spec(),
+        nn.dense_spec("fc", w3 * 2, num_classes),
+    ]
+    return specs

@@ -1,0 +1,216 @@
+"""L2 model substrate: a small layer-spec IR shared with the rust runtime.
+
+A model is a list of nested layer specs (plain dicts, JSON-serializable so
+the same description drives the rust native executors via the artifact
+manifest):
+
+  {"kind": "conv3d", "name", "in_ch", "out_ch", "kernel", "stride",
+   "padding", "relu": bool}
+  {"kind": "maxpool3d", "kernel", "stride"}
+  {"kind": "avgpool_global"}
+  {"kind": "flatten"}
+  {"kind": "dense", "name", "in_dim", "out_dim", "relu": bool}
+  {"kind": "residual", "name", "body": [...], "shortcut": [...]}   # shortcut
+      may be [] for identity; output = relu(body(x) + shortcut(x))
+  {"kind": "concat", "name", "branches": [[...], ...]}  # channel concat
+
+Three conv implementations interpret the same IR:
+  * ``mode="train"``  — lax.conv (fast on CPU, differentiable)
+  * ``mode="pallas"`` — L1 dense Pallas GEMM kernel (deploy path)
+  * sparse deploy via :mod:`compile.export` which rewrites conv nodes to the
+    compacted KGS / Vanilla Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import ref as kref
+from .kernels.conv3d import conv3d as _pallas_conv3d
+
+
+# ---------------------------------------------------------------------------
+# Spec constructors
+# ---------------------------------------------------------------------------
+
+
+def conv3d_spec(name, in_ch, out_ch, kernel=(3, 3, 3), stride=(1, 1, 1),
+                padding=None, relu=True):
+    if padding is None:
+        padding = tuple(k // 2 for k in kernel)
+    return {
+        "kind": "conv3d",
+        "name": name,
+        "in_ch": int(in_ch),
+        "out_ch": int(out_ch),
+        "kernel": list(kernel),
+        "stride": list(stride),
+        "padding": list(padding),
+        "relu": bool(relu),
+    }
+
+
+def maxpool_spec(kernel, stride=None):
+    return {
+        "kind": "maxpool3d",
+        "kernel": list(kernel),
+        "stride": list(stride or kernel),
+    }
+
+
+def avgpool_global_spec():
+    return {"kind": "avgpool_global"}
+
+
+def flatten_spec():
+    return {"kind": "flatten"}
+
+
+def dense_spec(name, in_dim, out_dim, relu=False):
+    return {
+        "kind": "dense",
+        "name": name,
+        "in_dim": int(in_dim),
+        "out_dim": int(out_dim),
+        "relu": bool(relu),
+    }
+
+
+def residual_spec(name, body, shortcut=None):
+    return {
+        "kind": "residual",
+        "name": name,
+        "body": body,
+        "shortcut": shortcut or [],
+    }
+
+
+def concat_spec(name, branches):
+    return {"kind": "concat", "name": name, "branches": branches}
+
+
+def walk_convs(specs):
+    """Yield every conv3d spec (depth-first), including nested ones."""
+    for s in specs:
+        if s["kind"] == "conv3d":
+            yield s
+        elif s["kind"] == "residual":
+            yield from walk_convs(s["body"])
+            yield from walk_convs(s["shortcut"])
+        elif s["kind"] == "concat":
+            for b in s["branches"]:
+                yield from walk_convs(b)
+
+
+def walk_dense(specs):
+    for s in specs:
+        if s["kind"] == "dense":
+            yield s
+        elif s["kind"] == "residual":
+            yield from walk_dense(s["body"])
+            yield from walk_dense(s["shortcut"])
+        elif s["kind"] == "concat":
+            for b in s["branches"]:
+                yield from walk_dense(b)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(specs, seed=0):
+    """He-init all conv/dense weights. Returns {name: {"w","b"}} pytree."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for s in walk_convs(specs):
+        fan_in = s["in_ch"] * int(np.prod(s["kernel"]))
+        std = float(np.sqrt(2.0 / fan_in))
+        w = rng.standard_normal(
+            (s["out_ch"], s["in_ch"], *s["kernel"])
+        ).astype(np.float32) * std
+        b = np.zeros((s["out_ch"],), dtype=np.float32)
+        params[s["name"]] = {"w": jnp.asarray(w), "b": jnp.asarray(b)}
+    for s in walk_dense(specs):
+        std = float(np.sqrt(2.0 / s["in_dim"]))
+        w = rng.standard_normal((s["in_dim"], s["out_dim"])).astype(
+            np.float32
+        ) * std
+        b = np.zeros((s["out_dim"],), dtype=np.float32)
+        params[s["name"]] = {"w": jnp.asarray(w), "b": jnp.asarray(b)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward interpreter
+# ---------------------------------------------------------------------------
+
+
+def _conv_apply(s, p, x, mode):
+    stride = tuple(s["stride"])
+    padding = tuple(s["padding"])
+    if mode == "pallas":
+        y = _pallas_conv3d(x, p["w"], stride=stride, padding=padding)
+    else:
+        y = kref.conv3d_ref(x, p["w"], stride=stride, padding=padding)
+    y = y + p["b"][None, :, None, None, None]
+    if s["relu"]:
+        y = jax.nn.relu(y)
+    return y
+
+
+def _maxpool(x, kernel, stride):
+    kd, kh, kw = kernel
+    sd, sh, sw = stride
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 1, kd, kh, kw),
+        window_strides=(1, 1, sd, sh, sw),
+        padding="VALID",
+    )
+
+
+def forward(specs, params, x, *, mode="train", masks=None):
+    """Run the IR. masks: optional {conv_name: OIDHW weight mask} applied
+    multiplicatively (the train-time view of sparsity)."""
+    for s in specs:
+        kind = s["kind"]
+        if kind == "conv3d":
+            p = params[s["name"]]
+            if masks and s["name"] in masks:
+                p = {"w": p["w"] * masks[s["name"]].astype(p["w"].dtype),
+                     "b": p["b"]}
+            x = _conv_apply(s, p, x, mode)
+        elif kind == "maxpool3d":
+            x = _maxpool(x, s["kernel"], s["stride"])
+        elif kind == "avgpool_global":
+            x = jnp.mean(x, axis=(2, 3, 4))
+        elif kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif kind == "dense":
+            p = params[s["name"]]
+            x = x @ p["w"] + p["b"]
+            if s["relu"]:
+                x = jax.nn.relu(x)
+        elif kind == "residual":
+            y = forward(s["body"], params, x, mode=mode, masks=masks)
+            sc = (
+                forward(s["shortcut"], params, x, mode=mode, masks=masks)
+                if s["shortcut"]
+                else x
+            )
+            x = jax.nn.relu(y + sc)
+        elif kind == "concat":
+            outs = [
+                forward(b, params, x, mode=mode, masks=masks)
+                for b in s["branches"]
+            ]
+            x = jnp.concatenate(outs, axis=1)
+        else:
+            raise ValueError(f"unknown layer kind {kind!r}")
+    return x

@@ -1,0 +1,10 @@
+"""Structured sparsity schemes + pruning algorithms (paper §3–§4)."""
+
+from .schemes import SCHEMES, FilterScheme, KGSScheme, VanillaScheme  # noqa: F401
+from .flops import conv_flops, model_flops, masked_model_flops  # noqa: F401
+from .algorithms import (  # noqa: F401
+    heuristic_prune,
+    regularization_prune,
+    reweighted_prune,
+    prune_to_flops_target,
+)

@@ -1,0 +1,97 @@
+"""FLOPs / parameter accounting for the layer-spec IR.
+
+FLOPs convention: 1 MAC = 2 FLOPs (matches the paper's "overall FLOPs"
+tables). Dense layers and pooling are counted but convs dominate.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .. import nn
+from ..kernels import ref as kref
+
+
+def conv_flops(spec, in_spatial):
+    """(flops, out_spatial) for one conv3d spec at the given input size."""
+    out_sp = kref.out_shape(
+        in_spatial, tuple(spec["kernel"]), tuple(spec["stride"]),
+        tuple(spec["padding"]),
+    )
+    macs = (
+        spec["out_ch"] * spec["in_ch"] * int(np.prod(spec["kernel"]))
+        * int(np.prod(out_sp))
+    )
+    return 2 * macs, out_sp
+
+
+def _walk(specs, in_ch, in_spatial, table):
+    """Accumulate per-conv (flops, out_spatial) into `table`; returns
+    (out_ch, out_spatial, flat_dim_or_None)."""
+    ch, sp = in_ch, tuple(in_spatial)
+    flat = None
+    for s in specs:
+        k = s["kind"]
+        if k == "conv3d":
+            f, sp = conv_flops(s, sp)
+            table[s["name"]] = {"flops": f, "out_spatial": sp}
+            ch = s["out_ch"]
+        elif k == "maxpool3d":
+            sp = kref.out_shape(sp, tuple(s["kernel"]), tuple(s["stride"]),
+                                (0, 0, 0))
+        elif k == "avgpool_global":
+            sp = (1, 1, 1)
+            flat = ch
+        elif k == "flatten":
+            flat = ch * int(np.prod(sp))
+        elif k == "dense":
+            table[s["name"]] = {"flops": 2 * s["in_dim"] * s["out_dim"],
+                                "out_spatial": (1, 1, 1), "dense": True}
+            flat = s["out_dim"]
+        elif k == "residual":
+            ch2, sp2, _ = _walk(s["body"], ch, sp, table)
+            if s["shortcut"]:
+                _walk(s["shortcut"], ch, sp, table)
+            ch, sp = ch2, sp2
+        elif k == "concat":
+            chs = []
+            for b in s["branches"]:
+                cb, spb, _ = _walk(b, ch, sp, table)
+                chs.append(cb)
+            ch, sp = sum(chs), spb
+    return ch, sp, flat
+
+
+def layer_table(specs, in_ch=3, in_spatial=(16, 32, 32)):
+    """Per-layer {name: {flops, out_spatial}} for all conv + dense layers."""
+    table = {}
+    _walk(specs, in_ch, in_spatial, table)
+    return table
+
+
+def model_flops(specs, in_ch=3, in_spatial=(16, 32, 32)):
+    """Total dense-model FLOPs."""
+    return sum(v["flops"] for v in layer_table(specs, in_ch, in_spatial).values())
+
+
+def masked_model_flops(specs, masks, in_ch=3, in_spatial=(16, 32, 32)):
+    """Total FLOPs with per-conv weight masks applied (kept fraction scales
+    the layer's FLOPs — exact for all three structured schemes)."""
+    table = layer_table(specs, in_ch, in_spatial)
+    total = 0
+    for name, v in table.items():
+        f = v["flops"]
+        if masks and name in masks:
+            m = np.asarray(masks[name])
+            f = f * float(m.mean())
+        total += f
+    return total
+
+
+def model_params(specs):
+    total = 0
+    for s in nn.walk_convs(specs):
+        total += s["out_ch"] * s["in_ch"] * int(np.prod(s["kernel"])) + s["out_ch"]
+    for s in nn.walk_dense(specs):
+        total += s["in_dim"] * s["out_dim"] + s["out_dim"]
+    return total

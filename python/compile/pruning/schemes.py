@@ -1,0 +1,154 @@
+"""The paper's structured sparsity schemes as pluggable objects (§3).
+
+Each scheme defines, for one conv layer's 5-D weight tensor:
+  * the prunable *unit* (filter / kernel-group / KGS location),
+  * ``group_norms``  — per-unit mixed L1/L2 norm (the paper's "best
+    combination of l1 and l2"),
+  * ``mask_from_keep`` — structural mask given a per-unit keep decision,
+  * ``expand``       — unit mask -> full OIDHW weight mask,
+  * ``unit_flops``   — FLOPs each unit contributes (for global FLOPs-aware
+    pruning without per-layer rates, §4.3).
+
+Group sizes g_M x g_N follow the paper's mobile-tuned defaults (g_N = 4,
+g_M = 4) — chosen offline to match SIMD width, not a pruning hyperparameter.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..kernels import ref as kref
+
+# Mixed-norm weighting: norm = ALPHA * l2 + (1-ALPHA) * l1 / sqrt(n).
+ALPHA = 0.7
+
+
+def _mixed_norm(x, axis):
+    """Combined l1/l2 group norm over `axis` (normalized for group size)."""
+    l2 = jnp.sqrt(jnp.sum(x * x, axis=axis))
+    n = np.prod([x.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))])
+    l1 = jnp.sum(jnp.abs(x), axis=axis) / np.sqrt(n)
+    return ALPHA * l2 + (1 - ALPHA) * l1
+
+
+class Scheme:
+    name = "?"
+
+    def __init__(self, g_m=4, g_n=4):
+        self.g_m = g_m
+        self.g_n = g_n
+
+    # -- geometry ----------------------------------------------------------
+    def unit_shape(self, w_shape):
+        raise NotImplementedError
+
+    def num_units(self, w_shape):
+        return int(np.prod(self.unit_shape(w_shape)))
+
+    # -- scoring -----------------------------------------------------------
+    def group_norms(self, w):
+        """Per-unit mixed norm, shape == unit_shape(w.shape)."""
+        raise NotImplementedError
+
+    # -- masks ---------------------------------------------------------------
+    def expand(self, unit_mask, w_shape):
+        """Unit-level boolean mask -> OIDHW weight mask."""
+        raise NotImplementedError
+
+    def unit_flops(self, w_shape, out_spatial):
+        """FLOPs contributed by one unit of this layer (MACs*2)."""
+        raise NotImplementedError
+
+    def _grouped(self, w):
+        """Reshape (M,C,Kd,Kh,Kw) -> (P, g_m, Q, g_n, Ks) with zero padding."""
+        M, C, Kd, Kh, Kw = w.shape
+        Ks = Kd * Kh * Kw
+        P, Q = kref.group_counts(M, C, self.g_m, self.g_n)
+        wf = jnp.reshape(w, (M, C, Ks))
+        wf = jnp.pad(wf, ((0, P * self.g_m - M), (0, Q * self.g_n - C), (0, 0)))
+        return wf.reshape(P, self.g_m, Q, self.g_n, Ks)
+
+
+class FilterScheme(Scheme):
+    """Prune whole filters (2D-CNN filter pruning generalized to 3D)."""
+
+    name = "filter"
+
+    def unit_shape(self, w_shape):
+        return (w_shape[0],)
+
+    def group_norms(self, w):
+        return _mixed_norm(w.reshape(w.shape[0], -1), axis=1)
+
+    def expand(self, unit_mask, w_shape):
+        return kref.filter_mask_to_weight_mask(
+            jnp.asarray(unit_mask), w_shape[0], w_shape[1], w_shape[2:]
+        )
+
+    def unit_flops(self, w_shape, out_spatial):
+        M, C, Kd, Kh, Kw = w_shape
+        return 2 * C * Kd * Kh * Kw * int(np.prod(out_spatial))
+
+
+class VanillaScheme(Scheme):
+    """Prune whole g_M x g_N kernel groups (§3, Fig. 1a)."""
+
+    name = "vanilla"
+
+    def unit_shape(self, w_shape):
+        P, Q = kref.group_counts(w_shape[0], w_shape[1], self.g_m, self.g_n)
+        return (P, Q)
+
+    def group_norms(self, w):
+        g = self._grouped(w)  # (P, g_m, Q, g_n, Ks)
+        return _mixed_norm(jnp.transpose(g, (0, 2, 1, 3, 4)).reshape(
+            g.shape[0], g.shape[2], -1), axis=2)
+
+    def expand(self, unit_mask, w_shape):
+        return kref.vanilla_mask_to_weight_mask(
+            jnp.asarray(unit_mask), w_shape[0], w_shape[1], w_shape[2:],
+            self.g_m, self.g_n,
+        )
+
+    def unit_flops(self, w_shape, out_spatial):
+        M, C, Kd, Kh, Kw = w_shape
+        # One group = g_m filters x g_n channels x Ks taps.
+        return 2 * self.g_m * self.g_n * Kd * Kh * Kw * int(np.prod(out_spatial))
+
+
+class KGSScheme(Scheme):
+    """Prune one kernel location across a whole kernel group (§3, Fig. 1b)."""
+
+    name = "kgs"
+
+    def unit_shape(self, w_shape):
+        M, C, Kd, Kh, Kw = w_shape
+        P, Q = kref.group_counts(M, C, self.g_m, self.g_n)
+        return (P, Q, Kd * Kh * Kw)
+
+    def group_norms(self, w):
+        g = self._grouped(w)  # (P, g_m, Q, g_n, Ks)
+        g = jnp.transpose(g, (0, 2, 4, 1, 3))  # (P, Q, Ks, g_m, g_n)
+        return _mixed_norm(g.reshape(*g.shape[:3], -1), axis=3)
+
+    def expand(self, unit_mask, w_shape):
+        return kref.kgs_mask_to_weight_mask(
+            jnp.asarray(unit_mask), w_shape[0], w_shape[1], w_shape[2:],
+            self.g_m, self.g_n,
+        )
+
+    def unit_flops(self, w_shape, out_spatial):
+        # One unit = g_m x g_n weights at one tap location.
+        return 2 * self.g_m * self.g_n * int(np.prod(out_spatial))
+
+
+SCHEMES = {
+    "filter": FilterScheme,
+    "vanilla": VanillaScheme,
+    "kgs": KGSScheme,
+}
+
+
+def make_scheme(name, g_m=4, g_n=4):
+    return SCHEMES[name](g_m=g_m, g_n=g_n)

@@ -1,0 +1,29 @@
+# L1 schedule analysis: VMEM budgets and utilization estimates are sane.
+from compile.kernels import analysis
+
+
+def test_dense_tiles_fit_vmem():
+    rep = analysis.dense_report(16384, 1728, 64)
+    assert rep.vmem_frac < 0.5  # double-buffered tiles well under budget
+    assert 0 < rep.mxu_util <= 1.0
+
+
+def test_dense_full_tiles_high_utilization():
+    rep = analysis.dense_report(128 * 4, 128 * 2, 128)
+    assert rep.mxu_util > 0.95
+
+
+def test_kgs_vmem_under_budget_for_all_c3d_layers():
+    for name, rep in analysis.c3d_layer_reports():
+        assert rep.vmem_frac < 1.0, (name, rep.vmem_frac)
+
+
+def test_kgs_utilization_grows_with_group_size():
+    a = analysis.kgs_report(4096, 4, 4, 27, 9, 16, 16)
+    b = analysis.kgs_report(4096, 8, 4, 27, 9, 8, 16)
+    assert b.mxu_util > a.mxu_util
+
+
+def test_arithmetic_intensity_positive():
+    rep = analysis.dense_report(1000, 500, 64)
+    assert rep.arithmetic_intensity > 0

@@ -1,0 +1,181 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal.
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels import ref, conv3d, matmul
+from compile.kernels import compact_kgs, conv3d_kgs
+from compile.kernels import compact_vanilla, conv3d_vanilla
+
+
+def rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+class TestRefOracles:
+    def test_lax_matches_naive(self):
+        x = rand((1, 2, 4, 5, 6), 1)
+        w = rand((3, 2, 3, 3, 3), 2)
+        got = ref.conv3d_ref(x, w, padding=(1, 1, 1))
+        want = ref.conv3d_naive(x, w, padding=(1, 1, 1))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_lax_matches_naive_strided(self):
+        x = rand((2, 3, 6, 7, 8), 3)
+        w = rand((4, 3, 3, 3, 3), 4)
+        got = ref.conv3d_ref(x, w, stride=(2, 2, 2), padding=(1, 1, 1))
+        want = ref.conv3d_naive(x, w, stride=(2, 2, 2), padding=(1, 1, 1))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_im2col_gemm_matches_lax(self):
+        x = rand((2, 4, 5, 6, 7), 5)
+        w = rand((6, 4, 3, 3, 3), 6)
+        got = ref.conv3d_im2col_ref(x, w, padding=(1, 1, 1))
+        want = ref.conv3d_ref(x, w, padding=(1, 1, 1))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_out_shape(self):
+        assert ref.out_shape((16, 32, 32), (3, 3, 3), (1, 1, 1), (1, 1, 1)) == (
+            16,
+            32,
+            32,
+        )
+        assert ref.out_shape((16, 32, 32), (3, 3, 3), (2, 2, 2), (1, 1, 1)) == (
+            8,
+            16,
+            16,
+        )
+
+
+class TestDensePallas:
+    def test_matmul_small(self):
+        a = rand((13, 17), 7)
+        b = rand((17, 11), 8)
+        np.testing.assert_allclose(matmul(a, b), a @ b, rtol=1e-4, atol=1e-4)
+
+    def test_matmul_tile_multiple(self):
+        a = rand((64, 64), 9)
+        b = rand((64, 64), 10)
+        np.testing.assert_allclose(
+            matmul(a, b, bm=32, bn=32, bk=32), a @ b, rtol=1e-4, atol=1e-4
+        )
+
+    @pytest.mark.parametrize("stride,padding", [((1, 1, 1), (1, 1, 1)),
+                                                ((2, 2, 2), (0, 0, 0))])
+    def test_conv3d_matches_ref(self, stride, padding):
+        x = rand((1, 4, 6, 8, 8), 11)
+        w = rand((8, 4, 3, 3, 3), 12)
+        got = conv3d(x, w, stride=stride, padding=padding, bm=32, bn=32, bk=32)
+        want = ref.conv3d_ref(x, w, stride=stride, padding=padding)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def kgs_random_mask(P, Q, Ks, keep_frac, seed=0):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((P, Q, Ks)) < keep_frac
+    # Guarantee at least one kept location per group so compaction is sane.
+    mask[:, :, 0] = True
+    return mask
+
+
+class TestKGSPallas:
+    @pytest.mark.parametrize("keep_frac", [0.3, 0.7, 1.0])
+    def test_matches_masked_ref(self, keep_frac):
+        M, C, g_m, g_n = 8, 8, 4, 4
+        kernel = (3, 3, 3)
+        Ks = 27
+        P, Q = ref.group_counts(M, C, g_m, g_n)
+        x = rand((1, C, 4, 6, 6), 21)
+        w = rand((M, C) + kernel, 22)
+        mask = jnp.asarray(kgs_random_mask(P, Q, Ks, keep_frac, 23))
+        wc, idx, kc = compact_kgs(w, mask, g_m, g_n)
+        got = conv3d_kgs(
+            x, wc, idx, g_m=g_m, g_n=g_n, out_channels=M, kernel=kernel,
+            padding=(1, 1, 1),
+        )
+        wmask = ref.kgs_mask_to_weight_mask(mask, M, C, kernel, g_m, g_n)
+        want = ref.conv3d_masked_ref(x, w, wmask, padding=(1, 1, 1))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_ragged_group_sizes(self):
+        # M, C not multiples of g_m, g_n exercises zero padding.
+        M, C, g_m, g_n = 6, 5, 4, 4
+        kernel = (2, 2, 2)
+        Ks = 8
+        P, Q = ref.group_counts(M, C, g_m, g_n)
+        x = rand((2, C, 4, 4, 4), 31)
+        w = rand((M, C) + kernel, 32)
+        mask = jnp.asarray(kgs_random_mask(P, Q, Ks, 0.5, 33))
+        wc, idx, kc = compact_kgs(w, mask, g_m, g_n)
+        got = conv3d_kgs(
+            x, wc, idx, g_m=g_m, g_n=g_n, out_channels=M, kernel=kernel,
+        )
+        wmask = ref.kgs_mask_to_weight_mask(mask, M, C, kernel, g_m, g_n)
+        want = ref.conv3d_masked_ref(x, w, wmask)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_compaction_flop_reduction(self):
+        # kc reflects the max kept-count, i.e. the compacted GEMM width.
+        M = C = 8
+        g_m = g_n = 4
+        kernel = (3, 3, 3)
+        P, Q = ref.group_counts(M, C, g_m, g_n)
+        mask = np.zeros((P, Q, 27), dtype=bool)
+        mask[:, :, :9] = True  # keep 1/3 of locations
+        w = rand((M, C) + kernel, 41)
+        wc, idx, kc = compact_kgs(w, jnp.asarray(mask), g_m, g_n)
+        assert kc == 9
+        assert wc.shape == (P, Q, g_m, g_n * 9)
+
+
+class TestVanillaPallas:
+    @pytest.mark.parametrize("keep_frac", [0.4, 1.0])
+    def test_matches_masked_ref(self, keep_frac):
+        M, C, g_m, g_n = 8, 16, 4, 4
+        kernel = (3, 3, 3)
+        P, Q = ref.group_counts(M, C, g_m, g_n)
+        rng = np.random.default_rng(51)
+        mask = rng.random((P, Q)) < keep_frac
+        mask[:, 0] = True  # keep >=1 group per filter row
+        mask = jnp.asarray(mask)
+        x = rand((1, C, 4, 6, 6), 52)
+        w = rand((M, C) + kernel, 53)
+        wc, qidx, qk = compact_vanilla(w, mask, g_m, g_n)
+        got = conv3d_vanilla(
+            x, wc, qidx, g_m=g_m, g_n=g_n, out_channels=M, kernel=kernel,
+            padding=(1, 1, 1),
+        )
+        wmask = ref.vanilla_mask_to_weight_mask(mask, M, C, kernel, g_m, g_n)
+        want = ref.conv3d_masked_ref(x, w, wmask, padding=(1, 1, 1))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_vanilla_is_special_case_of_kgs(self):
+        # A vanilla mask expanded to KGS locations produces the same conv.
+        M = C = 8
+        g_m = g_n = 4
+        kernel = (2, 2, 2)
+        Ks = 8
+        P, Q = ref.group_counts(M, C, g_m, g_n)
+        rng = np.random.default_rng(61)
+        vmask = rng.random((P, Q)) < 0.5
+        vmask[:, 0] = True
+        kmask = np.broadcast_to(vmask[:, :, None], (P, Q, Ks)).copy()
+        kmask[:, :, 0] = True  # compact_kgs needs >=1 kept location
+        x = rand((1, C, 4, 4, 4), 62)
+        w = np.asarray(rand((M, C) + kernel, 63))
+        wmask = np.asarray(
+            ref.vanilla_mask_to_weight_mask(
+                jnp.asarray(vmask), M, C, kernel, g_m, g_n
+            )
+        )
+        w = w * wmask  # pruned groups are zero, so the extra kept loc is 0
+        wv, qidx, _ = compact_vanilla(w, jnp.asarray(vmask), g_m, g_n)
+        wk, idx, _ = compact_kgs(jnp.asarray(w), jnp.asarray(kmask), g_m, g_n)
+        a = conv3d_vanilla(
+            x, wv, qidx, g_m=g_m, g_n=g_n, out_channels=M, kernel=kernel
+        )
+        b = conv3d_kgs(
+            x, wk, idx, g_m=g_m, g_n=g_n, out_channels=M, kernel=kernel
+        )
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)

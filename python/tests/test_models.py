@@ -1,0 +1,78 @@
+# Model zoo: shapes, IR invariants, FLOPs accounting.
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import nn, models
+from compile.pruning import flops as F
+
+
+@pytest.fixture(scope="module")
+def x():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.standard_normal((2, 3, 16, 32, 32), np.float32))
+
+
+@pytest.mark.parametrize("name", ["c3d", "r2plus1d", "s3d"])
+def test_forward_shapes(name, x):
+    specs = models.build(name, num_classes=8, width=4)
+    params = nn.init_params(specs, seed=1)
+    out = nn.forward(specs, params, x)
+    assert out.shape == (2, 8)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("name", ["c3d", "r2plus1d", "s3d"])
+def test_conv_names_unique(name):
+    specs = models.build(name, width=4)
+    names = [s["name"] for s in nn.walk_convs(specs)]
+    names += [s["name"] for s in nn.walk_dense(specs)]
+    assert len(names) == len(set(names))
+
+
+@pytest.mark.parametrize("name", ["c3d", "r2plus1d", "s3d"])
+def test_conv_channel_wiring(name, x):
+    # init_params covers every conv; forward would fail on a wiring bug.
+    specs = models.build(name, width=8)
+    params = nn.init_params(specs)
+    nn.forward(specs, params, x[:1])
+
+
+def test_c3d_flops_scale_with_width():
+    f4 = F.model_flops(models.build("c3d", width=4))
+    f8 = F.model_flops(models.build("c3d", width=8))
+    # conv flops ~ width^2 (both in and out channels scale)
+    assert 3.0 < f8 / f4 < 4.5
+
+
+def test_flops_positive_and_conv_dominated():
+    specs = models.build("c3d", width=8)
+    table = F.layer_table(specs)
+    conv_names = {s["name"] for s in nn.walk_convs(specs)}
+    conv_f = sum(v["flops"] for k, v in table.items() if k in conv_names)
+    total = sum(v["flops"] for v in table.values())
+    assert conv_f / total > 0.9
+
+
+def test_masked_flops_reduction():
+    specs = models.build("c3d", width=8)
+    params = nn.init_params(specs)
+    masks = {
+        s["name"]: jnp.zeros(params[s["name"]]["w"].shape, dtype=bool)
+        for s in nn.walk_convs(specs)
+    }
+    dense = F.model_flops(specs)
+    sparse = F.masked_model_flops(specs, masks)
+    table = F.layer_table(specs)
+    conv_names = {s["name"] for s in nn.walk_convs(specs)}
+    dense_only = sum(v["flops"] for k, v in table.items() if k not in conv_names)
+    assert sparse == pytest.approx(dense_only)
+    assert sparse < dense
+
+
+def test_pallas_mode_matches_train_mode(x):
+    specs = models.build("c3d", width=4)
+    params = nn.init_params(specs, seed=3)
+    a = nn.forward(specs, params, x[:1], mode="train")
+    b = nn.forward(specs, params, x[:1], mode="pallas")
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)

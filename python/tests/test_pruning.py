@@ -1,0 +1,113 @@
+# Pruning algorithms: FLOPs targeting, masks, penalties (paper §4).
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import models, nn
+from compile.pruning import algorithms as alg
+from compile.pruning import flops as F
+from compile.pruning.schemes import make_scheme
+
+
+@pytest.fixture(scope="module")
+def c3d():
+    specs = models.build("c3d", width=8)
+    params = nn.init_params(specs, seed=0)
+    return specs, params
+
+
+@pytest.mark.parametrize("scheme_name", ["filter", "vanilla", "kgs"])
+@pytest.mark.parametrize("rate", [2.0, 3.6])
+def test_prune_to_flops_target_hits_rate(c3d, scheme_name, rate):
+    specs, params = c3d
+    scheme = make_scheme(scheme_name)
+    um = alg.prune_to_flops_target(specs, params, scheme, rate)
+    wm = alg.expand_masks(specs, params, scheme, um)
+    dense = F.model_flops(specs)
+    sparse = F.masked_model_flops(specs, wm)
+    measured = dense / sparse
+    # Unit granularity + dense-layer floor make this approximate.
+    assert measured == pytest.approx(rate, rel=0.15), measured
+
+
+def test_prune_keeps_min_fraction_per_layer(c3d):
+    specs, params = c3d
+    scheme = make_scheme("kgs")
+    um = alg.prune_to_flops_target(specs, params, scheme, 8.0)
+    for name, m in um.items():
+        assert np.asarray(m).mean() > 0.0, f"{name} fully pruned"
+
+
+def test_heuristic_scores_positive(c3d):
+    specs, params = c3d
+    scheme = make_scheme("kgs")
+    scores = alg.heuristic_scores(specs, params, scheme)
+    for s in nn.walk_convs(specs):
+        sc = np.asarray(scores[s["name"]])
+        assert sc.shape == scheme.unit_shape(params[s["name"]]["w"].shape)
+        assert (sc >= 0).all()
+        assert sc.max() > 0
+
+
+def test_group_lasso_penalty_decreases_with_magnitude(c3d):
+    specs, params = c3d
+    scheme = make_scheme("kgs")
+    p_full = float(alg.group_lasso_penalty(specs, params, scheme))
+    half = {k: {"w": v["w"] * 0.5, "b": v["b"]} for k, v in params.items()}
+    p_half = float(alg.group_lasso_penalty(specs, half, scheme))
+    assert p_half < p_full
+    assert p_half == pytest.approx(p_full / 2, rel=1e-3)
+
+
+def test_reweight_penalties_inverse_to_norms(c3d):
+    specs, params = c3d
+    scheme = make_scheme("kgs")
+    pen = alg.update_reweight_penalties(specs, params, scheme)
+    name = next(nn.walk_convs(specs))["name"]
+    norms = np.asarray(scheme.group_norms(params[name]["w"]))
+    p = np.asarray(pen[name])
+    # Larger-norm units get smaller penalties (the reweighting idea).
+    flat_n = norms.flatten()
+    flat_p = p.flatten()
+    hi = flat_n.argmax()
+    lo = flat_n.argmin()
+    assert flat_p[hi] < flat_p[lo]
+
+
+def test_flops_weights_normalized(c3d):
+    specs, _ = c3d
+    fw = alg.make_flops_weights(specs)
+    vals = np.array(list(fw.values()))
+    assert vals.mean() == pytest.approx(1.0, rel=1e-6)
+    assert (vals > 0).all()
+
+
+def test_expand_masks_shapes(c3d):
+    specs, params = c3d
+    scheme = make_scheme("vanilla")
+    um = alg.prune_to_flops_target(specs, params, scheme, 2.6)
+    wm = alg.expand_masks(specs, params, scheme, um)
+    for s in nn.walk_convs(specs):
+        assert wm[s["name"]].shape == params[s["name"]]["w"].shape
+
+
+def test_masked_forward_respects_masks(c3d):
+    specs, params = c3d
+    scheme = make_scheme("filter")
+    um = {s["name"]: jnp.zeros(scheme.unit_shape(params[s["name"]]["w"].shape),
+                               dtype=bool)
+          for s in nn.walk_convs(specs)}
+    # All filters pruned in conv1 -> output logits independent of input.
+    um = alg.prune_to_flops_target(specs, params, scheme, 2.0)
+    wm = alg.expand_masks(specs, params, scheme, um)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 3, 16, 32, 32), np.float32))
+    out_masked = nn.forward(specs, params, x, masks=wm)
+    # Same as physically zeroing the weights.
+    zeroed = {
+        k: ({"w": v["w"] * wm[k].astype(v["w"].dtype), "b": v["b"]}
+            if k in wm else v)
+        for k, v in params.items()
+    }
+    out_zeroed = nn.forward(specs, zeroed, x)
+    np.testing.assert_allclose(out_masked, out_zeroed, rtol=1e-5, atol=1e-5)

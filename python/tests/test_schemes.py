@@ -1,0 +1,110 @@
+# E4: structural invariants of the three sparsity schemes (paper Fig. 1/2).
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref as kref
+from compile.pruning.schemes import make_scheme
+
+KERNEL = (3, 3, 3)
+
+
+def rand_w(M, C, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((M, C) + KERNEL, np.float32))
+
+
+@pytest.mark.parametrize("name", ["filter", "vanilla", "kgs"])
+def test_unit_shape_and_norms_agree(name):
+    sch = make_scheme(name)
+    w = rand_w(8, 12)
+    norms = sch.group_norms(w)
+    assert norms.shape == sch.unit_shape(w.shape)
+    assert bool(jnp.all(norms >= 0))
+
+
+@pytest.mark.parametrize("name", ["filter", "vanilla", "kgs"])
+def test_expand_all_true_keeps_everything(name):
+    sch = make_scheme(name)
+    w = rand_w(8, 8)
+    um = jnp.ones(sch.unit_shape(w.shape), dtype=bool)
+    assert bool(jnp.all(sch.expand(um, w.shape)))
+
+
+def test_kgs_structural_invariant():
+    # Every (h,w,d) location is kept/pruned uniformly across a kernel group.
+    sch = make_scheme("kgs", g_m=4, g_n=4)
+    M = C = 8
+    w = rand_w(M, C, 5)
+    rng = np.random.default_rng(6)
+    um = jnp.asarray(rng.random(sch.unit_shape(w.shape)) < 0.5)
+    wm = np.asarray(sch.expand(um, w.shape)).reshape(M, C, -1)
+    for p in range(2):
+        for q in range(2):
+            block = wm[p * 4 : (p + 1) * 4, q * 4 : (q + 1) * 4]  # (4,4,Ks)
+            # all kernels in the group share one location pattern
+            assert (block == block[0, 0]).all()
+
+
+def test_vanilla_structural_invariant():
+    sch = make_scheme("vanilla", g_m=4, g_n=4)
+    M, C = 8, 16
+    w = rand_w(M, C, 7)
+    rng = np.random.default_rng(8)
+    um = jnp.asarray(rng.random(sch.unit_shape(w.shape)) < 0.5)
+    wm = np.asarray(sch.expand(um, w.shape))
+    for p in range(2):
+        for q in range(4):
+            block = wm[p * 4 : (p + 1) * 4, q * 4 : (q + 1) * 4]
+            assert block.all() or not block.any()
+
+
+def test_vanilla_is_coarsening_of_kgs():
+    # A vanilla mask, viewed as a KGS mask, is constant per group.
+    M = C = 8
+    vm = np.array([[True, False], [False, True]])
+    km = np.broadcast_to(vm[:, :, None], (2, 2, 27))
+    a = kref.vanilla_mask_to_weight_mask(jnp.asarray(vm), M, C, KERNEL, 4, 4)
+    b = kref.kgs_mask_to_weight_mask(jnp.asarray(km), M, C, KERNEL, 4, 4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    M=st.integers(2, 12),
+    C=st.integers(2, 12),
+    g_m=st.sampled_from([2, 4]),
+    g_n=st.sampled_from([2, 4]),
+    seed=st.integers(0, 99),
+)
+def test_property_kgs_mask_fraction(M, C, g_m, g_n, seed):
+    """Kept fraction of the expanded mask equals the kept fraction of units
+    (up to group padding at ragged edges)."""
+    sch = make_scheme("kgs", g_m=g_m, g_n=g_n)
+    rng = np.random.default_rng(seed)
+    w_shape = (M, C) + KERNEL
+    um = rng.random(sch.unit_shape(w_shape)) < 0.5
+    wm = np.asarray(sch.expand(jnp.asarray(um), w_shape))
+    assert wm.shape == w_shape
+    if M % g_m == 0 and C % g_n == 0:
+        assert wm.mean() == pytest.approx(um.mean())
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    name=st.sampled_from(["filter", "vanilla", "kgs"]),
+    M=st.integers(4, 16),
+    C=st.integers(4, 16),
+    seed=st.integers(0, 99),
+)
+def test_property_expand_monotone(name, M, C, seed):
+    """More kept units => superset weight mask (monotonicity)."""
+    sch = make_scheme(name)
+    rng = np.random.default_rng(seed)
+    w_shape = (M, C) + KERNEL
+    u1 = rng.random(sch.unit_shape(w_shape)) < 0.4
+    u2 = u1 | (rng.random(sch.unit_shape(w_shape)) < 0.3)
+    m1 = np.asarray(sch.expand(jnp.asarray(u1), w_shape))
+    m2 = np.asarray(sch.expand(jnp.asarray(u2), w_shape))
+    assert (m2 | ~m1).all()  # m1 => m2

@@ -1,0 +1,42 @@
+# Table 1 harness plumbing (the expensive run itself is `make table1`).
+from compile.experiments.table1 import check_orderings, print_table
+
+
+def rows_fixture():
+    rows = []
+    for model in ["c3d"]:
+        for alg, accs in [
+            ("heuristic", {"filter": 0.70, "vanilla": 0.72, "kgs": 0.74}),
+            ("regularization", {"filter": 0.72, "vanilla": 0.74, "kgs": 0.76}),
+            ("reweighted", {"filter": 0.74, "vanilla": 0.76, "kgs": 0.80}),
+        ]:
+            for scheme, acc in accs.items():
+                rows.append({
+                    "model": model, "algorithm": alg, "scheme": scheme,
+                    "target_rate": 2.6, "measured_rate": 2.6,
+                    "base_acc": 0.82, "pruned_acc": acc,
+                    "acc_drop": 0.82 - acc,
+                })
+    return rows
+
+
+def test_check_orderings_all_pass():
+    v = check_orderings(rows_fixture())
+    assert v["scheme_order(kgs>=vanilla>=filter)"] == "3/3"
+    assert v["algorithm_order(reweighted best)"] == "3/3"
+
+
+def test_check_orderings_detects_violation():
+    rows = rows_fixture()
+    # Make filter beat kgs under reweighted by a wide margin.
+    for r in rows:
+        if r["algorithm"] == "reweighted" and r["scheme"] == "filter":
+            r["pruned_acc"] = 0.95
+    v = check_orderings(rows)
+    assert v["scheme_order(kgs>=vanilla>=filter)"] != "3/3"
+
+
+def test_print_table_runs(capsys):
+    print_table(rows_fixture())
+    out = capsys.readouterr().out
+    assert "reweighted" in out and "kgs" in out

@@ -1,0 +1,84 @@
+# Train/prune/retrain pipeline at tiny budget: loss decreases, pipelines run.
+import numpy as np
+import pytest
+
+from compile import data, models, nn
+from compile.pruning.trainer import Trainer, cross_entropy, accuracy
+import jax.numpy as jnp
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    specs = models.build("c3d", width=4, frames=8, size=16)
+    (xtr, ytr), (xev, yev) = data.train_eval_split(
+        4, 2, frames=8, size=16, seed=0
+    )
+    tr = Trainer(specs, xtr, ytr, xev, yev, batch_size=8, seed=0)
+    params = nn.init_params(specs, seed=0)
+    return specs, tr, params
+
+
+def test_cross_entropy_known_value():
+    logits = jnp.asarray([[0.0, 0.0]])
+    labels = jnp.asarray([0])
+    assert float(cross_entropy(logits, labels)) == pytest.approx(
+        np.log(2), rel=1e-5
+    )
+
+
+def test_accuracy_metric():
+    logits = jnp.asarray([[1.0, 0.0], [0.0, 1.0], [1.0, 0.0]])
+    labels = jnp.asarray([0, 1, 1])
+    assert float(accuracy(logits, labels)) == pytest.approx(2 / 3)
+
+
+def test_training_reduces_loss(tiny_setup):
+    specs, tr, params = tiny_setup
+    x = jnp.asarray(tr.x_train[:8])
+    y = jnp.asarray(tr.y_train[:8])
+    loss0 = float(cross_entropy(nn.forward(specs, params, x), y))
+    p = tr.train_dense(dict(params), 20)
+    loss1 = float(cross_entropy(nn.forward(specs, p, x), y))
+    assert loss1 < loss0
+
+
+@pytest.mark.parametrize("algorithm", ["heuristic", "regularization",
+                                       "reweighted"])
+def test_prune_pipeline_runs(tiny_setup, algorithm):
+    specs, tr, params = tiny_setup
+    p, um, wm = tr.prune(
+        dict(params), algorithm, "kgs", 2.0,
+        reg_steps=4, rw_iters=2, rw_steps=3, in_spatial=(8, 16, 16),
+    )
+    rate = tr.flops_rate(wm, in_spatial=(8, 16, 16))
+    assert rate == pytest.approx(2.0, rel=0.2)
+    # Retrain with masks keeps pruned weights at zero.
+    p = tr.retrain_masked(p, wm, 4)
+    for name, m in wm.items():
+        w = np.asarray(p[name]["w"])
+        assert np.abs(w[~np.asarray(m)]).max() == 0.0
+
+
+def test_reweighted_drives_group_norms_down(tiny_setup):
+    specs, tr, params = tiny_setup
+    from compile.pruning.schemes import make_scheme
+    from compile.pruning import algorithms as alg
+
+    scheme = make_scheme("kgs")
+    train_fn = tr.train_penalized_fn()
+    p1, _, _ = alg.reweighted_prune(
+        specs, dict(params), "kgs", 2.0, train_fn=train_fn, iters=2,
+        steps_per_iter=5, in_spatial=(8, 16, 16), lam=5e-2,
+    )
+    name = next(nn.walk_convs(specs))["name"]
+    n0 = np.sort(np.asarray(scheme.group_norms(params[name]["w"])).flatten())
+    n1 = np.sort(np.asarray(scheme.group_norms(p1[name]["w"])).flatten())
+    # The small-norm tail should shrink under reweighted pressure.
+    k = max(1, len(n0) // 4)
+    assert n1[:k].mean() < n0[:k].mean()
+
+
+def test_evaluate_range(tiny_setup):
+    specs, tr, params = tiny_setup
+    acc = tr.evaluate(params)
+    assert 0.0 <= acc <= 1.0

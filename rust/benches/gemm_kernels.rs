@@ -1,0 +1,52 @@
+//! Micro-benchmarks of the GEMM kernels (perf-pass instrumentation):
+//! untuned vs blocked vs blocked-with-bigger-tiles on Table-2-sized GEMMs.
+
+use rt3d::codegen::GemmTile;
+use rt3d::executors::gemm;
+use rt3d::tensor::Mat;
+use rt3d::util::bench::BenchGroup;
+use std::time::Duration;
+
+fn main() {
+    // (M, K, R) shapes drawn from c3d layers at width 8 / 16x32x32 input.
+    let shapes = [
+        (16usize, 216usize, 8192usize),
+        (64, 864, 2048),
+        (64, 1728, 512),
+    ];
+    let mut group = BenchGroup::new("gemm_kernels").budget(Duration::from_secs(2));
+    for (m, k, r) in shapes {
+        let w = Mat::random(m, k, 1);
+        let p = Mat::random(k, r, 2);
+        let gflops = (2 * m * k * r) as f64 / 1e9;
+        let mut out = Mat::zeros(m, r);
+        let ru = group
+            .bench(&format!("untuned/{m}x{k}x{r}"), || {
+                out.data.fill(0.0);
+                gemm::matmul_untuned(&w.data, m, &p, &mut out);
+            })
+            .median_s;
+        let mut results = vec![("untuned", ru)];
+        for tile in [
+            GemmTile::default(),
+            GemmTile { mr: 8, rc: 1024, kc: 256 },
+            GemmTile { mr: 8, rc: 256, kc: 512 },
+        ] {
+            let label =
+                format!("blocked_mr{}rc{}kc{}/{m}x{k}x{r}", tile.mr, tile.rc, tile.kc);
+            let rb = group
+                .bench(&label, || {
+                    out.data.fill(0.0);
+                    gemm::gemm_dense(&w.data, m, &p, &mut out, tile);
+                })
+                .median_s;
+            results.push(("blocked", rb));
+        }
+        for (label, t) in &results {
+            println!(
+                "gemm {m}x{k}x{r} {label}: {:.2} GFLOP/s",
+                gflops / t
+            );
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! E7: group-size ablation (paper §3: g_N = 4, g_M = 4 or 8 preferred).
+//!
+//! Times a KGS-compacted layer at fixed 3x pruning across group sizes.
+//! Expected shape: tiny groups (2x2) pay gather overhead; 4x4 / 8x4 reach
+//! the knee; bigger groups gain little speed (and cost accuracy in Table 1).
+
+use rt3d::codegen::tuner::time_group_size;
+use rt3d::util::bench::BenchGroup;
+use std::time::Duration;
+
+fn main() {
+    let mut group = BenchGroup::new("group_size")
+        .budget(Duration::from_secs(2))
+        .max_iters(20);
+    let mut rows = Vec::new();
+    for (g_m, g_n) in [
+        (2usize, 2usize),
+        (2, 4),
+        (4, 2),
+        (4, 4),
+        (8, 4),
+        (4, 8),
+        (8, 8),
+        (16, 16),
+    ] {
+        let r = group.bench(&format!("g{g_m}x{g_n}"), || {
+            let _ = time_group_size(64, 64, [8, 16, 16], g_m, g_n, 1.0 / 3.0, 1);
+        });
+        rows.push(((g_m, g_n), r.median_s));
+    }
+    let best = rows
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    println!(
+        "\ngroup_size verdict: fastest {}x{} (paper prefers 4x4 / 8x4 to match SIMD width)",
+        best.0 .0, best.0 .1
+    );
+}

@@ -1,0 +1,69 @@
+//! Coordinator benchmark: serving throughput/latency across batch caps —
+//! validates that the L3 layer adds negligible overhead on top of the
+//! executor (DESIGN.md §Perf: coordinator < 5% of end-to-end latency).
+
+use rt3d::coordinator::{BatcherConfig, Server, ServerConfig};
+use rt3d::executors::{EngineKind, NativeEngine};
+use rt3d::model::Model;
+use rt3d::tensor::Tensor5;
+use rt3d::util::bench::fmt_s;
+use rt3d::workload;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("c3d.manifest.json").exists() {
+        eprintln!("serving: run `make artifacts` first");
+        return;
+    }
+    let model = Model::load(&dir, "c3d").unwrap();
+    let input = model.manifest.input;
+    let n = 24;
+
+    // Raw engine latency (no coordinator).
+    let engine = NativeEngine::new(&model, EngineKind::Rt3d, true);
+    let clip = Tensor5::random([1, input[0], input[1], input[2], input[3]], 1);
+    let t0 = Instant::now();
+    for _ in 0..4 {
+        let _ = engine.forward(&clip);
+    }
+    let raw = t0.elapsed().as_secs_f64() / 4.0;
+    println!("serving raw-engine latency: {}", fmt_s(raw));
+
+    for max_batch in [1usize, 2, 4, 8] {
+        let engine = Arc::new(NativeEngine::new(&model, EngineKind::Rt3d, true));
+        let server = Server::start(
+            engine,
+            ServerConfig {
+                batcher: BatcherConfig {
+                    max_batch,
+                    max_wait: std::time::Duration::from_millis(5),
+                },
+                queue_depth: 64,
+            },
+        );
+        let t0 = Instant::now();
+        for i in 0..n {
+            server.submit(
+                workload::make_clip(i % 8, i as u64, input[1], input[2]),
+                Some(i % 8),
+            );
+        }
+        for _ in 0..n {
+            server.responses.recv().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = server.shutdown();
+        let lat = m.latency();
+        println!(
+            "serving max_batch={max_batch}: {:.2} req/s p50={} p99={} mean_batch={:.2} overhead_vs_raw={:.1}%",
+            n as f64 / wall,
+            fmt_s(lat.p50_s),
+            fmt_s(lat.p99_s),
+            m.mean_batch(),
+            // queueing-free single-batch overhead estimate
+            100.0 * ((wall / n as f64) * m.mean_batch() / raw - 1.0)
+        );
+    }
+}

@@ -1,0 +1,74 @@
+//! E5: "inference speedup approaches the FLOPs pruning rate" (paper §3/§5.2).
+//!
+//! Sweeps KGS keep-fraction on a representative conv layer; the series to
+//! reproduce is latency ∝ density (speedup ≈ pruning rate).
+
+use rt3d::codegen::{compile_conv_sparse, Scheme};
+use rt3d::executors;
+use rt3d::model::{ConvLayer, TensorRef, WeightRefs};
+use rt3d::tensor::{Conv3dGeometry, Mat, Tensor5};
+use rt3d::util::bench::BenchGroup;
+use std::time::Duration;
+
+fn main() {
+    let (m, ch) = (64usize, 64usize);
+    let dummy = TensorRef { offset: 0, shape: vec![], dtype: "f32".into() };
+    let layer = ConvLayer {
+        name: "sweep".into(),
+        in_ch: ch,
+        out_ch: m,
+        kernel: [3, 3, 3],
+        stride: [1, 1, 1],
+        padding: [1, 1, 1],
+        relu: false,
+        weights: WeightRefs { w: dummy.clone(), b: dummy },
+        weights_sparse: None,
+        unit_mask: None,
+    };
+    let geom = Conv3dGeometry {
+        in_ch: ch,
+        out_ch: m,
+        kernel: [3, 3, 3],
+        stride: [1, 1, 1],
+        padding: [1, 1, 1],
+        in_spatial: [8, 16, 16],
+    };
+    let w = Tensor5::random([m, ch, 3, 3, 3], 1).data;
+    let x = Tensor5::random([1, ch, 8, 16, 16], 2);
+    let pt = executors::im2col_t(&x, &geom);
+    let (pp, qq) = (16usize, 16usize);
+
+    let mut group = BenchGroup::new("sparsity_sweep").budget(Duration::from_secs(2));
+    let mut series = Vec::new();
+    for keep in [27usize, 14, 9, 7, 5, 3] {
+        let mut mask = vec![false; pp * qq * 27];
+        for g in 0..pp * qq {
+            for i in 0..keep {
+                mask[g * 27 + (i * 5 + g) % 27] = true;
+            }
+        }
+        let cc = compile_conv_sparse(
+            &layer,
+            &geom,
+            &w,
+            vec![0.0; m],
+            &mask,
+            Scheme::Kgs,
+            4,
+            4,
+        );
+        let rate = 27.0 / keep as f64;
+        let mut out = Mat::zeros(m, pt.cols);
+        let r = group.bench(&format!("rate_{rate:.1}x"), || {
+            executors::run_compiled_conv(&cc, &pt, &mut out)
+        });
+        series.push((rate, r.median_s));
+    }
+    let dense = series[0].1;
+    println!("\nsparsity_sweep series (speedup vs FLOPs rate — paper claim: ~equal):");
+    println!("{:>8} {:>10} {:>10}", "rate", "speedup", "efficiency");
+    for (rate, t) in &series {
+        let speedup = dense / t;
+        println!("{:>7.1}x {:>9.2}x {:>9.0}%", rate, speedup, 100.0 * speedup / rate);
+    }
+}

@@ -1,0 +1,75 @@
+//! E2 (paper Table 2): end-to-end inference latency per framework class.
+//!
+//! Host columns measure the real executors on this machine (naive =
+//! PyTorch-Mobile class, untuned = MNN class, rt3d dense, rt3d sparse);
+//! the sim columns project onto the Snapdragon-865 cost model. The shape
+//! to reproduce: rt3d-dense beats both baselines; rt3d-sparse beats dense
+//! by ~the FLOPs pruning rate; GPU < CPU.
+
+use rt3d::codegen;
+use rt3d::device::{self, DeviceProfile, ExecutorClass};
+use rt3d::executors::{EngineKind, NativeEngine};
+use rt3d::model::Model;
+use rt3d::tensor::Tensor5;
+use rt3d::util::bench::{fmt_s, BenchGroup};
+use std::time::Duration;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("c3d.manifest.json").exists() {
+        eprintln!("table2: run `make artifacts` first");
+        return;
+    }
+    let mut group = BenchGroup::new("table2").budget(Duration::from_secs(3));
+    println!("== Table 2 reproduction (host measurements + device-sim projection)");
+    for name in ["c3d", "r2plus1d", "s3d"] {
+        let Ok(model) = Model::load(&dir, name) else { continue };
+        let input = model.manifest.input;
+        let clip =
+            Tensor5::random([1, input[0], input[1], input[2], input[3]], 42);
+        let engines = [
+            ("naive", EngineKind::Naive, false),
+            ("untuned", EngineKind::Untuned, false),
+            ("rt3d_dense", EngineKind::Rt3d, false),
+            ("rt3d_sparse", EngineKind::Rt3d, true),
+        ];
+        let mut medians = Vec::new();
+        for (label, kind, sparse) in engines {
+            let engine = NativeEngine::new(&model, kind, sparse);
+            let bname = format!("{name}/{label}");
+            let r = group.bench(&bname, || {
+                let _ = engine.forward(&clip);
+            });
+            medians.push((label, r.median_s));
+        }
+        // Device-simulator projections (paper-scale absolute numbers).
+        let convs_d = codegen::compile_model(&model, false);
+        let convs_s = codegen::compile_model(&model, true);
+        let cpu = DeviceProfile::mobile_cpu();
+        let gpu = DeviceProfile::mobile_gpu();
+        let (cpu_naive, _) =
+            device::model_cost(&convs_d, ExecutorClass::Naive, &cpu, 1);
+        let (cpu_d, _) = device::model_cost(&convs_d, ExecutorClass::Rt3d, &cpu, 1);
+        let (cpu_s, _) = device::model_cost(&convs_s, ExecutorClass::Rt3d, &cpu, 1);
+        let (gpu_d, _) = device::model_cost(&convs_d, ExecutorClass::Rt3d, &gpu, 1);
+        let (gpu_s, _) = device::model_cost(&convs_s, ExecutorClass::Rt3d, &gpu, 1);
+        println!(
+            "table2/sim {name}: pytorch-cpu~{} rt3dCPU-D={} rt3dCPU-S={} \
+             rt3dGPU-D={} rt3dGPU-S={} | speedup(sparseGPU vs naiveCPU)={:.1}x",
+            fmt_s(cpu_naive),
+            fmt_s(cpu_d),
+            fmt_s(cpu_s),
+            fmt_s(gpu_d),
+            fmt_s(gpu_s),
+            cpu_naive / gpu_s
+        );
+        let naive = medians[0].1;
+        for (label, m) in &medians {
+            println!(
+                "table2/host {name}: {label} {} speedup_vs_naive={:.1}x",
+                fmt_s(*m),
+                naive / m
+            );
+        }
+    }
+}

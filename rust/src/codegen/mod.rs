@@ -1,0 +1,351 @@
+//! Compiler-assisted code generation (the paper's §5.2 system contribution).
+//!
+//! Given a conv layer's weights and a structured-sparsity unit mask, this
+//! module performs what RT3D's compiler does on the phone:
+//!
+//! * **weight layout reorganization** — compact the weight matrix so the
+//!   remaining computation is a set of *smaller dense* GEMM panels
+//!   ([`CompiledConv`]): KGS keeps per-group column lists, Vanilla keeps
+//!   per-filter-group channel-group lists, Filter keeps surviving rows;
+//! * **computation regularization** — padding-free nonuniform group sizes
+//!   are supported (unlike the HLO path which pads to the max group width);
+//! * **configuration tuning** — [`tuner`] searches tile/register-block
+//!   parameters per layer shape on the actual machine, mirroring the
+//!   paper's "all models are tuned to their best configurations".
+
+pub mod plan;
+pub mod tuner;
+
+pub use plan::{CompiledConv, ConvKind, GemmTile, KgsGroup, VanillaRow};
+
+use crate::model::{ConvLayer, Model};
+use crate::tensor::Conv3dGeometry;
+
+/// Which sparsity scheme a unit mask encodes (from the manifest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    Filter,
+    Vanilla,
+    Kgs,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s {
+            "filter" => Some(Scheme::Filter),
+            "vanilla" => Some(Scheme::Vanilla),
+            "kgs" => Some(Scheme::Kgs),
+            _ => None,
+        }
+    }
+}
+
+/// Compile every conv of a model: dense layers get dense plans; masked
+/// layers get compacted sparse plans per the manifest's scheme.
+pub fn compile_model(model: &Model, use_sparsity: bool) -> Vec<CompiledConv> {
+    let scheme = model
+        .manifest
+        .sparsity
+        .as_ref()
+        .and_then(|s| Scheme::parse(&s.scheme));
+    let (g_m, g_n) = model
+        .manifest
+        .sparsity
+        .as_ref()
+        .map(|s| (s.g_m, s.g_n))
+        .unwrap_or((4, 4));
+    model
+        .conv_geometries()
+        .into_iter()
+        .map(|(layer, geom)| {
+            // The sparse deployment carries its own (pruned + retrained)
+            // weights; dense plans use the original dense weights.
+            let refs = if use_sparsity {
+                layer.weights_sparse.as_ref().unwrap_or(&layer.weights)
+            } else {
+                &layer.weights
+            };
+            let w = model.pool.f32(&refs.w);
+            let b = model.pool.f32(&refs.b);
+            match (&layer.unit_mask, scheme, use_sparsity) {
+                (Some(mr), Some(sch), true) => {
+                    let mask = model.pool.bool(mr);
+                    compile_conv_sparse(layer, &geom, &w, b, &mask, sch, g_m, g_n)
+                }
+                _ => compile_conv_dense(layer, &geom, &w, b),
+            }
+        })
+        .collect()
+}
+
+/// Dense plan: weight matrix reshaped (M, K), K ordered (c, kd, kh, kw).
+pub fn compile_conv_dense(
+    layer: &ConvLayer,
+    geom: &Conv3dGeometry,
+    w: &[f32],
+    bias: Vec<f32>,
+) -> CompiledConv {
+    let k = geom.cols();
+    assert_eq!(w.len(), layer.out_ch * k);
+    CompiledConv {
+        name: layer.name.clone(),
+        geom: *geom,
+        relu: layer.relu,
+        bias,
+        kind: ConvKind::Dense { wmat: w.to_vec() },
+        tile: GemmTile::default(),
+        flops: geom.flops(1),
+    }
+}
+
+/// Sparse plan dispatch.
+#[allow(clippy::too_many_arguments)]
+pub fn compile_conv_sparse(
+    layer: &ConvLayer,
+    geom: &Conv3dGeometry,
+    w: &[f32],
+    bias: Vec<f32>,
+    mask: &[bool],
+    scheme: Scheme,
+    g_m: usize,
+    g_n: usize,
+) -> CompiledConv {
+    match scheme {
+        Scheme::Kgs => compile_kgs(layer, geom, w, bias, mask, g_m, g_n),
+        Scheme::Vanilla => compile_vanilla(layer, geom, w, bias, mask, g_m, g_n),
+        Scheme::Filter => compile_filter(layer, geom, w, bias, mask),
+    }
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// KGS: per kernel group (p, q), keep the column list
+/// `{ (c_local, loc) : mask[p][q][loc] }` and pack the surviving weights as
+/// a (g_m_eff, cols) row-major panel. Nonuniform kept counts are kept
+/// as-is — no padding (the "computation regularization" handled by the
+/// executor's indirect column walk).
+fn compile_kgs(
+    layer: &ConvLayer,
+    geom: &Conv3dGeometry,
+    w: &[f32],
+    bias: Vec<f32>,
+    mask: &[bool],
+    g_m: usize,
+    g_n: usize,
+) -> CompiledConv {
+    let (m, c) = (layer.out_ch, layer.in_ch);
+    let ks: usize = layer.kernel.iter().product();
+    let (pp, qq) = (ceil_div(m, g_m), ceil_div(c, g_n));
+    assert_eq!(mask.len(), pp * qq * ks, "kgs mask shape");
+    let mut groups = Vec::with_capacity(pp * qq);
+    let mut kept_weights = 0usize;
+    for p in 0..pp {
+        let m0 = p * g_m;
+        let m_eff = g_m.min(m - m0);
+        for q in 0..qq {
+            let c0 = q * g_n;
+            let n_eff = g_n.min(c - c0);
+            // Kept locations for this group.
+            let kept: Vec<usize> = (0..ks)
+                .filter(|&loc| mask[(p * qq + q) * ks + loc])
+                .collect();
+            if kept.is_empty() {
+                continue;
+            }
+            // Column order: (c_local major, kept-loc minor) — matches the
+            // patchesT row index c*Ks + loc used by the executor.
+            let mut cols = Vec::with_capacity(n_eff * kept.len());
+            for jn in 0..n_eff {
+                for &loc in &kept {
+                    cols.push(((c0 + jn) * ks + loc) as u32);
+                }
+            }
+            // Panel (m_eff rows x cols.len()) packed row-major.
+            let mut panel = Vec::with_capacity(m_eff * cols.len());
+            for im in 0..m_eff {
+                let mrow = m0 + im;
+                for jn in 0..n_eff {
+                    let base = (mrow * c + (c0 + jn)) * ks;
+                    for &loc in &kept {
+                        panel.push(w[base + loc]);
+                    }
+                }
+            }
+            kept_weights += panel.len();
+            groups.push(KgsGroup { m0, m_eff, cols, panel });
+        }
+    }
+    let r = geom.rows(1);
+    CompiledConv {
+        name: layer.name.clone(),
+        geom: *geom,
+        relu: layer.relu,
+        bias,
+        flops: 2 * kept_weights * r,
+        kind: ConvKind::Kgs { groups },
+        tile: GemmTile::default(),
+    }
+}
+
+/// Vanilla: per filter-group row p, the list of kept channel groups with
+/// their full (m_eff, n_eff*Ks) panels.
+fn compile_vanilla(
+    layer: &ConvLayer,
+    geom: &Conv3dGeometry,
+    w: &[f32],
+    bias: Vec<f32>,
+    mask: &[bool],
+    g_m: usize,
+    g_n: usize,
+) -> CompiledConv {
+    let (m, c) = (layer.out_ch, layer.in_ch);
+    let ks: usize = layer.kernel.iter().product();
+    let (pp, qq) = (ceil_div(m, g_m), ceil_div(c, g_n));
+    assert_eq!(mask.len(), pp * qq, "vanilla mask shape");
+    let mut rows = Vec::with_capacity(pp);
+    let mut kept_weights = 0usize;
+    for p in 0..pp {
+        let m0 = p * g_m;
+        let m_eff = g_m.min(m - m0);
+        let mut kept_groups = Vec::new();
+        for q in 0..qq {
+            if !mask[p * qq + q] {
+                continue;
+            }
+            let c0 = q * g_n;
+            let n_eff = g_n.min(c - c0);
+            let mut cols = Vec::with_capacity(n_eff * ks);
+            for jn in 0..n_eff {
+                for loc in 0..ks {
+                    cols.push(((c0 + jn) * ks + loc) as u32);
+                }
+            }
+            let mut panel = Vec::with_capacity(m_eff * cols.len());
+            for im in 0..m_eff {
+                let base = ((m0 + im) * c + c0) * ks;
+                panel.extend_from_slice(&w[base..base + n_eff * ks]);
+            }
+            kept_weights += panel.len();
+            kept_groups.push(KgsGroup { m0, m_eff, cols, panel });
+        }
+        rows.push(VanillaRow { m0, m_eff, groups: kept_groups });
+    }
+    let r = geom.rows(1);
+    CompiledConv {
+        name: layer.name.clone(),
+        geom: *geom,
+        relu: layer.relu,
+        bias,
+        flops: 2 * kept_weights * r,
+        kind: ConvKind::Vanilla { rows },
+        tile: GemmTile::default(),
+    }
+}
+
+/// Filter: keep surviving rows of the dense weight matrix.
+fn compile_filter(
+    layer: &ConvLayer,
+    geom: &Conv3dGeometry,
+    w: &[f32],
+    bias: Vec<f32>,
+    mask: &[bool],
+) -> CompiledConv {
+    let m = layer.out_ch;
+    let k = geom.cols();
+    assert_eq!(mask.len(), m, "filter mask shape");
+    let kept: Vec<u32> = (0..m).filter(|&i| mask[i]).map(|i| i as u32).collect();
+    let mut wmat = Vec::with_capacity(kept.len() * k);
+    for &i in &kept {
+        wmat.extend_from_slice(&w[i as usize * k..(i as usize + 1) * k]);
+    }
+    let r = geom.rows(1);
+    CompiledConv {
+        name: layer.name.clone(),
+        geom: *geom,
+        relu: layer.relu,
+        bias,
+        flops: 2 * wmat.len() * r,
+        kind: ConvKind::Filter { rows: kept, wmat },
+        tile: GemmTile::default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{TensorRef, WeightRefs};
+
+    pub(crate) fn layer(m: usize, c: usize, k: [usize; 3]) -> ConvLayer {
+        let dummy = TensorRef { offset: 0, shape: vec![], dtype: "f32".into() };
+        ConvLayer {
+            name: "t".into(),
+            in_ch: c,
+            out_ch: m,
+            kernel: k,
+            stride: [1, 1, 1],
+            padding: [k[0] / 2, k[1] / 2, k[2] / 2],
+            relu: false,
+            weights: WeightRefs { w: dummy.clone(), b: dummy },
+        weights_sparse: None,
+            unit_mask: None,
+        }
+    }
+
+    pub(crate) fn geom_for(l: &ConvLayer, sp: [usize; 3]) -> Conv3dGeometry {
+        Conv3dGeometry {
+            in_ch: l.in_ch,
+            out_ch: l.out_ch,
+            kernel: l.kernel,
+            stride: l.stride,
+            padding: l.padding,
+            in_spatial: sp,
+        }
+    }
+
+    #[test]
+    fn kgs_compaction_counts() {
+        let l = layer(8, 8, [3, 3, 3]);
+        let g = geom_for(&l, [4, 4, 4]);
+        let w = vec![1.0f32; 8 * 8 * 27];
+        // Keep 9 of 27 locations in every group.
+        let mut mask = vec![false; 2 * 2 * 27];
+        for grp in 0..4 {
+            for loc in 0..9 {
+                mask[grp * 27 + loc] = true;
+            }
+        }
+        let cc = compile_kgs(&l, &g, &w, vec![0.0; 8], &mask, 4, 4);
+        match &cc.kind {
+            ConvKind::Kgs { groups } => {
+                assert_eq!(groups.len(), 4);
+                for grp in groups {
+                    assert_eq!(grp.cols.len(), 4 * 9);
+                    assert_eq!(grp.panel.len(), 4 * 4 * 9);
+                }
+            }
+            _ => panic!("expected kgs"),
+        }
+        // FLOPs reduced 3x vs dense.
+        assert_eq!(cc.flops * 3, g.flops(1));
+    }
+
+    #[test]
+    fn filter_compaction_rows() {
+        let l = layer(6, 4, [1, 1, 1]);
+        let g = geom_for(&l, [2, 2, 2]);
+        let w: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let mask = vec![true, false, true, false, true, false];
+        let cc = compile_filter(&l, &g, &w, vec![0.0; 6], &mask);
+        match &cc.kind {
+            ConvKind::Filter { rows, wmat } => {
+                assert_eq!(rows, &[0, 2, 4]);
+                assert_eq!(wmat.len(), 3 * 4);
+                assert_eq!(wmat[0..4], [0.0, 1.0, 2.0, 3.0]);
+                assert_eq!(wmat[4..8], [8.0, 9.0, 10.0, 11.0]);
+            }
+            _ => panic!("expected filter"),
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Compiled conv plans: the output of codegen, the input of the executors.
+
+use crate::tensor::Conv3dGeometry;
+
+/// Register/cache blocking parameters for the GEMM micro-kernel.
+/// Found per layer shape by [`super::tuner`]; defaults are sane for the
+/// host CPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmTile {
+    /// Rows of the weight matrix processed per micro-kernel step
+    /// (register-blocked accumulators).
+    pub mr: usize,
+    /// Columns (output positions) per cache block.
+    pub rc: usize,
+    /// Reduction (K) slice per cache block.
+    pub kc: usize,
+}
+
+impl Default for GemmTile {
+    fn default() -> Self {
+        Self { mr: 4, rc: 512, kc: 256 }
+    }
+}
+
+/// One kernel group's compacted panel (KGS) or one kept channel-group panel
+/// (Vanilla): `panel` is (m_eff x cols.len()) row-major; `cols[j]` is the
+/// row of the transposed patch matrix feeding column j.
+#[derive(Debug, Clone)]
+pub struct KgsGroup {
+    /// First output filter of this group.
+    pub m0: usize,
+    /// Filters covered (may be < g_m at the ragged edge).
+    pub m_eff: usize,
+    /// Patch-matrix row index per packed column.
+    pub cols: Vec<u32>,
+    /// Packed weights, row-major (m_eff, cols.len()).
+    pub panel: Vec<f32>,
+}
+
+/// All kept channel-group panels of one filter-group row (Vanilla scheme).
+#[derive(Debug, Clone)]
+pub struct VanillaRow {
+    pub m0: usize,
+    pub m_eff: usize,
+    pub groups: Vec<KgsGroup>,
+}
+
+/// Executor-ready form of one conv layer.
+#[derive(Debug, Clone)]
+pub enum ConvKind {
+    /// Full (M, K) row-major weight matrix.
+    Dense { wmat: Vec<f32> },
+    /// Compacted KGS panels.
+    Kgs { groups: Vec<KgsGroup> },
+    /// Per-filter-group kept channel groups.
+    Vanilla { rows: Vec<VanillaRow> },
+    /// Surviving filter rows only (`rows[i]` = original filter index).
+    Filter { rows: Vec<u32>, wmat: Vec<f32> },
+}
+
+/// A compiled conv layer: geometry + packed weights + tuned tiling.
+#[derive(Debug, Clone)]
+pub struct CompiledConv {
+    pub name: String,
+    pub geom: Conv3dGeometry,
+    pub relu: bool,
+    pub bias: Vec<f32>,
+    pub kind: ConvKind,
+    pub tile: GemmTile,
+    /// Actual FLOPs per clip after compaction (2*MACs).
+    pub flops: usize,
+}
+
+impl CompiledConv {
+    /// Fraction of dense FLOPs that survive pruning (1.0 for dense).
+    pub fn density(&self) -> f64 {
+        self.flops as f64 / self.geom.flops(1) as f64
+    }
+
+    /// Bytes of packed weights (for the cache/memory model).
+    pub fn weight_bytes(&self) -> usize {
+        let f = match &self.kind {
+            ConvKind::Dense { wmat } => wmat.len(),
+            ConvKind::Kgs { groups } => {
+                groups.iter().map(|g| g.panel.len() + g.cols.len()).sum()
+            }
+            ConvKind::Vanilla { rows } => rows
+                .iter()
+                .flat_map(|r| r.groups.iter())
+                .map(|g| g.panel.len() + g.cols.len())
+                .sum(),
+            ConvKind::Filter { rows, wmat } => wmat.len() + rows.len(),
+        };
+        4 * f
+    }
+}

@@ -1,0 +1,185 @@
+//! Auto-tuner: search GEMM tile parameters per layer shape on the actual
+//! machine — the paper's "all models are tuned to their best
+//! configurations, e.g. the best tiling size, unrolling size".
+
+use crate::codegen::{CompiledConv, ConvKind, GemmTile};
+use crate::executors;
+use crate::tensor::{Mat, Tensor5};
+use std::time::Instant;
+
+/// Candidate tile grid. Small by design: the paper's tuner explores tiling
+/// and unrolling; we search register rows x cache blocks.
+pub fn candidates() -> Vec<GemmTile> {
+    let mut v = Vec::new();
+    for mr in [2usize, 4, 8] {
+        for rc in [128usize, 256, 512, 1024] {
+            for kc in [64usize, 128, 256, 512] {
+                v.push(GemmTile { mr, rc, kc });
+            }
+        }
+    }
+    v
+}
+
+/// Time one conv execution with a given tile (median of `reps`).
+pub fn time_conv(cc: &CompiledConv, x: &Tensor5, tile: GemmTile, reps: usize) -> f64 {
+    let g = cc.geom;
+    let pt = executors::im2col_t(x, &g);
+    let mut out = Mat::zeros(g.out_ch, pt.cols);
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            out.data.fill(0.0);
+            let t0 = Instant::now();
+            let cc2 = CompiledConv { tile, ..cc.clone() };
+            executors::run_compiled_conv(&cc2, &pt, &mut out);
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Result of tuning one layer.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    pub name: String,
+    pub best: GemmTile,
+    pub best_s: f64,
+    pub default_s: f64,
+}
+
+impl TuneReport {
+    pub fn speedup(&self) -> f64 {
+        self.default_s / self.best_s
+    }
+}
+
+/// Tune a compiled conv in place; returns the report.
+pub fn tune_conv(cc: &mut CompiledConv, reps: usize) -> TuneReport {
+    let x = Tensor5::random(
+        [
+            1,
+            cc.geom.in_ch,
+            cc.geom.in_spatial[0],
+            cc.geom.in_spatial[1],
+            cc.geom.in_spatial[2],
+        ],
+        7,
+    );
+    let default_s = time_conv(cc, &x, GemmTile::default(), reps);
+    let mut best = GemmTile::default();
+    let mut best_s = default_s;
+    for t in candidates() {
+        // mr > 4 only helps dense panels; sparse panels use their own walk.
+        if matches!(cc.kind, ConvKind::Kgs { .. } | ConvKind::Vanilla { .. })
+            && t.mr != GemmTile::default().mr
+        {
+            continue;
+        }
+        let s = time_conv(cc, &x, t, reps);
+        if s < best_s {
+            best_s = s;
+            best = t;
+        }
+    }
+    cc.tile = best;
+    TuneReport { name: cc.name.clone(), best, best_s, default_s }
+}
+
+/// Tune every conv of a compiled model (in place).
+pub fn tune_model(convs: &mut [CompiledConv], reps: usize) -> Vec<TuneReport> {
+    convs.iter_mut().map(|c| tune_conv(c, reps)).collect()
+}
+
+/// Group-size sweep used by E7 (`benches/group_size.rs` + `tune_groups`
+/// example): time a synthesized KGS layer at a given (g_m, g_n) and keep
+/// fraction, returning (seconds, achieved FLOPs fraction).
+pub fn time_group_size(
+    m: usize,
+    c: usize,
+    spatial: [usize; 3],
+    g_m: usize,
+    g_n: usize,
+    keep_frac: f64,
+    reps: usize,
+) -> (f64, f64) {
+    use crate::codegen::{compile_conv_sparse, Scheme};
+    use crate::model::{TensorRef, WeightRefs};
+
+    let kernel = [3usize, 3, 3];
+    let ks: usize = kernel.iter().product();
+    let pp = m.div_ceil(g_m);
+    let qq = c.div_ceil(g_n);
+    // Deterministic mask: keep ~keep_frac of locations per group.
+    let keep = ((ks as f64) * keep_frac).round().max(1.0) as usize;
+    let mut mask = vec![false; pp * qq * ks];
+    for g in 0..pp * qq {
+        for loc in 0..keep.min(ks) {
+            // Spread kept taps deterministically.
+            mask[g * ks + (loc * 7 + g) % ks] = true;
+        }
+    }
+    let dummy = TensorRef { offset: 0, shape: vec![], dtype: "f32".into() };
+    let layer = crate::model::ConvLayer {
+        name: format!("sweep_{g_m}x{g_n}"),
+        in_ch: c,
+        out_ch: m,
+        kernel,
+        stride: [1, 1, 1],
+        padding: [1, 1, 1],
+        relu: true,
+        weights: WeightRefs { w: dummy.clone(), b: dummy },
+        weights_sparse: None,
+        unit_mask: None,
+    };
+    let geom = crate::tensor::Conv3dGeometry {
+        in_ch: c,
+        out_ch: m,
+        kernel,
+        stride: [1, 1, 1],
+        padding: [1, 1, 1],
+        in_spatial: spatial,
+    };
+    let w = Tensor5::random([m, c, 3, 3, 3], 3).data;
+    let cc = compile_conv_sparse(
+        &layer,
+        &geom,
+        &w,
+        vec![0.0; m],
+        &mask,
+        Scheme::Kgs,
+        g_m,
+        g_n,
+    );
+    let x = Tensor5::random([1, c, spatial[0], spatial[1], spatial[2]], 4);
+    let secs = time_conv(&cc, &x, cc.tile, reps);
+    (secs, cc.flops as f64 / geom.flops(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::GemmTile;
+
+    #[test]
+    fn candidates_nonempty_and_unique() {
+        let c = candidates();
+        assert!(c.len() >= 16);
+        let mut seen = std::collections::HashSet::new();
+        for t in &c {
+            assert!(seen.insert((t.mr, t.rc, t.kc)));
+        }
+    }
+
+    #[test]
+    fn group_sweep_flops_fraction() {
+        let (_, frac) = time_group_size(16, 16, [4, 8, 8], 4, 4, 0.33, 1);
+        assert!((frac - 9.0 / 27.0).abs() < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn default_tile_sane() {
+        let t = GemmTile::default();
+        assert!(t.mr >= 1 && t.rc >= 1 && t.kc >= 1);
+    }
+}

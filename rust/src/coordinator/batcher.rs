@@ -1,0 +1,127 @@
+//! Dynamic batcher: size-capped, deadline-flushed request aggregation.
+
+use super::Request;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Flush when this many requests are pending.
+    pub max_batch: usize,
+    /// Flush when the oldest pending request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 4, max_wait: Duration::from_millis(20) }
+    }
+}
+
+/// Pulls requests from a channel and yields batches.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    rx: Receiver<Request>,
+    pending: Vec<Request>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig, rx: Receiver<Request>) -> Self {
+        Self { cfg, rx, pending: Vec::new() }
+    }
+
+    /// Block until a batch is ready. `None` once the channel closed and no
+    /// requests remain.
+    pub fn next_batch(&mut self) -> Option<Vec<Request>> {
+        loop {
+            if self.pending.len() >= self.cfg.max_batch {
+                return Some(self.take());
+            }
+            let deadline = self
+                .pending
+                .first()
+                .map(|r| r.arrival + self.cfg.max_wait);
+            let timeout = match deadline {
+                Some(d) => d.saturating_duration_since(Instant::now()),
+                None => Duration::from_secs(3600),
+            };
+            match self.rx.recv_timeout(timeout) {
+                Ok(req) => self.pending.push(req),
+                Err(RecvTimeoutError::Timeout) => {
+                    if !self.pending.is_empty() {
+                        return Some(self.take());
+                    }
+                    // else: keep waiting for the first request
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    if self.pending.is_empty() {
+                        return None;
+                    }
+                    return Some(self.take());
+                }
+            }
+        }
+    }
+
+    fn take(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor5;
+    use std::sync::mpsc;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            clip: Tensor5::zeros([1, 1, 1, 1, 1]),
+            label: None,
+            arrival: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn flush_on_size() {
+        let (tx, rx) = mpsc::channel();
+        let mut b = Batcher::new(
+            BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(10) },
+            rx,
+        );
+        for i in 0..3 {
+            tx.send(req(i)).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+    }
+
+    #[test]
+    fn flush_on_deadline() {
+        let (tx, rx) = mpsc::channel();
+        let mut b = Batcher::new(
+            BatcherConfig {
+                max_batch: 100,
+                max_wait: Duration::from_millis(10),
+            },
+            rx,
+        );
+        tx.send(req(0)).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn drain_on_disconnect() {
+        let (tx, rx) = mpsc::channel();
+        let mut b = Batcher::new(BatcherConfig::default(), rx);
+        tx.send(req(0)).unwrap();
+        tx.send(req(1)).unwrap();
+        drop(tx);
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        assert!(b.next_batch().is_none());
+    }
+}

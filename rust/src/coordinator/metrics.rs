@@ -1,0 +1,134 @@
+//! Serving metrics: latency percentiles, throughput, accuracy.
+
+use std::sync::Mutex;
+
+/// Aggregated latency distribution (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+impl LatencyStats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let pct = |p: f64| samples[((n as f64 - 1.0) * p).round() as usize];
+        Self {
+            count: n,
+            mean_s: samples.iter().sum::<f64>() / n as f64,
+            p50_s: pct(0.50),
+            p95_s: pct(0.95),
+            p99_s: pct(0.99),
+            max_s: samples[n - 1],
+        }
+    }
+}
+
+/// Thread-safe metrics sink shared by server workers.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies: Vec<f64>,
+    batches: Vec<usize>,
+    correct: usize,
+    labelled: usize,
+    first_s: Option<std::time::Instant>,
+    last_s: Option<std::time::Instant>,
+}
+
+impl Metrics {
+    pub fn record(&self, latency_s: f64, batch: usize, correct: Option<bool>) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies.push(latency_s);
+        g.batches.push(batch);
+        if let Some(c) = correct {
+            g.labelled += 1;
+            if c {
+                g.correct += 1;
+            }
+        }
+        let now = std::time::Instant::now();
+        g.first_s.get_or_insert(now);
+        g.last_s = Some(now);
+    }
+
+    pub fn latency(&self) -> LatencyStats {
+        LatencyStats::from_samples(self.inner.lock().unwrap().latencies.clone())
+    }
+
+    /// Requests per second over the observed span.
+    pub fn throughput(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        match (g.first_s, g.last_s) {
+            (Some(a), Some(b)) if b > a => {
+                g.latencies.len() as f64 / (b - a).as_secs_f64()
+            }
+            _ => 0.0,
+        }
+    }
+
+    pub fn accuracy(&self) -> Option<f64> {
+        let g = self.inner.lock().unwrap();
+        if g.labelled == 0 {
+            None
+        } else {
+            Some(g.correct as f64 / g.labelled as f64)
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        if g.batches.is_empty() {
+            0.0
+        } else {
+            g.batches.iter().sum::<usize>() as f64 / g.batches.len() as f64
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.inner.lock().unwrap().latencies.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let s = LatencyStats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.count, 100);
+        assert!(s.p50_s <= s.p95_s && s.p95_s <= s.p99_s && s.p99_s <= s.max_s);
+        assert_eq!(s.max_s, 100.0);
+    }
+
+    #[test]
+    fn empty_stats() {
+        let s = LatencyStats::from_samples(vec![]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean_s, 0.0);
+    }
+
+    #[test]
+    fn accuracy_accounting() {
+        let m = Metrics::default();
+        m.record(0.1, 1, Some(true));
+        m.record(0.2, 2, Some(false));
+        m.record(0.3, 1, None);
+        assert_eq!(m.accuracy(), Some(0.5));
+        assert_eq!(m.count(), 3);
+        assert!((m.mean_batch() - 4.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,55 @@
+//! L3 coordinator: the serving runtime around the execution engines.
+//!
+//! The paper's framework is an on-device inference engine; deployed, it
+//! sits behind a request loop (camera frames / clips arriving, batched,
+//! dispatched to CPU or GPU). This module provides that loop:
+//!
+//! * [`batcher`] — collects requests into batches under a latency budget
+//!   (size-capped, deadline-flushed), mirroring mobile pipelines that
+//!   process "16 frames" per inference.
+//! * [`server`] — worker threads draining the batch queue into an
+//!   [`Engine`], with back-pressure via bounded queues.
+//! * [`metrics`] — latency percentiles + throughput accounting used by
+//!   the Table 2 harness and the E2E example.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::{LatencyStats, Metrics};
+pub use router::{Deployment, Policy, Router};
+pub use server::{Engine, Server, ServerConfig};
+
+use crate::tensor::Tensor5;
+use std::time::Instant;
+
+/// One inference request: a clip plus bookkeeping.
+pub struct Request {
+    pub id: u64,
+    pub clip: Tensor5,
+    /// Ground-truth label when known (synthetic workloads) — lets the E2E
+    /// driver report serving accuracy, not just latency.
+    pub label: Option<usize>,
+    pub arrival: Instant,
+}
+
+/// The completed response for one request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub predicted: usize,
+    pub label: Option<usize>,
+    /// Queueing + execution latency.
+    pub latency_s: f64,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+}
+
+impl Response {
+    pub fn correct(&self) -> Option<bool> {
+        self.label.map(|l| l == self.predicted)
+    }
+}

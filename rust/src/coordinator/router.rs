@@ -1,0 +1,275 @@
+//! Multi-model request router: the front door of the serving framework.
+//!
+//! Routes requests to per-model [`Server`] instances (each with its own
+//! batcher + engine), with optional *policy-based engine selection*: a
+//! latency-budget rule picks the sparse engine when the deadline is tight
+//! and the dense engine otherwise — the mobile analog of RT3D switching
+//! between accuracy-optimal and latency-optimal deployments.
+
+use super::{Engine, Metrics, Response, Server, ServerConfig};
+use crate::tensor::Tensor5;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A deployable engine variant with its advertised quality/latency.
+pub struct Deployment {
+    pub name: String,
+    pub engine: Arc<dyn Engine>,
+    /// Expected single-clip latency (from the device model or measured).
+    pub expected_latency_s: f64,
+    /// Eval accuracy of this variant (None when unknown).
+    pub accuracy: Option<f64>,
+}
+
+/// Routing policy for models with multiple deployments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Always the most accurate deployment.
+    BestAccuracy,
+    /// Always the lowest-latency deployment.
+    LowestLatency,
+    /// Fastest deployment that meets the request deadline; falls back to
+    /// the fastest overall when none does.
+    Deadline,
+}
+
+struct ModelEntry {
+    servers: Vec<(Deployment, Server)>,
+}
+
+/// The router owns one or more models, each with >=1 running deployment.
+pub struct Router {
+    models: HashMap<String, ModelEntry>,
+    policy: Policy,
+}
+
+impl Router {
+    pub fn new(policy: Policy) -> Self {
+        Self { models: HashMap::new(), policy }
+    }
+
+    /// Register a model deployment and start its server.
+    pub fn add_deployment(
+        &mut self,
+        model: &str,
+        dep: Deployment,
+        cfg: ServerConfig,
+    ) {
+        let server = Server::start(dep.engine.clone(), cfg);
+        self.models
+            .entry(model.to_string())
+            .or_insert_with(|| ModelEntry { servers: Vec::new() })
+            .servers
+            .push((dep, server));
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    fn pick(&self, entry: &ModelEntry, deadline_s: Option<f64>) -> usize {
+        let deps: Vec<&Deployment> =
+            entry.servers.iter().map(|(d, _)| d).collect();
+        match self.policy {
+            Policy::BestAccuracy => deps
+                .iter()
+                .enumerate()
+                .max_by(|a, b| {
+                    a.1.accuracy
+                        .unwrap_or(0.0)
+                        .partial_cmp(&b.1.accuracy.unwrap_or(0.0))
+                        .unwrap()
+                })
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+            Policy::LowestLatency => fastest(&deps),
+            Policy::Deadline => {
+                let budget = deadline_s.unwrap_or(f64::INFINITY);
+                // Most accurate among those meeting the budget.
+                let mut best: Option<(usize, f64)> = None;
+                for (i, d) in deps.iter().enumerate() {
+                    if d.expected_latency_s <= budget {
+                        let acc = d.accuracy.unwrap_or(0.0);
+                        if best.map(|(_, a)| acc > a).unwrap_or(true) {
+                            best = Some((i, acc));
+                        }
+                    }
+                }
+                best.map(|(i, _)| i).unwrap_or_else(|| fastest(&deps))
+            }
+        }
+    }
+
+    /// Route one request. Returns (deployment name, request id).
+    pub fn submit(
+        &self,
+        model: &str,
+        clip: Tensor5,
+        label: Option<usize>,
+        deadline_s: Option<f64>,
+    ) -> Result<(String, u64)> {
+        let entry = self
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model {model:?}"))?;
+        let i = self.pick(entry, deadline_s);
+        let (dep, server) = &entry.servers[i];
+        let id = server.submit(clip, label);
+        Ok((dep.name.clone(), id))
+    }
+
+    /// Drain up to `n` responses for a model's deployment-0..k servers.
+    /// (Responses are per-server channels; callers typically drain after a
+    /// burst — see `examples/serve_video.rs`.)
+    pub fn drain(&self, model: &str, n: usize) -> Result<Vec<Response>> {
+        let entry = self
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model {model:?}"))?;
+        let mut out = Vec::with_capacity(n);
+        // Round-robin the per-server response queues until n collected.
+        while out.len() < n {
+            let mut got = false;
+            for (_, server) in &entry.servers {
+                if let Ok(resp) = server
+                    .responses
+                    .recv_timeout(std::time::Duration::from_millis(200))
+                {
+                    out.push(resp);
+                    got = true;
+                    if out.len() >= n {
+                        break;
+                    }
+                }
+            }
+            if !got {
+                return Err(anyhow!(
+                    "drained only {}/{} responses before timeout",
+                    out.len(),
+                    n
+                ));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Shut down every server, returning (model, deployment, metrics).
+    pub fn shutdown(self) -> Vec<(String, String, Arc<Metrics>)> {
+        let mut out = Vec::new();
+        for (model, entry) in self.models {
+            for (dep, server) in entry.servers {
+                out.push((model.clone(), dep.name, server.shutdown()));
+            }
+        }
+        out
+    }
+}
+
+fn fastest(deps: &[&Deployment]) -> usize {
+    deps.iter()
+        .enumerate()
+        .min_by(|a, b| {
+            a.1.expected_latency_s
+                .partial_cmp(&b.1.expected_latency_s)
+                .unwrap()
+        })
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+
+    struct Tagged(f32);
+    impl Engine for Tagged {
+        fn infer(&self, batch: &Tensor5) -> Mat {
+            let mut m = Mat::zeros(batch.dims[0], 2);
+            for r in 0..m.rows {
+                *m.at_mut(r, 0) = self.0; // identify which engine ran
+            }
+            m
+        }
+        fn name(&self) -> String {
+            format!("tagged-{}", self.0)
+        }
+    }
+
+    fn dep(name: &str, tag: f32, lat: f64, acc: f64) -> Deployment {
+        Deployment {
+            name: name.into(),
+            engine: Arc::new(Tagged(tag)),
+            expected_latency_s: lat,
+            accuracy: Some(acc),
+        }
+    }
+
+    fn router(policy: Policy) -> Router {
+        let mut r = Router::new(policy);
+        // dense: slow + accurate; sparse: fast + slightly less accurate.
+        r.add_deployment("m", dep("dense", 1.0, 0.9, 0.80), ServerConfig::default());
+        r.add_deployment("m", dep("sparse", 2.0, 0.3, 0.78), ServerConfig::default());
+        r
+    }
+
+    fn clip() -> Tensor5 {
+        Tensor5::zeros([1, 1, 1, 1, 1])
+    }
+
+    #[test]
+    fn best_accuracy_picks_dense() {
+        let r = router(Policy::BestAccuracy);
+        let (name, _) = r.submit("m", clip(), None, None).unwrap();
+        assert_eq!(name, "dense");
+        let resp = r.drain("m", 1).unwrap();
+        assert_eq!(resp[0].logits[0], 1.0);
+        r.shutdown();
+    }
+
+    #[test]
+    fn lowest_latency_picks_sparse() {
+        let r = router(Policy::LowestLatency);
+        let (name, _) = r.submit("m", clip(), None, None).unwrap();
+        assert_eq!(name, "sparse");
+        r.drain("m", 1).unwrap();
+        r.shutdown();
+    }
+
+    #[test]
+    fn deadline_policy_switches() {
+        let r = router(Policy::Deadline);
+        // Loose deadline -> accurate (dense); tight -> sparse.
+        let (a, _) = r.submit("m", clip(), None, Some(5.0)).unwrap();
+        let (b, _) = r.submit("m", clip(), None, Some(0.5)).unwrap();
+        assert_eq!(a, "dense");
+        assert_eq!(b, "sparse");
+        // Impossible deadline -> fastest fallback.
+        let (c, _) = r.submit("m", clip(), None, Some(0.01)).unwrap();
+        assert_eq!(c, "sparse");
+        r.drain("m", 3).unwrap();
+        r.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let r = router(Policy::BestAccuracy);
+        assert!(r.submit("nope", clip(), None, None).is_err());
+        r.shutdown();
+    }
+
+    #[test]
+    fn metrics_per_deployment() {
+        let r = router(Policy::LowestLatency);
+        for _ in 0..3 {
+            r.submit("m", clip(), Some(0), None).unwrap();
+        }
+        r.drain("m", 3).unwrap();
+        let stats = r.shutdown();
+        let sparse = stats.iter().find(|(_, d, _)| d == "sparse").unwrap();
+        assert_eq!(sparse.2.count(), 3);
+        let dense = stats.iter().find(|(_, d, _)| d == "dense").unwrap();
+        assert_eq!(dense.2.count(), 0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Server: worker threads draining batches into an [`Engine`].
+
+use super::{Batcher, BatcherConfig, Metrics, Request, Response};
+use crate::tensor::{Mat, Tensor5};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Anything that can run a batched forward pass (native engine, PJRT
+/// executable, or the device simulator in trace mode).
+pub trait Engine: Send + Sync {
+    /// (batch NCDHW) -> logits (batch x classes).
+    fn infer(&self, batch: &Tensor5) -> Mat;
+    fn name(&self) -> String;
+}
+
+impl Engine for crate::executors::NativeEngine {
+    fn infer(&self, batch: &Tensor5) -> Mat {
+        self.forward(batch)
+    }
+    fn name(&self) -> String {
+        format!("native-{:?}", self.kind)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+    /// Bound of the ingress queue (back-pressure: senders block).
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { batcher: BatcherConfig::default(), queue_depth: 64 }
+    }
+}
+
+/// A running server instance: one batcher thread feeding the engine.
+pub struct Server {
+    tx: Option<SyncSender<Request>>,
+    pub metrics: Arc<Metrics>,
+    pub responses: Receiver<Response>,
+    worker: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    pub fn start(engine: Arc<dyn Engine>, cfg: ServerConfig) -> Self {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let (resp_tx, resp_rx) = sync_channel::<Response>(cfg.queue_depth * 4);
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            let mut batcher = Batcher::new(cfg.batcher, rx);
+            while let Some(batch) = batcher.next_batch() {
+                let clips: Vec<Tensor5> =
+                    batch.iter().map(|r| r.clip.clone()).collect();
+                let packed = crate::workload::clips::batch_clips(&clips);
+                let logits = engine.infer(&packed);
+                let done = Instant::now();
+                for (i, req) in batch.iter().enumerate() {
+                    let row = logits.row(i);
+                    let predicted = argmax(row);
+                    let resp = Response {
+                        id: req.id,
+                        logits: row.to_vec(),
+                        predicted,
+                        label: req.label,
+                        latency_s: (done - req.arrival).as_secs_f64(),
+                        batch_size: batch.len(),
+                    };
+                    m2.record(resp.latency_s, batch.len(), resp.correct());
+                    // Receiver may have hung up at shutdown; ignore.
+                    let _ = resp_tx.send(resp);
+                }
+            }
+        });
+        Self {
+            tx: Some(tx),
+            metrics,
+            responses: resp_rx,
+            worker: Some(worker),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    /// Submit a clip; blocks when the queue is full (back-pressure).
+    pub fn submit(&self, clip: Tensor5, label: Option<usize>) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("server already shut down")
+            .send(Request { id, clip, label, arrival: Instant::now() })
+            .expect("server worker died");
+        id
+    }
+
+    /// Close ingress and wait for in-flight batches to finish.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.metrics.clone()
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Test engine: logit[i] = mean of clip scaled by class index.
+    struct Toy;
+    impl Engine for Toy {
+        fn infer(&self, batch: &Tensor5) -> Mat {
+            let b = batch.dims[0];
+            let n = batch.len() / b;
+            let mut out = Mat::zeros(b, 4);
+            for i in 0..b {
+                let mean: f32 =
+                    batch.data[i * n..(i + 1) * n].iter().sum::<f32>() / n as f32;
+                for c in 0..4 {
+                    *out.at_mut(i, c) = mean * (c as f32 + 1.0);
+                }
+            }
+            out
+        }
+        fn name(&self) -> String {
+            "toy".into()
+        }
+    }
+
+    #[test]
+    fn serve_round_trip() {
+        let server = Server::start(Arc::new(Toy), ServerConfig::default());
+        for i in 0..8 {
+            let mut clip = Tensor5::zeros([1, 1, 2, 2, 2]);
+            clip.data.fill(1.0 + i as f32);
+            // mean > 0 -> argmax is class 3
+            server.submit(clip, Some(3));
+        }
+        let mut got = 0;
+        while got < 8 {
+            let r = server.responses.recv().unwrap();
+            assert_eq!(r.predicted, 3);
+            assert_eq!(r.correct(), Some(true));
+            got += 1;
+        }
+        let m = server.shutdown();
+        assert_eq!(m.count(), 8);
+        assert_eq!(m.accuracy(), Some(1.0));
+    }
+
+    #[test]
+    fn batching_happens_under_load() {
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(50),
+            },
+            queue_depth: 64,
+        };
+        let server = Server::start(Arc::new(Toy), cfg);
+        for _ in 0..16 {
+            server.submit(Tensor5::zeros([1, 1, 2, 2, 2]), None);
+        }
+        for _ in 0..16 {
+            server.responses.recv().unwrap();
+        }
+        let m = server.shutdown();
+        assert!(m.mean_batch() > 1.0, "mean batch {}", m.mean_batch());
+    }
+}

@@ -1,0 +1,388 @@
+//! Whole-model native engine: interprets the manifest layer IR with the
+//! compiled conv plans — the "generated code" half of the paper's framework.
+//!
+//! Three quality levels mirror Table 2's columns:
+//! * [`EngineKind::Naive`]    — direct conv everywhere (PyTorch-Mobile-class)
+//! * [`EngineKind::Untuned`]  — im2col + untuned GEMM (MNN-class)
+//! * [`EngineKind::Rt3d`]     — blocked micro-kernel, dense or sparse plans
+
+use crate::codegen::{self, CompiledConv, ConvKind};
+use crate::executors::{self, gemm, naive};
+use crate::model::{Layer, Model};
+use crate::tensor::{Conv3dGeometry, Mat, Tensor5};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Naive,
+    Untuned,
+    Rt3d,
+}
+
+/// Per-layer timing sample captured during execution (feeds the device
+/// simulator and EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    pub name: String,
+    pub seconds: f64,
+    pub flops: usize,
+}
+
+struct DenseW {
+    w: Vec<f32>,
+    b: Vec<f32>,
+}
+
+/// A ready-to-run native model instance.
+pub struct NativeEngine {
+    pub kind: EngineKind,
+    layers: Vec<Layer>,
+    convs: std::collections::HashMap<String, CompiledConv>,
+    dense: std::collections::HashMap<String, DenseW>,
+    pub input: [usize; 4],
+    pub num_classes: usize,
+    /// When true, record per-layer timings on each run.
+    pub profile: std::sync::atomic::AtomicBool,
+    timings: std::sync::Mutex<Vec<LayerTiming>>,
+}
+
+impl NativeEngine {
+    /// Build from a loaded model. `use_sparsity` activates the compacted
+    /// sparse plans (only meaningful for `EngineKind::Rt3d`).
+    pub fn new(model: &Model, kind: EngineKind, use_sparsity: bool) -> Self {
+        let compiled = codegen::compile_model(model, use_sparsity && kind == EngineKind::Rt3d);
+        let convs = compiled
+            .into_iter()
+            .map(|c| (c.name.clone(), c))
+            .collect();
+        let mut dense = std::collections::HashMap::new();
+        collect_dense(
+            &model.manifest.layers,
+            model,
+            use_sparsity && kind == EngineKind::Rt3d,
+            &mut dense,
+        );
+        Self {
+            kind,
+            layers: model.manifest.layers.clone(),
+            convs,
+            dense,
+            input: model.manifest.input,
+            num_classes: model.manifest.num_classes,
+            profile: std::sync::atomic::AtomicBool::new(false),
+            timings: std::sync::Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Total post-compaction conv FLOPs per clip.
+    pub fn conv_flops(&self) -> usize {
+        self.convs.values().map(|c| c.flops).sum()
+    }
+
+    pub fn take_timings(&self) -> Vec<LayerTiming> {
+        std::mem::take(&mut self.timings.lock().unwrap())
+    }
+
+    /// Forward a batch: input NCDHW, returns (batch, num_classes) logits.
+    pub fn forward(&self, x: &Tensor5) -> Mat {
+        let out = self.run_layers(&self.layers, x.clone());
+        match out {
+            Value::Mat(m) => m,
+            Value::Tensor(t) => {
+                // Model without a dense head: global-pool to logits.
+                let b = t.dims[0];
+                let c = t.dims[1];
+                let mut m = Mat::zeros(b, c);
+                for n in 0..b {
+                    for ci in 0..c {
+                        let mut s = 0.0;
+                        let sp: usize = t.dims[2..].iter().product();
+                        let base = t.idx(n, ci, 0, 0, 0);
+                        for i in 0..sp {
+                            s += t.data[base + i];
+                        }
+                        *m.at_mut(n, ci) = s / (t.dims[2] * t.dims[3] * t.dims[4]) as f32;
+                    }
+                }
+                m
+            }
+        }
+    }
+
+    fn run_layers(&self, layers: &[Layer], mut x: Tensor5) -> Value {
+        let mut v = Value::Tensor(x.clone());
+        for l in layers {
+            v = self.run_layer(l, v);
+            if let Value::Tensor(t) = &v {
+                x = t.clone();
+            }
+        }
+        let _ = x;
+        v
+    }
+
+    fn run_layer(&self, l: &Layer, v: Value) -> Value {
+        match l {
+            Layer::Conv3d(c) => {
+                let t = v.tensor();
+                let cc = &self.convs[&c.name];
+                let t0 = std::time::Instant::now();
+                let out = self.run_conv(cc, &t);
+                if self.profile.load(std::sync::atomic::Ordering::Relaxed) {
+                    self.timings.lock().unwrap().push(LayerTiming {
+                        name: c.name.clone(),
+                        seconds: t0.elapsed().as_secs_f64(),
+                        flops: cc.flops * t.dims[0],
+                    });
+                }
+                Value::Tensor(out)
+            }
+            Layer::MaxPool3d { kernel, stride } => {
+                Value::Tensor(maxpool3d(&v.tensor(), *kernel, *stride))
+            }
+            Layer::AvgPoolGlobal => {
+                let t = v.tensor();
+                let [b, c, ..] = t.dims;
+                let sp: usize = t.dims[2..].iter().product();
+                let mut m = Mat::zeros(b, c);
+                for n in 0..b {
+                    for ci in 0..c {
+                        let base = t.idx(n, ci, 0, 0, 0);
+                        let s: f32 = t.data[base..base + sp].iter().sum();
+                        *m.at_mut(n, ci) = s / sp as f32;
+                    }
+                }
+                Value::Mat(m)
+            }
+            Layer::Flatten => {
+                let t = v.tensor();
+                let b = t.dims[0];
+                let rest = t.len() / b;
+                Value::Mat(Mat::from_vec(b, rest, t.data))
+            }
+            Layer::Dense(d) => {
+                let m = v.mat();
+                let dw = &self.dense[&d.name];
+                let mut out = Mat::zeros(m.rows, d.out_dim);
+                // x (B, in) @ w (in, out)
+                for r in 0..m.rows {
+                    let xrow = m.row(r);
+                    let orow = out.row_mut(r);
+                    for (i, &xv) in xrow.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let wrow = &dw.w[i * d.out_dim..(i + 1) * d.out_dim];
+                        for (o, wv) in orow.iter_mut().zip(wrow) {
+                            *o += xv * wv;
+                        }
+                    }
+                    for (o, bv) in orow.iter_mut().zip(&dw.b) {
+                        *o += bv;
+                        if d.relu && *o < 0.0 {
+                            *o = 0.0;
+                        }
+                    }
+                }
+                Value::Mat(out)
+            }
+            Layer::Residual { body, shortcut, .. } => {
+                let t = v.tensor();
+                let y = self.run_layers(body, t.clone()).tensor();
+                let s = if shortcut.is_empty() {
+                    t
+                } else {
+                    self.run_layers(shortcut, t).tensor()
+                };
+                assert_eq!(y.dims, s.dims, "residual shape mismatch");
+                let mut out = y;
+                for (o, sv) in out.data.iter_mut().zip(&s.data) {
+                    *o = (*o + sv).max(0.0);
+                }
+                Value::Tensor(out)
+            }
+            Layer::Concat { branches, .. } => {
+                let t = v.tensor();
+                let outs: Vec<Tensor5> = branches
+                    .iter()
+                    .map(|b| self.run_layers(b, t.clone()).tensor())
+                    .collect();
+                Value::Tensor(concat_channels(&outs))
+            }
+        }
+    }
+
+    fn run_conv(&self, cc: &CompiledConv, x: &Tensor5) -> Tensor5 {
+        // Rebind geometry to the actual input spatial size (the manifest
+        // geometry is for the native resolution; batch may differ).
+        let g = Conv3dGeometry {
+            in_spatial: [x.dims[2], x.dims[3], x.dims[4]],
+            ..cc.geom
+        };
+        match self.kind {
+            EngineKind::Naive => {
+                let w = match &cc.kind {
+                    ConvKind::Dense { wmat } => wmat,
+                    _ => panic!("naive engine requires dense plans"),
+                };
+                naive::conv3d_naive(x, w, &cc.bias, &g, cc.relu)
+            }
+            EngineKind::Untuned => {
+                let w = match &cc.kind {
+                    ConvKind::Dense { wmat } => wmat,
+                    _ => panic!("untuned engine requires dense plans"),
+                };
+                let pt = executors::im2col_t(x, &g);
+                let mut out = Mat::zeros(g.out_ch, pt.cols);
+                gemm::matmul_untuned(w, g.out_ch, &pt, &mut out);
+                let cc2 = CompiledConv { geom: g, ..cc.clone() };
+                executors::finish_bias_relu(&cc2, &mut out);
+                executors::mat_to_tensor(&out, x.dims[0], g.out_spatial())
+            }
+            EngineKind::Rt3d => {
+                let pt = executors::im2col_t(x, &g);
+                let mut out = Mat::zeros(g.out_ch, pt.cols);
+                let cc2 = CompiledConv { geom: g, ..cc.clone() };
+                executors::run_compiled_conv(&cc2, &pt, &mut out);
+                executors::mat_to_tensor(&out, x.dims[0], g.out_spatial())
+            }
+        }
+    }
+}
+
+enum Value {
+    Tensor(Tensor5),
+    Mat(Mat),
+}
+
+impl Value {
+    fn tensor(self) -> Tensor5 {
+        match self {
+            Value::Tensor(t) => t,
+            Value::Mat(_) => panic!("expected tensor, got matrix"),
+        }
+    }
+    fn mat(self) -> Mat {
+        match self {
+            Value::Mat(m) => m,
+            Value::Tensor(_) => panic!("expected matrix, got tensor"),
+        }
+    }
+}
+
+fn collect_dense(
+    layers: &[Layer],
+    model: &Model,
+    use_sparsity: bool,
+    out: &mut std::collections::HashMap<String, DenseW>,
+) {
+    for l in layers {
+        match l {
+            Layer::Dense(d) => {
+                let refs = if use_sparsity {
+                    d.weights_sparse.as_ref().unwrap_or(&d.weights)
+                } else {
+                    &d.weights
+                };
+                out.insert(
+                    d.name.clone(),
+                    DenseW {
+                        w: model.pool.f32(&refs.w),
+                        b: model.pool.f32(&refs.b),
+                    },
+                );
+            }
+            Layer::Residual { body, shortcut, .. } => {
+                collect_dense(body, model, use_sparsity, out);
+                collect_dense(shortcut, model, use_sparsity, out);
+            }
+            Layer::Concat { branches, .. } => {
+                for b in branches {
+                    collect_dense(b, model, use_sparsity, out);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Max-pool over NCDHW (VALID padding, matching lax.reduce_window usage).
+pub fn maxpool3d(x: &Tensor5, kernel: [usize; 3], stride: [usize; 3]) -> Tensor5 {
+    let [b, c, d, h, w] = x.dims;
+    let [kd, kh, kw] = kernel;
+    let [sd, sh, sw] = stride;
+    let od = (d - kd) / sd + 1;
+    let oh = (h - kh) / sh + 1;
+    let ow = (w - kw) / sw + 1;
+    let mut out = Tensor5::zeros([b, c, od, oh, ow]);
+    for n in 0..b {
+        for ci in 0..c {
+            for zo in 0..od {
+                for yo in 0..oh {
+                    for xo in 0..ow {
+                        let mut m = f32::NEG_INFINITY;
+                        for dz in 0..kd {
+                            for dy in 0..kh {
+                                for dx in 0..kw {
+                                    m = m.max(x.at(
+                                        n,
+                                        ci,
+                                        zo * sd + dz,
+                                        yo * sh + dy,
+                                        xo * sw + dx,
+                                    ));
+                                }
+                            }
+                        }
+                        *out.at_mut(n, ci, zo, yo, xo) = m;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn concat_channels(parts: &[Tensor5]) -> Tensor5 {
+    let [b, _, d, h, w] = parts[0].dims;
+    let ctot: usize = parts.iter().map(|t| t.dims[1]).sum();
+    let mut out = Tensor5::zeros([b, ctot, d, h, w]);
+    let sp = d * h * w;
+    for n in 0..b {
+        let mut coff = 0;
+        for t in parts {
+            let c = t.dims[1];
+            let src0 = t.idx(n, 0, 0, 0, 0);
+            let dst0 = out.idx(n, coff, 0, 0, 0);
+            out.data[dst0..dst0 + c * sp]
+                .copy_from_slice(&t.data[src0..src0 + c * sp]);
+            coff += c;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxpool_known_values() {
+        let mut x = Tensor5::zeros([1, 1, 2, 2, 2]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let out = maxpool3d(&x, [2, 2, 2], [2, 2, 2]);
+        assert_eq!(out.dims, [1, 1, 1, 1, 1]);
+        assert_eq!(out.data, vec![7.0]);
+    }
+
+    #[test]
+    fn concat_two_parts() {
+        let a = Tensor5::random([2, 3, 2, 2, 2], 1);
+        let b = Tensor5::random([2, 5, 2, 2, 2], 2);
+        let out = concat_channels(&[a.clone(), b.clone()]);
+        assert_eq!(out.dims, [2, 8, 2, 2, 2]);
+        assert_eq!(out.at(1, 2, 1, 1, 1), a.at(1, 2, 1, 1, 1));
+        assert_eq!(out.at(1, 3, 0, 1, 0), b.at(1, 0, 0, 1, 0));
+    }
+}

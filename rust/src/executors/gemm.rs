@@ -1,0 +1,259 @@
+//! GEMM micro-kernels over the transposed patch matrix.
+//!
+//! All output-producing kernels share one inner shape: broadcast `mr`
+//! weight scalars (one column of the weight panel) and FMA them against a
+//! contiguous span of a patch row — the rust analog of the paper's
+//! NEON-tuned generated code. KGS/Vanilla panels run the *same* kernel
+//! over fewer columns, which is why sparse speedup tracks the FLOPs
+//! pruning rate (paper §3, validated by `benches/sparsity_sweep.rs`).
+
+use crate::codegen::{GemmTile, KgsGroup};
+use crate::tensor::Mat;
+
+/// MNN-class baseline: im2col GEMM with no blocking or register tiling.
+/// out (M, R) += w (M, K) * patches_t (K, R).
+pub fn matmul_untuned(wmat: &[f32], m: usize, patches_t: &Mat, out: &mut Mat) {
+    let k = patches_t.rows;
+    let r = patches_t.cols;
+    assert_eq!(wmat.len(), m * k);
+    for mi in 0..m {
+        let wrow = &wmat[mi * k..(mi + 1) * k];
+        let orow = out.row_mut(mi);
+        for (ki, &wv) in wrow.iter().enumerate() {
+            let prow = patches_t.row(ki);
+            for ri in 0..r {
+                orow[ri] += wv * prow[ri];
+            }
+        }
+    }
+}
+
+/// Register-blocked dense GEMM: processes `tile.mr` output rows at once,
+/// streaming K in `tile.kc` slices and R in `tile.rc` spans so the active
+/// patch rows stay in L1/L2 (the paper's cache-tiled generated code).
+pub fn gemm_dense(wmat: &[f32], m: usize, patches_t: &Mat, out: &mut Mat, tile: GemmTile) {
+    let k = patches_t.rows;
+    let r = patches_t.cols;
+    assert_eq!(wmat.len(), m * k);
+    let mr = tile.mr.max(1);
+    // One scratch accumulator reused by every micro-panel (perf: §Perf L3-1 —
+    // allocating it inside the panel cost ~15% on c3d-sized GEMMs).
+    let mut scratch = vec![0.0f32; 8.max(mr) * tile.rc.max(1).min(r.max(1))];
+    for k0 in (0..k).step_by(tile.kc.max(1)) {
+        let k1 = (k0 + tile.kc).min(k);
+        for r0 in (0..r).step_by(tile.rc.max(1)) {
+            let r1 = (r0 + tile.rc).min(r);
+            let mut m0 = 0;
+            // Main mr-row panels.
+            while m0 + mr <= m {
+                micro_panel_dyn(wmat, k, patches_t, out, m0, mr, k0, k1, r0, r1, &mut scratch);
+                m0 += mr;
+            }
+            if m0 < m {
+                micro_panel_dyn(wmat, k, patches_t, out, m0, m - m0, k0, k1, r0, r1, &mut scratch);
+            }
+        }
+    }
+}
+
+/// mr-row micro-panel with the common cases specialized so the compiler
+/// keeps the accumulant rows in registers / vector lanes.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_panel_dyn(
+    wmat: &[f32],
+    k: usize,
+    patches_t: &Mat,
+    out: &mut Mat,
+    m0: usize,
+    rows: usize,
+    k0: usize,
+    k1: usize,
+    r0: usize,
+    r1: usize,
+    scratch: &mut [f32],
+) {
+    match rows {
+        4 => micro_panel::<4>(wmat, k, patches_t, out, m0, k0, k1, r0, r1, scratch),
+        8 => micro_panel::<8>(wmat, k, patches_t, out, m0, k0, k1, r0, r1, scratch),
+        2 => micro_panel::<2>(wmat, k, patches_t, out, m0, k0, k1, r0, r1, scratch),
+        1 => micro_panel::<1>(wmat, k, patches_t, out, m0, k0, k1, r0, r1, scratch),
+        n => {
+            // Ragged edge: decompose into supported sizes.
+            let mut done = 0;
+            for step in [8usize, 4, 2, 1] {
+                while n - done >= step {
+                    micro_panel_dyn(
+                        wmat, k, patches_t, out, m0 + done, step, k0, k1, r0, r1, scratch,
+                    );
+                    done += step;
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_panel<const MR: usize>(
+    wmat: &[f32],
+    k: usize,
+    patches_t: &Mat,
+    out: &mut Mat,
+    m0: usize,
+    k0: usize,
+    k1: usize,
+    r0: usize,
+    r1: usize,
+    scratch: &mut [f32],
+) {
+    let cols = out.cols;
+    let span = r1 - r0;
+    let acc = &mut scratch[..MR * span];
+    acc.fill(0.0);
+    for ki in k0..k1 {
+        let prow = &patches_t.row(ki)[r0..r1];
+        let mut ws = [0.0f32; MR];
+        for (i, w) in ws.iter_mut().enumerate() {
+            *w = wmat[(m0 + i) * k + ki];
+        }
+        if ws.iter().all(|&w| w == 0.0) {
+            continue;
+        }
+        for i in 0..MR {
+            let w = ws[i];
+            if w == 0.0 {
+                continue;
+            }
+            let a = &mut acc[i * span..(i + 1) * span];
+            for (av, pv) in a.iter_mut().zip(prow) {
+                *av += w * pv;
+            }
+        }
+    }
+    for i in 0..MR {
+        let orow = &mut out.data[(m0 + i) * cols + r0..(m0 + i) * cols + r1];
+        for (ov, av) in orow.iter_mut().zip(&acc[i * span..(i + 1) * span]) {
+            *ov += av;
+        }
+    }
+}
+
+/// Compacted sparse panel (KGS or Vanilla kept-group): identical inner loop
+/// to the dense kernel, but columns come from the panel's gather list.
+pub fn gemm_panel(grp: &KgsGroup, patches_t: &Mat, out: &mut Mat, tile: GemmTile) {
+    let ncols = grp.cols.len();
+    let r = patches_t.cols;
+    let cols_out = out.cols;
+    for r0 in (0..r).step_by(tile.rc.max(1)) {
+        let r1 = (r0 + tile.rc).min(r);
+        let span = r1 - r0;
+        let mut acc = vec![0.0f32; grp.m_eff * span];
+        for (j, &src_row) in grp.cols.iter().enumerate() {
+            let prow = &patches_t.row(src_row as usize)[r0..r1];
+            for i in 0..grp.m_eff {
+                let w = grp.panel[i * ncols + j];
+                if w == 0.0 {
+                    continue;
+                }
+                let a = &mut acc[i * span..(i + 1) * span];
+                for (av, pv) in a.iter_mut().zip(prow) {
+                    *av += w * pv;
+                }
+            }
+        }
+        for i in 0..grp.m_eff {
+            let m = grp.m0 + i;
+            let orow = &mut out.data[m * cols_out + r0..m * cols_out + r1];
+            for (ov, av) in orow.iter_mut().zip(&acc[i * span..(i + 1) * span]) {
+                *ov += av;
+            }
+        }
+    }
+}
+
+/// Filter-compacted GEMM: dense kernel over surviving rows, scattered back
+/// to their original output channels.
+pub fn gemm_filter(
+    rows: &[u32],
+    wmat: &[f32],
+    patches_t: &Mat,
+    out: &mut Mat,
+    tile: GemmTile,
+) {
+    let mut compact = Mat::zeros(rows.len(), patches_t.cols);
+    gemm_dense(wmat, rows.len(), patches_t, &mut compact, tile);
+    for (i, &m) in rows.iter().enumerate() {
+        out.row_mut(m as usize).copy_from_slice(compact.row(i));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_oracle(wmat: &[f32], m: usize, p: &Mat) -> Mat {
+        let w = Mat::from_vec(m, p.rows, wmat.to_vec());
+        w.matmul_ref(p)
+    }
+
+    #[test]
+    fn untuned_matches_oracle() {
+        let p = Mat::random(37, 53, 1);
+        let w = Mat::random(11, 37, 2);
+        let mut out = Mat::zeros(11, 53);
+        matmul_untuned(&w.data, 11, &p, &mut out);
+        assert!(out.max_abs_diff(&dense_oracle(&w.data, 11, &p)) < 1e-4);
+    }
+
+    #[test]
+    fn blocked_matches_oracle_various_tiles() {
+        let p = Mat::random(64, 100, 3);
+        let w = Mat::random(13, 64, 4); // ragged M
+        for tile in [
+            GemmTile { mr: 4, rc: 32, kc: 16 },
+            GemmTile { mr: 8, rc: 512, kc: 256 },
+            GemmTile { mr: 2, rc: 7, kc: 5 },
+            GemmTile { mr: 1, rc: 1, kc: 1 },
+        ] {
+            let mut out = Mat::zeros(13, 100);
+            gemm_dense(&w.data, 13, &p, &mut out, tile);
+            assert!(
+                out.max_abs_diff(&dense_oracle(&w.data, 13, &p)) < 1e-3,
+                "tile {tile:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn panel_matches_masked_dense() {
+        // One group: filters 2..6, gather columns 3,7,11 of a 16-row patch.
+        let p = Mat::random(16, 40, 5);
+        let cols = vec![3u32, 7, 11];
+        let panel = Mat::random(4, 3, 6);
+        let grp = KgsGroup { m0: 2, m_eff: 4, cols: cols.clone(), panel: panel.data.clone() };
+        let mut out = Mat::zeros(8, 40);
+        gemm_panel(&grp, &p, &mut out, GemmTile::default());
+        // Oracle: embed the panel into a full 8x16 matrix.
+        let mut wfull = Mat::zeros(8, 16);
+        for i in 0..4 {
+            for (j, &c) in cols.iter().enumerate() {
+                *wfull.at_mut(2 + i, c as usize) = panel.at(i, j);
+            }
+        }
+        assert!(out.max_abs_diff(&wfull.matmul_ref(&p)) < 1e-4);
+    }
+
+    #[test]
+    fn filter_scatter() {
+        let p = Mat::random(10, 20, 7);
+        let rows = vec![1u32, 4];
+        let w = Mat::random(2, 10, 8);
+        let mut out = Mat::zeros(6, 20);
+        gemm_filter(&rows, &w.data, &p, &mut out, GemmTile::default());
+        let oracle = w.matmul_ref(&p);
+        assert_eq!(out.row(1), oracle.row(0));
+        assert_eq!(out.row(4), oracle.row(1));
+        assert!(out.row(0).iter().all(|&v| v == 0.0));
+    }
+}

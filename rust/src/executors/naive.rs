@@ -1,0 +1,147 @@
+//! Direct 7-loop conv3d — the PyTorch-Mobile-class baseline (DESIGN.md §2).
+//!
+//! No im2col, no blocking, weight access in natural OIDHW order. This is
+//! deliberately the "obvious" implementation: the quality gap between this
+//! and the [`super::gemm`] path reproduces the RT3D-dense-vs-PyTorch rows
+//! of Table 2.
+
+use crate::tensor::{Conv3dGeometry, Tensor5};
+
+/// Dense direct conv3d. `w` is OIDHW flat; returns NCDHW output with bias
+/// and optional ReLU applied.
+pub fn conv3d_naive(
+    x: &Tensor5,
+    w: &[f32],
+    bias: &[f32],
+    g: &Conv3dGeometry,
+    relu: bool,
+) -> Tensor5 {
+    let [b, c, di, hi, wi] = x.dims;
+    debug_assert_eq!(c, g.in_ch);
+    let [kd, kh, kw] = g.kernel;
+    let [sd, sh, sw] = g.stride;
+    let [pd, ph, pw] = g.padding;
+    let [od, oh, ow] = g.out_spatial();
+    let m = g.out_ch;
+    assert_eq!(w.len(), m * c * kd * kh * kw);
+    let mut out = Tensor5::zeros([b, m, od, oh, ow]);
+    let khw = kh * kw;
+    let ks = kd * khw;
+    for n in 0..b {
+        for mi in 0..m {
+            for zo in 0..od {
+                for yo in 0..oh {
+                    for xo in 0..ow {
+                        let mut acc = bias[mi];
+                        for ci in 0..c {
+                            let wbase = (mi * c + ci) * ks;
+                            for dz in 0..kd {
+                                let z = (zo * sd + dz) as isize - pd as isize;
+                                if z < 0 || z >= di as isize {
+                                    continue;
+                                }
+                                for dy in 0..kh {
+                                    let y = (yo * sh + dy) as isize - ph as isize;
+                                    if y < 0 || y >= hi as isize {
+                                        continue;
+                                    }
+                                    for dx in 0..kw {
+                                        let xx = (xo * sw + dx) as isize
+                                            - pw as isize;
+                                        if xx < 0 || xx >= wi as isize {
+                                            continue;
+                                        }
+                                        acc += w
+                                            [wbase + dz * khw + dy * kw + dx]
+                                            * x.at(
+                                                n,
+                                                ci,
+                                                z as usize,
+                                                y as usize,
+                                                xx as usize,
+                                            );
+                                    }
+                                }
+                            }
+                        }
+                        *out.at_mut(n, mi, zo, yo, xo) =
+                            if relu { acc.max(0.0) } else { acc };
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::executors::{im2col_t, mat_to_tensor, run_compiled_conv};
+    use crate::codegen::{CompiledConv, ConvKind, GemmTile};
+    use crate::tensor::Mat;
+
+    fn geom() -> Conv3dGeometry {
+        Conv3dGeometry {
+            in_ch: 3,
+            out_ch: 5,
+            kernel: [3, 3, 3],
+            stride: [1, 1, 1],
+            padding: [1, 1, 1],
+            in_spatial: [4, 6, 6],
+        }
+    }
+
+    #[test]
+    fn naive_matches_gemm_path() {
+        let g = geom();
+        let x = Tensor5::random([2, 3, 4, 6, 6], 11);
+        let w = Tensor5::random([5, 3, 3, 3, 3], 12);
+        let bias = vec![0.1, -0.2, 0.3, 0.0, 1.0];
+        let a = conv3d_naive(&x, &w.data, &bias, &g, true);
+
+        let cc = CompiledConv {
+            name: "t".into(),
+            geom: g,
+            relu: true,
+            bias: bias.clone(),
+            kind: ConvKind::Dense { wmat: w.data.clone() },
+            tile: GemmTile::default(),
+            flops: g.flops(1),
+        };
+        let pt = im2col_t(&x, &g);
+        let mut out = Mat::zeros(5, pt.cols);
+        run_compiled_conv(&cc, &pt, &mut out);
+        let b = mat_to_tensor(&out, 2, g.out_spatial());
+        assert!(a.max_abs_diff(&b) < 1e-3);
+    }
+
+    #[test]
+    fn strided_no_padding() {
+        let g = Conv3dGeometry {
+            stride: [2, 2, 2],
+            padding: [0, 0, 0],
+            ..geom()
+        };
+        let x = Tensor5::random([1, 3, 4, 6, 6], 13);
+        let w = Tensor5::random([5, 3, 3, 3, 3], 14);
+        let bias = vec![0.0; 5];
+        let a = conv3d_naive(&x, &w.data, &bias, &g, false);
+        assert_eq!(a.dims, [1, 5, 1, 2, 2]);
+
+        let cc = CompiledConv {
+            name: "t".into(),
+            geom: g,
+            relu: false,
+            bias,
+            kind: ConvKind::Dense { wmat: w.data.clone() },
+            tile: GemmTile::default(),
+            flops: g.flops(1),
+        };
+        let pt = im2col_t(&x, &g);
+        let mut out = Mat::zeros(5, pt.cols);
+        run_compiled_conv(&cc, &pt, &mut out);
+        let b = mat_to_tensor(&out, 1, g.out_spatial());
+        assert!(a.max_abs_diff(&b) < 1e-3);
+    }
+}

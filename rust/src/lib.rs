@@ -1,0 +1,37 @@
+//! RT3D reproduction — L3 coordinator and mobile-acceleration substrate.
+//!
+//! The paper (Niu et al., AAAI'21) contributes (a) two structured sparsity
+//! schemes for 3D CNNs — Vanilla kernel-group pruning and the finer-grained
+//! KGS (kernel-group-structured) location pruning — (b) a reweighted
+//! regularization pruning algorithm, and (c) a compiler-assisted code
+//! generation framework that turns the pruning-rate FLOPs reduction into
+//! real mobile latency reduction.
+//!
+//! This crate is the deployment half of the three-layer stack:
+//!
+//! * [`runtime`] — PJRT client loading the AOT HLO artifacts produced by
+//!   `python/compile/aot.py` (Layer-2 JAX model + Layer-1 Pallas kernels).
+//! * [`tensor`] — NCDHW tensor / im2col / packing substrate.
+//! * [`model`] — artifact manifests: layer IR, weight pool, masks.
+//! * [`codegen`] — the paper's "compiler" contribution: sparsity-pattern →
+//!   compacted weight layout + tuned execution plan.
+//! * [`executors`] — baseline (naive, untuned-GEMM) and RT3D-optimized
+//!   (blocked SIMD GEMM, dense / KGS-sparse / Vanilla-sparse) conv engines.
+//! * [`device`] — analytical Snapdragon-865-class CPU/GPU cost model
+//!   (the off-the-shelf-mobile substitute, DESIGN.md §2).
+//! * [`coordinator`] — request router, clip batcher, scheduler, metrics:
+//!   the serving loop that makes this a framework rather than a script.
+//! * [`workload`] — synthetic clip + request-trace generators for benches.
+
+pub mod codegen;
+pub mod coordinator;
+pub mod device;
+pub mod executors;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

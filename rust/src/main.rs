@@ -1,0 +1,379 @@
+//! `rt3d` — leader binary: serve / bench / tune / inspect.
+//!
+//! The deployed half of the RT3D reproduction. All model execution goes
+//! through artifacts built once by `make artifacts` (python never runs on
+//! the request path).
+
+use rt3d::coordinator::{Server, ServerConfig};
+use rt3d::device::ExecutorClass;
+use rt3d::executors::{EngineKind, NativeEngine};
+use rt3d::model::Model;
+use rt3d::util::args::Args;
+use rt3d::workload;
+use std::sync::Arc;
+
+const USAGE: &str = "\
+rt3d — RT3D (AAAI'21) reproduction runtime
+
+USAGE: rt3d [--artifacts DIR] <serve|bench|tune|inspect> [options]
+
+  serve    --model c3d --engine rt3d|naive|untuned [--sparse] \
+           [--requests 32] [--max-batch 4] [--pjrt] [--variant dense_xla_b1]
+  bench    --table 2|3|cache
+  tune     --model c3d [--reps 3]
+  inspect  --model c3d
+";
+
+fn engine_kind(s: &str) -> EngineKind {
+    match s {
+        "naive" => EngineKind::Naive,
+        "untuned" => EngineKind::Untuned,
+        _ => EngineKind::Rt3d,
+    }
+}
+
+fn main() -> rt3d::Result<()> {
+    let args = Args::parse_env();
+    let artifacts = args.get_or("artifacts", "artifacts");
+    match args.subcommand.as_deref() {
+        Some("serve") => serve(
+            &artifacts,
+            &args.get_or("model", "c3d"),
+            &args.get_or("engine", "rt3d"),
+            args.flag("sparse"),
+            args.get_usize("requests", 32),
+            args.get_usize("max-batch", 4),
+            args.flag("pjrt"),
+            &args.get_or("variant", "dense_xla_b1"),
+        ),
+        Some("bench") => match args.get_or("table", "2").as_str() {
+            "2" => rt3d_bench::table2(&artifacts),
+            "3" => rt3d_bench::table3(&artifacts),
+            "cache" => rt3d_bench::cache_table(&artifacts),
+            other => Err(anyhow::anyhow!("unknown table {other}")),
+        },
+        Some("tune") => tune(
+            &artifacts,
+            &args.get_or("model", "c3d"),
+            args.get_usize("reps", 3),
+        ),
+        Some("inspect") => inspect(&artifacts, &args.get_or("model", "c3d")),
+        _ => {
+            eprint!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve(
+    artifacts: &str,
+    model_name: &str,
+    engine: &str,
+    sparse: bool,
+    requests: usize,
+    max_batch: usize,
+    pjrt: bool,
+    variant: &str,
+) -> rt3d::Result<()> {
+    let model = Model::load(artifacts, model_name)?;
+    let in_dims = model.manifest.input;
+    let eng: Arc<dyn rt3d::coordinator::Engine> = if pjrt {
+        Arc::new(rt3d_pjrt::PjrtEngine::new(&model, variant)?)
+    } else {
+        Arc::new(NativeEngine::new(&model, engine_kind(engine), sparse))
+    };
+    println!("engine: {}", eng.name());
+    let cfg = ServerConfig {
+        batcher: rt3d::coordinator::BatcherConfig {
+            max_batch,
+            max_wait: std::time::Duration::from_millis(10),
+        },
+        ..Default::default()
+    };
+    let server = Server::start(eng, cfg);
+    let frames = in_dims[1];
+    let size = in_dims[2];
+    for i in 0..requests {
+        let label = i % workload::NUM_CLASSES;
+        let clip = workload::make_clip(label, 1000 + i as u64, frames, size);
+        server.submit(clip, Some(label));
+    }
+    let mut done = 0;
+    while done < requests {
+        let _ = server.responses.recv()?;
+        done += 1;
+    }
+    let m = server.shutdown();
+    let lat = m.latency();
+    println!(
+        "requests={} throughput={:.2} req/s mean_batch={:.2}",
+        m.count(),
+        m.throughput(),
+        m.mean_batch()
+    );
+    println!(
+        "latency ms: mean={:.1} p50={:.1} p95={:.1} p99={:.1}",
+        lat.mean_s * 1e3,
+        lat.p50_s * 1e3,
+        lat.p95_s * 1e3,
+        lat.p99_s * 1e3
+    );
+    if let Some(acc) = m.accuracy() {
+        println!("serving accuracy: {:.3}", acc);
+    }
+    Ok(())
+}
+
+fn tune(artifacts: &str, model_name: &str, reps: usize) -> rt3d::Result<()> {
+    let model = Model::load(artifacts, model_name)?;
+    let mut convs = rt3d::codegen::compile_model(&model, false);
+    let reports = rt3d::codegen::tuner::tune_model(&mut convs, reps);
+    println!(
+        "{:<12} {:>10} {:>10} {:>8}  tile",
+        "layer", "default", "best", "gain"
+    );
+    for r in reports {
+        println!(
+            "{:<12} {:>8.2}ms {:>8.2}ms {:>7.2}x  mr={} rc={} kc={}",
+            r.name,
+            r.default_s * 1e3,
+            r.best_s * 1e3,
+            r.speedup(),
+            r.best.mr,
+            r.best.rc,
+            r.best.kc
+        );
+    }
+    Ok(())
+}
+
+fn inspect(artifacts: &str, model_name: &str) -> rt3d::Result<()> {
+    let model = Model::load(artifacts, model_name)?;
+    let m = &model.manifest;
+    println!(
+        "model: {} input={:?} classes={}",
+        m.model, m.input, m.num_classes
+    );
+    println!("dense FLOPs/clip: {:.2} G", m.flops_dense as f64 / 1e9);
+    if let Some(s) = &m.sparsity {
+        println!(
+            "sparsity: {} g={}x{} rate={:.2}x sparse FLOPs={:.2} G acc={:?}",
+            s.scheme,
+            s.g_m,
+            s.g_n,
+            s.rate,
+            s.flops_sparse as f64 / 1e9,
+            s.eval_acc
+        );
+    }
+    println!("hlo variants: {:?}", m.hlo.keys().collect::<Vec<_>>());
+    println!(
+        "{:<12} {:>8} {:>14} {:>10}",
+        "conv", "shape", "flops/clip", "density"
+    );
+    let convs = rt3d::codegen::compile_model(&model, true);
+    for c in &convs {
+        println!(
+            "{:<12} {:>3}x{:<3} {:>14} {:>9.1}%",
+            c.name,
+            c.geom.out_ch,
+            c.geom.in_ch,
+            c.flops,
+            c.density() * 100.0
+        );
+    }
+    Ok(())
+}
+
+/// Table harnesses shared with `cargo bench` (kept in the binary so the
+/// tables can be regenerated without criterion).
+mod rt3d_bench {
+    use super::*;
+    use rt3d::codegen;
+    use rt3d::device;
+    use rt3d::tensor::Tensor5;
+    use std::time::Instant;
+
+    fn time_native(engine: &NativeEngine, clip: &Tensor5, reps: usize) -> f64 {
+        let mut ts: Vec<f64> = (0..reps.max(1))
+            .map(|_| {
+                let t0 = Instant::now();
+                let _ = engine.forward(clip);
+                t0.elapsed().as_secs_f64()
+            })
+            .collect();
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ts[ts.len() / 2]
+    }
+
+    /// Table 2: framework / device latency matrix.
+    pub fn table2(artifacts: &str) -> rt3d::Result<()> {
+        println!("== Table 2 reproduction: end-to-end latency (16-frame clip)");
+        println!(
+            "{:<10} {:>12} {:>12} {:>12} {:>12} | {:>11} {:>11} {:>11} {:>11}",
+            "model",
+            "naive(host)",
+            "untun(host)",
+            "rt3dD(host)",
+            "rt3dS(host)",
+            "simCPU-D",
+            "simCPU-S",
+            "simGPU-D",
+            "simGPU-S"
+        );
+        for name in ["c3d", "r2plus1d", "s3d"] {
+            let model = match Model::load(artifacts, name) {
+                Ok(m) => m,
+                Err(_) => continue,
+            };
+            let in_dims = model.manifest.input;
+            let clip = Tensor5::random(
+                [1, in_dims[0], in_dims[1], in_dims[2], in_dims[3]],
+                42,
+            );
+            let naive = NativeEngine::new(&model, EngineKind::Naive, false);
+            let untuned = NativeEngine::new(&model, EngineKind::Untuned, false);
+            let dense = NativeEngine::new(&model, EngineKind::Rt3d, false);
+            let sparse = NativeEngine::new(&model, EngineKind::Rt3d, true);
+            let tn = time_native(&naive, &clip, 1);
+            let tu = time_native(&untuned, &clip, 3);
+            let td = time_native(&dense, &clip, 3);
+            let ts = time_native(&sparse, &clip, 3);
+            // Device-simulator projections.
+            let convs_d = codegen::compile_model(&model, false);
+            let convs_s = codegen::compile_model(&model, true);
+            let cpu = device::DeviceProfile::mobile_cpu();
+            let gpu = device::DeviceProfile::mobile_gpu();
+            let (cd, _) = device::model_cost(&convs_d, ExecutorClass::Rt3d, &cpu, 1);
+            let (cs, _) = device::model_cost(&convs_s, ExecutorClass::Rt3d, &cpu, 1);
+            let (gd, _) = device::model_cost(&convs_d, ExecutorClass::Rt3d, &gpu, 1);
+            let (gs, _) = device::model_cost(&convs_s, ExecutorClass::Rt3d, &gpu, 1);
+            println!(
+                "{:<10} {:>10.0}ms {:>10.0}ms {:>10.0}ms {:>10.0}ms | {:>9.1}ms {:>9.1}ms {:>9.1}ms {:>9.1}ms",
+                name,
+                tn * 1e3,
+                tu * 1e3,
+                td * 1e3,
+                ts * 1e3,
+                cd * 1e3,
+                cs * 1e3,
+                gd * 1e3,
+                gs * 1e3
+            );
+        }
+        println!("(host columns: measured on this machine; sim columns: Snapdragon-865 cost model)");
+        Ok(())
+    }
+
+    /// Table 3: Vanilla vs KGS at matched accuracy.
+    pub fn table3(artifacts: &str) -> rt3d::Result<()> {
+        println!("== Table 3 reproduction: Vanilla vs KGS at matched accuracy");
+        println!("(see cargo bench --bench table3 for the measured version)");
+        for name in ["c3d", "r2plus1d"] {
+            let model = match Model::load(artifacts, name) {
+                Ok(m) => m,
+                Err(_) => continue,
+            };
+            let convs_s = codegen::compile_model(&model, true);
+            let cpu = device::DeviceProfile::mobile_cpu();
+            let gpu = device::DeviceProfile::mobile_gpu();
+            let (cs, _) = device::model_cost(&convs_s, ExecutorClass::Rt3d, &cpu, 1);
+            let (gs, _) = device::model_cost(&convs_s, ExecutorClass::Rt3d, &gpu, 1);
+            let rate = model
+                .manifest
+                .sparsity
+                .as_ref()
+                .map(|s| s.rate)
+                .unwrap_or(1.0);
+            println!(
+                "{:<10} kgs rate={:.1}x  simCPU={:.0}ms simGPU={:.0}ms",
+                name,
+                rate,
+                cs * 1e3,
+                gs * 1e3
+            );
+        }
+        Ok(())
+    }
+
+    /// E6: cache access counts dense vs sparse.
+    pub fn cache_table(artifacts: &str) -> rt3d::Result<()> {
+        println!("== E6: modeled cache accesses, dense vs KGS-sparse (c3d)");
+        let model = Model::load(artifacts, "c3d")?;
+        let dense = codegen::compile_model(&model, false);
+        let sparse = codegen::compile_model(&model, true);
+        let llc = device::DeviceProfile::mobile_cpu().llc_bytes;
+        println!(
+            "{:<12} {:>12} {:>12} {:>8}",
+            "layer", "dense miss", "kgs miss", "ratio"
+        );
+        for (d, s) in dense.iter().zip(&sparse) {
+            let sd = device::cache::conv_cache_stats(d, llc, 1);
+            let ss = device::cache::conv_cache_stats(s, llc, 1);
+            println!(
+                "{:<12} {:>12} {:>12} {:>7.2}x",
+                d.name,
+                sd.misses,
+                ss.misses,
+                sd.misses as f64 / ss.misses.max(1) as f64
+            );
+        }
+        Ok(())
+    }
+}
+
+/// PJRT-backed serving engine (three-layer path).
+mod rt3d_pjrt {
+    use rt3d::coordinator::Engine;
+    use rt3d::model::Model;
+    use rt3d::runtime::{Executable, Runtime};
+    use rt3d::tensor::{Mat, Tensor5};
+    use std::sync::Arc;
+
+    pub struct PjrtEngine {
+        exe: Arc<Executable>,
+        classes: usize,
+        name: String,
+    }
+
+    impl PjrtEngine {
+        pub fn new(model: &Model, variant: &str) -> rt3d::Result<Self> {
+            let rt = Runtime::cpu()?;
+            let path = model
+                .hlo_path(variant)
+                .ok_or_else(|| anyhow::anyhow!("no hlo variant {variant}"))?;
+            // Batch encoded in the variant key suffix "_b<N>".
+            let batch: usize = variant
+                .rsplit("_b")
+                .next()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(1);
+            let input = model.manifest.input;
+            let exe =
+                rt.load(&path, [batch, input[0], input[1], input[2], input[3]])?;
+            Ok(Self {
+                exe,
+                classes: model.manifest.num_classes,
+                name: format!("pjrt-{}-{variant}", model.manifest.model),
+            })
+        }
+    }
+
+    impl Engine for PjrtEngine {
+        fn infer(&self, batch: &Tensor5) -> Mat {
+            let want = self.exe.input_dims[0];
+            let have = batch.dims[0];
+            // Pad the batch up to the compiled size if needed.
+            let n = batch.len() / have;
+            let mut data = batch.data.clone();
+            data.resize(want * n, 0.0);
+            let logits = self.exe.run(&data).expect("pjrt execution failed");
+            let per = self.classes;
+            Mat::from_vec(have, per, logits[..have * per].to_vec())
+        }
+        fn name(&self) -> String {
+            self.name.clone()
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! Manifest types for `<model>.manifest.json` (schema in python export.py),
+//! parsed with the in-tree JSON parser (offline build: no serde).
+
+use crate::util::Json;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Reference into the model's tensor pool (`<model>.bin`).
+#[derive(Debug, Clone)]
+pub struct TensorRef {
+    /// Byte offset into the .bin file (8-byte aligned).
+    pub offset: usize,
+    pub shape: Vec<usize>,
+    /// "f32" | "i32" | "u8".
+    pub dtype: String,
+}
+
+impl TensorRef {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            offset: j.req("offset")?.as_usize()?,
+            shape: j.req("shape")?.usize_vec()?,
+            dtype: j.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightRefs {
+    pub w: TensorRef,
+    pub b: TensorRef,
+}
+
+impl WeightRefs {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            w: TensorRef::from_json(j.req("w")?)?,
+            b: TensorRef::from_json(j.req("b")?)?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ConvLayer {
+    pub name: String,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub kernel: [usize; 3],
+    pub stride: [usize; 3],
+    pub padding: [usize; 3],
+    pub relu: bool,
+    pub weights: WeightRefs,
+    /// Pruned+retrained weights for the sparse deployment (masked).
+    pub weights_sparse: Option<WeightRefs>,
+    /// Per-unit sparsity mask (shape depends on the scheme; see codegen).
+    pub unit_mask: Option<TensorRef>,
+}
+
+#[derive(Debug, Clone)]
+pub struct DenseLayer {
+    pub name: String,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub relu: bool,
+    pub weights: WeightRefs,
+    /// Retrained weights for the sparse deployment.
+    pub weights_sparse: Option<WeightRefs>,
+}
+
+/// One node of the nested layer IR.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    Conv3d(ConvLayer),
+    MaxPool3d {
+        kernel: [usize; 3],
+        stride: [usize; 3],
+    },
+    AvgPoolGlobal,
+    Flatten,
+    Dense(DenseLayer),
+    Residual {
+        name: String,
+        body: Vec<Layer>,
+        shortcut: Vec<Layer>,
+    },
+    Concat {
+        name: String,
+        branches: Vec<Vec<Layer>>,
+    },
+}
+
+impl Layer {
+    fn from_json(j: &Json) -> Result<Layer> {
+        let kind = j.req("kind")?.as_str()?;
+        Ok(match kind {
+            "conv3d" => Layer::Conv3d(ConvLayer {
+                name: j.req("name")?.as_str()?.to_string(),
+                in_ch: j.req("in_ch")?.as_usize()?,
+                out_ch: j.req("out_ch")?.as_usize()?,
+                kernel: j.req("kernel")?.usize3()?,
+                stride: j.req("stride")?.usize3()?,
+                padding: j.req("padding")?.usize3()?,
+                relu: j.req("relu")?.as_bool()?,
+                weights: WeightRefs::from_json(j.req("weights")?)?,
+                weights_sparse: match j.get("weights_sparse") {
+                    Some(m) if !m.is_null() => Some(WeightRefs::from_json(m)?),
+                    _ => None,
+                },
+                unit_mask: match j.get("unit_mask") {
+                    Some(m) if !m.is_null() => Some(TensorRef::from_json(m)?),
+                    _ => None,
+                },
+            }),
+            "maxpool3d" => Layer::MaxPool3d {
+                kernel: j.req("kernel")?.usize3()?,
+                stride: j.req("stride")?.usize3()?,
+            },
+            "avgpool_global" => Layer::AvgPoolGlobal,
+            "flatten" => Layer::Flatten,
+            "dense" => Layer::Dense(DenseLayer {
+                name: j.req("name")?.as_str()?.to_string(),
+                in_dim: j.req("in_dim")?.as_usize()?,
+                out_dim: j.req("out_dim")?.as_usize()?,
+                relu: j.req("relu")?.as_bool()?,
+                weights: WeightRefs::from_json(j.req("weights")?)?,
+                weights_sparse: match j.get("weights_sparse") {
+                    Some(m) if !m.is_null() => Some(WeightRefs::from_json(m)?),
+                    _ => None,
+                },
+            }),
+            "residual" => Layer::Residual {
+                name: j.req("name")?.as_str()?.to_string(),
+                body: parse_layers(j.req("body")?)?,
+                shortcut: parse_layers(j.req("shortcut")?)?,
+            },
+            "concat" => Layer::Concat {
+                name: j.req("name")?.as_str()?.to_string(),
+                branches: j
+                    .req("branches")?
+                    .as_arr()?
+                    .iter()
+                    .map(parse_layers)
+                    .collect::<Result<Vec<_>>>()?,
+            },
+            other => bail!("unknown layer kind {other:?}"),
+        })
+    }
+}
+
+fn parse_layers(j: &Json) -> Result<Vec<Layer>> {
+    j.as_arr()?.iter().map(Layer::from_json).collect()
+}
+
+#[derive(Debug, Clone)]
+pub struct SparsityInfo {
+    pub scheme: String,
+    pub g_m: usize,
+    pub g_n: usize,
+    pub rate: f64,
+    pub eval_acc: Option<f64>,
+    pub flops_sparse: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    /// (C, D, H, W) of a single clip.
+    pub input: [usize; 4],
+    pub num_classes: usize,
+    pub flops_dense: usize,
+    pub layers: Vec<Layer>,
+    /// variant key ("dense_xla_b1", "kgs_pallas_b1", ...) -> file name.
+    pub hlo: HashMap<String, String>,
+    pub bin: String,
+    pub eval_acc: Option<f64>,
+    pub sparsity: Option<SparsityInfo>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let input = j.req("input")?.usize_vec()?;
+        if input.len() != 4 {
+            bail!("input must be (C, D, H, W)");
+        }
+        let mut hlo = HashMap::new();
+        for (k, v) in j.req("hlo")?.as_obj()? {
+            hlo.insert(k.clone(), v.as_str()?.to_string());
+        }
+        let sparsity = match j.get("sparsity") {
+            Some(s) if !s.is_null() => Some(SparsityInfo {
+                scheme: s.req("scheme")?.as_str()?.to_string(),
+                g_m: s.req("g_m")?.as_usize()?,
+                g_n: s.req("g_n")?.as_usize()?,
+                rate: s.req("rate")?.as_f64()?,
+                eval_acc: match s.get("eval_acc") {
+                    Some(Json::Num(n)) => Some(*n),
+                    _ => None,
+                },
+                flops_sparse: s.req("flops_sparse")?.as_usize()?,
+            }),
+            _ => None,
+        };
+        Ok(Manifest {
+            model: j.req("model")?.as_str()?.to_string(),
+            input: [input[0], input[1], input[2], input[3]],
+            num_classes: j.req("num_classes")?.as_usize()?,
+            flops_dense: j.req("flops_dense")?.as_usize()?,
+            layers: parse_layers(j.req("layers")?)?,
+            hlo,
+            bin: j.req("bin")?.as_str()?.to_string(),
+            eval_acc: match j.get("eval_acc") {
+                Some(Json::Num(n)) => Some(*n),
+                _ => None,
+            },
+            sparsity,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "model": "tiny", "input": [3, 4, 8, 8], "num_classes": 2,
+      "flops_dense": 1000,
+      "layers": [
+        {"kind": "conv3d", "name": "c1", "in_ch": 3, "out_ch": 4,
+         "kernel": [3,3,3], "stride": [1,1,1], "padding": [1,1,1],
+         "relu": true,
+         "weights": {"w": {"offset": 0, "shape": [4,3,3,3,3], "dtype": "f32"},
+                     "b": {"offset": 1296, "shape": [4], "dtype": "f32"}},
+         "unit_mask": {"offset": 1312, "shape": [1,1,27], "dtype": "u8"}},
+        {"kind": "maxpool3d", "kernel": [2,2,2], "stride": [2,2,2]},
+        {"kind": "residual", "name": "r1", "body": [], "shortcut": []},
+        {"kind": "flatten"},
+        {"kind": "dense", "name": "fc", "in_dim": 64, "out_dim": 2,
+         "relu": false,
+         "weights": {"w": {"offset": 2000, "shape": [64,2], "dtype": "f32"},
+                     "b": {"offset": 2512, "shape": [2], "dtype": "f32"}}}
+      ],
+      "hlo": {"dense_xla_b1": "tiny.hlo.txt"},
+      "bin": "tiny.bin", "eval_acc": 0.9, "sparsity": null
+    }"#;
+
+    #[test]
+    fn parses_full_manifest() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.model, "tiny");
+        assert_eq!(m.input, [3, 4, 8, 8]);
+        assert_eq!(m.layers.len(), 5);
+        match &m.layers[0] {
+            Layer::Conv3d(c) => {
+                assert_eq!(c.name, "c1");
+                assert!(c.unit_mask.is_some());
+                assert_eq!(c.weights.b.shape, vec![4]);
+            }
+            _ => panic!("expected conv"),
+        }
+        assert_eq!(m.eval_acc, Some(0.9));
+        assert!(m.sparsity.is_none());
+        assert_eq!(m.hlo["dense_xla_b1"], "tiny.hlo.txt");
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        let bad = DOC.replace("maxpool3d", "nopool");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Artifact manifests: the layer IR + tensor pool written by
+//! `python/compile/export.py`.
+//!
+//! The manifest is the single source of truth shared by both execution
+//! paths: the PJRT runtime (which HLO file to load per variant/batch) and
+//! the native executors (layer IR + weights + sparsity masks).
+
+mod manifest;
+mod pool;
+
+pub use manifest::{
+    ConvLayer, DenseLayer, Layer, Manifest, SparsityInfo, TensorRef, WeightRefs,
+};
+pub use pool::TensorPool;
+
+use crate::tensor::Conv3dGeometry;
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// A fully-loaded model: manifest + tensor pool + resolved paths.
+pub struct Model {
+    pub manifest: Manifest,
+    pub pool: TensorPool,
+    pub dir: PathBuf,
+}
+
+impl Model {
+    /// Load `<dir>/<name>.manifest.json` and its tensor pool.
+    pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::parse(&std::fs::read_to_string(
+            dir.join(format!("{name}.manifest.json")),
+        )?)?;
+        let pool = TensorPool::load(dir.join(&manifest.bin))?;
+        Ok(Self { manifest, pool, dir })
+    }
+
+    /// Absolute path of an HLO artifact by variant key (e.g. "dense_xla_b1").
+    pub fn hlo_path(&self, key: &str) -> Option<PathBuf> {
+        self.manifest.hlo.get(key).map(|f| self.dir.join(f))
+    }
+
+    /// All conv layers flattened depth-first (matching python `walk_convs`).
+    pub fn conv_layers(&self) -> Vec<&ConvLayer> {
+        fn walk<'a>(layers: &'a [Layer], out: &mut Vec<&'a ConvLayer>) {
+            for l in layers {
+                match l {
+                    Layer::Conv3d(c) => out.push(c),
+                    Layer::Residual { body, shortcut, .. } => {
+                        walk(body, out);
+                        walk(shortcut, out);
+                    }
+                    Layer::Concat { branches, .. } => {
+                        for b in branches {
+                            walk(b, out);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let mut v = Vec::new();
+        walk(&self.manifest.layers, &mut v);
+        v
+    }
+
+    /// Conv geometry at the model's native input resolution, walking the IR
+    /// to track spatial extents. Returns (layer, geometry) pairs.
+    pub fn conv_geometries(&self) -> Vec<(&ConvLayer, Conv3dGeometry)> {
+        let sp = [
+            self.manifest.input[1],
+            self.manifest.input[2],
+            self.manifest.input[3],
+        ];
+        let mut out = Vec::new();
+        walk_geom(&self.manifest.layers, self.manifest.input[0], sp, &mut out);
+        out
+    }
+}
+
+/// Walk the IR propagating (channels, spatial) and collecting conv geometry.
+/// Returns (out_channels, out_spatial).
+fn walk_geom<'a>(
+    layers: &'a [Layer],
+    in_ch: usize,
+    in_sp: [usize; 3],
+    out: &mut Vec<(&'a ConvLayer, Conv3dGeometry)>,
+) -> (usize, [usize; 3]) {
+    let mut ch = in_ch;
+    let mut sp = in_sp;
+    for l in layers {
+        match l {
+            Layer::Conv3d(c) => {
+                let g = Conv3dGeometry {
+                    in_ch: c.in_ch,
+                    out_ch: c.out_ch,
+                    kernel: c.kernel,
+                    stride: c.stride,
+                    padding: c.padding,
+                    in_spatial: sp,
+                };
+                sp = g.out_spatial();
+                ch = c.out_ch;
+                out.push((c, g));
+            }
+            Layer::MaxPool3d { kernel, stride } => {
+                for a in 0..3 {
+                    sp[a] = (sp[a] - kernel[a]) / stride[a] + 1;
+                }
+            }
+            Layer::AvgPoolGlobal => sp = [1, 1, 1],
+            Layer::Flatten => {}
+            Layer::Dense(_) => {}
+            Layer::Residual { body, shortcut, .. } => {
+                let (ch2, sp2) = walk_geom(body, ch, sp, out);
+                if !shortcut.is_empty() {
+                    walk_geom(shortcut, ch, sp, out);
+                }
+                ch = ch2;
+                sp = sp2;
+            }
+            Layer::Concat { branches, .. } => {
+                let mut total = 0;
+                let mut sp2 = sp;
+                for b in branches {
+                    let (cb, sb) = walk_geom(b, ch, sp, out);
+                    total += cb;
+                    sp2 = sb;
+                }
+                ch = total;
+                sp = sp2;
+            }
+        }
+    }
+    (ch, sp)
+}

@@ -1,0 +1,77 @@
+//! The binary tensor pool backing manifest `TensorRef`s.
+
+use super::TensorRef;
+use crate::Result;
+use std::path::Path;
+
+/// In-memory copy of `<model>.bin`; tensors are sliced out by byte offset.
+pub struct TensorPool {
+    bytes: Vec<u8>,
+}
+
+impl TensorPool {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self { bytes: std::fs::read(path)? })
+    }
+
+    pub fn from_bytes(bytes: Vec<u8>) -> Self {
+        Self { bytes }
+    }
+
+    pub fn f32(&self, r: &TensorRef) -> Vec<f32> {
+        assert_eq!(r.dtype, "f32", "tensor ref is {}", r.dtype);
+        let n = r.numel();
+        let raw = &self.bytes[r.offset..r.offset + 4 * n];
+        raw.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn i32(&self, r: &TensorRef) -> Vec<i32> {
+        assert_eq!(r.dtype, "i32");
+        let n = r.numel();
+        let raw = &self.bytes[r.offset..r.offset + 4 * n];
+        raw.chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn bool(&self, r: &TensorRef) -> Vec<bool> {
+        assert_eq!(r.dtype, "u8");
+        let n = r.numel();
+        self.bytes[r.offset..r.offset + n].iter().map(|&b| b != 0).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_round_trip() {
+        let vals = [1.5f32, -2.25, 0.0, 3.0e8];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let pool = TensorPool::from_bytes(bytes);
+        let r = TensorRef { offset: 0, shape: vec![2, 2], dtype: "f32".into() };
+        assert_eq!(pool.f32(&r), vals);
+    }
+
+    #[test]
+    fn bool_mask() {
+        let pool = TensorPool::from_bytes(vec![1, 0, 1, 1]);
+        let r = TensorRef { offset: 0, shape: vec![4], dtype: "u8".into() };
+        assert_eq!(pool.bool(&r), vec![true, false, true, true]);
+    }
+
+    #[test]
+    fn offset_slicing() {
+        let mut bytes = vec![0u8; 8];
+        bytes.extend_from_slice(&7.0f32.to_le_bytes());
+        let pool = TensorPool::from_bytes(bytes);
+        let r = TensorRef { offset: 8, shape: vec![1], dtype: "f32".into() };
+        assert_eq!(pool.f32(&r), vec![7.0]);
+    }
+}

@@ -1,0 +1,105 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); this module is the
+//! entire model-execution surface of the deployed binary. Interchange is
+//! HLO **text** (`HloModuleProto::from_text_file`) because jax>=0.5 emits
+//! serialized protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects — the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A compiled executable plus its expected input geometry.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// (batch, c, d, h, w) of the single input argument.
+    pub input_dims: [usize; 5],
+    /// Wall time spent compiling (one-time, reported in metrics).
+    pub compile_time_s: f64,
+}
+
+// The xla crate's PJRT handles are internally ref-counted; executions are
+// serialized per-executable by the CPU client anyway.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Run the forward pass on a batch of clips packed as NCDHW f32.
+    /// Returns the logits as a flat row-major (batch, num_classes) vec.
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let expected: usize = self.input_dims.iter().product();
+        if input.len() != expected {
+            return Err(anyhow!(
+                "input has {} elements, executable expects {:?} = {}",
+                input.len(),
+                self.input_dims,
+                expected
+            ));
+        }
+        let dims: Vec<i64> = self.input_dims.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .context("reshaping input literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .context("executing HLO module")?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// PJRT CPU client with a cache of compiled executables keyed by HLO path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+// See Executable: the underlying client is thread-safe for our use.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached). `input_dims` must match the
+    /// batch the artifact was lowered at.
+    pub fn load(
+        &self,
+        path: impl AsRef<Path>,
+        input_dims: [usize; 5],
+    ) -> Result<std::sync::Arc<Executable>> {
+        let key = path.as_ref().display().to_string();
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {key}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        let exe = std::sync::Arc::new(Executable {
+            exe,
+            input_dims,
+            compile_time_s: t0.elapsed().as_secs_f64(),
+        });
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+}

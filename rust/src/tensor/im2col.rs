@@ -1,0 +1,178 @@
+//! im2col lowering for 3D convolution — the transformation the paper's
+//! compiler applies before GEMM code generation (§3, Fig. 1b "reshape").
+
+use super::{Mat, Tensor5};
+
+/// Static geometry of one conv3d: shapes, strides, padding and the derived
+/// output extents. Shared by every executor and the cost model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv3dGeometry {
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub kernel: [usize; 3],
+    pub stride: [usize; 3],
+    pub padding: [usize; 3],
+    pub in_spatial: [usize; 3],
+}
+
+impl Conv3dGeometry {
+    pub fn out_spatial(&self) -> [usize; 3] {
+        let mut o = [0; 3];
+        for a in 0..3 {
+            o[a] = (self.in_spatial[a] + 2 * self.padding[a] - self.kernel[a])
+                / self.stride[a]
+                + 1;
+        }
+        o
+    }
+
+    /// Rows of the im2col matrix for batch size `b`.
+    pub fn rows(&self, b: usize) -> usize {
+        let o = self.out_spatial();
+        b * o[0] * o[1] * o[2]
+    }
+
+    /// Columns of the im2col matrix (= GEMM reduction size K).
+    pub fn cols(&self) -> usize {
+        self.in_ch * self.kernel.iter().product::<usize>()
+    }
+
+    /// Dense MACs for batch size `b`.
+    pub fn macs(&self, b: usize) -> usize {
+        self.rows(b) * self.cols() * self.out_ch
+    }
+
+    /// Dense FLOPs (2 * MACs), matching the python flops counter.
+    pub fn flops(&self, b: usize) -> usize {
+        2 * self.macs(b)
+    }
+}
+
+/// Extract patches of `x` into a `(rows, cols)` matrix, rows ordered
+/// `(b, do, ho, wo)`, columns ordered `(c, kd, kh, kw)`.
+pub fn im2col(x: &Tensor5, g: &Conv3dGeometry) -> Mat {
+    let rows = g.rows(x.dims[0]);
+    let mut out = Mat::zeros(rows, g.cols());
+    im2col_into(x, g, &mut out);
+    out
+}
+
+/// im2col into a pre-allocated matrix (hot-path variant: the serving loop
+/// reuses one buffer per layer to avoid allocation).
+pub fn im2col_into(x: &Tensor5, g: &Conv3dGeometry, out: &mut Mat) {
+    let [b, c, di, hi, wi] = x.dims;
+    debug_assert_eq!(c, g.in_ch);
+    debug_assert_eq!([di, hi, wi], g.in_spatial);
+    let [kd, kh, kw] = g.kernel;
+    let [sd, sh, sw] = g.stride;
+    let [pd, ph, pw] = g.padding;
+    let [od, oh, ow] = g.out_spatial();
+    assert_eq!(out.rows, b * od * oh * ow);
+    assert_eq!(out.cols, g.cols());
+    out.data.fill(0.0);
+
+    let khw = kh * kw;
+    let ks = kd * khw;
+    for n in 0..b {
+        for zo in 0..od {
+            for yo in 0..oh {
+                for xo in 0..ow {
+                    let r = ((n * od + zo) * oh + yo) * ow + xo;
+                    let row = out.row_mut(r);
+                    let z0 = (zo * sd) as isize - pd as isize;
+                    let y0 = (yo * sh) as isize - ph as isize;
+                    let x0 = (xo * sw) as isize - pw as isize;
+                    for ci in 0..c {
+                        let cbase = ci * ks;
+                        for dz in 0..kd {
+                            let z = z0 + dz as isize;
+                            if z < 0 || z >= di as isize {
+                                continue;
+                            }
+                            for dy in 0..kh {
+                                let y = y0 + dy as isize;
+                                if y < 0 || y >= hi as isize {
+                                    continue;
+                                }
+                                // Innermost contiguous run over kw.
+                                let col0 = cbase + dz * khw + dy * kw;
+                                let src0 = x.idx(n, ci, z as usize, y as usize, 0);
+                                for dx in 0..kw {
+                                    let xx = x0 + dx as isize;
+                                    if xx < 0 || xx >= wi as isize {
+                                        continue;
+                                    }
+                                    row[col0 + dx] = x.data[src0 + xx as usize];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> Conv3dGeometry {
+        Conv3dGeometry {
+            in_ch: 2,
+            out_ch: 3,
+            kernel: [3, 3, 3],
+            stride: [1, 1, 1],
+            padding: [1, 1, 1],
+            in_spatial: [4, 5, 6],
+        }
+    }
+
+    #[test]
+    fn out_spatial_same_padding() {
+        assert_eq!(geom().out_spatial(), [4, 5, 6]);
+    }
+
+    #[test]
+    fn out_spatial_strided() {
+        let g = Conv3dGeometry { stride: [2, 2, 2], ..geom() };
+        assert_eq!(g.out_spatial(), [2, 3, 3]);
+    }
+
+    #[test]
+    fn rows_cols_macs() {
+        let g = geom();
+        assert_eq!(g.rows(2), 2 * 4 * 5 * 6);
+        assert_eq!(g.cols(), 2 * 27);
+        assert_eq!(g.macs(1), 4 * 5 * 6 * 54 * 3);
+    }
+
+    #[test]
+    fn im2col_center_tap_is_input() {
+        // With 3x3x3 kernel, pad 1, the center tap column equals the input.
+        let g = geom();
+        let x = Tensor5::random([1, 2, 4, 5, 6], 3);
+        let m = im2col(&x, &g);
+        let ks = 27;
+        let center = 13; // (1,1,1) in a 3x3x3 kernel
+        for c in 0..2 {
+            for z in 0..4 {
+                for y in 0..5 {
+                    for xx in 0..6 {
+                        let r = (z * 5 + y) * 6 + xx;
+                        assert_eq!(m.at(r, c * ks + center), x.at(0, c, z, y, xx));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_zero_padding_borders() {
+        let g = geom();
+        let x = Tensor5::random([1, 2, 4, 5, 6], 4);
+        let m = im2col(&x, &g);
+        // First output position, first kernel tap (-1,-1,-1) is out of bounds.
+        assert_eq!(m.at(0, 0), 0.0);
+    }
+}

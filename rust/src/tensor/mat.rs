@@ -1,0 +1,114 @@
+//! Row-major matrix used by the GEMM executors.
+
+/// Dense row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Reference GEMM: `self (m x k) * b (k x n)` — the test oracle for the
+    /// optimized kernels; deliberately simple.
+    pub fn matmul_ref(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows);
+        let mut out = Mat::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for l in 0..self.cols {
+                let a = self.at(i, l);
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = b.row(l);
+                let orow = out.row_mut(i);
+                for j in 0..b.cols {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *out.at_mut(c, r) = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Mat {
+        let t = super::Tensor5::random([1, 1, 1, rows, cols], seed);
+        Mat { rows, cols, data: t.data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_ref_identity() {
+        let mut eye = Mat::zeros(3, 3);
+        for i in 0..3 {
+            *eye.at_mut(i, i) = 1.0;
+        }
+        let a = Mat::random(3, 3, 5);
+        assert_eq!(a.matmul_ref(&eye), a);
+    }
+
+    #[test]
+    fn matmul_ref_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul_ref(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::random(4, 7, 9);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+}

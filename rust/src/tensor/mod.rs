@@ -1,0 +1,114 @@
+//! Dense tensor substrate: NCDHW 5-D tensors, matrices, im2col.
+//!
+//! Layouts match the python side exactly (see `python/compile/kernels/ref.py`):
+//! activations NCDHW, weights OIDHW, im2col columns ordered `(c, kd, kh, kw)`.
+
+mod im2col;
+mod mat;
+
+pub use im2col::{im2col, im2col_into, Conv3dGeometry};
+pub use mat::Mat;
+
+/// A dense 5-D tensor in NCDHW (activations) or OIDHW (weights) layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor5 {
+    /// (n, c, d, h, w) — or (o, i, kd, kh, kw) for weights.
+    pub dims: [usize; 5],
+    pub data: Vec<f32>,
+}
+
+impl Tensor5 {
+    pub fn zeros(dims: [usize; 5]) -> Self {
+        let n: usize = dims.iter().product();
+        Self { dims, data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(dims: [usize; 5], data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn idx(&self, n: usize, c: usize, d: usize, h: usize, w: usize) -> usize {
+        let [_, cc, dd, hh, ww] = self.dims;
+        (((n * cc + c) * dd + d) * hh + h) * ww + w
+    }
+
+    #[inline]
+    pub fn at(&self, n: usize, c: usize, d: usize, h: usize, w: usize) -> f32 {
+        self.data[self.idx(n, c, d, h, w)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, n: usize, c: usize, d: usize, h: usize, w: usize) -> &mut f32 {
+        let i = self.idx(n, c, d, h, w);
+        &mut self.data[i]
+    }
+
+    /// Deterministic pseudo-random fill (for tests/benches).
+    pub fn random(dims: [usize; 5], seed: u64) -> Self {
+        let n: usize = dims.iter().product();
+        let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+        let data = (0..n)
+            .map(|_| {
+                // xorshift64*
+                state ^= state >> 12;
+                state ^= state << 25;
+                state ^= state >> 27;
+                let bits = state.wrapping_mul(0x2545_F491_4F6C_DD1D);
+                ((bits >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+            })
+            .collect();
+        Self { dims, data }
+    }
+
+    /// Max absolute difference against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        assert_eq!(self.dims, other.dims);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_round_trip() {
+        let mut t = Tensor5::zeros([2, 3, 4, 5, 6]);
+        *t.at_mut(1, 2, 3, 4, 5) = 7.0;
+        assert_eq!(t.at(1, 2, 3, 4, 5), 7.0);
+        assert_eq!(t.data.iter().filter(|&&x| x != 0.0).count(), 1);
+        // Last element index == len-1.
+        assert_eq!(t.idx(1, 2, 3, 4, 5), t.len() - 1);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let a = Tensor5::random([1, 2, 3, 4, 5], 42);
+        let b = Tensor5::random([1, 2, 3, 4, 5], 42);
+        assert_eq!(a, b);
+        let c = Tensor5::random([1, 2, 3, 4, 5], 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn random_values_bounded() {
+        let a = Tensor5::random([2, 2, 4, 4, 4], 7);
+        assert!(a.data.iter().all(|x| x.abs() <= 0.5));
+        // Not all identical.
+        assert!(a.data.windows(2).any(|w| w[0] != w[1]));
+    }
+}

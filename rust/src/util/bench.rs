@@ -1,0 +1,130 @@
+//! Minimal benchmark harness — replaces `criterion` in the offline build.
+//!
+//! `cargo bench` runs each `[[bench]]` target's `main()`; the harness
+//! warms up, runs timed iterations until a wall budget is spent, and prints
+//! median / mean / p95 per benchmark in a stable, greppable format.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub group: String,
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<24} {:<24} iters={:<5} median={:>10} mean={:>10} p95={:>10}",
+            self.group,
+            self.name,
+            self.iters,
+            fmt_s(self.median_s),
+            fmt_s(self.mean_s),
+            fmt_s(self.p95_s)
+        );
+    }
+}
+
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// A named group of benchmarks sharing a time budget per entry.
+pub struct BenchGroup {
+    group: String,
+    budget: Duration,
+    min_iters: usize,
+    max_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchGroup {
+    pub fn new(group: &str) -> Self {
+        Self {
+            group: group.to_string(),
+            budget: Duration::from_secs(2),
+            min_iters: 3,
+            max_iters: 200,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn budget(mut self, d: Duration) -> Self {
+        self.budget = d;
+        self
+    }
+
+    pub fn max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// Run one benchmark: `f` is a single timed iteration.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warm-up.
+        f();
+        let t0 = Instant::now();
+        let mut samples = Vec::new();
+        while (samples.len() < self.min_iters
+            || (t0.elapsed() < self.budget && samples.len() < self.max_iters))
+            && samples.len() < self.max_iters
+        {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let r = BenchResult {
+            group: self.group.clone(),
+            name: name.to_string(),
+            iters: n,
+            median_s: samples[n / 2],
+            mean_s: samples.iter().sum::<f64>() / n as f64,
+            p95_s: samples[((n as f64 - 1.0) * 0.95).round() as usize],
+        };
+        r.print();
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Median of a named result (for in-bench assertions / summaries).
+    pub fn median(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|r| r.name == name).map(|r| r.median_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_records() {
+        let mut g = BenchGroup::new("test")
+            .budget(Duration::from_millis(50))
+            .max_iters(10);
+        g.bench("noop", || {});
+        assert_eq!(g.results.len(), 1);
+        assert!(g.results[0].iters >= 3);
+        assert!(g.median("noop").is_some());
+    }
+
+    #[test]
+    fn format_scales() {
+        assert!(fmt_s(2.0).ends_with('s'));
+        assert!(fmt_s(0.002).ends_with("ms"));
+        assert!(fmt_s(2e-6).ends_with("us"));
+    }
+}

@@ -1,0 +1,316 @@
+//! Minimal JSON parser — replaces `serde_json` in the offline build.
+//!
+//! Supports the full JSON grammar needed by the artifact manifests:
+//! objects, arrays, strings (with escapes), numbers, booleans, null.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(HashMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing data at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    // -- typed accessors ---------------------------------------------------
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key).ok_or_else(|| anyhow!("missing key {key:?}"))
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_f64()? as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&HashMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            other => bail!("expected object, got {other:?}"),
+        }
+    }
+
+    pub fn usize_vec(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+
+    pub fn usize3(&self) -> Result<[usize; 3]> {
+        let v = self.usize_vec()?;
+        if v.len() != 3 {
+            bail!("expected 3 elements, got {}", v.len());
+        }
+        Ok([v[0], v[1], v[2]])
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Result<u8> {
+        let b = self.peek().ok_or_else(|| anyhow!("unexpected EOF"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.bump()?;
+        if got != b {
+            bail!("expected {:?} at byte {}, got {:?}", b as char, self.pos - 1, got as char);
+        }
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek().ok_or_else(|| anyhow!("unexpected EOF"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.pos);
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut m = HashMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            m.insert(key, v);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b'}' => return Ok(Json::Obj(m)),
+                c => bail!("expected ',' or '}}', got {:?}", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            v.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b']' => return Ok(Json::Arr(v)),
+                c => bail!("expected ',' or ']', got {:?}", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.bump()? {
+                b'"' => return Ok(s),
+                b'\\' => match self.bump()? {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'/' => s.push('/'),
+                    b'n' => s.push('\n'),
+                    b't' => s.push('\t'),
+                    b'r' => s.push('\r'),
+                    b'b' => s.push('\u{8}'),
+                    b'f' => s.push('\u{c}'),
+                    b'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let c = self.bump()? as char;
+                            code = code * 16
+                                + c.to_digit(16)
+                                    .ok_or_else(|| anyhow!("bad \\u escape"))?;
+                        }
+                        s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                    }
+                    c => bail!("bad escape {:?}", c as char),
+                },
+                c => {
+                    // Collect the full UTF-8 sequence.
+                    if c < 0x80 {
+                        s.push(c as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let width = match c {
+                            0xC0..=0xDF => 2,
+                            0xE0..=0xEF => 3,
+                            _ => 4,
+                        };
+                        self.pos = start + width;
+                        let chunk = self
+                            .bytes
+                            .get(start..start + width)
+                            .ok_or_else(|| anyhow!("truncated UTF-8"))?;
+                        s.push_str(std::str::from_utf8(chunk)?);
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        Ok(Json::Num(text.parse()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_like_document() {
+        let doc = r#"{
+          "model": "c3d",
+          "input": [3, 16, 32, 32],
+          "eval_acc": null,
+          "flops_dense": 116803584,
+          "layers": [
+            {"kind": "conv3d", "name": "conv1", "relu": true,
+             "weights": {"w": {"offset": 0, "shape": [8,3,3,3,3], "dtype": "f32"}}}
+          ],
+          "hlo": {"dense_xla_b1": "c3d_dense_xla_b1.hlo.txt"}
+        }"#;
+        let j = Json::parse(doc).unwrap();
+        assert_eq!(j.req("model").unwrap().as_str().unwrap(), "c3d");
+        assert_eq!(j.req("input").unwrap().usize_vec().unwrap(), vec![3, 16, 32, 32]);
+        assert!(j.req("eval_acc").unwrap().is_null());
+        assert_eq!(j.req("flops_dense").unwrap().as_usize().unwrap(), 116803584);
+        let layers = j.req("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers[0].req("kind").unwrap().as_str().unwrap(), "conv3d");
+        assert!(layers[0].req("relu").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn parses_escapes_and_unicode() {
+        let j = Json::parse(r#"{"s": "a\n\"b\" A"}"#).unwrap();
+        assert_eq!(j.req("s").unwrap().as_str().unwrap(), "a\n\"b\" A");
+    }
+
+    #[test]
+    fn parses_numbers() {
+        let j = Json::parse("[-1.5e3, 0.25, 7, 1e-2]").unwrap();
+        let v: Vec<f64> =
+            j.as_arr().unwrap().iter().map(|x| x.as_f64().unwrap()).collect();
+        assert_eq!(v, vec![-1500.0, 0.25, 7.0, 0.01]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{}extra").is_err());
+        assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let j = Json::parse("[[1,2],[3]]").unwrap();
+        assert_eq!(j.as_arr().unwrap().len(), 2);
+        assert_eq!(
+            j.as_arr().unwrap()[0].usize_vec().unwrap(),
+            vec![1, 2]
+        );
+    }
+}

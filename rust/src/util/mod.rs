@@ -1,0 +1,10 @@
+//! In-tree utility substrate (the build environment is offline, so the
+//! stack carries its own JSON parser, PRNG, CLI helper and bench timer).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

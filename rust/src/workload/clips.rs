@@ -1,0 +1,129 @@
+//! Synthetic moving-pattern video clips, matching python `compile/data.py`
+//! in distribution (same classes/dynamics; RNG differs, which is fine — the
+//! python side trains on its own draws, we only need in-distribution data).
+
+use crate::tensor::Tensor5;
+use crate::util::Rng;
+
+pub const NUM_CLASSES: usize = 8;
+
+pub type ClassId = usize;
+
+fn blob(frame: &mut [f32], size: usize, cx: f32, cy: f32, sigma: f32, amp: f32) {
+    let s2 = 2.0 * sigma * sigma;
+    for y in 0..size {
+        for x in 0..size {
+            let dx = x as f32 - cx;
+            let dy = y as f32 - cy;
+            frame[y * size + x] += amp * (-(dx * dx + dy * dy) / s2).exp();
+        }
+    }
+}
+
+/// Generate one labelled clip: (1, 3, frames, size, size) NCDHW.
+pub fn make_clip(label: ClassId, seed: u64, frames: usize, size: usize) -> Tensor5 {
+    let mut rng = Rng::new(seed ^ ((label as u64) << 32));
+    let speed = rng.range_f32(0.8, 1.6);
+    let phase = rng.range_f32(0.0, std::f32::consts::TAU);
+    let r0 = rng.range_f32(0.22, 0.32) * size as f32;
+    let sigma0 = rng.range_f32(0.09, 0.14) * size as f32;
+    let cx0 = size as f32 / 2.0 + rng.range_f32(-2.0, 2.0);
+    let cy0 = size as f32 / 2.0 + rng.range_f32(-2.0, 2.0);
+    let color = [
+        rng.range_f32(0.6, 1.0),
+        rng.range_f32(0.6, 1.0),
+        rng.range_f32(0.6, 1.0),
+    ];
+    let noise = 0.25f32;
+    let mut t = Tensor5::zeros([1, 3, frames, size, size]);
+    let mut frame = vec![0.0f32; size * size];
+    for ti in 0..frames {
+        let s = speed * ti as f32;
+        let mut sigma = sigma0;
+        let (cx, cy) = match label {
+            0 => (cx0 + s, cy0),
+            1 => (cx0 - s, cy0),
+            2 => (cx0, cy0 + s),
+            3 => (cx0, cy0 - s),
+            4 | 5 => {
+                let dir = if label == 4 { 1.0 } else { -1.0 };
+                let ang = phase + dir * 0.35 * speed * ti as f32;
+                (
+                    size as f32 / 2.0 + r0 * ang.cos(),
+                    size as f32 / 2.0 + r0 * ang.sin(),
+                )
+            }
+            6 => {
+                sigma = sigma0 * (1.0 + 0.09 * speed * ti as f32);
+                (cx0, cy0)
+            }
+            _ => {
+                sigma = sigma0
+                    * (1.0 + 0.09 * speed * (frames as f32 / 2.0 - ti as f32))
+                        .max(0.25);
+                (cx0, cy0)
+            }
+        };
+        frame.fill(0.0);
+        let jx = 0.4 * rng.normal();
+        let jy = 0.4 * rng.normal();
+        blob(&mut frame, size, cx + jx, cy + jy, sigma, 1.0);
+        for (ch, &col) in color.iter().enumerate() {
+            let base = t.idx(0, ch, ti, 0, 0);
+            for (i, &f) in frame.iter().enumerate() {
+                // Gaussian noise, matching python data.py's N(0, noise) —
+                // the CNN has no input normalization, so the noise *floor*
+                // is part of the training distribution.
+                t.data[base + i] = col * f + noise * rng.normal();
+            }
+        }
+    }
+    t
+}
+
+/// Pack several clips into one NCDHW batch tensor.
+pub fn batch_clips(clips: &[Tensor5]) -> Tensor5 {
+    let [_, c, d, h, w] = clips[0].dims;
+    let mut out = Tensor5::zeros([clips.len(), c, d, h, w]);
+    let n = c * d * h * w;
+    for (i, clip) in clips.iter().enumerate() {
+        out.data[i * n..(i + 1) * n].copy_from_slice(&clip.data);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_shape_and_determinism() {
+        let a = make_clip(0, 1, 16, 32);
+        assert_eq!(a.dims, [1, 3, 16, 32, 32]);
+        let b = make_clip(0, 1, 16, 32);
+        assert_eq!(a, b);
+        let c = make_clip(0, 2, 16, 32);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn classes_differ() {
+        let a = make_clip(0, 5, 8, 16);
+        let b = make_clip(4, 5, 8, 16);
+        assert!(a.max_abs_diff(&b) > 0.1);
+    }
+
+    #[test]
+    fn batch_packing() {
+        let clips: Vec<_> = (0..3).map(|i| make_clip(i, 9, 4, 8)).collect();
+        let b = batch_clips(&clips);
+        assert_eq!(b.dims, [3, 3, 4, 8, 8]);
+        assert_eq!(b.at(2, 1, 3, 4, 5), clips[2].at(0, 1, 3, 4, 5));
+    }
+
+    #[test]
+    fn values_bounded() {
+        let a = make_clip(6, 3, 8, 16);
+        assert!(a.data.iter().all(|v| v.is_finite() && v.abs() < 3.0));
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload generators: synthetic action-recognition clips (the rust port
+//! of `python/compile/data.py`, same eight motion classes) and Poisson
+//! request traces for the serving benchmarks.
+
+pub mod clips;
+mod trace;
+
+pub use clips::{batch_clips, make_clip, ClassId, NUM_CLASSES};
+pub use trace::{RequestTrace, TraceConfig};

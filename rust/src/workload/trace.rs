@@ -1,0 +1,87 @@
+//! Poisson request traces for the serving benchmarks (Table 2's workload is
+//! a single clip; the coordinator benches additionally sweep arrival rates).
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Mean arrivals per second.
+    pub rate_hz: f64,
+    /// Number of requests to generate.
+    pub count: usize,
+    pub seed: u64,
+}
+
+/// One generated request: arrival offset + clip parameters.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    pub arrival_s: f64,
+    pub label: usize,
+    pub clip_seed: u64,
+}
+
+/// A reproducible arrival trace.
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    pub entries: Vec<TraceEntry>,
+}
+
+impl RequestTrace {
+    pub fn poisson(cfg: &TraceConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let mut t = 0.0;
+        let entries = (0..cfg.count)
+            .map(|i| {
+                // Exponential inter-arrival.
+                let u = rng.f64().max(1e-12);
+                t += -u.ln() / cfg.rate_hz;
+                TraceEntry {
+                    arrival_s: t,
+                    label: rng.below(super::NUM_CLASSES),
+                    clip_seed: cfg.seed.wrapping_mul(1000) + i as u64,
+                }
+            })
+            .collect();
+        Self { entries }
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.entries.last().map(|e| e.arrival_s).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate() {
+        let cfg = TraceConfig { rate_hz: 100.0, count: 2000, seed: 1 };
+        let tr = RequestTrace::poisson(&cfg);
+        assert_eq!(tr.entries.len(), 2000);
+        let measured = tr.entries.len() as f64 / tr.duration();
+        assert!((measured - 100.0).abs() < 10.0, "rate={measured}");
+    }
+
+    #[test]
+    fn arrivals_monotone() {
+        let tr = RequestTrace::poisson(&TraceConfig {
+            rate_hz: 10.0,
+            count: 100,
+            seed: 2,
+        });
+        for w in tr.entries.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = TraceConfig { rate_hz: 5.0, count: 50, seed: 3 };
+        let a = RequestTrace::poisson(&cfg);
+        let b = RequestTrace::poisson(&cfg);
+        assert_eq!(a.entries.len(), b.entries.len());
+        assert_eq!(a.entries[10].clip_seed, b.entries[10].clip_seed);
+        assert_eq!(a.entries[10].label, b.entries[10].label);
+    }
+}

@@ -1,0 +1,296 @@
+//! Property-based tests over coordinator/codegen invariants, using the
+//! in-tree PRNG as the case generator (offline build: no proptest crate).
+//! Each property runs across many random cases with printed seeds so
+//! failures are reproducible.
+
+use rt3d::codegen::{self, GemmTile, Scheme};
+use rt3d::coordinator::LatencyStats;
+use rt3d::executors;
+use rt3d::model::{ConvLayer, TensorRef, WeightRefs};
+use rt3d::tensor::{im2col, Conv3dGeometry, Mat, Tensor5};
+use rt3d::util::Rng;
+use rt3d::workload::{RequestTrace, TraceConfig};
+
+const CASES: usize = 25;
+
+fn layer(m: usize, c: usize, k: [usize; 3]) -> ConvLayer {
+    let dummy = TensorRef { offset: 0, shape: vec![], dtype: "f32".into() };
+    ConvLayer {
+        name: "p".into(),
+        in_ch: c,
+        out_ch: m,
+        kernel: k,
+        stride: [1, 1, 1],
+        padding: [k[0] / 2, k[1] / 2, k[2] / 2],
+        relu: false,
+        weights: WeightRefs { w: dummy.clone(), b: dummy },
+        weights_sparse: None,
+        unit_mask: None,
+    }
+}
+
+/// Property: compiled KGS plans never reference out-of-range patch rows and
+/// their panel sizes are consistent with the column lists.
+#[test]
+fn prop_kgs_plan_well_formed() {
+    let mut rng = Rng::new(101);
+    for case in 0..CASES {
+        let g_m = [2, 4, 8][rng.below(3)];
+        let g_n = [2, 4][rng.below(2)];
+        let m = g_m * (1 + rng.below(3));
+        let c = g_n * (1 + rng.below(3));
+        let k = [1 + rng.below(3), 1 + rng.below(3), 1 + rng.below(3)];
+        let ks: usize = k.iter().product();
+        let l = layer(m, c, k);
+        let geom = Conv3dGeometry {
+            in_ch: c,
+            out_ch: m,
+            kernel: k,
+            stride: [1, 1, 1],
+            padding: [k[0] / 2, k[1] / 2, k[2] / 2],
+            in_spatial: [4, 6, 6],
+        };
+        let w = Tensor5::random([m, c, k[0], k[1], k[2]], case as u64).data;
+        let pp = m.div_ceil(g_m);
+        let qq = c.div_ceil(g_n);
+        let mut mask = vec![false; pp * qq * ks];
+        for (i, v) in mask.iter_mut().enumerate() {
+            *v = rng.bool(0.5);
+            let _ = i;
+        }
+        let cc = codegen::compile_conv_sparse(
+            &l,
+            &geom,
+            &w,
+            vec![0.0; m],
+            &mask,
+            Scheme::Kgs,
+            g_m,
+            g_n,
+        );
+        if let codegen::ConvKind::Kgs { groups } = &cc.kind {
+            for g in groups {
+                assert_eq!(g.panel.len(), g.m_eff * g.cols.len(), "case {case}");
+                assert!(g.m0 + g.m_eff <= m, "case {case}");
+                for &col in &g.cols {
+                    assert!((col as usize) < c * ks, "case {case}");
+                }
+            }
+            // FLOPs accounting consistent with panel sizes.
+            let panel_elems: usize = groups.iter().map(|g| g.panel.len()).sum();
+            assert_eq!(cc.flops, 2 * panel_elems * geom.rows(1), "case {case}");
+        } else {
+            panic!("expected KGS plan");
+        }
+    }
+}
+
+/// Property: for any mask, the compiled sparse executor equals the masked
+/// dense oracle (the central correctness claim of the codegen).
+#[test]
+fn prop_sparse_executor_equals_masked_dense() {
+    let mut rng = Rng::new(202);
+    for case in 0..12 {
+        let (g_m, g_n) = (4usize, 4usize);
+        let m = g_m * (1 + rng.below(2));
+        let c = g_n * (1 + rng.below(2));
+        let k = [3usize, 3, 3];
+        let ks = 27;
+        let l = layer(m, c, k);
+        let geom = Conv3dGeometry {
+            in_ch: c,
+            out_ch: m,
+            kernel: k,
+            stride: [1, 1, 1],
+            padding: [1, 1, 1],
+            in_spatial: [3, 5, 5],
+        };
+        let w = Tensor5::random([m, c, 3, 3, 3], 900 + case).data;
+        let pp = m.div_ceil(g_m);
+        let qq = c.div_ceil(g_n);
+        let scheme = [Scheme::Kgs, Scheme::Vanilla][rng.below(2)];
+        let units = match scheme {
+            Scheme::Kgs => pp * qq * ks,
+            Scheme::Vanilla => pp * qq,
+            Scheme::Filter => m,
+        };
+        let mask: Vec<bool> = (0..units).map(|_| rng.bool(0.6)).collect();
+        let cc = codegen::compile_conv_sparse(
+            &l,
+            &geom,
+            &w,
+            vec![0.0; m],
+            &mask,
+            scheme,
+            g_m,
+            g_n,
+        );
+        // Masked dense oracle.
+        let mut wm = w.clone();
+        for mi in 0..m {
+            for ci in 0..c {
+                for loc in 0..ks {
+                    let keep = match scheme {
+                        Scheme::Kgs => {
+                            mask[((mi / g_m) * qq + ci / g_n) * ks + loc]
+                        }
+                        Scheme::Vanilla => mask[(mi / g_m) * qq + ci / g_n],
+                        Scheme::Filter => mask[mi],
+                    };
+                    if !keep {
+                        wm[(mi * c + ci) * ks + loc] = 0.0;
+                    }
+                }
+            }
+        }
+        let x = Tensor5::random([1, c, 3, 5, 5], 500 + case);
+        let want =
+            executors::naive::conv3d_naive(&x, &wm, &vec![0.0; m], &geom, false);
+        let pt = executors::im2col_t(&x, &geom);
+        let mut out = Mat::zeros(m, pt.cols);
+        executors::run_compiled_conv(&cc, &pt, &mut out);
+        let got = executors::mat_to_tensor(&out, 1, geom.out_spatial());
+        assert!(
+            got.max_abs_diff(&want) < 1e-3,
+            "case {case} scheme {scheme:?}"
+        );
+    }
+}
+
+/// Property: im2col_t is exactly the transpose of im2col for any geometry.
+#[test]
+fn prop_im2col_transpose_identity() {
+    let mut rng = Rng::new(303);
+    for case in 0..CASES {
+        let c = 1 + rng.below(4);
+        let k = [1 + rng.below(3), 1 + rng.below(3), 1 + rng.below(3)];
+        let stride = [1 + rng.below(2), 1 + rng.below(2), 1 + rng.below(2)];
+        let d = k[0] + rng.below(4);
+        let h = k[1] + rng.below(5);
+        let w = k[2] + rng.below(5);
+        let geom = Conv3dGeometry {
+            in_ch: c,
+            out_ch: 1,
+            kernel: k,
+            stride,
+            padding: [k[0] / 2, k[1] / 2, k[2] / 2],
+            in_spatial: [d, h, w],
+        };
+        let x = Tensor5::random([1 + rng.below(2), c, d, h, w], 700 + case as u64);
+        let a = im2col(&x, &geom);
+        let b = executors::im2col_t(&x, &geom);
+        assert_eq!(a.rows, b.cols, "case {case}");
+        assert_eq!(a.cols, b.rows, "case {case}");
+        assert_eq!(a.transpose(), b, "case {case}");
+    }
+}
+
+/// Property: GEMM result is tile-invariant for random tiles.
+#[test]
+fn prop_gemm_tile_invariance() {
+    let mut rng = Rng::new(404);
+    let w = Mat::random(13, 64, 1);
+    let p = Mat::random(64, 100, 2);
+    let mut reference = Mat::zeros(13, 100);
+    rt3d::executors::gemm::gemm_dense(
+        &w.data,
+        13,
+        &p,
+        &mut reference,
+        GemmTile::default(),
+    );
+    for case in 0..CASES {
+        let tile = GemmTile {
+            mr: [1, 2, 4, 8][rng.below(4)],
+            rc: 1 + rng.below(128),
+            kc: 1 + rng.below(96),
+        };
+        let mut out = Mat::zeros(13, 100);
+        rt3d::executors::gemm::gemm_dense(&w.data, 13, &p, &mut out, tile);
+        assert!(
+            out.max_abs_diff(&reference) < 1e-3,
+            "case {case} tile {tile:?}"
+        );
+    }
+}
+
+/// Property: latency stats are order-independent and percentile-monotone.
+#[test]
+fn prop_latency_stats_invariants() {
+    let mut rng = Rng::new(505);
+    for case in 0..CASES {
+        let n = 1 + rng.below(200);
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0).collect();
+        let a = LatencyStats::from_samples(xs.clone());
+        // Shuffle.
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, rng.below(i + 1));
+        }
+        let b = LatencyStats::from_samples(xs);
+        assert_eq!(a.p50_s, b.p50_s, "case {case}");
+        assert_eq!(a.max_s, b.max_s, "case {case}");
+        assert!(a.p50_s <= a.p95_s && a.p95_s <= a.p99_s && a.p99_s <= a.max_s);
+        assert!(a.mean_s <= a.max_s && a.mean_s > 0.0);
+    }
+}
+
+/// Property: Poisson traces are monotone with positive gaps and stable
+/// under replay.
+#[test]
+fn prop_trace_invariants() {
+    let mut rng = Rng::new(606);
+    for case in 0..CASES {
+        let cfg = TraceConfig {
+            rate_hz: 1.0 + rng.f64() * 100.0,
+            count: 1 + rng.below(300),
+            seed: case as u64,
+        };
+        let t = RequestTrace::poisson(&cfg);
+        assert_eq!(t.entries.len(), cfg.count);
+        for w in t.entries.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s, "case {case}");
+        }
+        for e in &t.entries {
+            assert!(e.label < rt3d::workload::NUM_CLASSES);
+        }
+    }
+}
+
+/// Property: density() of a compiled filter plan equals kept-row fraction.
+#[test]
+fn prop_filter_density() {
+    let mut rng = Rng::new(707);
+    for case in 0..CASES {
+        let m = 2 + rng.below(14);
+        let c = 1 + rng.below(6);
+        let l = layer(m, c, [3, 3, 3]);
+        let geom = Conv3dGeometry {
+            in_ch: c,
+            out_ch: m,
+            kernel: [3, 3, 3],
+            stride: [1, 1, 1],
+            padding: [1, 1, 1],
+            in_spatial: [4, 4, 4],
+        };
+        let w = vec![0.5f32; m * c * 27];
+        let mut mask: Vec<bool> = (0..m).map(|_| rng.bool(0.5)).collect();
+        mask[0] = true; // keep at least one
+        let cc = codegen::compile_conv_sparse(
+            &l,
+            &geom,
+            &w,
+            vec![0.0; m],
+            &mask,
+            Scheme::Filter,
+            4,
+            4,
+        );
+        let kept = mask.iter().filter(|&&b| b).count();
+        let expect = kept as f64 / m as f64;
+        assert!(
+            (cc.density() - expect).abs() < 1e-9,
+            "case {case}: {} vs {expect}",
+            cc.density()
+        );
+    }
+}

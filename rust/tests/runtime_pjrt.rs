@@ -1,0 +1,122 @@
+//! PJRT integration: load the AOT HLO artifacts and check numerics against
+//! the native executors. Skipped (pass trivially) when `artifacts/` has not
+//! been built — run `make artifacts` first for full coverage.
+
+use rt3d::executors::{EngineKind, NativeEngine};
+use rt3d::model::Model;
+use rt3d::runtime::Runtime;
+use rt3d::tensor::Tensor5;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("c3d.manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT tests: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn pjrt_loads_and_runs_dense_xla() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = Model::load(&dir, "c3d").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let path = model.hlo_path("dense_xla_b1").unwrap();
+    let input = model.manifest.input;
+    let exe = rt
+        .load(&path, [1, input[0], input[1], input[2], input[3]])
+        .unwrap();
+    let x = Tensor5::random([1, input[0], input[1], input[2], input[3]], 11);
+    let logits = exe.run(&x.data).unwrap();
+    assert_eq!(logits.len(), model.manifest.num_classes);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn pjrt_dense_matches_native_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = Model::load(&dir, "c3d").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let input = model.manifest.input;
+    let exe = rt
+        .load(
+            model.hlo_path("dense_xla_b1").unwrap(),
+            [1, input[0], input[1], input[2], input[3]],
+        )
+        .unwrap();
+    let native = NativeEngine::new(&model, EngineKind::Rt3d, false);
+    let x = Tensor5::random([1, input[0], input[1], input[2], input[3]], 12);
+    let pjrt_logits = exe.run(&x.data).unwrap();
+    let native_logits = native.forward(&x);
+    for (a, b) in pjrt_logits.iter().zip(native_logits.row(0)) {
+        assert!(
+            (a - b).abs() < 1e-2,
+            "pjrt {pjrt_logits:?} vs native {:?}",
+            native_logits.row(0)
+        );
+    }
+}
+
+#[test]
+fn pjrt_pallas_variant_matches_xla_variant() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = Model::load(&dir, "c3d").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let input = model.manifest.input;
+    let dims = [1, input[0], input[1], input[2], input[3]];
+    let xla = rt.load(model.hlo_path("dense_xla_b1").unwrap(), dims).unwrap();
+    let pallas = rt
+        .load(model.hlo_path("dense_pallas_b1").unwrap(), dims)
+        .unwrap();
+    let x = Tensor5::random(dims, 13);
+    let a = xla.run(&x.data).unwrap();
+    let b = pallas.run(&x.data).unwrap();
+    for (va, vb) in a.iter().zip(&b) {
+        assert!((va - vb).abs() < 1e-2, "{a:?} vs {b:?}");
+    }
+}
+
+#[test]
+fn pjrt_sparse_kgs_matches_masked_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = Model::load(&dir, "c3d").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let input = model.manifest.input;
+    let dims = [1, input[0], input[1], input[2], input[3]];
+    let Some(path) = model.hlo_path("kgs_pallas_b1") else { return };
+    let sparse_exe = rt.load(path, dims).unwrap();
+    let native_sparse = NativeEngine::new(&model, EngineKind::Rt3d, true);
+    let x = Tensor5::random(dims, 14);
+    let a = sparse_exe.run(&x.data).unwrap();
+    let b = native_sparse.forward(&x);
+    for (va, vb) in a.iter().zip(b.row(0)) {
+        assert!((va - vb).abs() < 1e-2, "{a:?} vs {:?}", b.row(0));
+    }
+}
+
+#[test]
+fn pjrt_batch4_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = Model::load(&dir, "c3d").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let input = model.manifest.input;
+    let dims = [4, input[0], input[1], input[2], input[3]];
+    let exe = rt.load(model.hlo_path("dense_xla_b4").unwrap(), dims).unwrap();
+    let x = Tensor5::random(dims, 15);
+    let logits = exe.run(&x.data).unwrap();
+    assert_eq!(logits.len(), 4 * model.manifest.num_classes);
+}
+
+#[test]
+fn runtime_caches_executables() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = Model::load(&dir, "c3d").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let input = model.manifest.input;
+    let dims = [1, input[0], input[1], input[2], input[3]];
+    let p = model.hlo_path("dense_xla_b1").unwrap();
+    let a = rt.load(&p, dims).unwrap();
+    let b = rt.load(&p, dims).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
