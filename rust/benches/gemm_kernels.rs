@@ -8,6 +8,10 @@ use rt3d::util::bench::BenchGroup;
 use std::time::Duration;
 
 fn main() {
+    println!(
+        "gemm_kernels: blocked kernels run on {} executor threads (RT3D_THREADS)",
+        rt3d::util::pool::ThreadPool::global().threads()
+    );
     // (M, K, R) shapes drawn from c3d layers at width 8 / 16x32x32 input.
     let shapes = [
         (16usize, 216usize, 8192usize),

@@ -9,6 +9,10 @@ use rt3d::util::bench::BenchGroup;
 use std::time::Duration;
 
 fn main() {
+    println!(
+        "group_size: {} executor threads (RT3D_THREADS)",
+        rt3d::util::pool::ThreadPool::global().threads()
+    );
     let mut group = BenchGroup::new("group_size")
         .budget(Duration::from_secs(2))
         .max_iters(20);

@@ -1,38 +1,91 @@
-//! Coordinator benchmark: serving throughput/latency across batch caps —
-//! validates that the L3 layer adds negligible overhead on top of the
-//! executor (DESIGN.md §Perf: coordinator < 5% of end-to-end latency).
+//! Coordinator benchmark: serving throughput/latency across batch caps and
+//! executor thread counts.
+//!
+//! Two claims are validated here (DESIGN.md §Perf):
+//! * the coordinator adds negligible overhead on top of the executor;
+//! * the parallel execution pipeline scales: N executor threads beat one
+//!   thread on the C3D-shaped workload while producing **bit-identical**
+//!   logits (the disjoint-output-rows invariant, see `util::pool`).
+//!
+//! Emits machine-readable `BENCH_serving.json` at the repo root
+//! (p50/p95 latency, threads, GFLOP/s) so the perf trajectory is tracked
+//! across PRs; `.github/workflows/ci.yml` compares it against the
+//! committed baseline. Falls back to the in-memory synthetic C3D model
+//! when `make artifacts` has not been run.
 
 use rt3d::coordinator::{BatcherConfig, Server, ServerConfig};
 use rt3d::executors::{EngineKind, NativeEngine};
-use rt3d::model::Model;
+use rt3d::model::{Model, SyntheticC3d};
 use rt3d::tensor::Tensor5;
-use rt3d::util::bench::fmt_s;
+use rt3d::util::bench::{budget_from_env, fmt_s, write_repo_json};
+use rt3d::util::pool::ThreadPool;
 use rt3d::workload;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Latency samples for one engine: (p50_s, p95_s, samples).
+fn time_forward(
+    engine: &NativeEngine,
+    clip: &Tensor5,
+    budget: Duration,
+) -> (f64, f64, usize) {
+    let _ = engine.forward(clip); // warm-up (also grows the arena)
+    let t0 = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < 5 || (t0.elapsed() < budget && samples.len() < 200) {
+        let s = Instant::now();
+        let _ = engine.forward(clip);
+        samples.push(s.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    (samples[n / 2], samples[((n as f64 - 1.0) * 0.95).round() as usize], n)
+}
 
 fn main() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("c3d.manifest.json").exists() {
-        eprintln!("serving: run `make artifacts` first");
-        return;
-    }
-    let model = Model::load(&dir, "c3d").unwrap();
+    let model = if dir.join("c3d.manifest.json").exists() {
+        Model::load(&dir, "c3d").unwrap()
+    } else {
+        println!("serving: artifacts missing — using the synthetic C3D-shaped model");
+        Model::synthetic_c3d(SyntheticC3d::default())
+    };
     let input = model.manifest.input;
-    let n = 24;
-
-    // Raw engine latency (no coordinator).
-    let engine = NativeEngine::new(&model, EngineKind::Rt3d, true);
     let clip = Tensor5::random([1, input[0], input[1], input[2], input[3]], 1);
-    let t0 = Instant::now();
-    for _ in 0..4 {
-        let _ = engine.forward(&clip);
-    }
-    let raw = t0.elapsed().as_secs_f64() / 4.0;
-    println!("serving raw-engine latency: {}", fmt_s(raw));
+    let threads = ThreadPool::from_env().threads();
+    let budget = budget_from_env(2000);
 
+    // --- Thread scaling + bit-identical parity -------------------------
+    let eng1 = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 1);
+    let engn = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, threads);
+    let l1 = eng1.forward(&clip);
+    let ln = engn.forward(&clip);
+    assert_eq!(
+        l1.data, ln.data,
+        "multi-threaded logits must be bit-identical to single-threaded"
+    );
+    println!("serving parity: logits bit-identical at 1 vs {threads} threads");
+    let (p50_1, p95_1, n1) = time_forward(&eng1, &clip, budget);
+    let (p50_n, p95_n, nn) = time_forward(&engn, &clip, budget);
+    let speedup = p50_1 / p50_n;
+    let gflops = engn.conv_flops() as f64 / p50_n / 1e9;
+    println!(
+        "serving raw-engine latency: 1t p50={} (n={n1})  {threads}t p50={} p95={} (n={nn})  speedup={speedup:.2}x  {gflops:.2} GFLOP/s",
+        fmt_s(p50_1),
+        fmt_s(p50_n),
+        fmt_s(p95_n),
+    );
+
+    // --- Coordinator overhead across batch caps ------------------------
+    let n = 24;
+    let mut served = Vec::new();
     for max_batch in [1usize, 2, 4, 8] {
-        let engine = Arc::new(NativeEngine::new(&model, EngineKind::Rt3d, true));
+        let engine = Arc::new(NativeEngine::with_threads(
+            &model,
+            EngineKind::Rt3d,
+            true,
+            threads,
+        ));
         let server = Server::start(
             engine,
             ServerConfig {
@@ -57,13 +110,41 @@ fn main() {
         let m = server.shutdown();
         let lat = m.latency();
         println!(
-            "serving max_batch={max_batch}: {:.2} req/s p50={} p99={} mean_batch={:.2} overhead_vs_raw={:.1}%",
+            "serving max_batch={max_batch}: {:.2} req/s p50={} p95={} p99={} mean_batch={:.2} overhead_vs_raw={:.1}%",
             n as f64 / wall,
             fmt_s(lat.p50_s),
+            fmt_s(lat.p95_s),
             fmt_s(lat.p99_s),
             m.mean_batch(),
             // queueing-free single-batch overhead estimate
-            100.0 * ((wall / n as f64) * m.mean_batch() / raw - 1.0)
+            100.0 * ((wall / n as f64) * m.mean_batch() / p50_n - 1.0)
         );
+        served.push((max_batch, n as f64 / wall, lat.p50_s, lat.p95_s, m.mean_batch()));
     }
+
+    // --- Machine-readable output ---------------------------------------
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"serving\",\n");
+    json.push_str(&format!("  \"model\": \"{}\",\n", model.manifest.model));
+    json.push_str(&format!("  \"threads\": {threads},\n"));
+    json.push_str(&format!("  \"p50_ms\": {:.4},\n", p50_n * 1e3));
+    json.push_str(&format!("  \"p95_ms\": {:.4},\n", p95_n * 1e3));
+    json.push_str(&format!("  \"p50_ms_1t\": {:.4},\n", p50_1 * 1e3));
+    json.push_str(&format!("  \"p95_ms_1t\": {:.4},\n", p95_1 * 1e3));
+    json.push_str(&format!("  \"speedup_vs_1t\": {speedup:.4},\n"));
+    json.push_str(&format!("  \"gflops\": {gflops:.4},\n"));
+    json.push_str("  \"bit_identical_logits\": true,\n");
+    json.push_str("  \"server\": [\n");
+    for (i, (mb, rps, p50, p95, meanb)) in served.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"max_batch\": {mb}, \"req_per_s\": {rps:.4}, \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"mean_batch\": {meanb:.4}}}{}\n",
+            p50 * 1e3,
+            p95 * 1e3,
+            if i + 1 < served.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let out = write_repo_json("BENCH_serving.json", &json);
+    println!("serving: wrote {}", out.display());
 }

@@ -11,6 +11,10 @@ use rt3d::util::bench::BenchGroup;
 use std::time::Duration;
 
 fn main() {
+    println!(
+        "sparsity_sweep: {} executor threads (RT3D_THREADS)",
+        rt3d::util::pool::ThreadPool::global().threads()
+    );
     let (m, ch) = (64usize, 64usize);
     let dummy = TensorRef { offset: 0, shape: vec![], dtype: "f32".into() };
     let layer = ConvLayer {

@@ -5,25 +5,48 @@
 //! the sim columns project onto the Snapdragon-865 cost model. The shape
 //! to reproduce: rt3d-dense beats both baselines; rt3d-sparse beats dense
 //! by ~the FLOPs pruning rate; GPU < CPU.
+//!
+//! Emits machine-readable `BENCH_table2.json` at the repo root (median/p95
+//! latency per engine class, executor threads, GFLOP/s). Falls back to the
+//! in-memory synthetic C3D model when `make artifacts` has not been run.
 
 use rt3d::codegen;
 use rt3d::device::{self, DeviceProfile, ExecutorClass};
 use rt3d::executors::{EngineKind, NativeEngine};
-use rt3d::model::Model;
+use rt3d::model::{Model, SyntheticC3d};
 use rt3d::tensor::Tensor5;
-use rt3d::util::bench::{fmt_s, BenchGroup};
-use std::time::Duration;
+use rt3d::util::bench::{budget_from_env, fmt_s, write_repo_json, BenchGroup};
+use rt3d::util::pool::ThreadPool;
+
+struct Row {
+    model: String,
+    engine: &'static str,
+    median_ms: f64,
+    p95_ms: f64,
+    gflops: f64,
+}
 
 fn main() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("c3d.manifest.json").exists() {
-        eprintln!("table2: run `make artifacts` first");
-        return;
-    }
-    let mut group = BenchGroup::new("table2").budget(Duration::from_secs(3));
-    println!("== Table 2 reproduction (host measurements + device-sim projection)");
+    let threads = ThreadPool::from_env().threads();
+    let mut group = BenchGroup::new("table2").budget(budget_from_env(3000));
+    println!(
+        "== Table 2 reproduction (host measurements + device-sim projection, \
+         {threads} executor threads)"
+    );
+    let mut rows: Vec<Row> = Vec::new();
     for name in ["c3d", "r2plus1d", "s3d"] {
-        let Ok(model) = Model::load(&dir, name) else { continue };
+        let model = if dir.join(format!("{name}.manifest.json")).exists() {
+            match Model::load(&dir, name) {
+                Ok(m) => m,
+                Err(_) => continue,
+            }
+        } else if name == "c3d" {
+            println!("table2: artifacts missing — using the synthetic C3D-shaped model");
+            Model::synthetic_c3d(SyntheticC3d::default())
+        } else {
+            continue;
+        };
         let input = model.manifest.input;
         let clip =
             Tensor5::random([1, input[0], input[1], input[2], input[3]], 42);
@@ -35,12 +58,19 @@ fn main() {
         ];
         let mut medians = Vec::new();
         for (label, kind, sparse) in engines {
-            let engine = NativeEngine::new(&model, kind, sparse);
-            let bname = format!("{name}/{label}");
+            let engine = NativeEngine::with_threads(&model, kind, sparse, threads);
+            let bname = format!("{}/{label}", model.manifest.model);
             let r = group.bench(&bname, || {
                 let _ = engine.forward(&clip);
             });
             medians.push((label, r.median_s));
+            rows.push(Row {
+                model: model.manifest.model.clone(),
+                engine: label,
+                median_ms: r.median_s * 1e3,
+                p95_ms: r.p95_s * 1e3,
+                gflops: engine.conv_flops() as f64 / r.median_s / 1e9,
+            });
         }
         // Device-simulator projections (paper-scale absolute numbers).
         let convs_d = codegen::compile_model(&model, false);
@@ -72,4 +102,24 @@ fn main() {
             );
         }
     }
+
+    // --- Machine-readable output ---------------------------------------
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"table2\",\n");
+    json.push_str(&format!("  \"threads\": {threads},\n"));
+    json.push_str("  \"entries\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"model\": \"{}\", \"engine\": \"{}\", \"median_ms\": {:.4}, \"p95_ms\": {:.4}, \"gflops\": {:.4}}}{}\n",
+            r.model,
+            r.engine,
+            r.median_ms,
+            r.p95_ms,
+            r.gflops,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let out = write_repo_json("BENCH_table2.json", &json);
+    println!("table2: wrote {}", out.display());
 }

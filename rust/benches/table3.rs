@@ -58,6 +58,10 @@ fn vanilla_mask(pp: usize, qq: usize, keep: usize) -> Vec<bool> {
 }
 
 fn main() {
+    println!(
+        "table3: {} executor threads (RT3D_THREADS)",
+        rt3d::util::pool::ThreadPool::global().threads()
+    );
     let (m, ch) = (64usize, 64usize);
     let (layer, geom) = conv(m, ch);
     let w = Tensor5::random([m, ch, 3, 3, 3], 1).data;

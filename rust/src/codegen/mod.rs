@@ -16,7 +16,7 @@
 pub mod plan;
 pub mod tuner;
 
-pub use plan::{CompiledConv, ConvKind, GemmTile, KgsGroup, VanillaRow};
+pub use plan::{CompiledConv, ConvCall, ConvKind, GemmTile, KgsGroup, VanillaRow};
 
 use crate::model::{ConvLayer, Model};
 use crate::tensor::Conv3dGeometry;

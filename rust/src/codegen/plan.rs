@@ -71,7 +71,32 @@ pub struct CompiledConv {
     pub flops: usize,
 }
 
+/// A cheap per-call binding of a compiled conv to an actual input
+/// geometry (batch / spatial size may differ from the native resolution
+/// the plan was compiled at) and an optionally overridden tile.
+///
+/// This is the only way the executors accept a rebound geometry — the
+/// packed weights stay behind a shared borrow, so the old per-forward
+/// `CompiledConv::clone()` (which deep-copied every weight panel) is
+/// impossible by construction.
+#[derive(Clone, Copy)]
+pub struct ConvCall<'a> {
+    pub cc: &'a CompiledConv,
+    pub geom: Conv3dGeometry,
+    pub tile: GemmTile,
+}
+
 impl CompiledConv {
+    /// Bind this plan to an input spatial size for one call. Zero-copy:
+    /// only the 6-word geometry and the tile are materialized.
+    pub fn bind(&self, in_spatial: [usize; 3]) -> ConvCall<'_> {
+        ConvCall {
+            cc: self,
+            geom: Conv3dGeometry { in_spatial, ..self.geom },
+            tile: self.tile,
+        }
+    }
+
     /// Fraction of dense FLOPs that survive pruning (1.0 for dense).
     pub fn density(&self) -> f64 {
         self.flops as f64 / self.geom.flops(1) as f64

@@ -3,8 +3,9 @@
 //! configurations, e.g. the best tiling size, unrolling size".
 
 use crate::codegen::{CompiledConv, ConvKind, GemmTile};
-use crate::executors;
+use crate::executors::{self, AccSlabs};
 use crate::tensor::{Mat, Tensor5};
+use crate::util::pool::ThreadPool;
 use std::time::Instant;
 
 /// Candidate tile grid. Small by design: the paper's tuner explores tiling
@@ -22,16 +23,22 @@ pub fn candidates() -> Vec<GemmTile> {
 }
 
 /// Time one conv execution with a given tile (median of `reps`).
+/// Runs on the process-global pool so tuning reflects the `RT3D_THREADS`
+/// the model will serve with; the tile is overridden on the call binding,
+/// never by cloning the plan's weights.
 pub fn time_conv(cc: &CompiledConv, x: &Tensor5, tile: GemmTile, reps: usize) -> f64 {
     let g = cc.geom;
     let pt = executors::im2col_t(x, &g);
     let mut out = Mat::zeros(g.out_ch, pt.cols);
+    let mut call = cc.bind(g.in_spatial);
+    call.tile = tile;
+    let pool = ThreadPool::global();
+    let slabs = AccSlabs::global();
     let mut times: Vec<f64> = (0..reps.max(1))
         .map(|_| {
-            out.data.fill(0.0);
+            // run_conv_bound zero-fills the output itself.
             let t0 = Instant::now();
-            let cc2 = CompiledConv { tile, ..cc.clone() };
-            executors::run_compiled_conv(&cc2, &pt, &mut out);
+            executors::run_conv_bound(&call, &pt, &mut out, pool, slabs);
             t0.elapsed().as_secs_f64()
         })
         .collect();

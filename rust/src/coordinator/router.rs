@@ -8,7 +8,8 @@
 
 use super::{Engine, Metrics, Response, Server, ServerConfig};
 use crate::tensor::Tensor5;
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -185,7 +186,7 @@ mod tests {
 
     struct Tagged(f32);
     impl Engine for Tagged {
-        fn infer(&self, batch: &Tensor5) -> Mat {
+        fn infer(&self, batch: Tensor5) -> Mat {
             let mut m = Mat::zeros(batch.dims[0], 2);
             for r in 0..m.rows {
                 *m.at_mut(r, 0) = self.0; // identify which engine ran

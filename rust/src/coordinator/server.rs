@@ -11,17 +11,27 @@ use std::time::Instant;
 /// Anything that can run a batched forward pass (native engine, PJRT
 /// executable, or the device simulator in trace mode).
 pub trait Engine: Send + Sync {
-    /// (batch NCDHW) -> logits (batch x classes).
-    fn infer(&self, batch: &Tensor5) -> Mat;
+    /// (batch NCDHW) -> logits (batch x classes). Takes the batch by
+    /// value: the batcher owns the packed batch, so engines can consume
+    /// it without a per-request data-sized clone.
+    fn infer(&self, batch: Tensor5) -> Mat;
     fn name(&self) -> String;
+    /// Worker threads the engine's executor uses (1 for serial engines);
+    /// surfaced in serving logs and the bench JSON.
+    fn threads(&self) -> usize {
+        1
+    }
 }
 
 impl Engine for crate::executors::NativeEngine {
-    fn infer(&self, batch: &Tensor5) -> Mat {
-        self.forward(batch)
+    fn infer(&self, batch: Tensor5) -> Mat {
+        self.forward_owned(batch)
     }
     fn name(&self) -> String {
         format!("native-{:?}", self.kind)
+    }
+    fn threads(&self) -> usize {
+        crate::executors::NativeEngine::threads(self)
     }
 }
 
@@ -56,10 +66,11 @@ impl Server {
         let worker = std::thread::spawn(move || {
             let mut batcher = Batcher::new(cfg.batcher, rx);
             while let Some(batch) = batcher.next_batch() {
-                let clips: Vec<Tensor5> =
-                    batch.iter().map(|r| r.clip.clone()).collect();
-                let packed = crate::workload::clips::batch_clips(&clips);
-                let logits = engine.infer(&packed);
+                // Pack straight from the queued requests — no per-request
+                // clip clone on the hot path.
+                let clips: Vec<&Tensor5> = batch.iter().map(|r| &r.clip).collect();
+                let packed = crate::workload::clips::batch_clip_refs(&clips);
+                let logits = engine.infer(packed);
                 let done = Instant::now();
                 for (i, req) in batch.iter().enumerate() {
                     let row = logits.row(i);
@@ -125,7 +136,7 @@ mod tests {
     /// Test engine: logit[i] = mean of clip scaled by class index.
     struct Toy;
     impl Engine for Toy {
-        fn infer(&self, batch: &Tensor5) -> Mat {
+        fn infer(&self, batch: Tensor5) -> Mat {
             let b = batch.dims[0];
             let n = batch.len() / b;
             let mut out = Mat::zeros(b, 4);

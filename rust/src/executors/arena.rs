@@ -1,0 +1,137 @@
+//! Scratch arena: pre-sized, reused working memory for the conv hot path.
+//!
+//! One forward pass used to allocate, per conv layer: a fresh im2col
+//! `(K, R)` matrix, a fresh GEMM output `(M, R)` matrix, a per-`r0`-block
+//! accumulator vec inside `gemm_panel`, and a deep clone of the whole
+//! `CompiledConv` (weights included). The arena replaces all of those with
+//! buffers owned by the engine and resized in place — after warm-up the
+//! steady-state serving loop allocates no buffers proportional to the
+//! data (the only transient allocation left is the pool's O(tasks)
+//! scheduling list per parallel region), matching the paper's claim of
+//! generated code with a fixed working set.
+
+use crate::tensor::Mat;
+use std::sync::{Mutex, OnceLock};
+
+/// Per-worker accumulator slabs shared by the GEMM micro-kernels, plus the
+/// compaction buffer for Filter-scheme convs.
+///
+/// Workers index their own slab (uncontended mutex) so parallel panels
+/// never share accumulator memory; every kernel zero-fills the slab span
+/// it uses before accumulating, so slab contents never leak across tasks
+/// — another piece of the bit-identical-across-thread-counts invariant.
+pub struct AccSlabs {
+    workers: Vec<Mutex<Vec<f32>>>,
+    filter: Mutex<Mat>,
+}
+
+impl AccSlabs {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            workers: (0..workers.max(1)).map(|_| Mutex::new(Vec::new())).collect(),
+            filter: Mutex::new(Mat::zeros(0, 0)),
+        }
+    }
+
+    /// Process-wide slabs for call sites without an engine (tuner, the
+    /// compatibility wrappers in `executors`), sized to the global pool.
+    pub fn global() -> &'static AccSlabs {
+        static SLABS: OnceLock<AccSlabs> = OnceLock::new();
+        SLABS.get_or_init(|| {
+            AccSlabs::new(crate::util::pool::ThreadPool::global().threads())
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Borrow worker `w`'s slab grown to at least `len` elements. Contents
+    /// are unspecified — kernels fill the span they use.
+    pub fn with_slab<R>(
+        &self,
+        worker: usize,
+        len: usize,
+        f: impl FnOnce(&mut [f32]) -> R,
+    ) -> R {
+        let mut slab = self.workers[worker % self.workers.len()].lock().unwrap();
+        if slab.len() < len {
+            slab.resize(len, 0.0);
+        }
+        f(&mut slab[..len])
+    }
+
+    /// The `(kept_rows, R)` compaction buffer for Filter-scheme GEMM.
+    pub fn filter_buf(&self) -> std::sync::MutexGuard<'_, Mat> {
+        self.filter.lock().unwrap()
+    }
+}
+
+/// Per-engine working set: the im2col patch matrix, the GEMM output
+/// matrix, and the accumulator slabs, reused across layers and forwards.
+pub struct ScratchArena {
+    /// Transposed im2col patch matrix `(K, R)`.
+    pub patches: Mat,
+    /// GEMM output `(M, R)` before reshaping to NCDHW.
+    pub out: Mat,
+    /// Per-worker accumulators + filter compaction buffer.
+    pub slabs: AccSlabs,
+}
+
+impl ScratchArena {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            patches: Mat::zeros(0, 0),
+            out: Mat::zeros(0, 0),
+            slabs: AccSlabs::new(workers),
+        }
+    }
+
+    /// Reserve backing storage up front (element counts). The engine calls
+    /// this at construction with the max `(K, R)` / `(M, R)` footprint over
+    /// all layers at the native single-clip resolution; larger batches
+    /// grow the buffers once on first use and stay grown.
+    pub fn reserve(&mut self, patch_elems: usize, out_elems: usize) {
+        if self.patches.data.len() < patch_elems {
+            self.patches.data.resize(patch_elems, 0.0);
+        }
+        if self.out.data.len() < out_elems {
+            self.out.data.resize(out_elems, 0.0);
+        }
+    }
+
+    /// Current backing capacities (patches, out) — used by the reuse tests
+    /// to prove buffers persist across forwards instead of reallocating.
+    pub fn capacities(&self) -> (usize, usize) {
+        (self.patches.data.capacity(), self.out.data.capacity())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slab_grows_and_reuses() {
+        let slabs = AccSlabs::new(2);
+        slabs.with_slab(0, 16, |s| {
+            assert_eq!(s.len(), 16);
+            s[15] = 3.0;
+        });
+        // Shorter request returns a shorter view of the same slab.
+        slabs.with_slab(0, 4, |s| assert_eq!(s.len(), 4));
+        // Worker ids wrap instead of panicking.
+        slabs.with_slab(5, 8, |s| assert_eq!(s.len(), 8));
+    }
+
+    #[test]
+    fn reserve_is_monotone() {
+        let mut a = ScratchArena::new(1);
+        a.reserve(100, 50);
+        let (p1, o1) = a.capacities();
+        assert!(p1 >= 100 && o1 >= 50);
+        a.reserve(10, 5); // smaller reserve must not shrink
+        let (p2, o2) = a.capacities();
+        assert!(p2 >= p1 && o2 >= o1);
+    }
+}

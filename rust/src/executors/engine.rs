@@ -7,9 +7,11 @@
 //! * [`EngineKind::Rt3d`]     — blocked micro-kernel, dense or sparse plans
 
 use crate::codegen::{self, CompiledConv, ConvKind};
-use crate::executors::{self, gemm, naive};
+use crate::executors::{self, gemm, naive, ScratchArena};
 use crate::model::{Layer, Model};
-use crate::tensor::{Conv3dGeometry, Mat, Tensor5};
+use crate::tensor::{Mat, Tensor5};
+use crate::util::pool::ThreadPool;
+use std::sync::Mutex;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
@@ -43,14 +45,32 @@ pub struct NativeEngine {
     /// When true, record per-layer timings on each run.
     pub profile: std::sync::atomic::AtomicBool,
     timings: std::sync::Mutex<Vec<LayerTiming>>,
+    /// Worker pool for im2col + GEMM (width from `RT3D_THREADS` unless set
+    /// explicitly via [`Self::with_threads`]).
+    pool: ThreadPool,
+    /// Reused im2col/GEMM/accumulator buffers — the forward hot path does
+    /// no heap allocation for them after warm-up. Behind a mutex because
+    /// `forward` takes `&self`; one conv holds it at a time.
+    arena: Mutex<ScratchArena>,
 }
 
 impl NativeEngine {
-    /// Build from a loaded model. `use_sparsity` activates the compacted
-    /// sparse plans (only meaningful for `EngineKind::Rt3d`).
+    /// Build from a loaded model with the thread count from `RT3D_THREADS`
+    /// (default: all cores). `use_sparsity` activates the compacted sparse
+    /// plans (only meaningful for `EngineKind::Rt3d`).
     pub fn new(model: &Model, kind: EngineKind, use_sparsity: bool) -> Self {
+        Self::with_threads(model, kind, use_sparsity, ThreadPool::from_env().threads())
+    }
+
+    /// Build with an explicit executor thread count.
+    pub fn with_threads(
+        model: &Model,
+        kind: EngineKind,
+        use_sparsity: bool,
+        threads: usize,
+    ) -> Self {
         let compiled = codegen::compile_model(model, use_sparsity && kind == EngineKind::Rt3d);
-        let convs = compiled
+        let convs: std::collections::HashMap<String, CompiledConv> = compiled
             .into_iter()
             .map(|c| (c.name.clone(), c))
             .collect();
@@ -61,6 +81,18 @@ impl NativeEngine {
             use_sparsity && kind == EngineKind::Rt3d,
             &mut dense,
         );
+        let pool = ThreadPool::new(threads);
+        let mut arena = ScratchArena::new(pool.threads());
+        // Pre-size to the largest (K, R) / (M, R) footprint across layers
+        // at the native single-clip resolution; larger batches grow the
+        // buffers once on first use.
+        let (mut pmax, mut omax) = (0usize, 0usize);
+        for cc in convs.values() {
+            let r = cc.geom.rows(1);
+            pmax = pmax.max(cc.geom.cols() * r);
+            omax = omax.max(cc.geom.out_ch * r);
+        }
+        arena.reserve(pmax, omax);
         Self {
             kind,
             layers: model.manifest.layers.clone(),
@@ -70,7 +102,20 @@ impl NativeEngine {
             num_classes: model.manifest.num_classes,
             profile: std::sync::atomic::AtomicBool::new(false),
             timings: std::sync::Mutex::new(Vec::new()),
+            pool,
+            arena: Mutex::new(arena),
         }
+    }
+
+    /// Executor worker threads this engine runs with.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Current scratch-arena backing capacities (patches, out) — exposed
+    /// for the buffer-reuse tests.
+    pub fn arena_capacities(&self) -> (usize, usize) {
+        self.arena.lock().unwrap().capacities()
     }
 
     /// Total post-compaction conv FLOPs per clip.
@@ -83,8 +128,16 @@ impl NativeEngine {
     }
 
     /// Forward a batch: input NCDHW, returns (batch, num_classes) logits.
+    /// Clones the input once; the serving path uses [`Self::forward_owned`]
+    /// to avoid even that.
     pub fn forward(&self, x: &Tensor5) -> Mat {
-        let out = self.run_layers(&self.layers, x.clone());
+        self.forward_owned(x.clone())
+    }
+
+    /// Forward consuming the input batch (zero input copies — the
+    /// coordinator's batcher owns the packed batch and hands it over).
+    pub fn forward_owned(&self, x: Tensor5) -> Mat {
+        let out = self.run_layers(&self.layers, x);
         match out {
             Value::Mat(m) => m,
             Value::Tensor(t) => {
@@ -108,15 +161,12 @@ impl NativeEngine {
         }
     }
 
-    fn run_layers(&self, layers: &[Layer], mut x: Tensor5) -> Value {
-        let mut v = Value::Tensor(x.clone());
+    fn run_layers(&self, layers: &[Layer], x: Tensor5) -> Value {
+        // Values move layer-to-layer; no per-layer activation clones.
+        let mut v = Value::Tensor(x);
         for l in layers {
             v = self.run_layer(l, v);
-            if let Value::Tensor(t) = &v {
-                x = t.clone();
-            }
         }
-        let _ = x;
         v
     }
 
@@ -213,11 +263,10 @@ impl NativeEngine {
 
     fn run_conv(&self, cc: &CompiledConv, x: &Tensor5) -> Tensor5 {
         // Rebind geometry to the actual input spatial size (the manifest
-        // geometry is for the native resolution; batch may differ).
-        let g = Conv3dGeometry {
-            in_spatial: [x.dims[2], x.dims[3], x.dims[4]],
-            ..cc.geom
-        };
+        // geometry is for the native resolution; batch may differ). The
+        // binding shares the plan's weights — no per-call clone.
+        let call = cc.bind([x.dims[2], x.dims[3], x.dims[4]]);
+        let g = call.geom;
         match self.kind {
             EngineKind::Naive => {
                 let w = match &cc.kind {
@@ -231,19 +280,24 @@ impl NativeEngine {
                     ConvKind::Dense { wmat } => wmat,
                     _ => panic!("untuned engine requires dense plans"),
                 };
-                let pt = executors::im2col_t(x, &g);
-                let mut out = Mat::zeros(g.out_ch, pt.cols);
-                gemm::matmul_untuned(w, g.out_ch, &pt, &mut out);
-                let cc2 = CompiledConv { geom: g, ..cc.clone() };
-                executors::finish_bias_relu(&cc2, &mut out);
-                executors::mat_to_tensor(&out, x.dims[0], g.out_spatial())
+                let mut arena = self.arena.lock().unwrap();
+                let ScratchArena { patches, out, .. } = &mut *arena;
+                patches.reset(g.cols(), g.rows(x.dims[0]));
+                executors::im2col_t_into_with(x, &g, patches, &self.pool);
+                out.reset(g.out_ch, patches.cols);
+                out.data.fill(0.0);
+                gemm::matmul_untuned(w, g.out_ch, patches, out);
+                executors::finish_bias_relu(cc, out);
+                executors::mat_to_tensor(out, x.dims[0], g.out_spatial())
             }
             EngineKind::Rt3d => {
-                let pt = executors::im2col_t(x, &g);
-                let mut out = Mat::zeros(g.out_ch, pt.cols);
-                let cc2 = CompiledConv { geom: g, ..cc.clone() };
-                executors::run_compiled_conv(&cc2, &pt, &mut out);
-                executors::mat_to_tensor(&out, x.dims[0], g.out_spatial())
+                let mut arena = self.arena.lock().unwrap();
+                let ScratchArena { patches, out, slabs } = &mut *arena;
+                patches.reset(g.cols(), g.rows(x.dims[0]));
+                executors::im2col_t_into_with(x, &g, patches, &self.pool);
+                out.reset(g.out_ch, patches.cols);
+                executors::run_conv_bound(&call, patches, out, &self.pool, slabs);
+                executors::mat_to_tensor(out, x.dims[0], g.out_spatial())
             }
         }
     }

@@ -6,12 +6,21 @@
 //! NEON-tuned generated code. KGS/Vanilla panels run the *same* kernel
 //! over fewer columns, which is why sparse speedup tracks the FLOPs
 //! pruning rate (paper §3, validated by `benches/sparsity_sweep.rs`).
+//!
+//! Parallelism: the dense kernel splits the output into `mr`-row panels
+//! and hands each panel to one pool task. Panels own disjoint output rows
+//! and each panel replays the serial `(kc, rc)` block walk, so the result
+//! is bit-identical to the single-threaded kernel for any thread count
+//! (see `util::pool` for the full invariant).
 
 use crate::codegen::{GemmTile, KgsGroup};
+use crate::executors::arena::AccSlabs;
 use crate::tensor::Mat;
+use crate::util::pool::ThreadPool;
 
 /// MNN-class baseline: im2col GEMM with no blocking or register tiling.
-/// out (M, R) += w (M, K) * patches_t (K, R).
+/// out (M, R) += w (M, K) * patches_t (K, R). Deliberately single-threaded
+/// — it is the "right algorithm, no tuning" comparison point.
 pub fn matmul_untuned(wmat: &[f32], m: usize, patches_t: &Mat, out: &mut Mat) {
     let k = patches_t.rows;
     let r = patches_t.cols;
@@ -28,44 +37,78 @@ pub fn matmul_untuned(wmat: &[f32], m: usize, patches_t: &Mat, out: &mut Mat) {
     }
 }
 
+/// Register-blocked dense GEMM on the process-global pool/slabs.
+/// See [`gemm_dense_with`] for the explicit-pool variant the engine uses.
+pub fn gemm_dense(wmat: &[f32], m: usize, patches_t: &Mat, out: &mut Mat, tile: GemmTile) {
+    gemm_dense_with(
+        wmat,
+        m,
+        patches_t,
+        out,
+        tile,
+        ThreadPool::global(),
+        AccSlabs::global(),
+    );
+}
+
 /// Register-blocked dense GEMM: processes `tile.mr` output rows at once,
 /// streaming K in `tile.kc` slices and R in `tile.rc` spans so the active
 /// patch rows stay in L1/L2 (the paper's cache-tiled generated code).
-pub fn gemm_dense(wmat: &[f32], m: usize, patches_t: &Mat, out: &mut Mat, tile: GemmTile) {
+/// Each `mr`-row panel is one pool task writing its own output rows; the
+/// accumulator comes from the worker's slab (no per-call allocation).
+pub fn gemm_dense_with(
+    wmat: &[f32],
+    m: usize,
+    patches_t: &Mat,
+    out: &mut Mat,
+    tile: GemmTile,
+    pool: &ThreadPool,
+    slabs: &AccSlabs,
+) {
     let k = patches_t.rows;
     let r = patches_t.cols;
     assert_eq!(wmat.len(), m * k);
-    let mr = tile.mr.max(1);
-    // One scratch accumulator reused by every micro-panel (perf: §Perf L3-1 —
-    // allocating it inside the panel cost ~15% on c3d-sized GEMMs).
-    let mut scratch = vec![0.0f32; 8.max(mr) * tile.rc.max(1).min(r.max(1))];
-    for k0 in (0..k).step_by(tile.kc.max(1)) {
-        let k1 = (k0 + tile.kc).min(k);
-        for r0 in (0..r).step_by(tile.rc.max(1)) {
-            let r1 = (r0 + tile.rc).min(r);
-            let mut m0 = 0;
-            // Main mr-row panels.
-            while m0 + mr <= m {
-                micro_panel_dyn(wmat, k, patches_t, out, m0, mr, k0, k1, r0, r1, &mut scratch);
-                m0 += mr;
-            }
-            if m0 < m {
-                micro_panel_dyn(wmat, k, patches_t, out, m0, m - m0, k0, k1, r0, r1, &mut scratch);
-            }
-        }
+    assert_eq!(out.cols, r);
+    if m == 0 || r == 0 {
+        return;
     }
+    let mr = tile.mr.max(1);
+    let cols = out.cols;
+    // Slab sized for the widest micro-panel (ragged decomposition uses
+    // steps up to 8 rows) times one cache block of columns.
+    let scratch_len = 8.max(mr) * tile.rc.max(1).min(r);
+    pool.run_chunks(&mut out.data[..m * cols], mr * cols, |panel, worker, chunk| {
+        let m0 = panel * mr;
+        let rows = chunk.len() / cols;
+        slabs.with_slab(worker, scratch_len, |scratch| {
+            for k0 in (0..k).step_by(tile.kc.max(1)) {
+                let k1 = (k0 + tile.kc).min(k);
+                for r0 in (0..r).step_by(tile.rc.max(1)) {
+                    let r1 = (r0 + tile.rc).min(r);
+                    micro_panel_dyn(
+                        wmat, k, patches_t, chunk, cols, m0, 0, rows, k0, k1, r0,
+                        r1, scratch,
+                    );
+                }
+            }
+        });
+    });
 }
 
 /// mr-row micro-panel with the common cases specialized so the compiler
-/// keeps the accumulant rows in registers / vector lanes.
+/// keeps the accumulant rows in registers / vector lanes. `chunk` is the
+/// panel's own output rows; `m0` is the weight row of `chunk` row 0 and
+/// `local0` the first chunk row this call covers.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn micro_panel_dyn(
     wmat: &[f32],
     k: usize,
     patches_t: &Mat,
-    out: &mut Mat,
+    chunk: &mut [f32],
+    cols: usize,
     m0: usize,
+    local0: usize,
     rows: usize,
     k0: usize,
     k1: usize,
@@ -74,17 +117,29 @@ fn micro_panel_dyn(
     scratch: &mut [f32],
 ) {
     match rows {
-        4 => micro_panel::<4>(wmat, k, patches_t, out, m0, k0, k1, r0, r1, scratch),
-        8 => micro_panel::<8>(wmat, k, patches_t, out, m0, k0, k1, r0, r1, scratch),
-        2 => micro_panel::<2>(wmat, k, patches_t, out, m0, k0, k1, r0, r1, scratch),
-        1 => micro_panel::<1>(wmat, k, patches_t, out, m0, k0, k1, r0, r1, scratch),
+        4 => micro_panel::<4>(wmat, k, patches_t, chunk, cols, m0, local0, k0, k1, r0, r1, scratch),
+        8 => micro_panel::<8>(wmat, k, patches_t, chunk, cols, m0, local0, k0, k1, r0, r1, scratch),
+        2 => micro_panel::<2>(wmat, k, patches_t, chunk, cols, m0, local0, k0, k1, r0, r1, scratch),
+        1 => micro_panel::<1>(wmat, k, patches_t, chunk, cols, m0, local0, k0, k1, r0, r1, scratch),
         n => {
             // Ragged edge: decompose into supported sizes.
             let mut done = 0;
             for step in [8usize, 4, 2, 1] {
                 while n - done >= step {
                     micro_panel_dyn(
-                        wmat, k, patches_t, out, m0 + done, step, k0, k1, r0, r1, scratch,
+                        wmat,
+                        k,
+                        patches_t,
+                        chunk,
+                        cols,
+                        m0,
+                        local0 + done,
+                        step,
+                        k0,
+                        k1,
+                        r0,
+                        r1,
+                        scratch,
                     );
                     done += step;
                 }
@@ -99,15 +154,16 @@ fn micro_panel<const MR: usize>(
     wmat: &[f32],
     k: usize,
     patches_t: &Mat,
-    out: &mut Mat,
+    chunk: &mut [f32],
+    cols: usize,
     m0: usize,
+    local0: usize,
     k0: usize,
     k1: usize,
     r0: usize,
     r1: usize,
     scratch: &mut [f32],
 ) {
-    let cols = out.cols;
     let span = r1 - r0;
     let acc = &mut scratch[..MR * span];
     acc.fill(0.0);
@@ -115,7 +171,7 @@ fn micro_panel<const MR: usize>(
         let prow = &patches_t.row(ki)[r0..r1];
         let mut ws = [0.0f32; MR];
         for (i, w) in ws.iter_mut().enumerate() {
-            *w = wmat[(m0 + i) * k + ki];
+            *w = wmat[(m0 + local0 + i) * k + ki];
         }
         if ws.iter().all(|&w| w == 0.0) {
             continue;
@@ -132,23 +188,55 @@ fn micro_panel<const MR: usize>(
         }
     }
     for i in 0..MR {
-        let orow = &mut out.data[(m0 + i) * cols + r0..(m0 + i) * cols + r1];
+        let row = local0 + i;
+        let orow = &mut chunk[row * cols + r0..row * cols + r1];
         for (ov, av) in orow.iter_mut().zip(&acc[i * span..(i + 1) * span]) {
             *ov += av;
         }
     }
 }
 
-/// Compacted sparse panel (KGS or Vanilla kept-group): identical inner loop
-/// to the dense kernel, but columns come from the panel's gather list.
+/// Slab length one compacted panel needs: its row count times one `rc`
+/// block of columns.
+pub fn panel_scratch_len(m_eff: usize, tile: GemmTile, r: usize) -> usize {
+    m_eff.max(1) * tile.rc.max(1).min(r.max(1))
+}
+
+/// Compacted sparse panel (KGS or Vanilla kept-group) on the caller's own
+/// output matrix, using a global slab. The engine path instead buckets
+/// panels by output-row range and calls [`gemm_panel_core`] from pool
+/// tasks (see `executors::run_conv_bound`).
 pub fn gemm_panel(grp: &KgsGroup, patches_t: &Mat, out: &mut Mat, tile: GemmTile) {
+    let cols = out.cols;
+    let len = panel_scratch_len(grp.m_eff, tile, patches_t.cols);
+    AccSlabs::global().with_slab(0, len, |scratch| {
+        gemm_panel_core(grp, patches_t, &mut out.data, cols, 0, tile, scratch);
+    });
+}
+
+/// Compacted sparse panel: identical inner loop to the dense kernel, but
+/// columns come from the panel's gather list. `chunk` is a row range of
+/// the output starting at absolute row `row0`; `scratch` is the caller's
+/// accumulator slab (hoisted out of the `r0` loop — it used to be
+/// re-allocated per block, ~15% of panel time on c3d-sized layers).
+pub(crate) fn gemm_panel_core(
+    grp: &KgsGroup,
+    patches_t: &Mat,
+    chunk: &mut [f32],
+    cols_out: usize,
+    row0: usize,
+    tile: GemmTile,
+    scratch: &mut [f32],
+) {
     let ncols = grp.cols.len();
     let r = patches_t.cols;
-    let cols_out = out.cols;
+    debug_assert!(grp.m0 >= row0, "panel above its bucket");
+    let base = grp.m0 - row0;
     for r0 in (0..r).step_by(tile.rc.max(1)) {
         let r1 = (r0 + tile.rc).min(r);
         let span = r1 - r0;
-        let mut acc = vec![0.0f32; grp.m_eff * span];
+        let acc = &mut scratch[..grp.m_eff * span];
+        acc.fill(0.0);
         for (j, &src_row) in grp.cols.iter().enumerate() {
             let prow = &patches_t.row(src_row as usize)[r0..r1];
             for i in 0..grp.m_eff {
@@ -163,8 +251,8 @@ pub fn gemm_panel(grp: &KgsGroup, patches_t: &Mat, out: &mut Mat, tile: GemmTile
             }
         }
         for i in 0..grp.m_eff {
-            let m = grp.m0 + i;
-            let orow = &mut out.data[m * cols_out + r0..m * cols_out + r1];
+            let m = base + i;
+            let orow = &mut chunk[m * cols_out + r0..m * cols_out + r1];
             for (ov, av) in orow.iter_mut().zip(&acc[i * span..(i + 1) * span]) {
                 *ov += av;
             }
@@ -172,8 +260,7 @@ pub fn gemm_panel(grp: &KgsGroup, patches_t: &Mat, out: &mut Mat, tile: GemmTile
     }
 }
 
-/// Filter-compacted GEMM: dense kernel over surviving rows, scattered back
-/// to their original output channels.
+/// Filter-compacted GEMM on the process-global pool/slabs.
 pub fn gemm_filter(
     rows: &[u32],
     wmat: &[f32],
@@ -181,8 +268,34 @@ pub fn gemm_filter(
     out: &mut Mat,
     tile: GemmTile,
 ) {
-    let mut compact = Mat::zeros(rows.len(), patches_t.cols);
-    gemm_dense(wmat, rows.len(), patches_t, &mut compact, tile);
+    gemm_filter_with(
+        rows,
+        wmat,
+        patches_t,
+        out,
+        tile,
+        ThreadPool::global(),
+        AccSlabs::global(),
+    );
+}
+
+/// Filter-compacted GEMM: dense kernel over surviving rows (parallel),
+/// scattered back to their original output channels. The compaction
+/// buffer lives in the slabs and is reused across calls.
+pub fn gemm_filter_with(
+    rows: &[u32],
+    wmat: &[f32],
+    patches_t: &Mat,
+    out: &mut Mat,
+    tile: GemmTile,
+    pool: &ThreadPool,
+    slabs: &AccSlabs,
+) {
+    let r = patches_t.cols;
+    let mut compact = slabs.filter_buf();
+    compact.reset(rows.len(), r);
+    compact.data.fill(0.0);
+    gemm_dense_with(wmat, rows.len(), patches_t, &mut compact, tile, pool, slabs);
     for (i, &m) in rows.iter().enumerate() {
         out.row_mut(m as usize).copy_from_slice(compact.row(i));
     }
@@ -222,6 +335,28 @@ mod tests {
                 out.max_abs_diff(&dense_oracle(&w.data, 13, &p)) < 1e-3,
                 "tile {tile:?}"
             );
+        }
+    }
+
+    #[test]
+    fn blocked_bit_identical_across_thread_counts() {
+        // Ragged M (not divisible by mr) and R both larger and smaller
+        // than the worker count.
+        for (m, kdim, r) in [(13usize, 48usize, 100usize), (13, 48, 3), (5, 16, 1)] {
+            let w = Mat::random(m, kdim, 21);
+            let p = Mat::random(kdim, r, 22);
+            let tile = GemmTile { mr: 4, rc: 32, kc: 16 };
+            let mut serial = Mat::zeros(m, r);
+            gemm_dense_with(
+                &w.data, m, &p, &mut serial, tile,
+                &ThreadPool::new(1), &AccSlabs::new(1),
+            );
+            let mut parallel = Mat::zeros(m, r);
+            gemm_dense_with(
+                &w.data, m, &p, &mut parallel, tile,
+                &ThreadPool::new(4), &AccSlabs::new(4),
+            );
+            assert_eq!(serial.data, parallel.data, "m={m} r={r}");
         }
     }
 

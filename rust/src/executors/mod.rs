@@ -9,16 +9,21 @@
 //!   positions; the *same* micro-kernel executes dense, KGS-compacted,
 //!   Vanilla-compacted and Filter-compacted panels, which is exactly the
 //!   paper's argument for why KGS keeps full SIMD utilization.
-//! * [`engine`] — whole-model interpreter over the manifest IR.
+//! * [`arena`] — pre-sized scratch buffers (allocation-free hot path).
+//! * [`engine`] — whole-model interpreter over the manifest IR, running
+//!   im2col and GEMM on its own thread pool (`RT3D_THREADS`).
 
+pub mod arena;
 pub mod engine;
 pub mod gemm;
 pub mod naive;
 
+pub use arena::{AccSlabs, ScratchArena};
 pub use engine::{EngineKind, LayerTiming, NativeEngine};
 
-use crate::codegen::{CompiledConv, ConvKind};
+use crate::codegen::{CompiledConv, ConvCall, ConvKind, GemmTile, KgsGroup};
 use crate::tensor::{Mat, Tensor5};
+use crate::util::pool::ThreadPool;
 
 /// im2col producing the *transposed* patch matrix (K rows, R cols): row
 /// `c*Ks + loc` holds the activation for kernel tap `loc` of channel `c`
@@ -30,11 +35,24 @@ pub fn im2col_t(x: &Tensor5, g: &crate::tensor::Conv3dGeometry) -> Mat {
     out
 }
 
-/// Preallocated-buffer variant used by the serving hot path.
+/// Preallocated-buffer variant on the process-global pool.
 pub fn im2col_t_into(
     x: &Tensor5,
     g: &crate::tensor::Conv3dGeometry,
     out: &mut Mat,
+) {
+    im2col_t_into_with(x, g, out, ThreadPool::global());
+}
+
+/// Preallocated-buffer im2col used by the serving hot path. Parallel over
+/// the `(channel, tap)` rows of the patch matrix: each row is written
+/// (zero-fill included) by exactly one pool task, so the result is
+/// bit-identical for any thread count.
+pub fn im2col_t_into_with(
+    x: &Tensor5,
+    g: &crate::tensor::Conv3dGeometry,
+    out: &mut Mat,
+    pool: &ThreadPool,
 ) {
     let [b, c, di, hi, wi] = x.dims;
     debug_assert_eq!(c, g.in_ch);
@@ -44,52 +62,62 @@ pub fn im2col_t_into(
     let [od, oh, ow] = g.out_spatial();
     let r_total = b * od * oh * ow;
     assert_eq!((out.rows, out.cols), (g.cols(), r_total));
-    out.data.fill(0.0);
+    if r_total == 0 {
+        return;
+    }
     let khw = kh * kw;
     let ks = kd * khw;
-    // For each (c, tap) row: walk output positions; inner x-loop contiguous
-    // in both src (input row) and dst (patch row).
-    for ci in 0..c {
-        for dz in 0..kd {
-            for dy in 0..kh {
-                for dx in 0..kw {
-                    let row_i = ci * ks + dz * khw + dy * kw + dx;
-                    let row = out.row_mut(row_i);
-                    for n in 0..b {
-                        for zo in 0..od {
-                            let z = (zo * sd + dz) as isize - pd as isize;
-                            if z < 0 || z >= di as isize {
+    // A handful of (c, tap) rows per task: enough tasks for load balance
+    // without a queue entry (and pop) per row. Row content is independent
+    // of the chunking, so this stays bit-identical for any thread count.
+    let rows_per_task = out.rows.div_ceil((pool.threads() * 4).max(1)).max(1);
+    pool.run_chunks(
+        &mut out.data,
+        rows_per_task * r_total,
+        |chunk_i, _worker, chunk| {
+            let row0 = chunk_i * rows_per_task;
+            for (j, row) in chunk.chunks_mut(r_total).enumerate() {
+                let row_i = row0 + j;
+                // Walk output positions; inner x-loop contiguous in both
+                // src (input row) and dst (patch row).
+                row.fill(0.0);
+                let ci = row_i / ks;
+                let loc = row_i % ks;
+                let dz = loc / khw;
+                let dy = (loc % khw) / kw;
+                let dx = loc % kw;
+                for n in 0..b {
+                    for zo in 0..od {
+                        let z = (zo * sd + dz) as isize - pd as isize;
+                        if z < 0 || z >= di as isize {
+                            continue;
+                        }
+                        for yo in 0..oh {
+                            let y = (yo * sh + dy) as isize - ph as isize;
+                            if y < 0 || y >= hi as isize {
                                 continue;
                             }
-                            for yo in 0..oh {
-                                let y = (yo * sh + dy) as isize - ph as isize;
-                                if y < 0 || y >= hi as isize {
-                                    continue;
+                            let rbase = ((n * od + zo) * oh + yo) * ow;
+                            let src = x.idx(n, ci, z as usize, y as usize, 0);
+                            if sw == 1 {
+                                // Contiguous span copy.
+                                let x0 = dx as isize - pw as isize;
+                                let lo = (-x0).max(0) as usize;
+                                let hi_x = ((wi as isize - x0).min(ow as isize))
+                                    .max(0)
+                                    as usize;
+                                if lo < hi_x {
+                                    let s0 = (src as isize + x0) as usize;
+                                    row[rbase + lo..rbase + hi_x].copy_from_slice(
+                                        &x.data[s0 + lo..s0 + hi_x],
+                                    );
                                 }
-                                let rbase = ((n * od + zo) * oh + yo) * ow;
-                                let src = x.idx(n, ci, z as usize, y as usize, 0);
-                                if sw == 1 {
-                                    // Contiguous span copy.
-                                    let x0 = dx as isize - pw as isize;
-                                    let lo = (-x0).max(0) as usize;
-                                    let hi_x =
-                                        ((wi as isize - x0).min(ow as isize)).max(0)
-                                            as usize;
-                                    if lo < hi_x {
-                                        let s0 = (src as isize + x0) as usize;
-                                        row[rbase + lo..rbase + hi_x]
-                                            .copy_from_slice(
-                                                &x.data[s0 + lo..s0 + hi_x],
-                                            );
-                                    }
-                                } else {
-                                    for xo in 0..ow {
-                                        let xx = (xo * sw + dx) as isize
-                                            - pw as isize;
-                                        if xx >= 0 && xx < wi as isize {
-                                            row[rbase + xo] =
-                                                x.data[src + xx as usize];
-                                        }
+                            } else {
+                                for xo in 0..ow {
+                                    let xx =
+                                        (xo * sw + dx) as isize - pw as isize;
+                                    if xx >= 0 && xx < wi as isize {
+                                        row[rbase + xo] = x.data[src + xx as usize];
                                     }
                                 }
                             }
@@ -97,37 +125,122 @@ pub fn im2col_t_into(
                     }
                 }
             }
-        }
-    }
+        },
+    );
 }
 
-/// Execute one compiled conv over a transposed patch matrix.
-/// `out` is (out_ch, R) row-major; bias + optional ReLU applied.
+/// Execute one compiled conv at its native geometry on the process-global
+/// pool/slabs (tuner/bench/test path). The engine instead binds a per-call
+/// geometry and uses its own pool — see [`run_conv_bound`].
 pub fn run_compiled_conv(cc: &CompiledConv, patches_t: &Mat, out: &mut Mat) {
+    let call = cc.bind(cc.geom.in_spatial);
+    run_conv_bound(&call, patches_t, out, ThreadPool::global(), AccSlabs::global());
+}
+
+/// Execute one geometry-bound conv over a transposed patch matrix.
+/// `out` is (out_ch, R) row-major; bias + optional ReLU applied.
+///
+/// Parallel structure: Dense plans split into `mr`-row panels inside
+/// [`gemm::gemm_dense_with`]; KGS/Vanilla plans are bucketed by their
+/// filter-group row range and each bucket runs as one task (groups within
+/// a bucket keep the serial q-order, so accumulation order per output
+/// element is unchanged — bit-identical across thread counts).
+pub fn run_conv_bound(
+    call: &ConvCall<'_>,
+    patches_t: &Mat,
+    out: &mut Mat,
+    pool: &ThreadPool,
+    slabs: &AccSlabs,
+) {
+    let cc = call.cc;
     let r = patches_t.cols;
-    assert_eq!((out.rows, out.cols), (cc.geom.out_ch, r));
+    assert_eq!((out.rows, out.cols), (call.geom.out_ch, r));
     out.data.fill(0.0);
+    let tile = call.tile;
     match &cc.kind {
         ConvKind::Dense { wmat } => {
-            gemm::gemm_dense(wmat, cc.geom.out_ch, patches_t, out, cc.tile);
+            gemm::gemm_dense_with(
+                wmat,
+                call.geom.out_ch,
+                patches_t,
+                out,
+                tile,
+                pool,
+                slabs,
+            );
         }
         ConvKind::Kgs { groups } => {
-            for grp in groups {
-                gemm::gemm_panel(grp, patches_t, out, cc.tile);
-            }
+            let refs: Vec<&KgsGroup> = groups.iter().collect();
+            run_panel_buckets(&refs, patches_t, out, tile, pool, slabs);
         }
         ConvKind::Vanilla { rows } => {
-            for row in rows {
-                for grp in &row.groups {
-                    gemm::gemm_panel(grp, patches_t, out, cc.tile);
-                }
-            }
+            // Flatten preserves (p, q) order; buckets re-split by p.
+            let refs: Vec<&KgsGroup> =
+                rows.iter().flat_map(|vr| vr.groups.iter()).collect();
+            run_panel_buckets(&refs, patches_t, out, tile, pool, slabs);
         }
         ConvKind::Filter { rows, wmat } => {
-            gemm::gemm_filter(rows, wmat, patches_t, out, cc.tile);
+            gemm::gemm_filter_with(rows, wmat, patches_t, out, tile, pool, slabs);
         }
     }
     finish_bias_relu(cc, out);
+}
+
+/// Run compacted panels bucketed into disjoint output-row ranges, one pool
+/// task per bucket. Panels sharing a filter-group row (same `m0`) land in
+/// the same bucket in their original order.
+fn run_panel_buckets(
+    groups: &[&KgsGroup],
+    patches_t: &Mat,
+    out: &mut Mat,
+    tile: GemmTile,
+    pool: &ThreadPool,
+    slabs: &AccSlabs,
+) {
+    if groups.is_empty() || out.cols == 0 {
+        return;
+    }
+    let cols = out.cols;
+    let m_total = out.rows;
+    // Codegen emits groups p-major (non-decreasing m0), so a single linear
+    // pass builds the row partition — no sort, and only O(filter groups)
+    // bookkeeping per call. Within a bucket the serial q-order is kept.
+    let mut starts: Vec<usize> = vec![0];
+    let mut buckets: Vec<Vec<&KgsGroup>> = vec![Vec::new()];
+    let mut last_m0 = 0usize;
+    for &grp in groups {
+        debug_assert!(
+            grp.m0 >= last_m0,
+            "codegen must emit panels with non-decreasing m0"
+        );
+        if grp.m0 > last_m0 {
+            starts.push(grp.m0);
+            buckets.push(Vec::new());
+            last_m0 = grp.m0;
+        }
+        buckets.last_mut().unwrap().push(grp);
+    }
+    let lens: Vec<usize> = (0..starts.len())
+        .map(|j| {
+            let end = if j + 1 < starts.len() { starts[j + 1] } else { m_total };
+            (end - starts[j]) * cols
+        })
+        .collect();
+    let max_meff = groups.iter().map(|g| g.m_eff).max().unwrap_or(1);
+    let scratch_len = gemm::panel_scratch_len(max_meff, tile, patches_t.cols);
+    pool.run_parts(&mut out.data, &lens, |j, worker, chunk| {
+        slabs.with_slab(worker, scratch_len, |scratch| {
+            for grp in &buckets[j] {
+                debug_assert!(
+                    (grp.m0 - starts[j] + grp.m_eff) * cols <= chunk.len(),
+                    "panel escapes its bucket"
+                );
+                gemm::gemm_panel_core(
+                    grp, patches_t, chunk, cols, starts[j], tile, scratch,
+                );
+            }
+        });
+    });
 }
 
 /// Add bias rows and apply ReLU in place.

@@ -9,8 +9,9 @@
 //!
 //! This crate is the deployment half of the three-layer stack:
 //!
-//! * [`runtime`] — PJRT client loading the AOT HLO artifacts produced by
+//! * `runtime` — PJRT client loading the AOT HLO artifacts produced by
 //!   `python/compile/aot.py` (Layer-2 JAX model + Layer-1 Pallas kernels).
+//!   Compiled only with `--features pjrt` (needs the external `xla` crate).
 //! * [`tensor`] — NCDHW tensor / im2col / packing substrate.
 //! * [`model`] — artifact manifests: layer IR, weight pool, masks.
 //! * [`codegen`] — the paper's "compiler" contribution: sparsity-pattern →
@@ -28,10 +29,11 @@ pub mod coordinator;
 pub mod device;
 pub mod executors;
 pub mod model;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tensor;
 pub mod util;
 pub mod workload;
 
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = crate::util::error::Result<T>;

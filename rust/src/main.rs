@@ -18,10 +18,15 @@ rt3d — RT3D (AAAI'21) reproduction runtime
 USAGE: rt3d [--artifacts DIR] <serve|bench|tune|inspect> [options]
 
   serve    --model c3d --engine rt3d|naive|untuned [--sparse] \
-           [--requests 32] [--max-batch 4] [--pjrt] [--variant dense_xla_b1]
+           [--requests 32] [--max-batch 4] [--threads N] \
+           [--pjrt] [--variant dense_xla_b1]
   bench    --table 2|3|cache
   tune     --model c3d [--reps 3]
   inspect  --model c3d
+
+Executor threads default to RT3D_THREADS (else all cores); --threads
+overrides per invocation. The --pjrt path needs a build with
+`--features pjrt`.
 ";
 
 fn engine_kind(s: &str) -> EngineKind {
@@ -43,6 +48,7 @@ fn main() -> rt3d::Result<()> {
             args.flag("sparse"),
             args.get_usize("requests", 32),
             args.get_usize("max-batch", 4),
+            args.get_usize("threads", 0),
             args.flag("pjrt"),
             &args.get_or("variant", "dense_xla_b1"),
         ),
@@ -50,7 +56,7 @@ fn main() -> rt3d::Result<()> {
             "2" => rt3d_bench::table2(&artifacts),
             "3" => rt3d_bench::table3(&artifacts),
             "cache" => rt3d_bench::cache_table(&artifacts),
-            other => Err(anyhow::anyhow!("unknown table {other}")),
+            other => Err(rt3d::anyhow!("unknown table {other}")),
         },
         Some("tune") => tune(
             &artifacts,
@@ -73,17 +79,20 @@ fn serve(
     sparse: bool,
     requests: usize,
     max_batch: usize,
+    threads: usize,
     pjrt: bool,
     variant: &str,
 ) -> rt3d::Result<()> {
     let model = Model::load(artifacts, model_name)?;
     let in_dims = model.manifest.input;
     let eng: Arc<dyn rt3d::coordinator::Engine> = if pjrt {
-        Arc::new(rt3d_pjrt::PjrtEngine::new(&model, variant)?)
+        pjrt_engine(&model, variant)?
+    } else if threads > 0 {
+        Arc::new(NativeEngine::with_threads(&model, engine_kind(engine), sparse, threads))
     } else {
         Arc::new(NativeEngine::new(&model, engine_kind(engine), sparse))
     };
-    println!("engine: {}", eng.name());
+    println!("engine: {} ({} executor threads)", eng.name(), eng.threads());
     let cfg = ServerConfig {
         batcher: rt3d::coordinator::BatcherConfig {
             max_batch,
@@ -323,7 +332,28 @@ mod rt3d_bench {
     }
 }
 
+/// Construct the PJRT-backed engine, or explain how to enable it.
+#[cfg(feature = "pjrt")]
+fn pjrt_engine(
+    model: &Model,
+    variant: &str,
+) -> rt3d::Result<Arc<dyn rt3d::coordinator::Engine>> {
+    Ok(Arc::new(rt3d_pjrt::PjrtEngine::new(model, variant)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_engine(
+    _model: &Model,
+    _variant: &str,
+) -> rt3d::Result<Arc<dyn rt3d::coordinator::Engine>> {
+    Err(rt3d::anyhow!(
+        "this binary was built without the `pjrt` feature; \
+         rebuild with `cargo build --features pjrt` (requires the xla crate)"
+    ))
+}
+
 /// PJRT-backed serving engine (three-layer path).
+#[cfg(feature = "pjrt")]
 mod rt3d_pjrt {
     use rt3d::coordinator::Engine;
     use rt3d::model::Model;
@@ -342,7 +372,7 @@ mod rt3d_pjrt {
             let rt = Runtime::cpu()?;
             let path = model
                 .hlo_path(variant)
-                .ok_or_else(|| anyhow::anyhow!("no hlo variant {variant}"))?;
+                .ok_or_else(|| rt3d::anyhow!("no hlo variant {variant}"))?;
             // Batch encoded in the variant key suffix "_b<N>".
             let batch: usize = variant
                 .rsplit("_b")
@@ -361,12 +391,12 @@ mod rt3d_pjrt {
     }
 
     impl Engine for PjrtEngine {
-        fn infer(&self, batch: &Tensor5) -> Mat {
+        fn infer(&self, batch: Tensor5) -> Mat {
             let want = self.exe.input_dims[0];
             let have = batch.dims[0];
             // Pad the batch up to the compiled size if needed.
             let n = batch.len() / have;
-            let mut data = batch.data.clone();
+            let mut data = batch.data;
             data.resize(want * n, 0.0);
             let logits = self.exe.run(&data).expect("pjrt execution failed");
             let per = self.classes;

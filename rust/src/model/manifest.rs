@@ -1,8 +1,9 @@
 //! Manifest types for `<model>.manifest.json` (schema in python export.py),
 //! parsed with the in-tree JSON parser (offline build: no serde).
 
+use crate::bail;
+use crate::util::error::Result;
 use crate::util::Json;
-use anyhow::{bail, Result};
 use std::collections::HashMap;
 
 /// Reference into the model's tensor pool (`<model>.bin`).

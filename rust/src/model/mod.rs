@@ -7,11 +7,13 @@
 
 mod manifest;
 mod pool;
+mod synthetic;
 
 pub use manifest::{
     ConvLayer, DenseLayer, Layer, Manifest, SparsityInfo, TensorRef, WeightRefs,
 };
 pub use pool::TensorPool;
+pub use synthetic::SyntheticC3d;
 
 use crate::tensor::Conv3dGeometry;
 use crate::Result;

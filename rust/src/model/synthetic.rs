@@ -1,0 +1,213 @@
+//! In-memory synthetic models: a C3D-shaped conv stack with deterministic
+//! weights, KGS masks and an in-memory tensor pool, so benches, tests and
+//! the serving demo run on a clean machine without `make artifacts`.
+//! Shapes follow C3D's conv/pool rhythm (AAAI'21 Table 2 workload) at a
+//! configurable width/resolution.
+
+use super::{
+    ConvLayer, DenseLayer, Layer, Manifest, Model, SparsityInfo, TensorPool,
+    TensorRef, WeightRefs,
+};
+use crate::tensor::Tensor5;
+use std::collections::HashMap;
+
+/// Configuration for [`Model::synthetic_c3d`].
+#[derive(Debug, Clone)]
+pub struct SyntheticC3d {
+    /// Channel widths of the four conv stages (C3D: 64/128/256/512-ish;
+    /// the default is scaled down to keep benches minutes-free).
+    pub widths: [usize; 4],
+    /// Input clip frames (D).
+    pub frames: usize,
+    /// Input clip height/width.
+    pub size: usize,
+    pub classes: usize,
+    /// KGS kept kernel locations of 27 per (4x4) group — 9 ≈ the paper's
+    /// 3x pruning rate on 3x3x3 kernels.
+    pub keep_locs: usize,
+}
+
+impl Default for SyntheticC3d {
+    fn default() -> Self {
+        Self { widths: [16, 32, 64, 64], frames: 16, size: 32, classes: 8, keep_locs: 9 }
+    }
+}
+
+impl SyntheticC3d {
+    /// Small enough for unit tests (fractions of a second per forward).
+    pub fn tiny() -> Self {
+        Self { widths: [4, 8, 8, 8], frames: 4, size: 8, classes: 8, keep_locs: 9 }
+    }
+}
+
+/// Accumulates the in-memory `<model>.bin` byte pool.
+struct PoolBuilder {
+    bytes: Vec<u8>,
+}
+
+impl PoolBuilder {
+    fn f32s(&mut self, shape: Vec<usize>, data: &[f32]) -> TensorRef {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        let offset = self.bytes.len();
+        for v in data {
+            self.bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        TensorRef { offset, shape, dtype: "f32".into() }
+    }
+
+    fn mask(&mut self, shape: Vec<usize>, bits: &[bool]) -> TensorRef {
+        assert_eq!(shape.iter().product::<usize>(), bits.len());
+        let offset = self.bytes.len();
+        self.bytes.extend(bits.iter().map(|&b| b as u8));
+        TensorRef { offset, shape, dtype: "u8".into() }
+    }
+}
+
+fn conv(
+    pb: &mut PoolBuilder,
+    name: &str,
+    cin: usize,
+    cout: usize,
+    keep_locs: usize,
+    seed: u64,
+) -> Layer {
+    let w = Tensor5::random([cout, cin, 3, 3, 3], seed).data;
+    let b = Tensor5::random([1, 1, 1, 1, cout], seed ^ 0xB1A5).data;
+    let weights = WeightRefs {
+        w: pb.f32s(vec![cout, cin, 3, 3, 3], &w),
+        b: pb.f32s(vec![cout], &b),
+    };
+    // KGS mask over (4x4) kernel groups: keep `keep_locs` of 27 taps per
+    // group, spread deterministically (gcd(7, 27) = 1 → distinct).
+    let (g_m, g_n, ks) = (4usize, 4usize, 27usize);
+    let (pp, qq) = (cout.div_ceil(g_m), cin.div_ceil(g_n));
+    let mut mask = vec![false; pp * qq * ks];
+    for g in 0..pp * qq {
+        for i in 0..keep_locs.min(ks) {
+            mask[g * ks + (i * 7 + g) % ks] = true;
+        }
+    }
+    let unit_mask = Some(pb.mask(vec![pp, qq, ks], &mask));
+    Layer::Conv3d(ConvLayer {
+        name: name.into(),
+        in_ch: cin,
+        out_ch: cout,
+        kernel: [3, 3, 3],
+        stride: [1, 1, 1],
+        padding: [1, 1, 1],
+        relu: true,
+        weights,
+        weights_sparse: None,
+        unit_mask,
+    })
+}
+
+fn dense(
+    pb: &mut PoolBuilder,
+    name: &str,
+    din: usize,
+    dout: usize,
+    relu: bool,
+    seed: u64,
+) -> Layer {
+    let w = Tensor5::random([1, 1, 1, din, dout], seed).data;
+    let b = Tensor5::random([1, 1, 1, 1, dout], seed ^ 0xB1A5).data;
+    Layer::Dense(DenseLayer {
+        name: name.into(),
+        in_dim: din,
+        out_dim: dout,
+        relu,
+        weights: WeightRefs {
+            w: pb.f32s(vec![din, dout], &w),
+            b: pb.f32s(vec![dout], &b),
+        },
+        weights_sparse: None,
+    })
+}
+
+impl Model {
+    /// Build a C3D-shaped model entirely in memory (no artifact files).
+    /// Deterministic for a given config, so engines built from the same
+    /// config produce bit-identical logits.
+    pub fn synthetic_c3d(cfg: SyntheticC3d) -> Model {
+        let [w1, w2, w3, w4] = cfg.widths;
+        let mut pb = PoolBuilder { bytes: Vec::new() };
+        let layers = vec![
+            conv(&mut pb, "conv1", 3, w1, cfg.keep_locs, 11),
+            Layer::MaxPool3d { kernel: [1, 2, 2], stride: [1, 2, 2] },
+            conv(&mut pb, "conv2", w1, w2, cfg.keep_locs, 12),
+            Layer::MaxPool3d { kernel: [2, 2, 2], stride: [2, 2, 2] },
+            conv(&mut pb, "conv3a", w2, w3, cfg.keep_locs, 13),
+            conv(&mut pb, "conv3b", w3, w3, cfg.keep_locs, 14),
+            Layer::MaxPool3d { kernel: [2, 2, 2], stride: [2, 2, 2] },
+            conv(&mut pb, "conv4", w3, w4, cfg.keep_locs, 15),
+            Layer::AvgPoolGlobal,
+            dense(&mut pb, "fc1", w4, 2 * w4, true, 16),
+            dense(&mut pb, "fc2", 2 * w4, cfg.classes, false, 17),
+        ];
+        let manifest = Manifest {
+            model: "c3d-synthetic".into(),
+            input: [3, cfg.frames, cfg.size, cfg.size],
+            num_classes: cfg.classes,
+            flops_dense: 0, // patched below once geometries are walkable
+            layers,
+            hlo: HashMap::new(),
+            bin: "<in-memory>".into(),
+            eval_acc: None,
+            sparsity: Some(SparsityInfo {
+                scheme: "kgs".into(),
+                g_m: 4,
+                g_n: 4,
+                rate: 27.0 / cfg.keep_locs.max(1) as f64,
+                eval_acc: None,
+                flops_sparse: 0,
+            }),
+        };
+        let mut model = Model {
+            manifest,
+            pool: TensorPool::from_bytes(pb.bytes),
+            dir: std::path::PathBuf::from("."),
+        };
+        let flops: usize =
+            model.conv_geometries().iter().map(|(_, g)| g.flops(1)).sum();
+        model.manifest.flops_dense = flops;
+        if let Some(s) = model.manifest.sparsity.as_mut() {
+            s.flops_sparse = flops * cfg.keep_locs.min(27) / 27;
+        }
+        model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_model_compiles_and_walks() {
+        let m = Model::synthetic_c3d(SyntheticC3d::tiny());
+        assert_eq!(m.manifest.input, [3, 4, 8, 8]);
+        let geoms = m.conv_geometries();
+        assert_eq!(geoms.len(), 5); // conv1, conv2, conv3a, conv3b, conv4
+        // Spatial rhythm: 4x8x8 -> 4x4x4 -> 2x2x2 (conv3a/b) -> 1x1x1.
+        assert_eq!(geoms[0].1.in_spatial, [4, 8, 8]);
+        assert_eq!(geoms[1].1.in_spatial, [4, 4, 4]);
+        assert_eq!(geoms[2].1.in_spatial, [2, 2, 2]);
+        assert_eq!(geoms[3].1.in_spatial, [2, 2, 2]);
+        assert_eq!(geoms[4].1.in_spatial, [1, 1, 1]);
+        assert!(m.manifest.flops_dense > 0);
+        // Weight refs resolve against the in-memory pool.
+        for c in m.conv_layers() {
+            assert_eq!(m.pool.f32(&c.weights.w).len(), c.out_ch * c.in_ch * 27);
+            assert!(c.unit_mask.is_some());
+        }
+    }
+
+    #[test]
+    fn deterministic_across_builds() {
+        let a = Model::synthetic_c3d(SyntheticC3d::tiny());
+        let b = Model::synthetic_c3d(SyntheticC3d::tiny());
+        let ca = a.conv_layers();
+        let cb = b.conv_layers();
+        assert_eq!(a.pool.f32(&ca[0].weights.w), b.pool.f32(&cb[0].weights.w));
+    }
+}

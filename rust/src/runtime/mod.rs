@@ -6,8 +6,9 @@
 //! serialized protos with 64-bit instruction ids that xla_extension 0.5.1
 //! rejects — the text parser reassigns ids (see /opt/xla-example/README.md).
 
+use crate::anyhow;
+use crate::util::error::Context;
 use crate::Result;
-use anyhow::{anyhow, Context};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;

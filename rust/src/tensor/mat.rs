@@ -18,6 +18,17 @@ impl Mat {
         Self { rows, cols, data }
     }
 
+    /// Re-shape in place for buffer reuse (the scratch-arena hot path):
+    /// sets the dims and resizes the backing vec to exactly `rows * cols`.
+    /// Never reallocates when shrinking or when capacity already suffices.
+    /// Existing element values are unspecified afterwards — callers that
+    /// need zeros must fill explicitly.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> f32 {
         self.data[r * self.cols + c]

@@ -31,6 +31,29 @@ impl BenchResult {
     }
 }
 
+/// Per-entry wall budget from `RT3D_BENCH_BUDGET_MS` (CI smoke runs use a
+/// reduced budget), else `default_ms`.
+pub fn budget_from_env(default_ms: u64) -> Duration {
+    let ms = std::env::var("RT3D_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .unwrap_or(default_ms);
+    Duration::from_millis(ms)
+}
+
+/// Write a machine-readable bench artifact at the repo root (the
+/// `BENCH_*.json` perf-trajectory files compared by
+/// `scripts/check_bench_regression.py`). Returns the path written.
+pub fn write_repo_json(name: &str, json: &str) -> std::path::PathBuf {
+    // CARGO_MANIFEST_DIR of this package is `<repo>/rust`.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join(name);
+    std::fs::write(&path, json)
+        .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    path
+}
+
 pub fn fmt_s(s: f64) -> String {
     if s >= 1.0 {
         format!("{s:.3}s")

@@ -1,0 +1,145 @@
+//! Minimal `anyhow`-compatible error type — the offline build carries its
+//! own error substrate just like it carries its own JSON parser and PRNG.
+//!
+//! Provides the exact API surface the crate uses from `anyhow`:
+//! * [`Error`] — an opaque, message-carrying error that any
+//!   `std::error::Error` converts into via `?`;
+//! * [`Result`] — `Result<T, Error>` with the error defaulted;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * [`crate::anyhow!`] / [`crate::bail!`] — formatted construction and
+//!   early return.
+
+use std::fmt;
+
+/// Opaque error: a rendered message plus the flattened source chain.
+///
+/// Deliberately does **not** implement `std::error::Error` — that is what
+/// lets the blanket `From<E: std::error::Error>` coexist with the
+/// reflexive `From<Error> for Error` (the same trick `anyhow` uses).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build from anything printable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer ("context: original").
+    pub fn context(self, c: impl fmt::Display) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    // `fn main() -> Result<()>` prints the error via Debug; show the
+    // human-readable chain, not a struct dump.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// Crate-wide result alias (error type defaulted, like `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context("...")` / `.with_context(|| ...)` on fallible values.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Formatted [`Error`] construction, drop-in for `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted error, drop-in for `anyhow::bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_layers_prepend() {
+        let e = io_fail().context("loading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("loading manifest: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn f() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 1");
+    }
+}

@@ -3,7 +3,8 @@
 //! Supports the full JSON grammar needed by the artifact manifests:
 //! objects, arrays, strings (with escapes), numbers, booleans, null.
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 use std::collections::HashMap;
 
 /// A parsed JSON value.

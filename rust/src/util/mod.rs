@@ -1,10 +1,15 @@
 //! In-tree utility substrate (the build environment is offline, so the
-//! stack carries its own JSON parser, PRNG, CLI helper and bench timer).
+//! stack carries its own JSON parser, PRNG, CLI helper, bench timer,
+//! error type and thread pool).
 
 pub mod args;
 pub mod bench;
+pub mod error;
 pub mod json;
+pub mod pool;
 pub mod rng;
 
+pub use error::{Context, Error, Result};
 pub use json::Json;
+pub use pool::ThreadPool;
 pub use rng::Rng;

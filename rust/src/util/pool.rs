@@ -1,0 +1,192 @@
+//! Scoped worker pool driving the parallel conv executors (std-only — the
+//! offline build has no rayon).
+//!
+//! # Design
+//!
+//! There is no work stealing and no persistent worker state: each parallel
+//! region opens a `std::thread::scope`, the calling thread becomes worker
+//! 0, and `threads - 1` helpers are spawned for the duration of the
+//! region. Tasks are `&mut` chunks of the output buffer pulled from a
+//! mutex-guarded queue, so a slow task never blocks the rest of the
+//! queue. The spawn/join cost per region (~tens of µs) is deliberate —
+//! persistent parked workers would need unsafe lifetime erasure to run
+//! borrowing closures; revisit if profiles show the fixed cost matters
+//! for small layers (see ROADMAP open items).
+//!
+//! # Determinism invariant: disjoint output rows
+//!
+//! Every parallel loop in the executors is shaped so that **each task owns
+//! a disjoint, contiguous row range of the output buffer** (an mr-row GEMM
+//! panel, a KGS filter-group row bucket, one `(channel, tap)` im2col row).
+//! Tasks only *read* shared inputs and only *write* their own rows, and
+//! the per-row accumulation order inside a task is exactly the serial
+//! kernel's order. Which thread runs a task, and in which order tasks are
+//! popped, therefore cannot affect any output bit: results are
+//! **bit-identical** across `RT3D_THREADS=1..N`. Keep it that way — never
+//! parallelize a loop here whose tasks share output elements (e.g. a
+//! reduction over K), because float addition does not commute bitwise.
+//!
+//! Thread count resolution: `RT3D_THREADS` env var when set (> 0),
+//! otherwise `std::thread::available_parallelism()`.
+
+use std::sync::{Mutex, OnceLock};
+
+/// A fixed-width scoped thread pool. Cheap to construct (it holds only the
+/// configured width); threads exist only while a `run*` call is active.
+#[derive(Debug, Clone)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// Core count of this machine (fallback 1).
+    pub fn available() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// `RT3D_THREADS` when set and positive, else all available cores.
+    pub fn from_env() -> Self {
+        let n = std::env::var("RT3D_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(Self::available);
+        Self::new(n)
+    }
+
+    /// Process-wide pool for call sites without an engine (tuner, bench
+    /// wrappers). Resolved from the environment once.
+    pub fn global() -> &'static ThreadPool {
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(ThreadPool::from_env)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split `data` into fixed-size chunks (last one ragged) and run
+    /// `f(chunk_index, worker, chunk)` over them. Each chunk is handed to
+    /// exactly one task — this is the disjoint-output-rows primitive.
+    pub fn run_chunks<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        let parts: Vec<(usize, &mut [T])> =
+            data.chunks_mut(chunk_len.max(1)).enumerate().collect();
+        self.dispatch(parts, &f);
+    }
+
+    /// Like [`Self::run_chunks`] but with per-part lengths (for ragged row
+    /// buckets, e.g. KGS filter groups). `lens` must sum to `data.len()`.
+    pub fn run_parts<T, F>(&self, data: &mut [T], lens: &[usize], f: F)
+    where
+        T: Send,
+        F: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        let total: usize = lens.iter().sum();
+        assert_eq!(total, data.len(), "part lengths must cover the buffer");
+        let mut rest = data;
+        let mut parts: Vec<(usize, &mut [T])> = Vec::with_capacity(lens.len());
+        for (i, &l) in lens.iter().enumerate() {
+            // Move `rest` out before splitting so the split halves get the
+            // full outer lifetime (a plain reborrow could not escape the
+            // loop body into `parts`).
+            let whole = rest;
+            let (head, tail) = whole.split_at_mut(l);
+            parts.push((i, head));
+            rest = tail;
+        }
+        self.dispatch(parts, &f);
+    }
+
+    fn dispatch<T, F>(&self, parts: Vec<(usize, &mut [T])>, f: &F)
+    where
+        T: Send,
+        F: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        let n = parts.len();
+        if n == 0 {
+            return;
+        }
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            for (i, chunk) in parts {
+                f(i, 0, chunk);
+            }
+            return;
+        }
+        let queue = Mutex::new(parts.into_iter());
+        let work = |wid: usize| loop {
+            // Take the lock only to pop; run the task lock-free.
+            let item = queue.lock().unwrap().next();
+            match item {
+                Some((i, chunk)) => f(i, wid, chunk),
+                None => break,
+            }
+        };
+        std::thread::scope(|s| {
+            let work = &work;
+            for w in 1..workers {
+                s.spawn(move || work(w));
+            }
+            work(0);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_chunks_covers_ragged_tail() {
+        let mut data = vec![0u32; 103]; // 103 = 25*4 + 3 (ragged)
+        ThreadPool::new(3).run_chunks(&mut data, 4, |i, _w, chunk| {
+            for v in chunk.iter_mut() {
+                *v = i as u32 + 1;
+            }
+        });
+        assert!(data.iter().all(|&v| v != 0));
+        assert_eq!(data[102], 26); // last chunk index 25
+    }
+
+    #[test]
+    fn run_parts_respects_lengths() {
+        let mut data = vec![0u8; 10];
+        ThreadPool::new(8).run_parts(&mut data, &[3, 0, 5, 2], |i, _w, chunk| {
+            for v in chunk.iter_mut() {
+                *v = i as u8 + 1;
+            }
+        });
+        assert_eq!(data, vec![1, 1, 1, 3, 3, 3, 3, 3, 4, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "part lengths")]
+    fn run_parts_rejects_bad_cover() {
+        let mut data = vec![0u8; 10];
+        ThreadPool::new(2).run_parts(&mut data, &[3, 3], |_, _, _| {});
+    }
+
+    #[test]
+    fn single_thread_is_inline() {
+        let mut data = vec![0usize; 16];
+        ThreadPool::new(1).run_chunks(&mut data, 2, |i, w, chunk| {
+            assert_eq!(w, 0);
+            chunk[0] = i;
+        });
+        assert_eq!(data[14], 7);
+    }
+
+    #[test]
+    fn env_parsing_clamps_to_one() {
+        assert_eq!(ThreadPool::new(0).threads(), 1);
+        assert!(ThreadPool::from_env().threads() >= 1);
+    }
+}

@@ -83,6 +83,13 @@ pub fn make_clip(label: ClassId, seed: u64, frames: usize, size: usize) -> Tenso
 
 /// Pack several clips into one NCDHW batch tensor.
 pub fn batch_clips(clips: &[Tensor5]) -> Tensor5 {
+    let refs: Vec<&Tensor5> = clips.iter().collect();
+    batch_clip_refs(&refs)
+}
+
+/// Like [`batch_clips`] but by reference — the serving hot path packs
+/// straight from the queued requests without cloning each clip first.
+pub fn batch_clip_refs(clips: &[&Tensor5]) -> Tensor5 {
     let [_, c, d, h, w] = clips[0].dims;
     let mut out = Tensor5::zeros([clips.len(), c, d, h, w]);
     let n = c * d * h * w;

@@ -5,5 +5,5 @@
 pub mod clips;
 mod trace;
 
-pub use clips::{batch_clips, make_clip, ClassId, NUM_CLASSES};
+pub use clips::{batch_clip_refs, batch_clips, make_clip, ClassId, NUM_CLASSES};
 pub use trace::{RequestTrace, TraceConfig};

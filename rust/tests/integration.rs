@@ -194,12 +194,12 @@ fn server_with_toy_conv_engine() {
         cc: rt3d::codegen::CompiledConv,
     }
     impl rt3d::coordinator::Engine for OneConv {
-        fn infer(&self, batch: &Tensor5) -> Mat {
+        fn infer(&self, batch: Tensor5) -> Mat {
             let g = Conv3dGeometry {
                 in_spatial: [batch.dims[2], batch.dims[3], batch.dims[4]],
                 ..self.cc.geom
             };
-            let pt = executors::im2col_t(batch, &g);
+            let pt = executors::im2col_t(&batch, &g);
             let mut out = Mat::zeros(g.out_ch, pt.cols);
             executors::run_compiled_conv(&self.cc, &pt, &mut out);
             // Global average per channel as "logits".

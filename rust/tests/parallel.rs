@@ -1,0 +1,219 @@
+//! Parity and scratch-arena tests for the parallel execution pipeline.
+//!
+//! The contract under test (see `util::pool` module docs): every parallel
+//! loop writes disjoint output rows and replays the serial accumulation
+//! order per row, so results are **bit-identical** (`assert_eq!`, not
+//! tolerance) across thread counts — including ragged shapes (`M` not
+//! divisible by `mr`, `R` smaller than the worker count). The arena tests
+//! prove buffers persist across forwards of different batch sizes instead
+//! of being reallocated.
+
+use rt3d::codegen::{self, GemmTile, Scheme};
+use rt3d::executors::{self, gemm, AccSlabs, EngineKind, NativeEngine};
+use rt3d::model::{ConvLayer, Model, SyntheticC3d, TensorRef, WeightRefs};
+use rt3d::tensor::{Conv3dGeometry, Mat, Tensor5};
+use rt3d::util::pool::ThreadPool;
+
+fn conv_layer(m: usize, c: usize) -> ConvLayer {
+    let dummy = TensorRef { offset: 0, shape: vec![], dtype: "f32".into() };
+    ConvLayer {
+        name: "par".into(),
+        in_ch: c,
+        out_ch: m,
+        kernel: [3, 3, 3],
+        stride: [1, 1, 1],
+        padding: [1, 1, 1],
+        relu: true,
+        weights: WeightRefs { w: dummy.clone(), b: dummy },
+        weights_sparse: None,
+        unit_mask: None,
+    }
+}
+
+fn geom(m: usize, c: usize, sp: [usize; 3]) -> Conv3dGeometry {
+    Conv3dGeometry {
+        in_ch: c,
+        out_ch: m,
+        kernel: [3, 3, 3],
+        stride: [1, 1, 1],
+        padding: [1, 1, 1],
+        in_spatial: sp,
+    }
+}
+
+/// Run one compiled conv at a given thread count (own pool + slabs).
+fn run_threads(
+    cc: &codegen::CompiledConv,
+    pt: &Mat,
+    threads: usize,
+) -> Mat {
+    let mut out = Mat::zeros(cc.geom.out_ch, pt.cols);
+    let call = cc.bind(cc.geom.in_spatial);
+    executors::run_conv_bound(
+        &call,
+        pt,
+        &mut out,
+        &ThreadPool::new(threads),
+        &AccSlabs::new(threads),
+    );
+    out
+}
+
+#[test]
+fn gemm_dense_bit_identical_ragged_shapes() {
+    // M=13 ragged vs mr=4; R=3 smaller than the 4-thread pool; R=1 edge.
+    for (m, k, r) in [(13usize, 64usize, 100usize), (13, 64, 3), (5, 16, 1), (8, 27, 250)] {
+        let w = Mat::random(m, k, 31);
+        let p = Mat::random(k, r, 32);
+        for tile in [
+            GemmTile { mr: 4, rc: 32, kc: 16 },
+            GemmTile { mr: 8, rc: 512, kc: 256 },
+            GemmTile { mr: 2, rc: 7, kc: 5 },
+        ] {
+            let mut serial = Mat::zeros(m, r);
+            gemm::gemm_dense_with(
+                &w.data, m, &p, &mut serial, tile,
+                &ThreadPool::new(1), &AccSlabs::new(1),
+            );
+            for threads in [2usize, 4, 7] {
+                let mut par = Mat::zeros(m, r);
+                gemm::gemm_dense_with(
+                    &w.data, m, &p, &mut par, tile,
+                    &ThreadPool::new(threads), &AccSlabs::new(threads),
+                );
+                assert_eq!(serial.data, par.data, "m={m} r={r} t={threads} {tile:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn kgs_conv_bit_identical_across_threads() {
+    let (m, c) = (13usize, 8usize); // ragged M vs g_m=4
+    let sp = [3usize, 5, 5];
+    let layer = conv_layer(m, c);
+    let g = geom(m, c, sp);
+    let w = Tensor5::random([m, c, 3, 3, 3], 41);
+    let (pp, qq, ks) = (m.div_ceil(4), c.div_ceil(4), 27usize);
+    let mut mask = vec![false; pp * qq * ks];
+    for (i, v) in mask.iter_mut().enumerate() {
+        *v = (i * 11) % 3 != 0;
+    }
+    let bias: Vec<f32> = (0..m).map(|i| 0.01 * i as f32).collect();
+    let cc = codegen::compile_conv_sparse(
+        &layer, &g, &w.data, bias, &mask, Scheme::Kgs, 4, 4,
+    );
+    let x = Tensor5::random([2, c, sp[0], sp[1], sp[2]], 42);
+    let pt = executors::im2col_t(&x, &g);
+    let serial = run_threads(&cc, &pt, 1);
+    for threads in [2usize, 4, 8] {
+        assert_eq!(serial.data, run_threads(&cc, &pt, threads).data, "t={threads}");
+    }
+}
+
+#[test]
+fn vanilla_conv_bit_identical_across_threads() {
+    let (m, c) = (10usize, 12usize);
+    let sp = [3usize, 4, 4];
+    let layer = conv_layer(m, c);
+    let g = geom(m, c, sp);
+    let w = Tensor5::random([m, c, 3, 3, 3], 51);
+    let (pp, qq) = (m.div_ceil(4), c.div_ceil(4));
+    let mask: Vec<bool> = (0..pp * qq).map(|i| i % 4 != 1).collect();
+    let cc = codegen::compile_conv_sparse(
+        &layer, &g, &w.data, vec![0.0; m], &mask, Scheme::Vanilla, 4, 4,
+    );
+    let x = Tensor5::random([1, c, sp[0], sp[1], sp[2]], 52);
+    let pt = executors::im2col_t(&x, &g);
+    let serial = run_threads(&cc, &pt, 1);
+    for threads in [3usize, 6] {
+        assert_eq!(serial.data, run_threads(&cc, &pt, threads).data, "t={threads}");
+    }
+}
+
+#[test]
+fn filter_conv_bit_identical_across_threads() {
+    let (m, c) = (6usize, 4usize);
+    let sp = [4usize, 4, 4];
+    let layer = conv_layer(m, c);
+    let g = geom(m, c, sp);
+    let w = Tensor5::random([m, c, 3, 3, 3], 61);
+    let mask = vec![true, false, true, true, false, true];
+    let cc = codegen::compile_conv_sparse(
+        &layer, &g, &w.data, vec![0.0; m], &mask, Scheme::Filter, 4, 4,
+    );
+    let x = Tensor5::random([1, c, sp[0], sp[1], sp[2]], 62);
+    let pt = executors::im2col_t(&x, &g);
+    let serial = run_threads(&cc, &pt, 1);
+    assert_eq!(serial.data, run_threads(&cc, &pt, 5).data);
+}
+
+#[test]
+fn im2col_bit_identical_across_threads() {
+    let g = geom(1, 3, [4, 6, 7]);
+    // Both strided (gather path) and unit-stride (memcpy path).
+    for stride in [[1usize, 1, 1], [2, 2, 2]] {
+        let g = Conv3dGeometry { stride, ..g };
+        let x = Tensor5::random([2, 3, 4, 6, 7], 71);
+        let mut serial = Mat::zeros(g.cols(), g.rows(2));
+        executors::im2col_t_into_with(&x, &g, &mut serial, &ThreadPool::new(1));
+        let mut par = Mat::zeros(g.cols(), g.rows(2));
+        executors::im2col_t_into_with(&x, &g, &mut par, &ThreadPool::new(8));
+        assert_eq!(serial.data, par.data, "stride {stride:?}");
+    }
+}
+
+#[test]
+fn full_model_forward_bit_identical_across_threads() {
+    let model = Model::synthetic_c3d(SyntheticC3d::tiny());
+    let input = model.manifest.input;
+    let clip = Tensor5::random([2, input[0], input[1], input[2], input[3]], 81);
+    for (kind, sparse) in [
+        (EngineKind::Rt3d, false),
+        (EngineKind::Rt3d, true),
+        (EngineKind::Untuned, false),
+    ] {
+        let e1 = NativeEngine::with_threads(&model, kind, sparse, 1);
+        let e4 = NativeEngine::with_threads(&model, kind, sparse, 4);
+        let l1 = e1.forward(&clip);
+        let l4 = e4.forward(&clip);
+        assert_eq!(l1.data, l4.data, "{kind:?} sparse={sparse}");
+        assert_eq!(l1.rows, 2);
+        assert_eq!(l1.cols, model.manifest.num_classes);
+        assert!(l1.data.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn arena_reused_across_batch_sizes() {
+    let model = Model::synthetic_c3d(SyntheticC3d::tiny());
+    let input = model.manifest.input;
+    let engine = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 2);
+    // Pre-sized at construction for batch 1.
+    let (p0, o0) = engine.arena_capacities();
+    assert!(p0 > 0 && o0 > 0, "arena must be pre-sized");
+
+    let clip1 = Tensor5::random([1, input[0], input[1], input[2], input[3]], 91);
+    let clip3 = Tensor5::random([3, input[0], input[1], input[2], input[3]], 92);
+
+    let r1a = engine.forward(&clip1);
+    let (p1, o1) = engine.arena_capacities();
+    assert_eq!((p1, o1), (p0, o0), "batch-1 forward must not grow the arena");
+
+    // Larger batch grows the buffers once...
+    let r3 = engine.forward(&clip3);
+    let (p3, o3) = engine.arena_capacities();
+    assert!(p3 >= p1 && o3 >= o1);
+
+    // ...and further forwards (smaller or equal batch) reuse them.
+    let r1b = engine.forward(&clip1);
+    let (p4, o4) = engine.arena_capacities();
+    assert_eq!((p4, o4), (p3, o3), "steady state must not reallocate");
+
+    // Reuse never corrupts results: same input, same logits; and a fresh
+    // engine agrees bit-for-bit.
+    assert_eq!(r1a.data, r1b.data);
+    let fresh = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 2);
+    assert_eq!(fresh.forward(&clip3).data, r3.data);
+    assert_eq!(fresh.forward(&clip1).data, r1a.data);
+}

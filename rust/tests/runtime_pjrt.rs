@@ -1,6 +1,9 @@
 //! PJRT integration: load the AOT HLO artifacts and check numerics against
 //! the native executors. Skipped (pass trivially) when `artifacts/` has not
 //! been built — run `make artifacts` first for full coverage.
+//!
+//! Compiled only with `--features pjrt` (needs the external `xla` crate).
+#![cfg(feature = "pjrt")]
 
 use rt3d::executors::{EngineKind, NativeEngine};
 use rt3d::model::Model;

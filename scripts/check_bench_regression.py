@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Compare a bench JSON against a committed baseline (warning-only).
+
+Usage: check_bench_regression.py <baseline.json> <current.json>
+
+Policy (ROADMAP "Open items" / SNIPPETS §2 pattern): emit a GitHub Actions
+warning when p95 latency degrades by more than 20% vs the committed
+baseline. Never fails the build — CI runners are too noisy to gate merges
+on wall-clock numbers; the warning plus the uploaded artifact is the
+tracking signal. A baseline with null metrics means "not seeded yet" and
+skips the comparison.
+"""
+
+import json
+import sys
+
+THRESHOLD = 1.20  # warn when current p95 > 120% of baseline
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    baseline_path, current_path = sys.argv[1], sys.argv[2]
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"no baseline at {baseline_path}; skipping regression check")
+        return 0
+    except json.JSONDecodeError as e:
+        print(f"::warning title=bench regression::cannot parse baseline "
+              f"{baseline_path}: {e}")
+        return 0
+    try:
+        with open(current_path) as f:
+            current = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError) as e:
+        # Warning-only policy: a missing/truncated bench artifact should
+        # surface loudly but never hard-fail the job.
+        print(f"::warning title=bench regression::cannot read {current_path}: {e}")
+        return 0
+
+    checked = False
+    for key in ("p95_ms", "p50_ms"):
+        base, cur = baseline.get(key), current.get(key)
+        if not isinstance(base, (int, float)) or base <= 0:
+            continue
+        if not isinstance(cur, (int, float)):
+            continue
+        checked = True
+        ratio = cur / base
+        line = (
+            f"{key}: baseline={base:.2f}ms current={cur:.2f}ms "
+            f"({ratio:.0%} of baseline, threads base={baseline.get('threads')} "
+            f"cur={current.get('threads')})"
+        )
+        if ratio > THRESHOLD:
+            # GitHub Actions warning annotation; does not fail the job.
+            print(f"::warning title=bench regression::{line} exceeds +20%")
+        else:
+            print(f"ok {line}")
+    if not checked:
+        print("baseline not seeded yet (null metrics); update "
+              "rust/benches/baseline/BENCH_serving.json from a stabilized run")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
