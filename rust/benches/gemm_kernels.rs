@@ -1,16 +1,28 @@
 //! Micro-benchmarks of the GEMM kernels (perf-pass instrumentation):
-//! untuned vs blocked vs blocked-with-bigger-tiles on Table-2-sized GEMMs.
+//! untuned vs the PR-1 strided scalar kernel vs the prepacked scalar and
+//! prepacked SIMD kernels, on Table-2-sized GEMMs. The headline number is
+//! `speedup_packed_simd_vs_pr1` — the acceptance gate for the prepacking +
+//! SIMD work is >= 1.5x on at least one shape. Emits
+//! `BENCH_gemm_kernels.json` at the repo root with detected ISA, selected
+//! kernel and per-shape GFLOP/s.
 
-use rt3d::codegen::GemmTile;
-use rt3d::executors::gemm;
+use rt3d::codegen::{GemmTile, KernelArch, PackedDense};
+use rt3d::executors::gemm::{self, GemmCtx};
+use rt3d::executors::AccSlabs;
 use rt3d::tensor::Mat;
-use rt3d::util::bench::BenchGroup;
-use std::time::Duration;
+use rt3d::util::bench::{budget_from_env, write_repo_json, BenchGroup};
+use rt3d::util::pool::ThreadPool;
 
 fn main() {
+    let pool = ThreadPool::global();
+    let slabs = AccSlabs::global();
+    let active = KernelArch::active();
     println!(
-        "gemm_kernels: blocked kernels run on {} executor threads (RT3D_THREADS)",
-        rt3d::util::pool::ThreadPool::global().threads()
+        "gemm_kernels: threads={} isa_detected={} kernel={} lanes={}",
+        pool.threads(),
+        KernelArch::best_supported().name(),
+        active.name(),
+        active.lanes()
     );
     // (M, K, R) shapes drawn from c3d layers at width 8 / 16x32x32 input.
     let shapes = [
@@ -18,39 +30,87 @@ fn main() {
         (64, 864, 2048),
         (64, 1728, 512),
     ];
-    let mut group = BenchGroup::new("gemm_kernels").budget(Duration::from_secs(2));
+    let tile = GemmTile::default();
+    let mut group = BenchGroup::new("gemm_kernels").budget(budget_from_env(2000));
+    let mut entries = Vec::new();
     for (m, k, r) in shapes {
         let w = Mat::random(m, k, 1);
         let p = Mat::random(k, r, 2);
-        let gflops = (2 * m * k * r) as f64 / 1e9;
+        let gflop = (2 * m * k * r) as f64 / 1e9;
+        let packed = PackedDense::pack(&w.data, m, k, tile.mr);
         let mut out = Mat::zeros(m, r);
-        let ru = group
+
+        let t_untuned = group
             .bench(&format!("untuned/{m}x{k}x{r}"), || {
                 out.data.fill(0.0);
                 gemm::matmul_untuned(&w.data, m, &p, &mut out);
             })
             .median_s;
-        let mut results = vec![("untuned", ru)];
-        for tile in [
-            GemmTile::default(),
-            GemmTile { mr: 8, rc: 1024, kc: 256 },
-            GemmTile { mr: 8, rc: 256, kc: 512 },
+        // PR-1 baseline: blocked, scalar, strided weight loads.
+        let t_pr1 = group
+            .bench(&format!("pr1_strided/{m}x{k}x{r}"), || {
+                out.data.fill(0.0);
+                gemm::gemm_dense_unpacked(&w.data, m, &p, &mut out, tile, pool, slabs);
+            })
+            .median_s;
+        let scalar_ctx =
+            GemmCtx { tile, kernel: KernelArch::Scalar, cap: usize::MAX, pool, slabs };
+        let t_packed_scalar = group
+            .bench(&format!("packed_scalar/{m}x{k}x{r}"), || {
+                gemm::gemm_dense_packed(&packed, &p, &mut out, &scalar_ctx);
+            })
+            .median_s;
+        let simd_ctx = GemmCtx { kernel: active, ..scalar_ctx };
+        let t_packed_simd = group
+            .bench(&format!("packed_{}/{m}x{k}x{r}", active.name()), || {
+                gemm::gemm_dense_packed(&packed, &p, &mut out, &simd_ctx);
+            })
+            .median_s;
+
+        // Sanity: the SIMD path must be bit-identical to scalar.
+        let mut a = Mat::zeros(m, r);
+        gemm::gemm_dense_packed(&packed, &p, &mut a, &scalar_ctx);
+        let mut b = Mat::zeros(m, r);
+        gemm::gemm_dense_packed(&packed, &p, &mut b, &simd_ctx);
+        assert_eq!(a.data, b.data, "SIMD output must be bit-identical to scalar");
+
+        let speedup = t_pr1 / t_packed_simd;
+        for (label, t) in [
+            ("untuned", t_untuned),
+            ("pr1_strided", t_pr1),
+            ("packed_scalar", t_packed_scalar),
+            ("packed_simd", t_packed_simd),
         ] {
-            let label =
-                format!("blocked_mr{}rc{}kc{}/{m}x{k}x{r}", tile.mr, tile.rc, tile.kc);
-            let rb = group
-                .bench(&label, || {
-                    out.data.fill(0.0);
-                    gemm::gemm_dense(&w.data, m, &p, &mut out, tile);
-                })
-                .median_s;
-            results.push(("blocked", rb));
+            println!("gemm {m}x{k}x{r} {label}: {:.2} GFLOP/s", gflop / t);
         }
-        for (label, t) in &results {
-            println!(
-                "gemm {m}x{k}x{r} {label}: {:.2} GFLOP/s",
-                gflops / t
-            );
-        }
+        println!("gemm {m}x{k}x{r} speedup packed_simd vs pr1: {speedup:.2}x");
+        entries.push(format!(
+            "    {{\"m\": {m}, \"k\": {k}, \"r\": {r}, \
+             \"untuned_gflops\": {:.4}, \"pr1_gflops\": {:.4}, \
+             \"packed_scalar_gflops\": {:.4}, \"packed_simd_gflops\": {:.4}, \
+             \"speedup_packed_simd_vs_pr1\": {:.4}}}",
+            gflop / t_untuned,
+            gflop / t_pr1,
+            gflop / t_packed_scalar,
+            gflop / t_packed_simd,
+            speedup
+        ));
     }
+
+    let json = format!(
+        "{{\n  \"bench\": \"gemm_kernels\",\n  \"threads\": {},\n  \
+         \"isa_detected\": \"{}\",\n  \"kernel\": \"{}\",\n  \
+         \"simd_lanes\": {},\n  \"tile\": {{\"mr\": {}, \"rc\": {}, \"kc\": {}}},\n  \
+         \"shapes\": [\n{}\n  ]\n}}\n",
+        pool.threads(),
+        KernelArch::best_supported().name(),
+        active.name(),
+        active.lanes(),
+        tile.mr,
+        tile.rc,
+        tile.kc,
+        entries.join(",\n")
+    );
+    let out = write_repo_json("BENCH_gemm_kernels.json", &json);
+    println!("gemm_kernels: wrote {}", out.display());
 }

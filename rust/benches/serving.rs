@@ -13,6 +13,7 @@
 //! committed baseline. Falls back to the in-memory synthetic C3D model
 //! when `make artifacts` has not been run.
 
+use rt3d::codegen::KernelArch;
 use rt3d::coordinator::{BatcherConfig, Server, ServerConfig};
 use rt3d::executors::{EngineKind, NativeEngine};
 use rt3d::model::{Model, SyntheticC3d};
@@ -55,6 +56,14 @@ fn main() {
     let threads = ThreadPool::from_env().threads();
     let budget = budget_from_env(2000);
 
+    let kernel = KernelArch::active();
+    println!(
+        "serving: isa_detected={} kernel={} lanes={}",
+        KernelArch::best_supported().name(),
+        kernel.name(),
+        kernel.lanes()
+    );
+
     // --- Thread scaling + bit-identical parity -------------------------
     let eng1 = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 1);
     let engn = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, threads);
@@ -65,6 +74,21 @@ fn main() {
         "multi-threaded logits must be bit-identical to single-threaded"
     );
     println!("serving parity: logits bit-identical at 1 vs {threads} threads");
+    // SIMD-on vs scalar fallback on the same ISA path must also agree
+    // bit for bit (the kernels use mul+add lanes, never fused FMA).
+    if kernel != KernelArch::Scalar {
+        let mut scal = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, threads);
+        scal.set_kernel(KernelArch::Scalar);
+        assert_eq!(
+            scal.forward(&clip).data,
+            ln.data,
+            "SIMD logits must be bit-identical to scalar"
+        );
+        println!(
+            "serving parity: logits bit-identical {} vs scalar kernel",
+            kernel.name()
+        );
+    }
     let (p50_1, p95_1, n1) = time_forward(&eng1, &clip, budget);
     let (p50_n, p95_n, nn) = time_forward(&engn, &clip, budget);
     let speedup = p50_1 / p50_n;
@@ -128,6 +152,12 @@ fn main() {
     json.push_str("  \"bench\": \"serving\",\n");
     json.push_str(&format!("  \"model\": \"{}\",\n", model.manifest.model));
     json.push_str(&format!("  \"threads\": {threads},\n"));
+    json.push_str(&format!(
+        "  \"isa_detected\": \"{}\",\n",
+        KernelArch::best_supported().name()
+    ));
+    json.push_str(&format!("  \"kernel\": \"{}\",\n", kernel.name()));
+    json.push_str(&format!("  \"simd_lanes\": {},\n", kernel.lanes()));
     json.push_str(&format!("  \"p50_ms\": {:.4},\n", p50_n * 1e3));
     json.push_str(&format!("  \"p95_ms\": {:.4},\n", p95_n * 1e3));
     json.push_str(&format!("  \"p50_ms_1t\": {:.4},\n", p50_1 * 1e3));

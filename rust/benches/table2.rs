@@ -10,7 +10,7 @@
 //! latency per engine class, executor threads, GFLOP/s). Falls back to the
 //! in-memory synthetic C3D model when `make artifacts` has not been run.
 
-use rt3d::codegen;
+use rt3d::codegen::{self, KernelArch};
 use rt3d::device::{self, DeviceProfile, ExecutorClass};
 use rt3d::executors::{EngineKind, NativeEngine};
 use rt3d::model::{Model, SyntheticC3d};
@@ -32,7 +32,9 @@ fn main() {
     let mut group = BenchGroup::new("table2").budget(budget_from_env(3000));
     println!(
         "== Table 2 reproduction (host measurements + device-sim projection, \
-         {threads} executor threads)"
+         {threads} executor threads, isa_detected={} kernel={})",
+        KernelArch::best_supported().name(),
+        KernelArch::active().name()
     );
     let mut rows: Vec<Row> = Vec::new();
     for name in ["c3d", "r2plus1d", "s3d"] {
@@ -107,6 +109,11 @@ fn main() {
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"table2\",\n");
     json.push_str(&format!("  \"threads\": {threads},\n"));
+    json.push_str(&format!(
+        "  \"isa_detected\": \"{}\",\n",
+        KernelArch::best_supported().name()
+    ));
+    json.push_str(&format!("  \"kernel\": \"{}\",\n", KernelArch::active().name()));
     json.push_str("  \"entries\": [\n");
     for (i, r) in rows.iter().enumerate() {
         json.push_str(&format!(

@@ -16,7 +16,10 @@
 pub mod plan;
 pub mod tuner;
 
-pub use plan::{CompiledConv, ConvCall, ConvKind, GemmTile, KgsGroup, VanillaRow};
+pub use plan::{
+    CompiledConv, ConvCall, ConvKind, GemmTile, KernelArch, KgsGroup, PackedDense,
+    PanelSchedule,
+};
 
 use crate::model::{ConvLayer, Model};
 use crate::tensor::Conv3dGeometry;
@@ -87,15 +90,21 @@ pub fn compile_conv_dense(
 ) -> CompiledConv {
     let k = geom.cols();
     assert_eq!(w.len(), layer.out_ch * k);
-    CompiledConv {
+    let mut cc = CompiledConv {
         name: layer.name.clone(),
         geom: *geom,
         relu: layer.relu,
         bias,
         kind: ConvKind::Dense { wmat: w.to_vec() },
         tile: GemmTile::default(),
+        packed: None,
+        sched: None,
+        kernel: None,
+        threads: 0,
         flops: geom.flops(1),
-    }
+    };
+    cc.finalize();
+    cc
 }
 
 /// Sparse plan dispatch.
@@ -174,11 +183,11 @@ fn compile_kgs(
                 }
             }
             kept_weights += panel.len();
-            groups.push(KgsGroup { m0, m_eff, cols, panel });
+            groups.push(KgsGroup::new(m0, m_eff, cols, panel));
         }
     }
     let r = geom.rows(1);
-    CompiledConv {
+    let mut cc = CompiledConv {
         name: layer.name.clone(),
         geom: *geom,
         relu: layer.relu,
@@ -186,11 +195,18 @@ fn compile_kgs(
         flops: 2 * kept_weights * r,
         kind: ConvKind::Kgs { groups },
         tile: GemmTile::default(),
-    }
+        packed: None,
+        sched: None,
+        kernel: None,
+        threads: 0,
+    };
+    cc.finalize();
+    cc
 }
 
-/// Vanilla: per filter-group row p, the list of kept channel groups with
-/// their full (m_eff, n_eff*Ks) panels.
+/// Vanilla: per filter-group row p, the kept channel groups with their
+/// full (m_eff, n_eff*Ks) panels, flattened p-major (the schedule built by
+/// `finalize` re-splits them into filter-group row buckets).
 fn compile_vanilla(
     layer: &ConvLayer,
     geom: &Conv3dGeometry,
@@ -204,12 +220,11 @@ fn compile_vanilla(
     let ks: usize = layer.kernel.iter().product();
     let (pp, qq) = (ceil_div(m, g_m), ceil_div(c, g_n));
     assert_eq!(mask.len(), pp * qq, "vanilla mask shape");
-    let mut rows = Vec::with_capacity(pp);
+    let mut groups = Vec::new();
     let mut kept_weights = 0usize;
     for p in 0..pp {
         let m0 = p * g_m;
         let m_eff = g_m.min(m - m0);
-        let mut kept_groups = Vec::new();
         for q in 0..qq {
             if !mask[p * qq + q] {
                 continue;
@@ -228,20 +243,25 @@ fn compile_vanilla(
                 panel.extend_from_slice(&w[base..base + n_eff * ks]);
             }
             kept_weights += panel.len();
-            kept_groups.push(KgsGroup { m0, m_eff, cols, panel });
+            groups.push(KgsGroup::new(m0, m_eff, cols, panel));
         }
-        rows.push(VanillaRow { m0, m_eff, groups: kept_groups });
     }
     let r = geom.rows(1);
-    CompiledConv {
+    let mut cc = CompiledConv {
         name: layer.name.clone(),
         geom: *geom,
         relu: layer.relu,
         bias,
         flops: 2 * kept_weights * r,
-        kind: ConvKind::Vanilla { rows },
+        kind: ConvKind::Vanilla { groups },
         tile: GemmTile::default(),
-    }
+        packed: None,
+        sched: None,
+        kernel: None,
+        threads: 0,
+    };
+    cc.finalize();
+    cc
 }
 
 /// Filter: keep surviving rows of the dense weight matrix.
@@ -261,7 +281,7 @@ fn compile_filter(
         wmat.extend_from_slice(&w[i as usize * k..(i as usize + 1) * k]);
     }
     let r = geom.rows(1);
-    CompiledConv {
+    let mut cc = CompiledConv {
         name: layer.name.clone(),
         geom: *geom,
         relu: layer.relu,
@@ -269,7 +289,13 @@ fn compile_filter(
         flops: 2 * wmat.len() * r,
         kind: ConvKind::Filter { rows: kept, wmat },
         tile: GemmTile::default(),
-    }
+        packed: None,
+        sched: None,
+        kernel: None,
+        threads: 0,
+    };
+    cc.finalize();
+    cc
 }
 
 #[cfg(test)]

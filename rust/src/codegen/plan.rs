@@ -1,14 +1,25 @@
 //! Compiled conv plans: the output of codegen, the input of the executors.
+//!
+//! A plan carries *prepacked* weights in the layout the inner kernel
+//! streams: dense/filter matrices are repacked into mr-row panels stored
+//! k-major ([`PackedDense`]), and sparse KGS/Vanilla panels carry a
+//! column-major-within-panel copy so the gathered inner loop reads one
+//! contiguous `m_eff` block per column. The SIMD kernel variant and the
+//! per-layer worker cap are plan parameters too — all three are what the
+//! paper's compiler "generates" per layer and what [`super::tuner`]
+//! searches.
 
 use crate::tensor::Conv3dGeometry;
+use std::sync::OnceLock;
 
 /// Register/cache blocking parameters for the GEMM micro-kernel.
 /// Found per layer shape by [`super::tuner`]; defaults are sane for the
-/// host CPU.
+/// host CPU. `mr` is also the packing panel height — changing it requires
+/// repacking ([`CompiledConv::set_tile`] handles that).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GemmTile {
     /// Rows of the weight matrix processed per micro-kernel step
-    /// (register-blocked accumulators).
+    /// (register-blocked accumulators; packing panel height).
     pub mr: usize,
     /// Columns (output positions) per cache block.
     pub rc: usize,
@@ -19,6 +30,159 @@ pub struct GemmTile {
 impl Default for GemmTile {
     fn default() -> Self {
         Self { mr: 4, rc: 512, kc: 256 }
+    }
+}
+
+/// Which inner-kernel instruction set executes a plan. Lanes vectorize
+/// across the R (output-position) axis, so each output element keeps the
+/// serial K accumulation order — and because the SIMD kernels use separate
+/// mul + add (never fused FMA), scalar and SIMD outputs are bit-identical
+/// on finite data. `RT3D_SIMD=scalar` forces the fallback; `auto` (or
+/// unset) picks the best supported ISA at runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelArch {
+    /// Portable fallback — always available, the parity reference.
+    Scalar,
+    /// x86-64 AVX2 f32x8 (runtime-detected).
+    Avx2,
+    /// aarch64 NEON f32x4 (baseline on every aarch64 target).
+    Neon,
+}
+
+impl KernelArch {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelArch::Scalar => "scalar",
+            KernelArch::Avx2 => "avx2",
+            KernelArch::Neon => "neon",
+        }
+    }
+
+    /// f32 lanes per vector op.
+    pub fn lanes(self) -> usize {
+        match self {
+            KernelArch::Scalar => 1,
+            KernelArch::Avx2 => 8,
+            KernelArch::Neon => 4,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KernelArch> {
+        match s {
+            "scalar" => Some(KernelArch::Scalar),
+            "avx2" => Some(KernelArch::Avx2),
+            "neon" => Some(KernelArch::Neon),
+            _ => None,
+        }
+    }
+
+    /// Is this variant executable on the running machine?
+    pub fn supported(self) -> bool {
+        match self {
+            KernelArch::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelArch::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            KernelArch::Neon => true,
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// Best ISA the running machine supports, ignoring the environment.
+    pub fn best_supported() -> KernelArch {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return KernelArch::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            return KernelArch::Neon;
+        }
+        #[allow(unreachable_code)]
+        KernelArch::Scalar
+    }
+
+    /// Resolve `RT3D_SIMD` (`scalar` | `auto` | an explicit ISA name that
+    /// must be supported) against the detected hardware.
+    pub fn detect() -> KernelArch {
+        if let Ok(v) = std::env::var("RT3D_SIMD") {
+            match v.trim() {
+                "" | "auto" => {}
+                "scalar" => return KernelArch::Scalar,
+                other => {
+                    if let Some(k) = KernelArch::parse(other) {
+                        if k.supported() {
+                            return k;
+                        }
+                    }
+                    eprintln!(
+                        "RT3D_SIMD={other:?} not available on this machine; using auto"
+                    );
+                }
+            }
+        }
+        KernelArch::best_supported()
+    }
+
+    /// Process-wide kernel choice (env resolved once).
+    pub fn active() -> KernelArch {
+        static ARCH: OnceLock<KernelArch> = OnceLock::new();
+        *ARCH.get_or_init(KernelArch::detect)
+    }
+}
+
+/// A dense (M, K) weight matrix repacked into mr-row panels, each stored
+/// k-major so the inner kernel reads the mr weights of one K step as one
+/// contiguous block (instead of striding by K per row — the PR-1 layout):
+///
+/// `data[p*mr*K + ki*rows + i] == wmat[(p*mr + i)*K + ki]`
+///
+/// where panel `p` covers rows `p*mr .. p*mr + rows` and `rows =
+/// min(mr, M - p*mr)` (the last panel may be ragged).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedDense {
+    pub m: usize,
+    pub k: usize,
+    /// Panel height the layout was packed for (== the plan's `tile.mr`).
+    pub mr: usize,
+    pub data: Vec<f32>,
+}
+
+impl PackedDense {
+    pub fn pack(wmat: &[f32], m: usize, k: usize, mr: usize) -> PackedDense {
+        let mr = mr.max(1);
+        assert_eq!(wmat.len(), m * k, "weight matrix shape");
+        let mut data = vec![0.0f32; m * k];
+        let mut off = 0;
+        let mut m0 = 0;
+        while m0 < m {
+            let rows = mr.min(m - m0);
+            for ki in 0..k {
+                for i in 0..rows {
+                    data[off + ki * rows + i] = wmat[(m0 + i) * k + ki];
+                }
+            }
+            off += rows * k;
+            m0 += rows;
+        }
+        PackedDense { m, k, mr, data }
+    }
+
+    pub fn panels(&self) -> usize {
+        self.m.div_ceil(self.mr)
+    }
+
+    pub fn panel_rows(&self, p: usize) -> usize {
+        self.mr.min(self.m - p * self.mr)
+    }
+
+    /// Panel `p`'s packed block: `panel_rows(p) * k` floats, k-major.
+    pub fn panel(&self, p: usize) -> &[f32] {
+        let off = p * self.mr * self.k;
+        &self.data[off..off + self.panel_rows(p) * self.k]
     }
 }
 
@@ -35,14 +199,79 @@ pub struct KgsGroup {
     pub cols: Vec<u32>,
     /// Packed weights, row-major (m_eff, cols.len()).
     pub panel: Vec<f32>,
+    /// Column-major-within-panel copy, (cols.len(), m_eff):
+    /// `panel_cm[j*m_eff + i] == panel[i*cols.len() + j]`. Chosen by the
+    /// planner when `m_eff > 1` so the kernel reads one contiguous `m_eff`
+    /// block per gathered column; empty means "walk `panel` row-major"
+    /// (identical values either way — same arithmetic, same bits).
+    pub panel_cm: Vec<f32>,
 }
 
-/// All kept channel-group panels of one filter-group row (Vanilla scheme).
-#[derive(Debug, Clone)]
-pub struct VanillaRow {
-    pub m0: usize,
-    pub m_eff: usize,
-    pub groups: Vec<KgsGroup>,
+impl KgsGroup {
+    /// Build a group, deriving the column-major layout when it pays
+    /// (`m_eff > 1`; a single row is already contiguous).
+    pub fn new(m0: usize, m_eff: usize, cols: Vec<u32>, panel: Vec<f32>) -> KgsGroup {
+        let ncols = cols.len();
+        assert_eq!(panel.len(), m_eff * ncols, "panel shape");
+        let panel_cm = if m_eff > 1 && ncols > 0 {
+            let mut cm = vec![0.0f32; m_eff * ncols];
+            for i in 0..m_eff {
+                for j in 0..ncols {
+                    cm[j * m_eff + i] = panel[i * ncols + j];
+                }
+            }
+            cm
+        } else {
+            Vec::new()
+        };
+        KgsGroup { m0, m_eff, cols, panel, panel_cm }
+    }
+}
+
+/// Precomputed bucket schedule for executing sparse panels: a partition of
+/// the output rows into disjoint buckets (one pool task each) plus the
+/// index span of the flat group list feeding each bucket. Built once at
+/// compile time so the executor does zero allocation per call.
+#[derive(Debug, Clone, Default)]
+pub struct PanelSchedule {
+    /// First output row of bucket `j`; bucket rows are
+    /// `starts[j] .. starts[j] + rows[j]`.
+    pub starts: Vec<usize>,
+    /// Output rows per bucket (sums to the layer's out_ch).
+    pub rows: Vec<usize>,
+    /// `[a, b)` ranges into the flat group list per bucket (groups sharing
+    /// an `m0` stay in one bucket in their original q-order).
+    pub spans: Vec<(u32, u32)>,
+    /// Largest `m_eff` over all groups (accumulator scratch sizing).
+    pub max_m_eff: usize,
+}
+
+impl PanelSchedule {
+    /// Partition `0..m_total` by the groups' `m0` values. Groups must be
+    /// p-major (non-decreasing `m0`), which codegen guarantees.
+    pub fn build(groups: &[KgsGroup], m_total: usize) -> PanelSchedule {
+        let mut s = PanelSchedule {
+            starts: vec![0],
+            rows: Vec::new(),
+            spans: vec![(0, 0)],
+            max_m_eff: groups.iter().map(|g| g.m_eff).max().unwrap_or(1),
+        };
+        let mut last = 0usize;
+        for (gi, g) in groups.iter().enumerate() {
+            assert!(g.m0 >= last, "codegen must emit panels with non-decreasing m0");
+            assert!(g.m0 + g.m_eff <= m_total, "group escapes the output");
+            if g.m0 > last {
+                s.rows.push(g.m0 - last);
+                s.spans.last_mut().unwrap().1 = gi as u32;
+                s.starts.push(g.m0);
+                s.spans.push((gi as u32, gi as u32));
+                last = g.m0;
+            }
+        }
+        s.rows.push(m_total - last);
+        s.spans.last_mut().unwrap().1 = groups.len() as u32;
+        s
+    }
 }
 
 /// Executor-ready form of one conv layer.
@@ -50,15 +279,17 @@ pub struct VanillaRow {
 pub enum ConvKind {
     /// Full (M, K) row-major weight matrix.
     Dense { wmat: Vec<f32> },
-    /// Compacted KGS panels.
+    /// Compacted KGS panels (p-major, q-minor).
     Kgs { groups: Vec<KgsGroup> },
-    /// Per-filter-group kept channel groups.
-    Vanilla { rows: Vec<VanillaRow> },
+    /// Per-filter-group kept channel-group panels, flattened p-major — the
+    /// schedule re-splits them into filter-group row buckets.
+    Vanilla { groups: Vec<KgsGroup> },
     /// Surviving filter rows only (`rows[i]` = original filter index).
     Filter { rows: Vec<u32>, wmat: Vec<f32> },
 }
 
-/// A compiled conv layer: geometry + packed weights + tuned tiling.
+/// A compiled conv layer: geometry + packed weights + tuned configuration
+/// (tile, kernel variant, worker cap).
 #[derive(Debug, Clone)]
 pub struct CompiledConv {
     pub name: String,
@@ -67,13 +298,23 @@ pub struct CompiledConv {
     pub bias: Vec<f32>,
     pub kind: ConvKind,
     pub tile: GemmTile,
+    /// mr-major packed panels for Dense/Filter plans (the layout the SIMD
+    /// kernel streams). Built by [`Self::finalize`]; `None` only for
+    /// hand-rolled plans, which fall back to packing on the fly.
+    pub packed: Option<PackedDense>,
+    /// Bucket schedule for Kgs/Vanilla plans (zero-allocation dispatch).
+    pub sched: Option<PanelSchedule>,
+    /// Tuned kernel-variant override; `None` = [`KernelArch::active`].
+    pub kernel: Option<KernelArch>,
+    /// Tuned per-layer worker cap; 0 = every pool worker.
+    pub threads: usize,
     /// Actual FLOPs per clip after compaction (2*MACs).
     pub flops: usize,
 }
 
 /// A cheap per-call binding of a compiled conv to an actual input
 /// geometry (batch / spatial size may differ from the native resolution
-/// the plan was compiled at) and an optionally overridden tile.
+/// the plan was compiled at) and the resolved execution config.
 ///
 /// This is the only way the executors accept a rebound geometry — the
 /// packed weights stay behind a shared borrow, so the old per-forward
@@ -84,16 +325,65 @@ pub struct ConvCall<'a> {
     pub cc: &'a CompiledConv,
     pub geom: Conv3dGeometry,
     pub tile: GemmTile,
+    /// Resolved kernel variant for this call.
+    pub kernel: KernelArch,
+    /// Worker cap for this call (`usize::MAX` = uncapped).
+    pub cap: usize,
 }
 
 impl CompiledConv {
     /// Bind this plan to an input spatial size for one call. Zero-copy:
-    /// only the 6-word geometry and the tile are materialized.
+    /// only the geometry and the execution config are materialized. An
+    /// override this machine cannot execute falls back to the detected
+    /// kernel — the last gate before the `target_feature` code paths
+    /// (`supported()` reads std's cached feature detection; it is cheap).
     pub fn bind(&self, in_spatial: [usize; 3]) -> ConvCall<'_> {
         ConvCall {
             cc: self,
             geom: Conv3dGeometry { in_spatial, ..self.geom },
             tile: self.tile,
+            kernel: self
+                .kernel
+                .filter(|k| k.supported())
+                .unwrap_or_else(KernelArch::active),
+            cap: if self.threads == 0 { usize::MAX } else { self.threads },
+        }
+    }
+
+    /// Build the derived execution layouts (packed dense panels / sparse
+    /// bucket schedule) for the current `tile`. Codegen calls this once
+    /// per plan; call it again after mutating `kind` by hand.
+    pub fn finalize(&mut self) {
+        match &self.kind {
+            ConvKind::Dense { wmat } => {
+                self.packed = Some(PackedDense::pack(
+                    wmat,
+                    self.geom.out_ch,
+                    self.geom.cols(),
+                    self.tile.mr,
+                ));
+            }
+            ConvKind::Filter { rows, wmat } => {
+                self.packed = Some(PackedDense::pack(
+                    wmat,
+                    rows.len(),
+                    self.geom.cols(),
+                    self.tile.mr,
+                ));
+            }
+            ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => {
+                self.sched = Some(PanelSchedule::build(groups, self.geom.out_ch));
+            }
+        }
+    }
+
+    /// Change the tile, repacking the dense panel layout when `mr` moved
+    /// (the packed panel height must always equal `tile.mr`).
+    pub fn set_tile(&mut self, tile: GemmTile) {
+        let repack = tile.mr != self.tile.mr || self.packed.is_none();
+        self.tile = tile;
+        if repack {
+            self.finalize();
         }
     }
 
@@ -102,20 +392,76 @@ impl CompiledConv {
         self.flops as f64 / self.geom.flops(1) as f64
     }
 
-    /// Bytes of packed weights (for the cache/memory model).
+    /// Bytes of packed weights actually streamed by the executor (for the
+    /// cache/memory model) — one layout per plan, not both.
     pub fn weight_bytes(&self) -> usize {
         let f = match &self.kind {
             ConvKind::Dense { wmat } => wmat.len(),
-            ConvKind::Kgs { groups } => {
-                groups.iter().map(|g| g.panel.len() + g.cols.len()).sum()
-            }
-            ConvKind::Vanilla { rows } => rows
+            ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => groups
                 .iter()
-                .flat_map(|r| r.groups.iter())
                 .map(|g| g.panel.len() + g.cols.len())
                 .sum(),
             ConvKind::Filter { rows, wmat } => wmat.len() + rows.len(),
         };
         4 * f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_dense_round_trip() {
+        let (m, k, mr) = (7usize, 5usize, 3usize); // ragged last panel (1 row)
+        let wmat: Vec<f32> = (0..m * k).map(|i| i as f32).collect();
+        let p = PackedDense::pack(&wmat, m, k, mr);
+        assert_eq!(p.panels(), 3);
+        assert_eq!(p.panel_rows(2), 1);
+        for pi in 0..p.panels() {
+            let rows = p.panel_rows(pi);
+            let panel = p.panel(pi);
+            for ki in 0..k {
+                for i in 0..rows {
+                    assert_eq!(panel[ki * rows + i], wmat[(pi * mr + i) * k + ki]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kgs_group_column_major_copy() {
+        let g = KgsGroup::new(0, 2, vec![3, 9], vec![1.0, 2.0, 3.0, 4.0]);
+        // row-major (2,2) -> column-major (2,2)
+        assert_eq!(g.panel_cm, vec![1.0, 3.0, 2.0, 4.0]);
+        let single = KgsGroup::new(4, 1, vec![0], vec![5.0]);
+        assert!(single.panel_cm.is_empty(), "single row needs no cm copy");
+    }
+
+    #[test]
+    fn panel_schedule_partitions_rows() {
+        let g = |m0: usize| KgsGroup::new(m0, 2, vec![0], vec![0.5, 0.5]);
+        // Buckets: m0=0 (two groups), m0=4 (one), trailing rows 6..10.
+        let groups = [g(0), g(0), g(4)];
+        let s = PanelSchedule::build(&groups, 10);
+        assert_eq!(s.starts, vec![0, 4]);
+        assert_eq!(s.rows, vec![4, 6]);
+        assert_eq!(s.spans, vec![(0, 2), (2, 3)]);
+        assert_eq!(s.rows.iter().sum::<usize>(), 10);
+        assert_eq!(s.max_m_eff, 2);
+        // Empty plan still covers the whole output with one bucket.
+        let e = PanelSchedule::build(&[], 6);
+        assert_eq!((e.starts.clone(), e.rows.clone()), (vec![0], vec![6]));
+        assert_eq!(e.spans, vec![(0, 0)]);
+    }
+
+    #[test]
+    fn kernel_arch_names_round_trip() {
+        for k in [KernelArch::Scalar, KernelArch::Avx2, KernelArch::Neon] {
+            assert_eq!(KernelArch::parse(k.name()), Some(k));
+            assert!(k.lanes() >= 1);
+        }
+        assert!(KernelArch::Scalar.supported());
+        assert!(KernelArch::best_supported().supported());
     }
 }

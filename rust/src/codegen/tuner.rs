@@ -1,15 +1,24 @@
-//! Auto-tuner: search GEMM tile parameters per layer shape on the actual
-//! machine — the paper's "all models are tuned to their best
-//! configurations, e.g. the best tiling size, unrolling size".
+//! Auto-tuner: search GEMM tile parameters, SIMD kernel variant and
+//! per-layer worker count per layer shape on the actual machine — the
+//! paper's "all models are tuned to their best configurations, e.g. the
+//! best tiling size, unrolling size".
+//!
+//! The winning configuration is persisted as a JSON tuning database
+//! ([`TuneDb`]) that `NativeEngine` loads at build time (path from
+//! `RT3D_TUNE_DB`, falling back to `<crate>/tune_db.json`), so a tuned
+//! deployment keeps its per-layer config across restarts.
 
-use crate::codegen::{CompiledConv, ConvKind, GemmTile};
+use crate::codegen::{CompiledConv, ConvKind, GemmTile, KernelArch};
 use crate::executors::{self, AccSlabs};
 use crate::tensor::{Mat, Tensor5};
+use crate::util::error::Context;
+use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
 use std::time::Instant;
 
-/// Candidate tile grid. Small by design: the paper's tuner explores tiling
-/// and unrolling; we search register rows x cache blocks.
+/// Candidate tile grid, mr-major (the tuner repacks once per mr step).
+/// Small by design: the paper's tuner explores tiling and unrolling; we
+/// search register rows x cache blocks.
 pub fn candidates() -> Vec<GemmTile> {
     let mut v = Vec::new();
     for mr in [2usize, 4, 8] {
@@ -24,9 +33,15 @@ pub fn candidates() -> Vec<GemmTile> {
 
 /// Time one conv execution with a given tile (median of `reps`).
 /// Runs on the process-global pool so tuning reflects the `RT3D_THREADS`
-/// the model will serve with; the tile is overridden on the call binding,
-/// never by cloning the plan's weights.
+/// the model will serve with; the tile, kernel and worker cap are
+/// overridden on the call binding, never by cloning the plan's weights.
+/// `tile.mr` must match the plan's packed layout for Dense/Filter kinds —
+/// [`tune_conv`] repacks via `set_tile` before crossing an mr boundary.
 pub fn time_conv(cc: &CompiledConv, x: &Tensor5, tile: GemmTile, reps: usize) -> f64 {
+    debug_assert!(
+        cc.packed.as_ref().map_or(true, |p| p.mr == tile.mr.max(1)),
+        "tile.mr must match the packed panel height (call set_tile first)"
+    );
     let g = cc.geom;
     let pt = executors::im2col_t(x, &g);
     let mut out = Mat::zeros(g.out_ch, pt.cols);
@@ -36,7 +51,7 @@ pub fn time_conv(cc: &CompiledConv, x: &Tensor5, tile: GemmTile, reps: usize) ->
     let slabs = AccSlabs::global();
     let mut times: Vec<f64> = (0..reps.max(1))
         .map(|_| {
-            // run_conv_bound zero-fills the output itself.
+            // run_conv_bound owns output init itself.
             let t0 = Instant::now();
             executors::run_conv_bound(&call, &pt, &mut out, pool, slabs);
             t0.elapsed().as_secs_f64()
@@ -51,6 +66,10 @@ pub fn time_conv(cc: &CompiledConv, x: &Tensor5, tile: GemmTile, reps: usize) ->
 pub struct TuneReport {
     pub name: String,
     pub best: GemmTile,
+    /// Tuned kernel override (`None` = the auto-detected ISA won).
+    pub kernel: Option<KernelArch>,
+    /// Tuned worker cap (0 = every pool worker).
+    pub threads: usize,
     pub best_s: f64,
     pub default_s: f64,
 }
@@ -61,7 +80,9 @@ impl TuneReport {
     }
 }
 
-/// Tune a compiled conv in place; returns the report.
+/// Tune a compiled conv in place (tile grid, then kernel variant, then
+/// worker cap — a coordinate descent over the three config axes);
+/// returns the report.
 pub fn tune_conv(cc: &mut CompiledConv, reps: usize) -> TuneReport {
     let x = Tensor5::random(
         [
@@ -73,15 +94,23 @@ pub fn tune_conv(cc: &mut CompiledConv, reps: usize) -> TuneReport {
         ],
         7,
     );
+    cc.set_tile(GemmTile::default());
+    cc.kernel = None;
+    cc.threads = 0;
     let default_s = time_conv(cc, &x, GemmTile::default(), reps);
     let mut best = GemmTile::default();
     let mut best_s = default_s;
+    // --- tile grid (repack once per mr step) ---------------------------
     for t in candidates() {
-        // mr > 4 only helps dense panels; sparse panels use their own walk.
+        // mr only changes the dense packing; sparse panels use their own
+        // per-group walk, so skip the redundant mr sweep there.
         if matches!(cc.kind, ConvKind::Kgs { .. } | ConvKind::Vanilla { .. })
             && t.mr != GemmTile::default().mr
         {
             continue;
+        }
+        if t.mr != cc.tile.mr {
+            cc.set_tile(GemmTile { mr: t.mr, ..cc.tile });
         }
         let s = time_conv(cc, &x, t, reps);
         if s < best_s {
@@ -89,13 +118,208 @@ pub fn tune_conv(cc: &mut CompiledConv, reps: usize) -> TuneReport {
             best = t;
         }
     }
-    cc.tile = best;
-    TuneReport { name: cc.name.clone(), best, best_s, default_s }
+    cc.set_tile(best);
+    // --- kernel variant (detected ISA vs scalar fallback) --------------
+    let active = KernelArch::active();
+    if active != KernelArch::Scalar {
+        cc.kernel = Some(KernelArch::Scalar);
+        let s = time_conv(cc, &x, best, reps);
+        if s < best_s {
+            best_s = s;
+        } else {
+            cc.kernel = None;
+        }
+    }
+    // --- per-layer worker cap (small layers often prefer fewer) --------
+    let full = ThreadPool::global().threads();
+    let mut best_cap = 0usize; // 0 = uncapped
+    for cap in [1usize, 2, 4] {
+        if cap >= full {
+            break;
+        }
+        cc.threads = cap;
+        let s = time_conv(cc, &x, best, reps);
+        if s < best_s {
+            best_s = s;
+            best_cap = cap;
+        } else {
+            break;
+        }
+    }
+    cc.threads = best_cap;
+    TuneReport {
+        name: cc.name.clone(),
+        best,
+        kernel: cc.kernel,
+        threads: cc.threads,
+        best_s,
+        default_s,
+    }
 }
 
 /// Tune every conv of a compiled model (in place).
 pub fn tune_model(convs: &mut [CompiledConv], reps: usize) -> Vec<TuneReport> {
     convs.iter_mut().map(|c| tune_conv(c, reps)).collect()
+}
+
+/// Tune every conv and collect the winning configs into a database ready
+/// to persist with [`TuneDb::save`].
+pub fn tune_model_db(convs: &mut [CompiledConv], reps: usize) -> (Vec<TuneReport>, TuneDb) {
+    let reports = tune_model(convs, reps);
+    let mut db = TuneDb::default();
+    for cc in convs.iter() {
+        db.record(cc);
+    }
+    (reports, db)
+}
+
+/// One persisted per-layer configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneEntry {
+    pub tile: GemmTile,
+    /// `None` = auto (detected ISA).
+    pub kernel: Option<KernelArch>,
+    /// 0 = every pool worker.
+    pub threads: usize,
+}
+
+/// Persisted tuning database: layer key -> winning config. The key folds
+/// in the layer name, plan kind and GEMM shape so a retuned or reshaped
+/// model never picks up a stale entry.
+#[derive(Debug, Clone, Default)]
+pub struct TuneDb {
+    pub entries: std::collections::HashMap<String, TuneEntry>,
+}
+
+impl TuneDb {
+    pub fn key(cc: &CompiledConv) -> String {
+        let kind = match &cc.kind {
+            ConvKind::Dense { .. } => "dense",
+            ConvKind::Kgs { .. } => "kgs",
+            ConvKind::Vanilla { .. } => "vanilla",
+            ConvKind::Filter { .. } => "filter",
+        };
+        format!(
+            "{}|{kind}|m{}k{}r{}",
+            cc.name,
+            cc.geom.out_ch,
+            cc.geom.cols(),
+            cc.geom.rows(1)
+        )
+    }
+
+    pub fn record(&mut self, cc: &CompiledConv) {
+        self.entries.insert(
+            Self::key(cc),
+            TuneEntry { tile: cc.tile, kernel: cc.kernel, threads: cc.threads },
+        );
+    }
+
+    /// Apply a stored config to a freshly compiled plan (repacking for the
+    /// stored mr). A kernel override the running machine cannot execute
+    /// (e.g. a db tuned on an AVX2 host, applied on one without) falls
+    /// back to auto — `bind()` must never resolve to an unsupported ISA,
+    /// that would be UB in the `target_feature` kernels. Returns whether
+    /// an entry matched.
+    pub fn apply(&self, cc: &mut CompiledConv) -> bool {
+        match self.entries.get(&Self::key(cc)) {
+            Some(e) => {
+                cc.set_tile(e.tile);
+                cc.kernel = e.kernel.filter(|k| k.supported());
+                if cc.kernel != e.kernel {
+                    eprintln!(
+                        "tune db: kernel {:?} for {} unsupported here; using auto",
+                        e.kernel.map(|k| k.name()),
+                        cc.name
+                    );
+                }
+                cc.threads = e.threads;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Default database location: `RT3D_TUNE_DB` when set, else
+    /// `<crate>/tune_db.json` next to the manifest.
+    pub fn default_path() -> std::path::PathBuf {
+        match std::env::var("RT3D_TUNE_DB") {
+            Ok(p) if !p.trim().is_empty() => std::path::PathBuf::from(p),
+            _ => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tune_db.json"),
+        }
+    }
+
+    /// Load the default database if one exists (quietly `None` otherwise —
+    /// an untuned machine runs on defaults).
+    pub fn load_default() -> Option<TuneDb> {
+        let path = Self::default_path();
+        if !path.exists() {
+            return None;
+        }
+        match Self::load(&path) {
+            Ok(db) => Some(db),
+            Err(e) => {
+                eprintln!("ignoring unreadable tune db {}: {e}", path.display());
+                None
+            }
+        }
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::util::error::Result<TuneDb> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = Json::parse(&text)?;
+        let mut db = TuneDb::default();
+        for e in doc.req("entries")?.as_arr()? {
+            let key = e.req("key")?.as_str()?.to_string();
+            let tile = GemmTile {
+                mr: e.req("mr")?.as_usize()?,
+                rc: e.req("rc")?.as_usize()?,
+                kc: e.req("kc")?.as_usize()?,
+            };
+            let kernel = match e.req("kernel")?.as_str()? {
+                "auto" => None,
+                name => match KernelArch::parse(name) {
+                    Some(k) => Some(k),
+                    None => {
+                        eprintln!("tune db: unknown kernel {name:?}; using auto");
+                        None
+                    }
+                },
+            };
+            let threads = e.req("threads")?.as_usize()?;
+            db.entries.insert(key, TuneEntry { tile, kernel, threads });
+        }
+        Ok(db)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> crate::util::error::Result<()> {
+        // Keys carry manifest layer names verbatim — escape so a name with
+        // a quote/backslash cannot produce an unloadable database.
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let mut keys: Vec<&String> = self.entries.keys().collect();
+        keys.sort();
+        let mut json = String::from("{\n  \"version\": 1,\n  \"entries\": [\n");
+        for (i, key) in keys.iter().enumerate() {
+            let e = &self.entries[*key];
+            json.push_str(&format!(
+                "    {{\"key\": \"{}\", \"mr\": {}, \"rc\": {}, \"kc\": {}, \"kernel\": \"{}\", \"threads\": {}}}{}\n",
+                esc(key),
+                e.tile.mr,
+                e.tile.rc,
+                e.tile.kc,
+                e.kernel.map_or("auto", |k| k.name()),
+                e.threads,
+                if i + 1 < keys.len() { "," } else { "" }
+            ));
+        }
+        json.push_str("  ]\n}\n");
+        std::fs::write(path, json)
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
 }
 
 /// Group-size sweep used by E7 (`benches/group_size.rs` + `tune_groups`
@@ -188,5 +412,73 @@ mod tests {
     fn default_tile_sane() {
         let t = GemmTile::default();
         assert!(t.mr >= 1 && t.rc >= 1 && t.kc >= 1);
+    }
+
+    #[test]
+    fn tune_db_round_trips_through_json() {
+        let mut db = TuneDb::default();
+        db.entries.insert(
+            "conv1|dense|m16k216r8192".into(),
+            TuneEntry {
+                tile: GemmTile { mr: 8, rc: 256, kc: 128 },
+                kernel: Some(KernelArch::Scalar),
+                threads: 2,
+            },
+        );
+        db.entries.insert(
+            "conv2|kgs|m32k864r2048".into(),
+            TuneEntry { tile: GemmTile::default(), kernel: None, threads: 0 },
+        );
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("rt3d_tune_db_test_{}.json", std::process::id()));
+        db.save(&path).unwrap();
+        let loaded = TuneDb::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.entries.len(), 2);
+        let e = &loaded.entries["conv1|dense|m16k216r8192"];
+        assert_eq!(e.tile, GemmTile { mr: 8, rc: 256, kc: 128 });
+        assert_eq!(e.kernel, Some(KernelArch::Scalar));
+        assert_eq!(e.threads, 2);
+        let e2 = &loaded.entries["conv2|kgs|m32k864r2048"];
+        assert_eq!(e2.kernel, None);
+        assert_eq!(e2.threads, 0);
+    }
+
+    #[test]
+    fn tune_db_applies_and_repacks() {
+        use crate::codegen::compile_conv_dense;
+        use crate::model::{TensorRef, WeightRefs};
+        let dummy = TensorRef { offset: 0, shape: vec![], dtype: "f32".into() };
+        let layer = crate::model::ConvLayer {
+            name: "t".into(),
+            in_ch: 4,
+            out_ch: 6,
+            kernel: [1, 1, 1],
+            stride: [1, 1, 1],
+            padding: [0, 0, 0],
+            relu: false,
+            weights: WeightRefs { w: dummy.clone(), b: dummy },
+            weights_sparse: None,
+            unit_mask: None,
+        };
+        let geom = crate::tensor::Conv3dGeometry {
+            in_ch: 4,
+            out_ch: 6,
+            kernel: [1, 1, 1],
+            stride: [1, 1, 1],
+            padding: [0, 0, 0],
+            in_spatial: [2, 2, 2],
+        };
+        let w = vec![0.5f32; 6 * 4];
+        let mut cc = compile_conv_dense(&layer, &geom, &w, vec![0.0; 6]);
+        let mut tuned = cc.clone();
+        tuned.set_tile(GemmTile { mr: 3, rc: 64, kc: 32 });
+        tuned.threads = 2;
+        let mut db = TuneDb::default();
+        db.record(&tuned);
+        assert!(db.apply(&mut cc), "same key must match");
+        assert_eq!(cc.tile, GemmTile { mr: 3, rc: 64, kc: 32 });
+        assert_eq!(cc.threads, 2);
+        assert_eq!(cc.packed.as_ref().unwrap().mr, 3, "apply must repack");
     }
 }

@@ -88,12 +88,8 @@ pub fn conv_cache_stats(cc: &CompiledConv, _llc: usize, b: usize) -> CacheStats 
             let loads = kept_cols * (r / 512).max(1) * 2;
             CacheStats { loads, hits: loads.saturating_sub(misses), misses }
         }
-        ConvKind::Vanilla { rows } => {
-            let kept_cols: usize = rows
-                .iter()
-                .flat_map(|rr| rr.groups.iter())
-                .map(|gr| gr.cols.len())
-                .sum();
+        ConvKind::Vanilla { groups } => {
+            let kept_cols: usize = groups.iter().map(|gr| gr.cols.len()).sum();
             let loads = kept_cols * (r / 512).max(1) * 2;
             let misses = kept_cols * r / k.max(1) + cc.weight_bytes() / 4;
             CacheStats { loads, hits: loads.saturating_sub(misses), misses }
@@ -145,6 +141,10 @@ mod tests {
             bias: vec![0.0; 32],
             kind: ConvKind::Dense { wmat: vec![0.1; 32 * 32 * 27] },
             tile: GemmTile::default(),
+            packed: None,
+            sched: None,
+            kernel: None,
+            threads: 0,
             flops: g.flops(1),
         }
     }

@@ -191,6 +191,10 @@ mod tests {
             bias: vec![0.0; m],
             kind: ConvKind::Dense { wmat: vec![0.1; m * c * 27] },
             tile: GemmTile::default(),
+            packed: None,
+            sched: None,
+            kernel: None,
+            threads: 0,
             flops: geom.flops(1),
         }
     }

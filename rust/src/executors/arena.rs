@@ -1,14 +1,15 @@
 //! Scratch arena: pre-sized, reused working memory for the conv hot path.
 //!
-//! One forward pass used to allocate, per conv layer: a fresh im2col
-//! `(K, R)` matrix, a fresh GEMM output `(M, R)` matrix, a per-`r0`-block
-//! accumulator vec inside `gemm_panel`, and a deep clone of the whole
-//! `CompiledConv` (weights included). The arena replaces all of those with
-//! buffers owned by the engine and resized in place — after warm-up the
-//! steady-state serving loop allocates no buffers proportional to the
-//! data (the only transient allocation left is the pool's O(tasks)
-//! scheduling list per parallel region), matching the paper's claim of
-//! generated code with a fixed working set.
+//! One forward pass used to allocate, per layer: a fresh im2col `(K, R)`
+//! matrix, a fresh GEMM output `(M, R)` matrix, per-block accumulator
+//! vecs, the pool's O(tasks) scheduling list, and a fresh activation
+//! tensor out of every conv/pool/dense layer. The arena replaces all of
+//! those: im2col/GEMM matrices and accumulator slabs are engine-owned and
+//! resized in place, the parked pool schedules by atomic counter (no
+//! list), and [`BufPool`] recycles activation buffers layer-to-layer — so
+//! after warm-up a steady-state `forward_owned` performs **zero heap
+//! allocations** apart from the returned logits matrix, matching the
+//! paper's claim of generated code with a fixed working set.
 
 use crate::tensor::Mat;
 use std::sync::{Mutex, OnceLock};
@@ -67,8 +68,68 @@ impl AccSlabs {
     }
 }
 
+/// Recycled activation buffers: every layer takes its output buffer from
+/// here and returns its (consumed) input buffer, so the layer-to-layer
+/// value flow stops allocating once the cycle has warmed up. Contents of
+/// a taken buffer are unspecified beyond `len` — every consumer overwrites
+/// its full output.
+#[derive(Default)]
+pub struct BufPool {
+    free: Vec<Vec<f32>>,
+    grows: usize,
+}
+
+impl BufPool {
+    /// Free-list cap: the serving cycle keeps donating the caller's input
+    /// clip buffer while the returned logits leave the engine, so without
+    /// a cap the list would grow by one buffer per forward.
+    const MAX_FREE: usize = 8;
+
+    /// Take a buffer of exactly `len` elements (best-fit from the free
+    /// list; tracks when it had to grow an allocation — the steady-state
+    /// test asserts this counter goes flat).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        // Smallest free buffer whose capacity suffices, else the largest.
+        let mut fit: Option<usize> = None;
+        let mut largest: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            if b.capacity() >= len
+                && fit.map_or(true, |j| b.capacity() < self.free[j].capacity())
+            {
+                fit = Some(i);
+            }
+            if largest.map_or(true, |j| b.capacity() > self.free[j].capacity()) {
+                largest = Some(i);
+            }
+        }
+        let mut buf = match fit.or(largest) {
+            Some(i) => self.free.swap_remove(i),
+            None => Vec::new(),
+        };
+        if buf.capacity() < len {
+            self.grows += 1;
+        }
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a consumed buffer to the free list.
+    pub fn give(&mut self, buf: Vec<f32>) {
+        if self.free.len() < Self::MAX_FREE && buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+
+    /// Times `take` had to grow (or create) an allocation. Flat across
+    /// forwards = the steady state is allocation-free here.
+    pub fn grows(&self) -> usize {
+        self.grows
+    }
+}
+
 /// Per-engine working set: the im2col patch matrix, the GEMM output
-/// matrix, and the accumulator slabs, reused across layers and forwards.
+/// matrix, the accumulator slabs and the activation recycler, reused
+/// across layers and forwards.
 pub struct ScratchArena {
     /// Transposed im2col patch matrix `(K, R)`.
     pub patches: Mat,
@@ -76,6 +137,8 @@ pub struct ScratchArena {
     pub out: Mat,
     /// Per-worker accumulators + filter compaction buffer.
     pub slabs: AccSlabs,
+    /// Recycled activation buffers (conv/pool/dense outputs).
+    pub recycler: BufPool,
 }
 
 impl ScratchArena {
@@ -84,6 +147,7 @@ impl ScratchArena {
             patches: Mat::zeros(0, 0),
             out: Mat::zeros(0, 0),
             slabs: AccSlabs::new(workers),
+            recycler: BufPool::default(),
         }
     }
 
@@ -122,6 +186,27 @@ mod tests {
         slabs.with_slab(0, 4, |s| assert_eq!(s.len(), 4));
         // Worker ids wrap instead of panicking.
         slabs.with_slab(5, 8, |s| assert_eq!(s.len(), 8));
+    }
+
+    #[test]
+    fn bufpool_recycles_without_growing() {
+        let mut bp = BufPool::default();
+        // Warm-up: two distinct sizes in flight at once.
+        let a = bp.take(100);
+        let b = bp.take(40);
+        assert_eq!(bp.grows(), 2);
+        bp.give(a);
+        bp.give(b);
+        // Steady state: the same sizes cycle with no new growth.
+        let g0 = bp.grows();
+        for _ in 0..10 {
+            let a = bp.take(100);
+            let b = bp.take(40);
+            assert_eq!((a.len(), b.len()), (100, 40));
+            bp.give(a);
+            bp.give(b);
+        }
+        assert_eq!(bp.grows(), g0, "steady-state take must not grow");
     }
 
     #[test]

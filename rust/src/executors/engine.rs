@@ -6,7 +6,7 @@
 //! * [`EngineKind::Untuned`]  — im2col + untuned GEMM (MNN-class)
 //! * [`EngineKind::Rt3d`]     — blocked micro-kernel, dense or sparse plans
 
-use crate::codegen::{self, CompiledConv, ConvKind};
+use crate::codegen::{self, tuner::TuneDb, CompiledConv, ConvKind, KernelArch};
 use crate::executors::{self, gemm, naive, ScratchArena};
 use crate::model::{Layer, Model};
 use crate::tensor::{Mat, Tensor5};
@@ -46,11 +46,16 @@ pub struct NativeEngine {
     pub profile: std::sync::atomic::AtomicBool,
     timings: std::sync::Mutex<Vec<LayerTiming>>,
     /// Worker pool for im2col + GEMM (width from `RT3D_THREADS` unless set
-    /// explicitly via [`Self::with_threads`]).
+    /// explicitly via [`Self::with_threads`]); parked workers live as long
+    /// as the engine.
     pool: ThreadPool,
-    /// Reused im2col/GEMM/accumulator buffers — the forward hot path does
-    /// no heap allocation for them after warm-up. Behind a mutex because
-    /// `forward` takes `&self`; one conv holds it at a time.
+    /// SIMD kernel variant for layers without a tuned override (and for
+    /// the dense head). Defaults to [`KernelArch::active`].
+    kernel: KernelArch,
+    /// Reused im2col/GEMM/accumulator/activation buffers — the steady
+    /// state forward allocates nothing but the returned logits. Behind a
+    /// mutex because `forward` takes `&self`; one layer holds it at a
+    /// time.
     arena: Mutex<ScratchArena>,
 }
 
@@ -69,7 +74,15 @@ impl NativeEngine {
         use_sparsity: bool,
         threads: usize,
     ) -> Self {
-        let compiled = codegen::compile_model(model, use_sparsity && kind == EngineKind::Rt3d);
+        let mut compiled =
+            codegen::compile_model(model, use_sparsity && kind == EngineKind::Rt3d);
+        // Apply the persisted tuning database (kernel variant x tile x
+        // per-layer worker cap) when one exists — see `codegen::tuner`.
+        if let Some(db) = TuneDb::load_default() {
+            for cc in compiled.iter_mut() {
+                db.apply(cc);
+            }
+        }
         let convs: std::collections::HashMap<String, CompiledConv> = compiled
             .into_iter()
             .map(|c| (c.name.clone(), c))
@@ -103,6 +116,7 @@ impl NativeEngine {
             profile: std::sync::atomic::AtomicBool::new(false),
             timings: std::sync::Mutex::new(Vec::new()),
             pool,
+            kernel: KernelArch::active(),
             arena: Mutex::new(arena),
         }
     }
@@ -110,6 +124,32 @@ impl NativeEngine {
     /// Executor worker threads this engine runs with.
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// The SIMD kernel variant layers run with by default.
+    pub fn kernel(&self) -> KernelArch {
+        self.kernel
+    }
+
+    /// Force every layer (and the dense head) onto one kernel variant —
+    /// used by the SIMD↔scalar parity tests and benches. Overrides any
+    /// tuned per-layer choice.
+    pub fn set_kernel(&mut self, kernel: KernelArch) {
+        assert!(
+            kernel.supported(),
+            "kernel {} is not executable on this machine",
+            kernel.name()
+        );
+        self.kernel = kernel;
+        for cc in self.convs.values_mut() {
+            cc.kernel = Some(kernel);
+        }
+    }
+
+    /// Times the activation recycler had to grow an allocation; flat
+    /// across steady-state forwards (see `tests/parallel.rs`).
+    pub fn recycler_grows(&self) -> usize {
+        self.arena.lock().unwrap().recycler.grows()
     }
 
     /// Current scratch-arena backing capacities (patches, out) — exposed
@@ -170,30 +210,46 @@ impl NativeEngine {
         v
     }
 
+    /// Take a recycled activation buffer of exactly `len` elements.
+    fn take_buf(&self, len: usize) -> Vec<f32> {
+        self.arena.lock().unwrap().recycler.take(len)
+    }
+
+    /// Return a consumed activation buffer to the recycler.
+    fn give_buf(&self, buf: Vec<f32>) {
+        self.arena.lock().unwrap().recycler.give(buf);
+    }
+
     fn run_layer(&self, l: &Layer, v: Value) -> Value {
         match l {
             Layer::Conv3d(c) => {
                 let t = v.tensor();
+                let batch = t.dims[0];
                 let cc = &self.convs[&c.name];
                 let t0 = std::time::Instant::now();
-                let out = self.run_conv(cc, &t);
+                let out = self.run_conv(cc, t);
                 if self.profile.load(std::sync::atomic::Ordering::Relaxed) {
                     self.timings.lock().unwrap().push(LayerTiming {
                         name: c.name.clone(),
                         seconds: t0.elapsed().as_secs_f64(),
-                        flops: cc.flops * t.dims[0],
+                        flops: cc.flops * batch,
                     });
                 }
                 Value::Tensor(out)
             }
             Layer::MaxPool3d { kernel, stride } => {
-                Value::Tensor(maxpool3d(&v.tensor(), *kernel, *stride))
+                let t = v.tensor();
+                let odims = maxpool3d_dims(t.dims, *kernel, *stride);
+                let buf = self.take_buf(odims.iter().product());
+                let out = maxpool3d_into(&t, *kernel, *stride, buf);
+                self.give_buf(t.data);
+                Value::Tensor(out)
             }
             Layer::AvgPoolGlobal => {
                 let t = v.tensor();
                 let [b, c, ..] = t.dims;
                 let sp: usize = t.dims[2..].iter().product();
-                let mut m = Mat::zeros(b, c);
+                let mut m = Mat::from_vec(b, c, self.take_buf(b * c));
                 for n in 0..b {
                     for ci in 0..c {
                         let base = t.idx(n, ci, 0, 0, 0);
@@ -201,6 +257,7 @@ impl NativeEngine {
                         *m.at_mut(n, ci) = s / sp as f32;
                     }
                 }
+                self.give_buf(t.data);
                 Value::Mat(m)
             }
             Layer::Flatten => {
@@ -212,27 +269,12 @@ impl NativeEngine {
             Layer::Dense(d) => {
                 let m = v.mat();
                 let dw = &self.dense[&d.name];
-                let mut out = Mat::zeros(m.rows, d.out_dim);
-                // x (B, in) @ w (in, out)
-                for r in 0..m.rows {
-                    let xrow = m.row(r);
-                    let orow = out.row_mut(r);
-                    for (i, &xv) in xrow.iter().enumerate() {
-                        if xv == 0.0 {
-                            continue;
-                        }
-                        let wrow = &dw.w[i * d.out_dim..(i + 1) * d.out_dim];
-                        for (o, wv) in orow.iter_mut().zip(wrow) {
-                            *o += xv * wv;
-                        }
-                    }
-                    for (o, bv) in orow.iter_mut().zip(&dw.b) {
-                        *o += bv;
-                        if d.relu && *o < 0.0 {
-                            *o = 0.0;
-                        }
-                    }
-                }
+                let mut out =
+                    Mat::from_vec(m.rows, d.out_dim, self.take_buf(m.rows * d.out_dim));
+                gemm::dense_head_with(
+                    &m, &dw.w, &dw.b, d.relu, &mut out, self.kernel, &self.pool,
+                );
+                self.give_buf(m.data);
                 Value::Mat(out)
             }
             Layer::Residual { body, shortcut, .. } => {
@@ -261,19 +303,26 @@ impl NativeEngine {
         }
     }
 
-    fn run_conv(&self, cc: &CompiledConv, x: &Tensor5) -> Tensor5 {
+    fn run_conv(&self, cc: &CompiledConv, x: Tensor5) -> Tensor5 {
         // Rebind geometry to the actual input spatial size (the manifest
         // geometry is for the native resolution; batch may differ). The
         // binding shares the plan's weights — no per-call clone.
-        let call = cc.bind([x.dims[2], x.dims[3], x.dims[4]]);
+        let mut call = cc.bind([x.dims[2], x.dims[3], x.dims[4]]);
+        if cc.kernel.is_none() {
+            call.kernel = self.kernel;
+        }
         let g = call.geom;
+        let batch = x.dims[0];
+        let [od, oh, ow] = g.out_spatial();
         match self.kind {
             EngineKind::Naive => {
                 let w = match &cc.kind {
                     ConvKind::Dense { wmat } => wmat,
                     _ => panic!("naive engine requires dense plans"),
                 };
-                naive::conv3d_naive(x, w, &cc.bias, &g, cc.relu)
+                let t = naive::conv3d_naive(&x, w, &cc.bias, &g, cc.relu);
+                self.give_buf(x.data);
+                t
             }
             EngineKind::Untuned => {
                 let w = match &cc.kind {
@@ -281,23 +330,33 @@ impl NativeEngine {
                     _ => panic!("untuned engine requires dense plans"),
                 };
                 let mut arena = self.arena.lock().unwrap();
-                let ScratchArena { patches, out, .. } = &mut *arena;
-                patches.reset(g.cols(), g.rows(x.dims[0]));
-                executors::im2col_t_into_with(x, &g, patches, &self.pool);
+                let ScratchArena { patches, out, recycler, .. } = &mut *arena;
+                patches.reset(g.cols(), g.rows(batch));
+                executors::im2col_t_into_with(&x, &g, patches, &self.pool);
                 out.reset(g.out_ch, patches.cols);
                 out.data.fill(0.0);
                 gemm::matmul_untuned(w, g.out_ch, patches, out);
-                executors::finish_bias_relu(cc, out);
-                executors::mat_to_tensor(out, x.dims[0], g.out_spatial())
+                executors::finish_bias_relu(cc, out, &self.pool);
+                let buf = recycler.take(batch * g.out_ch * od * oh * ow);
+                let t = executors::mat_to_tensor_with(
+                    out, batch, [od, oh, ow], &self.pool, buf,
+                );
+                recycler.give(x.data);
+                t
             }
             EngineKind::Rt3d => {
                 let mut arena = self.arena.lock().unwrap();
-                let ScratchArena { patches, out, slabs } = &mut *arena;
-                patches.reset(g.cols(), g.rows(x.dims[0]));
-                executors::im2col_t_into_with(x, &g, patches, &self.pool);
+                let ScratchArena { patches, out, slabs, recycler } = &mut *arena;
+                patches.reset(g.cols(), g.rows(batch));
+                executors::im2col_t_into_with(&x, &g, patches, &self.pool);
                 out.reset(g.out_ch, patches.cols);
                 executors::run_conv_bound(&call, patches, out, &self.pool, slabs);
-                executors::mat_to_tensor(out, x.dims[0], g.out_spatial())
+                let buf = recycler.take(batch * g.out_ch * od * oh * ow);
+                let t = executors::mat_to_tensor_with(
+                    out, batch, [od, oh, ow], &self.pool, buf,
+                );
+                recycler.give(x.data);
+                t
             }
         }
     }
@@ -359,15 +418,32 @@ fn collect_dense(
     }
 }
 
-/// Max-pool over NCDHW (VALID padding, matching lax.reduce_window usage).
-pub fn maxpool3d(x: &Tensor5, kernel: [usize; 3], stride: [usize; 3]) -> Tensor5 {
-    let [b, c, d, h, w] = x.dims;
+/// Output dims of a VALID max-pool over NCDHW.
+pub fn maxpool3d_dims(dims: [usize; 5], kernel: [usize; 3], stride: [usize; 3]) -> [usize; 5] {
+    let [b, c, d, h, w] = dims;
     let [kd, kh, kw] = kernel;
     let [sd, sh, sw] = stride;
-    let od = (d - kd) / sd + 1;
-    let oh = (h - kh) / sh + 1;
-    let ow = (w - kw) / sw + 1;
-    let mut out = Tensor5::zeros([b, c, od, oh, ow]);
+    [b, c, (d - kd) / sd + 1, (h - kh) / sh + 1, (w - kw) / sw + 1]
+}
+
+/// Max-pool over NCDHW (VALID padding, matching lax.reduce_window usage).
+pub fn maxpool3d(x: &Tensor5, kernel: [usize; 3], stride: [usize; 3]) -> Tensor5 {
+    maxpool3d_into(x, kernel, stride, Vec::new())
+}
+
+/// Max-pool writing into a caller-provided (recycled) buffer; every output
+/// element is assigned, so stale buffer contents are fine.
+pub fn maxpool3d_into(
+    x: &Tensor5,
+    kernel: [usize; 3],
+    stride: [usize; 3],
+    mut buf: Vec<f32>,
+) -> Tensor5 {
+    let [b, c, od, oh, ow] = maxpool3d_dims(x.dims, kernel, stride);
+    let [kd, kh, kw] = kernel;
+    let [sd, sh, sw] = stride;
+    buf.resize(b * c * od * oh * ow, 0.0);
+    let mut out = Tensor5::from_vec([b, c, od, oh, ow], buf);
     for n in 0..b {
         for ci in 0..c {
             for zo in 0..od {

@@ -1,22 +1,42 @@
 //! GEMM micro-kernels over the transposed patch matrix.
 //!
-//! All output-producing kernels share one inner shape: broadcast `mr`
-//! weight scalars (one column of the weight panel) and FMA them against a
+//! All output-producing kernels share one inner shape: broadcast one
+//! weight scalar per panel row and multiply-accumulate it against a
 //! contiguous span of a patch row — the rust analog of the paper's
-//! NEON-tuned generated code. KGS/Vanilla panels run the *same* kernel
-//! over fewer columns, which is why sparse speedup tracks the FLOPs
-//! pruning rate (paper §3, validated by `benches/sparsity_sweep.rs`).
+//! NEON-tuned generated code. Three coupled layers make it fast:
 //!
-//! Parallelism: the dense kernel splits the output into `mr`-row panels
-//! and hands each panel to one pool task. Panels own disjoint output rows
-//! and each panel replays the serial `(kc, rc)` block walk, so the result
-//! is bit-identical to the single-threaded kernel for any thread count
-//! (see `util::pool` for the full invariant).
+//! * **Prepacked weights** — dense/filter plans carry an mr-major
+//!   [`PackedDense`] layout (the mr weights of one K step are contiguous,
+//!   no stride-K loads); sparse KGS/Vanilla panels carry a column-major
+//!   copy chosen by the planner ([`KgsGroup::panel_cm`]).
+//! * **Explicit SIMD** — `core::arch` f32x8 AVX2 (runtime-detected) and
+//!   f32x4 NEON variants of the inner block, selected once per engine via
+//!   [`KernelArch`] (`RT3D_SIMD=scalar|auto` overrides). Lanes vectorize
+//!   across the R (output position) axis, so each output element keeps the
+//!   serial K accumulation order, and the SIMD ops are separate mul + add
+//!   (never fused FMA): per-lane rounding matches the scalar kernel
+//!   exactly, so **scalar and SIMD outputs are bit-identical** on finite
+//!   data (asserted by `tests/parallel.rs`).
+//! * **Pool parallelism** — the dense kernel splits the output into
+//!   `mr`-row panels and hands each panel to one pool task. Panels own
+//!   disjoint output rows and each panel replays the serial `(kc, rc)`
+//!   block walk, so the result is bit-identical to the single-threaded
+//!   kernel for any thread count (see `util::pool` for the invariant).
+//!
+//! KGS/Vanilla panels run the *same* inner block over fewer columns, which
+//! is why sparse speedup tracks the FLOPs pruning rate (paper §3).
+//!
+//! Output contract: `gemm_dense*` / `gemm_filter*` **own zero-init** of
+//! every output row they cover (the first K block assigns, later blocks
+//! accumulate) — callers must not pre-fill. `gemm_panel_core` accumulates
+//! into caller-zeroed rows (several sparse panels share a row range).
+//! [`gemm_dense_unpacked`] preserves the PR-1 strided scalar kernel as the
+//! micro-bench baseline; it accumulates like the old code did.
 
-use crate::codegen::{GemmTile, KgsGroup};
+use crate::codegen::{GemmTile, KernelArch, KgsGroup, PackedDense};
 use crate::executors::arena::AccSlabs;
 use crate::tensor::Mat;
-use crate::util::pool::ThreadPool;
+use crate::util::pool::{SendPtr, ThreadPool};
 
 /// MNN-class baseline: im2col GEMM with no blocking or register tiling.
 /// out (M, R) += w (M, K) * patches_t (K, R). Deliberately single-threaded
@@ -37,8 +57,342 @@ pub fn matmul_untuned(wmat: &[f32], m: usize, patches_t: &Mat, out: &mut Mat) {
     }
 }
 
-/// Register-blocked dense GEMM on the process-global pool/slabs.
-/// See [`gemm_dense_with`] for the explicit-pool variant the engine uses.
+/// Everything a kernel launch needs besides the operands: blocking, the
+/// selected ISA variant, the per-layer worker cap and the shared pool /
+/// accumulator slabs. Built from a [`crate::codegen::ConvCall`] by the
+/// executors, or by hand in benches.
+#[derive(Clone, Copy)]
+pub struct GemmCtx<'a> {
+    pub tile: GemmTile,
+    pub kernel: KernelArch,
+    /// Worker cap (`usize::MAX` = every pool worker).
+    pub cap: usize,
+    pub pool: &'a ThreadPool,
+    pub slabs: &'a AccSlabs,
+}
+
+impl<'a> GemmCtx<'a> {
+    /// Default config: active kernel, uncapped, explicit pool/slabs.
+    pub fn new(tile: GemmTile, pool: &'a ThreadPool, slabs: &'a AccSlabs) -> Self {
+        Self { tile, kernel: KernelArch::active(), cap: usize::MAX, pool, slabs }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Per-ISA inner primitives: acc[0..span] += w * p[0..span], element order
+// j ascending — identical rounding sequence in every variant.
+// --------------------------------------------------------------------------
+
+#[inline(always)]
+fn madd_span_scalar(acc: &mut [f32], prow: &[f32], w: f32) {
+    for (av, pv) in acc.iter_mut().zip(prow) {
+        *av += w * pv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    /// acc += w * p over `span` f32s, 8 lanes at a time, scalar tail.
+    /// Separate mul + add (not `_mm256_fmadd_ps`): fusing would change the
+    /// rounding vs the scalar kernel and break the SIMD↔scalar
+    /// bit-parity contract.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support, and `a`/`p` must be valid
+    /// for `span` reads/writes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn madd_span(a: *mut f32, p: *const f32, w: f32, span: usize) {
+        let wv = _mm256_set1_ps(w);
+        let mut j = 0usize;
+        while j + 8 <= span {
+            let av = _mm256_loadu_ps(a.add(j));
+            let pv = _mm256_loadu_ps(p.add(j));
+            _mm256_storeu_ps(a.add(j), _mm256_add_ps(av, _mm256_mul_ps(wv, pv)));
+            j += 8;
+        }
+        while j < span {
+            *a.add(j) += w * *p.add(j);
+            j += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    /// acc += w * p over `span` f32s, 4 lanes at a time, scalar tail.
+    /// `vmulq`+`vaddq` (not `vfmaq`) for the same bit-parity reason as the
+    /// AVX2 variant.
+    ///
+    /// # Safety
+    /// `a`/`p` must be valid for `span` reads/writes.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn madd_span(a: *mut f32, p: *const f32, w: f32, span: usize) {
+        let wv = vdupq_n_f32(w);
+        let mut j = 0usize;
+        while j + 4 <= span {
+            let av = vld1q_f32(a.add(j));
+            let pv = vld1q_f32(p.add(j));
+            vst1q_f32(a.add(j), vaddq_f32(av, vmulq_f32(wv, pv)));
+            j += 4;
+        }
+        while j < span {
+            *a.add(j) += w * *p.add(j);
+            j += 1;
+        }
+    }
+}
+
+/// Dispatched axpy used by the dense head (per-row granularity; the conv
+/// kernels dispatch once per block instead).
+#[inline]
+fn madd_span_dispatch(kernel: KernelArch, acc: &mut [f32], prow: &[f32], w: f32) {
+    debug_assert_eq!(acc.len(), prow.len());
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        KernelArch::Avx2 => unsafe {
+            x86::madd_span(acc.as_mut_ptr(), prow.as_ptr(), w, acc.len());
+        },
+        #[cfg(target_arch = "aarch64")]
+        KernelArch::Neon => unsafe {
+            neon::madd_span(acc.as_mut_ptr(), prow.as_ptr(), w, acc.len());
+        },
+        _ => madd_span_scalar(acc, prow, w),
+    }
+}
+
+// --------------------------------------------------------------------------
+// Packed dense block: acc (rows, span) = sum over ki in [k0, k1) of
+// wblock[.., ki] * patches_t[ki][r0..r1]. One scalar + one per-ISA copy,
+// structurally identical (same zero skips, same element order).
+// --------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn packed_block_scalar(
+    wblock: &[f32],
+    rows: usize,
+    patches_t: &Mat,
+    k0: usize,
+    k1: usize,
+    r0: usize,
+    r1: usize,
+    acc: &mut [f32],
+) {
+    let span = r1 - r0;
+    let acc = &mut acc[..rows * span];
+    acc.fill(0.0);
+    for ki in k0..k1 {
+        let ws = &wblock[(ki - k0) * rows..(ki - k0) * rows + rows];
+        if ws.iter().all(|&w| w == 0.0) {
+            continue;
+        }
+        let prow = &patches_t.row(ki)[r0..r1];
+        for (i, &w) in ws.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            madd_span_scalar(&mut acc[i * span..(i + 1) * span], prow, w);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn packed_block_avx2(
+    wblock: &[f32],
+    rows: usize,
+    patches_t: &Mat,
+    k0: usize,
+    k1: usize,
+    r0: usize,
+    r1: usize,
+    acc: &mut [f32],
+) {
+    let span = r1 - r0;
+    let acc = &mut acc[..rows * span];
+    acc.fill(0.0);
+    let ap = acc.as_mut_ptr();
+    for ki in k0..k1 {
+        let ws = &wblock[(ki - k0) * rows..(ki - k0) * rows + rows];
+        if ws.iter().all(|&w| w == 0.0) {
+            continue;
+        }
+        let prow = &patches_t.row(ki)[r0..r1];
+        let pp = prow.as_ptr();
+        for (i, &w) in ws.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            x86::madd_span(ap.add(i * span), pp, w, span);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+unsafe fn packed_block_neon(
+    wblock: &[f32],
+    rows: usize,
+    patches_t: &Mat,
+    k0: usize,
+    k1: usize,
+    r0: usize,
+    r1: usize,
+    acc: &mut [f32],
+) {
+    let span = r1 - r0;
+    let acc = &mut acc[..rows * span];
+    acc.fill(0.0);
+    let ap = acc.as_mut_ptr();
+    for ki in k0..k1 {
+        let ws = &wblock[(ki - k0) * rows..(ki - k0) * rows + rows];
+        if ws.iter().all(|&w| w == 0.0) {
+            continue;
+        }
+        let prow = &patches_t.row(ki)[r0..r1];
+        let pp = prow.as_ptr();
+        for (i, &w) in ws.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            neon::madd_span(ap.add(i * span), pp, w, span);
+        }
+    }
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn packed_block(
+    kernel: KernelArch,
+    wblock: &[f32],
+    rows: usize,
+    patches_t: &Mat,
+    k0: usize,
+    k1: usize,
+    r0: usize,
+    r1: usize,
+    acc: &mut [f32],
+) {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        KernelArch::Avx2 => unsafe {
+            packed_block_avx2(wblock, rows, patches_t, k0, k1, r0, r1, acc)
+        },
+        #[cfg(target_arch = "aarch64")]
+        KernelArch::Neon => unsafe {
+            packed_block_neon(wblock, rows, patches_t, k0, k1, r0, r1, acc)
+        },
+        _ => packed_block_scalar(wblock, rows, patches_t, k0, k1, r0, r1, acc),
+    }
+}
+
+// --------------------------------------------------------------------------
+// Sparse panel block: acc (m_eff, span) = panel * gathered patch rows.
+// Reads the column-major copy when the planner built one.
+// --------------------------------------------------------------------------
+
+fn panel_block_scalar(grp: &KgsGroup, patches_t: &Mat, r0: usize, r1: usize, acc: &mut [f32]) {
+    let span = r1 - r0;
+    let m_eff = grp.m_eff;
+    let ncols = grp.cols.len();
+    let acc = &mut acc[..m_eff * span];
+    acc.fill(0.0);
+    let cm = !grp.panel_cm.is_empty();
+    for (j, &src) in grp.cols.iter().enumerate() {
+        let prow = &patches_t.row(src as usize)[r0..r1];
+        for i in 0..m_eff {
+            let w = if cm { grp.panel_cm[j * m_eff + i] } else { grp.panel[i * ncols + j] };
+            if w == 0.0 {
+                continue;
+            }
+            madd_span_scalar(&mut acc[i * span..(i + 1) * span], prow, w);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn panel_block_avx2(
+    grp: &KgsGroup,
+    patches_t: &Mat,
+    r0: usize,
+    r1: usize,
+    acc: &mut [f32],
+) {
+    let span = r1 - r0;
+    let m_eff = grp.m_eff;
+    let ncols = grp.cols.len();
+    let acc = &mut acc[..m_eff * span];
+    acc.fill(0.0);
+    let ap = acc.as_mut_ptr();
+    let cm = !grp.panel_cm.is_empty();
+    for (j, &src) in grp.cols.iter().enumerate() {
+        let prow = &patches_t.row(src as usize)[r0..r1];
+        let pp = prow.as_ptr();
+        for i in 0..m_eff {
+            let w = if cm { grp.panel_cm[j * m_eff + i] } else { grp.panel[i * ncols + j] };
+            if w == 0.0 {
+                continue;
+            }
+            x86::madd_span(ap.add(i * span), pp, w, span);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn panel_block_neon(
+    grp: &KgsGroup,
+    patches_t: &Mat,
+    r0: usize,
+    r1: usize,
+    acc: &mut [f32],
+) {
+    let span = r1 - r0;
+    let m_eff = grp.m_eff;
+    let ncols = grp.cols.len();
+    let acc = &mut acc[..m_eff * span];
+    acc.fill(0.0);
+    let ap = acc.as_mut_ptr();
+    let cm = !grp.panel_cm.is_empty();
+    for (j, &src) in grp.cols.iter().enumerate() {
+        let prow = &patches_t.row(src as usize)[r0..r1];
+        let pp = prow.as_ptr();
+        for i in 0..m_eff {
+            let w = if cm { grp.panel_cm[j * m_eff + i] } else { grp.panel[i * ncols + j] };
+            if w == 0.0 {
+                continue;
+            }
+            neon::madd_span(ap.add(i * span), pp, w, span);
+        }
+    }
+}
+
+#[inline]
+fn panel_block(kernel: KernelArch, grp: &KgsGroup, patches_t: &Mat, r0: usize, r1: usize, acc: &mut [f32]) {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        KernelArch::Avx2 => unsafe { panel_block_avx2(grp, patches_t, r0, r1, acc) },
+        #[cfg(target_arch = "aarch64")]
+        KernelArch::Neon => unsafe { panel_block_neon(grp, patches_t, r0, r1, acc) },
+        _ => panel_block_scalar(grp, patches_t, r0, r1, acc),
+    }
+}
+
+// --------------------------------------------------------------------------
+// Dense GEMM drivers.
+// --------------------------------------------------------------------------
+
+/// Register-blocked dense GEMM on the process-global pool/slabs (packs the
+/// weights on the fly — benches/tests convenience; the engine runs
+/// [`gemm_dense_packed`] over the plan's prepacked layout).
 pub fn gemm_dense(wmat: &[f32], m: usize, patches_t: &Mat, out: &mut Mat, tile: GemmTile) {
     gemm_dense_with(
         wmat,
@@ -51,12 +405,100 @@ pub fn gemm_dense(wmat: &[f32], m: usize, patches_t: &Mat, out: &mut Mat, tile: 
     );
 }
 
-/// Register-blocked dense GEMM: processes `tile.mr` output rows at once,
-/// streaming K in `tile.kc` slices and R in `tile.rc` spans so the active
-/// patch rows stay in L1/L2 (the paper's cache-tiled generated code).
-/// Each `mr`-row panel is one pool task writing its own output rows; the
-/// accumulator comes from the worker's slab (no per-call allocation).
+/// Dense GEMM with explicit pool/slabs; packs on the fly (allocates).
 pub fn gemm_dense_with(
+    wmat: &[f32],
+    m: usize,
+    patches_t: &Mat,
+    out: &mut Mat,
+    tile: GemmTile,
+    pool: &ThreadPool,
+    slabs: &AccSlabs,
+) {
+    gemm_dense_ctx(wmat, m, patches_t, out, &GemmCtx::new(tile, pool, slabs));
+}
+
+/// Dense GEMM with a full execution context; packs on the fly (allocates).
+pub fn gemm_dense_ctx(wmat: &[f32], m: usize, patches_t: &Mat, out: &mut Mat, ctx: &GemmCtx) {
+    let packed = PackedDense::pack(wmat, m, patches_t.rows, ctx.tile.mr.max(1));
+    gemm_dense_packed(&packed, patches_t, out, ctx);
+}
+
+/// The production dense kernel: mr-row panels of the prepacked weight
+/// layout, streaming K in `kc` slices and R in `rc` spans so the active
+/// patch rows stay in L1/L2 (the paper's cache-tiled generated code).
+/// Each panel is one pool task writing its own output rows; the
+/// accumulator comes from the worker's slab (no per-call allocation).
+/// Writes (not accumulates) rows `0..packed.m` of `out`.
+pub fn gemm_dense_packed(packed: &PackedDense, patches_t: &Mat, out: &mut Mat, ctx: &GemmCtx) {
+    let m = packed.m;
+    let k = packed.k;
+    let r = patches_t.cols;
+    assert_eq!(k, patches_t.rows, "packed K must match the patch matrix");
+    assert_eq!(out.cols, r);
+    assert!(out.rows >= m);
+    if m == 0 || r == 0 {
+        return;
+    }
+    if k == 0 {
+        out.data[..m * r].fill(0.0);
+        return;
+    }
+    let mr = packed.mr;
+    let cols = out.cols;
+    let kc = ctx.tile.kc.max(1);
+    let rc = ctx.tile.rc.max(1);
+    let kernel = ctx.kernel;
+    let slabs = ctx.slabs;
+    let scratch_len = mr * rc.min(r);
+    ctx.pool.run_chunks_capped(
+        &mut out.data[..m * cols],
+        mr * cols,
+        ctx.cap,
+        |p, worker, chunk| {
+            let rows = chunk.len() / cols;
+            let panel = packed.panel(p);
+            slabs.with_slab(worker, scratch_len, |scratch| {
+                for k0 in (0..k).step_by(kc) {
+                    let k1 = (k0 + kc).min(k);
+                    let wblock = &panel[k0 * rows..k1 * rows];
+                    for r0 in (0..r).step_by(rc) {
+                        let r1 = (r0 + rc).min(r);
+                        let span = r1 - r0;
+                        packed_block(
+                            kernel, wblock, rows, patches_t, k0, k1, r0, r1, scratch,
+                        );
+                        // Fold the block accumulator into the output rows:
+                        // the first K block assigns (this kernel owns
+                        // zero-init), later blocks accumulate.
+                        for i in 0..rows {
+                            let orow = &mut chunk[i * cols + r0..i * cols + r1];
+                            let acc = &scratch[i * span..(i + 1) * span];
+                            if k0 == 0 {
+                                orow.copy_from_slice(acc);
+                            } else {
+                                for (ov, av) in orow.iter_mut().zip(acc) {
+                                    *ov += av;
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        },
+    );
+}
+
+// --------------------------------------------------------------------------
+// PR-1 reference kernel (kept for the micro-bench baseline and as a
+// differential oracle): strided scalar weight loads, no prepacking.
+// Accumulates into a caller-zeroed `out`.
+// --------------------------------------------------------------------------
+
+/// The PR-1 blocked kernel, verbatim: scalar, weights loaded with a
+/// stride-K walk (`wmat[(m0+i)*k + ki]`). `benches/gemm_kernels.rs`
+/// reports the packed/SIMD speedup against this.
+pub fn gemm_dense_unpacked(
     wmat: &[f32],
     m: usize,
     patches_t: &Mat,
@@ -74,8 +516,6 @@ pub fn gemm_dense_with(
     }
     let mr = tile.mr.max(1);
     let cols = out.cols;
-    // Slab sized for the widest micro-panel (ragged decomposition uses
-    // steps up to 8 rows) times one cache block of columns.
     let scratch_len = 8.max(mr) * tile.rc.max(1).min(r);
     pool.run_chunks(&mut out.data[..m * cols], mr * cols, |panel, worker, chunk| {
         let m0 = panel * mr;
@@ -95,10 +535,7 @@ pub fn gemm_dense_with(
     });
 }
 
-/// mr-row micro-panel with the common cases specialized so the compiler
-/// keeps the accumulant rows in registers / vector lanes. `chunk` is the
-/// panel's own output rows; `m0` is the weight row of `chunk` row 0 and
-/// `local0` the first chunk row this call covers.
+/// mr-row micro-panel of the PR-1 kernel with the common cases specialized.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn micro_panel_dyn(
@@ -196,6 +633,10 @@ fn micro_panel<const MR: usize>(
     }
 }
 
+// --------------------------------------------------------------------------
+// Sparse panels.
+// --------------------------------------------------------------------------
+
 /// Slab length one compacted panel needs: its row count times one `rc`
 /// block of columns.
 pub fn panel_scratch_len(m_eff: usize, tile: GemmTile, r: usize) -> usize {
@@ -210,15 +651,25 @@ pub fn gemm_panel(grp: &KgsGroup, patches_t: &Mat, out: &mut Mat, tile: GemmTile
     let cols = out.cols;
     let len = panel_scratch_len(grp.m_eff, tile, patches_t.cols);
     AccSlabs::global().with_slab(0, len, |scratch| {
-        gemm_panel_core(grp, patches_t, &mut out.data, cols, 0, tile, scratch);
+        gemm_panel_core(
+            grp,
+            patches_t,
+            &mut out.data,
+            cols,
+            0,
+            tile,
+            KernelArch::active(),
+            scratch,
+        );
     });
 }
 
-/// Compacted sparse panel: identical inner loop to the dense kernel, but
+/// Compacted sparse panel: identical inner block to the dense kernel, but
 /// columns come from the panel's gather list. `chunk` is a row range of
 /// the output starting at absolute row `row0`; `scratch` is the caller's
-/// accumulator slab (hoisted out of the `r0` loop — it used to be
-/// re-allocated per block, ~15% of panel time on c3d-sized layers).
+/// accumulator slab. Accumulates into caller-zeroed rows (several panels
+/// may share a row range).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn gemm_panel_core(
     grp: &KgsGroup,
     patches_t: &Mat,
@@ -226,41 +677,33 @@ pub(crate) fn gemm_panel_core(
     cols_out: usize,
     row0: usize,
     tile: GemmTile,
+    kernel: KernelArch,
     scratch: &mut [f32],
 ) {
-    let ncols = grp.cols.len();
     let r = patches_t.cols;
     debug_assert!(grp.m0 >= row0, "panel above its bucket");
     let base = grp.m0 - row0;
-    for r0 in (0..r).step_by(tile.rc.max(1)) {
-        let r1 = (r0 + tile.rc).min(r);
+    let rc = tile.rc.max(1);
+    for r0 in (0..r).step_by(rc) {
+        let r1 = (r0 + rc).min(r);
         let span = r1 - r0;
-        let acc = &mut scratch[..grp.m_eff * span];
-        acc.fill(0.0);
-        for (j, &src_row) in grp.cols.iter().enumerate() {
-            let prow = &patches_t.row(src_row as usize)[r0..r1];
-            for i in 0..grp.m_eff {
-                let w = grp.panel[i * ncols + j];
-                if w == 0.0 {
-                    continue;
-                }
-                let a = &mut acc[i * span..(i + 1) * span];
-                for (av, pv) in a.iter_mut().zip(prow) {
-                    *av += w * pv;
-                }
-            }
-        }
+        panel_block(kernel, grp, patches_t, r0, r1, scratch);
         for i in 0..grp.m_eff {
             let m = base + i;
             let orow = &mut chunk[m * cols_out + r0..m * cols_out + r1];
-            for (ov, av) in orow.iter_mut().zip(&acc[i * span..(i + 1) * span]) {
+            for (ov, av) in orow.iter_mut().zip(&scratch[i * span..(i + 1) * span]) {
                 *ov += av;
             }
         }
     }
 }
 
-/// Filter-compacted GEMM on the process-global pool/slabs.
+// --------------------------------------------------------------------------
+// Filter-compacted GEMM.
+// --------------------------------------------------------------------------
+
+/// Filter-compacted GEMM on the process-global pool/slabs (packs on the
+/// fly — see [`gemm_filter_packed`] for the engine path).
 pub fn gemm_filter(
     rows: &[u32],
     wmat: &[f32],
@@ -279,9 +722,7 @@ pub fn gemm_filter(
     );
 }
 
-/// Filter-compacted GEMM: dense kernel over surviving rows (parallel),
-/// scattered back to their original output channels. The compaction
-/// buffer lives in the slabs and is reused across calls.
+/// Filter-compacted GEMM with explicit pool/slabs; packs on the fly.
 pub fn gemm_filter_with(
     rows: &[u32],
     wmat: &[f32],
@@ -291,14 +732,96 @@ pub fn gemm_filter_with(
     pool: &ThreadPool,
     slabs: &AccSlabs,
 ) {
+    let packed = PackedDense::pack(wmat, rows.len(), patches_t.rows, tile.mr.max(1));
+    gemm_filter_packed(rows, &packed, patches_t, out, &GemmCtx::new(tile, pool, slabs));
+}
+
+/// Filter-compacted GEMM: dense kernel over surviving rows (parallel),
+/// scattered back to their original output channels; pruned channels are
+/// zeroed in the same pass. The compaction buffer lives in the slabs and
+/// is reused across calls — and because [`gemm_dense_packed`] owns
+/// zero-init of every row it writes, the old full `compact.fill(0.0)` is
+/// gone. Owns init of every row of `out` (`rows` must be ascending).
+pub fn gemm_filter_packed(
+    rows: &[u32],
+    packed: &PackedDense,
+    patches_t: &Mat,
+    out: &mut Mat,
+    ctx: &GemmCtx,
+) {
     let r = patches_t.cols;
-    let mut compact = slabs.filter_buf();
+    let mut compact = ctx.slabs.filter_buf();
     compact.reset(rows.len(), r);
-    compact.data.fill(0.0);
-    gemm_dense_with(wmat, rows.len(), patches_t, &mut compact, tile, pool, slabs);
-    for (i, &m) in rows.iter().enumerate() {
-        out.row_mut(m as usize).copy_from_slice(compact.row(i));
+    gemm_dense_packed(packed, patches_t, &mut compact, ctx);
+    let mut next = 0usize;
+    for m in 0..out.rows {
+        if next < rows.len() && rows[next] as usize == m {
+            out.row_mut(m).copy_from_slice(compact.row(next));
+            next += 1;
+        } else {
+            // Pruned channel: the output buffer is reused across layers,
+            // so it must be zeroed explicitly.
+            out.row_mut(m).fill(0.0);
+        }
     }
+}
+
+// --------------------------------------------------------------------------
+// Dense head (the classifier fully-connected layers).
+// --------------------------------------------------------------------------
+
+/// Fully-connected head: out (B, O) = x (B, I) @ w (I, O) + bias, optional
+/// ReLU. Parallel over output-column blocks — each task owns `out[:, c0..c1)`
+/// for every batch row, and the per-element accumulation runs the serial
+/// `i`-ascending order, so results are bit-identical across thread counts
+/// and column blockings. SIMD via the same span primitive as the conv
+/// kernels. Owns zero-init of `out`.
+pub fn dense_head_with(
+    x: &Mat,
+    w: &[f32],
+    bias: &[f32],
+    relu: bool,
+    out: &mut Mat,
+    kernel: KernelArch,
+    pool: &ThreadPool,
+) {
+    let (b, in_dim, out_dim) = (x.rows, x.cols, out.cols);
+    assert_eq!(out.rows, b);
+    assert_eq!(w.len(), in_dim * out_dim);
+    assert_eq!(bias.len(), out_dim);
+    if b == 0 || out_dim == 0 {
+        return;
+    }
+    out.data.fill(0.0);
+    let cb = out_dim.div_ceil((pool.threads() * 4).max(1)).max(16).min(out_dim);
+    let tasks = out_dim.div_ceil(cb);
+    let base = SendPtr::new(out.data.as_mut_ptr());
+    pool.run_tasks(tasks, usize::MAX, |t, _worker| {
+        let c0 = t * cb;
+        let c1 = (c0 + cb).min(out_dim);
+        for bi in 0..b {
+            // Safety: column blocks are disjoint, so tasks never alias.
+            let orow = unsafe {
+                std::slice::from_raw_parts_mut(
+                    base.get().add(bi * out_dim + c0),
+                    c1 - c0,
+                )
+            };
+            let xrow = x.row(bi);
+            for (i, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                madd_span_dispatch(kernel, orow, &w[i * out_dim + c0..i * out_dim + c1], xv);
+            }
+            for (o, bv) in orow.iter_mut().zip(&bias[c0..c1]) {
+                *o += bv;
+                if relu && *o < 0.0 {
+                    *o = 0.0;
+                }
+            }
+        }
+    });
 }
 
 #[cfg(test)]
@@ -308,6 +831,16 @@ mod tests {
     fn dense_oracle(wmat: &[f32], m: usize, p: &Mat) -> Mat {
         let w = Mat::from_vec(m, p.rows, wmat.to_vec());
         w.matmul_ref(p)
+    }
+
+    /// Kernel variants to exercise: scalar always, plus the detected ISA
+    /// when it differs.
+    fn kernels() -> Vec<KernelArch> {
+        let mut v = vec![KernelArch::Scalar];
+        if KernelArch::best_supported() != KernelArch::Scalar {
+            v.push(KernelArch::best_supported());
+        }
+        v
     }
 
     #[test]
@@ -361,12 +894,77 @@ mod tests {
     }
 
     #[test]
+    fn packed_matches_pr1_kernel_bitwise() {
+        // The packed kernel (assign-first-block) must reproduce the PR-1
+        // strided kernel (accumulate-into-zeroed) bit for bit.
+        for (m, kdim, r) in [(13usize, 48usize, 100usize), (8, 27, 33)] {
+            let w = Mat::random(m, kdim, 71);
+            let p = Mat::random(kdim, r, 72);
+            for tile in [
+                GemmTile { mr: 4, rc: 32, kc: 16 },
+                GemmTile { mr: 3, rc: 17, kc: 7 },
+            ] {
+                let pool = ThreadPool::new(3);
+                let slabs = AccSlabs::new(3);
+                let mut old = Mat::zeros(m, r);
+                gemm_dense_unpacked(&w.data, m, &p, &mut old, tile, &pool, &slabs);
+                let mut new = Mat::zeros(m, r);
+                let packed = PackedDense::pack(&w.data, m, kdim, tile.mr);
+                gemm_dense_packed(
+                    &packed,
+                    &p,
+                    &mut new,
+                    &GemmCtx {
+                        tile,
+                        kernel: KernelArch::Scalar,
+                        cap: usize::MAX,
+                        pool: &pool,
+                        slabs: &slabs,
+                    },
+                );
+                assert_eq!(old.data, new.data, "m={m} r={r} {tile:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_matches_scalar_bitwise() {
+        // One ISA path: SIMD-on vs SIMD-off must agree bit for bit (mul+add
+        // lanes, no FMA). Trivially passes on machines without SIMD.
+        let ks = kernels();
+        for (m, kdim, r) in [(13usize, 48usize, 100usize), (5, 16, 1), (16, 27, 250)] {
+            let w = Mat::random(m, kdim, 81);
+            let p = Mat::random(kdim, r, 82);
+            let tile = GemmTile { mr: 4, rc: 32, kc: 16 };
+            let pool = ThreadPool::new(2);
+            let slabs = AccSlabs::new(2);
+            let packed = PackedDense::pack(&w.data, m, kdim, tile.mr);
+            let outs: Vec<Mat> = ks
+                .iter()
+                .map(|&kernel| {
+                    let mut out = Mat::zeros(m, r);
+                    gemm_dense_packed(
+                        &packed,
+                        &p,
+                        &mut out,
+                        &GemmCtx { tile, kernel, cap: usize::MAX, pool: &pool, slabs: &slabs },
+                    );
+                    out
+                })
+                .collect();
+            for o in &outs[1..] {
+                assert_eq!(outs[0].data, o.data, "m={m} r={r}");
+            }
+        }
+    }
+
+    #[test]
     fn panel_matches_masked_dense() {
         // One group: filters 2..6, gather columns 3,7,11 of a 16-row patch.
         let p = Mat::random(16, 40, 5);
         let cols = vec![3u32, 7, 11];
         let panel = Mat::random(4, 3, 6);
-        let grp = KgsGroup { m0: 2, m_eff: 4, cols: cols.clone(), panel: panel.data.clone() };
+        let grp = KgsGroup::new(2, 4, cols.clone(), panel.data.clone());
         let mut out = Mat::zeros(8, 40);
         gemm_panel(&grp, &p, &mut out, GemmTile::default());
         // Oracle: embed the panel into a full 8x16 matrix.
@@ -380,6 +978,32 @@ mod tests {
     }
 
     #[test]
+    fn panel_simd_and_layouts_bit_identical() {
+        let p = Mat::random(24, 55, 15);
+        let panel = Mat::random(3, 5, 16);
+        let cols = vec![1u32, 4, 9, 16, 23];
+        let grp = KgsGroup::new(0, 3, cols.clone(), panel.data.clone());
+        assert!(!grp.panel_cm.is_empty());
+        // Row-major walk (no cm copy) vs column-major, scalar vs SIMD.
+        let grp_rm = KgsGroup { panel_cm: Vec::new(), ..grp.clone() };
+        let tile = GemmTile { mr: 4, rc: 13, kc: 8 };
+        let mut outs = Vec::new();
+        for kernel in kernels() {
+            for g in [&grp, &grp_rm] {
+                let mut out = Mat::zeros(3, 55);
+                let len = panel_scratch_len(g.m_eff, tile, p.cols);
+                AccSlabs::new(1).with_slab(0, len, |scratch| {
+                    gemm_panel_core(g, &p, &mut out.data, 55, 0, tile, kernel, scratch);
+                });
+                outs.push(out);
+            }
+        }
+        for o in &outs[1..] {
+            assert_eq!(outs[0].data, o.data);
+        }
+    }
+
+    #[test]
     fn filter_scatter() {
         let p = Mat::random(10, 20, 7);
         let rows = vec![1u32, 4];
@@ -390,5 +1014,57 @@ mod tests {
         assert_eq!(out.row(1), oracle.row(0));
         assert_eq!(out.row(4), oracle.row(1));
         assert!(out.row(0).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn filter_zeroes_stale_rows() {
+        // The output buffer is reused across layers: pruned rows must be
+        // zeroed even when the buffer holds garbage.
+        let p = Mat::random(10, 20, 9);
+        let rows = vec![0u32, 3, 5];
+        let w = Mat::random(3, 10, 10);
+        let mut out = Mat::from_vec(6, 20, vec![7.5; 120]);
+        gemm_filter(&rows, &w.data, &p, &mut out, GemmTile::default());
+        for m in [1usize, 2, 4] {
+            assert!(out.row(m).iter().all(|&v| v == 0.0), "row {m} not zeroed");
+        }
+        let oracle = w.matmul_ref(&p);
+        assert_eq!(out.row(3), oracle.row(1));
+    }
+
+    #[test]
+    fn dense_head_matches_serial_and_threads() {
+        let (b, i, o) = (3usize, 40usize, 57usize);
+        let x = Mat::random(b, i, 31);
+        let w = Mat::random(i, o, 32);
+        let bias: Vec<f32> = (0..o).map(|j| 0.01 * j as f32 - 0.2).collect();
+        // Serial oracle (the old engine loop).
+        let mut oracle = Mat::zeros(b, o);
+        for r in 0..b {
+            for (ii, &xv) in x.row(r).iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                for (ov, wv) in oracle.row_mut(r).iter_mut().zip(&w.data[ii * o..(ii + 1) * o]) {
+                    *ov += xv * wv;
+                }
+            }
+            for (ov, bv) in oracle.row_mut(r).iter_mut().zip(&bias) {
+                *ov += bv;
+                if *ov < 0.0 {
+                    *ov = 0.0;
+                }
+            }
+        }
+        for kernel in kernels() {
+            for threads in [1usize, 4] {
+                let mut out = Mat::zeros(b, o);
+                dense_head_with(
+                    &x, &w.data, &bias, true, &mut out, kernel,
+                    &ThreadPool::new(threads),
+                );
+                assert_eq!(oracle.data, out.data, "kernel={kernel:?} t={threads}");
+            }
+        }
     }
 }

@@ -18,10 +18,10 @@ pub mod engine;
 pub mod gemm;
 pub mod naive;
 
-pub use arena::{AccSlabs, ScratchArena};
+pub use arena::{AccSlabs, BufPool, ScratchArena};
 pub use engine::{EngineKind, LayerTiming, NativeEngine};
 
-use crate::codegen::{CompiledConv, ConvCall, ConvKind, GemmTile, KgsGroup};
+use crate::codegen::{CompiledConv, ConvCall, ConvKind, KgsGroup, PanelSchedule};
 use crate::tensor::{Mat, Tensor5};
 use crate::util::pool::ThreadPool;
 
@@ -138,13 +138,17 @@ pub fn run_compiled_conv(cc: &CompiledConv, patches_t: &Mat, out: &mut Mat) {
 }
 
 /// Execute one geometry-bound conv over a transposed patch matrix.
-/// `out` is (out_ch, R) row-major; bias + optional ReLU applied.
+/// `out` is (out_ch, R) row-major; bias + optional ReLU applied. Owns the
+/// initialization of `out` (the buffer may hold a previous layer's data).
 ///
-/// Parallel structure: Dense plans split into `mr`-row panels inside
-/// [`gemm::gemm_dense_with`]; KGS/Vanilla plans are bucketed by their
-/// filter-group row range and each bucket runs as one task (groups within
-/// a bucket keep the serial q-order, so accumulation order per output
-/// element is unchanged — bit-identical across thread counts).
+/// Parallel structure: Dense/Filter plans split into `mr`-row panels of
+/// the prepacked layout inside [`gemm::gemm_dense_packed`]; KGS/Vanilla
+/// plans run their *precompiled* bucket schedule — one pool task per
+/// filter-group row bucket, groups within a bucket in the serial q-order,
+/// so accumulation order per output element is unchanged — bit-identical
+/// across thread counts, kernel on/off, and pool modes. Steady state does
+/// zero heap allocation: the schedule, packed weights and accumulator
+/// slabs are all preallocated.
 pub fn run_conv_bound(
     call: &ConvCall<'_>,
     patches_t: &Mat,
@@ -155,126 +159,156 @@ pub fn run_conv_bound(
     let cc = call.cc;
     let r = patches_t.cols;
     assert_eq!((out.rows, out.cols), (call.geom.out_ch, r));
-    out.data.fill(0.0);
-    let tile = call.tile;
+    let ctx = gemm::GemmCtx {
+        tile: call.tile,
+        kernel: call.kernel,
+        cap: call.cap,
+        pool,
+        slabs,
+    };
     match &cc.kind {
-        ConvKind::Dense { wmat } => {
-            gemm::gemm_dense_with(
-                wmat,
-                call.geom.out_ch,
-                patches_t,
-                out,
-                tile,
-                pool,
-                slabs,
-            );
+        ConvKind::Dense { wmat } => match &cc.packed {
+            Some(packed) => gemm::gemm_dense_packed(packed, patches_t, out, &ctx),
+            // Hand-rolled plan without `finalize()`: pack on the fly.
+            None => gemm::gemm_dense_ctx(wmat, call.geom.out_ch, patches_t, out, &ctx),
+        },
+        ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => {
+            // Sparse panels accumulate and may not cover every row.
+            out.data.fill(0.0);
+            match &cc.sched {
+                Some(sched) => {
+                    run_panel_buckets(groups, sched, patches_t, out, &ctx)
+                }
+                None => {
+                    let sched = PanelSchedule::build(groups, out.rows);
+                    run_panel_buckets(groups, &sched, patches_t, out, &ctx)
+                }
+            }
         }
-        ConvKind::Kgs { groups } => {
-            let refs: Vec<&KgsGroup> = groups.iter().collect();
-            run_panel_buckets(&refs, patches_t, out, tile, pool, slabs);
-        }
-        ConvKind::Vanilla { rows } => {
-            // Flatten preserves (p, q) order; buckets re-split by p.
-            let refs: Vec<&KgsGroup> =
-                rows.iter().flat_map(|vr| vr.groups.iter()).collect();
-            run_panel_buckets(&refs, patches_t, out, tile, pool, slabs);
-        }
-        ConvKind::Filter { rows, wmat } => {
-            gemm::gemm_filter_with(rows, wmat, patches_t, out, tile, pool, slabs);
-        }
+        ConvKind::Filter { rows, wmat } => match &cc.packed {
+            Some(packed) => {
+                gemm::gemm_filter_packed(rows, packed, patches_t, out, &ctx)
+            }
+            None => {
+                gemm::gemm_filter_with(
+                    rows, wmat, patches_t, out, call.tile, pool, slabs,
+                )
+            }
+        },
     }
-    finish_bias_relu(cc, out);
+    finish_bias_relu(cc, out, pool);
 }
 
-/// Run compacted panels bucketed into disjoint output-row ranges, one pool
-/// task per bucket. Panels sharing a filter-group row (same `m0`) land in
-/// the same bucket in their original order.
+/// Run compacted panels over their precompiled bucket schedule, one pool
+/// task per disjoint output-row bucket. Panels sharing a filter-group row
+/// (same `m0`) stay in one bucket in their original order. The schedule's
+/// persistent row partition plus the per-call column scale means no
+/// per-call length buffer — zero allocation.
 fn run_panel_buckets(
-    groups: &[&KgsGroup],
+    groups: &[KgsGroup],
+    sched: &PanelSchedule,
     patches_t: &Mat,
     out: &mut Mat,
-    tile: GemmTile,
-    pool: &ThreadPool,
-    slabs: &AccSlabs,
+    ctx: &gemm::GemmCtx,
 ) {
-    if groups.is_empty() || out.cols == 0 {
+    if out.cols == 0 {
         return;
     }
     let cols = out.cols;
-    let m_total = out.rows;
-    // Codegen emits groups p-major (non-decreasing m0), so a single linear
-    // pass builds the row partition — no sort, and only O(filter groups)
-    // bookkeeping per call. Within a bucket the serial q-order is kept.
-    let mut starts: Vec<usize> = vec![0];
-    let mut buckets: Vec<Vec<&KgsGroup>> = vec![Vec::new()];
-    let mut last_m0 = 0usize;
-    for &grp in groups {
-        debug_assert!(
-            grp.m0 >= last_m0,
-            "codegen must emit panels with non-decreasing m0"
-        );
-        if grp.m0 > last_m0 {
-            starts.push(grp.m0);
-            buckets.push(Vec::new());
-            last_m0 = grp.m0;
-        }
-        buckets.last_mut().unwrap().push(grp);
-    }
-    let lens: Vec<usize> = (0..starts.len())
-        .map(|j| {
-            let end = if j + 1 < starts.len() { starts[j + 1] } else { m_total };
-            (end - starts[j]) * cols
-        })
-        .collect();
-    let max_meff = groups.iter().map(|g| g.m_eff).max().unwrap_or(1);
-    let scratch_len = gemm::panel_scratch_len(max_meff, tile, patches_t.cols);
-    pool.run_parts(&mut out.data, &lens, |j, worker, chunk| {
-        slabs.with_slab(worker, scratch_len, |scratch| {
-            for grp in &buckets[j] {
-                debug_assert!(
-                    (grp.m0 - starts[j] + grp.m_eff) * cols <= chunk.len(),
-                    "panel escapes its bucket"
-                );
-                gemm::gemm_panel_core(
-                    grp, patches_t, chunk, cols, starts[j], tile, scratch,
-                );
+    let scratch_len = gemm::panel_scratch_len(sched.max_m_eff, ctx.tile, patches_t.cols);
+    let (tile, kernel, slabs) = (ctx.tile, ctx.kernel, ctx.slabs);
+    ctx.pool.run_parts_scaled(
+        &mut out.data,
+        &sched.rows,
+        cols,
+        ctx.cap,
+        |j, worker, chunk| {
+            let (a, b) = sched.spans[j];
+            if a == b {
+                return; // fully pruned row range: stays zero
             }
-        });
+            slabs.with_slab(worker, scratch_len, |scratch| {
+                for grp in &groups[a as usize..b as usize] {
+                    debug_assert!(
+                        (grp.m0 - sched.starts[j] + grp.m_eff) * cols <= chunk.len(),
+                        "panel escapes its bucket"
+                    );
+                    gemm::gemm_panel_core(
+                        grp,
+                        patches_t,
+                        chunk,
+                        cols,
+                        sched.starts[j],
+                        tile,
+                        kernel,
+                        scratch,
+                    );
+                }
+            });
+        },
+    );
+}
+
+/// Add bias rows and apply ReLU in place, parallel over row bands (each
+/// row is touched by exactly one task — bit-identical for any thread
+/// count).
+pub fn finish_bias_relu(cc: &CompiledConv, out: &mut Mat, pool: &ThreadPool) {
+    let cols = out.cols;
+    if cols == 0 || out.rows == 0 {
+        return;
+    }
+    let rpt = out.rows.div_ceil((pool.threads() * 4).max(1)).max(1);
+    let relu = cc.relu;
+    let bias = &cc.bias;
+    pool.run_chunks(&mut out.data, rpt * cols, |ci, _worker, chunk| {
+        let row0 = ci * rpt;
+        for (j, row) in chunk.chunks_mut(cols).enumerate() {
+            let b = bias[row0 + j];
+            if relu {
+                for v in row.iter_mut() {
+                    *v = (*v + b).max(0.0);
+                }
+            } else {
+                for v in row.iter_mut() {
+                    *v += b;
+                }
+            }
+        }
     });
 }
 
-/// Add bias rows and apply ReLU in place.
-pub fn finish_bias_relu(cc: &CompiledConv, out: &mut Mat) {
-    for m in 0..out.rows {
-        let b = cc.bias[m];
-        let row = out.row_mut(m);
-        if cc.relu {
-            for v in row.iter_mut() {
-                *v = (*v + b).max(0.0);
-            }
-        } else {
-            for v in row.iter_mut() {
-                *v += b;
-            }
-        }
-    }
+/// Reshape a (M, R) conv output (R ordered b,z,y,x) into NCDHW
+/// (process-global pool, fresh buffer — see [`mat_to_tensor_with`]).
+pub fn mat_to_tensor(out: &Mat, b: usize, sp: [usize; 3]) -> Tensor5 {
+    mat_to_tensor_with(out, b, sp, ThreadPool::global(), Vec::new())
 }
 
-/// Reshape a (M, R) conv output (R ordered b,z,y,x) into NCDHW.
-pub fn mat_to_tensor(out: &Mat, b: usize, sp: [usize; 3]) -> Tensor5 {
+/// Reshape a (M, R) conv output into NCDHW, parallel over `(n, m)` spatial
+/// slabs (pure disjoint copies — trivially bit-identical), writing into a
+/// caller-provided buffer (the engine passes a recycled activation buffer
+/// so the steady-state forward allocates nothing here).
+pub fn mat_to_tensor_with(
+    out: &Mat,
+    b: usize,
+    sp: [usize; 3],
+    pool: &ThreadPool,
+    mut buf: Vec<f32>,
+) -> Tensor5 {
     let m = out.rows;
     let [od, oh, ow] = sp;
     let spatial = od * oh * ow;
     assert_eq!(out.cols, b * spatial);
-    let mut t = Tensor5::zeros([b, m, od, oh, ow]);
-    for mi in 0..m {
-        let row = out.row(mi);
-        for n in 0..b {
-            let dst0 = t.idx(n, mi, 0, 0, 0);
-            let src0 = n * spatial;
-            t.data[dst0..dst0 + spatial]
-                .copy_from_slice(&row[src0..src0 + spatial]);
-        }
+    buf.resize(b * m * spatial, 0.0);
+    if spatial > 0 {
+        let rpt = (b * m).div_ceil((pool.threads() * 4).max(1)).max(1);
+        pool.run_chunks(&mut buf, rpt * spatial, |ci, _worker, chunk| {
+            let slab0 = ci * rpt;
+            for (j, dst) in chunk.chunks_mut(spatial).enumerate() {
+                let idx = slab0 + j;
+                let (n, mi) = (idx / m, idx % m);
+                dst.copy_from_slice(&out.row(mi)[n * spatial..(n + 1) * spatial]);
+            }
+        });
     }
-    t
+    Tensor5::from_vec([b, m, od, oh, ow], buf)
 }

@@ -137,23 +137,32 @@ fn serve(
 fn tune(artifacts: &str, model_name: &str, reps: usize) -> rt3d::Result<()> {
     let model = Model::load(artifacts, model_name)?;
     let mut convs = rt3d::codegen::compile_model(&model, false);
-    let reports = rt3d::codegen::tuner::tune_model(&mut convs, reps);
+    let (reports, db) = rt3d::codegen::tuner::tune_model_db(&mut convs, reps);
     println!(
-        "{:<12} {:>10} {:>10} {:>8}  tile",
+        "{:<12} {:>10} {:>10} {:>8}  config",
         "layer", "default", "best", "gain"
     );
     for r in reports {
         println!(
-            "{:<12} {:>8.2}ms {:>8.2}ms {:>7.2}x  mr={} rc={} kc={}",
+            "{:<12} {:>8.2}ms {:>8.2}ms {:>7.2}x  mr={} rc={} kc={} kernel={} threads={}",
             r.name,
             r.default_s * 1e3,
             r.best_s * 1e3,
             r.speedup(),
             r.best.mr,
             r.best.rc,
-            r.best.kc
+            r.best.kc,
+            r.kernel.map_or("auto", |k| k.name()),
+            if r.threads == 0 { "all".to_string() } else { r.threads.to_string() },
         );
     }
+    let path = rt3d::codegen::tuner::TuneDb::default_path();
+    db.save(&path)?;
+    println!(
+        "tune: saved {} layer configs to {} (NativeEngine loads this at build)",
+        db.entries.len(),
+        path.display()
+    );
     Ok(())
 }
 

@@ -1,46 +1,211 @@
-//! Scoped worker pool driving the parallel conv executors (std-only — the
-//! offline build has no rayon).
+//! Persistent worker pool driving the parallel conv executors (std-only —
+//! the offline build has no rayon).
 //!
 //! # Design
 //!
-//! There is no work stealing and no persistent worker state: each parallel
-//! region opens a `std::thread::scope`, the calling thread becomes worker
-//! 0, and `threads - 1` helpers are spawned for the duration of the
-//! region. Tasks are `&mut` chunks of the output buffer pulled from a
-//! mutex-guarded queue, so a slow task never blocks the rest of the
-//! queue. The spawn/join cost per region (~tens of µs) is deliberate —
-//! persistent parked workers would need unsafe lifetime erasure to run
-//! borrowing closures; revisit if profiles show the fixed cost matters
-//! for small layers (see ROADMAP open items).
+//! A pool of width `N` owns `N - 1` long-lived worker threads parked on a
+//! condvar; the submitting thread is always worker 0. A parallel region
+//! posts one type-erased job (a borrowed `Fn(task, worker)` closure plus a
+//! task count), bumps an epoch, and wakes the workers. Tasks are claimed
+//! with a single `fetch_add` on an atomic index — there is **no queue, no
+//! per-region `Vec` of parts, and no heap allocation per region** (the
+//! PR-1 scoped pool allocated an O(tasks) scheduling list and paid a
+//! spawn/join of ~tens of µs per region; parked workers wake in ~1 µs).
+//! Workers are spawned lazily on the first region and joined when the last
+//! clone of the pool handle drops.
+//!
+//! The borrowed closure crosses threads through a lifetime-erased raw
+//! trait-object pointer. This is sound because a region is strictly
+//! bracketed: the submitter does not return from `run_tasks` until every
+//! worker has checked in for that epoch, so the closure (and the buffers
+//! it captures) outlive every use. Task panics are caught per task and
+//! re-raised on the submitting thread after the region completes, so a
+//! panicking task can neither deadlock the pool nor poison its state.
+//!
+//! `PoolMode::Scoped` keeps the PR-1 per-region `thread::scope` strategy
+//! (same atomic-counter scheduling, fresh threads per region) selectable
+//! via `RT3D_POOL=scoped` — the parity test in `tests/parallel.rs` runs
+//! both modes and asserts bit-identical outputs.
 //!
 //! # Determinism invariant: disjoint output rows
 //!
 //! Every parallel loop in the executors is shaped so that **each task owns
-//! a disjoint, contiguous row range of the output buffer** (an mr-row GEMM
-//! panel, a KGS filter-group row bucket, one `(channel, tap)` im2col row).
-//! Tasks only *read* shared inputs and only *write* their own rows, and
-//! the per-row accumulation order inside a task is exactly the serial
-//! kernel's order. Which thread runs a task, and in which order tasks are
-//! popped, therefore cannot affect any output bit: results are
-//! **bit-identical** across `RT3D_THREADS=1..N`. Keep it that way — never
-//! parallelize a loop here whose tasks share output elements (e.g. a
-//! reduction over K), because float addition does not commute bitwise.
+//! a disjoint, contiguous range of the output buffer** (an mr-row GEMM
+//! panel, a KGS filter-group row bucket, one `(channel, tap)` im2col row
+//! band, a dense-head column block). Tasks only *read* shared inputs and
+//! only *write* their own range, and the per-element accumulation order
+//! inside a task is exactly the serial kernel's order. Which worker runs a
+//! task, in which order tasks are claimed, and whether the pool is parked
+//! or scoped therefore cannot affect any output bit: results are
+//! **bit-identical** across `RT3D_THREADS=1..N` and across pool modes.
+//! Keep it that way — never parallelize a loop here whose tasks share
+//! output elements (e.g. a reduction over K), because float addition does
+//! not commute bitwise.
 //!
 //! Thread count resolution: `RT3D_THREADS` env var when set (> 0),
 //! otherwise `std::thread::available_parallelism()`.
 
-use std::sync::{Mutex, OnceLock};
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// A fixed-width scoped thread pool. Cheap to construct (it holds only the
-/// configured width); threads exist only while a `run*` call is active.
-#[derive(Debug, Clone)]
+/// Worker lifetime strategy. Parked is the default; Scoped is kept as the
+/// reference implementation for differential testing (`RT3D_POOL=scoped`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolMode {
+    /// Long-lived workers parked on a condvar between regions.
+    Parked,
+    /// PR-1 strategy: spawn a `thread::scope` per region.
+    Scoped,
+}
+
+impl PoolMode {
+    /// `RT3D_POOL=scoped` selects the legacy scoped mode; anything else
+    /// (including unset) is parked.
+    pub fn from_env() -> PoolMode {
+        match std::env::var("RT3D_POOL").as_deref() {
+            Ok("scoped") => PoolMode::Scoped,
+            _ => PoolMode::Parked,
+        }
+    }
+}
+
+/// A `Send + Sync` raw pointer for handing disjoint sub-slices of one
+/// buffer to pool tasks. Soundness is the caller's obligation: every task
+/// index must map to a non-overlapping range, and the pointee must outlive
+/// the region (which `run_tasks` guarantees by not returning until all
+/// workers check in).
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> Self {
+        Self(p)
+    }
+
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+/// One posted region: a lifetime-erased borrowed closure plus its task
+/// count and worker cap. Lives inside the state mutex only while the
+/// submitter is blocked in `run_tasks`, which keeps the borrow alive.
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize, usize) + Sync),
+    tasks: usize,
+    /// Workers with id >= cap skip the task loop (per-layer thread tuning).
+    cap: usize,
+}
+
+// The pointer is only dereferenced between job post and the running==0
+// handshake, while the submitter keeps the closure alive.
+unsafe impl Send for Job {}
+
+struct State {
+    epoch: u64,
+    job: Option<Job>,
+    /// Helpers that have not yet checked in for the current epoch.
+    running: usize,
+    /// First panic payload caught on a helper; re-raised by the submitter
+    /// so the original message survives (as it did through the PR-1 scope
+    /// join).
+    panic_payload: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct PoolInner {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Next task index of the current region.
+    next: AtomicUsize,
+}
+
+/// Spawned workers + region serialization, shared by all clones of one
+/// pool handle. Dropping the last clone shuts the workers down.
+struct PoolShared {
+    inner: Arc<PoolInner>,
+    /// Serializes whole regions: two threads submitting to one pool take
+    /// turns instead of corrupting the single job slot.
+    region: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for PoolShared {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+thread_local! {
+    /// Set while this thread is executing a pool task. A nested `run_tasks`
+    /// from inside a task runs inline (serial) instead of deadlocking on
+    /// the region mutex.
+    static IN_TASK: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Sets `IN_TASK` for the current scope and clears it on drop — including
+/// on unwind, so a panicking task can never leave the thread stuck in
+/// "inline-serial" mode for all later regions.
+struct InTaskGuard;
+
+impl InTaskGuard {
+    fn enter() -> InTaskGuard {
+        IN_TASK.with(|t| t.set(true));
+        InTaskGuard
+    }
+}
+
+impl Drop for InTaskGuard {
+    fn drop(&mut self) {
+        IN_TASK.with(|t| t.set(false));
+    }
+}
+
+/// A fixed-width thread pool. Cheap to construct — workers are spawned on
+/// the first parallel region (a width-1 or scoped pool never spawns any).
+/// Cloning shares the same workers.
+#[derive(Clone)]
 pub struct ThreadPool {
     threads: usize,
+    mode: PoolMode,
+    shared: Arc<OnceLock<PoolShared>>,
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool")
+            .field("threads", &self.threads)
+            .field("mode", &self.mode)
+            .finish()
+    }
 }
 
 impl ThreadPool {
+    /// Pool of `threads` workers in the `RT3D_POOL` mode (default parked).
     pub fn new(threads: usize) -> Self {
-        Self { threads: threads.max(1) }
+        Self::with_mode(threads, PoolMode::from_env())
+    }
+
+    pub fn with_mode(threads: usize, mode: PoolMode) -> Self {
+        Self {
+            threads: threads.max(1),
+            mode,
+            shared: Arc::new(OnceLock::new()),
+        }
     }
 
     /// Core count of this machine (fallback 1).
@@ -59,7 +224,8 @@ impl ThreadPool {
     }
 
     /// Process-wide pool for call sites without an engine (tuner, bench
-    /// wrappers). Resolved from the environment once.
+    /// wrappers). Resolved from the environment once; its workers live for
+    /// the rest of the process.
     pub fn global() -> &'static ThreadPool {
         static POOL: OnceLock<ThreadPool> = OnceLock::new();
         POOL.get_or_init(ThreadPool::from_env)
@@ -67,6 +233,34 @@ impl ThreadPool {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    pub fn mode(&self) -> PoolMode {
+        self.mode
+    }
+
+    /// Run `tasks` independent tasks as `f(task_index, worker)`. At most
+    /// `min(threads, cap, tasks)` workers participate; every task index in
+    /// `0..tasks` is claimed by exactly one worker via an atomic counter.
+    /// Called from inside a pool task, it runs inline (serial).
+    pub fn run_tasks<F>(&self, tasks: usize, cap: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if tasks == 0 {
+            return;
+        }
+        let width = self.threads.min(tasks).min(cap.max(1));
+        if width <= 1 || IN_TASK.with(|t| t.get()) {
+            for t in 0..tasks {
+                f(t, 0);
+            }
+            return;
+        }
+        match self.mode {
+            PoolMode::Scoped => run_scoped(tasks, width, &f),
+            PoolMode::Parked => self.run_parked(tasks, cap.max(1), &f),
+        }
     }
 
     /// Split `data` into fixed-size chunks (last one ragged) and run
@@ -77,9 +271,36 @@ impl ThreadPool {
         T: Send,
         F: Fn(usize, usize, &mut [T]) + Sync,
     {
-        let parts: Vec<(usize, &mut [T])> =
-            data.chunks_mut(chunk_len.max(1)).enumerate().collect();
-        self.dispatch(parts, &f);
+        self.run_chunks_capped(data, chunk_len, usize::MAX, f);
+    }
+
+    /// [`Self::run_chunks`] with a worker cap (per-layer thread tuning).
+    pub fn run_chunks_capped<T, F>(
+        &self,
+        data: &mut [T],
+        chunk_len: usize,
+        cap: usize,
+        f: F,
+    ) where
+        T: Send,
+        F: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        let cl = chunk_len.max(1);
+        let total = data.len();
+        if total == 0 {
+            return;
+        }
+        let tasks = total.div_ceil(cl);
+        let base = SendPtr::new(data.as_mut_ptr());
+        self.run_tasks(tasks, cap, move |i, w| {
+            let start = i * cl;
+            let len = cl.min(total - start);
+            // Safety: task indices are claimed exactly once, so these
+            // ranges are disjoint; `data` outlives the region.
+            let chunk =
+                unsafe { std::slice::from_raw_parts_mut(base.get().add(start), len) };
+            f(i, w, chunk);
+        });
     }
 
     /// Like [`Self::run_chunks`] but with per-part lengths (for ragged row
@@ -89,82 +310,223 @@ impl ThreadPool {
         T: Send,
         F: Fn(usize, usize, &mut [T]) + Sync,
     {
-        let total: usize = lens.iter().sum();
-        assert_eq!(total, data.len(), "part lengths must cover the buffer");
-        let mut rest = data;
-        let mut parts: Vec<(usize, &mut [T])> = Vec::with_capacity(lens.len());
-        for (i, &l) in lens.iter().enumerate() {
-            // Move `rest` out before splitting so the split halves get the
-            // full outer lifetime (a plain reborrow could not escape the
-            // loop body into `parts`).
-            let whole = rest;
-            let (head, tail) = whole.split_at_mut(l);
-            parts.push((i, head));
-            rest = tail;
-        }
-        self.dispatch(parts, &f);
+        self.run_parts_scaled(data, lens, 1, usize::MAX, f);
     }
 
-    fn dispatch<T, F>(&self, parts: Vec<(usize, &mut [T])>, f: &F)
-    where
+    /// Ragged parts where part `i` covers `counts[i] * scale` elements —
+    /// the executors pass a *persistent* per-plan row partition as `counts`
+    /// and the per-call column count as `scale`, so no per-call length
+    /// buffer is ever built. Part offsets are prefix-summed on the fly
+    /// (O(parts) per task; parts are few and coarse).
+    pub fn run_parts_scaled<T, F>(
+        &self,
+        data: &mut [T],
+        counts: &[usize],
+        scale: usize,
+        cap: usize,
+        f: F,
+    ) where
         T: Send,
         F: Fn(usize, usize, &mut [T]) + Sync,
     {
-        let n = parts.len();
-        if n == 0 {
-            return;
-        }
-        let workers = self.threads.min(n);
-        if workers <= 1 {
-            for (i, chunk) in parts {
-                f(i, 0, chunk);
-            }
-            return;
-        }
-        let queue = Mutex::new(parts.into_iter());
-        let work = |wid: usize| loop {
-            // Take the lock only to pop; run the task lock-free.
-            let item = queue.lock().unwrap().next();
-            match item {
-                Some((i, chunk)) => f(i, wid, chunk),
-                None => break,
-            }
-        };
-        std::thread::scope(|s| {
-            let work = &work;
-            for w in 1..workers {
-                s.spawn(move || work(w));
-            }
-            work(0);
+        let total: usize = counts.iter().map(|&c| c * scale).sum();
+        assert_eq!(total, data.len(), "part lengths must cover the buffer");
+        let base = SendPtr::new(data.as_mut_ptr());
+        self.run_tasks(counts.len(), cap, move |i, w| {
+            let off: usize = counts[..i].iter().sum::<usize>() * scale;
+            let len = counts[i] * scale;
+            // Safety: parts are disjoint by construction (prefix sums of
+            // the same `counts`); `data` outlives the region.
+            let chunk =
+                unsafe { std::slice::from_raw_parts_mut(base.get().add(off), len) };
+            f(i, w, chunk);
         });
     }
+
+    fn shared(&self) -> &PoolShared {
+        self.shared.get_or_init(|| {
+            let inner = Arc::new(PoolInner {
+                state: Mutex::new(State {
+                    epoch: 0,
+                    job: None,
+                    running: 0,
+                    panic_payload: None,
+                    shutdown: false,
+                }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+                next: AtomicUsize::new(0),
+            });
+            let handles = (1..self.threads)
+                .map(|wid| {
+                    let inner = Arc::clone(&inner);
+                    std::thread::Builder::new()
+                        .name(format!("rt3d-worker-{wid}"))
+                        .spawn(move || worker_loop(inner, wid))
+                        .expect("spawn pool worker")
+                })
+                .collect();
+            PoolShared { inner, region: Mutex::new(()), handles }
+        })
+    }
+
+    fn run_parked(&self, tasks: usize, cap: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        let shared = self.shared();
+        let _region = shared.region.lock().unwrap();
+        let inner = &*shared.inner;
+        // Erase the borrow lifetime; see the module docs for why this is
+        // sound (the region is bracketed by the running==0 handshake).
+        let f_static: &'static (dyn Fn(usize, usize) + Sync) =
+            unsafe { std::mem::transmute(f) };
+        let job = Job { f: f_static, tasks, cap };
+        let helpers = shared.handles.len();
+        {
+            let mut st = inner.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "region posted while one is active");
+            inner.next.store(0, Ordering::Relaxed);
+            st.job = Some(job);
+            st.running = helpers;
+            st.panic_payload = None;
+            st.epoch = st.epoch.wrapping_add(1);
+            inner.work_cv.notify_all();
+        }
+        // The submitting thread participates as worker 0.
+        let mut payload: Option<Box<dyn std::any::Any + Send>> = None;
+        {
+            let _in_task = InTaskGuard::enter();
+            loop {
+                let t = inner.next.fetch_add(1, Ordering::Relaxed);
+                if t >= tasks {
+                    break;
+                }
+                if let Err(e) = catch_unwind(AssertUnwindSafe(|| f(t, 0))) {
+                    payload.get_or_insert(e);
+                }
+            }
+        }
+        let mut st = inner.state.lock().unwrap();
+        while st.running > 0 {
+            st = inner.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        let helper_payload = st.panic_payload.take();
+        drop(st);
+        if let Some(p) = payload.or(helper_payload) {
+            resume_unwind(p);
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<PoolInner>, wid: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("epoch bumped without a job");
+                }
+                st = inner.work_cv.wait(st).unwrap();
+            }
+        };
+        let mut payload: Option<Box<dyn std::any::Any + Send>> = None;
+        if wid < job.cap {
+            // Safety: the submitter keeps the closure alive until every
+            // worker has checked in below.
+            let f = unsafe { &*job.f };
+            let _in_task = InTaskGuard::enter();
+            loop {
+                let t = inner.next.fetch_add(1, Ordering::Relaxed);
+                if t >= job.tasks {
+                    break;
+                }
+                if let Err(e) = catch_unwind(AssertUnwindSafe(|| f(t, wid))) {
+                    payload.get_or_insert(e);
+                }
+            }
+        }
+        let mut st = inner.state.lock().unwrap();
+        if let Some(p) = payload {
+            st.panic_payload.get_or_insert(p);
+        }
+        st.running -= 1;
+        if st.running == 0 {
+            inner.done_cv.notify_one();
+        }
+    }
+}
+
+/// Current state of this thread's in-task flag (test hook for the
+/// unwind-guard regression tests).
+#[cfg(test)]
+fn in_task_flag() -> bool {
+    IN_TASK.with(|t| t.get())
+}
+
+/// PR-1 strategy: fresh `thread::scope` per region, same atomic-counter
+/// task claiming (panics propagate through the scope join).
+fn run_scoped(tasks: usize, width: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+    let next = AtomicUsize::new(0);
+    let work = |wid: usize| {
+        let _in_task = InTaskGuard::enter();
+        loop {
+            let t = next.fetch_add(1, Ordering::Relaxed);
+            if t >= tasks {
+                break;
+            }
+            f(t, wid);
+        }
+    };
+    std::thread::scope(|s| {
+        let work = &work;
+        for w in 1..width {
+            s.spawn(move || work(w));
+        }
+        work(0);
+    });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn pools() -> [ThreadPool; 2] {
+        [
+            ThreadPool::with_mode(3, PoolMode::Parked),
+            ThreadPool::with_mode(3, PoolMode::Scoped),
+        ]
+    }
 
     #[test]
     fn run_chunks_covers_ragged_tail() {
-        let mut data = vec![0u32; 103]; // 103 = 25*4 + 3 (ragged)
-        ThreadPool::new(3).run_chunks(&mut data, 4, |i, _w, chunk| {
-            for v in chunk.iter_mut() {
-                *v = i as u32 + 1;
-            }
-        });
-        assert!(data.iter().all(|&v| v != 0));
-        assert_eq!(data[102], 26); // last chunk index 25
+        for pool in pools() {
+            let mut data = vec![0u32; 103]; // 103 = 25*4 + 3 (ragged)
+            pool.run_chunks(&mut data, 4, |i, _w, chunk| {
+                for v in chunk.iter_mut() {
+                    *v = i as u32 + 1;
+                }
+            });
+            assert!(data.iter().all(|&v| v != 0));
+            assert_eq!(data[102], 26); // last chunk index 25
+        }
     }
 
     #[test]
     fn run_parts_respects_lengths() {
-        let mut data = vec![0u8; 10];
-        ThreadPool::new(8).run_parts(&mut data, &[3, 0, 5, 2], |i, _w, chunk| {
-            for v in chunk.iter_mut() {
-                *v = i as u8 + 1;
-            }
-        });
-        assert_eq!(data, vec![1, 1, 1, 3, 3, 3, 3, 3, 4, 4]);
+        for pool in pools() {
+            let mut data = vec![0u8; 10];
+            pool.run_parts(&mut data, &[3, 0, 5, 2], |i, _w, chunk| {
+                for v in chunk.iter_mut() {
+                    *v = i as u8 + 1;
+                }
+            });
+            assert_eq!(data, vec![1, 1, 1, 3, 3, 3, 3, 3, 4, 4]);
+        }
     }
 
     #[test]
@@ -172,6 +534,21 @@ mod tests {
     fn run_parts_rejects_bad_cover() {
         let mut data = vec![0u8; 10];
         ThreadPool::new(2).run_parts(&mut data, &[3, 3], |_, _, _| {});
+    }
+
+    #[test]
+    fn run_parts_scaled_uses_persistent_counts() {
+        let counts = [2usize, 1, 3]; // rows per part
+        let mut data = vec![0u16; 6 * 4]; // scale = 4 cols
+        ThreadPool::new(4).run_parts_scaled(&mut data, &counts, 4, usize::MAX, |i, _w, chunk| {
+            assert_eq!(chunk.len(), counts[i] * 4);
+            for v in chunk.iter_mut() {
+                *v = i as u16 + 1;
+            }
+        });
+        assert_eq!(&data[..8], &[1; 8]);
+        assert_eq!(&data[8..12], &[2; 4]);
+        assert_eq!(&data[12..], &[3; 12]);
     }
 
     #[test]
@@ -188,5 +565,105 @@ mod tests {
     fn env_parsing_clamps_to_one() {
         assert_eq!(ThreadPool::new(0).threads(), 1);
         assert!(ThreadPool::from_env().threads() >= 1);
+    }
+
+    #[test]
+    fn repeated_regions_reuse_parked_workers() {
+        // Many back-to-back regions on one pool: no deadlock, no stale
+        // tasks leaking across epochs, every element written each round.
+        let pool = ThreadPool::with_mode(4, PoolMode::Parked);
+        let mut data = vec![0u64; 257];
+        for round in 1..=100u64 {
+            pool.run_chunks(&mut data, 7, |_i, _w, chunk| {
+                for v in chunk.iter_mut() {
+                    *v += round;
+                }
+            });
+        }
+        let want: u64 = (1..=100).sum();
+        assert!(data.iter().all(|&v| v == want), "stale/missed task");
+    }
+
+    #[test]
+    fn worker_cap_limits_participants() {
+        let pool = ThreadPool::with_mode(8, PoolMode::Parked);
+        let max_wid = AtomicUsize::new(0);
+        let mut data = vec![0u8; 64];
+        pool.run_chunks_capped(&mut data, 1, 2, |_i, w, chunk| {
+            max_wid.fetch_max(w, Ordering::Relaxed);
+            chunk[0] = 1;
+        });
+        assert!(max_wid.load(Ordering::Relaxed) < 2, "cap=2 must limit ids to 0..2");
+        assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn nested_region_runs_inline() {
+        let pool = ThreadPool::with_mode(4, PoolMode::Parked);
+        let mut data = vec![0u8; 8];
+        let inner_pool = pool.clone();
+        pool.run_chunks(&mut data, 2, |_i, _w, chunk| {
+            // A nested region from inside a task must not deadlock.
+            inner_pool.run_tasks(3, usize::MAX, |_t, w| assert_eq!(w, 0));
+            chunk[0] = 1;
+        });
+    }
+
+    #[test]
+    fn task_panic_propagates_without_deadlock() {
+        let pool = ThreadPool::with_mode(4, PoolMode::Parked);
+        let mut data = vec![0u8; 32];
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_chunks(&mut data, 1, |i, _w, _chunk| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        // The original payload survives whether worker 0 or a helper
+        // claimed the panicking task.
+        let payload = r.expect_err("panic must propagate to the submitter");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "boom", "payload must carry the original message");
+        // Pool stays usable after a panicked region.
+        pool.run_chunks(&mut data, 4, |_i, _w, chunk| chunk.fill(1));
+        assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn panic_does_not_wedge_inline_mode() {
+        // A panicking task must clear the in-task flag on unwind in both
+        // modes — otherwise every later region on this thread would run
+        // inline-serial forever.
+        for mode in [PoolMode::Scoped, PoolMode::Parked] {
+            let pool = ThreadPool::with_mode(3, mode);
+            let mut data = vec![0u8; 8];
+            let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                pool.run_chunks(&mut data, 1, |i, _w, _c| {
+                    if i == 0 {
+                        panic!("wedge test");
+                    }
+                });
+            }));
+            assert!(r.is_err(), "{mode:?}");
+            assert!(!in_task_flag(), "{mode:?} left IN_TASK set after a panic");
+        }
+    }
+
+    #[test]
+    fn parked_and_scoped_agree() {
+        let mut a = vec![0u32; 1000];
+        let mut b = vec![0u32; 1000];
+        ThreadPool::with_mode(5, PoolMode::Parked).run_chunks(&mut a, 9, |i, _w, c| {
+            for (j, v) in c.iter_mut().enumerate() {
+                *v = (i * 31 + j) as u32;
+            }
+        });
+        ThreadPool::with_mode(5, PoolMode::Scoped).run_chunks(&mut b, 9, |i, _w, c| {
+            for (j, v) in c.iter_mut().enumerate() {
+                *v = (i * 31 + j) as u32;
+            }
+        });
+        assert_eq!(a, b);
     }
 }

@@ -8,7 +8,9 @@ warning when p95 latency degrades by more than 20% vs the committed
 baseline. Never fails the build — CI runners are too noisy to gate merges
 on wall-clock numbers; the warning plus the uploaded artifact is the
 tracking signal. A baseline with null metrics means "not seeded yet" and
-skips the comparison.
+skips the comparison; a baseline carrying a "tolerance" field (used while
+the committed numbers are machine-independent estimates rather than a
+measured CI run) overrides the default 1.20 ratio.
 """
 
 import json
@@ -41,6 +43,13 @@ def main() -> int:
         print(f"::warning title=bench regression::cannot read {current_path}: {e}")
         return 0
 
+    threshold = baseline.get("tolerance", THRESHOLD)
+    if not isinstance(threshold, (int, float)) or threshold <= 1.0:
+        threshold = THRESHOLD
+    if baseline.get("estimated"):
+        print(f"baseline is an estimate; using tolerance {threshold:.2f}x "
+              "(replace with a measured CI run to tighten the gate)")
+
     checked = False
     for key in ("p95_ms", "p50_ms"):
         base, cur = baseline.get(key), current.get(key)
@@ -55,9 +64,10 @@ def main() -> int:
             f"({ratio:.0%} of baseline, threads base={baseline.get('threads')} "
             f"cur={current.get('threads')})"
         )
-        if ratio > THRESHOLD:
+        if ratio > threshold:
             # GitHub Actions warning annotation; does not fail the job.
-            print(f"::warning title=bench regression::{line} exceeds +20%")
+            print(f"::warning title=bench regression::{line} exceeds "
+                  f"{threshold:.2f}x baseline")
         else:
             print(f"ok {line}")
     if not checked:
