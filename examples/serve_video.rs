@@ -4,7 +4,8 @@
 //! throughput and *serving accuracy* against the known labels.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_video [artifacts] [n_requests]
+//! make artifacts && \
+//!   cargo run --release --example serve_video [artifacts] [n_requests] [workers]
 //! ```
 
 use rt3d::coordinator::{BatcherConfig, Server, ServerConfig};
@@ -19,15 +20,20 @@ fn main() -> rt3d::Result<()> {
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or(48);
+    let workers: usize = std::env::args()
+        .nth(3)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
     let model = Model::load(&dir, "c3d")?;
     let input = model.manifest.input;
 
     for (label, sparse) in [("dense", false), ("kgs-sparse", true)] {
         let engine = Arc::new(NativeEngine::new(&model, EngineKind::Rt3d, sparse));
         println!(
-            "\n== serving with {} engine ({:.2} GFLOPs/clip)",
+            "\n== serving with {} engine ({:.2} GFLOPs/clip, {} workers)",
             label,
-            engine.conv_flops() as f64 / 1e9
+            engine.conv_flops() as f64 / 1e9,
+            workers
         );
         let server = Server::start(
             engine,
@@ -37,8 +43,10 @@ fn main() -> rt3d::Result<()> {
                     max_wait: std::time::Duration::from_millis(15),
                 },
                 queue_depth: 64,
+                workers,
             },
         );
+        let responses = server.take_responses();
         let trace = RequestTrace::poisson(&TraceConfig {
             rate_hz: 30.0, // 30 requests/s ~ "real-time" per the paper
             count: n,
@@ -54,12 +62,12 @@ fn main() -> rt3d::Result<()> {
             }
             let clip =
                 workload::make_clip(e.label, e.clip_seed, input[1], input[2]);
-            server.submit(clip, Some(e.label));
+            server.submit(clip, Some(e.label))?;
             submitted += 1;
         }
         let mut done = 0;
         while done < submitted {
-            server.responses.recv()?;
+            responses.recv()?;
             done += 1;
         }
         let m = server.shutdown();

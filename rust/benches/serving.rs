@@ -1,17 +1,21 @@
-//! Coordinator benchmark: serving throughput/latency across batch caps and
-//! executor thread counts.
+//! Coordinator benchmark: serving throughput/latency across batch caps,
+//! executor thread counts and serving-worker counts.
 //!
-//! Two claims are validated here (DESIGN.md §Perf):
+//! Three claims are validated here (DESIGN.md §Perf):
 //! * the coordinator adds negligible overhead on top of the executor;
 //! * the parallel execution pipeline scales: N executor threads beat one
 //!   thread on the C3D-shaped workload while producing **bit-identical**
-//!   logits (the disjoint-output-rows invariant, see `util::pool`).
+//!   logits (the disjoint-output-rows invariant, see `util::pool`);
+//! * the serving pipeline scales across workers: under an open-loop
+//!   saturating load, N batch-execution workers (each a forked handle
+//!   over one shared compiled core, splitting the same core budget) beat
+//!   one worker on saturation throughput (clips/s).
 //!
 //! Emits machine-readable `BENCH_serving.json` at the repo root
-//! (p50/p95 latency, threads, GFLOP/s) so the perf trajectory is tracked
-//! across PRs; `.github/workflows/ci.yml` compares it against the
-//! committed baseline. Falls back to the in-memory synthetic C3D model
-//! when `make artifacts` has not been run.
+//! (p50/p95 latency, threads, GFLOP/s, workers sweep) so the perf
+//! trajectory is tracked across PRs; `.github/workflows/ci.yml` compares
+//! it against the committed baseline. Falls back to the in-memory
+//! synthetic C3D model when `make artifacts` has not been run.
 
 use rt3d::codegen::KernelArch;
 use rt3d::coordinator::{BatcherConfig, Server, ServerConfig};
@@ -118,17 +122,18 @@ fn main() {
                     max_wait: std::time::Duration::from_millis(5),
                 },
                 queue_depth: 64,
+                workers: 1,
             },
         );
+        let responses = server.take_responses();
         let t0 = Instant::now();
         for i in 0..n {
-            server.submit(
-                workload::make_clip(i % 8, i as u64, input[1], input[2]),
-                Some(i % 8),
-            );
+            server
+                .submit(workload::make_clip(i % 8, i as u64, input[1], input[2]), Some(i % 8))
+                .unwrap();
         }
         for _ in 0..n {
-            server.responses.recv().unwrap();
+            responses.recv().unwrap();
         }
         let wall = t0.elapsed().as_secs_f64();
         let m = server.shutdown();
@@ -145,6 +150,87 @@ fn main() {
         );
         served.push((max_batch, n as f64 / wall, lat.p50_s, lat.p95_s, m.mean_batch()));
     }
+
+    // --- Worker scaling: open-loop saturation throughput ----------------
+    // Each configuration splits the same core budget: `workers` serving
+    // threads x (threads / workers) executor threads per forked handle.
+    // The generator offers load as fast as the bounded ingress queue
+    // accepts (open loop until back-pressure), so the measured completion
+    // rate is the pipeline's saturation throughput.
+    let mut worker_counts = vec![1usize];
+    if threads >= 2 {
+        worker_counts.push(2);
+    }
+    if threads > 2 {
+        worker_counts.push(threads);
+    }
+    let sat_n = if budget < Duration::from_millis(1000) { 32 } else { 96 };
+    // Pre-generate the clip set once; submits clone from it so clip
+    // synthesis cost stays out of the measured window.
+    let clip_set: Vec<Tensor5> = (0..8)
+        .map(|i| workload::make_clip(i % 8, 7 + i as u64, input[1], input[2]))
+        .collect();
+    let mut sweep = Vec::new();
+    for &wk in &worker_counts {
+        let per_worker_threads = (threads / wk).max(1);
+        let engine = Arc::new(NativeEngine::with_threads(
+            &model,
+            EngineKind::Rt3d,
+            true,
+            per_worker_threads,
+        ));
+        let server = Server::start(
+            engine,
+            ServerConfig {
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait: std::time::Duration::from_millis(2),
+                },
+                queue_depth: 16,
+                workers: wk,
+            },
+        );
+        let responses = server.take_responses();
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            // Open-loop generator: offers the whole trace back-to-back;
+            // blocks only when the pipeline is saturated.
+            s.spawn(|| {
+                for i in 0..sat_n {
+                    server
+                        .submit(clip_set[i % clip_set.len()].clone(), Some(i % 8))
+                        .unwrap();
+                }
+            });
+            for _ in 0..sat_n {
+                responses.recv().unwrap();
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let clips_s = sat_n as f64 / wall;
+        let m = server.shutdown();
+        let lat = m.latency();
+        println!(
+            "serving workers={wk} ({per_worker_threads} threads each): {clips_s:.2} clips/s p95={} mean_batch={:.2} batches/worker={:?}",
+            fmt_s(lat.p95_s),
+            m.mean_batch(),
+            m.worker_batches(),
+        );
+        sweep.push((wk, per_worker_threads, clips_s, lat.p50_s, lat.p95_s));
+    }
+    let base_clips_s = sweep[0].2;
+    let best = sweep
+        .iter()
+        .copied()
+        .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+        .unwrap();
+    let workers_speedup = best.2 / base_clips_s;
+    println!(
+        "serving saturation: workers=1 {:.2} clips/s, best workers={} {:.2} clips/s ({workers_speedup:.2}x)",
+        base_clips_s,
+        best.0,
+        best.2
+    );
 
     // --- Machine-readable output ---------------------------------------
     let mut json = String::new();
@@ -165,6 +251,19 @@ fn main() {
     json.push_str(&format!("  \"speedup_vs_1t\": {speedup:.4},\n"));
     json.push_str(&format!("  \"gflops\": {gflops:.4},\n"));
     json.push_str("  \"bit_identical_logits\": true,\n");
+    json.push_str(&format!("  \"saturation_clips_per_s\": {:.4},\n", best.2));
+    json.push_str(&format!("  \"workers_best\": {},\n", best.0));
+    json.push_str(&format!("  \"workers_speedup\": {workers_speedup:.4},\n"));
+    json.push_str("  \"workers\": [\n");
+    for (i, (wk, tpw, clips_s, p50, p95)) in sweep.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"workers\": {wk}, \"threads_per_worker\": {tpw}, \"clips_per_s\": {clips_s:.4}, \"p50_ms\": {:.4}, \"p95_ms\": {:.4}}}{}\n",
+            p50 * 1e3,
+            p95 * 1e3,
+            if i + 1 < sweep.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
     json.push_str("  \"server\": [\n");
     for (i, (mb, rps, p50, p95, meanb)) in served.iter().enumerate() {
         json.push_str(&format!(

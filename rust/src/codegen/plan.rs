@@ -338,16 +338,37 @@ impl CompiledConv {
     /// kernel — the last gate before the `target_feature` code paths
     /// (`supported()` reads std's cached feature detection; it is cheap).
     pub fn bind(&self, in_spatial: [usize; 3]) -> ConvCall<'_> {
+        self.bind_with(in_spatial, None)
+    }
+
+    /// [`Self::bind`] with an engine-level kernel override. `force` wins
+    /// over the plan's tuned kernel — this is how a shared, immutable
+    /// engine core serves a `set_kernel`-forced handle (parity tests)
+    /// without mutating plans other handles are executing from.
+    pub fn bind_with(
+        &self,
+        in_spatial: [usize; 3],
+        force: Option<KernelArch>,
+    ) -> ConvCall<'_> {
         ConvCall {
             cc: self,
             geom: Conv3dGeometry { in_spatial, ..self.geom },
             tile: self.tile,
-            kernel: self
-                .kernel
+            kernel: force
+                .or(self.kernel)
                 .filter(|k| k.supported())
                 .unwrap_or_else(KernelArch::active),
             cap: if self.threads == 0 { usize::MAX } else { self.threads },
         }
+    }
+
+    /// Scratch-arena footprint of this plan at `batch` clips: element
+    /// counts of the im2col `(K, R)` patch matrix and the `(M, R)` GEMM
+    /// output. The engine core sizes per-worker arenas from the max over
+    /// all layers, so forked handles start warm.
+    pub fn scratch_footprint(&self, batch: usize) -> (usize, usize) {
+        let r = self.geom.rows(batch);
+        (self.geom.cols() * r, self.geom.out_ch * r)
     }
 
     /// Build the derived execution layouts (packed dense panels / sparse
@@ -453,6 +474,41 @@ mod tests {
         let e = PanelSchedule::build(&[], 6);
         assert_eq!((e.starts.clone(), e.rows.clone()), (vec![0], vec![6]));
         assert_eq!(e.spans, vec![(0, 0)]);
+    }
+
+    #[test]
+    fn bind_with_forces_kernel_over_tuned_choice() {
+        let wmat: Vec<f32> = vec![0.0; 4 * 8];
+        let mut cc = CompiledConv {
+            name: "b".into(),
+            geom: Conv3dGeometry {
+                in_ch: 8,
+                out_ch: 4,
+                kernel: [1, 1, 1],
+                stride: [1, 1, 1],
+                padding: [0, 0, 0],
+                in_spatial: [2, 2, 2],
+            },
+            relu: false,
+            bias: vec![0.0; 4],
+            kind: ConvKind::Dense { wmat },
+            tile: GemmTile::default(),
+            packed: None,
+            sched: None,
+            kernel: None,
+            threads: 0,
+            flops: 0,
+        };
+        cc.finalize();
+        // A tuned per-plan kernel is normally honored...
+        cc.kernel = Some(KernelArch::Scalar);
+        assert_eq!(cc.bind([2, 2, 2]).kernel, KernelArch::Scalar);
+        // ...but a per-call force wins without mutating the shared plan.
+        let k = KernelArch::best_supported();
+        assert_eq!(cc.bind_with([2, 2, 2], Some(k)).kernel, k);
+        assert_eq!(cc.kernel, Some(KernelArch::Scalar), "plan untouched");
+        let (p, o) = cc.scratch_footprint(3);
+        assert_eq!((p, o), (8 * 3 * 8, 4 * 3 * 8)); // K=8, M=4, R=3*2*2*2
     }
 
     #[test]

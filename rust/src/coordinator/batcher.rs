@@ -1,7 +1,7 @@
 //! Dynamic batcher: size-capped, deadline-flushed request aggregation.
 
 use super::Request;
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -66,6 +66,20 @@ impl Batcher {
     fn take(&mut self) -> Vec<Request> {
         std::mem::take(&mut self.pending)
     }
+
+    /// Drive the batcher to completion, forwarding every batch into `tx` —
+    /// the batcher half of the pipelined server. The bounded send blocks
+    /// while every execution worker is busy, which is what propagates
+    /// back-pressure from the workers through the ingress queue to the
+    /// submitters. Returns when ingress closes (shutdown) or every worker
+    /// is gone (receiver dropped).
+    pub fn run_to(mut self, tx: SyncSender<Vec<Request>>) {
+        while let Some(batch) = self.next_batch() {
+            if tx.send(batch).is_err() {
+                return; // all workers exited; nothing left to feed
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -112,6 +126,28 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn run_to_forwards_batches_until_close() {
+        let (tx, rx) = mpsc::channel();
+        let (btx, brx) = mpsc::sync_channel::<Vec<Request>>(4);
+        let b = Batcher::new(
+            BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(5) },
+            rx,
+        );
+        let h = std::thread::spawn(move || b.run_to(btx));
+        for i in 0..5 {
+            tx.send(req(i)).unwrap();
+        }
+        drop(tx);
+        let mut total = 0;
+        while let Ok(batch) = brx.recv() {
+            assert!(batch.len() <= 2);
+            total += batch.len();
+        }
+        assert_eq!(total, 5);
+        h.join().unwrap();
     }
 
     #[test]

@@ -46,6 +46,9 @@ struct Inner {
     labelled: usize,
     first_s: Option<std::time::Instant>,
     last_s: Option<std::time::Instant>,
+    /// Batches executed per serving worker — the merged per-worker view of
+    /// a multi-worker server (one shared sink, per-worker accounting).
+    worker_batches: Vec<usize>,
 }
 
 impl Metrics {
@@ -100,6 +103,22 @@ impl Metrics {
     pub fn count(&self) -> usize {
         self.inner.lock().unwrap().latencies.len()
     }
+
+    /// Count one executed batch against serving worker `worker`.
+    pub fn record_batch(&self, worker: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if g.worker_batches.len() <= worker {
+            g.worker_batches.resize(worker + 1, 0);
+        }
+        g.worker_batches[worker] += 1;
+    }
+
+    /// Batches executed per serving worker (empty when the server never
+    /// ran a batch). Index = worker id; a saturated N-worker pipeline
+    /// shows every entry non-zero.
+    pub fn worker_batches(&self) -> Vec<usize> {
+        self.inner.lock().unwrap().worker_batches.clone()
+    }
 }
 
 #[cfg(test)]
@@ -130,5 +149,15 @@ mod tests {
         assert_eq!(m.accuracy(), Some(0.5));
         assert_eq!(m.count(), 3);
         assert!((m.mean_batch() - 4.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_worker_batch_accounting() {
+        let m = Metrics::default();
+        assert!(m.worker_batches().is_empty());
+        m.record_batch(2);
+        m.record_batch(0);
+        m.record_batch(2);
+        assert_eq!(m.worker_batches(), vec![1, 0, 2]);
     }
 }

@@ -2,15 +2,29 @@
 //!
 //! The paper's framework is an on-device inference engine; deployed, it
 //! sits behind a request loop (camera frames / clips arriving, batched,
-//! dispatched to CPU or GPU). This module provides that loop:
+//! dispatched to CPU or GPU). This module provides that loop as a
+//! **pipeline**:
+//!
+//! ```text
+//! submitters -> ingress queue -> batcher thread -> batch queue
+//!                               (size/deadline)   (bound: workers)
+//!        -> N execution workers (pack -> infer -> respond, each on a
+//!           forked engine handle sharing one compiled core)
+//!        -> one shared response channel (correlate by Response::id)
+//! ```
 //!
 //! * [`batcher`] — collects requests into batches under a latency budget
 //!   (size-capped, deadline-flushed), mirroring mobile pipelines that
-//!   process "16 frames" per inference.
-//! * [`server`] — worker threads draining the batch queue into an
-//!   [`Engine`], with back-pressure via bounded queues.
-//! * [`metrics`] — latency percentiles + throughput accounting used by
-//!   the Table 2 harness and the E2E example.
+//!   process "16 frames" per inference, and feeds the shared batch queue
+//!   so batch K+1 is formed while batch K executes.
+//! * [`server`] — `workers` execution threads draining the batch queue
+//!   into per-worker [`Engine`] handles ([`Engine::fork`]), with
+//!   back-pressure end-to-end via bounded queues and a single merged
+//!   response stream + metrics sink.
+//! * [`router`] — multi-model front door; every deployment of a model
+//!   delivers into one shared response channel with model-unique ids.
+//! * [`metrics`] — latency percentiles + throughput + per-worker batch
+//!   accounting used by the Table 2 harness and the E2E example.
 
 pub mod batcher;
 pub mod metrics;

@@ -1,17 +1,32 @@
 //! Multi-model request router: the front door of the serving framework.
 //!
 //! Routes requests to per-model [`Server`] instances (each with its own
-//! batcher + engine), with optional *policy-based engine selection*: a
-//! latency-budget rule picks the sparse engine when the deadline is tight
-//! and the dense engine otherwise — the mobile analog of RT3D switching
-//! between accuracy-optimal and latency-optimal deployments.
+//! batcher + worker pool + engine), with optional *policy-based engine
+//! selection*: a latency-budget rule picks the sparse engine when the
+//! deadline is tight and the dense engine otherwise — the mobile analog of
+//! RT3D switching between accuracy-optimal and latency-optimal
+//! deployments.
+//!
+//! Every deployment of one model delivers into a single shared response
+//! channel with model-unique request ids, so [`Router::drain`] blocks on
+//! one receiver instead of round-robin-polling every deployment (the old
+//! scheme paid a 200 ms `recv_timeout` on every idle deployment per
+//! loop). Callers correlate responses to submissions via [`Response::id`].
 
 use super::{Engine, Metrics, Response, Server, ServerConfig};
-use crate::tensor::Tensor5;
 use crate::anyhow;
+use crate::tensor::Tensor5;
 use crate::util::error::Result;
 use std::collections::HashMap;
+use std::sync::atomic::AtomicU64;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// How long [`Router::drain`] waits without *any* response arriving
+/// before giving up (covers slow engines mid-batch; an idle healthy
+/// deployment costs nothing now that there is one channel per model).
+const DRAIN_STALL_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// A deployable engine variant with its advertised quality/latency.
 pub struct Deployment {
@@ -37,6 +52,14 @@ pub enum Policy {
 
 struct ModelEntry {
     servers: Vec<(Deployment, Server)>,
+    /// Shared response stream for every deployment of this model.
+    resp_rx: Receiver<Response>,
+    /// Kept for handing to later-added deployments.
+    resp_tx: SyncSender<Response>,
+    /// Model-wide id allocator shared by every deployment's server, so
+    /// ids on the shared channel are unique and correlate 1:1 with
+    /// submissions.
+    ids: Arc<AtomicU64>,
 }
 
 /// The router owns one or more models, each with >=1 running deployment.
@@ -50,19 +73,30 @@ impl Router {
         Self { models: HashMap::new(), policy }
     }
 
-    /// Register a model deployment and start its server.
+    /// Register a model deployment and start its server (routed into the
+    /// model's shared response channel).
     pub fn add_deployment(
         &mut self,
         model: &str,
         dep: Deployment,
         cfg: ServerConfig,
     ) {
-        let server = Server::start(dep.engine.clone(), cfg);
-        self.models
-            .entry(model.to_string())
-            .or_insert_with(|| ModelEntry { servers: Vec::new() })
-            .servers
-            .push((dep, server));
+        let entry = self.models.entry(model.to_string()).or_insert_with(|| {
+            let (resp_tx, resp_rx) = sync_channel::<Response>(256);
+            ModelEntry {
+                servers: Vec::new(),
+                resp_rx,
+                resp_tx,
+                ids: Arc::new(AtomicU64::new(0)),
+            }
+        });
+        let server = Server::start_shared(
+            dep.engine.clone(),
+            cfg,
+            entry.resp_tx.clone(),
+            entry.ids.clone(),
+        );
+        entry.servers.push((dep, server));
     }
 
     pub fn models(&self) -> Vec<&str> {
@@ -102,7 +136,10 @@ impl Router {
         }
     }
 
-    /// Route one request. Returns (deployment name, request id).
+    /// Route one request. Returns (deployment name, request id); the id is
+    /// unique per model and matches the eventual [`Response::id`] on the
+    /// shared channel. A dead deployment pipeline surfaces as `Err` here
+    /// instead of aborting the caller.
     pub fn submit(
         &self,
         model: &str,
@@ -116,40 +153,31 @@ impl Router {
             .ok_or_else(|| anyhow!("unknown model {model:?}"))?;
         let i = self.pick(entry, deadline_s);
         let (dep, server) = &entry.servers[i];
-        let id = server.submit(clip, label);
+        let id = server
+            .submit(clip, label)
+            .map_err(|e| anyhow!("deployment {:?} of {model:?}: {e}", dep.name))?;
         Ok((dep.name.clone(), id))
     }
 
-    /// Drain up to `n` responses for a model's deployment-0..k servers.
-    /// (Responses are per-server channels; callers typically drain after a
-    /// burst — see `examples/serve_video.rs`.)
+    /// Drain `n` responses for a model from its shared channel (all
+    /// deployments deliver there; correlate by [`Response::id`]). Errors
+    /// when no response arrives for [`DRAIN_STALL_TIMEOUT`].
     pub fn drain(&self, model: &str, n: usize) -> Result<Vec<Response>> {
         let entry = self
             .models
             .get(model)
             .ok_or_else(|| anyhow!("unknown model {model:?}"))?;
         let mut out = Vec::with_capacity(n);
-        // Round-robin the per-server response queues until n collected.
         while out.len() < n {
-            let mut got = false;
-            for (_, server) in &entry.servers {
-                if let Ok(resp) = server
-                    .responses
-                    .recv_timeout(std::time::Duration::from_millis(200))
-                {
-                    out.push(resp);
-                    got = true;
-                    if out.len() >= n {
-                        break;
-                    }
+            match entry.resp_rx.recv_timeout(DRAIN_STALL_TIMEOUT) {
+                Ok(resp) => out.push(resp),
+                Err(_) => {
+                    return Err(anyhow!(
+                        "drained only {}/{} responses before timeout",
+                        out.len(),
+                        n
+                    ))
                 }
-            }
-            if !got {
-                return Err(anyhow!(
-                    "drained only {}/{} responses before timeout",
-                    out.len(),
-                    n
-                ));
             }
         }
         Ok(out)
@@ -222,9 +250,10 @@ mod tests {
     #[test]
     fn best_accuracy_picks_dense() {
         let r = router(Policy::BestAccuracy);
-        let (name, _) = r.submit("m", clip(), None, None).unwrap();
+        let (name, id) = r.submit("m", clip(), None, None).unwrap();
         assert_eq!(name, "dense");
         let resp = r.drain("m", 1).unwrap();
+        assert_eq!(resp[0].id, id, "response correlates by request id");
         assert_eq!(resp[0].logits[0], 1.0);
         r.shutdown();
     }
@@ -272,5 +301,24 @@ mod tests {
         assert_eq!(sparse.2.count(), 3);
         let dense = stats.iter().find(|(_, d, _)| d == "dense").unwrap();
         assert_eq!(dense.2.count(), 0);
+    }
+
+    #[test]
+    fn ids_unique_across_deployments_of_one_model() {
+        // Deadline policy alternates deployments; ids on the shared
+        // channel must never collide.
+        let r = router(Policy::Deadline);
+        let mut ids = std::collections::HashSet::new();
+        for i in 0..6 {
+            let deadline = if i % 2 == 0 { Some(5.0) } else { Some(0.5) };
+            let (_, id) = r.submit("m", clip(), None, deadline).unwrap();
+            assert!(ids.insert(id), "id {id} reused across deployments");
+        }
+        let resps = r.drain("m", 6).unwrap();
+        for resp in &resps {
+            assert!(ids.remove(&resp.id), "unknown id {}", resp.id);
+        }
+        assert!(ids.is_empty());
+        r.shutdown();
     }
 }

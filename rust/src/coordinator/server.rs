@@ -1,10 +1,22 @@
-//! Server: worker threads draining batches into an [`Engine`].
+//! Server: a pipelined batching front-end over an [`Engine`].
+//!
+//! One batcher thread aggregates requests (size-capped, deadline-flushed)
+//! and feeds a bounded shared batch queue; `workers` execution threads
+//! drain it, each packing, inferring and responding independently — so
+//! batch K+1 is being packed while batch K is still in its GEMM, and
+//! extra cores beyond one engine's pool run whole batches in parallel.
+//! Every worker delivers into **one** response channel and records into
+//! one shared [`Metrics`] sink (per-worker batch counts included), so the
+//! caller sees a single ordered-by-completion stream correlated by
+//! request id.
 
 use super::{Batcher, BatcherConfig, Metrics, Request, Response};
+use crate::anyhow;
 use crate::tensor::{Mat, Tensor5};
+use crate::util::error::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -21,6 +33,13 @@ pub trait Engine: Send + Sync {
     fn threads(&self) -> usize {
         1
     }
+    /// A fresh execution handle for one more server worker. Engines with
+    /// per-handle scratch state (the native engine) return a new handle
+    /// sharing the immutable compiled core; `None` (the default) means
+    /// "no cheap fork — share this handle across workers".
+    fn fork(&self) -> Option<Arc<dyn Engine>> {
+        None
+    }
 }
 
 impl Engine for crate::executors::NativeEngine {
@@ -33,6 +52,9 @@ impl Engine for crate::executors::NativeEngine {
     fn threads(&self) -> usize {
         crate::executors::NativeEngine::threads(self)
     }
+    fn fork(&self) -> Option<Arc<dyn Engine>> {
+        Some(Arc::new(crate::executors::NativeEngine::fork(self)))
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -40,82 +62,185 @@ pub struct ServerConfig {
     pub batcher: BatcherConfig,
     /// Bound of the ingress queue (back-pressure: senders block).
     pub queue_depth: usize,
+    /// Batch-execution worker threads draining the shared batch queue.
+    /// Each worker runs on its own engine handle ([`Engine::fork`]) when
+    /// the engine supports cheap forking.
+    pub workers: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { batcher: BatcherConfig::default(), queue_depth: 64 }
+        Self { batcher: BatcherConfig::default(), queue_depth: 64, workers: 1 }
     }
 }
 
-/// A running server instance: one batcher thread feeding the engine.
+/// A running server instance: one batcher thread feeding `workers`
+/// execution threads over a shared batch queue.
 pub struct Server {
     tx: Option<SyncSender<Request>>,
     pub metrics: Arc<Metrics>,
-    pub responses: Receiver<Response>,
-    worker: Option<JoinHandle<()>>,
-    next_id: AtomicU64,
+    /// Local response receiver; `None` for servers started via
+    /// [`Self::start_shared`] (responses flow through the router's shared
+    /// channel). Behind a mutex so the server handle stays `Sync` for
+    /// concurrent submitters — take it once via [`Self::take_responses`].
+    responses: Mutex<Option<Receiver<Response>>>,
+    batcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: Arc<AtomicU64>,
 }
 
 impl Server {
+    /// Start a standalone server with its own response channel.
     pub fn start(engine: Arc<dyn Engine>, cfg: ServerConfig) -> Self {
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let (resp_tx, resp_rx) = sync_channel::<Response>(cfg.queue_depth * 4);
+        Self::start_routed(engine, cfg, resp_tx, Arc::new(AtomicU64::new(0)), Some(resp_rx))
+    }
+
+    /// Start a server that delivers into a caller-owned response channel
+    /// and draws request ids from a shared allocator — the Router uses
+    /// this to fan every deployment of one model into a single receiver
+    /// with model-unique ids.
+    pub fn start_shared(
+        engine: Arc<dyn Engine>,
+        cfg: ServerConfig,
+        resp_tx: SyncSender<Response>,
+        ids: Arc<AtomicU64>,
+    ) -> Self {
+        Self::start_routed(engine, cfg, resp_tx, ids, None)
+    }
+
+    fn start_routed(
+        engine: Arc<dyn Engine>,
+        cfg: ServerConfig,
+        resp_tx: SyncSender<Response>,
+        next_id: Arc<AtomicU64>,
+        resp_rx: Option<Receiver<Response>>,
+    ) -> Self {
+        let n_workers = cfg.workers.max(1);
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        // One queued batch per worker: enough to keep every worker fed,
+        // small enough that back-pressure reaches submitters quickly.
+        let (batch_tx, batch_rx) = sync_channel::<Vec<Request>>(n_workers);
         let metrics = Arc::new(Metrics::default());
-        let m2 = metrics.clone();
-        let worker = std::thread::spawn(move || {
-            let mut batcher = Batcher::new(cfg.batcher, rx);
-            while let Some(batch) = batcher.next_batch() {
-                // Pack straight from the queued requests — no per-request
-                // clip clone on the hot path.
-                let clips: Vec<&Tensor5> = batch.iter().map(|r| &r.clip).collect();
-                let packed = crate::workload::clips::batch_clip_refs(&clips);
-                let logits = engine.infer(packed);
-                let done = Instant::now();
-                for (i, req) in batch.iter().enumerate() {
-                    let row = logits.row(i);
-                    let predicted = argmax(row);
-                    let resp = Response {
-                        id: req.id,
-                        logits: row.to_vec(),
-                        predicted,
-                        label: req.label,
-                        latency_s: (done - req.arrival).as_secs_f64(),
-                        batch_size: batch.len(),
-                    };
-                    m2.record(resp.latency_s, batch.len(), resp.correct());
-                    // Receiver may have hung up at shutdown; ignore.
-                    let _ = resp_tx.send(resp);
-                }
-            }
-        });
+        let batcher_cfg = cfg.batcher.clone();
+        let batcher = std::thread::Builder::new()
+            .name("rt3d-batcher".into())
+            .spawn(move || Batcher::new(batcher_cfg, rx).run_to(batch_tx))
+            .expect("spawn batcher thread");
+        // The batch queue has one receiver shared by all workers; mpsc
+        // receivers are single-consumer, so pickup is serialized by a
+        // mutex — execution (the expensive part) still overlaps fully.
+        let shared_rx = Arc::new(Mutex::new(batch_rx));
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let worker_engine = if w == 0 {
+                engine.clone()
+            } else {
+                engine.fork().unwrap_or_else(|| engine.clone())
+            };
+            let batch_rx = shared_rx.clone();
+            let resp_tx = resp_tx.clone();
+            let m = metrics.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("rt3d-serve-{w}"))
+                .spawn(move || worker_loop(w, worker_engine.as_ref(), &batch_rx, &resp_tx, &m))
+                .expect("spawn server worker");
+            workers.push(handle);
+        }
+        // Only the worker clones keep the response channel open, so it
+        // closes exactly when the last worker exits.
+        drop(resp_tx);
         Self {
             tx: Some(tx),
             metrics,
-            responses: resp_rx,
-            worker: Some(worker),
-            next_id: AtomicU64::new(0),
+            responses: Mutex::new(resp_rx),
+            batcher: Some(batcher),
+            workers,
+            next_id,
         }
     }
 
     /// Submit a clip; blocks when the queue is full (back-pressure).
-    pub fn submit(&self, clip: Tensor5, label: Option<usize>) -> u64 {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx
+    /// Returns the request id, or an error when the server has been shut
+    /// down or the serving pipeline died (batcher/worker panic) — callers
+    /// decide how to degrade instead of aborting on a dead channel.
+    pub fn submit(&self, clip: Tensor5, label: Option<usize>) -> Result<u64> {
+        let tx = self
+            .tx
             .as_ref()
-            .expect("server already shut down")
-            .send(Request { id, clip, label, arrival: Instant::now() })
-            .expect("server worker died");
-        id
+            .ok_or_else(|| anyhow!("server already shut down"))?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        tx.send(Request { id, clip, label, arrival: Instant::now() })
+            .map_err(|_| anyhow!("serving pipeline closed (batcher or workers died)"))?;
+        Ok(id)
+    }
+
+    /// Take ownership of the response receiver (standalone servers; call
+    /// once). Panics for routed servers — their responses flow through
+    /// the router's shared channel.
+    pub fn take_responses(&self) -> Receiver<Response> {
+        self.responses
+            .lock()
+            .unwrap()
+            .take()
+            .expect("response receiver already taken (or server is router-shared)")
     }
 
     /// Close ingress and wait for in-flight batches to finish.
     pub fn shutdown(mut self) -> Arc<Metrics> {
         drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
         self.metrics.clone()
+    }
+}
+
+/// One execution worker: pull a batch, pack, infer, respond. Exits when
+/// the batch queue closes (batcher done after shutdown).
+fn worker_loop(
+    worker: usize,
+    engine: &dyn Engine,
+    batch_rx: &Mutex<Receiver<Vec<Request>>>,
+    resp_tx: &SyncSender<Response>,
+    metrics: &Metrics,
+) {
+    loop {
+        // Hold the pickup lock only across the recv; the guard drops
+        // before packing so the next worker can wait for the next batch
+        // while this one executes.
+        let batch = {
+            let rx = batch_rx.lock().unwrap();
+            match rx.recv() {
+                Ok(b) => b,
+                Err(_) => return,
+            }
+        };
+        // Pack straight from the queued requests — no per-request clip
+        // clone on the hot path.
+        let clips: Vec<&Tensor5> = batch.iter().map(|r| &r.clip).collect();
+        let packed = crate::workload::clips::batch_clip_refs(&clips);
+        let logits = engine.infer(packed);
+        let done = Instant::now();
+        metrics.record_batch(worker);
+        for (i, req) in batch.iter().enumerate() {
+            let row = logits.row(i);
+            let predicted = argmax(row);
+            let resp = Response {
+                id: req.id,
+                logits: row.to_vec(),
+                predicted,
+                label: req.label,
+                latency_s: (done - req.arrival).as_secs_f64(),
+                batch_size: batch.len(),
+            };
+            metrics.record(resp.latency_s, batch.len(), resp.correct());
+            // Receiver may have hung up at shutdown; ignore.
+            let _ = resp_tx.send(resp);
+        }
     }
 }
 
@@ -157,15 +282,16 @@ mod tests {
     #[test]
     fn serve_round_trip() {
         let server = Server::start(Arc::new(Toy), ServerConfig::default());
+        let responses = server.take_responses();
         for i in 0..8 {
             let mut clip = Tensor5::zeros([1, 1, 2, 2, 2]);
             clip.data.fill(1.0 + i as f32);
             // mean > 0 -> argmax is class 3
-            server.submit(clip, Some(3));
+            server.submit(clip, Some(3)).unwrap();
         }
         let mut got = 0;
         while got < 8 {
-            let r = server.responses.recv().unwrap();
+            let r = responses.recv().unwrap();
             assert_eq!(r.predicted, 3);
             assert_eq!(r.correct(), Some(true));
             got += 1;
@@ -183,15 +309,90 @@ mod tests {
                 max_wait: std::time::Duration::from_millis(50),
             },
             queue_depth: 64,
+            workers: 1,
         };
         let server = Server::start(Arc::new(Toy), cfg);
+        let responses = server.take_responses();
         for _ in 0..16 {
-            server.submit(Tensor5::zeros([1, 1, 2, 2, 2]), None);
+            server.submit(Tensor5::zeros([1, 1, 2, 2, 2]), None).unwrap();
         }
         for _ in 0..16 {
-            server.responses.recv().unwrap();
+            responses.recv().unwrap();
         }
         let m = server.shutdown();
         assert!(m.mean_batch() > 1.0, "mean batch {}", m.mean_batch());
+    }
+
+    #[test]
+    fn multi_worker_round_trip_answers_every_id() {
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 2,
+                max_wait: std::time::Duration::from_millis(2),
+            },
+            queue_depth: 8,
+            workers: 3,
+        };
+        let server = Server::start(Arc::new(Toy), cfg);
+        let responses = server.take_responses();
+        let mut ids = std::collections::HashSet::new();
+        for _ in 0..20 {
+            ids.insert(server.submit(Tensor5::zeros([1, 1, 2, 2, 2]), None).unwrap());
+        }
+        for _ in 0..20 {
+            let r = responses.recv().unwrap();
+            assert!(ids.remove(&r.id), "duplicate or unknown id {}", r.id);
+        }
+        assert!(ids.is_empty());
+        let m = server.shutdown();
+        assert_eq!(m.count(), 20);
+        // 20 requests in batches of <= 2: between 10 and 20 batches, all
+        // accounted to some worker.
+        let batches: usize = m.worker_batches().iter().sum();
+        assert!((10..=20).contains(&batches), "batches={batches}");
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors_instead_of_panicking() {
+        // A dead pipeline must surface as Err from submit, never abort the
+        // caller. Kill the pipeline from the inside: a panicking engine
+        // takes its worker down, the batcher then exits, and the ingress
+        // channel closes.
+        struct Bomb;
+        impl Engine for Bomb {
+            fn infer(&self, _batch: Tensor5) -> Mat {
+                panic!("engine exploded mid-batch");
+            }
+            fn name(&self) -> String {
+                "bomb".into()
+            }
+        }
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 1,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            queue_depth: 2,
+            workers: 1,
+        };
+        let server = Server::start(Arc::new(Bomb), cfg);
+        let _responses = server.take_responses();
+        // First submit is accepted (queue has room)...
+        let first = server.submit(Tensor5::zeros([1, 1, 1, 1, 1]), None);
+        assert!(first.is_ok());
+        // ...then the worker dies on it and the pipeline unwinds; retries
+        // must eventually return Err rather than panic.
+        let mut saw_err = false;
+        for _ in 0..200 {
+            match server.submit(Tensor5::zeros([1, 1, 1, 1, 1]), None) {
+                Ok(_) => std::thread::sleep(std::time::Duration::from_millis(2)),
+                Err(e) => {
+                    assert!(e.to_string().contains("pipeline closed"), "{e}");
+                    saw_err = true;
+                    break;
+                }
+            }
+        }
+        assert!(saw_err, "submit kept succeeding against a dead pipeline");
     }
 }

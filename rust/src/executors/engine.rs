@@ -11,7 +11,7 @@ use crate::executors::{self, gemm, naive, ScratchArena};
 use crate::model::{Layer, Model};
 use crate::tensor::{Mat, Tensor5};
 use crate::util::pool::ThreadPool;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
@@ -34,46 +34,26 @@ struct DenseW {
     b: Vec<f32>,
 }
 
-/// A ready-to-run native model instance.
-pub struct NativeEngine {
+/// The immutable compiled half of a native engine: the manifest layer IR,
+/// the prepacked conv plans (tuning database already applied), the dense
+/// head weights and the model geometry. Built once per model and shared
+/// behind an [`Arc`] by every handle [`NativeEngine::fork`] produces, so N
+/// serving workers execute from **one** copy of the packed weights instead
+/// of cloning megabytes of panels per worker.
+pub struct EngineCore {
     pub kind: EngineKind,
     layers: Vec<Layer>,
     convs: std::collections::HashMap<String, CompiledConv>,
     dense: std::collections::HashMap<String, DenseW>,
     pub input: [usize; 4],
     pub num_classes: usize,
-    /// When true, record per-layer timings on each run.
-    pub profile: std::sync::atomic::AtomicBool,
-    timings: std::sync::Mutex<Vec<LayerTiming>>,
-    /// Worker pool for im2col + GEMM (width from `RT3D_THREADS` unless set
-    /// explicitly via [`Self::with_threads`]); parked workers live as long
-    /// as the engine.
-    pool: ThreadPool,
-    /// SIMD kernel variant for layers without a tuned override (and for
-    /// the dense head). Defaults to [`KernelArch::active`].
-    kernel: KernelArch,
-    /// Reused im2col/GEMM/accumulator/activation buffers — the steady
-    /// state forward allocates nothing but the returned logits. Behind a
-    /// mutex because `forward` takes `&self`; one layer holds it at a
-    /// time.
-    arena: Mutex<ScratchArena>,
 }
 
-impl NativeEngine {
-    /// Build from a loaded model with the thread count from `RT3D_THREADS`
-    /// (default: all cores). `use_sparsity` activates the compacted sparse
-    /// plans (only meaningful for `EngineKind::Rt3d`).
-    pub fn new(model: &Model, kind: EngineKind, use_sparsity: bool) -> Self {
-        Self::with_threads(model, kind, use_sparsity, ThreadPool::from_env().threads())
-    }
-
-    /// Build with an explicit executor thread count.
-    pub fn with_threads(
-        model: &Model,
-        kind: EngineKind,
-        use_sparsity: bool,
-        threads: usize,
-    ) -> Self {
+impl EngineCore {
+    /// Compile a model into the shared core (plans prepacked, tune DB
+    /// applied). `use_sparsity` activates the compacted sparse plans (only
+    /// meaningful for [`EngineKind::Rt3d`]).
+    pub fn compile(model: &Model, kind: EngineKind, use_sparsity: bool) -> Self {
         let mut compiled =
             codegen::compile_model(model, use_sparsity && kind == EngineKind::Rt3d);
         // Apply the persisted tuning database (kernel variant x tile x
@@ -94,18 +74,6 @@ impl NativeEngine {
             use_sparsity && kind == EngineKind::Rt3d,
             &mut dense,
         );
-        let pool = ThreadPool::new(threads);
-        let mut arena = ScratchArena::new(pool.threads());
-        // Pre-size to the largest (K, R) / (M, R) footprint across layers
-        // at the native single-clip resolution; larger batches grow the
-        // buffers once on first use.
-        let (mut pmax, mut omax) = (0usize, 0usize);
-        for cc in convs.values() {
-            let r = cc.geom.rows(1);
-            pmax = pmax.max(cc.geom.cols() * r);
-            omax = omax.max(cc.geom.out_ch * r);
-        }
-        arena.reserve(pmax, omax);
         Self {
             kind,
             layers: model.manifest.layers.clone(),
@@ -113,12 +81,123 @@ impl NativeEngine {
             dense,
             input: model.manifest.input,
             num_classes: model.manifest.num_classes,
+        }
+    }
+
+    /// Total post-compaction conv FLOPs per clip.
+    pub fn conv_flops(&self) -> usize {
+        self.convs.values().map(|c| c.flops).sum()
+    }
+
+    /// A fresh scratch arena pre-sized to the largest (K, R) / (M, R)
+    /// footprint across layers at the native single-clip resolution;
+    /// larger batches grow the buffers once on first use.
+    fn presized_arena(&self, workers: usize) -> ScratchArena {
+        let mut arena = ScratchArena::new(workers);
+        let (mut pmax, mut omax) = (0usize, 0usize);
+        for cc in self.convs.values() {
+            let (p, o) = cc.scratch_footprint(1);
+            pmax = pmax.max(p);
+            omax = omax.max(o);
+        }
+        arena.reserve(pmax, omax);
+        arena
+    }
+}
+
+/// A ready-to-run native model instance: a shared compiled core plus the
+/// cheap per-handle execution state (worker pool, scratch arena, kernel
+/// override, profiling sink). [`Self::fork`] clones only the latter.
+pub struct NativeEngine {
+    /// Mirror of `core.kind` (kept as a field for call-site compatibility).
+    pub kind: EngineKind,
+    core: Arc<EngineCore>,
+    /// When true, record per-layer timings on each run.
+    pub profile: std::sync::atomic::AtomicBool,
+    timings: std::sync::Mutex<Vec<LayerTiming>>,
+    /// Worker pool for im2col + GEMM (width from `RT3D_THREADS` unless set
+    /// explicitly via [`Self::with_threads`]); parked workers live as long
+    /// as the engine handle.
+    pool: ThreadPool,
+    /// SIMD kernel variant for layers without a tuned override (and for
+    /// the dense head). Defaults to [`KernelArch::active`].
+    kernel: KernelArch,
+    /// Set by [`Self::set_kernel`]: `kernel` then overrides even tuned
+    /// per-layer choices, via the call binding (the shared core is never
+    /// mutated).
+    kernel_forced: bool,
+    /// Reused im2col/GEMM/accumulator/activation buffers — the steady
+    /// state forward allocates nothing but the returned logits. Behind a
+    /// mutex because `forward` takes `&self`; one layer holds it at a
+    /// time. Per handle, so forked workers never contend here.
+    arena: Mutex<ScratchArena>,
+}
+
+impl NativeEngine {
+    /// Build from a loaded model with the thread count from `RT3D_THREADS`
+    /// (default: all cores). `use_sparsity` activates the compacted sparse
+    /// plans (only meaningful for `EngineKind::Rt3d`).
+    pub fn new(model: &Model, kind: EngineKind, use_sparsity: bool) -> Self {
+        Self::with_threads(model, kind, use_sparsity, ThreadPool::from_env().threads())
+    }
+
+    /// Build with an explicit executor thread count.
+    pub fn with_threads(
+        model: &Model,
+        kind: EngineKind,
+        use_sparsity: bool,
+        threads: usize,
+    ) -> Self {
+        Self::from_core(Arc::new(EngineCore::compile(model, kind, use_sparsity)), threads)
+    }
+
+    /// Build an execution handle over an existing (possibly shared)
+    /// compiled core.
+    pub fn from_core(core: Arc<EngineCore>, threads: usize) -> Self {
+        let pool = ThreadPool::new(threads);
+        let arena = core.presized_arena(pool.threads());
+        Self {
+            kind: core.kind,
+            core,
             profile: std::sync::atomic::AtomicBool::new(false),
             timings: std::sync::Mutex::new(Vec::new()),
             pool,
             kernel: KernelArch::active(),
+            kernel_forced: false,
             arena: Mutex::new(arena),
         }
+    }
+
+    /// Fork an independent execution handle over the **same** compiled
+    /// core: packed weights, tuned configs and layer IR are shared via the
+    /// [`Arc`]; the pool, scratch arena and profiling state are fresh.
+    /// This is what lets N server workers run concurrently without cloning
+    /// weights and without contending on one scratch-arena mutex.
+    pub fn fork(&self) -> NativeEngine {
+        self.fork_with_threads(self.pool.threads())
+    }
+
+    /// [`Self::fork`] with a different executor thread count per handle
+    /// (e.g. split a machine's cores evenly across serving workers).
+    pub fn fork_with_threads(&self, threads: usize) -> NativeEngine {
+        let mut forked = Self::from_core(self.core.clone(), threads);
+        forked.kernel = self.kernel;
+        forked.kernel_forced = self.kernel_forced;
+        forked
+    }
+
+    /// The shared compiled core (plans + weights) behind this handle.
+    pub fn core(&self) -> &Arc<EngineCore> {
+        &self.core
+    }
+
+    /// Native input dims (C, D, H, W) from the manifest.
+    pub fn input(&self) -> [usize; 4] {
+        self.core.input
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.core.num_classes
     }
 
     /// Executor worker threads this engine runs with.
@@ -133,7 +212,8 @@ impl NativeEngine {
 
     /// Force every layer (and the dense head) onto one kernel variant —
     /// used by the SIMD↔scalar parity tests and benches. Overrides any
-    /// tuned per-layer choice.
+    /// tuned per-layer choice. Handle-local: the shared core stays
+    /// untouched, so other forks keep their own kernel selection.
     pub fn set_kernel(&mut self, kernel: KernelArch) {
         assert!(
             kernel.supported(),
@@ -141,9 +221,7 @@ impl NativeEngine {
             kernel.name()
         );
         self.kernel = kernel;
-        for cc in self.convs.values_mut() {
-            cc.kernel = Some(kernel);
-        }
+        self.kernel_forced = true;
     }
 
     /// Times the activation recycler had to grow an allocation; flat
@@ -160,7 +238,7 @@ impl NativeEngine {
 
     /// Total post-compaction conv FLOPs per clip.
     pub fn conv_flops(&self) -> usize {
-        self.convs.values().map(|c| c.flops).sum()
+        self.core.conv_flops()
     }
 
     pub fn take_timings(&self) -> Vec<LayerTiming> {
@@ -177,7 +255,7 @@ impl NativeEngine {
     /// Forward consuming the input batch (zero input copies — the
     /// coordinator's batcher owns the packed batch and hands it over).
     pub fn forward_owned(&self, x: Tensor5) -> Mat {
-        let out = self.run_layers(&self.layers, x);
+        let out = self.run_layers(&self.core.layers, x);
         match out {
             Value::Mat(m) => m,
             Value::Tensor(t) => {
@@ -225,7 +303,7 @@ impl NativeEngine {
             Layer::Conv3d(c) => {
                 let t = v.tensor();
                 let batch = t.dims[0];
-                let cc = &self.convs[&c.name];
+                let cc = &self.core.convs[&c.name];
                 let t0 = std::time::Instant::now();
                 let out = self.run_conv(cc, t);
                 if self.profile.load(std::sync::atomic::Ordering::Relaxed) {
@@ -268,7 +346,7 @@ impl NativeEngine {
             }
             Layer::Dense(d) => {
                 let m = v.mat();
-                let dw = &self.dense[&d.name];
+                let dw = &self.core.dense[&d.name];
                 let mut out =
                     Mat::from_vec(m.rows, d.out_dim, self.take_buf(m.rows * d.out_dim));
                 gemm::dense_head_with(
@@ -306,11 +384,13 @@ impl NativeEngine {
     fn run_conv(&self, cc: &CompiledConv, x: Tensor5) -> Tensor5 {
         // Rebind geometry to the actual input spatial size (the manifest
         // geometry is for the native resolution; batch may differ). The
-        // binding shares the plan's weights — no per-call clone.
-        let mut call = cc.bind([x.dims[2], x.dims[3], x.dims[4]]);
-        if cc.kernel.is_none() {
-            call.kernel = self.kernel;
-        }
+        // binding shares the plan's weights — no per-call clone — and
+        // resolves this handle's forced kernel, if any, without touching
+        // the shared core.
+        let call = cc.bind_with(
+            [x.dims[2], x.dims[3], x.dims[4]],
+            self.kernel_forced.then_some(self.kernel),
+        );
         let g = call.geom;
         let batch = x.dims[0];
         let [od, oh, ow] = g.out_spatial();

@@ -11,7 +11,10 @@
 //!   paper's argument for why KGS keeps full SIMD utilization.
 //! * [`arena`] — pre-sized scratch buffers (allocation-free hot path).
 //! * [`engine`] — whole-model interpreter over the manifest IR, running
-//!   im2col and GEMM on its own thread pool (`RT3D_THREADS`).
+//!   im2col and GEMM on its own thread pool (`RT3D_THREADS`). The compiled
+//!   state (prepacked plans, tune DB, dense head) lives in a shared
+//!   [`EngineCore`]; serving workers [`NativeEngine::fork`] cheap handles
+//!   over it instead of cloning the packed weights.
 
 pub mod arena;
 pub mod engine;
@@ -19,7 +22,7 @@ pub mod gemm;
 pub mod naive;
 
 pub use arena::{AccSlabs, BufPool, ScratchArena};
-pub use engine::{EngineKind, LayerTiming, NativeEngine};
+pub use engine::{EngineCore, EngineKind, LayerTiming, NativeEngine};
 
 use crate::codegen::{CompiledConv, ConvCall, ConvKind, KgsGroup, PanelSchedule};
 use crate::tensor::{Mat, Tensor5};

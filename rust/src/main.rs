@@ -18,15 +18,16 @@ rt3d — RT3D (AAAI'21) reproduction runtime
 USAGE: rt3d [--artifacts DIR] <serve|bench|tune|inspect> [options]
 
   serve    --model c3d --engine rt3d|naive|untuned [--sparse] \
-           [--requests 32] [--max-batch 4] [--threads N] \
+           [--requests 32] [--max-batch 4] [--threads N] [--workers W] \
            [--pjrt] [--variant dense_xla_b1]
   bench    --table 2|3|cache
   tune     --model c3d [--reps 3]
   inspect  --model c3d
 
 Executor threads default to RT3D_THREADS (else all cores); --threads
-overrides per invocation. The --pjrt path needs a build with
-`--features pjrt`.
+overrides per invocation. --workers W runs W batch-execution workers
+over one shared compiled model (total parallelism ~ W x threads). The
+--pjrt path needs a build with `--features pjrt`.
 ";
 
 fn engine_kind(s: &str) -> EngineKind {
@@ -49,6 +50,7 @@ fn main() -> rt3d::Result<()> {
             args.get_usize("requests", 32),
             args.get_usize("max-batch", 4),
             args.get_usize("threads", 0),
+            args.get_usize("workers", 1),
             args.flag("pjrt"),
             &args.get_or("variant", "dense_xla_b1"),
         ),
@@ -80,6 +82,7 @@ fn serve(
     requests: usize,
     max_batch: usize,
     threads: usize,
+    workers: usize,
     pjrt: bool,
     variant: &str,
 ) -> rt3d::Result<()> {
@@ -92,25 +95,32 @@ fn serve(
     } else {
         Arc::new(NativeEngine::new(&model, engine_kind(engine), sparse))
     };
-    println!("engine: {} ({} executor threads)", eng.name(), eng.threads());
+    println!(
+        "engine: {} ({} executor threads x {} serving workers)",
+        eng.name(),
+        eng.threads(),
+        workers.max(1)
+    );
     let cfg = ServerConfig {
         batcher: rt3d::coordinator::BatcherConfig {
             max_batch,
             max_wait: std::time::Duration::from_millis(10),
         },
+        workers,
         ..Default::default()
     };
     let server = Server::start(eng, cfg);
+    let responses = server.take_responses();
     let frames = in_dims[1];
     let size = in_dims[2];
     for i in 0..requests {
         let label = i % workload::NUM_CLASSES;
         let clip = workload::make_clip(label, 1000 + i as u64, frames, size);
-        server.submit(clip, Some(label));
+        server.submit(clip, Some(label))?;
     }
     let mut done = 0;
     while done < requests {
-        let _ = server.responses.recv()?;
+        let _ = responses.recv()?;
         done += 1;
     }
     let m = server.shutdown();
@@ -121,6 +131,10 @@ fn serve(
         m.throughput(),
         m.mean_batch()
     );
+    let wb = m.worker_batches();
+    if wb.len() > 1 {
+        println!("batches per worker: {wb:?}");
+    }
     println!(
         "latency ms: mean={:.1} p50={:.1} p95={:.1} p99={:.1}",
         lat.mean_s * 1e3,

@@ -233,13 +233,17 @@ fn server_with_toy_conv_engine() {
                 max_wait: std::time::Duration::from_millis(5),
             },
             queue_depth: 16,
+            workers: 1,
         },
     );
+    let responses = server.take_responses();
     for i in 0..12 {
-        server.submit(workload::make_clip(i % 8, i as u64, 4, 8), None);
+        server
+            .submit(workload::make_clip(i % 8, i as u64, 4, 8), None)
+            .unwrap();
     }
     for _ in 0..12 {
-        server.responses.recv().unwrap();
+        responses.recv().unwrap();
     }
     let m = server.shutdown();
     assert_eq!(m.count(), 12);

@@ -1,0 +1,272 @@
+//! Multi-worker serving pipeline tests.
+//!
+//! The contracts under test (see `coordinator` module docs):
+//! * **exactly-once delivery** — M concurrent submitters x N execution
+//!   workers: every accepted request id is answered exactly once;
+//! * **bounded in-flight** — accepted-but-unanswered requests never
+//!   exceed the pipeline's capacity (ingress `queue_depth` + batcher
+//!   pending + batch queue + in-execution), so back-pressure reaches
+//!   submitters instead of queues growing without bound;
+//! * **determinism** — per-request logits from an N-worker server over
+//!   forked engine handles are bit-identical to the single-worker run;
+//! * **scaling** — N>1 workers beat one worker on a slow engine;
+//! * **shared core** — forked native engines share one compiled core
+//!   (no packed-weight clones) and keep kernel forcing per handle.
+
+use rt3d::coordinator::{BatcherConfig, Engine, Server, ServerConfig};
+use rt3d::executors::{EngineKind, NativeEngine};
+use rt3d::model::{Model, SyntheticC3d};
+use rt3d::tensor::{Mat, Tensor5};
+use rt3d::workload;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Engine whose `infer` blocks until the gate opens — lets a test freeze
+/// the execution stage and observe how much work the pipeline accepts.
+struct Gated {
+    gate: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gated {
+    fn new() -> Arc<Self> {
+        Arc::new(Self { gate: Mutex::new(false), cv: Condvar::new() })
+    }
+
+    fn open(&self) {
+        *self.gate.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+impl Engine for Gated {
+    fn infer(&self, batch: Tensor5) -> Mat {
+        let mut open = self.gate.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+        Mat::zeros(batch.dims[0], 2)
+    }
+    fn name(&self) -> String {
+        "gated".into()
+    }
+}
+
+#[test]
+fn saturation_answers_every_id_once_with_bounded_inflight() {
+    const SUBMITTERS: usize = 32;
+    const QUEUE_DEPTH: usize = 4;
+    const MAX_BATCH: usize = 2;
+    const WORKERS: usize = 3;
+    // Capacity of the frozen pipeline: ingress buffer + batcher pending
+    // (< one batch) + queued batches (one slot per worker) + one batch in
+    // execution per worker.
+    const BOUND: usize = QUEUE_DEPTH + MAX_BATCH * (1 + 2 * WORKERS);
+
+    let gated = Gated::new();
+    let server = Server::start(
+        gated.clone(),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: MAX_BATCH,
+                max_wait: Duration::from_millis(1),
+            },
+            queue_depth: QUEUE_DEPTH,
+            workers: WORKERS,
+        },
+    );
+    let responses = server.take_responses();
+    let accepted = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..SUBMITTERS {
+            s.spawn(|| {
+                // Blocks under back-pressure; counts only accepted work.
+                server.submit(Tensor5::zeros([1, 1, 2, 2, 2]), None).unwrap();
+                accepted.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // With the execution stage frozen, acceptance must stall at the
+        // pipeline capacity. The bound is an invariant (holds at every
+        // instant), so sampling after a settle pause cannot flake.
+        std::thread::sleep(Duration::from_millis(300));
+        let frozen = accepted.load(Ordering::SeqCst);
+        assert!(
+            frozen <= BOUND,
+            "in-flight {frozen} exceeds pipeline capacity {BOUND}"
+        );
+        assert!(
+            frozen < SUBMITTERS,
+            "back-pressure never engaged ({frozen} of {SUBMITTERS} accepted)"
+        );
+        gated.open();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..SUBMITTERS {
+            let r = responses.recv().unwrap();
+            assert!(seen.insert(r.id), "id {} answered twice", r.id);
+        }
+        // Every submitter got exactly one slot: ids are 0..SUBMITTERS.
+        assert_eq!(seen.len(), SUBMITTERS);
+        assert!(seen.iter().all(|&id| (id as usize) < SUBMITTERS));
+    });
+    let m = server.shutdown();
+    assert_eq!(m.count(), SUBMITTERS);
+}
+
+/// Run `n` labelled clips through a server and return id -> logits.
+fn serve_collect(
+    engine: Arc<dyn Engine>,
+    workers: usize,
+    n: usize,
+    frames: usize,
+    size: usize,
+) -> HashMap<u64, Vec<f32>> {
+    let server = Server::start(
+        engine,
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 2,
+                max_wait: Duration::from_millis(2),
+            },
+            queue_depth: 16,
+            workers,
+        },
+    );
+    let responses = server.take_responses();
+    let mut id_to_seed = HashMap::new();
+    for i in 0..n {
+        let clip = workload::make_clip(i % 8, i as u64, frames, size);
+        let id = server.submit(clip, Some(i % 8)).unwrap();
+        id_to_seed.insert(id, i);
+    }
+    let mut out = HashMap::new();
+    for _ in 0..n {
+        let r = responses.recv().unwrap();
+        // Map back to the submission index so runs with different id
+        // interleavings still compare clip-for-clip.
+        let idx = id_to_seed[&r.id];
+        out.insert(idx as u64, r.logits);
+    }
+    server.shutdown();
+    out
+}
+
+#[test]
+fn multi_worker_logits_bit_identical_to_single_worker() {
+    let model = Model::synthetic_c3d(SyntheticC3d::tiny());
+    let input = model.manifest.input;
+    let n = 12;
+    let single = serve_collect(
+        Arc::new(NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 2)),
+        1,
+        n,
+        input[1],
+        input[2],
+    );
+    let multi = serve_collect(
+        Arc::new(NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 2)),
+        3,
+        n,
+        input[1],
+        input[2],
+    );
+    assert_eq!(single.len(), n);
+    assert_eq!(multi.len(), n);
+    for (idx, logits) in &single {
+        assert_eq!(
+            logits, &multi[idx],
+            "clip {idx}: multi-worker logits diverged from single-worker"
+        );
+    }
+}
+
+#[test]
+fn more_workers_beat_one_on_a_slow_engine() {
+    /// Fixed service time per batch — throughput is then purely a
+    /// function of how many batches run concurrently.
+    struct Slow;
+    impl Engine for Slow {
+        fn infer(&self, batch: Tensor5) -> Mat {
+            std::thread::sleep(Duration::from_millis(10));
+            Mat::zeros(batch.dims[0], 2)
+        }
+        fn name(&self) -> String {
+            "slow".into()
+        }
+    }
+
+    let run = |workers: usize| -> f64 {
+        let server = Server::start(
+            Arc::new(Slow),
+            ServerConfig {
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_wait: Duration::from_millis(1),
+                },
+                queue_depth: 16,
+                workers,
+            },
+        );
+        let responses = server.take_responses();
+        let n = 16;
+        let t0 = std::time::Instant::now();
+        for _ in 0..n {
+            server.submit(Tensor5::zeros([1, 1, 2, 2, 2]), None).unwrap();
+        }
+        for _ in 0..n {
+            responses.recv().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = server.shutdown();
+        assert_eq!(m.count(), n);
+        if workers > 1 {
+            let wb = m.worker_batches();
+            assert!(
+                wb.iter().filter(|&&b| b > 0).count() > 1,
+                "batches never spread across workers: {wb:?}"
+            );
+        }
+        wall
+    };
+
+    let single = run(1);
+    let quad = run(4);
+    // 16 batches x 10 ms: ~160 ms serial vs ~40 ms across 4 workers.
+    // Require 1.5x to stay robust on noisy CI runners.
+    assert!(
+        quad * 1.5 < single,
+        "4 workers ({quad:.3}s) must beat 1 worker ({single:.3}s) by >=1.5x"
+    );
+}
+
+#[test]
+fn forked_native_engines_share_one_compiled_core() {
+    let model = Model::synthetic_c3d(SyntheticC3d::tiny());
+    let input = model.manifest.input;
+    let engine = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 2);
+    let fork = engine.fork();
+    assert!(
+        Arc::ptr_eq(engine.core(), fork.core()),
+        "fork must share the compiled core, not clone it"
+    );
+    assert_eq!(fork.threads(), engine.threads());
+    let clip = Tensor5::random([2, input[0], input[1], input[2], input[3]], 11);
+    assert_eq!(
+        engine.forward(&clip).data,
+        fork.forward(&clip).data,
+        "forked handle must be bit-identical to the original"
+    );
+    // Handle-local kernel forcing survives the fork without touching the
+    // shared core: the original keeps its auto selection.
+    let mut scalar = engine.fork();
+    scalar.set_kernel(rt3d::codegen::KernelArch::Scalar);
+    let narrower = scalar.fork_with_threads(1);
+    assert_eq!(narrower.kernel(), rt3d::codegen::KernelArch::Scalar);
+    assert_eq!(narrower.threads(), 1);
+    assert_eq!(
+        scalar.forward(&clip).data,
+        engine.forward(&clip).data,
+        "scalar fork must stay bit-identical (mul+add lanes, no FMA)"
+    );
+}
