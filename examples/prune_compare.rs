@@ -11,7 +11,7 @@ use rt3d::executors::{EngineKind, NativeEngine};
 use rt3d::model::Model;
 use rt3d::tensor::Tensor5;
 
-fn median_time<F: FnMut() -> ()>(mut f: F, reps: usize) -> f64 {
+fn median_time<F: FnMut()>(mut f: F, reps: usize) -> f64 {
     let mut ts: Vec<f64> = (0..reps.max(1))
         .map(|_| {
             let t0 = std::time::Instant::now();

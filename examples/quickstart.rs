@@ -1,6 +1,6 @@
 //! Quickstart: load the C3D artifact, run one clip through both execution
-//! paths (native RT3D executors and the PJRT-compiled HLO), and print the
-//! predictions.
+//! paths (native RT3D executors and, with `--features pjrt`, the
+//! PJRT-compiled HLO), and print the predictions.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
@@ -8,7 +8,6 @@
 
 use rt3d::executors::{EngineKind, NativeEngine};
 use rt3d::model::Model;
-use rt3d::runtime::Runtime;
 use rt3d::workload;
 
 fn main() -> rt3d::Result<()> {
@@ -37,22 +36,28 @@ fn main() -> rt3d::Result<()> {
         t0.elapsed().as_secs_f64() * 1e3
     );
 
-    // Path 2: the AOT-compiled HLO through PJRT (three-layer path).
-    let rt = Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
-    let exe = rt.load(
-        model.hlo_path("dense_xla_b1").expect("artifact missing"),
-        [1, input[0], input[1], input[2], input[3]],
-    )?;
-    println!("compiled dense_xla_b1 in {:.2}s", exe.compile_time_s);
-    let t0 = std::time::Instant::now();
-    let pjrt_logits = exe.run(&clip.data)?;
-    println!(
-        "pjrt xla:    {:?} -> predicted class {} ({:.1} ms)",
-        &pjrt_logits[..model.manifest.num_classes.min(4)],
-        argmax(&pjrt_logits),
-        t0.elapsed().as_secs_f64() * 1e3
-    );
+    // Path 2: the AOT-compiled HLO through PJRT (three-layer path). Only
+    // built with `--features pjrt` — the xla crate is not vendored.
+    #[cfg(feature = "pjrt")]
+    {
+        let rt = rt3d::runtime::Runtime::cpu()?;
+        println!("PJRT platform: {}", rt.platform());
+        let exe = rt.load(
+            model.hlo_path("dense_xla_b1").expect("artifact missing"),
+            [1, input[0], input[1], input[2], input[3]],
+        )?;
+        println!("compiled dense_xla_b1 in {:.2}s", exe.compile_time_s);
+        let t0 = std::time::Instant::now();
+        let pjrt_logits = exe.run(&clip.data)?;
+        println!(
+            "pjrt xla:    {:?} -> predicted class {} ({:.1} ms)",
+            &pjrt_logits[..model.manifest.num_classes.min(4)],
+            argmax(&pjrt_logits),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("pjrt xla:    skipped (build with --features pjrt to enable)");
 
     // Path 3: sparse (pruned) plans — same prediction, fewer FLOPs.
     let sparse = NativeEngine::new(&model, EngineKind::Rt3d, true);

@@ -2,14 +2,22 @@
 //! untuned vs the PR-1 strided scalar kernel vs the prepacked scalar and
 //! prepacked SIMD kernels, on Table-2-sized GEMMs. The headline number is
 //! `speedup_packed_simd_vs_pr1` — the acceptance gate for the prepacking +
-//! SIMD work is >= 1.5x on at least one shape. Emits
-//! `BENCH_gemm_kernels.json` at the repo root with detected ISA, selected
-//! kernel and per-shape GFLOP/s.
+//! SIMD work is >= 1.5x on at least one shape.
+//!
+//! A second sweep times the full conv-shaped path both ways —
+//! **materialized** (im2col into the `(K, R)` patch matrix + GEMM) vs
+//! **fused implicit GEMM** (per-worker packed patch panels) — asserting
+//! bit-identity and recording each path's measured peak scratch bytes
+//! (`fused_peak_scratch_mb` / `materialized_peak_scratch_mb`, gated by
+//! `scripts/check_bench_regression.py`). Emits `BENCH_gemm_kernels.json`
+//! at the repo root with detected ISA, selected kernel and per-shape
+//! GFLOP/s.
 
-use rt3d::codegen::{GemmTile, KernelArch, PackedDense};
+use rt3d::codegen::{self, GemmTile, KernelArch, PackedDense};
 use rt3d::executors::gemm::{self, GemmCtx};
-use rt3d::executors::AccSlabs;
-use rt3d::tensor::Mat;
+use rt3d::executors::{self, AccSlabs, ScratchArena};
+use rt3d::model::{ConvLayer, TensorRef, WeightRefs};
+use rt3d::tensor::{Conv3dGeometry, Mat, Tensor5};
 use rt3d::util::bench::{budget_from_env, write_repo_json, BenchGroup};
 use rt3d::util::pool::ThreadPool;
 
@@ -97,11 +105,103 @@ fn main() {
         ));
     }
 
+    // ---- fused implicit-GEMM vs materialized im2col+GEMM ----------------
+    // Conv-shaped sweep (M = out_ch, C = in_ch, 3^3 kernels, pad 1):
+    // C3D-layer-class shapes where the materialized patch matrix is many
+    // MB. Each path runs against its own scratch arena so the measured
+    // peak bytes are exactly what an engine would hold for that layer.
+    let conv_shapes = [
+        (16usize, 3usize, [16usize, 32, 32]), // conv1 class: K=81, R=16384
+        (32, 16, [16, 16, 16]),               // conv2 class: K=432, R=4096
+        (64, 32, [8, 8, 8]),                  // conv3 class: K=864, R=512
+    ];
+    let mut fused_entries = Vec::new();
+    let (mut fused_best, mut mat_best) = (0.0f64, 0.0f64);
+    let (mut fused_peak, mut mat_peak) = (0usize, 0usize);
+    for (m, c, sp) in conv_shapes {
+        let dummy = TensorRef { offset: 0, shape: vec![], dtype: "f32".into() };
+        let layer = ConvLayer {
+            name: format!("bench_m{m}c{c}"),
+            in_ch: c,
+            out_ch: m,
+            kernel: [3, 3, 3],
+            stride: [1, 1, 1],
+            padding: [1, 1, 1],
+            relu: true,
+            weights: WeightRefs { w: dummy.clone(), b: dummy },
+            weights_sparse: None,
+            unit_mask: None,
+        };
+        let g = Conv3dGeometry {
+            in_ch: c,
+            out_ch: m,
+            kernel: [3, 3, 3],
+            stride: [1, 1, 1],
+            padding: [1, 1, 1],
+            in_spatial: sp,
+        };
+        let w = Tensor5::random([m, c, 3, 3, 3], 11).data;
+        let cc = codegen::compile_conv_dense(&layer, &g, &w, vec![0.0; m]);
+        let x = Tensor5::random([1, c, sp[0], sp[1], sp[2]], 12);
+        let call = cc.bind(g.in_spatial);
+        let gflop = g.flops(1) as f64 / 1e9;
+        let (k, r) = (g.cols(), g.rows(1));
+
+        let mut mat_arena = ScratchArena::new(pool.threads());
+        let t_mat = group
+            .bench(&format!("materialized/m{m}k{k}r{r}"), || {
+                let ScratchArena { patches, out, slabs, .. } = &mut mat_arena;
+                patches.reset(g.cols(), g.rows(1));
+                executors::im2col_t_into_with(&x, &g, patches, pool);
+                out.reset(m, patches.cols);
+                executors::run_conv_bound(&call, patches, out, pool, slabs);
+            })
+            .median_s;
+        let mut fus_arena = ScratchArena::new(pool.threads());
+        let t_fus = group
+            .bench(&format!("fused/m{m}k{k}r{r}"), || {
+                let ScratchArena { out, slabs, .. } = &mut fus_arena;
+                out.reset(m, g.rows(1));
+                executors::run_conv_fused(&call, &x, out, pool, slabs);
+            })
+            .median_s;
+        assert_eq!(
+            mat_arena.out.data, fus_arena.out.data,
+            "fused output must be bit-identical to materialized"
+        );
+        let (mb, fb) = (mat_arena.peak_bytes(), fus_arena.peak_bytes());
+        mat_peak = mat_peak.max(mb);
+        fused_peak = fused_peak.max(fb);
+        mat_best = mat_best.max(gflop / t_mat);
+        fused_best = fused_best.max(gflop / t_fus);
+        println!(
+            "conv m{m} K{k} R{r}: materialized {:.2} GFLOP/s ({} scratch B), \
+             fused {:.2} GFLOP/s ({} scratch B), speedup {:.2}x, scratch {:.1}x smaller",
+            gflop / t_mat,
+            mb,
+            gflop / t_fus,
+            fb,
+            t_mat / t_fus,
+            mb as f64 / fb as f64
+        );
+        fused_entries.push(format!(
+            "    {{\"m\": {m}, \"k\": {k}, \"r\": {r}, \
+             \"materialized_gflops\": {:.4}, \"fused_gflops\": {:.4}, \
+             \"fused_speedup\": {:.4}, \"materialized_scratch_bytes\": {mb}, \
+             \"fused_scratch_bytes\": {fb}}}",
+            gflop / t_mat,
+            gflop / t_fus,
+            t_mat / t_fus
+        ));
+    }
+
     let json = format!(
         "{{\n  \"bench\": \"gemm_kernels\",\n  \"threads\": {},\n  \
          \"isa_detected\": \"{}\",\n  \"kernel\": \"{}\",\n  \
          \"simd_lanes\": {},\n  \"tile\": {{\"mr\": {}, \"rc\": {}, \"kc\": {}}},\n  \
-         \"shapes\": [\n{}\n  ]\n}}\n",
+         \"fused_best_gflops\": {:.4},\n  \"materialized_best_gflops\": {:.4},\n  \
+         \"fused_peak_scratch_mb\": {:.3},\n  \"materialized_peak_scratch_mb\": {:.3},\n  \
+         \"shapes\": [\n{}\n  ],\n  \"fused\": [\n{}\n  ]\n}}\n",
         pool.threads(),
         KernelArch::best_supported().name(),
         active.name(),
@@ -109,7 +209,12 @@ fn main() {
         tile.mr,
         tile.rc,
         tile.kc,
-        entries.join(",\n")
+        fused_best,
+        mat_best,
+        fused_peak as f64 / (1024.0 * 1024.0),
+        mat_peak as f64 / (1024.0 * 1024.0),
+        entries.join(",\n"),
+        fused_entries.join(",\n")
     );
     let out = write_repo_json("BENCH_gemm_kernels.json", &json);
     println!("gemm_kernels: wrote {}", out.display());

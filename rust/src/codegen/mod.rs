@@ -17,8 +17,8 @@ pub mod plan;
 pub mod tuner;
 
 pub use plan::{
-    CompiledConv, ConvCall, ConvKind, GemmTile, KernelArch, KgsGroup, PackedDense,
-    PanelSchedule,
+    CompiledConv, ConvCall, ConvKind, FuseMode, GemmTile, KernelArch, KgsGroup,
+    PackedDense, PanelSchedule, FUSE_PATCH_BYTES,
 };
 
 use crate::model::{ConvLayer, Model};
@@ -101,6 +101,7 @@ pub fn compile_conv_dense(
         sched: None,
         kernel: None,
         threads: 0,
+        fused: None,
         flops: geom.flops(1),
     };
     cc.finalize();
@@ -199,6 +200,7 @@ fn compile_kgs(
         sched: None,
         kernel: None,
         threads: 0,
+        fused: None,
     };
     cc.finalize();
     cc
@@ -259,6 +261,7 @@ fn compile_vanilla(
         sched: None,
         kernel: None,
         threads: 0,
+        fused: None,
     };
     cc.finalize();
     cc
@@ -293,6 +296,7 @@ fn compile_filter(
         sched: None,
         kernel: None,
         threads: 0,
+        fused: None,
     };
     cc.finalize();
     cc

@@ -33,6 +33,54 @@ impl Default for GemmTile {
     }
 }
 
+/// Process-wide fused-path policy from `RT3D_FUSE`:
+/// * `auto` (or unset) — per-layer choice: the tuned `fused` flag when one
+///   is persisted, else the footprint heuristic
+///   ([`CompiledConv::fused_default`]);
+/// * `on` — force the fused implicit-GEMM path everywhere;
+/// * `off` — force the materialized im2col path everywhere (the
+///   differential baseline for fused↔materialized bit-parity runs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FuseMode {
+    Auto,
+    On,
+    Off,
+}
+
+impl FuseMode {
+    pub fn parse(s: &str) -> Option<FuseMode> {
+        match s {
+            "" | "auto" => Some(FuseMode::Auto),
+            "on" | "fused" => Some(FuseMode::On),
+            "off" | "materialized" => Some(FuseMode::Off),
+            _ => None,
+        }
+    }
+
+    pub fn from_env() -> FuseMode {
+        match std::env::var("RT3D_FUSE") {
+            Ok(v) => FuseMode::parse(v.trim()).unwrap_or_else(|| {
+                eprintln!("RT3D_FUSE={v:?} not recognized; using auto");
+                FuseMode::Auto
+            }),
+            Err(_) => FuseMode::Auto,
+        }
+    }
+
+    /// Process-wide policy (env resolved once).
+    pub fn active() -> FuseMode {
+        static MODE: OnceLock<FuseMode> = OnceLock::new();
+        *MODE.get_or_init(FuseMode::from_env)
+    }
+}
+
+/// Untuned layers default to the fused path once the materialized patch
+/// matrix would exceed this many bytes at batch 1 (~the L2 capacity class:
+/// beyond it the `(K, R)` matrix round-trips through DRAM, which is what
+/// the fused path exists to avoid). Large early conv layers clear this by
+/// orders of magnitude; tiny tail layers stay materialized.
+pub const FUSE_PATCH_BYTES: usize = 1 << 20;
+
 /// Which inner-kernel instruction set executes a plan. Lanes vectorize
 /// across the R (output-position) axis, so each output element keeps the
 /// serial K accumulation order — and because the SIMD kernels use separate
@@ -308,6 +356,9 @@ pub struct CompiledConv {
     pub kernel: Option<KernelArch>,
     /// Tuned per-layer worker cap; 0 = every pool worker.
     pub threads: usize,
+    /// Tuned fused/materialized choice; `None` = the footprint heuristic
+    /// ([`Self::fused_default`]). `RT3D_FUSE=on|off` overrides both.
+    pub fused: Option<bool>,
     /// Actual FLOPs per clip after compaction (2*MACs).
     pub flops: usize,
 }
@@ -329,6 +380,12 @@ pub struct ConvCall<'a> {
     pub kernel: KernelArch,
     /// Worker cap for this call (`usize::MAX` = uncapped).
     pub cap: usize,
+    /// Resolved execution path for this call: `true` = fused implicit
+    /// GEMM (per-worker packed patch panels), `false` = materialized
+    /// im2col + GEMM. Resolution order: `RT3D_FUSE=on|off`, then a
+    /// per-call force (engine `set_fused`), then the plan's tuned flag,
+    /// then the footprint heuristic.
+    pub fused: bool,
 }
 
 impl CompiledConv {
@@ -338,7 +395,7 @@ impl CompiledConv {
     /// kernel — the last gate before the `target_feature` code paths
     /// (`supported()` reads std's cached feature detection; it is cheap).
     pub fn bind(&self, in_spatial: [usize; 3]) -> ConvCall<'_> {
-        self.bind_with(in_spatial, None)
+        self.bind_full(in_spatial, None, None)
     }
 
     /// [`Self::bind`] with an engine-level kernel override. `force` wins
@@ -350,25 +407,73 @@ impl CompiledConv {
         in_spatial: [usize; 3],
         force: Option<KernelArch>,
     ) -> ConvCall<'_> {
+        self.bind_full(in_spatial, force, None)
+    }
+
+    /// [`Self::bind_with`] plus an engine-level fused/materialized force
+    /// (`NativeEngine::set_fused`) — handle-local like the kernel force,
+    /// so a differential handle never mutates the shared plan. The
+    /// process-wide `RT3D_FUSE=on|off` policy outranks everything.
+    pub fn bind_full(
+        &self,
+        in_spatial: [usize; 3],
+        force: Option<KernelArch>,
+        force_fused: Option<bool>,
+    ) -> ConvCall<'_> {
+        let geom = Conv3dGeometry { in_spatial, ..self.geom };
+        let fused = match FuseMode::active() {
+            FuseMode::On => true,
+            FuseMode::Off => false,
+            FuseMode::Auto => force_fused
+                .or(self.fused)
+                .unwrap_or_else(|| Self::fused_default(&geom)),
+        };
         ConvCall {
             cc: self,
-            geom: Conv3dGeometry { in_spatial, ..self.geom },
+            geom,
             tile: self.tile,
             kernel: force
                 .or(self.kernel)
                 .filter(|k| k.supported())
                 .unwrap_or_else(KernelArch::active),
             cap: if self.threads == 0 { usize::MAX } else { self.threads },
+            fused,
         }
+    }
+
+    /// Heuristic default for untuned plans: fuse when the materialized
+    /// batch-1 patch matrix would exceed [`FUSE_PATCH_BYTES`]. This is
+    /// what makes the fused path the out-of-the-box default for the large
+    /// early conv layers while tiny tail layers keep the (cheaper to
+    /// drive) materialized path.
+    pub fn fused_default(geom: &Conv3dGeometry) -> bool {
+        4 * geom.cols() * geom.rows(1) >= FUSE_PATCH_BYTES
     }
 
     /// Scratch-arena footprint of this plan at `batch` clips: element
     /// counts of the im2col `(K, R)` patch matrix and the `(M, R)` GEMM
     /// output. The engine core sizes per-worker arenas from the max over
-    /// all layers, so forked handles start warm.
+    /// all layers, so forked handles start warm. Layers that run fused
+    /// never allocate the patch matrix — see [`Self::panel_footprint`].
     pub fn scratch_footprint(&self, batch: usize) -> (usize, usize) {
         let r = self.geom.rows(batch);
         (self.geom.cols() * r, self.geom.out_ch * r)
+    }
+
+    /// Per-worker packed-panel footprint (elements) of the fused path.
+    /// Dense/Filter plans stream `(kc, rc)` sub-panels; sparse plans pack
+    /// the full `(K, rc)` column block (their gathered rows span all of
+    /// K). Independent of batch: the column span is capped at `rc`.
+    pub fn panel_footprint(&self) -> usize {
+        let r = self.geom.rows(1).max(1);
+        let rc = self.tile.rc.max(1).min(r);
+        let k = self.geom.cols().max(1);
+        match &self.kind {
+            ConvKind::Dense { .. } | ConvKind::Filter { .. } => {
+                self.tile.kc.max(1).min(k) * rc
+            }
+            ConvKind::Kgs { .. } | ConvKind::Vanilla { .. } => k * rc,
+        }
     }
 
     /// Build the derived execution layouts (packed dense panels / sparse
@@ -497,6 +602,7 @@ mod tests {
             sched: None,
             kernel: None,
             threads: 0,
+            fused: None,
             flops: 0,
         };
         cc.finalize();
@@ -509,6 +615,60 @@ mod tests {
         assert_eq!(cc.kernel, Some(KernelArch::Scalar), "plan untouched");
         let (p, o) = cc.scratch_footprint(3);
         assert_eq!((p, o), (8 * 3 * 8, 4 * 3 * 8)); // K=8, M=4, R=3*2*2*2
+    }
+
+    #[test]
+    fn fused_resolution_heuristic_and_forces() {
+        // Below the footprint threshold: materialized by default.
+        let small = Conv3dGeometry {
+            in_ch: 2,
+            out_ch: 4,
+            kernel: [3, 3, 3],
+            stride: [1, 1, 1],
+            padding: [1, 1, 1],
+            in_spatial: [2, 4, 4],
+        };
+        assert!(!CompiledConv::fused_default(&small));
+        // A C3D-early-layer-class shape crosses it by a wide margin.
+        let big = Conv3dGeometry { in_spatial: [16, 32, 32], in_ch: 16, ..small };
+        assert!(CompiledConv::fused_default(&big));
+        assert!(4 * big.cols() * big.rows(1) >= FUSE_PATCH_BYTES);
+
+        // bind_full: per-call force > tuned flag > heuristic (under the
+        // default RT3D_FUSE=auto policy the test suite runs with).
+        let wmat = vec![0.0f32; small.out_ch * small.cols()];
+        let mut cc = CompiledConv {
+            name: "f".into(),
+            geom: small,
+            relu: false,
+            bias: vec![0.0; small.out_ch],
+            kind: ConvKind::Dense { wmat },
+            tile: GemmTile::default(),
+            packed: None,
+            sched: None,
+            kernel: None,
+            threads: 0,
+            fused: None,
+            flops: 0,
+        };
+        cc.finalize();
+        if FuseMode::active() == FuseMode::Auto {
+            assert!(!cc.bind(small.in_spatial).fused, "heuristic says small");
+            cc.fused = Some(true);
+            assert!(cc.bind(small.in_spatial).fused, "tuned flag wins");
+            assert!(
+                !cc.bind_full(small.in_spatial, None, Some(false)).fused,
+                "per-call force wins over the tuned flag"
+            );
+            assert_eq!(cc.fused, Some(true), "plan untouched by the force");
+        }
+        // Panel footprints: dense streams (kc, rc); both are bounded by
+        // the actual geometry.
+        let r = small.rows(1);
+        assert_eq!(
+            cc.panel_footprint(),
+            cc.tile.kc.min(small.cols()) * cc.tile.rc.min(r)
+        );
     }
 
     #[test]

@@ -1,7 +1,9 @@
-//! Auto-tuner: search GEMM tile parameters, SIMD kernel variant and
-//! per-layer worker count per layer shape on the actual machine — the
-//! paper's "all models are tuned to their best configurations, e.g. the
-//! best tiling size, unrolling size".
+//! Auto-tuner: search GEMM tile parameters (`mr` register rows and the
+//! `kc`/`rc` cache-panel sizes shared by both conv drivers), SIMD kernel
+//! variant, per-layer worker count and the fused-vs-materialized execution
+//! path per layer shape on the actual machine — the paper's "all models
+//! are tuned to their best configurations, e.g. the best tiling size,
+//! unrolling size".
 //!
 //! The winning configuration is persisted as a JSON tuning database
 //! ([`TuneDb`]) that `NativeEngine` loads at build time (path from
@@ -61,6 +63,35 @@ pub fn time_conv(cc: &CompiledConv, x: &Tensor5, tile: GemmTile, reps: usize) ->
     times[times.len() / 2]
 }
 
+/// Time one conv end-to-end on either execution path — patch formation
+/// *included* (unlike [`time_conv`], which times the GEMM alone), because
+/// the fused path's whole point is folding patch formation into the
+/// cache-resident blocks. Buffers are reused across reps so the timing
+/// reflects the engine's steady state.
+pub fn time_conv_path(cc: &CompiledConv, x: &Tensor5, fused: bool, reps: usize) -> f64 {
+    let g = cc.geom;
+    let pool = ThreadPool::global();
+    let slabs = AccSlabs::global();
+    let mut patches = Mat::zeros(0, 0);
+    let mut out = Mat::zeros(g.out_ch, g.rows(x.dims[0]));
+    let call = cc.bind(g.in_spatial);
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            if fused {
+                executors::run_conv_fused(&call, x, &mut out, pool, slabs);
+            } else {
+                patches.reset(g.cols(), g.rows(x.dims[0]));
+                executors::im2col_t_into_with(x, &g, &mut patches, pool);
+                executors::run_conv_bound(&call, &patches, &mut out, pool, slabs);
+            }
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
 /// Result of tuning one layer.
 #[derive(Debug, Clone)]
 pub struct TuneReport {
@@ -70,6 +101,9 @@ pub struct TuneReport {
     pub kernel: Option<KernelArch>,
     /// Tuned worker cap (0 = every pool worker).
     pub threads: usize,
+    /// Measured execution-path choice (fused implicit GEMM vs
+    /// materialized im2col) at the winning config.
+    pub fused: bool,
     pub best_s: f64,
     pub default_s: f64,
 }
@@ -81,8 +115,8 @@ impl TuneReport {
 }
 
 /// Tune a compiled conv in place (tile grid, then kernel variant, then
-/// worker cap — a coordinate descent over the three config axes);
-/// returns the report.
+/// worker cap, then fused-vs-materialized — a coordinate descent over the
+/// four config axes); returns the report.
 pub fn tune_conv(cc: &mut CompiledConv, reps: usize) -> TuneReport {
     let x = Tensor5::random(
         [
@@ -97,6 +131,7 @@ pub fn tune_conv(cc: &mut CompiledConv, reps: usize) -> TuneReport {
     cc.set_tile(GemmTile::default());
     cc.kernel = None;
     cc.threads = 0;
+    cc.fused = None;
     let default_s = time_conv(cc, &x, GemmTile::default(), reps);
     let mut best = GemmTile::default();
     let mut best_s = default_s;
@@ -147,11 +182,42 @@ pub fn tune_conv(cc: &mut CompiledConv, reps: usize) -> TuneReport {
         }
     }
     cc.threads = best_cap;
+    // --- execution path: fused implicit GEMM vs materialized im2col ----
+    // Timed end-to-end (patch formation included), since that is
+    // precisely the cost the fused path restructures. The fused driver
+    // has its own cache sweet spot — its per-worker panel is (kc, rc)-
+    // sized — so the cache-block axes are re-searched on the fused path
+    // rather than inheriting the materialized winner (mr stays fixed: it
+    // only affects the weight packing, which both drivers share). The
+    // path choice never changes output bits — only scratch shape and
+    // memory traffic — so it is free to flip per machine.
+    let t_mat = time_conv_path(cc, &x, false, reps);
+    let mut t_fus = time_conv_path(cc, &x, true, reps);
+    let mut fus_tile = best;
+    for rc in [128usize, 256, 512] {
+        for kc in [64usize, 128, 256] {
+            let t = GemmTile { rc, kc, ..best };
+            if t == best {
+                continue;
+            }
+            cc.set_tile(t); // same mr -> no repack
+            let s = time_conv_path(cc, &x, true, reps);
+            if s < t_fus {
+                t_fus = s;
+                fus_tile = t;
+            }
+        }
+    }
+    let fused = t_fus < t_mat;
+    let final_tile = if fused { fus_tile } else { best };
+    cc.set_tile(final_tile);
+    cc.fused = Some(fused);
     TuneReport {
         name: cc.name.clone(),
-        best,
+        best: final_tile,
         kernel: cc.kernel,
         threads: cc.threads,
+        fused,
         best_s,
         default_s,
     }
@@ -181,6 +247,9 @@ pub struct TuneEntry {
     pub kernel: Option<KernelArch>,
     /// 0 = every pool worker.
     pub threads: usize,
+    /// Measured fused/materialized choice; `None` = auto (the footprint
+    /// heuristic — also what pre-fused databases decode to).
+    pub fused: Option<bool>,
 }
 
 /// Persisted tuning database: layer key -> winning config. The key folds
@@ -211,7 +280,12 @@ impl TuneDb {
     pub fn record(&mut self, cc: &CompiledConv) {
         self.entries.insert(
             Self::key(cc),
-            TuneEntry { tile: cc.tile, kernel: cc.kernel, threads: cc.threads },
+            TuneEntry {
+                tile: cc.tile,
+                kernel: cc.kernel,
+                threads: cc.threads,
+                fused: cc.fused,
+            },
         );
     }
 
@@ -234,6 +308,7 @@ impl TuneDb {
                     );
                 }
                 cc.threads = e.threads;
+                cc.fused = e.fused;
                 true
             }
             None => false,
@@ -288,7 +363,13 @@ impl TuneDb {
                 },
             };
             let threads = e.req("threads")?.as_usize()?;
-            db.entries.insert(key, TuneEntry { tile, kernel, threads });
+            // Optional for databases written before the fused path existed.
+            let fused = match e.get("fused").map(|f| f.as_str()) {
+                Some(Ok("fused")) => Some(true),
+                Some(Ok("materialized")) => Some(false),
+                _ => None,
+            };
+            db.entries.insert(key, TuneEntry { tile, kernel, threads, fused });
         }
         Ok(db)
     }
@@ -305,13 +386,18 @@ impl TuneDb {
         for (i, key) in keys.iter().enumerate() {
             let e = &self.entries[*key];
             json.push_str(&format!(
-                "    {{\"key\": \"{}\", \"mr\": {}, \"rc\": {}, \"kc\": {}, \"kernel\": \"{}\", \"threads\": {}}}{}\n",
+                "    {{\"key\": \"{}\", \"mr\": {}, \"rc\": {}, \"kc\": {}, \"kernel\": \"{}\", \"threads\": {}, \"fused\": \"{}\"}}{}\n",
                 esc(key),
                 e.tile.mr,
                 e.tile.rc,
                 e.tile.kc,
                 e.kernel.map_or("auto", |k| k.name()),
                 e.threads,
+                match e.fused {
+                    Some(true) => "fused",
+                    Some(false) => "materialized",
+                    None => "auto",
+                },
                 if i + 1 < keys.len() { "," } else { "" }
             ));
         }
@@ -423,11 +509,17 @@ mod tests {
                 tile: GemmTile { mr: 8, rc: 256, kc: 128 },
                 kernel: Some(KernelArch::Scalar),
                 threads: 2,
+                fused: Some(true),
             },
         );
         db.entries.insert(
             "conv2|kgs|m32k864r2048".into(),
-            TuneEntry { tile: GemmTile::default(), kernel: None, threads: 0 },
+            TuneEntry {
+                tile: GemmTile::default(),
+                kernel: None,
+                threads: 0,
+                fused: None,
+            },
         );
         let dir = std::env::temp_dir();
         let path = dir.join(format!("rt3d_tune_db_test_{}.json", std::process::id()));
@@ -439,9 +531,25 @@ mod tests {
         assert_eq!(e.tile, GemmTile { mr: 8, rc: 256, kc: 128 });
         assert_eq!(e.kernel, Some(KernelArch::Scalar));
         assert_eq!(e.threads, 2);
+        assert_eq!(e.fused, Some(true));
         let e2 = &loaded.entries["conv2|kgs|m32k864r2048"];
         assert_eq!(e2.kernel, None);
         assert_eq!(e2.threads, 0);
+        assert_eq!(e2.fused, None);
+    }
+
+    #[test]
+    fn tune_db_pre_fused_documents_decode_to_auto() {
+        // Databases written before the fused axis existed have no "fused"
+        // key; they must load with fused = auto, not fail.
+        let json = "{\n  \"version\": 1,\n  \"entries\": [\n    {\"key\": \"old|dense|m4k8r64\", \"mr\": 4, \"rc\": 512, \"kc\": 256, \"kernel\": \"auto\", \"threads\": 0}\n  ]\n}\n";
+        let dir = std::env::temp_dir();
+        let path =
+            dir.join(format!("rt3d_tune_db_prefused_{}.json", std::process::id()));
+        std::fs::write(&path, json).unwrap();
+        let loaded = TuneDb::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.entries["old|dense|m4k8r64"].fused, None);
     }
 
     #[test]
@@ -474,11 +582,13 @@ mod tests {
         let mut tuned = cc.clone();
         tuned.set_tile(GemmTile { mr: 3, rc: 64, kc: 32 });
         tuned.threads = 2;
+        tuned.fused = Some(true);
         let mut db = TuneDb::default();
         db.record(&tuned);
         assert!(db.apply(&mut cc), "same key must match");
         assert_eq!(cc.tile, GemmTile { mr: 3, rc: 64, kc: 32 });
         assert_eq!(cc.threads, 2);
+        assert_eq!(cc.fused, Some(true), "apply must carry the fused flag");
         assert_eq!(cc.packed.as_ref().unwrap().mr, 3, "apply must repack");
     }
 }

@@ -10,12 +10,23 @@
 //! after warm-up a steady-state `forward_owned` performs **zero heap
 //! allocations** apart from the returned logits matrix, matching the
 //! paper's claim of generated code with a fixed working set.
+//!
+//! The fused implicit-GEMM path shrinks the working set further: layers
+//! that run fused never touch the monolithic `(K, R)` patch matrix at all
+//! — each pool worker packs the patch panel it is about to consume into
+//! its own small panel slab ([`AccSlabs::with_panel`], `O(kc·rc)` for
+//! dense/filter plans, `O(K·rc)` for sparse plans), so per-layer scratch
+//! no longer scales with the output size R. [`ScratchArena::peak_bytes`]
+//! reports the resulting high-water mark (capacities only grow, so the
+//! current capacity *is* the peak) — the number the gemm-kernels bench
+//! publishes as `*_peak_scratch_bytes`.
 
 use crate::tensor::Mat;
 use std::sync::{Mutex, OnceLock};
 
-/// Per-worker accumulator slabs shared by the GEMM micro-kernels, plus the
-/// compaction buffer for Filter-scheme convs.
+/// Per-worker accumulator slabs shared by the GEMM micro-kernels, the
+/// per-worker packed patch panels of the fused implicit-GEMM path, plus
+/// the compaction buffer for Filter-scheme convs.
 ///
 /// Workers index their own slab (uncontended mutex) so parallel panels
 /// never share accumulator memory; every kernel zero-fills the slab span
@@ -23,13 +34,19 @@ use std::sync::{Mutex, OnceLock};
 /// — another piece of the bit-identical-across-thread-counts invariant.
 pub struct AccSlabs {
     workers: Vec<Mutex<Vec<f32>>>,
+    /// Per-worker packed patch panels for the fused path
+    /// (`pack_patch_panel` targets; fully overwritten per block, like the
+    /// accumulator slabs).
+    panels: Vec<Mutex<Mat>>,
     filter: Mutex<Mat>,
 }
 
 impl AccSlabs {
     pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
         Self {
-            workers: (0..workers.max(1)).map(|_| Mutex::new(Vec::new())).collect(),
+            workers: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
+            panels: (0..workers).map(|_| Mutex::new(Mat::zeros(0, 0))).collect(),
             filter: Mutex::new(Mat::zeros(0, 0)),
         }
     }
@@ -62,9 +79,48 @@ impl AccSlabs {
         f(&mut slab[..len])
     }
 
+    /// Borrow worker `w`'s packed patch panel shaped to `(rows, cols)`
+    /// (the fused path's pack target). Contents are unspecified until the
+    /// caller packs — `pack_patch_panel` overwrites every row it covers.
+    pub fn with_panel<R>(
+        &self,
+        worker: usize,
+        rows: usize,
+        cols: usize,
+        f: impl FnOnce(&mut Mat) -> R,
+    ) -> R {
+        let mut panel = self.panels[worker % self.panels.len()].lock().unwrap();
+        panel.reset(rows, cols);
+        f(&mut panel)
+    }
+
+    /// Pre-size every worker's panel slab to at least `elems` elements so
+    /// the first fused forward does not grow them (the engine calls this
+    /// with the max fused panel footprint over all layers).
+    pub fn reserve_panels(&self, elems: usize) {
+        for p in &self.panels {
+            let mut panel = p.lock().unwrap();
+            if panel.data.len() < elems {
+                panel.data.resize(elems, 0.0);
+            }
+        }
+    }
+
     /// The `(kept_rows, R)` compaction buffer for Filter-scheme GEMM.
     pub fn filter_buf(&self) -> std::sync::MutexGuard<'_, Mat> {
         self.filter.lock().unwrap()
+    }
+
+    /// Bytes currently backing the accumulator slabs, panel slabs and the
+    /// filter compaction buffer. Capacities are monotone, so this is also
+    /// the high-water mark.
+    pub fn scratch_bytes(&self) -> usize {
+        let acc: usize =
+            self.workers.iter().map(|w| w.lock().unwrap().capacity()).sum();
+        let pan: usize =
+            self.panels.iter().map(|p| p.lock().unwrap().data.capacity()).sum();
+        let fil = self.filter.lock().unwrap().data.capacity();
+        4 * (acc + pan + fil)
     }
 }
 
@@ -169,6 +225,16 @@ impl ScratchArena {
     pub fn capacities(&self) -> (usize, usize) {
         (self.patches.data.capacity(), self.out.data.capacity())
     }
+
+    /// Peak working-set bytes of this arena: the patch matrix, the GEMM
+    /// output matrix, and every accumulator/panel/filter slab. All
+    /// capacities are monotone, so the current sum is the high-water mark
+    /// — this is what shrinks when layers run fused instead of
+    /// materializing the `(K, R)` patch matrix.
+    pub fn peak_bytes(&self) -> usize {
+        4 * (self.patches.data.capacity() + self.out.data.capacity())
+            + self.slabs.scratch_bytes()
+    }
 }
 
 #[cfg(test)]
@@ -207,6 +273,34 @@ mod tests {
             bp.give(b);
         }
         assert_eq!(bp.grows(), g0, "steady-state take must not grow");
+    }
+
+    #[test]
+    fn panel_slab_shapes_and_reserve() {
+        let slabs = AccSlabs::new(2);
+        slabs.with_panel(0, 3, 5, |p| {
+            assert_eq!((p.rows, p.cols), (3, 5));
+            p.data[14] = 1.0;
+        });
+        // Pre-sizing grows the backing storage but not the logical shape.
+        slabs.reserve_panels(64);
+        slabs.with_panel(0, 2, 2, |p| {
+            assert_eq!(p.data.len(), 4);
+            assert!(p.data.capacity() >= 64);
+        });
+        // Worker ids wrap, like the accumulator slabs.
+        slabs.with_panel(7, 1, 1, |p| assert_eq!(p.data.len(), 1));
+        assert!(slabs.scratch_bytes() >= 4 * (64 + 64));
+    }
+
+    #[test]
+    fn peak_bytes_counts_all_buffers() {
+        let mut a = ScratchArena::new(2);
+        let base = a.peak_bytes();
+        a.reserve(100, 50);
+        assert!(a.peak_bytes() >= base + 4 * 150);
+        a.slabs.reserve_panels(200);
+        assert!(a.peak_bytes() >= base + 4 * (150 + 2 * 200));
     }
 
     #[test]

@@ -89,18 +89,28 @@ impl EngineCore {
         self.convs.values().map(|c| c.flops).sum()
     }
 
-    /// A fresh scratch arena pre-sized to the largest (K, R) / (M, R)
-    /// footprint across layers at the native single-clip resolution;
-    /// larger batches grow the buffers once on first use.
+    /// A fresh scratch arena pre-sized to the largest footprint across
+    /// layers at the native single-clip resolution; larger batches grow
+    /// the buffers once on first use. Layers that will run fused (per the
+    /// `RT3D_FUSE`/tuned/heuristic resolution) reserve their per-worker
+    /// panel slabs instead of the monolithic `(K, R)` patch matrix — on a
+    /// model whose big layers all fuse, the patch matrix is never
+    /// allocated at all. (A later handle-level `set_fused` override can
+    /// still grow the other buffer set once, on first forward.)
     fn presized_arena(&self, workers: usize) -> ScratchArena {
         let mut arena = ScratchArena::new(workers);
-        let (mut pmax, mut omax) = (0usize, 0usize);
+        let (mut pmax, mut omax, mut panel_max) = (0usize, 0usize, 0usize);
         for cc in self.convs.values() {
             let (p, o) = cc.scratch_footprint(1);
-            pmax = pmax.max(p);
             omax = omax.max(o);
+            if self.kind == EngineKind::Rt3d && cc.bind(cc.geom.in_spatial).fused {
+                panel_max = panel_max.max(cc.panel_footprint());
+            } else {
+                pmax = pmax.max(p);
+            }
         }
         arena.reserve(pmax, omax);
+        arena.slabs.reserve_panels(panel_max);
         arena
     }
 }
@@ -126,6 +136,11 @@ pub struct NativeEngine {
     /// per-layer choices, via the call binding (the shared core is never
     /// mutated).
     kernel_forced: bool,
+    /// Set by [`Self::set_fused`]: forces every conv layer onto the fused
+    /// or materialized path via the call binding (handle-local, like the
+    /// kernel force). `None` = per-layer resolution; `RT3D_FUSE=on|off`
+    /// still outranks this.
+    fuse_forced: Option<bool>,
     /// Reused im2col/GEMM/accumulator/activation buffers — the steady
     /// state forward allocates nothing but the returned logits. Behind a
     /// mutex because `forward` takes `&self`; one layer holds it at a
@@ -164,6 +179,7 @@ impl NativeEngine {
             pool,
             kernel: KernelArch::active(),
             kernel_forced: false,
+            fuse_forced: None,
             arena: Mutex::new(arena),
         }
     }
@@ -183,6 +199,7 @@ impl NativeEngine {
         let mut forked = Self::from_core(self.core.clone(), threads);
         forked.kernel = self.kernel;
         forked.kernel_forced = self.kernel_forced;
+        forked.fuse_forced = self.fuse_forced;
         forked
     }
 
@@ -224,6 +241,17 @@ impl NativeEngine {
         self.kernel_forced = true;
     }
 
+    /// Force every conv layer onto the fused (`true`) or materialized
+    /// (`false`) execution path — the fused↔materialized differential
+    /// hook for tests and benches. Handle-local like [`Self::set_kernel`]:
+    /// the shared core is never mutated, so other forks keep their own
+    /// per-layer resolution. The process-wide `RT3D_FUSE=on|off` policy
+    /// outranks this. Outputs are bit-identical either way; only the
+    /// scratch shape and memory traffic change.
+    pub fn set_fused(&mut self, fused: bool) {
+        self.fuse_forced = Some(fused);
+    }
+
     /// Times the activation recycler had to grow an allocation; flat
     /// across steady-state forwards (see `tests/parallel.rs`).
     pub fn recycler_grows(&self) -> usize {
@@ -234,6 +262,14 @@ impl NativeEngine {
     /// for the buffer-reuse tests.
     pub fn arena_capacities(&self) -> (usize, usize) {
         self.arena.lock().unwrap().capacities()
+    }
+
+    /// Peak scratch bytes this handle's arena has held (patch matrix +
+    /// GEMM output + accumulator/panel/filter slabs). Fused layers keep
+    /// this far below the materialized `O(K·R)` footprint — the number
+    /// `benches/gemm_kernels.rs` publishes per path.
+    pub fn scratch_peak_bytes(&self) -> usize {
+        self.arena.lock().unwrap().peak_bytes()
     }
 
     /// Total post-compaction conv FLOPs per clip.
@@ -298,6 +334,16 @@ impl NativeEngine {
         self.arena.lock().unwrap().recycler.give(buf);
     }
 
+    /// Copy a tensor into a recycled buffer — branch fan-out for
+    /// `Residual`/`Concat`, where the trunk value is still needed after a
+    /// branch consumes its copy. The copy itself is unavoidable (branches
+    /// mutate their input downstream); the allocation is not.
+    fn clone_recycled(&self, t: &Tensor5) -> Tensor5 {
+        let mut buf = self.take_buf(t.len());
+        buf.copy_from_slice(&t.data);
+        Tensor5::from_vec(t.dims, buf)
+    }
+
     fn run_layer(&self, l: &Layer, v: Value) -> Value {
         match l {
             Layer::Conv3d(c) => {
@@ -357,7 +403,10 @@ impl NativeEngine {
             }
             Layer::Residual { body, shortcut, .. } => {
                 let t = v.tensor();
-                let y = self.run_layers(body, t.clone()).tensor();
+                // The body runs on a recycled copy; the trunk value flows
+                // into the shortcut (or is the shortcut) — no fresh
+                // allocation on the request path.
+                let y = self.run_layers(body, self.clone_recycled(&t)).tensor();
                 let s = if shortcut.is_empty() {
                     t
                 } else {
@@ -368,15 +417,29 @@ impl NativeEngine {
                 for (o, sv) in out.data.iter_mut().zip(&s.data) {
                     *o = (*o + sv).max(0.0);
                 }
+                self.give_buf(s.data);
                 Value::Tensor(out)
             }
             Layer::Concat { branches, .. } => {
                 let t = v.tensor();
-                let outs: Vec<Tensor5> = branches
-                    .iter()
-                    .map(|b| self.run_layers(b, t.clone()).tensor())
-                    .collect();
-                Value::Tensor(concat_channels(&outs))
+                // Earlier branches run on recycled copies; the last one
+                // consumes the trunk value itself.
+                let mut trunk = Some(t);
+                let mut outs = Vec::with_capacity(branches.len());
+                for (i, b) in branches.iter().enumerate() {
+                    let input = if i + 1 == branches.len() {
+                        trunk.take().unwrap()
+                    } else {
+                        self.clone_recycled(trunk.as_ref().unwrap())
+                    };
+                    outs.push(self.run_layers(b, input).tensor());
+                }
+                let total: usize = outs.iter().map(|o| o.len()).sum();
+                let cat = concat_channels_into(&outs, self.take_buf(total));
+                for o in outs {
+                    self.give_buf(o.data);
+                }
+                Value::Tensor(cat)
             }
         }
     }
@@ -385,11 +448,12 @@ impl NativeEngine {
         // Rebind geometry to the actual input spatial size (the manifest
         // geometry is for the native resolution; batch may differ). The
         // binding shares the plan's weights — no per-call clone — and
-        // resolves this handle's forced kernel, if any, without touching
-        // the shared core.
-        let call = cc.bind_with(
+        // resolves this handle's forced kernel / fused-path choice, if
+        // any, without touching the shared core.
+        let call = cc.bind_full(
             [x.dims[2], x.dims[3], x.dims[4]],
             self.kernel_forced.then_some(self.kernel),
+            self.fuse_forced,
         );
         let g = call.geom;
         let batch = x.dims[0];
@@ -427,10 +491,19 @@ impl NativeEngine {
             EngineKind::Rt3d => {
                 let mut arena = self.arena.lock().unwrap();
                 let ScratchArena { patches, out, slabs, recycler } = &mut *arena;
-                patches.reset(g.cols(), g.rows(batch));
-                executors::im2col_t_into_with(&x, &g, patches, &self.pool);
-                out.reset(g.out_ch, patches.cols);
-                executors::run_conv_bound(&call, patches, out, &self.pool, slabs);
+                out.reset(g.out_ch, g.rows(batch));
+                if call.fused {
+                    // Fused implicit GEMM: patch panels are packed inside
+                    // the column-block tasks; the monolithic patch matrix
+                    // is never touched.
+                    executors::run_conv_fused(&call, &x, out, &self.pool, slabs);
+                } else {
+                    patches.reset(g.cols(), g.rows(batch));
+                    executors::im2col_t_into_with(&x, &g, patches, &self.pool);
+                    executors::run_conv_bound(
+                        &call, patches, out, &self.pool, slabs,
+                    );
+                }
                 let buf = recycler.take(batch * g.out_ch * od * oh * ow);
                 let t = executors::mat_to_tensor_with(
                     out, batch, [od, oh, ow], &self.pool, buf,
@@ -552,10 +625,18 @@ pub fn maxpool3d_into(
     out
 }
 
+#[cfg(test)]
 fn concat_channels(parts: &[Tensor5]) -> Tensor5 {
+    concat_channels_into(parts, Vec::new())
+}
+
+/// Channel-concat into a caller-provided (recycled) buffer; every output
+/// element is assigned, so stale buffer contents are fine.
+fn concat_channels_into(parts: &[Tensor5], mut buf: Vec<f32>) -> Tensor5 {
     let [b, _, d, h, w] = parts[0].dims;
     let ctot: usize = parts.iter().map(|t| t.dims[1]).sum();
-    let mut out = Tensor5::zeros([b, ctot, d, h, w]);
+    buf.resize(b * ctot * d * h * w, 0.0);
+    let mut out = Tensor5::from_vec([b, ctot, d, h, w], buf);
     let sp = d * h * w;
     for n in 0..b {
         let mut coff = 0;

@@ -26,6 +26,17 @@
 //! KGS/Vanilla panels run the *same* inner block over fewer columns, which
 //! is why sparse speedup tracks the FLOPs pruning rate (paper §3).
 //!
+//! Every kernel family has two drivers over the same inner blocks:
+//! * **materialized** (`*_packed`, `gemm_panel_core`) — reads a
+//!   caller-built transposed `(K, R)` im2col matrix; parallel over output
+//!   *rows* (mr panels / row buckets);
+//! * **fused implicit GEMM** (`*_fused`) — never materializes that
+//!   matrix: parallel over rc output-*column* blocks, each task packing
+//!   the `(kc, rc)` (dense/filter) or `(K, rc)` (sparse) patch panel it
+//!   needs into its worker's panel slab right before consuming it. Same
+//!   per-element K accumulation order, so fused ↔ materialized outputs
+//!   are bit-identical for a given tile.
+//!
 //! Output contract: `gemm_dense*` / `gemm_filter*` **own zero-init** of
 //! every output row they cover (the first K block assigns, later blocks
 //! accumulate) — callers must not pre-fill. `gemm_panel_core` accumulates
@@ -35,7 +46,8 @@
 
 use crate::codegen::{GemmTile, KernelArch, KgsGroup, PackedDense};
 use crate::executors::arena::AccSlabs;
-use crate::tensor::Mat;
+use crate::executors::pack_patch_panel;
+use crate::tensor::{Conv3dGeometry, Mat, Tensor5};
 use crate::util::pool::{SendPtr, ThreadPool};
 
 /// MNN-class baseline: im2col GEMM with no blocking or register tiling.
@@ -490,6 +502,191 @@ pub fn gemm_dense_packed(packed: &PackedDense, patches_t: &Mat, out: &mut Mat, c
 }
 
 // --------------------------------------------------------------------------
+// Fused implicit-GEMM drivers: no materialized (K, R) patch matrix. The
+// output is tiled into rc column blocks; each pool task owns one block
+// (columns r0..r1 of *every* output row), packs the patch panel it is
+// about to consume into its worker's panel slab via
+// `executors::pack_patch_panel`, and runs the exact same inner block
+// kernels (`packed_block` / `panel_block`) over that panel.
+//
+// Bit-identity with the materialized path: the packed panel holds the
+// same values the im2col matrix would (copies of input elements and
+// padding zeros), the K axis is walked in the same ascending kc blocks
+// per output element, and the inner span primitives are element-wise —
+// so fused and materialized outputs are bit-identical for a given tile
+// (asserted in `tests/parallel.rs`).
+// --------------------------------------------------------------------------
+
+/// Fused dense kernel: `out (M, R) = packed (M, K) * im2col(x)` without
+/// ever materializing the patch matrix. Each rc column block streams
+/// `(kc, rc)` patch sub-panels through the worker's panel slab — per-layer
+/// scratch is `O(workers · kc · rc)` instead of `O(K · R)`. Writes (not
+/// accumulates) rows `0..packed.m` of `out`, like [`gemm_dense_packed`].
+pub fn gemm_dense_fused(
+    packed: &PackedDense,
+    x: &Tensor5,
+    g: &Conv3dGeometry,
+    out: &mut Mat,
+    ctx: &GemmCtx,
+) {
+    let m = packed.m;
+    let k = packed.k;
+    let r = out.cols;
+    assert_eq!(k, g.cols(), "packed K must match the conv geometry");
+    assert_eq!(r, g.rows(x.dims[0]), "output columns must match the geometry");
+    assert!(out.rows >= m);
+    if m == 0 || r == 0 {
+        return;
+    }
+    if k == 0 {
+        out.data[..m * r].fill(0.0);
+        return;
+    }
+    let mr = packed.mr;
+    let cols = out.cols;
+    let kc = ctx.tile.kc.max(1);
+    let rc = ctx.tile.rc.max(1);
+    let kernel = ctx.kernel;
+    let slabs = ctx.slabs;
+    let tasks = r.div_ceil(rc);
+    let scratch_len = mr * rc.min(r);
+    let base = SendPtr::new(out.data.as_mut_ptr());
+    ctx.pool.run_tasks(tasks, ctx.cap, move |t, worker| {
+        let r0 = t * rc;
+        let r1 = (r0 + rc).min(r);
+        let span = r1 - r0;
+        slabs.with_panel(worker, kc.min(k), span, |panel| {
+            slabs.with_slab(worker, scratch_len, |scratch| {
+                for k0 in (0..k).step_by(kc) {
+                    let k1 = (k0 + kc).min(k);
+                    panel.reset(k1 - k0, span);
+                    pack_patch_panel(x, g, k0, k1, r0, r1, panel);
+                    for p in 0..packed.panels() {
+                        let rows = packed.panel_rows(p);
+                        let wblock = &packed.panel(p)[k0 * rows..k1 * rows];
+                        // The panel's row j is patch row k0 + j restricted
+                        // to columns r0..r1, so the block runs at local
+                        // coordinates — same arithmetic, same element
+                        // order as the materialized kernel.
+                        packed_block(
+                            kernel, wblock, rows, panel, 0, k1 - k0, 0, span,
+                            scratch,
+                        );
+                        let m0 = p * mr;
+                        for i in 0..rows {
+                            // Safety: this task owns columns r0..r1 of
+                            // every output row; tasks never alias.
+                            let orow = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    base.get().add((m0 + i) * cols + r0),
+                                    span,
+                                )
+                            };
+                            let acc = &scratch[i * span..(i + 1) * span];
+                            if k0 == 0 {
+                                orow.copy_from_slice(acc);
+                            } else {
+                                for (ov, av) in orow.iter_mut().zip(acc) {
+                                    *ov += av;
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        });
+    });
+}
+
+/// Fused filter-compacted GEMM: [`gemm_dense_fused`] over the surviving
+/// rows into the shared compaction buffer, then the same scatter-back as
+/// [`gemm_filter_packed`]. Owns init of every row of `out`.
+pub fn gemm_filter_fused(
+    rows: &[u32],
+    packed: &PackedDense,
+    x: &Tensor5,
+    g: &Conv3dGeometry,
+    out: &mut Mat,
+    ctx: &GemmCtx,
+) {
+    let r = out.cols;
+    let mut compact = ctx.slabs.filter_buf();
+    compact.reset(rows.len(), r);
+    gemm_dense_fused(packed, x, g, &mut compact, ctx);
+    scatter_filter_rows(rows, &compact, out);
+}
+
+/// Fused sparse (KGS/Vanilla) conv: each rc column block packs the full
+/// `(K, rc)` patch panel once (gathered columns span all of K, so there
+/// is no kc slicing here) and replays every compacted panel in the serial
+/// flat order — per output element the group accumulation order matches
+/// the materialized bucket schedule exactly. Owns init of `out` (sparse
+/// panels may not cover every row). `max_m_eff` sizes the accumulator
+/// (`PanelSchedule::max_m_eff`).
+pub fn gemm_panels_fused(
+    groups: &[KgsGroup],
+    max_m_eff: usize,
+    x: &Tensor5,
+    g: &Conv3dGeometry,
+    out: &mut Mat,
+    ctx: &GemmCtx,
+) {
+    let r = out.cols;
+    let m = out.rows;
+    debug_assert_eq!(r, g.rows(x.dims[0]));
+    if r == 0 || m == 0 {
+        return;
+    }
+    let k = g.cols();
+    let cols = out.cols;
+    let rc = ctx.tile.rc.max(1);
+    let tasks = r.div_ceil(rc);
+    let scratch_len = panel_scratch_len(max_m_eff, ctx.tile, r);
+    let kernel = ctx.kernel;
+    let slabs = ctx.slabs;
+    let base = SendPtr::new(out.data.as_mut_ptr());
+    ctx.pool.run_tasks(tasks, ctx.cap, move |t, worker| {
+        let r0 = t * rc;
+        let r1 = (r0 + rc).min(r);
+        let span = r1 - r0;
+        slabs.with_panel(worker, k, span, |panel| {
+            pack_patch_panel(x, g, 0, k, r0, r1, panel);
+            slabs.with_slab(worker, scratch_len, |scratch| {
+                // Zero this task's column block first — same init the
+                // materialized path does with out.fill(0.0), split by
+                // column ownership.
+                for mi in 0..m {
+                    // Safety: disjoint column blocks, see above.
+                    let orow = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            base.get().add(mi * cols + r0),
+                            span,
+                        )
+                    };
+                    orow.fill(0.0);
+                }
+                for grp in groups {
+                    panel_block(kernel, grp, panel, 0, span, scratch);
+                    for i in 0..grp.m_eff {
+                        let orow = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                base.get().add((grp.m0 + i) * cols + r0),
+                                span,
+                            )
+                        };
+                        for (ov, av) in
+                            orow.iter_mut().zip(&scratch[i * span..(i + 1) * span])
+                        {
+                            *ov += av;
+                        }
+                    }
+                }
+            });
+        });
+    });
+}
+
+// --------------------------------------------------------------------------
 // PR-1 reference kernel (kept for the micro-bench baseline and as a
 // differential oracle): strided scalar weight loads, no prepacking.
 // Accumulates into a caller-zeroed `out`.
@@ -753,6 +950,13 @@ pub fn gemm_filter_packed(
     let mut compact = ctx.slabs.filter_buf();
     compact.reset(rows.len(), r);
     gemm_dense_packed(packed, patches_t, &mut compact, ctx);
+    scatter_filter_rows(rows, &compact, out);
+}
+
+/// Scatter the compacted rows back to their original output channels,
+/// zeroing pruned channels in the same pass (shared by the materialized
+/// and fused filter drivers; `rows` must be ascending).
+fn scatter_filter_rows(rows: &[u32], compact: &Mat, out: &mut Mat) {
     let mut next = 0usize;
     for m in 0..out.rows {
         if next < rows.len() && rows[next] as usize == m {

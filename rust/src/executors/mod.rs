@@ -4,11 +4,20 @@
 //!   baseline (no im2col, no blocking, no SIMD-friendly layout).
 //! * [`gemm::matmul_untuned`] — im2col + textbook triple-loop GEMM, the
 //!   MNN-class baseline (right algorithm, no tuning).
-//! * [`gemm`] — the RT3D path: im2col into a transposed (K, R) patch
-//!   matrix, then a register-blocked micro-kernel streaming over output
-//!   positions; the *same* micro-kernel executes dense, KGS-compacted,
-//!   Vanilla-compacted and Filter-compacted panels, which is exactly the
-//!   paper's argument for why KGS keeps full SIMD utilization.
+//! * [`gemm`] — the RT3D path: a register-blocked micro-kernel streaming
+//!   over output positions; the *same* micro-kernel executes dense,
+//!   KGS-compacted, Vanilla-compacted and Filter-compacted panels, which
+//!   is exactly the paper's argument for why KGS keeps full SIMD
+//!   utilization. Two drivers feed it: the **materialized** path
+//!   (im2col into a transposed `(K, R)` patch matrix, then GEMM —
+//!   [`run_conv_bound`]) and the **fused implicit-GEMM** path
+//!   ([`run_conv_fused`]), which tiles the output into rc column blocks
+//!   and has each pool task pack only the `(kc, rc)` patch panel it is
+//!   about to consume ([`pack_patch_panel`]) into a small per-worker
+//!   L2-resident slab — the paper's cache-tiled generated code, which
+//!   never round-trips a full patch matrix through DRAM. Both paths are
+//!   bit-identical for a given tile; `RT3D_FUSE=off` keeps the
+//!   materialized path as the differential baseline.
 //! * [`arena`] — pre-sized scratch buffers (allocation-free hot path).
 //! * [`engine`] — whole-model interpreter over the manifest IR, running
 //!   im2col and GEMM on its own thread pool (`RT3D_THREADS`). The compiled
@@ -110,9 +119,16 @@ pub fn im2col_t_into_with(
                                     .max(0)
                                     as usize;
                                 if lo < hi_x {
-                                    let s0 = (src as isize + x0) as usize;
+                                    // Keep src + x0 in isize: it can be
+                                    // transiently negative at the left
+                                    // padding edge.
+                                    let s0 = src as isize + x0;
+                                    let (src_lo, src_hi) = (
+                                        (s0 + lo as isize) as usize,
+                                        (s0 + hi_x as isize) as usize,
+                                    );
                                     row[rbase + lo..rbase + hi_x].copy_from_slice(
-                                        &x.data[s0 + lo..s0 + hi_x],
+                                        &x.data[src_lo..src_hi],
                                     );
                                 }
                             } else {
@@ -130,6 +146,96 @@ pub fn im2col_t_into_with(
             }
         },
     );
+}
+
+/// Pack rows `k0..k1`, columns `r0..r1` of the *virtual* transposed
+/// im2col matrix into `out` (shape `(k1-k0, r1-r0)`), forming activation
+/// patches on the fly — the core of the fused implicit-GEMM path. Row `j`
+/// of the panel is patch row `k0 + j` (the `(channel, tap)` row semantics
+/// of [`im2col_t_into`]) restricted to output positions `r0..r1`, value
+/// for value: every element is either a copy of an input element or a
+/// padding zero, so a packed panel is bit-identical to the corresponding
+/// block of the materialized matrix. Serial — it runs *inside* a pool
+/// task that owns the `r0..r1` column block.
+pub fn pack_patch_panel(
+    x: &Tensor5,
+    g: &crate::tensor::Conv3dGeometry,
+    k0: usize,
+    k1: usize,
+    r0: usize,
+    r1: usize,
+    out: &mut Mat,
+) {
+    let [b, c, di, hi, wi] = x.dims;
+    debug_assert_eq!(c, g.in_ch);
+    let [kd, kh, kw] = g.kernel;
+    let [sd, sh, sw] = g.stride;
+    let [pd, ph, pw] = g.padding;
+    let [od, oh, ow] = g.out_spatial();
+    let span = r1 - r0;
+    assert_eq!((out.rows, out.cols), (k1 - k0, span), "panel shape");
+    debug_assert!(k1 <= g.cols() && r1 <= b * od * oh * ow);
+    if span == 0 {
+        return;
+    }
+    let khw = kh * kw;
+    let ks = kd * khw;
+    // Column index r decomposes as band * ow + xo with band = (n*od+zo)*oh
+    // + yo; only bands intersecting [r0, r1) are walked.
+    let band0 = r0 / ow;
+    let band1 = (r1 - 1) / ow;
+    for row_i in k0..k1 {
+        let row = out.row_mut(row_i - k0);
+        row.fill(0.0);
+        let ci = row_i / ks;
+        let loc = row_i % ks;
+        let dz = loc / khw;
+        let dy = (loc % khw) / kw;
+        let dx = loc % kw;
+        for band in band0..=band1 {
+            let yo = band % oh;
+            let zo = (band / oh) % od;
+            let n = band / (oh * od);
+            let z = (zo * sd + dz) as isize - pd as isize;
+            if z < 0 || z >= di as isize {
+                continue;
+            }
+            let y = (yo * sh + dy) as isize - ph as isize;
+            if y < 0 || y >= hi as isize {
+                continue;
+            }
+            let rbase = band * ow;
+            // This band's xo range clipped to the panel's column window.
+            let xo_lo = r0.saturating_sub(rbase);
+            let xo_hi = (r1 - rbase).min(ow);
+            let src = x.idx(n, ci, z as usize, y as usize, 0);
+            if sw == 1 {
+                // Contiguous span copy (same clipping as im2col_t_into,
+                // intersected with the column window).
+                let x0 = dx as isize - pw as isize;
+                let lo = xo_lo.max((-x0).max(0) as usize);
+                let hi_x = xo_hi
+                    .min(((wi as isize - x0).min(ow as isize)).max(0) as usize);
+                if lo < hi_x {
+                    // Source offset stays in isize until the (guaranteed
+                    // non-negative) bound is added — src + x0 alone can be
+                    // transiently negative at the left padding edge.
+                    let s0 = src as isize + x0;
+                    let (src_lo, src_hi) =
+                        ((s0 + lo as isize) as usize, (s0 + hi_x as isize) as usize);
+                    row[rbase + lo - r0..rbase + hi_x - r0]
+                        .copy_from_slice(&x.data[src_lo..src_hi]);
+                }
+            } else {
+                for xo in xo_lo..xo_hi {
+                    let xx = (xo * sw + dx) as isize - pw as isize;
+                    if xx >= 0 && xx < wi as isize {
+                        row[rbase + xo - r0] = x.data[src + xx as usize];
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Execute one compiled conv at its native geometry on the process-global
@@ -196,6 +302,77 @@ pub fn run_conv_bound(
                 gemm::gemm_filter_with(
                     rows, wmat, patches_t, out, call.tile, pool, slabs,
                 )
+            }
+        },
+    }
+    finish_bias_relu(cc, out, pool);
+}
+
+/// Execute one geometry-bound conv **fused**: no materialized patch
+/// matrix — each rc output-column block packs its own patch panels
+/// ([`pack_patch_panel`]) into the worker's slab and runs the same inner
+/// kernels as [`run_conv_bound`]. `out` is (out_ch, R) row-major; bias +
+/// optional ReLU applied; owns init of `out`.
+///
+/// Parallel structure: one pool task per rc column block; a task owns
+/// columns `r0..r1` of *every* output row, and per output element the K
+/// accumulation order (ascending kc blocks for dense/filter, serial flat
+/// group order for sparse) is exactly the materialized kernel's — so
+/// fused ↔ materialized ↔ scalar ↔ SIMD all stay bit-identical for a
+/// given tile, across thread counts and pool modes. Steady state does
+/// zero heap allocation once the per-worker panel slabs have warmed up
+/// (the engine pre-sizes them from the plans' panel footprints).
+pub fn run_conv_fused(
+    call: &ConvCall<'_>,
+    x: &Tensor5,
+    out: &mut Mat,
+    pool: &ThreadPool,
+    slabs: &AccSlabs,
+) {
+    let cc = call.cc;
+    let g = &call.geom;
+    let r = g.rows(x.dims[0]);
+    assert_eq!((out.rows, out.cols), (g.out_ch, r));
+    let ctx = gemm::GemmCtx {
+        tile: call.tile,
+        kernel: call.kernel,
+        cap: call.cap,
+        pool,
+        slabs,
+    };
+    match &cc.kind {
+        ConvKind::Dense { wmat } => match &cc.packed {
+            Some(packed) => gemm::gemm_dense_fused(packed, x, g, out, &ctx),
+            // Hand-rolled plan without `finalize()`: pack on the fly.
+            None => {
+                let packed = crate::codegen::PackedDense::pack(
+                    wmat,
+                    g.out_ch,
+                    g.cols(),
+                    ctx.tile.mr.max(1),
+                );
+                gemm::gemm_dense_fused(&packed, x, g, out, &ctx)
+            }
+        },
+        ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => {
+            let max_m_eff = match &cc.sched {
+                Some(sched) => sched.max_m_eff,
+                None => groups.iter().map(|grp| grp.m_eff).max().unwrap_or(1),
+            };
+            gemm::gemm_panels_fused(groups, max_m_eff, x, g, out, &ctx)
+        }
+        ConvKind::Filter { rows, wmat } => match &cc.packed {
+            Some(packed) => {
+                gemm::gemm_filter_fused(rows, packed, x, g, out, &ctx)
+            }
+            None => {
+                let packed = crate::codegen::PackedDense::pack(
+                    wmat,
+                    rows.len(),
+                    g.cols(),
+                    ctx.tile.mr.max(1),
+                );
+                gemm::gemm_filter_fused(rows, &packed, x, g, out, &ctx)
             }
         },
     }
@@ -314,4 +491,54 @@ pub fn mat_to_tensor_with(
         });
     }
     Tensor5::from_vec([b, m, od, oh, ow], buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Conv3dGeometry;
+
+    /// Every packed panel must equal the corresponding sub-block of the
+    /// materialized transposed im2col matrix, bit for bit — across
+    /// padding, stride, batch and ragged block boundaries.
+    #[test]
+    fn pack_patch_panel_matches_materialized_blocks() {
+        for (stride, padding) in [
+            ([1usize, 1, 1], [1usize, 1, 1]),
+            ([1, 1, 1], [0, 0, 0]),
+            ([2, 2, 2], [1, 1, 1]),
+        ] {
+            let g = Conv3dGeometry {
+                in_ch: 3,
+                out_ch: 2,
+                kernel: [3, 3, 3],
+                stride,
+                padding,
+                in_spatial: [4, 5, 6],
+            };
+            let x = Tensor5::random([2, 3, 4, 5, 6], 201);
+            let full = im2col_t(&x, &g);
+            let (k, r) = (full.rows, full.cols);
+            // Block grid with ragged edges; plus single-row/-col probes.
+            let mut windows = vec![(0usize, k, 0usize, r), (k / 2, k / 2 + 1, r - 1, r)];
+            for k0 in (0..k).step_by(17) {
+                for r0 in (0..r).step_by(23) {
+                    windows.push((k0, (k0 + 17).min(k), r0, (r0 + 23).min(r)));
+                }
+            }
+            for (k0, k1, r0, r1) in windows {
+                let mut panel = Mat::zeros(k1 - k0, r1 - r0);
+                // Poison the buffer: pack must overwrite every element.
+                panel.data.fill(f32::NAN);
+                pack_patch_panel(&x, &g, k0, k1, r0, r1, &mut panel);
+                for ki in k0..k1 {
+                    assert_eq!(
+                        &panel.row(ki - k0)[..],
+                        &full.row(ki)[r0..r1],
+                        "stride {stride:?} pad {padding:?} k{k0}..{k1} r{r0}..{r1} row {ki}"
+                    );
+                }
+            }
+        }
+    }
 }

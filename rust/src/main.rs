@@ -158,7 +158,7 @@ fn tune(artifacts: &str, model_name: &str, reps: usize) -> rt3d::Result<()> {
     );
     for r in reports {
         println!(
-            "{:<12} {:>8.2}ms {:>8.2}ms {:>7.2}x  mr={} rc={} kc={} kernel={} threads={}",
+            "{:<12} {:>8.2}ms {:>8.2}ms {:>7.2}x  mr={} rc={} kc={} kernel={} threads={} path={}",
             r.name,
             r.default_s * 1e3,
             r.best_s * 1e3,
@@ -168,6 +168,7 @@ fn tune(artifacts: &str, model_name: &str, reps: usize) -> rt3d::Result<()> {
             r.best.kc,
             r.kernel.map_or("auto", |k| k.name()),
             if r.threads == 0 { "all".to_string() } else { r.threads.to_string() },
+            if r.fused { "fused" } else { "materialized" },
         );
     }
     let path = rt3d::codegen::tuner::TuneDb::default_path();

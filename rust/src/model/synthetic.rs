@@ -176,6 +176,64 @@ impl Model {
         }
         model
     }
+
+    /// An R(2+1)D-flavored synthetic graph exercising the branching layer
+    /// kinds: a conv stem, a `Residual` block (identity shortcut) and a
+    /// two-branch `Concat`, then global pooling and a dense head. This is
+    /// the coverage model for activation-buffer recycling through branch
+    /// fan-out — the plain C3D stack never forks its value flow.
+    pub fn synthetic_residual(cfg: SyntheticC3d) -> Model {
+        let [w1, w2, ..] = cfg.widths;
+        let mut pb = PoolBuilder { bytes: Vec::new() };
+        let layers = vec![
+            conv(&mut pb, "stem", 3, w1, cfg.keep_locs, 21),
+            Layer::Residual {
+                name: "res1".into(),
+                body: vec![conv(&mut pb, "res1_conv", w1, w1, cfg.keep_locs, 22)],
+                shortcut: vec![],
+            },
+            Layer::MaxPool3d { kernel: [1, 2, 2], stride: [1, 2, 2] },
+            Layer::Concat {
+                name: "mix".into(),
+                branches: vec![
+                    vec![conv(&mut pb, "mix_a", w1, w2, cfg.keep_locs, 23)],
+                    vec![conv(&mut pb, "mix_b", w1, w2, cfg.keep_locs, 24)],
+                ],
+            },
+            Layer::AvgPoolGlobal,
+            dense(&mut pb, "head", 2 * w2, cfg.classes, false, 25),
+        ];
+        let manifest = Manifest {
+            model: "r2plus1d-synthetic".into(),
+            input: [3, cfg.frames, cfg.size, cfg.size],
+            num_classes: cfg.classes,
+            flops_dense: 0,
+            layers,
+            hlo: HashMap::new(),
+            bin: "<in-memory>".into(),
+            eval_acc: None,
+            sparsity: Some(SparsityInfo {
+                scheme: "kgs".into(),
+                g_m: 4,
+                g_n: 4,
+                rate: 27.0 / cfg.keep_locs.max(1) as f64,
+                eval_acc: None,
+                flops_sparse: 0,
+            }),
+        };
+        let mut model = Model {
+            manifest,
+            pool: TensorPool::from_bytes(pb.bytes),
+            dir: std::path::PathBuf::from("."),
+        };
+        let flops: usize =
+            model.conv_geometries().iter().map(|(_, g)| g.flops(1)).sum();
+        model.manifest.flops_dense = flops;
+        if let Some(s) = model.manifest.sparsity.as_mut() {
+            s.flops_sparse = flops * cfg.keep_locs.min(27) / 27;
+        }
+        model
+    }
 }
 
 #[cfg(test)]

@@ -14,6 +14,15 @@
 //! Workers are spawned lazily on the first region and joined when the last
 //! clone of the pool handle drops.
 //!
+//! Between regions a worker first **spins** for a bounded number of
+//! iterations on a lock-free epoch mirror before parking on the condvar
+//! (`RT3D_SPIN` iterations, default 4096, `0` disables) — back-to-back
+//! regions (one per layer, several per forward) catch the next epoch
+//! without the futex round-trip, which is what the very small tail layers
+//! feel most. The job itself is still read under the state mutex; the
+//! mirror only short-circuits the wait, so scheduling — and therefore
+//! output bits — are unchanged in both pool modes.
+//!
 //! The borrowed closure crosses threads through a lifetime-erased raw
 //! trait-object pointer. This is sound because a region is strictly
 //! bracketed: the submitter does not return from `run_tasks` until every
@@ -47,7 +56,7 @@
 
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Worker lifetime strategy. Parked is the default; Scoped is kept as the
@@ -125,6 +134,24 @@ struct PoolInner {
     done_cv: Condvar,
     /// Next task index of the current region.
     next: AtomicUsize,
+    /// Lock-free mirror of `state.epoch`, written (inside the state lock)
+    /// when a region is posted — the target of the bounded pre-park spin.
+    epoch_hint: AtomicU64,
+    /// Lock-free mirror of `state.shutdown` so a spinning worker notices
+    /// teardown without taking the mutex.
+    shutdown_hint: AtomicBool,
+}
+
+/// Bounded pre-park spin iterations (`RT3D_SPIN`, default 4096; 0
+/// disables). Resolved once — it is a latency knob, not a semantic one.
+fn spin_budget() -> usize {
+    static SPIN: OnceLock<usize> = OnceLock::new();
+    *SPIN.get_or_init(|| {
+        std::env::var("RT3D_SPIN")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .unwrap_or(4096)
+    })
 }
 
 /// Spawned workers + region serialization, shared by all clones of one
@@ -142,6 +169,7 @@ impl Drop for PoolShared {
         {
             let mut st = self.inner.state.lock().unwrap();
             st.shutdown = true;
+            self.inner.shutdown_hint.store(true, Ordering::Release);
         }
         self.inner.work_cv.notify_all();
         for h in self.handles.drain(..) {
@@ -356,6 +384,8 @@ impl ThreadPool {
                 work_cv: Condvar::new(),
                 done_cv: Condvar::new(),
                 next: AtomicUsize::new(0),
+                epoch_hint: AtomicU64::new(0),
+                shutdown_hint: AtomicBool::new(false),
             });
             let handles = (1..self.threads)
                 .map(|wid| {
@@ -388,6 +418,7 @@ impl ThreadPool {
             st.running = helpers;
             st.panic_payload = None;
             st.epoch = st.epoch.wrapping_add(1);
+            inner.epoch_hint.store(st.epoch, Ordering::Release);
             inner.work_cv.notify_all();
         }
         // The submitting thread participates as worker 0.
@@ -418,8 +449,21 @@ impl ThreadPool {
 }
 
 fn worker_loop(inner: Arc<PoolInner>, wid: usize) {
+    let spin = spin_budget();
     let mut seen = 0u64;
     loop {
+        // Bounded spin on the epoch mirror: a region posted within the
+        // window is picked up without parking. Falls through to the
+        // condvar wait below either way — the mutex remains the one
+        // source of truth for the job.
+        let mut spins = 0usize;
+        while spins < spin
+            && inner.epoch_hint.load(Ordering::Acquire) == seen
+            && !inner.shutdown_hint.load(Ordering::Acquire)
+        {
+            std::hint::spin_loop();
+            spins += 1;
+        }
         let job = {
             let mut st = inner.state.lock().unwrap();
             loop {
@@ -582,6 +626,26 @@ mod tests {
         }
         let want: u64 = (1..=100).sum();
         assert!(data.iter().all(|&v| v == want), "stale/missed task");
+    }
+
+    #[test]
+    fn many_tiny_regions_hit_the_spin_window() {
+        // Hundreds of back-to-back tiny regions: most follow within the
+        // pre-park spin window, some after workers have parked — both
+        // paths must hand every task out exactly once, in both modes.
+        for mode in [PoolMode::Parked, PoolMode::Scoped] {
+            let pool = ThreadPool::with_mode(4, mode);
+            let mut data = vec![0u32; 3];
+            for round in 0..500u32 {
+                pool.run_chunks(&mut data, 1, |_i, _w, chunk| chunk[0] += 1);
+                if round % 97 == 0 {
+                    // Long enough for workers to exhaust the spin budget
+                    // and park; the next region must still wake them.
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            }
+            assert!(data.iter().all(|&v| v == 500), "{mode:?}: {data:?}");
+        }
     }
 
     #[test]

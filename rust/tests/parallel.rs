@@ -9,8 +9,8 @@
 //! count). The arena tests prove buffers (including recycled activation
 //! tensors) persist across forwards instead of being reallocated.
 
-use rt3d::codegen::{self, GemmTile, KernelArch, Scheme};
-use rt3d::executors::{self, gemm, AccSlabs, EngineKind, NativeEngine};
+use rt3d::codegen::{self, FuseMode, GemmTile, KernelArch, Scheme};
+use rt3d::executors::{self, gemm, AccSlabs, EngineKind, NativeEngine, ScratchArena};
 use rt3d::model::{ConvLayer, Model, SyntheticC3d, TensorRef, WeightRefs};
 use rt3d::tensor::{Conv3dGeometry, Mat, Tensor5};
 use rt3d::util::pool::{PoolMode, ThreadPool};
@@ -58,6 +58,36 @@ fn run_threads(
         &AccSlabs::new(threads),
     );
     out
+}
+
+/// Run one compiled conv through the fused implicit-GEMM path (no
+/// materialized patch matrix) at a given thread count.
+fn run_fused_threads(
+    cc: &codegen::CompiledConv,
+    x: &Tensor5,
+    threads: usize,
+) -> Mat {
+    let mut out = Mat::zeros(cc.geom.out_ch, cc.geom.rows(x.dims[0]));
+    let call = cc.bind(cc.geom.in_spatial);
+    executors::run_conv_fused(
+        &call,
+        x,
+        &mut out,
+        &ThreadPool::new(threads),
+        &AccSlabs::new(threads),
+    );
+    out
+}
+
+/// Kernel variants to exercise: scalar always, plus the detected ISA when
+/// it differs (scalar ↔ SIMD outputs are bit-identical by contract, so
+/// these can all be compared against one reference).
+fn kernels() -> Vec<KernelArch> {
+    let mut v = vec![KernelArch::Scalar];
+    if KernelArch::best_supported() != KernelArch::Scalar {
+        v.push(KernelArch::best_supported());
+    }
+    v
 }
 
 #[test]
@@ -279,6 +309,190 @@ fn per_layer_thread_cap_keeps_parity() {
         cc.threads = cap;
         assert_eq!(base.data, run_threads(&cc, &pt, 6).data, "cap={cap}");
     }
+}
+
+/// The fused implicit-GEMM path must reproduce the materialized
+/// im2col+GEMM path bit for bit — across all four plan kinds, sparsity
+/// schemes, tiles (the kc block walk is part of the accumulation-order
+/// contract), thread counts and kernel variants, with a multi-clip batch
+/// so the on-the-fly patch formation crosses clip boundaries.
+#[test]
+fn fused_matches_materialized_all_plan_kinds() {
+    let (m, c) = (13usize, 8usize); // ragged M vs g_m=4 and mr
+    let sp = [3usize, 5, 5];
+    let layer = conv_layer(m, c);
+    let g = geom(m, c, sp);
+    let w = Tensor5::random([m, c, 3, 3, 3], 211);
+    let bias: Vec<f32> = (0..m).map(|i| 0.05 * i as f32 - 0.2).collect();
+    let (pp, qq, ks) = (m.div_ceil(4), c.div_ceil(4), 27usize);
+    let kgs_mask: Vec<bool> = (0..pp * qq * ks).map(|i| (i * 11) % 3 != 0).collect();
+    let van_mask: Vec<bool> = (0..pp * qq).map(|i| i % 4 != 1).collect();
+    let fil_mask: Vec<bool> = (0..m).map(|i| i % 3 != 1).collect();
+    let plans = [
+        ("dense", codegen::compile_conv_dense(&layer, &g, &w.data, bias.clone())),
+        (
+            "kgs",
+            codegen::compile_conv_sparse(
+                &layer, &g, &w.data, bias.clone(), &kgs_mask, Scheme::Kgs, 4, 4,
+            ),
+        ),
+        (
+            "vanilla",
+            codegen::compile_conv_sparse(
+                &layer, &g, &w.data, bias.clone(), &van_mask, Scheme::Vanilla, 4, 4,
+            ),
+        ),
+        (
+            "filter",
+            codegen::compile_conv_sparse(
+                &layer, &g, &w.data, bias, &fil_mask, Scheme::Filter, 4, 4,
+            ),
+        ),
+    ];
+    let x = Tensor5::random([2, c, sp[0], sp[1], sp[2]], 212);
+    let pt = executors::im2col_t(&x, &g);
+    for (label, mut cc) in plans {
+        for tile in [
+            GemmTile::default(),
+            GemmTile { mr: 4, rc: 32, kc: 16 },
+            GemmTile { mr: 3, rc: 17, kc: 7 },
+        ] {
+            cc.set_tile(tile);
+            for kernel in kernels() {
+                cc.kernel = Some(kernel);
+                let materialized = run_threads(&cc, &pt, 3);
+                for threads in [1usize, 4] {
+                    let fused = run_fused_threads(&cc, &x, threads);
+                    assert_eq!(
+                        materialized.data, fused.data,
+                        "{label} {tile:?} {kernel:?} t={threads}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Whole-model differential: forcing every layer fused vs materialized on
+/// a shared core (handle-local `set_fused`, like `set_kernel`) must give
+/// bit-identical logits, dense and sparse, across thread counts — and the
+/// default auto resolution must agree with both.
+#[test]
+fn engine_fused_matches_materialized_bitwise() {
+    let model = Model::synthetic_c3d(SyntheticC3d::tiny());
+    let input = model.manifest.input;
+    let clip = Tensor5::random([2, input[0], input[1], input[2], input[3]], 221);
+    for sparse in [false, true] {
+        let mut mat = NativeEngine::with_threads(&model, EngineKind::Rt3d, sparse, 1);
+        mat.set_fused(false);
+        let want = mat.forward(&clip);
+        let auto4 = NativeEngine::with_threads(&model, EngineKind::Rt3d, sparse, 4);
+        assert_eq!(want.data, auto4.forward(&clip).data, "auto sparse={sparse}");
+        for threads in [1usize, 4] {
+            let mut fus =
+                NativeEngine::with_threads(&model, EngineKind::Rt3d, sparse, threads);
+            fus.set_fused(true);
+            assert_eq!(
+                want.data,
+                fus.forward(&clip).data,
+                "fused t={threads} sparse={sparse}"
+            );
+        }
+        // Forks inherit the force and still share the core.
+        let fork = mat.fork_with_threads(2);
+        assert_eq!(want.data, fork.forward(&clip).data, "fork sparse={sparse}");
+    }
+}
+
+/// The tuner-free default must pick the fused path for the large early
+/// conv layers (the ones whose materialized patch matrix blows the cache)
+/// and keep tiny tail layers materialized.
+#[test]
+fn fused_is_default_for_large_early_layers() {
+    if FuseMode::active() != FuseMode::Auto {
+        return; // RT3D_FUSE differential leg: resolution is forced.
+    }
+    let model = Model::synthetic_c3d(SyntheticC3d::default());
+    let convs = codegen::compile_model(&model, false);
+    let by_name: std::collections::HashMap<&str, bool> = convs
+        .iter()
+        .map(|cc| (cc.name.as_str(), cc.bind(cc.geom.in_spatial).fused))
+        .collect();
+    for name in ["conv1", "conv2", "conv3a", "conv3b"] {
+        assert!(by_name[name], "{name} must default to the fused path");
+    }
+    assert!(!by_name["conv4"], "tiny tail layer must stay materialized");
+}
+
+/// On an early-conv-layer shape, the fused path's scratch high-water mark
+/// must be a small fraction of the materialized one (the whole point:
+/// O(workers·kc·rc) panels instead of the O(K·R) patch matrix).
+#[test]
+fn fused_path_shrinks_peak_scratch_on_early_layer() {
+    let (m, c) = (16usize, 16usize); // synthetic-C3D conv2 class
+    let sp = [8usize, 32, 32]; // K = 432, R = 8192
+    let layer = conv_layer(m, c);
+    let g = geom(m, c, sp);
+    let w = Tensor5::random([m, c, 3, 3, 3], 231);
+    let cc = codegen::compile_conv_dense(&layer, &g, &w.data, vec![0.0; m]);
+    let x = Tensor5::random([1, c, sp[0], sp[1], sp[2]], 232);
+    let threads = 4;
+    let call = cc.bind(sp);
+
+    let mut mat_arena = ScratchArena::new(threads);
+    {
+        let pool = ThreadPool::new(threads);
+        let ScratchArena { patches, out, slabs, .. } = &mut mat_arena;
+        patches.reset(g.cols(), g.rows(1));
+        executors::im2col_t_into_with(&x, &g, patches, &pool);
+        out.reset(m, patches.cols);
+        executors::run_conv_bound(&call, patches, out, &pool, slabs);
+    }
+    let mut fus_arena = ScratchArena::new(threads);
+    {
+        let pool = ThreadPool::new(threads);
+        let ScratchArena { out, slabs, .. } = &mut fus_arena;
+        out.reset(m, g.rows(1));
+        executors::run_conv_fused(&call, &x, out, &pool, slabs);
+    }
+    assert_eq!(
+        mat_arena.out.data, fus_arena.out.data,
+        "same conv, same bits, different scratch shape"
+    );
+    let (mat, fus) = (mat_arena.peak_bytes(), fus_arena.peak_bytes());
+    assert!(
+        fus * 4 <= mat,
+        "fused scratch must be ≪ materialized: fused={fus}B materialized={mat}B"
+    );
+}
+
+/// Residual/Concat branch fan-out must run off the activation recycler:
+/// after warm-up, repeated forwards on an R(2+1)D-style graph neither
+/// grow the recycler nor drift the logits, at any thread count.
+#[test]
+fn residual_concat_graph_recycles_buffers() {
+    let model = Model::synthetic_residual(SyntheticC3d::tiny());
+    let input = model.manifest.input;
+    let clip = Tensor5::random([2, input[0], input[1], input[2], input[3]], 241);
+    let engine = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 4);
+    let first = engine.forward(&clip);
+    assert_eq!(first.rows, 2);
+    assert!(first.data.iter().all(|v| v.is_finite()));
+    for _ in 0..5 {
+        let _ = engine.forward(&clip);
+    }
+    let grows = engine.recycler_grows();
+    for _ in 0..5 {
+        assert_eq!(engine.forward(&clip).data, first.data, "drifting logits");
+    }
+    assert_eq!(
+        engine.recycler_grows(),
+        grows,
+        "branching graph must not allocate in steady state"
+    );
+    // Thread-count parity holds through the branching layers too.
+    let serial = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 1);
+    assert_eq!(serial.forward(&clip).data, first.data);
 }
 
 #[test]

@@ -30,10 +30,14 @@ import sys
 THRESHOLD = 1.20  # warn when a metric degrades past 120% of baseline
 UPDATE_TOLERANCE = 1.5  # tolerance stamped into refreshed baselines
 
-# Latency-style keys: larger is worse.
-LATENCY_KEYS = ("p95_ms", "p50_ms", "p95_ms_1t", "p50_ms_1t")
+# Latency-style keys: larger is worse. The *_peak_scratch_mb keys are the
+# gemm-kernels bench's measured scratch high-water marks — deterministic
+# for a given thread count, so a growth past tolerance means the fused
+# path's working set regressed (e.g. panel slabs started scaling with R).
+LATENCY_KEYS = ("p95_ms", "p50_ms", "p95_ms_1t", "p50_ms_1t",
+                "fused_peak_scratch_mb", "materialized_peak_scratch_mb")
 # Throughput-style keys: smaller is worse.
-THROUGHPUT_KEYS = ("saturation_clips_per_s",)
+THROUGHPUT_KEYS = ("saturation_clips_per_s", "fused_best_gflops")
 # Context carried into a refreshed baseline from the first run.
 CONTEXT_KEYS = ("bench", "model", "threads", "isa_detected", "kernel",
                 "simd_lanes", "workers_best")
@@ -77,7 +81,8 @@ def update_baseline(out_path, run_paths) -> int:
         if key in runs[0]:
             baseline[key] = runs[0][key]
     for key in LATENCY_KEYS + THROUGHPUT_KEYS + ("speedup_vs_1t",
-                                                 "workers_speedup", "gflops"):
+                                                 "workers_speedup", "gflops",
+                                                 "materialized_best_gflops"):
         values = [r[key] for r in runs
                   if isinstance(r.get(key), (int, float))]
         if values:
@@ -128,8 +133,9 @@ def check(baseline_path, current_path) -> int:
                     f"({cur / base:.0%} of baseline)")
         else:
             ratio = cur / base
+            # Latency-style keys carry their unit in the name (ms / mb).
             line = (
-                f"{key}: baseline={base:.2f}ms current={cur:.2f}ms "
+                f"{key}: baseline={base:.2f} current={cur:.2f} "
                 f"({ratio:.0%} of baseline, threads base={baseline.get('threads')} "
                 f"cur={current.get('threads')})"
             )
