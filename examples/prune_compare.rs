@@ -43,7 +43,8 @@ fn main() -> rt3d::Result<()> {
             ("rt3d-dense", EngineKind::Rt3d, false),
             ("rt3d-kgs", EngineKind::Rt3d, true),
         ] {
-            let engine = NativeEngine::new(&model, kind, sparse);
+            let engine =
+                NativeEngine::builder(&model).kind(kind).sparsity(sparse).build();
             let reps = if kind == EngineKind::Naive { 1 } else { 3 };
             let t = median_time(|| { engine.forward(&clip); }, reps);
             let convs = codegen::compile_model(&model, sparse);

@@ -1,18 +1,29 @@
-//! Quickstart: load the C3D artifact, run one clip through both execution
-//! paths (native RT3D executors and, with `--features pjrt`, the
+//! Quickstart: build an engine through the one front door
+//! (`NativeEngine::builder`), run one clip through the execution paths
+//! (native RT3D dense, sparse, and — with `--features pjrt` — the
 //! PJRT-compiled HLO), and print the predictions.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
+//! # or, with no artifacts, against the in-memory synthetic C3D model:
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! Every knob resolves **builder > RT3D_* env > tuned/heuristic default**
+//! (run `rt3d env` to see the environment layer).
 
-use rt3d::executors::{EngineKind, NativeEngine};
-use rt3d::model::Model;
+use rt3d::executors::NativeEngine;
+use rt3d::model::{Model, SyntheticC3d};
 use rt3d::workload;
 
 fn main() -> rt3d::Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
-    let model = Model::load(&dir, "c3d")?;
+    let model = if std::path::Path::new(&dir).join("c3d.manifest.json").exists() {
+        Model::load(&dir, "c3d")?
+    } else {
+        println!("quickstart: artifacts missing — using the synthetic C3D model");
+        Model::synthetic_c3d(SyntheticC3d::default())
+    };
     let input = model.manifest.input;
     println!(
         "loaded {}: input={:?}, dense {:.2} GFLOPs/clip",
@@ -25,15 +36,18 @@ fn main() -> rt3d::Result<()> {
     let label = 4;
     let clip = workload::make_clip(label, 7, input[1], input[2]);
 
-    // Path 1: native RT3D executors (dense plans).
-    let engine = NativeEngine::new(&model, EngineKind::Rt3d, false);
+    // Path 1: native RT3D executors (dense plans). The builder is the
+    // whole configuration surface: unset knobs fall through to the
+    // RT3D_* environment, then to the tuned/heuristic defaults.
+    let engine = NativeEngine::builder(&model).build();
     let t0 = std::time::Instant::now();
     let logits = engine.forward(&clip);
     println!(
-        "native rt3d: {:?} -> predicted class {} ({:.1} ms)",
+        "native rt3d: {:?} -> predicted class {} ({:.1} ms, {} threads)",
         &logits.row(0)[..model.manifest.num_classes.min(4)],
         argmax(logits.row(0)),
-        t0.elapsed().as_secs_f64() * 1e3
+        t0.elapsed().as_secs_f64() * 1e3,
+        engine.threads()
     );
 
     // Path 2: the AOT-compiled HLO through PJRT (three-layer path). Only
@@ -59,8 +73,10 @@ fn main() -> rt3d::Result<()> {
     #[cfg(not(feature = "pjrt"))]
     println!("pjrt xla:    skipped (build with --features pjrt to enable)");
 
-    // Path 3: sparse (pruned) plans — same prediction, fewer FLOPs.
-    let sparse = NativeEngine::new(&model, EngineKind::Rt3d, true);
+    // Path 3: sparse (pruned) plans — same prediction, fewer FLOPs. An
+    // explicit thread count overrides RT3D_THREADS; everything else stays
+    // on its default.
+    let sparse = NativeEngine::builder(&model).sparsity(true).threads(2).build();
     let t0 = std::time::Instant::now();
     let slogits = sparse.forward(&clip);
     println!(

@@ -1,94 +1,149 @@
-//! End-to-end serving driver (the E2E validation example from DESIGN.md):
-//! loads the pruned C3D artifact, starts the coordinator (batcher + worker),
-//! replays a Poisson trace of synthetic action clips, and reports latency,
-//! throughput and *serving accuracy* against the known labels.
+//! Streaming-video serving driver — the paper's actual mobile scenario:
+//! frames arrive continuously from a "camera", a [`Session`] windows them
+//! into 16-frame clips (configurable stride), the batched coordinator
+//! pipeline executes them on the chosen backend, and per-window
+//! predictions come back in stream order.
 //!
 //! ```sh
 //! make artifacts && \
-//!   cargo run --release --example serve_video [artifacts] [n_requests] [workers]
+//!   cargo run --release --example serve_video [artifacts] [n_clips] [workers] [stride]
+//! # with no artifacts the synthetic C3D model is used
 //! ```
 
-use rt3d::coordinator::{BatcherConfig, Server, ServerConfig};
-use rt3d::executors::{EngineKind, NativeEngine};
-use rt3d::model::Model;
-use rt3d::workload::{self, RequestTrace, TraceConfig};
+use rt3d::coordinator::{Server, ServerConfig, Session, SessionConfig};
+use rt3d::executors::NativeEngine;
+use rt3d::model::{Model, SyntheticC3d};
+use rt3d::workload;
 use std::sync::Arc;
 
 fn main() -> rt3d::Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
-    let n: usize = std::env::args()
+    let n_clips: usize = std::env::args()
         .nth(2)
         .and_then(|s| s.parse().ok())
-        .unwrap_or(48);
+        .unwrap_or(12);
     let workers: usize = std::env::args()
         .nth(3)
         .and_then(|s| s.parse().ok())
-        .unwrap_or(1);
-    let model = Model::load(&dir, "c3d")?;
+        .unwrap_or(2);
+    let model = if std::path::Path::new(&dir).join("c3d.manifest.json").exists() {
+        Model::load(&dir, "c3d")?
+    } else {
+        println!("serve_video: artifacts missing — using the synthetic C3D model");
+        Model::synthetic_c3d(SyntheticC3d::default())
+    };
     let input = model.manifest.input;
 
-    for (label, sparse) in [("dense", false), ("kgs-sparse", true)] {
-        let engine = Arc::new(NativeEngine::new(&model, EngineKind::Rt3d, sparse));
-        println!(
-            "\n== serving with {} engine ({:.2} GFLOPs/clip, {} workers)",
-            label,
-            engine.conv_flops() as f64 / 1e9,
-            workers
-        );
-        let server = Server::start(
-            engine,
-            ServerConfig {
-                batcher: BatcherConfig {
-                    max_batch: 4,
-                    max_wait: std::time::Duration::from_millis(15),
-                },
-                queue_depth: 64,
-                workers,
-            },
-        );
-        let responses = server.take_responses();
-        let trace = RequestTrace::poisson(&TraceConfig {
-            rate_hz: 30.0, // 30 requests/s ~ "real-time" per the paper
-            count: n,
-            seed: 99,
-        });
-        let t0 = std::time::Instant::now();
-        let mut submitted = 0;
-        for e in &trace.entries {
-            // Pace submissions to the trace arrivals.
-            let target = std::time::Duration::from_secs_f64(e.arrival_s);
-            if let Some(sleep) = target.checked_sub(t0.elapsed()) {
-                std::thread::sleep(sleep);
-            }
-            let clip =
-                workload::make_clip(e.label, e.clip_seed, input[1], input[2]);
-            server.submit(clip, Some(e.label))?;
-            submitted += 1;
-        }
-        let mut done = 0;
-        while done < submitted {
-            responses.recv()?;
-            done += 1;
-        }
-        let m = server.shutdown();
-        let lat = m.latency();
-        println!(
-            "requests={} throughput={:.1} req/s mean_batch={:.2}",
-            m.count(),
-            m.throughput(),
-            m.mean_batch()
-        );
-        println!(
-            "latency ms: mean={:.1} p50={:.1} p95={:.1} p99={:.1} max={:.1}",
-            lat.mean_s * 1e3,
-            lat.p50_s * 1e3,
-            lat.p95_s * 1e3,
-            lat.p99_s * 1e3,
-            lat.max_s * 1e3
-        );
-        if let Some(acc) = m.accuracy() {
-            println!("serving accuracy: {:.3} (8 classes, chance 0.125)", acc);
+    // One front door: the builder resolves builder > RT3D_* env > tuned
+    // defaults; the server takes its config by value.
+    let engine = Arc::new(NativeEngine::builder(&model).sparsity(true).build());
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig::new()
+            .max_batch(4)
+            .max_wait(std::time::Duration::from_millis(15))
+            .queue_depth(64)
+            .workers(workers),
+    );
+
+    // The session's window/frame shape comes from the backend's model
+    // geometry; stride defaults to the window (back-to-back clips). A
+    // smaller stride overlaps windows (denser labels, more compute).
+    let mut cfg = SessionConfig::for_backend(engine.as_ref())?;
+    if let Some(stride) = std::env::args().nth(4).and_then(|s| s.parse().ok()) {
+        cfg = cfg.stride(stride);
+    }
+    println!(
+        "streaming session: frames {:?}, window {}, stride {}, {} workers x {} threads",
+        cfg.frame_dims, cfg.window, cfg.stride, workers, engine.threads()
+    );
+    let mut session = Session::new(&server, cfg)?;
+
+    // The "camera": n_clips labelled synthetic action clips played
+    // back-to-back as one continuous frame stream. With stride = window,
+    // window w sees exactly clip w, so the known labels score the
+    // streaming pipeline end to end.
+    let stride_tiles = session.config().stride == session.config().window;
+    let mut labels = Vec::new();
+    let mut tally = Tally::default();
+    let t0 = std::time::Instant::now();
+    for i in 0..n_clips {
+        let label = i % workload::NUM_CLASSES;
+        labels.push(label);
+        let clip = workload::make_clip(label, 1000 + i as u64, input[1], input[2]);
+        session.push_clip(&clip)?;
+        // Results stream back while the camera keeps rolling.
+        while let Some(win) = session.try_next() {
+            tally.report(&win, &labels, stride_tiles);
         }
     }
+    println!(
+        "pushed {} frames -> {} windows in {:.2}s",
+        session.frames_seen(),
+        session.windows_submitted(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // End of stream: drain the in-flight windows in order.
+    for win in session.finish()? {
+        tally.report(&win, &labels, stride_tiles);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.shutdown();
+    println!(
+        "\nserved {} windows in {:.2}s ({:.1} windows/s, mean batch {:.2})",
+        m.count(),
+        wall,
+        m.count() as f64 / wall,
+        m.mean_batch()
+    );
+    if stride_tiles && tally.total > 0 {
+        println!(
+            "streaming accuracy: {}/{} (chance {:.3}), mean latency {:.1} ms",
+            tally.correct,
+            tally.total,
+            1.0 / workload::NUM_CLASSES as f64,
+            1e3 * tally.latency_sum / tally.total as f64
+        );
+    }
     Ok(())
+}
+
+/// Per-window reporting + accuracy/latency accounting.
+#[derive(Default)]
+struct Tally {
+    correct: usize,
+    total: usize,
+    latency_sum: f64,
+}
+
+impl Tally {
+    fn report(
+        &mut self,
+        win: &rt3d::coordinator::WindowResult,
+        labels: &[usize],
+        tiled: bool,
+    ) {
+        self.total += 1;
+        self.latency_sum += win.latency_s;
+        let truth = if tiled {
+            if labels.get(win.window) == Some(&win.predicted) {
+                self.correct += 1;
+            }
+            labels
+                .get(win.window)
+                .map(|l| format!(" (true {l})"))
+                .unwrap_or_default()
+        } else {
+            String::new()
+        };
+        println!(
+            "window {:>3} [frames {:>4}..]: class {}{} {:.1} ms",
+            win.window,
+            win.first_frame,
+            win.predicted,
+            truth,
+            win.latency_s * 1e3
+        );
+    }
 }

@@ -18,8 +18,8 @@
 //! synthetic C3D model when `make artifacts` has not been run.
 
 use rt3d::codegen::KernelArch;
-use rt3d::coordinator::{BatcherConfig, Server, ServerConfig};
-use rt3d::executors::{EngineKind, NativeEngine};
+use rt3d::coordinator::{Server, ServerConfig};
+use rt3d::executors::NativeEngine;
 use rt3d::model::{Model, SyntheticC3d};
 use rt3d::tensor::Tensor5;
 use rt3d::util::bench::{budget_from_env, fmt_s, write_repo_json};
@@ -69,8 +69,11 @@ fn main() {
     );
 
     // --- Thread scaling + bit-identical parity -------------------------
-    let eng1 = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 1);
-    let engn = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, threads);
+    let build = |threads: usize| {
+        NativeEngine::builder(&model).sparsity(true).threads(threads).build()
+    };
+    let eng1 = build(1);
+    let engn = build(threads);
     let l1 = eng1.forward(&clip);
     let ln = engn.forward(&clip);
     assert_eq!(
@@ -81,8 +84,11 @@ fn main() {
     // SIMD-on vs scalar fallback on the same ISA path must also agree
     // bit for bit (the kernels use mul+add lanes, never fused FMA).
     if kernel != KernelArch::Scalar {
-        let mut scal = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, threads);
-        scal.set_kernel(KernelArch::Scalar);
+        let scal = NativeEngine::builder(&model)
+            .sparsity(true)
+            .threads(threads)
+            .kernel(KernelArch::Scalar)
+            .build();
         assert_eq!(
             scal.forward(&clip).data,
             ln.data,
@@ -108,22 +114,14 @@ fn main() {
     let n = 24;
     let mut served = Vec::new();
     for max_batch in [1usize, 2, 4, 8] {
-        let engine = Arc::new(NativeEngine::with_threads(
-            &model,
-            EngineKind::Rt3d,
-            true,
-            threads,
-        ));
+        let engine = Arc::new(build(threads));
         let server = Server::start(
             engine,
-            ServerConfig {
-                batcher: BatcherConfig {
-                    max_batch,
-                    max_wait: std::time::Duration::from_millis(5),
-                },
-                queue_depth: 64,
-                workers: 1,
-            },
+            ServerConfig::new()
+                .max_batch(max_batch)
+                .max_wait(std::time::Duration::from_millis(5))
+                .queue_depth(64)
+                .workers(1),
         );
         let responses = server.take_responses();
         let t0 = Instant::now();
@@ -173,22 +171,14 @@ fn main() {
     let mut sweep = Vec::new();
     for &wk in &worker_counts {
         let per_worker_threads = (threads / wk).max(1);
-        let engine = Arc::new(NativeEngine::with_threads(
-            &model,
-            EngineKind::Rt3d,
-            true,
-            per_worker_threads,
-        ));
+        let engine = Arc::new(build(per_worker_threads));
         let server = Server::start(
             engine,
-            ServerConfig {
-                batcher: BatcherConfig {
-                    max_batch: 4,
-                    max_wait: std::time::Duration::from_millis(2),
-                },
-                queue_depth: 16,
-                workers: wk,
-            },
+            ServerConfig::new()
+                .max_batch(4)
+                .max_wait(std::time::Duration::from_millis(2))
+                .queue_depth(16)
+                .workers(wk),
         );
         let responses = server.take_responses();
         let t0 = Instant::now();

@@ -60,7 +60,11 @@ fn main() {
         ];
         let mut medians = Vec::new();
         for (label, kind, sparse) in engines {
-            let engine = NativeEngine::with_threads(&model, kind, sparse, threads);
+            let engine = NativeEngine::builder(&model)
+                .kind(kind)
+                .sparsity(sparse)
+                .threads(threads)
+                .build();
             let bname = format!("{}/{label}", model.manifest.model);
             let r = group.bench(&bname, || {
                 let _ = engine.forward(&clip);

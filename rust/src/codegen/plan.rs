@@ -58,12 +58,12 @@ impl FuseMode {
     }
 
     pub fn from_env() -> FuseMode {
-        match std::env::var("RT3D_FUSE") {
-            Ok(v) => FuseMode::parse(v.trim()).unwrap_or_else(|| {
+        match crate::util::env::fuse() {
+            Some(v) => FuseMode::parse(v.trim()).unwrap_or_else(|| {
                 eprintln!("RT3D_FUSE={v:?} not recognized; using auto");
                 FuseMode::Auto
             }),
-            Err(_) => FuseMode::Auto,
+            None => FuseMode::Auto,
         }
     }
 
@@ -156,29 +156,41 @@ impl KernelArch {
     /// Resolve `RT3D_SIMD` (`scalar` | `auto` | an explicit ISA name that
     /// must be supported) against the detected hardware.
     pub fn detect() -> KernelArch {
-        if let Ok(v) = std::env::var("RT3D_SIMD") {
-            match v.trim() {
-                "" | "auto" => {}
-                "scalar" => return KernelArch::Scalar,
-                other => {
-                    if let Some(k) = KernelArch::parse(other) {
-                        if k.supported() {
-                            return k;
-                        }
-                    }
+        Self::env_request().unwrap_or_else(KernelArch::best_supported)
+    }
+
+    /// The kernel variant `RT3D_SIMD` explicitly names, when it names one
+    /// this machine can execute; `None` for `auto`/unset/unavailable. An
+    /// explicit environment request outranks tuned per-layer choices (see
+    /// [`CompiledConv::bind_full`]) — `RT3D_SIMD=scalar` really does run
+    /// everything scalar, which is what the differential CI leg relies on.
+    fn env_request() -> Option<KernelArch> {
+        let v = crate::util::env::simd()?;
+        match v.trim() {
+            "" | "auto" => None,
+            other => match KernelArch::parse(other).filter(|k| k.supported()) {
+                Some(k) => Some(k),
+                None => {
                     eprintln!(
                         "RT3D_SIMD={other:?} not available on this machine; using auto"
                     );
+                    None
                 }
-            }
+            },
         }
-        KernelArch::best_supported()
     }
 
     /// Process-wide kernel choice (env resolved once).
     pub fn active() -> KernelArch {
         static ARCH: OnceLock<KernelArch> = OnceLock::new();
         *ARCH.get_or_init(KernelArch::detect)
+    }
+
+    /// Cached `Self::env_request` — the middle layer of the kernel
+    /// resolution order (explicit option > environment > tuned > detected).
+    pub fn env_force() -> Option<KernelArch> {
+        static FORCE: OnceLock<Option<KernelArch>> = OnceLock::new();
+        *FORCE.get_or_init(KernelArch::env_request)
     }
 }
 
@@ -357,7 +369,8 @@ pub struct CompiledConv {
     /// Tuned per-layer worker cap; 0 = every pool worker.
     pub threads: usize,
     /// Tuned fused/materialized choice; `None` = the footprint heuristic
-    /// ([`Self::fused_default`]). `RT3D_FUSE=on|off` overrides both.
+    /// ([`Self::fused_default`]). An explicit engine option or the
+    /// `RT3D_FUSE=on|off` policy overrides both ([`Self::resolve_fused`]).
     pub fused: Option<bool>,
     /// Actual FLOPs per clip after compaction (2*MACs).
     pub flops: usize,
@@ -382,9 +395,9 @@ pub struct ConvCall<'a> {
     pub cap: usize,
     /// Resolved execution path for this call: `true` = fused implicit
     /// GEMM (per-worker packed patch panels), `false` = materialized
-    /// im2col + GEMM. Resolution order: `RT3D_FUSE=on|off`, then a
-    /// per-call force (engine `set_fused`), then the plan's tuned flag,
-    /// then the footprint heuristic.
+    /// im2col + GEMM. Resolution order ([`CompiledConv::resolve_fused`]):
+    /// per-call/builder force, then `RT3D_FUSE=on|off`, then the plan's
+    /// tuned flag, then the footprint heuristic.
     pub fused: bool,
 }
 
@@ -411,9 +424,16 @@ impl CompiledConv {
     }
 
     /// [`Self::bind_with`] plus an engine-level fused/materialized force
-    /// (`NativeEngine::set_fused`) — handle-local like the kernel force,
-    /// so a differential handle never mutates the shared plan. The
-    /// process-wide `RT3D_FUSE=on|off` policy outranks everything.
+    /// (`EngineOptions::fused` / `NativeEngine::set_fused`) — handle-local
+    /// like the kernel force, so a differential handle never mutates the
+    /// shared plan.
+    ///
+    /// Both per-call axes follow the crate-wide resolution order
+    /// (documented at `executors::EngineOptions`): **explicit option >
+    /// `RT3D_*` environment > tuned per-layer choice > heuristic/detected
+    /// default** — see [`Self::resolve_fused`] for the fused axis; the
+    /// kernel axis is `force` > `RT3D_SIMD`-named variant > tuned >
+    /// detected ISA.
     pub fn bind_full(
         &self,
         in_spatial: [usize; 3],
@@ -421,23 +441,40 @@ impl CompiledConv {
         force_fused: Option<bool>,
     ) -> ConvCall<'_> {
         let geom = Conv3dGeometry { in_spatial, ..self.geom };
-        let fused = match FuseMode::active() {
-            FuseMode::On => true,
-            FuseMode::Off => false,
-            FuseMode::Auto => force_fused
-                .or(self.fused)
-                .unwrap_or_else(|| Self::fused_default(&geom)),
-        };
+        let fused =
+            Self::resolve_fused(force_fused, FuseMode::active(), self.fused, &geom);
         ConvCall {
             cc: self,
             geom,
             tile: self.tile,
             kernel: force
+                .or_else(KernelArch::env_force)
                 .or(self.kernel)
                 .filter(|k| k.supported())
                 .unwrap_or_else(KernelArch::active),
             cap: if self.threads == 0 { usize::MAX } else { self.threads },
             fused,
+        }
+    }
+
+    /// The fused-axis resolution, as a pure function so the precedence is
+    /// testable without touching the process environment: explicit force
+    /// (builder / `set_fused`) > environment policy (`RT3D_FUSE=on|off`) >
+    /// tuned per-layer flag > the [`Self::fused_default`] footprint
+    /// heuristic. `bind_full` calls this with [`FuseMode::active`].
+    pub fn resolve_fused(
+        force: Option<bool>,
+        policy: FuseMode,
+        tuned: Option<bool>,
+        geom: &Conv3dGeometry,
+    ) -> bool {
+        match (force, policy) {
+            (Some(f), _) => f,
+            (None, FuseMode::On) => true,
+            (None, FuseMode::Off) => false,
+            (None, FuseMode::Auto) => {
+                tuned.unwrap_or_else(|| Self::fused_default(geom))
+            }
         }
     }
 
@@ -461,19 +498,16 @@ impl CompiledConv {
     }
 
     /// Per-worker packed-panel footprint (elements) of the fused path.
-    /// Dense/Filter plans stream `(kc, rc)` sub-panels; sparse plans pack
-    /// the full `(K, rc)` column block (their gathered rows span all of
-    /// K). Independent of batch: the column span is capped at `rc`.
+    /// Dense/Filter plans stream contiguous `(kc, rc)` sub-panels; sparse
+    /// plans gather each group's kept patch rows in kc-sized slices, so
+    /// their slab is bounded by the same `(kc, rc)` block (a group with
+    /// fewer kept columns than `kc` packs even less). Independent of
+    /// batch: the column span is capped at `rc`.
     pub fn panel_footprint(&self) -> usize {
         let r = self.geom.rows(1).max(1);
         let rc = self.tile.rc.max(1).min(r);
         let k = self.geom.cols().max(1);
-        match &self.kind {
-            ConvKind::Dense { .. } | ConvKind::Filter { .. } => {
-                self.tile.kc.max(1).min(k) * rc
-            }
-            ConvKind::Kgs { .. } | ConvKind::Vanilla { .. } => k * rc,
-        }
+        self.tile.kc.max(1).min(k) * rc
     }
 
     /// Build the derived execution layouts (packed dense panels / sparse

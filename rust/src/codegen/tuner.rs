@@ -316,22 +316,28 @@ impl TuneDb {
     }
 
     /// Default database location: `RT3D_TUNE_DB` when set, else
-    /// `<crate>/tune_db.json` next to the manifest.
+    /// `<crate>/tune_db.json` next to the manifest. An explicit
+    /// `EngineOptions::tune_db` path outranks both (resolved by the
+    /// engine builder, not here).
     pub fn default_path() -> std::path::PathBuf {
-        match std::env::var("RT3D_TUNE_DB") {
-            Ok(p) if !p.trim().is_empty() => std::path::PathBuf::from(p),
-            _ => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tune_db.json"),
-        }
+        crate::util::env::tune_db_path()
+            .unwrap_or_else(crate::util::env::default_tune_db_path)
     }
 
     /// Load the default database if one exists (quietly `None` otherwise —
     /// an untuned machine runs on defaults).
     pub fn load_default() -> Option<TuneDb> {
-        let path = Self::default_path();
+        Self::load_at(&Self::default_path())
+    }
+
+    /// Load the database at `path` if one exists there (quietly `None`
+    /// when missing; unreadable databases are reported and ignored, so a
+    /// stale file can never brick an engine build).
+    pub fn load_at(path: &std::path::Path) -> Option<TuneDb> {
         if !path.exists() {
             return None;
         }
-        match Self::load(&path) {
+        match Self::load(path) {
             Ok(db) => Some(db),
             Err(e) => {
                 eprintln!("ignoring unreadable tune db {}: {e}", path.display());

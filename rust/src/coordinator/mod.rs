@@ -13,16 +13,26 @@
 //!        -> one shared response channel (correlate by Response::id)
 //! ```
 //!
+//! Everything here is written against one execution interface,
+//! [`Backend`] — implemented by the native engine (any quality level),
+//! the standalone naive interpreter and (behind `--features pjrt`) the
+//! PJRT runtime — so a deployment can serve any executor, and tests can
+//! diff two of them through the identical pipeline.
+//!
 //! * [`batcher`] — collects requests into batches under a latency budget
 //!   (size-capped, deadline-flushed), mirroring mobile pipelines that
 //!   process "16 frames" per inference, and feeds the shared batch queue
 //!   so batch K+1 is formed while batch K executes.
 //! * [`server`] — `workers` execution threads draining the batch queue
-//!   into per-worker [`Engine`] handles ([`Engine::fork`]), with
+//!   into per-worker [`Backend`] handles ([`Backend::fork`]), with
 //!   back-pressure end-to-end via bounded queues and a single merged
 //!   response stream + metrics sink.
 //! * [`router`] — multi-model front door; every deployment of a model
 //!   delivers into one shared response channel with model-unique ids.
+//! * [`session`] — the paper's actual mobile scenario as an API:
+//!   continuous video frames pushed incrementally, windowed into clips
+//!   (configurable stride/overlap), served through the batched pipeline,
+//!   per-window logits yielded in order.
 //! * [`metrics`] — latency percentiles + throughput + per-worker batch
 //!   accounting used by the Table 2 harness and the E2E example.
 
@@ -30,11 +40,17 @@ pub mod batcher;
 pub mod metrics;
 pub mod router;
 pub mod server;
+pub mod session;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::{LatencyStats, Metrics};
 pub use router::{Deployment, Policy, Router};
-pub use server::{Engine, Server, ServerConfig};
+pub use server::{Backend, Route, Server, ServerConfig};
+// Pre-redesign name of `Backend`, kept so downstream `Arc<dyn Engine>` /
+// `impl Engine for ..` keep compiling for one release (same trait, so
+// both spellings are interchangeable everywhere).
+pub use server::Backend as Engine;
+pub use session::{Session, SessionConfig, WindowResult};
 
 use crate::tensor::Tensor5;
 use std::time::Instant;

@@ -13,7 +13,8 @@
 //! scheme paid a 200 ms `recv_timeout` on every idle deployment per
 //! loop). Callers correlate responses to submissions via [`Response::id`].
 
-use super::{Engine, Metrics, Response, Server, ServerConfig};
+use super::server::Route;
+use super::{Backend, Metrics, Response, Server, ServerConfig};
 use crate::anyhow;
 use crate::tensor::Tensor5;
 use crate::util::error::Result;
@@ -28,10 +29,10 @@ use std::time::Duration;
 /// deployment costs nothing now that there is one channel per model).
 const DRAIN_STALL_TIMEOUT: Duration = Duration::from_secs(5);
 
-/// A deployable engine variant with its advertised quality/latency.
+/// A deployable backend variant with its advertised quality/latency.
 pub struct Deployment {
     pub name: String,
-    pub engine: Arc<dyn Engine>,
+    pub engine: Arc<dyn Backend>,
     /// Expected single-clip latency (from the device model or measured).
     pub expected_latency_s: f64,
     /// Eval accuracy of this variant (None when unknown).
@@ -90,11 +91,10 @@ impl Router {
                 ids: Arc::new(AtomicU64::new(0)),
             }
         });
-        let server = Server::start_shared(
+        let server = Server::start_routed(
             dep.engine.clone(),
             cfg,
-            entry.resp_tx.clone(),
-            entry.ids.clone(),
+            Route { resp_tx: entry.resp_tx.clone(), ids: entry.ids.clone() },
         );
         entry.servers.push((dep, server));
     }
@@ -161,7 +161,7 @@ impl Router {
 
     /// Drain `n` responses for a model from its shared channel (all
     /// deployments deliver there; correlate by [`Response::id`]). Errors
-    /// when no response arrives for [`DRAIN_STALL_TIMEOUT`].
+    /// when no response arrives for `DRAIN_STALL_TIMEOUT`.
     pub fn drain(&self, model: &str, n: usize) -> Result<Vec<Response>> {
         let entry = self
             .models
@@ -213,7 +213,7 @@ mod tests {
     use crate::tensor::Mat;
 
     struct Tagged(f32);
-    impl Engine for Tagged {
+    impl Backend for Tagged {
         fn infer(&self, batch: Tensor5) -> Mat {
             let mut m = Mat::zeros(batch.dims[0], 2);
             for r in 0..m.rows {

@@ -1,4 +1,4 @@
-//! Server: a pipelined batching front-end over an [`Engine`].
+//! Server: a pipelined batching front-end over a [`Backend`].
 //!
 //! One batcher thread aggregates requests (size-capped, deadline-flushed)
 //! and feeds a bounded shared batch queue; `workers` execution threads
@@ -20,39 +20,66 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// Anything that can run a batched forward pass (native engine, PJRT
-/// executable, or the device simulator in trace mode).
-pub trait Engine: Send + Sync {
+/// The backend-agnostic execution interface the whole serving stack is
+/// written against: anything that can run a batched forward pass — the
+/// native engine at any quality level, the standalone naive interpreter
+/// ([`crate::executors::NaiveBackend`]), or the PJRT runtime
+/// (`runtime::PjrtBackend`, behind `--features pjrt`). A deployment picks
+/// a backend; the batcher, server, router and [`super::Session`] neither
+/// know nor care which one is underneath, which is what lets tests and
+/// `rt3d serve --backend ...` A/B different executors through the
+/// *identical* pipeline.
+///
+/// Object-safe by construction — the coordinator passes
+/// `Arc<dyn Backend>` handles throughout.
+pub trait Backend: Send + Sync {
     /// (batch NCDHW) -> logits (batch x classes). Takes the batch by
-    /// value: the batcher owns the packed batch, so engines can consume
+    /// value: the batcher owns the packed batch, so backends can consume
     /// it without a per-request data-sized clone.
     fn infer(&self, batch: Tensor5) -> Mat;
     fn name(&self) -> String;
-    /// Worker threads the engine's executor uses (1 for serial engines);
+    /// Native input dims (C, D, H, W) when the backend serves one fixed
+    /// model geometry; `None` for shape-agnostic backends (test toys).
+    /// [`super::SessionConfig::for_backend`] derives its frame shape and
+    /// window length from this.
+    fn input_dims(&self) -> Option<[usize; 4]> {
+        None
+    }
+    /// Logit width, when fixed by the model.
+    fn num_classes(&self) -> Option<usize> {
+        None
+    }
+    /// Worker threads the backend's executor uses (1 for serial backends);
     /// surfaced in serving logs and the bench JSON.
     fn threads(&self) -> usize {
         1
     }
-    /// A fresh execution handle for one more server worker. Engines with
+    /// A fresh execution handle for one more server worker. Backends with
     /// per-handle scratch state (the native engine) return a new handle
     /// sharing the immutable compiled core; `None` (the default) means
     /// "no cheap fork — share this handle across workers".
-    fn fork(&self) -> Option<Arc<dyn Engine>> {
+    fn fork(&self) -> Option<Arc<dyn Backend>> {
         None
     }
 }
 
-impl Engine for crate::executors::NativeEngine {
+impl Backend for crate::executors::NativeEngine {
     fn infer(&self, batch: Tensor5) -> Mat {
         self.forward_owned(batch)
     }
     fn name(&self) -> String {
         format!("native-{:?}", self.kind)
     }
+    fn input_dims(&self) -> Option<[usize; 4]> {
+        Some(self.input())
+    }
+    fn num_classes(&self) -> Option<usize> {
+        Some(crate::executors::NativeEngine::num_classes(self))
+    }
     fn threads(&self) -> usize {
         crate::executors::NativeEngine::threads(self)
     }
-    fn fork(&self) -> Option<Arc<dyn Engine>> {
+    fn fork(&self) -> Option<Arc<dyn Backend>> {
         Some(Arc::new(crate::executors::NativeEngine::fork(self)))
     }
 }
@@ -63,8 +90,8 @@ pub struct ServerConfig {
     /// Bound of the ingress queue (back-pressure: senders block).
     pub queue_depth: usize,
     /// Batch-execution worker threads draining the shared batch queue.
-    /// Each worker runs on its own engine handle ([`Engine::fork`]) when
-    /// the engine supports cheap forking.
+    /// Each worker runs on its own backend handle ([`Backend::fork`]) when
+    /// the backend supports cheap forking.
     pub workers: usize,
 }
 
@@ -74,13 +101,46 @@ impl Default for ServerConfig {
     }
 }
 
+impl ServerConfig {
+    /// Fluent field setters so call sites read as configuration, not as
+    /// positional argument soup; every `Server`/`Router` constructor takes
+    /// the whole config by value.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Batch-execution worker threads.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Ingress queue bound (back-pressure: submitters block past this).
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth;
+        self
+    }
+
+    /// Batcher size cap.
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.batcher.max_batch = n;
+        self
+    }
+
+    /// Batcher deadline: flush when the oldest request has waited this long.
+    pub fn max_wait(mut self, d: std::time::Duration) -> Self {
+        self.batcher.max_wait = d;
+        self
+    }
+}
+
 /// A running server instance: one batcher thread feeding `workers`
 /// execution threads over a shared batch queue.
 pub struct Server {
     tx: Option<SyncSender<Request>>,
     pub metrics: Arc<Metrics>,
     /// Local response receiver; `None` for servers started via
-    /// [`Self::start_shared`] (responses flow through the router's shared
+    /// [`Self::start_routed`] (responses flow through the router's shared
     /// channel). Behind a mutex so the server handle stays `Sync` for
     /// concurrent submitters — take it once via [`Self::take_responses`].
     responses: Mutex<Option<Receiver<Response>>>,
@@ -89,33 +149,57 @@ pub struct Server {
     next_id: Arc<AtomicU64>,
 }
 
+/// The routing half of a shared-channel server: where responses go and
+/// where request ids come from. The [`super::Router`] hands every
+/// deployment of one model the same `Route`, so all of them deliver into
+/// one receiver with model-unique ids.
+pub struct Route {
+    pub resp_tx: SyncSender<Response>,
+    pub ids: Arc<AtomicU64>,
+}
+
 impl Server {
     /// Start a standalone server with its own response channel.
-    pub fn start(engine: Arc<dyn Engine>, cfg: ServerConfig) -> Self {
+    pub fn start(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Self {
         let (resp_tx, resp_rx) = sync_channel::<Response>(cfg.queue_depth * 4);
-        Self::start_routed(engine, cfg, resp_tx, Arc::new(AtomicU64::new(0)), Some(resp_rx))
+        Self::launch(
+            backend,
+            cfg,
+            Route { resp_tx, ids: Arc::new(AtomicU64::new(0)) },
+            Some(resp_rx),
+        )
     }
 
-    /// Start a server that delivers into a caller-owned response channel
-    /// and draws request ids from a shared allocator — the Router uses
-    /// this to fan every deployment of one model into a single receiver
-    /// with model-unique ids.
+    /// Start a server that delivers into a caller-owned [`Route`]
+    /// (response channel + shared id allocator) — the Router uses this to
+    /// fan every deployment of one model into a single receiver with
+    /// model-unique ids.
+    pub fn start_routed(
+        backend: Arc<dyn Backend>,
+        cfg: ServerConfig,
+        route: Route,
+    ) -> Self {
+        Self::launch(backend, cfg, route, None)
+    }
+
+    /// Positional-argument predecessor of [`Self::start_routed`].
+    #[deprecated(note = "use Server::start_routed(backend, cfg, Route { .. })")]
     pub fn start_shared(
-        engine: Arc<dyn Engine>,
+        backend: Arc<dyn Backend>,
         cfg: ServerConfig,
         resp_tx: SyncSender<Response>,
         ids: Arc<AtomicU64>,
     ) -> Self {
-        Self::start_routed(engine, cfg, resp_tx, ids, None)
+        Self::start_routed(backend, cfg, Route { resp_tx, ids })
     }
 
-    fn start_routed(
-        engine: Arc<dyn Engine>,
+    fn launch(
+        engine: Arc<dyn Backend>,
         cfg: ServerConfig,
-        resp_tx: SyncSender<Response>,
-        next_id: Arc<AtomicU64>,
+        route: Route,
         resp_rx: Option<Receiver<Response>>,
     ) -> Self {
+        let Route { resp_tx, ids: next_id } = route;
         let n_workers = cfg.workers.max(1);
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         // One queued batch per worker: enough to keep every worker fed,
@@ -203,7 +287,7 @@ impl Server {
 /// the batch queue closes (batcher done after shutdown).
 fn worker_loop(
     worker: usize,
-    engine: &dyn Engine,
+    engine: &dyn Backend,
     batch_rx: &Mutex<Receiver<Vec<Request>>>,
     resp_tx: &SyncSender<Response>,
     metrics: &Metrics,
@@ -258,9 +342,9 @@ fn argmax(xs: &[f32]) -> usize {
 mod tests {
     use super::*;
 
-    /// Test engine: logit[i] = mean of clip scaled by class index.
+    /// Test backend: logit[i] = mean of clip scaled by class index.
     struct Toy;
-    impl Engine for Toy {
+    impl Backend for Toy {
         fn infer(&self, batch: Tensor5) -> Mat {
             let b = batch.dims[0];
             let n = batch.len() / b;
@@ -359,7 +443,7 @@ mod tests {
         // takes its worker down, the batcher then exits, and the ingress
         // channel closes.
         struct Bomb;
-        impl Engine for Bomb {
+        impl Backend for Bomb {
             fn infer(&self, _batch: Tensor5) -> Mat {
                 panic!("engine exploded mid-batch");
             }

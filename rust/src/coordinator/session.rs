@@ -1,0 +1,445 @@
+//! Streaming video sessions: the paper's actual mobile scenario —
+//! continuous camera frames, classified in (near) real time — as a
+//! first-class API instead of pre-chopped clip benches.
+//!
+//! A [`Session`] accepts frames incrementally ([`Session::push_frame`] /
+//! [`Session::push_frames`]), windows them into `window`-frame clips with
+//! a configurable `stride` (stride < window = overlapping windows, the
+//! dense-labeling mode; stride == window = back-to-back tiling; stride >
+//! window = subsampled), submits each full window through the existing
+//! batched [`Server`] pipeline, and yields per-window logits **in stream
+//! order** ([`Session::next_window`] / [`Session::try_next`]) even when
+//! serving workers complete batches out of order.
+//!
+//! Windowing is pure bookkeeping over the frame buffer: for stride ==
+//! window the submitted clips are byte-identical to pre-chopped clips of
+//! the same video, so the per-window logits are **bit-identical** to the
+//! batch path (asserted by `tests/session.rs`) — the streaming API adds
+//! zero numeric surface.
+
+use super::{Backend, Response, Server};
+use crate::anyhow;
+use crate::tensor::Tensor5;
+use crate::util::error::Result;
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::Receiver;
+
+/// Shape of the incoming stream and how to window it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionConfig {
+    /// One frame's (channels, height, width).
+    pub frame_dims: [usize; 3],
+    /// Frames per submitted clip (the paper's mobile pipelines run 16).
+    pub window: usize,
+    /// Frames the stream advances between windows (>= 1). Equal to
+    /// `window` tiles the stream; smaller overlaps; larger subsamples.
+    pub stride: usize,
+}
+
+impl SessionConfig {
+    /// Derive the config from a backend's native model geometry
+    /// (C, D, H, W): frames are (C, H, W), the window is the model's
+    /// clip depth D, stride defaults to the window (back-to-back tiling).
+    pub fn for_backend(backend: &dyn Backend) -> Result<SessionConfig> {
+        let [c, d, h, w] = backend
+            .input_dims()
+            .ok_or_else(|| anyhow!("backend has no fixed input geometry"))?;
+        Ok(SessionConfig { frame_dims: [c, h, w], window: d, stride: d })
+    }
+
+    /// Override the stride (fluent, for overlap/subsampling setups).
+    pub fn stride(mut self, stride: usize) -> Self {
+        self.stride = stride;
+        self
+    }
+
+    fn frame_len(&self) -> usize {
+        self.frame_dims.iter().product()
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.window == 0 || self.stride == 0 || self.frame_len() == 0 {
+            return Err(anyhow!(
+                "session config must have window >= 1, stride >= 1 and a \
+                 non-empty frame shape (got {self:?})"
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One classified window of the stream.
+#[derive(Debug, Clone)]
+pub struct WindowResult {
+    /// 0-based window index in stream order.
+    pub window: usize,
+    /// Stream index of the window's first frame (`window * stride`).
+    pub first_frame: usize,
+    pub logits: Vec<f32>,
+    pub predicted: usize,
+    /// Queueing + execution latency of the window's request.
+    pub latency_s: f64,
+}
+
+/// A live streaming session over a running [`Server`]. Borrows the server
+/// (many sessions per process are simply many servers today) and owns its
+/// response receiver, so results can only be consumed in stream order
+/// through the session.
+pub struct Session<'s> {
+    server: &'s Server,
+    responses: Receiver<Response>,
+    cfg: SessionConfig,
+    /// Frames waiting to complete a window (each `frame_len` long).
+    buf: VecDeque<Vec<f32>>,
+    /// Frames still to discard before buffering resumes (stride > window).
+    skip: usize,
+    /// Total frames pushed (for diagnostics; includes skipped ones).
+    frames_seen: usize,
+    /// Request ids of submitted windows, in stream order.
+    in_flight: VecDeque<u64>,
+    /// Responses that arrived ahead of the stream order.
+    ready: HashMap<u64, Response>,
+    submitted: usize,
+    delivered: usize,
+}
+
+impl<'s> Session<'s> {
+    /// Open a session over a standalone server. Takes ownership of the
+    /// server's response receiver — panics if it was already taken (or if
+    /// the server is router-shared), exactly like
+    /// [`Server::take_responses`].
+    pub fn new(server: &'s Server, cfg: SessionConfig) -> Result<Session<'s>> {
+        cfg.validate()?;
+        Ok(Session {
+            server,
+            responses: server.take_responses(),
+            cfg,
+            buf: VecDeque::new(),
+            skip: 0,
+            frames_seen: 0,
+            in_flight: VecDeque::new(),
+            ready: HashMap::new(),
+            submitted: 0,
+            delivered: 0,
+        })
+    }
+
+    pub fn config(&self) -> &SessionConfig {
+        &self.cfg
+    }
+
+    /// Push one (C, H, W) frame; returns how many windows this completed
+    /// and submitted (0 or 1 — more only for stride < 1 frame, which
+    /// cannot happen). Blocks under back-pressure like [`Server::submit`].
+    pub fn push_frame(&mut self, frame: &[f32]) -> Result<usize> {
+        let flen = self.cfg.frame_len();
+        if frame.len() != flen {
+            return Err(anyhow!(
+                "frame has {} elements, session expects {:?} = {flen}",
+                frame.len(),
+                self.cfg.frame_dims
+            ));
+        }
+        self.frames_seen += 1;
+        if self.skip > 0 {
+            self.skip -= 1;
+            return Ok(0);
+        }
+        self.buf.push_back(frame.to_vec());
+        self.submit_full_windows()
+    }
+
+    /// Push several concatenated frames (e.g. a whole camera buffer or a
+    /// decoded clip); returns how many windows were submitted.
+    pub fn push_frames(&mut self, frames: &[f32]) -> Result<usize> {
+        let flen = self.cfg.frame_len();
+        if frames.len() % flen != 0 {
+            return Err(anyhow!(
+                "frame buffer of {} elements is not a whole number of \
+                 {:?} = {flen} frames",
+                frames.len(),
+                self.cfg.frame_dims
+            ));
+        }
+        let mut windows = 0;
+        for frame in frames.chunks(flen) {
+            windows += self.push_frame(frame)?;
+        }
+        Ok(windows)
+    }
+
+    /// Feed a pre-packed NCDHW clip tensor frame by frame — convenience
+    /// for replaying clip workloads through the streaming path. The batch
+    /// dim must be 1 and (C, H, W) must match the session's frame shape.
+    /// Delegates to [`Self::push_frame`], so there is exactly one
+    /// windowing state machine.
+    pub fn push_clip(&mut self, clip: &Tensor5) -> Result<usize> {
+        let [b, c, d, h, w] = clip.dims;
+        let [fc, fh, fw] = self.cfg.frame_dims;
+        if b != 1 || c != fc || h != fh || w != fw {
+            return Err(anyhow!(
+                "clip dims {:?} do not stream into {:?} frames",
+                clip.dims,
+                self.cfg.frame_dims
+            ));
+        }
+        let hw = h * w;
+        let mut frame = vec![0.0f32; self.cfg.frame_len()];
+        let mut windows = 0;
+        for di in 0..d {
+            for ci in 0..c {
+                let src = clip.idx(0, ci, di, 0, 0);
+                frame[ci * hw..(ci + 1) * hw]
+                    .copy_from_slice(&clip.data[src..src + hw]);
+            }
+            windows += self.push_frame(&frame)?;
+        }
+        Ok(windows)
+    }
+
+    /// Windows submitted so far.
+    pub fn windows_submitted(&self) -> usize {
+        self.submitted
+    }
+
+    /// Submitted windows whose result has not been delivered yet.
+    pub fn pending(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Total frames pushed into the session.
+    pub fn frames_seen(&self) -> usize {
+        self.frames_seen
+    }
+
+    /// Next window result in stream order, blocking until it arrives.
+    /// Errors when nothing is in flight or the serving pipeline died.
+    pub fn next_window(&mut self) -> Result<WindowResult> {
+        let front = *self
+            .in_flight
+            .front()
+            .ok_or_else(|| anyhow!("no windows in flight"))?;
+        while !self.ready.contains_key(&front) {
+            let resp = self.responses.recv().map_err(|_| {
+                anyhow!("serving pipeline closed with windows in flight")
+            })?;
+            self.ready.insert(resp.id, resp);
+        }
+        Ok(self.deliver_front().expect("front response is ready"))
+    }
+
+    /// Next window result in stream order if it has already arrived;
+    /// `None` when the stream-order head is still executing (results that
+    /// arrived out of order are held back, never reordered).
+    pub fn try_next(&mut self) -> Option<WindowResult> {
+        // Drain whatever has arrived without blocking (a closed pipeline
+        // just stops producing; next() reports it as an error).
+        while let Ok(resp) = self.responses.try_recv() {
+            self.ready.insert(resp.id, resp);
+        }
+        self.deliver_front()
+    }
+
+    /// Drain every in-flight window (end of stream). Frames short of a
+    /// full window remain buffered — push more or drop the session.
+    pub fn finish(mut self) -> Result<Vec<WindowResult>> {
+        let mut out = Vec::with_capacity(self.in_flight.len());
+        while !self.in_flight.is_empty() {
+            out.push(self.next_window()?);
+        }
+        Ok(out)
+    }
+
+    fn deliver_front(&mut self) -> Option<WindowResult> {
+        let front = *self.in_flight.front()?;
+        let resp = self.ready.remove(&front)?;
+        self.in_flight.pop_front();
+        let window = self.delivered;
+        self.delivered += 1;
+        Some(WindowResult {
+            window,
+            first_frame: window * self.cfg.stride,
+            logits: resp.logits,
+            predicted: resp.predicted,
+            latency_s: resp.latency_s,
+        })
+    }
+
+    /// Submit every full window currently buffered, advancing by `stride`
+    /// frames per window. Before each (potentially blocking) submit,
+    /// already-arrived responses are drained non-blockingly into the
+    /// reorder buffer — without this, a caller that pushes a long stream
+    /// before consuming any results would deadlock the pipeline: the
+    /// bounded response channel fills, workers block delivering into it,
+    /// back-pressure reaches the ingress queue, and `submit` would wait
+    /// forever on capacity only this session can free.
+    fn submit_full_windows(&mut self) -> Result<usize> {
+        let mut submitted = 0;
+        while self.buf.len() >= self.cfg.window {
+            while let Ok(resp) = self.responses.try_recv() {
+                self.ready.insert(resp.id, resp);
+            }
+            let clip = self.assemble_window();
+            let id = self.server.submit(clip, None)?;
+            self.in_flight.push_back(id);
+            self.submitted += 1;
+            submitted += 1;
+            // Advance the stream: drop stride frames; whatever is not
+            // buffered yet is skipped as it arrives (stride > window).
+            let drop = self.cfg.stride.min(self.buf.len());
+            self.buf.drain(..drop);
+            self.skip += self.cfg.stride - drop;
+        }
+        Ok(submitted)
+    }
+
+    /// Pack the first `window` buffered frames into a (1, C, D, H, W)
+    /// clip, value for value — frame `d` becomes depth slice `d`.
+    fn assemble_window(&self) -> Tensor5 {
+        let [c, h, w] = self.cfg.frame_dims;
+        let d = self.cfg.window;
+        let hw = h * w;
+        let mut clip = Tensor5::zeros([1, c, d, h, w]);
+        for (di, frame) in self.buf.iter().take(d).enumerate() {
+            for ci in 0..c {
+                let dst = clip.idx(0, ci, di, 0, 0);
+                clip.data[dst..dst + hw]
+                    .copy_from_slice(&frame[ci * hw..(ci + 1) * hw]);
+            }
+        }
+        clip
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Server, ServerConfig};
+    use crate::tensor::Mat;
+    use std::sync::Arc;
+
+    /// Backend whose logit 0 is the clip mean — windows are then easy to
+    /// predict from the frames that went in.
+    struct MeanBackend;
+    impl Backend for MeanBackend {
+        fn infer(&self, batch: Tensor5) -> Mat {
+            let b = batch.dims[0];
+            let n = batch.len() / b;
+            let mut out = Mat::zeros(b, 2);
+            for i in 0..b {
+                *out.at_mut(i, 0) =
+                    batch.data[i * n..(i + 1) * n].iter().sum::<f32>() / n as f32;
+            }
+            out
+        }
+        fn name(&self) -> String {
+            "mean".into()
+        }
+    }
+
+    fn frame(val: f32, len: usize) -> Vec<f32> {
+        vec![val; len]
+    }
+
+    #[test]
+    fn windows_tile_and_arrive_in_order() {
+        let server = Server::start(Arc::new(MeanBackend), ServerConfig::default());
+        let cfg =
+            SessionConfig { frame_dims: [1, 2, 2], window: 4, stride: 4 };
+        let mut s = Session::new(&server, cfg).unwrap();
+        // 10 constant frames of value = frame index -> two full windows
+        // (frames 0..4 and 4..8), frames 8, 9 left buffered.
+        let mut submitted = 0;
+        for i in 0..10 {
+            submitted += s.push_frame(&frame(i as f32, 4)).unwrap();
+        }
+        assert_eq!(submitted, 2);
+        assert_eq!(s.pending(), 2);
+        let results = s.finish().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].window, 0);
+        assert_eq!(results[0].first_frame, 0);
+        assert_eq!(results[1].first_frame, 4);
+        // Window means: (0+1+2+3)/4 and (4+5+6+7)/4.
+        assert_eq!(results[0].logits[0], 1.5);
+        assert_eq!(results[1].logits[0], 5.5);
+        server.shutdown();
+    }
+
+    #[test]
+    fn overlapping_stride_reuses_frames() {
+        let server = Server::start(Arc::new(MeanBackend), ServerConfig::default());
+        let cfg = SessionConfig { frame_dims: [1, 1, 1], window: 4, stride: 2 };
+        let mut s = Session::new(&server, cfg).unwrap();
+        // 8 frames, window 4, stride 2 -> windows starting at 0, 2, 4.
+        let n = s
+            .push_frames(&(0..8).map(|i| i as f32).collect::<Vec<_>>())
+            .unwrap();
+        assert_eq!(n, 3);
+        let results = s.finish().unwrap();
+        let means: Vec<f32> = results.iter().map(|r| r.logits[0]).collect();
+        assert_eq!(means, vec![1.5, 3.5, 5.5]);
+        assert_eq!(results[2].first_frame, 4);
+        server.shutdown();
+    }
+
+    #[test]
+    fn subsampling_stride_skips_frames() {
+        let server = Server::start(Arc::new(MeanBackend), ServerConfig::default());
+        let cfg = SessionConfig { frame_dims: [1, 1, 1], window: 2, stride: 3 };
+        let mut s = Session::new(&server, cfg).unwrap();
+        // Windows: frames (0,1), skip 2, (3,4), skip 5, (6,7).
+        let n = s
+            .push_frames(&(0..8).map(|i| i as f32).collect::<Vec<_>>())
+            .unwrap();
+        assert_eq!(n, 3);
+        let means: Vec<f32> =
+            s.finish().unwrap().iter().map(|r| r.logits[0]).collect();
+        assert_eq!(means, vec![0.5, 3.5, 6.5]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn long_stream_without_consuming_does_not_deadlock() {
+        // Tiny pipeline (ingress 2 -> response cap 8): pushing far more
+        // windows than the response channel holds, without a single
+        // next_window()/try_next() call, must not wedge — the session
+        // drains arrived responses into its reorder buffer while
+        // submitting. Regression test for the push-only deadlock.
+        let server = Server::start(
+            Arc::new(MeanBackend),
+            ServerConfig::new()
+                .max_batch(1)
+                .max_wait(std::time::Duration::from_millis(1))
+                .queue_depth(2)
+                .workers(1),
+        );
+        let cfg = SessionConfig { frame_dims: [1, 1, 1], window: 1, stride: 1 };
+        let mut s = Session::new(&server, cfg).unwrap();
+        let n = 64;
+        for i in 0..n {
+            s.push_frame(&[i as f32]).unwrap();
+        }
+        assert_eq!(s.windows_submitted(), n);
+        let results = s.finish().unwrap();
+        assert_eq!(results.len(), n);
+        for (i, win) in results.iter().enumerate() {
+            assert_eq!(win.window, i, "stream order preserved");
+            assert_eq!(win.logits[0], i as f32);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_malformed_frames_and_configs() {
+        let server = Server::start(Arc::new(MeanBackend), ServerConfig::default());
+        let cfg = SessionConfig { frame_dims: [1, 2, 2], window: 0, stride: 1 };
+        assert!(Session::new(&server, cfg).is_err(), "window 0 must be rejected");
+        let cfg = SessionConfig { frame_dims: [1, 2, 2], window: 4, stride: 4 };
+        let mut s = Session::new(&server, cfg).unwrap();
+        assert!(s.push_frame(&[0.0; 3]).is_err(), "wrong frame length");
+        assert!(s.push_frames(&[0.0; 6]).is_err(), "ragged frame buffer");
+        assert!(s.next_window().is_err(), "nothing in flight");
+        server.shutdown();
+    }
+}

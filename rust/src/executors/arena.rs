@@ -15,8 +15,9 @@
 //! that run fused never touch the monolithic `(K, R)` patch matrix at all
 //! — each pool worker packs the patch panel it is about to consume into
 //! its own small panel slab ([`AccSlabs::with_panel`], `O(kc·rc)` for
-//! dense/filter plans, `O(K·rc)` for sparse plans), so per-layer scratch
-//! no longer scales with the output size R. [`ScratchArena::peak_bytes`]
+//! every plan kind: dense/filter stream contiguous kc slices, sparse
+//! plans gather their kept rows in kc slices), so per-layer scratch no
+//! longer scales with the output size R. [`ScratchArena::peak_bytes`]
 //! reports the resulting high-water mark (capacities only grow, so the
 //! current capacity *is* the peak) — the number the gemm-kernels bench
 //! publishes as `*_peak_scratch_bytes`.

@@ -7,10 +7,11 @@
 //! * [`EngineKind::Rt3d`]     — blocked micro-kernel, dense or sparse plans
 
 use crate::codegen::{self, tuner::TuneDb, CompiledConv, ConvKind, KernelArch};
+use crate::executors::options::EngineOptions;
 use crate::executors::{self, gemm, naive, ScratchArena};
 use crate::model::{Layer, Model};
 use crate::tensor::{Mat, Tensor5};
-use crate::util::pool::ThreadPool;
+use crate::util::pool::{PoolMode, ThreadPool};
 use std::sync::{Arc, Mutex};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,13 +53,28 @@ pub struct EngineCore {
 impl EngineCore {
     /// Compile a model into the shared core (plans prepacked, tune DB
     /// applied). `use_sparsity` activates the compacted sparse plans (only
-    /// meaningful for [`EngineKind::Rt3d`]).
+    /// meaningful for [`EngineKind::Rt3d`]). Loads the default tuning
+    /// database (`RT3D_TUNE_DB` > `<crate>/tune_db.json`); the builder
+    /// resolves an explicit path first and calls
+    /// [`Self::compile_with_db`] instead.
     pub fn compile(model: &Model, kind: EngineKind, use_sparsity: bool) -> Self {
+        Self::compile_with_db(model, kind, use_sparsity, TuneDb::load_default().as_ref())
+    }
+
+    /// [`Self::compile`] with an explicit (already loaded) tuning
+    /// database; `None` compiles untuned.
+    pub fn compile_with_db(
+        model: &Model,
+        kind: EngineKind,
+        use_sparsity: bool,
+        db: Option<&TuneDb>,
+    ) -> Self {
         let mut compiled =
             codegen::compile_model(model, use_sparsity && kind == EngineKind::Rt3d);
         // Apply the persisted tuning database (kernel variant x tile x
-        // per-layer worker cap) when one exists — see `codegen::tuner`.
-        if let Some(db) = TuneDb::load_default() {
+        // per-layer worker cap x fused flag) when one exists — see
+        // `codegen::tuner`.
+        if let Some(db) = db {
             for cc in compiled.iter_mut() {
                 db.apply(cc);
             }
@@ -92,18 +108,21 @@ impl EngineCore {
     /// A fresh scratch arena pre-sized to the largest footprint across
     /// layers at the native single-clip resolution; larger batches grow
     /// the buffers once on first use. Layers that will run fused (per the
-    /// `RT3D_FUSE`/tuned/heuristic resolution) reserve their per-worker
-    /// panel slabs instead of the monolithic `(K, R)` patch matrix — on a
-    /// model whose big layers all fuse, the patch matrix is never
-    /// allocated at all. (A later handle-level `set_fused` override can
-    /// still grow the other buffer set once, on first forward.)
-    fn presized_arena(&self, workers: usize) -> ScratchArena {
+    /// handle's force, else the `RT3D_FUSE`/tuned/heuristic resolution)
+    /// reserve their per-worker panel slabs instead of the monolithic
+    /// `(K, R)` patch matrix — on a model whose big layers all fuse, the
+    /// patch matrix is never allocated at all. (A later handle-level
+    /// `set_fused` flip can still grow the other buffer set once, on
+    /// first forward.)
+    fn presized_arena(&self, workers: usize, fuse_forced: Option<bool>) -> ScratchArena {
         let mut arena = ScratchArena::new(workers);
         let (mut pmax, mut omax, mut panel_max) = (0usize, 0usize, 0usize);
         for cc in self.convs.values() {
             let (p, o) = cc.scratch_footprint(1);
             omax = omax.max(o);
-            if self.kind == EngineKind::Rt3d && cc.bind(cc.geom.in_spatial).fused {
+            let fused =
+                cc.bind_full(cc.geom.in_spatial, None, fuse_forced).fused;
+            if self.kind == EngineKind::Rt3d && fused {
                 panel_max = panel_max.max(cc.panel_footprint());
             } else {
                 pmax = pmax.max(p);
@@ -113,6 +132,36 @@ impl EngineCore {
         arena.slabs.reserve_panels(panel_max);
         arena
     }
+
+    /// Mint an execution handle over a (shared) compiled core with the
+    /// default execution configuration at `threads` width — the
+    /// non-deprecated successor of `NativeEngine::from_core`. Handles over
+    /// one core share the packed weights; each owns its pool and arena.
+    pub fn handle(core: &Arc<EngineCore>, threads: usize) -> NativeEngine {
+        NativeEngine::over_core(
+            core.clone(),
+            ExecConfig {
+                threads,
+                pool_mode: PoolMode::from_env(),
+                spin: ThreadPool::env_spin(),
+                kernel: None,
+                fused: None,
+            },
+        )
+    }
+}
+
+/// Per-handle execution configuration, fully resolved (the builder's
+/// output once the core is compiled; forks copy it from the source
+/// handle).
+struct ExecConfig {
+    threads: usize,
+    pool_mode: PoolMode,
+    spin: usize,
+    /// `Some` = force every layer onto this kernel variant.
+    kernel: Option<KernelArch>,
+    /// `Some` = force every conv fused/materialized.
+    fused: Option<bool>,
 }
 
 /// A ready-to-run native model instance: a shared compiled core plus the
@@ -136,10 +185,10 @@ pub struct NativeEngine {
     /// per-layer choices, via the call binding (the shared core is never
     /// mutated).
     kernel_forced: bool,
-    /// Set by [`Self::set_fused`]: forces every conv layer onto the fused
-    /// or materialized path via the call binding (handle-local, like the
-    /// kernel force). `None` = per-layer resolution; `RT3D_FUSE=on|off`
-    /// still outranks this.
+    /// Set by the builder's `fused(..)` or [`Self::set_fused`]: forces
+    /// every conv layer onto the fused or materialized path via the call
+    /// binding (handle-local, like the kernel force). `None` = env
+    /// (`RT3D_FUSE`) > tuned > heuristic per-layer resolution.
     fuse_forced: Option<bool>,
     /// Reused im2col/GEMM/accumulator/activation buffers — the steady
     /// state forward allocates nothing but the returned logits. Behind a
@@ -149,38 +198,107 @@ pub struct NativeEngine {
 }
 
 impl NativeEngine {
+    /// The typed front door: a fluent builder over [`EngineOptions`].
+    /// Every knob resolves **explicit builder value > `RT3D_*` env >
+    /// tuned / heuristic default** (see `executors::options`).
+    ///
+    /// ```text
+    /// let engine = NativeEngine::builder(&model)
+    ///     .sparsity(true)      // compacted KGS plans
+    ///     .threads(4)          // else RT3D_THREADS, else all cores
+    ///     .build();
+    /// ```
+    pub fn builder(model: &Model) -> EngineBuilder<'_> {
+        EngineBuilder { model, opts: EngineOptions::default() }
+    }
+
+    /// Build straight from an [`EngineOptions`] value (the builder's
+    /// non-fluent twin, for config that arrives as data).
+    pub fn with_options(model: &Model, opts: &EngineOptions) -> Self {
+        let r = opts.resolve();
+        let core = Arc::new(EngineCore::compile_with_db(
+            model,
+            r.kind,
+            r.sparsity,
+            r.tune_db.as_ref(),
+        ));
+        Self::over_core(
+            core,
+            ExecConfig {
+                threads: r.threads,
+                pool_mode: r.pool_mode,
+                spin: r.spin,
+                kernel: r.kernel,
+                fused: r.fused,
+            },
+        )
+    }
+
     /// Build from a loaded model with the thread count from `RT3D_THREADS`
     /// (default: all cores). `use_sparsity` activates the compacted sparse
     /// plans (only meaningful for `EngineKind::Rt3d`).
+    #[deprecated(note = "use NativeEngine::builder(&model).kind(..).sparsity(..)")]
     pub fn new(model: &Model, kind: EngineKind, use_sparsity: bool) -> Self {
-        Self::with_threads(model, kind, use_sparsity, ThreadPool::from_env().threads())
+        Self::builder(model).kind(kind).sparsity(use_sparsity).build()
     }
 
     /// Build with an explicit executor thread count.
+    #[deprecated(note = "use NativeEngine::builder(&model)...threads(n)")]
     pub fn with_threads(
         model: &Model,
         kind: EngineKind,
         use_sparsity: bool,
         threads: usize,
     ) -> Self {
-        Self::from_core(Arc::new(EngineCore::compile(model, kind, use_sparsity)), threads)
+        Self::builder(model)
+            .kind(kind)
+            .sparsity(use_sparsity)
+            .threads(threads)
+            .build()
     }
 
     /// Build an execution handle over an existing (possibly shared)
     /// compiled core.
+    #[deprecated(note = "use EngineCore::handle(&core, threads)")]
     pub fn from_core(core: Arc<EngineCore>, threads: usize) -> Self {
-        let pool = ThreadPool::new(threads);
-        let arena = core.presized_arena(pool.threads());
+        EngineCore::handle(&core, threads)
+    }
+
+    /// The one real handle constructor: every public construction path
+    /// (builder, core handle, fork, deprecated shims) funnels here.
+    fn over_core(core: Arc<EngineCore>, exec: ExecConfig) -> Self {
+        let pool =
+            ThreadPool::with_config(exec.threads, exec.pool_mode, exec.spin);
+        let arena = core.presized_arena(pool.threads(), exec.fused);
+        if let Some(k) = exec.kernel {
+            assert!(
+                k.supported(),
+                "kernel {} is not executable on this machine",
+                k.name()
+            );
+        }
         Self {
             kind: core.kind,
             core,
             profile: std::sync::atomic::AtomicBool::new(false),
             timings: std::sync::Mutex::new(Vec::new()),
             pool,
-            kernel: KernelArch::active(),
-            kernel_forced: false,
-            fuse_forced: None,
+            kernel: exec.kernel.unwrap_or_else(KernelArch::active),
+            kernel_forced: exec.kernel.is_some(),
+            fuse_forced: exec.fused,
             arena: Mutex::new(arena),
+        }
+    }
+
+    /// This handle's execution config, for forks (same core, same forces,
+    /// possibly different width).
+    fn exec_config(&self, threads: usize) -> ExecConfig {
+        ExecConfig {
+            threads,
+            pool_mode: self.pool.mode(),
+            spin: self.pool.spin(),
+            kernel: self.kernel_forced.then_some(self.kernel),
+            fused: self.fuse_forced,
         }
     }
 
@@ -190,17 +308,20 @@ impl NativeEngine {
     /// This is what lets N server workers run concurrently without cloning
     /// weights and without contending on one scratch-arena mutex.
     pub fn fork(&self) -> NativeEngine {
-        self.fork_with_threads(self.pool.threads())
+        self.forked(self.pool.threads())
     }
 
     /// [`Self::fork`] with a different executor thread count per handle
-    /// (e.g. split a machine's cores evenly across serving workers).
+    /// (e.g. split a machine's cores evenly across serving workers); the
+    /// kernel/fused forces and pool mode carry over.
+    pub fn forked(&self, threads: usize) -> NativeEngine {
+        Self::over_core(self.core.clone(), self.exec_config(threads))
+    }
+
+    /// Renamed to [`Self::forked`].
+    #[deprecated(note = "renamed to NativeEngine::forked(threads)")]
     pub fn fork_with_threads(&self, threads: usize) -> NativeEngine {
-        let mut forked = Self::from_core(self.core.clone(), threads);
-        forked.kernel = self.kernel;
-        forked.kernel_forced = self.kernel_forced;
-        forked.fuse_forced = self.fuse_forced;
-        forked
+        self.forked(threads)
     }
 
     /// The shared compiled core (plans + weights) behind this handle.
@@ -243,11 +364,12 @@ impl NativeEngine {
 
     /// Force every conv layer onto the fused (`true`) or materialized
     /// (`false`) execution path — the fused↔materialized differential
-    /// hook for tests and benches. Handle-local like [`Self::set_kernel`]:
-    /// the shared core is never mutated, so other forks keep their own
-    /// per-layer resolution. The process-wide `RT3D_FUSE=on|off` policy
-    /// outranks this. Outputs are bit-identical either way; only the
-    /// scratch shape and memory traffic change.
+    /// hook for tests and benches, and the post-hoc twin of the builder's
+    /// `fused(..)`. Handle-local like [`Self::set_kernel`]: the shared
+    /// core is never mutated, so other forks keep their own per-layer
+    /// resolution. As an explicit option it outranks the `RT3D_FUSE`
+    /// policy ([`CompiledConv::resolve_fused`]). Outputs are bit-identical
+    /// either way; only the scratch shape and memory traffic change.
     pub fn set_fused(&mut self, fused: bool) {
         self.fuse_forced = Some(fused);
     }
@@ -512,6 +634,81 @@ impl NativeEngine {
                 t
             }
         }
+    }
+}
+
+/// Fluent construction over [`EngineOptions`] — see
+/// [`NativeEngine::builder`]. Unset knobs fall through to the `RT3D_*`
+/// environment, then the tuned / heuristic defaults.
+pub struct EngineBuilder<'m> {
+    model: &'m Model,
+    opts: EngineOptions,
+}
+
+impl EngineBuilder<'_> {
+    /// Execution quality level (default [`EngineKind::Rt3d`]).
+    pub fn kind(mut self, kind: EngineKind) -> Self {
+        self.opts.kind = Some(kind);
+        self
+    }
+
+    /// Activate the compacted sparse plans (KGS / Vanilla / Filter, per
+    /// the manifest's scheme).
+    pub fn sparsity(mut self, sparsity: bool) -> Self {
+        self.opts.sparsity = sparsity;
+        self
+    }
+
+    /// Executor worker threads for this handle (overrides `RT3D_THREADS`).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.opts.threads = Some(threads);
+        self
+    }
+
+    /// Force every layer (and the dense head) onto one kernel variant —
+    /// the builder form of the SIMD↔scalar differential hook. Panics at
+    /// [`Self::build`] if this machine cannot execute the variant.
+    pub fn kernel(mut self, kernel: KernelArch) -> Self {
+        self.opts.kernel = Some(kernel);
+        self
+    }
+
+    /// Force every conv fused (`true`) or materialized (`false`); outputs
+    /// are bit-identical either way — only scratch shape and memory
+    /// traffic change.
+    pub fn fused(mut self, fused: bool) -> Self {
+        self.opts.fused = Some(fused);
+        self
+    }
+
+    /// Worker pool mode (overrides `RT3D_POOL`).
+    pub fn pool_mode(mut self, mode: PoolMode) -> Self {
+        self.opts.pool_mode = Some(mode);
+        self
+    }
+
+    /// Pre-park spin budget (overrides `RT3D_SPIN`; 0 disables).
+    pub fn spin(mut self, spin: usize) -> Self {
+        self.opts.spin = Some(spin);
+        self
+    }
+
+    /// Tuning-database path (overrides `RT3D_TUNE_DB`); a missing file
+    /// means "untuned", never an error.
+    pub fn tune_db(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.opts.tune_db = Some(path.into());
+        self
+    }
+
+    /// The accumulated options (e.g. to stash in a config or log).
+    pub fn options(&self) -> &EngineOptions {
+        &self.opts
+    }
+
+    /// Resolve the options (builder > env > default), compile the model
+    /// into a shared [`EngineCore`] and mint the first handle over it.
+    pub fn build(self) -> NativeEngine {
+        NativeEngine::with_options(self.model, &self.opts)
     }
 }
 

@@ -32,10 +32,11 @@
 //!   *rows* (mr panels / row buckets);
 //! * **fused implicit GEMM** (`*_fused`) — never materializes that
 //!   matrix: parallel over rc output-*column* blocks, each task packing
-//!   the `(kc, rc)` (dense/filter) or `(K, rc)` (sparse) patch panel it
-//!   needs into its worker's panel slab right before consuming it. Same
-//!   per-element K accumulation order, so fused ↔ materialized outputs
-//!   are bit-identical for a given tile.
+//!   the `(kc, rc)`-bounded patch panel it needs (contiguous kc slices
+//!   for dense/filter; kc slices of each group's gathered kept rows for
+//!   sparse) into its worker's panel slab right before consuming it.
+//!   Same per-element K accumulation order, so fused ↔ materialized
+//!   outputs are bit-identical for a given tile.
 //!
 //! Output contract: `gemm_dense*` / `gemm_filter*` **own zero-init** of
 //! every output row they cover (the first K block assigns, later blocks
@@ -46,7 +47,7 @@
 
 use crate::codegen::{GemmTile, KernelArch, KgsGroup, PackedDense};
 use crate::executors::arena::AccSlabs;
-use crate::executors::pack_patch_panel;
+use crate::executors::{pack_patch_panel, pack_patch_rows};
 use crate::tensor::{Conv3dGeometry, Mat, Tensor5};
 use crate::util::pool::{SendPtr, ThreadPool};
 
@@ -616,13 +617,18 @@ pub fn gemm_filter_fused(
     scatter_filter_rows(rows, &compact, out);
 }
 
-/// Fused sparse (KGS/Vanilla) conv: each rc column block packs the full
-/// `(K, rc)` patch panel once (gathered columns span all of K, so there
-/// is no kc slicing here) and replays every compacted panel in the serial
-/// flat order — per output element the group accumulation order matches
-/// the materialized bucket schedule exactly. Owns init of `out` (sparse
-/// panels may not cover every row). `max_m_eff` sizes the accumulator
-/// (`PanelSchedule::max_m_eff`).
+/// Fused sparse (KGS/Vanilla) conv: each rc column block replays every
+/// compacted panel in the serial flat order, gathering each group's kept
+/// patch rows into the worker's panel slab in **kc-sized slices**
+/// ([`pack_patch_rows`]) — so the sparse fused slab is bounded by the
+/// same `(kc, rc)` block as the dense path, not the full `(K, rc)`
+/// gather it used to pack. A group's whole partial sum accumulates in
+/// the worker's scratch (columns in stored order, slices ascending —
+/// the exact `panel_block` element order) and folds into the output
+/// once per group, which is precisely the materialized bucket schedule's
+/// per-element order: fused ↔ materialized stay bit-identical. Owns init
+/// of `out` (sparse panels may not cover every row). `max_m_eff` sizes
+/// the accumulator (`PanelSchedule::max_m_eff`).
 pub fn gemm_panels_fused(
     groups: &[KgsGroup],
     max_m_eff: usize,
@@ -637,9 +643,9 @@ pub fn gemm_panels_fused(
     if r == 0 || m == 0 {
         return;
     }
-    let k = g.cols();
     let cols = out.cols;
     let rc = ctx.tile.rc.max(1);
+    let kc = ctx.tile.kc.max(1);
     let tasks = r.div_ceil(rc);
     let scratch_len = panel_scratch_len(max_m_eff, ctx.tile, r);
     let kernel = ctx.kernel;
@@ -649,41 +655,98 @@ pub fn gemm_panels_fused(
         let r0 = t * rc;
         let r1 = (r0 + rc).min(r);
         let span = r1 - r0;
-        slabs.with_panel(worker, k, span, |panel| {
-            pack_patch_panel(x, g, 0, k, r0, r1, panel);
-            slabs.with_slab(worker, scratch_len, |scratch| {
-                // Zero this task's column block first — same init the
-                // materialized path does with out.fill(0.0), split by
-                // column ownership.
-                for mi in 0..m {
-                    // Safety: disjoint column blocks, see above.
+        slabs.with_slab(worker, scratch_len, |scratch| {
+            // Zero this task's column block first — same init the
+            // materialized path does with out.fill(0.0), split by
+            // column ownership.
+            for mi in 0..m {
+                // Safety: this task owns columns r0..r1 of every output
+                // row; tasks never alias.
+                let orow = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        base.get().add(mi * cols + r0),
+                        span,
+                    )
+                };
+                orow.fill(0.0);
+            }
+            for grp in groups {
+                let ncols = grp.cols.len();
+                if ncols == 0 {
+                    continue; // adds nothing; materialized path agrees
+                }
+                let acc_len = grp.m_eff * span;
+                scratch[..acc_len].fill(0.0);
+                // Stream the group's gathered columns in kc-sized slices
+                // through the (kc, rc)-bounded panel slab. Slices ascend,
+                // so the per-element accumulation order is untouched.
+                for j0 in (0..ncols).step_by(kc) {
+                    let j1 = (j0 + kc).min(ncols);
+                    slabs.with_panel(worker, j1 - j0, span, |panel| {
+                        pack_patch_rows(x, g, &grp.cols[j0..j1], r0, r1, panel);
+                        panel_block_gathered(
+                            kernel,
+                            grp,
+                            j0,
+                            j1,
+                            panel,
+                            span,
+                            &mut scratch[..acc_len],
+                        );
+                    });
+                }
+                for i in 0..grp.m_eff {
                     let orow = unsafe {
                         std::slice::from_raw_parts_mut(
-                            base.get().add(mi * cols + r0),
+                            base.get().add((grp.m0 + i) * cols + r0),
                             span,
                         )
                     };
-                    orow.fill(0.0);
-                }
-                for grp in groups {
-                    panel_block(kernel, grp, panel, 0, span, scratch);
-                    for i in 0..grp.m_eff {
-                        let orow = unsafe {
-                            std::slice::from_raw_parts_mut(
-                                base.get().add((grp.m0 + i) * cols + r0),
-                                span,
-                            )
-                        };
-                        for (ov, av) in
-                            orow.iter_mut().zip(&scratch[i * span..(i + 1) * span])
-                        {
-                            *ov += av;
-                        }
+                    for (ov, av) in
+                        orow.iter_mut().zip(&scratch[i * span..(i + 1) * span])
+                    {
+                        *ov += av;
                     }
                 }
-            });
+            }
         });
     });
+}
+
+/// Inner block of the kc-sliced sparse fused path: accumulate columns
+/// `j0..j1` of `grp` into `acc` (m_eff, span), reading pre-gathered patch
+/// rows from `panel` (row `jj` = patch row `grp.cols[j0 + jj]` restricted
+/// to the task's column window). Unlike [`panel_block`] this does **not**
+/// zero `acc` — the caller zeroes once per group and the slices
+/// accumulate — and the (j ascending, i inner, skip zero weights) walk
+/// matches [`panel_block`] element for element, which is what keeps the
+/// sliced path bit-identical to the materialized one.
+fn panel_block_gathered(
+    kernel: KernelArch,
+    grp: &KgsGroup,
+    j0: usize,
+    j1: usize,
+    panel: &Mat,
+    span: usize,
+    acc: &mut [f32],
+) {
+    let m_eff = grp.m_eff;
+    let ncols = grp.cols.len();
+    let cm = !grp.panel_cm.is_empty();
+    for (jj, j) in (j0..j1).enumerate() {
+        let prow = &panel.row(jj)[..span];
+        for i in 0..m_eff {
+            let w = if cm {
+                grp.panel_cm[j * m_eff + i]
+            } else {
+                grp.panel[i * ncols + j]
+            };
+            if w == 0.0 {
+                continue;
+            }
+            madd_span_dispatch(kernel, &mut acc[i * span..(i + 1) * span], prow, w);
+        }
+    }
 }
 
 // --------------------------------------------------------------------------
@@ -842,7 +905,7 @@ pub fn panel_scratch_len(m_eff: usize, tile: GemmTile, r: usize) -> usize {
 
 /// Compacted sparse panel (KGS or Vanilla kept-group) on the caller's own
 /// output matrix, using a global slab. The engine path instead buckets
-/// panels by output-row range and calls [`gemm_panel_core`] from pool
+/// panels by output-row range and calls `gemm_panel_core` from pool
 /// tasks (see `executors::run_conv_bound`).
 pub fn gemm_panel(grp: &KgsGroup, patches_t: &Mat, out: &mut Mat, tile: GemmTile) {
     let cols = out.cols;

@@ -13,11 +13,13 @@
 //!   [`run_conv_bound`]) and the **fused implicit-GEMM** path
 //!   ([`run_conv_fused`]), which tiles the output into rc column blocks
 //!   and has each pool task pack only the `(kc, rc)` patch panel it is
-//!   about to consume ([`pack_patch_panel`]) into a small per-worker
-//!   L2-resident slab — the paper's cache-tiled generated code, which
-//!   never round-trips a full patch matrix through DRAM. Both paths are
-//!   bit-identical for a given tile; `RT3D_FUSE=off` keeps the
-//!   materialized path as the differential baseline.
+//!   about to consume (contiguous rows via [`pack_patch_panel`] for
+//!   dense/filter plans; kc-sized slices of each group's *gathered* kept
+//!   rows via [`pack_patch_rows`] for KGS/Vanilla) into a small
+//!   per-worker L2-resident slab — the paper's cache-tiled generated
+//!   code, which never round-trips a full patch matrix through DRAM.
+//!   Both paths are bit-identical for a given tile; `RT3D_FUSE=off`
+//!   keeps the materialized path as the differential baseline.
 //! * [`arena`] — pre-sized scratch buffers (allocation-free hot path).
 //! * [`engine`] — whole-model interpreter over the manifest IR, running
 //!   im2col and GEMM on its own thread pool (`RT3D_THREADS`). The compiled
@@ -29,9 +31,12 @@ pub mod arena;
 pub mod engine;
 pub mod gemm;
 pub mod naive;
+pub mod options;
 
 pub use arena::{AccSlabs, BufPool, ScratchArena};
-pub use engine::{EngineCore, EngineKind, LayerTiming, NativeEngine};
+pub use engine::{EngineBuilder, EngineCore, EngineKind, LayerTiming, NativeEngine};
+pub use naive::NaiveBackend;
+pub use options::{EngineOptions, ResolvedOptions};
 
 use crate::codegen::{CompiledConv, ConvCall, ConvKind, KgsGroup, PanelSchedule};
 use crate::tensor::{Mat, Tensor5};
@@ -166,72 +171,116 @@ pub fn pack_patch_panel(
     r1: usize,
     out: &mut Mat,
 ) {
-    let [b, c, di, hi, wi] = x.dims;
+    let span = r1 - r0;
+    assert_eq!((out.rows, out.cols), (k1 - k0, span), "panel shape");
+    debug_assert!(k1 <= g.cols() && r1 <= g.rows(x.dims[0]));
+    if span == 0 {
+        return;
+    }
+    for row_i in k0..k1 {
+        pack_patch_row_span(x, g, row_i, r0, r1, out.row_mut(row_i - k0));
+    }
+}
+
+/// Gathered-row sibling of [`pack_patch_panel`]: pack an arbitrary list of
+/// virtual patch rows (`rows[j]`, the sparse plans' per-group column
+/// lists) restricted to output positions `r0..r1` into `out` (shape
+/// `(rows.len(), r1-r0)`). Row `j` of the panel equals row `rows[j]` of
+/// the materialized matrix, bit for bit — this is what lets the sparse
+/// fused path stream kc-sized slices of a group's *kept* rows instead of
+/// packing the full `(K, rc)` block.
+pub fn pack_patch_rows(
+    x: &Tensor5,
+    g: &crate::tensor::Conv3dGeometry,
+    rows: &[u32],
+    r0: usize,
+    r1: usize,
+    out: &mut Mat,
+) {
+    let span = r1 - r0;
+    assert_eq!((out.rows, out.cols), (rows.len(), span), "panel shape");
+    debug_assert!(r1 <= g.rows(x.dims[0]));
+    if span == 0 {
+        return;
+    }
+    for (j, &row_i) in rows.iter().enumerate() {
+        debug_assert!((row_i as usize) < g.cols(), "gathered row escapes K");
+        pack_patch_row_span(x, g, row_i as usize, r0, r1, out.row_mut(j));
+    }
+}
+
+/// Pack one virtual transposed-im2col row (`row_i` = the `(channel, tap)`
+/// index of [`im2col_t_into`]) restricted to output columns `r0..r1` into
+/// `row`, forming the activation patch on the fly. Every element is either
+/// a copy of an input element or a padding zero, identical to the
+/// corresponding slice of the materialized matrix. Serial — runs inside a
+/// pool task that owns the `r0..r1` column block.
+fn pack_patch_row_span(
+    x: &Tensor5,
+    g: &crate::tensor::Conv3dGeometry,
+    row_i: usize,
+    r0: usize,
+    r1: usize,
+    row: &mut [f32],
+) {
+    let [_b, c, di, hi, wi] = x.dims;
     debug_assert_eq!(c, g.in_ch);
     let [kd, kh, kw] = g.kernel;
     let [sd, sh, sw] = g.stride;
     let [pd, ph, pw] = g.padding;
     let [od, oh, ow] = g.out_spatial();
-    let span = r1 - r0;
-    assert_eq!((out.rows, out.cols), (k1 - k0, span), "panel shape");
-    debug_assert!(k1 <= g.cols() && r1 <= b * od * oh * ow);
-    if span == 0 {
-        return;
-    }
+    debug_assert_eq!(row.len(), r1 - r0);
     let khw = kh * kw;
     let ks = kd * khw;
     // Column index r decomposes as band * ow + xo with band = (n*od+zo)*oh
     // + yo; only bands intersecting [r0, r1) are walked.
     let band0 = r0 / ow;
     let band1 = (r1 - 1) / ow;
-    for row_i in k0..k1 {
-        let row = out.row_mut(row_i - k0);
-        row.fill(0.0);
-        let ci = row_i / ks;
-        let loc = row_i % ks;
-        let dz = loc / khw;
-        let dy = (loc % khw) / kw;
-        let dx = loc % kw;
-        for band in band0..=band1 {
-            let yo = band % oh;
-            let zo = (band / oh) % od;
-            let n = band / (oh * od);
-            let z = (zo * sd + dz) as isize - pd as isize;
-            if z < 0 || z >= di as isize {
-                continue;
+    row.fill(0.0);
+    let ci = row_i / ks;
+    let loc = row_i % ks;
+    let dz = loc / khw;
+    let dy = (loc % khw) / kw;
+    let dx = loc % kw;
+    for band in band0..=band1 {
+        let yo = band % oh;
+        let zo = (band / oh) % od;
+        let n = band / (oh * od);
+        let z = (zo * sd + dz) as isize - pd as isize;
+        if z < 0 || z >= di as isize {
+            continue;
+        }
+        let y = (yo * sh + dy) as isize - ph as isize;
+        if y < 0 || y >= hi as isize {
+            continue;
+        }
+        let rbase = band * ow;
+        // This band's xo range clipped to the panel's column window.
+        let xo_lo = r0.saturating_sub(rbase);
+        let xo_hi = (r1 - rbase).min(ow);
+        let src = x.idx(n, ci, z as usize, y as usize, 0);
+        if sw == 1 {
+            // Contiguous span copy (same clipping as im2col_t_into,
+            // intersected with the column window).
+            let x0 = dx as isize - pw as isize;
+            let lo = xo_lo.max((-x0).max(0) as usize);
+            let hi_x =
+                xo_hi.min(((wi as isize - x0).min(ow as isize)).max(0) as usize);
+            if lo < hi_x {
+                // Source offset stays in isize until the (guaranteed
+                // non-negative) bound is added — src + x0 alone can be
+                // transiently negative at the left padding edge.
+                let s0 = src as isize + x0;
+                let (src_lo, src_hi) =
+                    ((s0 + lo as isize) as usize, (s0 + hi_x as isize) as usize);
+                row[rbase + lo - r0..rbase + hi_x - r0]
+                    .copy_from_slice(&x.data[src_lo..src_hi]);
             }
-            let y = (yo * sh + dy) as isize - ph as isize;
-            if y < 0 || y >= hi as isize {
-                continue;
-            }
-            let rbase = band * ow;
-            // This band's xo range clipped to the panel's column window.
-            let xo_lo = r0.saturating_sub(rbase);
-            let xo_hi = (r1 - rbase).min(ow);
-            let src = x.idx(n, ci, z as usize, y as usize, 0);
-            if sw == 1 {
-                // Contiguous span copy (same clipping as im2col_t_into,
-                // intersected with the column window).
-                let x0 = dx as isize - pw as isize;
-                let lo = xo_lo.max((-x0).max(0) as usize);
-                let hi_x = xo_hi
-                    .min(((wi as isize - x0).min(ow as isize)).max(0) as usize);
-                if lo < hi_x {
-                    // Source offset stays in isize until the (guaranteed
-                    // non-negative) bound is added — src + x0 alone can be
-                    // transiently negative at the left padding edge.
-                    let s0 = src as isize + x0;
-                    let (src_lo, src_hi) =
-                        ((s0 + lo as isize) as usize, (s0 + hi_x as isize) as usize);
-                    row[rbase + lo - r0..rbase + hi_x - r0]
-                        .copy_from_slice(&x.data[src_lo..src_hi]);
-                }
-            } else {
-                for xo in xo_lo..xo_hi {
-                    let xx = (xo * sw + dx) as isize - pw as isize;
-                    if xx >= 0 && xx < wi as isize {
-                        row[rbase + xo - r0] = x.data[src + xx as usize];
-                    }
+        } else {
+            for xo in xo_lo..xo_hi {
+                let xx = (xo * sw + dx) as isize - pw as isize;
+                if xx >= 0 && xx < wi as isize {
+                    row[rbase + xo - r0] = x.data[src + xx as usize];
                 }
             }
         }
@@ -538,6 +587,38 @@ mod tests {
                         "stride {stride:?} pad {padding:?} k{k0}..{k1} r{r0}..{r1} row {ki}"
                     );
                 }
+            }
+        }
+    }
+
+    /// The gathered packer must reproduce the exact rows a sparse group's
+    /// column list names — arbitrary order, duplicates included.
+    #[test]
+    fn pack_patch_rows_matches_materialized_gather() {
+        let g = Conv3dGeometry {
+            in_ch: 3,
+            out_ch: 2,
+            kernel: [3, 3, 3],
+            stride: [1, 1, 1],
+            padding: [1, 1, 1],
+            in_spatial: [3, 4, 5],
+        };
+        let x = Tensor5::random([2, 3, 3, 4, 5], 307);
+        let full = im2col_t(&x, &g);
+        let (k, r) = (full.rows, full.cols);
+        // A scattered, non-contiguous gather list, like a KGS group's cols
+        // (plus a duplicate, which the packer must simply copy twice).
+        let rows: [u32; 8] = [0, 3, 7, 7, (k - 1) as u32, (k / 2) as u32, 11, 2];
+        for (r0, r1) in [(0usize, r), (5, 23), (r - 1, r), (0, 1)] {
+            let mut panel = Mat::zeros(rows.len(), r1 - r0);
+            panel.data.fill(f32::NAN);
+            pack_patch_rows(&x, &g, &rows, r0, r1, &mut panel);
+            for (j, &src) in rows.iter().enumerate() {
+                assert_eq!(
+                    &panel.row(j)[..],
+                    &full.row(src as usize)[r0..r1],
+                    "row {j} (patch row {src}) window {r0}..{r1}"
+                );
             }
         }
     }

@@ -5,7 +5,64 @@
 //! and the [`super::gemm`] path reproduces the RT3D-dense-vs-PyTorch rows
 //! of Table 2.
 
-use crate::tensor::{Conv3dGeometry, Tensor5};
+use crate::coordinator::Backend;
+use crate::executors::{EngineKind, NativeEngine};
+use crate::model::Model;
+use crate::tensor::{Conv3dGeometry, Mat, Tensor5};
+use std::sync::Arc;
+
+/// The naive interpreter as a serving [`Backend`]: the manifest IR driven
+/// entirely by [`conv3d_naive`] on a single thread — the
+/// PyTorch-Mobile-class baseline, deployable through the exact same
+/// coordinator pipeline as the optimized engine so the two can be A/B'd
+/// (`rt3d serve --backend naive`) and parity-tested request for request.
+pub struct NaiveBackend {
+    engine: NativeEngine,
+}
+
+impl NaiveBackend {
+    /// The serial reference backend: one executor thread, dense plans
+    /// (the naive path has no sparse execution; that is the point of the
+    /// comparison).
+    pub fn new(model: &Model) -> NaiveBackend {
+        Self::with_threads(model, Some(1))
+    }
+
+    /// [`Self::new`] with an explicit executor thread width for the dense
+    /// head (`None` = the usual `RT3D_THREADS` / all-cores resolution) —
+    /// what `rt3d serve --backend naive --threads N` builds. The direct
+    /// conv itself is always serial; only the head parallelizes.
+    pub fn with_threads(model: &Model, threads: Option<usize>) -> NaiveBackend {
+        let mut builder = NativeEngine::builder(model).kind(EngineKind::Naive);
+        if let Some(n) = threads {
+            builder = builder.threads(n);
+        }
+        NaiveBackend { engine: builder.build() }
+    }
+}
+
+impl Backend for NaiveBackend {
+    fn infer(&self, batch: Tensor5) -> Mat {
+        self.engine.forward_owned(batch)
+    }
+    fn name(&self) -> String {
+        "naive".into()
+    }
+    fn input_dims(&self) -> Option<[usize; 4]> {
+        Some(self.engine.input())
+    }
+    fn num_classes(&self) -> Option<usize> {
+        Some(self.engine.num_classes())
+    }
+    fn threads(&self) -> usize {
+        self.engine.threads()
+    }
+    fn fork(&self) -> Option<Arc<dyn Backend>> {
+        // The handle is cheap (shared core), so extra server workers each
+        // get their own scratch state too.
+        Some(Arc::new(NaiveBackend { engine: self.engine.fork() }))
+    }
+}
 
 /// Dense direct conv3d. `w` is OIDHW flat; returns NCDHW output with bias
 /// and optional ReLU applied.
@@ -100,15 +157,21 @@ mod tests {
         let bias = vec![0.1, -0.2, 0.3, 0.0, 1.0];
         let a = conv3d_naive(&x, &w.data, &bias, &g, true);
 
-        let cc = CompiledConv {
+        let mut cc = CompiledConv {
             name: "t".into(),
             geom: g,
             relu: true,
             bias: bias.clone(),
             kind: ConvKind::Dense { wmat: w.data.clone() },
             tile: GemmTile::default(),
+            packed: None,
+            sched: None,
+            kernel: None,
+            threads: 0,
+            fused: None,
             flops: g.flops(1),
         };
+        cc.finalize();
         let pt = im2col_t(&x, &g);
         let mut out = Mat::zeros(5, pt.cols);
         run_compiled_conv(&cc, &pt, &mut out);
@@ -129,15 +192,21 @@ mod tests {
         let a = conv3d_naive(&x, &w.data, &bias, &g, false);
         assert_eq!(a.dims, [1, 5, 1, 2, 2]);
 
-        let cc = CompiledConv {
+        let mut cc = CompiledConv {
             name: "t".into(),
             geom: g,
             relu: false,
             bias,
             kind: ConvKind::Dense { wmat: w.data.clone() },
             tile: GemmTile::default(),
+            packed: None,
+            sched: None,
+            kernel: None,
+            threads: 0,
+            fused: None,
             flops: g.flops(1),
         };
+        cc.finalize();
         let pt = im2col_t(&x, &g);
         let mut out = Mat::zeros(5, pt.cols);
         run_compiled_conv(&cc, &pt, &mut out);

@@ -1,0 +1,180 @@
+//! `EngineOptions` — the typed front door for building a
+//! [`crate::executors::NativeEngine`].
+//!
+//! Every execution knob the crate grew over four PRs (threads, kernel
+//! variant, fuse policy, pool mode, spin budget, tune-DB path, engine
+//! kind, sparsity) lives in one struct, with **one** documented resolution
+//! order applied in [`EngineOptions::resolve`]:
+//!
+//! 1. **explicit builder value** — `NativeEngine::builder(&model)
+//!    .threads(4).kernel(KernelArch::Scalar)...`;
+//! 2. **`RT3D_*` environment** — the knob registry in
+//!    [`crate::util::env`] (`rt3d env` prints the effective table);
+//! 3. **tuned / heuristic default** — the per-layer `TuneDb` entries and
+//!    the detected-hardware / footprint heuristics.
+//!
+//! The per-layer axes (kernel, fused) keep their tuned values *between*
+//! layers of the env and heuristic: an explicit option forces every
+//! layer; otherwise an explicit env value (`RT3D_SIMD=scalar`,
+//! `RT3D_FUSE=off`) forces every layer; otherwise each layer uses its
+//! tuned entry, falling back to the detected ISA / footprint heuristic —
+//! see `CompiledConv::bind_full` and `CompiledConv::resolve_fused`.
+
+use crate::codegen::{tuner::TuneDb, KernelArch};
+use crate::executors::EngineKind;
+use crate::util::pool::{PoolMode, ThreadPool};
+use std::path::PathBuf;
+
+/// Declarative engine configuration. `None` / `false` fields mean "fall
+/// through to the environment, then the tuned/heuristic default" — see the
+/// module docs for the resolution order. Construct via
+/// [`Default`] + struct update, or fluently via `NativeEngine::builder`.
+#[derive(Debug, Clone, Default)]
+pub struct EngineOptions {
+    /// Execution quality level (naive / untuned / rt3d). Defaults to
+    /// [`EngineKind::Rt3d`].
+    pub kind: Option<EngineKind>,
+    /// Use the compacted sparse plans (only meaningful for `Rt3d`).
+    pub sparsity: bool,
+    /// Executor worker threads per handle. Env: `RT3D_THREADS`; default:
+    /// all cores.
+    pub threads: Option<usize>,
+    /// Force every layer (and the dense head) onto one kernel variant.
+    /// Env: `RT3D_SIMD`; default: tuned per layer, else the detected ISA.
+    pub kernel: Option<KernelArch>,
+    /// Force every conv onto the fused (`true`) or materialized (`false`)
+    /// path. Env: `RT3D_FUSE`; default: tuned per layer, else the
+    /// footprint heuristic. Outputs are bit-identical either way.
+    pub fused: Option<bool>,
+    /// Worker pool mode. Env: `RT3D_POOL`; default: parked.
+    pub pool_mode: Option<PoolMode>,
+    /// Pre-park spin iterations. Env: `RT3D_SPIN`; default: 4096.
+    pub spin: Option<usize>,
+    /// Tuning-database path. Env: `RT3D_TUNE_DB`; default:
+    /// `<crate>/tune_db.json`. A missing file simply means "untuned".
+    pub tune_db: Option<PathBuf>,
+}
+
+/// [`EngineOptions`] after the builder > env > default resolution: every
+/// process-wide knob is concrete; the per-layer axes stay `Option` because
+/// `None` there means "per-layer tuned/heuristic", which is itself a
+/// concrete policy.
+#[derive(Debug)]
+pub struct ResolvedOptions {
+    pub kind: EngineKind,
+    pub sparsity: bool,
+    pub threads: usize,
+    /// `Some` = force every layer (explicit option only — an explicit
+    /// `RT3D_SIMD` is applied per call in `CompiledConv::bind_full`, so a
+    /// tuned database recorded under one env still round-trips).
+    pub kernel: Option<KernelArch>,
+    /// `Some` = force every conv (explicit option only; `RT3D_FUSE` is
+    /// likewise applied per call).
+    pub fused: Option<bool>,
+    pub pool_mode: PoolMode,
+    pub spin: usize,
+    /// The loaded tuning database, if one exists at the resolved path.
+    pub tune_db: Option<TuneDb>,
+}
+
+impl EngineOptions {
+    /// Apply the documented resolution order (explicit > `RT3D_*` env >
+    /// default) to every knob. Pure plumbing apart from reading the
+    /// environment through [`crate::util::env`] and loading the tune DB.
+    pub fn resolve(&self) -> ResolvedOptions {
+        let tune_db = match &self.tune_db {
+            Some(path) => TuneDb::load_at(path),
+            None => TuneDb::load_default(), // RT3D_TUNE_DB > crate default
+        };
+        if let Some(k) = self.kernel {
+            assert!(
+                k.supported(),
+                "kernel {} is not executable on this machine",
+                k.name()
+            );
+        }
+        ResolvedOptions {
+            kind: self.kind.unwrap_or(EngineKind::Rt3d),
+            sparsity: self.sparsity,
+            threads: resolve_threads(
+                self.threads,
+                crate::util::env::threads(),
+                ThreadPool::available(),
+            ),
+            kernel: self.kernel,
+            fused: self.fused,
+            pool_mode: self.pool_mode.unwrap_or_else(PoolMode::from_env),
+            spin: resolve_spin(self.spin, crate::util::env::spin()),
+            tune_db,
+        }
+    }
+}
+
+/// Thread-count resolution: explicit builder value > env (`RT3D_THREADS`,
+/// already filtered to > 0) > all cores. Explicit zero is clamped to one
+/// (the pool's floor) rather than falling through — an explicit value
+/// must never be outvoted by a stale environment variable.
+pub fn resolve_threads(
+    explicit: Option<usize>,
+    env: Option<usize>,
+    cores: usize,
+) -> usize {
+    explicit.map(|n| n.max(1)).or(env).unwrap_or(cores).max(1)
+}
+
+/// Spin-budget resolution: explicit > env (`RT3D_SPIN`) > 4096.
+pub fn resolve_spin(explicit: Option<usize>, env: Option<usize>) -> usize {
+    explicit.or(env).unwrap_or(crate::util::env::DEFAULT_SPIN)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_beats_env_beats_default() {
+        // threads: builder > env > cores — including the stale-env +
+        // builder-override combination (env set, builder still wins).
+        assert_eq!(resolve_threads(Some(3), Some(16), 8), 3);
+        assert_eq!(resolve_threads(None, Some(16), 8), 16);
+        assert_eq!(resolve_threads(None, None, 8), 8);
+        // An explicit 0 clamps to 1 instead of deferring to a stale env.
+        assert_eq!(resolve_threads(Some(0), Some(16), 8), 1);
+
+        assert_eq!(resolve_spin(Some(0), Some(9999)), 0);
+        assert_eq!(resolve_spin(None, Some(9999)), 9999);
+        assert_eq!(resolve_spin(None, None), crate::util::env::DEFAULT_SPIN);
+    }
+
+    #[test]
+    fn default_options_resolve_sanely() {
+        let r = EngineOptions::default().resolve();
+        assert_eq!(r.kind, EngineKind::Rt3d);
+        assert!(!r.sparsity);
+        assert!(r.threads >= 1);
+        assert!(r.kernel.is_none() && r.fused.is_none());
+    }
+
+    #[test]
+    fn explicit_options_survive_resolution() {
+        let opts = EngineOptions {
+            kind: Some(EngineKind::Untuned),
+            sparsity: true,
+            threads: Some(2),
+            kernel: Some(KernelArch::Scalar),
+            fused: Some(false),
+            pool_mode: Some(PoolMode::Scoped),
+            spin: Some(7),
+            tune_db: Some(PathBuf::from("/definitely/not/here.json")),
+        };
+        let r = opts.resolve();
+        assert_eq!(r.kind, EngineKind::Untuned);
+        assert!(r.sparsity);
+        assert_eq!(r.threads, 2);
+        assert_eq!(r.kernel, Some(KernelArch::Scalar));
+        assert_eq!(r.fused, Some(false));
+        assert_eq!(r.pool_mode, PoolMode::Scoped);
+        assert_eq!(r.spin, 7);
+        assert!(r.tune_db.is_none(), "missing db file means untuned");
+    }
+}

@@ -7,21 +7,55 @@
 //! generation framework that turns the pruning-rate FLOPs reduction into
 //! real mobile latency reduction.
 //!
-//! This crate is the deployment half of the three-layer stack:
+//! # One front door
+//!
+//! The deployment surface is three coupled pieces:
+//!
+//! * **`EngineOptions` / `NativeEngine::builder`**
+//!   ([`executors::EngineOptions`]) — every execution knob (engine kind,
+//!   sparsity, threads, kernel variant, fuse policy, pool mode, spin,
+//!   tune-DB path) in one typed config with one resolution order:
+//!   **explicit builder value > `RT3D_*` environment > tuned / heuristic
+//!   default**. The environment layer is a single registry
+//!   ([`util::env`]); `rt3d env` prints every knob, its effective value
+//!   and its source, and flags unknown `RT3D_*` variables (typos).
+//! * **`Backend`** ([`coordinator::Backend`]) — the object-safe execution
+//!   interface the whole serving stack is written against, implemented by
+//!   the native engine (naive / untuned / rt3d quality levels), the
+//!   standalone naive interpreter ([`executors::NaiveBackend`]) and, with
+//!   `--features pjrt`, the PJRT runtime — so `rt3d serve --backend ...`
+//!   and the tests can A/B any two executors through the identical
+//!   batched pipeline.
+//! * **`Session`** ([`coordinator::Session`]) — the paper's actual mobile
+//!   scenario (continuous video) as an API: push frames incrementally,
+//!   windows of 16 frames (configurable stride/overlap) are submitted
+//!   through the batched server, per-window logits come back in stream
+//!   order.
+//!
+//! ```text
+//! NativeEngine::builder(&model).sparsity(true).threads(4).build()
+//!     └─ Arc<dyn Backend> ── Server/Router (batching, N workers)
+//!                                └─ Session::push_frames -> windowed logits
+//! ```
+//!
+//! # Layers
 //!
 //! * `runtime` — PJRT client loading the AOT HLO artifacts produced by
-//!   `python/compile/aot.py` (Layer-2 JAX model + Layer-1 Pallas kernels).
-//!   Compiled only with `--features pjrt` (needs the external `xla` crate).
+//!   `python/compile/aot.py` (Layer-2 JAX model + Layer-1 Pallas kernels);
+//!   exposes the cfg-gated `PjrtBackend`. Compiled only with
+//!   `--features pjrt` (needs the external `xla` crate).
 //! * [`tensor`] — NCDHW tensor / im2col / packing substrate.
 //! * [`model`] — artifact manifests: layer IR, weight pool, masks.
 //! * [`codegen`] — the paper's "compiler" contribution: sparsity-pattern →
 //!   compacted weight layout + tuned execution plan.
 //! * [`executors`] — baseline (naive, untuned-GEMM) and RT3D-optimized
-//!   (blocked SIMD GEMM, dense / KGS-sparse / Vanilla-sparse) conv engines.
+//!   (blocked SIMD GEMM, dense / KGS-sparse / Vanilla-sparse) conv
+//!   engines behind the options builder.
 //! * [`device`] — analytical Snapdragon-865-class CPU/GPU cost model
 //!   (the off-the-shelf-mobile substitute, DESIGN.md §2).
-//! * [`coordinator`] — request router, clip batcher, scheduler, metrics:
-//!   the serving loop that makes this a framework rather than a script.
+//! * [`coordinator`] — the backend-agnostic serving runtime: request
+//!   router, clip batcher, pipelined multi-worker server, streaming
+//!   sessions, metrics.
 //! * [`workload`] — synthetic clip + request-trace generators for benches.
 
 pub mod codegen;

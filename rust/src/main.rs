@@ -4,9 +4,9 @@
 //! through artifacts built once by `make artifacts` (python never runs on
 //! the request path).
 
-use rt3d::coordinator::{Server, ServerConfig};
+use rt3d::coordinator::{Backend, Server, ServerConfig};
 use rt3d::device::ExecutorClass;
-use rt3d::executors::{EngineKind, NativeEngine};
+use rt3d::executors::{EngineKind, NaiveBackend, NativeEngine};
 use rt3d::model::Model;
 use rt3d::util::args::Args;
 use rt3d::workload;
@@ -15,45 +15,48 @@ use std::sync::Arc;
 const USAGE: &str = "\
 rt3d — RT3D (AAAI'21) reproduction runtime
 
-USAGE: rt3d [--artifacts DIR] <serve|bench|tune|inspect> [options]
+USAGE: rt3d [--artifacts DIR] <serve|bench|tune|inspect|env> [options]
 
-  serve    --model c3d --engine rt3d|naive|untuned [--sparse] \
+  serve    --model c3d --backend rt3d|naive|untuned|pjrt [--sparse] \
            [--requests 32] [--max-batch 4] [--threads N] [--workers W] \
-           [--pjrt] [--variant dense_xla_b1]
+           [--variant dense_xla_b1]
   bench    --table 2|3|cache
   tune     --model c3d [--reps 3]
   inspect  --model c3d
+  env      print every RT3D_* knob, its effective value and source
 
-Executor threads default to RT3D_THREADS (else all cores); --threads
-overrides per invocation. --workers W runs W batch-execution workers
-over one shared compiled model (total parallelism ~ W x threads). The
---pjrt path needs a build with `--features pjrt`.
+Every backend serves through the same coordinator pipeline, so
+--backend A/B-tests executors request for request. Executor threads
+resolve builder > RT3D_THREADS > all cores; --threads is the builder
+value here. --workers W runs W batch-execution workers over one shared
+compiled model (total parallelism ~ W x threads). --backend pjrt needs
+a build with `--features pjrt`. (--engine is accepted as the old
+spelling of --backend.)
 ";
-
-fn engine_kind(s: &str) -> EngineKind {
-    match s {
-        "naive" => EngineKind::Naive,
-        "untuned" => EngineKind::Untuned,
-        _ => EngineKind::Rt3d,
-    }
-}
 
 fn main() -> rt3d::Result<()> {
     let args = Args::parse_env();
     let artifacts = args.get_or("artifacts", "artifacts");
     match args.subcommand.as_deref() {
-        Some("serve") => serve(
-            &artifacts,
-            &args.get_or("model", "c3d"),
-            &args.get_or("engine", "rt3d"),
-            args.flag("sparse"),
-            args.get_usize("requests", 32),
-            args.get_usize("max-batch", 4),
-            args.get_usize("threads", 0),
-            args.get_usize("workers", 1),
-            args.flag("pjrt"),
-            &args.get_or("variant", "dense_xla_b1"),
-        ),
+        Some("serve") => {
+            // `--engine` kept as the pre-redesign spelling of `--backend`.
+            let backend = args
+                .get("backend")
+                .or_else(|| args.get("engine"))
+                .unwrap_or(if args.flag("pjrt") { "pjrt" } else { "rt3d" })
+                .to_string();
+            serve(
+                &artifacts,
+                &args.get_or("model", "c3d"),
+                &backend,
+                args.flag("sparse"),
+                args.get_usize("requests", 32),
+                args.get_usize("max-batch", 4),
+                args.get_usize("threads", 0),
+                args.get_usize("workers", 1),
+                &args.get_or("variant", "dense_xla_b1"),
+            )
+        }
         Some("bench") => match args.get_or("table", "2").as_str() {
             "2" => rt3d_bench::table2(&artifacts),
             "3" => rt3d_bench::table3(&artifacts),
@@ -66,6 +69,10 @@ fn main() -> rt3d::Result<()> {
             args.get_usize("reps", 3),
         ),
         Some("inspect") => inspect(&artifacts, &args.get_or("model", "c3d")),
+        Some("env") => {
+            rt3d::util::env::print_report();
+            Ok(())
+        }
         _ => {
             eprint!("{USAGE}");
             Ok(())
@@ -73,42 +80,63 @@ fn main() -> rt3d::Result<()> {
     }
 }
 
+/// Construct the named backend over the loaded model — the CLI face of
+/// the `Backend` trait: every branch returns the same handle type and is
+/// served by the identical pipeline.
+fn build_backend(
+    model: &Model,
+    backend: &str,
+    sparse: bool,
+    threads: usize,
+    variant: &str,
+) -> rt3d::Result<Arc<dyn Backend>> {
+    let kind = match backend {
+        "rt3d" => EngineKind::Rt3d,
+        "untuned" => EngineKind::Untuned,
+        // --threads 0 (unset) keeps the RT3D_THREADS / all-cores
+        // resolution, matching the other backends; --sparse has no naive
+        // execution path (dense plans), same as before the redesign.
+        "naive" => {
+            return Ok(Arc::new(NaiveBackend::with_threads(
+                model,
+                (threads > 0).then_some(threads),
+            )))
+        }
+        "pjrt" => return pjrt_backend(model, variant),
+        other => return Err(rt3d::anyhow!("unknown backend {other:?}")),
+    };
+    let mut builder = NativeEngine::builder(model).kind(kind).sparsity(sparse);
+    if threads > 0 {
+        builder = builder.threads(threads);
+    }
+    Ok(Arc::new(builder.build()))
+}
+
 #[allow(clippy::too_many_arguments)]
 fn serve(
     artifacts: &str,
     model_name: &str,
-    engine: &str,
+    backend: &str,
     sparse: bool,
     requests: usize,
     max_batch: usize,
     threads: usize,
     workers: usize,
-    pjrt: bool,
     variant: &str,
 ) -> rt3d::Result<()> {
     let model = Model::load(artifacts, model_name)?;
     let in_dims = model.manifest.input;
-    let eng: Arc<dyn rt3d::coordinator::Engine> = if pjrt {
-        pjrt_engine(&model, variant)?
-    } else if threads > 0 {
-        Arc::new(NativeEngine::with_threads(&model, engine_kind(engine), sparse, threads))
-    } else {
-        Arc::new(NativeEngine::new(&model, engine_kind(engine), sparse))
-    };
+    let eng = build_backend(&model, backend, sparse, threads, variant)?;
     println!(
-        "engine: {} ({} executor threads x {} serving workers)",
+        "backend: {} ({} executor threads x {} serving workers)",
         eng.name(),
         eng.threads(),
         workers.max(1)
     );
-    let cfg = ServerConfig {
-        batcher: rt3d::coordinator::BatcherConfig {
-            max_batch,
-            max_wait: std::time::Duration::from_millis(10),
-        },
-        workers,
-        ..Default::default()
-    };
+    let cfg = ServerConfig::new()
+        .max_batch(max_batch)
+        .max_wait(std::time::Duration::from_millis(10))
+        .workers(workers);
     let server = Server::start(eng, cfg);
     let responses = server.take_responses();
     let frames = in_dims[1];
@@ -265,10 +293,11 @@ mod rt3d_bench {
                 [1, in_dims[0], in_dims[1], in_dims[2], in_dims[3]],
                 42,
             );
-            let naive = NativeEngine::new(&model, EngineKind::Naive, false);
-            let untuned = NativeEngine::new(&model, EngineKind::Untuned, false);
-            let dense = NativeEngine::new(&model, EngineKind::Rt3d, false);
-            let sparse = NativeEngine::new(&model, EngineKind::Rt3d, true);
+            let naive = NativeEngine::builder(&model).kind(EngineKind::Naive).build();
+            let untuned =
+                NativeEngine::builder(&model).kind(EngineKind::Untuned).build();
+            let dense = NativeEngine::builder(&model).build();
+            let sparse = NativeEngine::builder(&model).sparsity(true).build();
             let tn = time_native(&naive, &clip, 1);
             let tu = time_native(&untuned, &clip, 3);
             let td = time_native(&dense, &clip, 3);
@@ -356,78 +385,17 @@ mod rt3d_bench {
     }
 }
 
-/// Construct the PJRT-backed engine, or explain how to enable it.
+/// Construct the PJRT backend (`runtime::PjrtBackend`), or explain how to
+/// enable it.
 #[cfg(feature = "pjrt")]
-fn pjrt_engine(
-    model: &Model,
-    variant: &str,
-) -> rt3d::Result<Arc<dyn rt3d::coordinator::Engine>> {
-    Ok(Arc::new(rt3d_pjrt::PjrtEngine::new(model, variant)?))
+fn pjrt_backend(model: &Model, variant: &str) -> rt3d::Result<Arc<dyn Backend>> {
+    Ok(Arc::new(rt3d::runtime::PjrtBackend::new(model, variant)?))
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn pjrt_engine(
-    _model: &Model,
-    _variant: &str,
-) -> rt3d::Result<Arc<dyn rt3d::coordinator::Engine>> {
+fn pjrt_backend(_model: &Model, _variant: &str) -> rt3d::Result<Arc<dyn Backend>> {
     Err(rt3d::anyhow!(
         "this binary was built without the `pjrt` feature; \
          rebuild with `cargo build --features pjrt` (requires the xla crate)"
     ))
-}
-
-/// PJRT-backed serving engine (three-layer path).
-#[cfg(feature = "pjrt")]
-mod rt3d_pjrt {
-    use rt3d::coordinator::Engine;
-    use rt3d::model::Model;
-    use rt3d::runtime::{Executable, Runtime};
-    use rt3d::tensor::{Mat, Tensor5};
-    use std::sync::Arc;
-
-    pub struct PjrtEngine {
-        exe: Arc<Executable>,
-        classes: usize,
-        name: String,
-    }
-
-    impl PjrtEngine {
-        pub fn new(model: &Model, variant: &str) -> rt3d::Result<Self> {
-            let rt = Runtime::cpu()?;
-            let path = model
-                .hlo_path(variant)
-                .ok_or_else(|| rt3d::anyhow!("no hlo variant {variant}"))?;
-            // Batch encoded in the variant key suffix "_b<N>".
-            let batch: usize = variant
-                .rsplit("_b")
-                .next()
-                .and_then(|s| s.parse().ok())
-                .unwrap_or(1);
-            let input = model.manifest.input;
-            let exe =
-                rt.load(&path, [batch, input[0], input[1], input[2], input[3]])?;
-            Ok(Self {
-                exe,
-                classes: model.manifest.num_classes,
-                name: format!("pjrt-{}-{variant}", model.manifest.model),
-            })
-        }
-    }
-
-    impl Engine for PjrtEngine {
-        fn infer(&self, batch: Tensor5) -> Mat {
-            let want = self.exe.input_dims[0];
-            let have = batch.dims[0];
-            // Pad the batch up to the compiled size if needed.
-            let n = batch.len() / have;
-            let mut data = batch.data;
-            data.resize(want * n, 0.0);
-            let logits = self.exe.run(&data).expect("pjrt execution failed");
-            let per = self.classes;
-            Mat::from_vec(have, per, logits[..have * per].to_vec())
-        }
-        fn name(&self) -> String {
-            self.name.clone()
-        }
-    }
 }

@@ -66,6 +66,76 @@ pub struct Runtime {
 unsafe impl Send for Runtime {}
 unsafe impl Sync for Runtime {}
 
+/// The PJRT runtime as a serving [`crate::coordinator::Backend`]: loads
+/// one AOT HLO variant and serves it through the same coordinator
+/// pipeline as the native engine — the three-layer (JAX/Pallas → HLO →
+/// PJRT) deployment path behind the common front door
+/// (`rt3d serve --backend pjrt`).
+pub struct PjrtBackend {
+    exe: std::sync::Arc<Executable>,
+    input: [usize; 4],
+    classes: usize,
+    name: String,
+}
+
+impl PjrtBackend {
+    /// Load + compile the HLO artifact for `variant` (batch is encoded in
+    /// the variant key suffix `_b<N>`).
+    pub fn new(model: &crate::model::Model, variant: &str) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let path = model
+            .hlo_path(variant)
+            .ok_or_else(|| anyhow!("no hlo variant {variant}"))?;
+        let batch: usize = variant
+            .rsplit("_b")
+            .next()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1);
+        let input = model.manifest.input;
+        let exe = rt.load(&path, [batch, input[0], input[1], input[2], input[3]])?;
+        Ok(Self {
+            exe,
+            input,
+            classes: model.manifest.num_classes,
+            name: format!("pjrt-{}-{variant}", model.manifest.model),
+        })
+    }
+}
+
+impl crate::coordinator::Backend for PjrtBackend {
+    fn infer(&self, batch: crate::tensor::Tensor5) -> crate::tensor::Mat {
+        // The executable is compiled at a fixed batch size; the server's
+        // batcher may form smaller or larger batches. Run in compiled-size
+        // chunks, zero-padding the last chunk — never truncating clips.
+        let want = self.exe.input_dims[0].max(1);
+        let have = batch.dims[0];
+        let n = batch.len() / have.max(1);
+        let per = self.classes;
+        let mut out = Vec::with_capacity(have * per);
+        for chunk in batch.data.chunks(want * n) {
+            let logits = if chunk.len() == want * n {
+                self.exe.run(chunk).expect("pjrt execution failed")
+            } else {
+                let mut padded = chunk.to_vec();
+                padded.resize(want * n, 0.0);
+                self.exe.run(&padded).expect("pjrt execution failed")
+            };
+            let clips = chunk.len() / n;
+            out.extend_from_slice(&logits[..clips * per]);
+        }
+        crate::tensor::Mat::from_vec(have, per, out)
+    }
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+    fn input_dims(&self) -> Option<[usize; 4]> {
+        Some(self.input)
+    }
+    fn num_classes(&self) -> Option<usize> {
+        Some(self.classes)
+    }
+}
+
 impl Runtime {
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;

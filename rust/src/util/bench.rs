@@ -34,11 +34,9 @@ impl BenchResult {
 /// Per-entry wall budget from `RT3D_BENCH_BUDGET_MS` (CI smoke runs use a
 /// reduced budget), else `default_ms`.
 pub fn budget_from_env(default_ms: u64) -> Duration {
-    let ms = std::env::var("RT3D_BENCH_BUDGET_MS")
-        .ok()
-        .and_then(|s| s.trim().parse::<u64>().ok())
-        .unwrap_or(default_ms);
-    Duration::from_millis(ms)
+    Duration::from_millis(
+        crate::util::env::bench_budget_ms().unwrap_or(default_ms),
+    )
 }
 
 /// Write a machine-readable bench artifact at the repo root (the

@@ -1,0 +1,287 @@
+//! The one knob table: every `RT3D_*` environment variable the crate
+//! reads, with its parser, default and help text in a single registry.
+//!
+//! Before this module existed, each subsystem read its own variable at its
+//! own call site (`util::pool` read `RT3D_THREADS`, `codegen::plan` read
+//! `RT3D_SIMD` and `RT3D_FUSE`, ...), so a typo like `RT3D_THREAD=1`
+//! failed *silently* — the knob just didn't take. Now:
+//!
+//! * [`var`] is the **only** place the crate reads an `RT3D_*` variable
+//!   (a one-line grep audits it: no `env::var` call mentioning `RT3D_`
+//!   exists outside this file); everything else goes through the typed
+//!   accessors here.
+//! * `rt3d env` prints every knob, its effective value and whether it came
+//!   from the environment or a default — plus any `RT3D_*` variable that
+//!   is set but *not* in the registry (the typo detector).
+//!
+//! Resolution precedence for execution configuration is documented once,
+//! at [`crate::executors::EngineOptions`]: **explicit builder value >
+//! `RT3D_*` environment > tuned / heuristic default**. This module owns
+//! only the middle layer.
+
+/// Knob names (use these constants, not string literals, at call sites).
+pub const THREADS: &str = "RT3D_THREADS";
+pub const SIMD: &str = "RT3D_SIMD";
+pub const FUSE: &str = "RT3D_FUSE";
+pub const POOL: &str = "RT3D_POOL";
+pub const SPIN: &str = "RT3D_SPIN";
+pub const TUNE_DB: &str = "RT3D_TUNE_DB";
+pub const BENCH_BUDGET_MS: &str = "RT3D_BENCH_BUDGET_MS";
+
+/// One registered environment knob.
+pub struct Knob {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Render the *effective* value for `rt3d env`, given the raw
+    /// environment text (`None` = unset). Must never panic.
+    render: fn(Option<&str>) -> String,
+}
+
+/// The full registry. Adding a knob here is what makes it exist: `var`
+/// refuses (in debug builds) to read names that are not listed.
+pub fn knobs() -> &'static [Knob] {
+    KNOBS
+}
+
+const KNOBS: &[Knob] = &[
+    Knob {
+        name: THREADS,
+        help: "executor worker threads per engine handle (> 0)",
+        render: |raw| match parse_usize(raw).filter(|&n| n > 0) {
+            Some(n) => n.to_string(),
+            None => format!("all cores ({})", available_cores()),
+        },
+    },
+    Knob {
+        name: SIMD,
+        help: "kernel variant: auto | scalar | avx2 | neon (explicit \
+               names force every layer onto that variant)",
+        render: |raw| match raw.map(str::trim) {
+            None | Some("") | Some("auto") => {
+                format!("auto ({})", crate::codegen::KernelArch::active().name())
+            }
+            Some(other) => match crate::codegen::KernelArch::parse(other) {
+                Some(k) if k.supported() => k.name().to_string(),
+                Some(k) => format!("{} (unsupported here -> auto)", k.name()),
+                None => format!("{other:?} (unrecognized -> auto)"),
+            },
+        },
+    },
+    Knob {
+        name: FUSE,
+        help: "conv execution path: auto | on (fused implicit GEMM) | \
+               off (materialized im2col)",
+        render: |raw| match raw.map(str::trim) {
+            None => "auto".to_string(),
+            Some(v) => match crate::codegen::FuseMode::parse(v) {
+                Some(crate::codegen::FuseMode::Auto) => "auto".to_string(),
+                Some(crate::codegen::FuseMode::On) => "on (fused)".to_string(),
+                Some(crate::codegen::FuseMode::Off) => {
+                    "off (materialized)".to_string()
+                }
+                None => format!("{v:?} (unrecognized -> auto)"),
+            },
+        },
+    },
+    Knob {
+        name: POOL,
+        help: "worker pool mode: parked (default) | scoped (PR-1 \
+               differential reference)",
+        render: |raw| match raw {
+            Some("scoped") => "scoped".to_string(),
+            Some(other) if other != "parked" => {
+                format!("{other:?} (unrecognized -> parked)")
+            }
+            _ => "parked".to_string(),
+        },
+    },
+    Knob {
+        name: SPIN,
+        help: "pre-park spin iterations per pool worker (0 disables)",
+        render: |raw| match parse_usize(raw) {
+            Some(n) => n.to_string(),
+            None => format!("{DEFAULT_SPIN} (default)"),
+        },
+    },
+    Knob {
+        name: TUNE_DB,
+        help: "path of the persisted per-layer tuning database",
+        render: |raw| match raw.map(str::trim) {
+            Some(p) if !p.is_empty() => p.to_string(),
+            _ => format!("{} (default)", default_tune_db_path().display()),
+        },
+    },
+    Knob {
+        name: BENCH_BUDGET_MS,
+        help: "wall budget per bench entry in ms (CI smoke runs shrink it)",
+        render: |raw| match parse_usize(raw) {
+            Some(n) => format!("{n} ms"),
+            None => "per-bench default".to_string(),
+        },
+    },
+];
+
+/// Default pre-park spin budget (see `util::pool`).
+pub const DEFAULT_SPIN: usize = 4096;
+
+/// The single raw read point for `RT3D_*` environment variables. Every
+/// other module resolves knobs through the typed accessors below, which
+/// all funnel here — so "is this knob read anywhere?" has a one-line
+/// answer, and the registry can never drift from the actual reads.
+pub fn var(name: &'static str) -> Option<String> {
+    debug_assert!(
+        knobs().iter().any(|k| k.name == name),
+        "env knob {name} is not in the util::env registry"
+    );
+    std::env::var(name).ok()
+}
+
+fn parse_usize(raw: Option<&str>) -> Option<usize> {
+    raw.and_then(|s| s.trim().parse::<usize>().ok())
+}
+
+fn available_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// `RT3D_THREADS` when set and positive.
+pub fn threads() -> Option<usize> {
+    parse_usize(var(THREADS).as_deref()).filter(|&n| n > 0)
+}
+
+/// `RT3D_SPIN` when set and parseable.
+pub fn spin() -> Option<usize> {
+    parse_usize(var(SPIN).as_deref())
+}
+
+/// `RT3D_BENCH_BUDGET_MS` when set and parseable.
+pub fn bench_budget_ms() -> Option<u64> {
+    parse_usize(var(BENCH_BUDGET_MS).as_deref()).map(|n| n as u64)
+}
+
+/// Raw `RT3D_SIMD` text (parsing lives with [`crate::codegen::KernelArch`]).
+pub fn simd() -> Option<String> {
+    var(SIMD)
+}
+
+/// Raw `RT3D_FUSE` text (parsing lives with [`crate::codegen::FuseMode`]).
+pub fn fuse() -> Option<String> {
+    var(FUSE)
+}
+
+/// Raw `RT3D_POOL` text (parsing lives with [`crate::util::pool::PoolMode`]).
+pub fn pool() -> Option<String> {
+    var(POOL)
+}
+
+/// `RT3D_TUNE_DB` when set and non-empty.
+pub fn tune_db_path() -> Option<std::path::PathBuf> {
+    var(TUNE_DB)
+        .map(|p| p.trim().to_string())
+        .filter(|p| !p.is_empty())
+        .map(std::path::PathBuf::from)
+}
+
+/// Where the tuning database lives when `RT3D_TUNE_DB` is unset.
+pub fn default_tune_db_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tune_db.json")
+}
+
+/// One row of the `rt3d env` report.
+pub struct KnobReport {
+    pub name: &'static str,
+    /// Effective (parsed) value, human-readable.
+    pub value: String,
+    /// `"env"` when the variable is set, `"default"` otherwise.
+    pub source: &'static str,
+    pub help: &'static str,
+}
+
+/// Resolve every registered knob against the current environment.
+pub fn report() -> Vec<KnobReport> {
+    knobs()
+        .iter()
+        .map(|k| {
+            let raw = var(k.name);
+            KnobReport {
+                name: k.name,
+                value: (k.render)(raw.as_deref()),
+                source: if raw.is_some() { "env" } else { "default" },
+                help: k.help,
+            }
+        })
+        .collect()
+}
+
+/// `RT3D_*` variables present in the environment that are **not** in the
+/// registry — almost always a typo (`RT3D_THREAD=8`); the old per-call-site
+/// reads would have ignored them silently.
+pub fn unknown_knobs() -> Vec<String> {
+    let mut out: Vec<String> = std::env::vars()
+        .map(|(k, _)| k)
+        .filter(|k| k.starts_with("RT3D_") && !knobs().iter().any(|n| n.name == k))
+        .collect();
+    out.sort();
+    out
+}
+
+/// Print the `rt3d env` table: every knob, its effective value, its source
+/// and any unrecognized `RT3D_*` variables.
+pub fn print_report() {
+    println!("{:<22} {:<9} {:<34} help", "knob", "source", "effective value");
+    for r in report() {
+        println!("{:<22} {:<9} {:<34} {}", r.name, r.source, r.value, r.help);
+    }
+    let unknown = unknown_knobs();
+    if !unknown.is_empty() {
+        println!();
+        for k in unknown {
+            println!(
+                "warning: {k} is set but is not a known RT3D knob (typo?) — \
+                 known knobs are listed above"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_typed_accessor() {
+        // The constants used by the typed accessors must all be registered
+        // (the debug_assert in `var` enforces this at runtime too).
+        for name in [THREADS, SIMD, FUSE, POOL, SPIN, TUNE_DB, BENCH_BUDGET_MS] {
+            assert!(knobs().iter().any(|k| k.name == name), "{name} unregistered");
+        }
+        assert_eq!(knobs().len(), 7, "new knob? register + document it");
+    }
+
+    #[test]
+    fn report_renders_every_knob_without_panicking() {
+        let rows = report();
+        assert_eq!(rows.len(), knobs().len());
+        for r in &rows {
+            assert!(!r.value.is_empty(), "{} rendered empty", r.name);
+            assert!(r.source == "env" || r.source == "default");
+        }
+    }
+
+    #[test]
+    fn render_handles_unset_and_garbage() {
+        for k in knobs() {
+            // Must not panic on unset, empty, or garbage text.
+            let _ = (k.render)(None);
+            let _ = (k.render)(Some(""));
+            let _ = (k.render)(Some("definitely-not-a-value"));
+        }
+    }
+
+    #[test]
+    fn parse_usize_trims() {
+        assert_eq!(parse_usize(Some(" 8 ")), Some(8));
+        assert_eq!(parse_usize(Some("x")), None);
+        assert_eq!(parse_usize(None), None);
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod args;
 pub mod bench;
+pub mod env;
 pub mod error;
 pub mod json;
 pub mod pool;

@@ -52,7 +52,10 @@
 //! not commute bitwise.
 //!
 //! Thread count resolution: `RT3D_THREADS` env var when set (> 0),
-//! otherwise `std::thread::available_parallelism()`.
+//! otherwise `std::thread::available_parallelism()`. All environment
+//! knobs (`RT3D_THREADS` / `RT3D_POOL` / `RT3D_SPIN`) are read through
+//! the [`crate::util::env`] registry; `NativeEngine::builder` can
+//! override each per engine handle ([`ThreadPool::with_config`]).
 
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -73,8 +76,8 @@ impl PoolMode {
     /// `RT3D_POOL=scoped` selects the legacy scoped mode; anything else
     /// (including unset) is parked.
     pub fn from_env() -> PoolMode {
-        match std::env::var("RT3D_POOL").as_deref() {
-            Ok("scoped") => PoolMode::Scoped,
+        match crate::util::env::pool().as_deref() {
+            Some("scoped") => PoolMode::Scoped,
             _ => PoolMode::Parked,
         }
     }
@@ -140,18 +143,10 @@ struct PoolInner {
     /// Lock-free mirror of `state.shutdown` so a spinning worker notices
     /// teardown without taking the mutex.
     shutdown_hint: AtomicBool,
-}
-
-/// Bounded pre-park spin iterations (`RT3D_SPIN`, default 4096; 0
-/// disables). Resolved once — it is a latency knob, not a semantic one.
-fn spin_budget() -> usize {
-    static SPIN: OnceLock<usize> = OnceLock::new();
-    *SPIN.get_or_init(|| {
-        std::env::var("RT3D_SPIN")
-            .ok()
-            .and_then(|s| s.trim().parse::<usize>().ok())
-            .unwrap_or(4096)
-    })
+    /// Bounded pre-park spin iterations for this pool's workers (a latency
+    /// knob, never a semantic one). Resolution: explicit
+    /// [`ThreadPool::with_config`] value > `RT3D_SPIN` > 4096; 0 disables.
+    spin: usize,
 }
 
 /// Spawned workers + region serialization, shared by all clones of one
@@ -210,6 +205,7 @@ impl Drop for InTaskGuard {
 pub struct ThreadPool {
     threads: usize,
     mode: PoolMode,
+    spin: usize,
     shared: Arc<OnceLock<PoolShared>>,
 }
 
@@ -229,11 +225,24 @@ impl ThreadPool {
     }
 
     pub fn with_mode(threads: usize, mode: PoolMode) -> Self {
+        Self::with_config(threads, mode, Self::env_spin())
+    }
+
+    /// Fully explicit construction: width, mode and pre-park spin budget —
+    /// what `NativeEngine::builder` resolves its pool options into.
+    pub fn with_config(threads: usize, mode: PoolMode, spin: usize) -> Self {
         Self {
             threads: threads.max(1),
             mode,
+            spin,
             shared: Arc::new(OnceLock::new()),
         }
+    }
+
+    /// The environment-resolved spin budget (`RT3D_SPIN`, default
+    /// [`crate::util::env::DEFAULT_SPIN`]).
+    pub fn env_spin() -> usize {
+        crate::util::env::spin().unwrap_or(crate::util::env::DEFAULT_SPIN)
     }
 
     /// Core count of this machine (fallback 1).
@@ -243,12 +252,7 @@ impl ThreadPool {
 
     /// `RT3D_THREADS` when set and positive, else all available cores.
     pub fn from_env() -> Self {
-        let n = std::env::var("RT3D_THREADS")
-            .ok()
-            .and_then(|s| s.trim().parse::<usize>().ok())
-            .filter(|&n| n > 0)
-            .unwrap_or_else(Self::available);
-        Self::new(n)
+        Self::new(crate::util::env::threads().unwrap_or_else(Self::available))
     }
 
     /// Process-wide pool for call sites without an engine (tuner, bench
@@ -265,6 +269,11 @@ impl ThreadPool {
 
     pub fn mode(&self) -> PoolMode {
         self.mode
+    }
+
+    /// This pool's pre-park spin budget (iterations; 0 = park immediately).
+    pub fn spin(&self) -> usize {
+        self.spin
     }
 
     /// Run `tasks` independent tasks as `f(task_index, worker)`. At most
@@ -386,6 +395,7 @@ impl ThreadPool {
                 next: AtomicUsize::new(0),
                 epoch_hint: AtomicU64::new(0),
                 shutdown_hint: AtomicBool::new(false),
+                spin: self.spin,
             });
             let handles = (1..self.threads)
                 .map(|wid| {
@@ -449,7 +459,7 @@ impl ThreadPool {
 }
 
 fn worker_loop(inner: Arc<PoolInner>, wid: usize) {
-    let spin = spin_budget();
+    let spin = inner.spin;
     let mut seen = 0u64;
     loop {
         // Bounded spin on the epoch mirror: a region posted within the

@@ -193,7 +193,7 @@ fn server_with_toy_conv_engine() {
     struct OneConv {
         cc: rt3d::codegen::CompiledConv,
     }
-    impl rt3d::coordinator::Engine for OneConv {
+    impl rt3d::coordinator::Backend for OneConv {
         fn infer(&self, batch: Tensor5) -> Mat {
             let g = Conv3dGeometry {
                 in_spatial: [batch.dims[2], batch.dims[3], batch.dims[4]],
@@ -314,5 +314,5 @@ fn batch_equals_single() {
         assert_eq!(&yab.data[b1..b1 + sp], &yb.data[c0..c0 + sp]);
     }
     let _ = EngineKind::Rt3d; // silence unused import on some cfgs
-    let _ = NativeEngine::new; // (API surface sanity)
+    let _ = NativeEngine::builder; // (API surface sanity)
 }

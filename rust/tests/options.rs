@@ -1,0 +1,186 @@
+//! Option-resolution tests for the typed front door: the documented
+//! precedence **explicit builder value > `RT3D_*` environment > tuned /
+//! heuristic default** on every axis, including the stale-env +
+//! builder-override combinations. Environment layers are injected as
+//! values (the resolution helpers are pure), so these tests never mutate
+//! the process environment and stay safe under parallel test execution.
+
+use rt3d::codegen::{self, CompiledConv, FuseMode, KernelArch};
+use rt3d::executors::options::{resolve_spin, resolve_threads};
+use rt3d::executors::{EngineKind, EngineOptions, NativeEngine};
+use rt3d::model::{ConvLayer, Model, SyntheticC3d, TensorRef, WeightRefs};
+use rt3d::tensor::{Conv3dGeometry, Tensor5};
+use rt3d::util::pool::PoolMode;
+
+fn small_geom() -> Conv3dGeometry {
+    Conv3dGeometry {
+        in_ch: 2,
+        out_ch: 4,
+        kernel: [3, 3, 3],
+        stride: [1, 1, 1],
+        padding: [1, 1, 1],
+        in_spatial: [2, 4, 4],
+    }
+}
+
+fn big_geom() -> Conv3dGeometry {
+    Conv3dGeometry { in_spatial: [16, 32, 32], in_ch: 16, ..small_geom() }
+}
+
+#[test]
+fn threads_and_spin_precedence_including_stale_env() {
+    // builder > env > default...
+    assert_eq!(resolve_threads(Some(2), Some(16), 8), 2);
+    assert_eq!(resolve_threads(None, Some(16), 8), 16);
+    assert_eq!(resolve_threads(None, None, 8), 8);
+    // ...and a stale RT3D_THREADS never outvotes an explicit builder
+    // value, even a degenerate one.
+    assert_eq!(resolve_threads(Some(0), Some(16), 8), 1);
+    assert_eq!(resolve_spin(Some(128), Some(4096)), 128);
+    assert_eq!(resolve_spin(None, Some(4096)), 4096);
+}
+
+#[test]
+fn fused_precedence_explicit_env_tuned_heuristic() {
+    let small = small_geom();
+    let big = big_geom();
+    // Heuristic layer: small stays materialized, big fuses.
+    assert!(!CompiledConv::resolve_fused(None, FuseMode::Auto, None, &small));
+    assert!(CompiledConv::resolve_fused(None, FuseMode::Auto, None, &big));
+    // Tuned layer beats the heuristic...
+    assert!(CompiledConv::resolve_fused(None, FuseMode::Auto, Some(true), &small));
+    assert!(!CompiledConv::resolve_fused(None, FuseMode::Auto, Some(false), &big));
+    // ...env policy beats tuned...
+    assert!(!CompiledConv::resolve_fused(None, FuseMode::Off, Some(true), &big));
+    assert!(CompiledConv::resolve_fused(None, FuseMode::On, Some(false), &small));
+    // ...and an explicit builder force beats a stale env policy + tuned
+    // flag combined (the stale-env + builder-override case).
+    assert!(CompiledConv::resolve_fused(
+        Some(true),
+        FuseMode::Off,
+        Some(false),
+        &small
+    ));
+    assert!(!CompiledConv::resolve_fused(
+        Some(false),
+        FuseMode::On,
+        Some(true),
+        &big
+    ));
+}
+
+#[test]
+fn kernel_force_beats_tuned_choice_on_the_binding() {
+    let layer = ConvLayer {
+        name: "opt".into(),
+        in_ch: 2,
+        out_ch: 4,
+        kernel: [3, 3, 3],
+        stride: [1, 1, 1],
+        padding: [1, 1, 1],
+        relu: false,
+        weights: WeightRefs {
+            w: TensorRef { offset: 0, shape: vec![], dtype: "f32".into() },
+            b: TensorRef { offset: 0, shape: vec![], dtype: "f32".into() },
+        },
+        weights_sparse: None,
+        unit_mask: None,
+    };
+    let g = small_geom();
+    let w = vec![0.25f32; g.out_ch * g.cols()];
+    let mut cc = codegen::compile_conv_dense(&layer, &g, &w, vec![0.0; g.out_ch]);
+    // A tuned per-layer kernel is honored by default when nothing forces.
+    cc.kernel = Some(KernelArch::Scalar);
+    if KernelArch::env_force().is_none() {
+        assert_eq!(cc.bind(g.in_spatial).kernel, KernelArch::Scalar);
+    }
+    // An engine-level force (builder `.kernel(..)` / `set_kernel`) wins
+    // over the tuned choice without mutating the shared plan.
+    let best = KernelArch::best_supported();
+    assert_eq!(cc.bind_with(g.in_spatial, Some(best)).kernel, best);
+    assert_eq!(cc.kernel, Some(KernelArch::Scalar), "plan untouched");
+}
+
+#[test]
+fn builder_options_reach_the_engine() {
+    let model = Model::synthetic_c3d(SyntheticC3d::tiny());
+    let input = model.manifest.input;
+    let clip = Tensor5::random([1, input[0], input[1], input[2], input[3]], 51);
+
+    let engine = NativeEngine::builder(&model)
+        .kind(EngineKind::Rt3d)
+        .sparsity(true)
+        .threads(2)
+        .kernel(KernelArch::Scalar)
+        .fused(true)
+        .pool_mode(PoolMode::Scoped)
+        .spin(0)
+        .build();
+    assert_eq!(engine.threads(), 2);
+    assert_eq!(engine.kernel(), KernelArch::Scalar);
+
+    // The whole configuration must survive a fork (same shared core).
+    let fork = engine.forked(1);
+    assert_eq!(fork.threads(), 1);
+    assert_eq!(fork.kernel(), KernelArch::Scalar);
+
+    // Forced-fused + forced-scalar still produces the reference logits
+    // (bit-identical to a default engine of the same model, by the
+    // crate's parity invariant).
+    let reference = NativeEngine::builder(&model).sparsity(true).threads(1).build();
+    assert_eq!(reference.forward(&clip).data, engine.forward(&clip).data);
+    assert_eq!(reference.forward(&clip).data, fork.forward(&clip).data);
+}
+
+#[test]
+fn options_struct_is_plain_data() {
+    // The non-fluent path: options arriving as data (config file, CLI)
+    // build the same engine as the fluent builder.
+    let model = Model::synthetic_c3d(SyntheticC3d::tiny());
+    let opts = EngineOptions {
+        kind: Some(EngineKind::Rt3d),
+        sparsity: true,
+        threads: Some(2),
+        ..Default::default()
+    };
+    let a = NativeEngine::with_options(&model, &opts);
+    let b = NativeEngine::builder(&model).sparsity(true).threads(2).build();
+    let input = model.manifest.input;
+    let clip = Tensor5::random([2, input[0], input[1], input[2], input[3]], 52);
+    assert_eq!(a.threads(), 2);
+    assert_eq!(a.forward(&clip).data, b.forward(&clip).data);
+}
+
+#[test]
+fn tuned_per_layer_flags_still_apply_under_the_builder() {
+    // A tune DB entry (here: a forced-materialized flag on a layer the
+    // heuristic would fuse) must keep winning the default resolution when
+    // the builder leaves the axis unset — tuned > heuristic.
+    let layer = ConvLayer {
+        name: "tuned".into(),
+        in_ch: 16,
+        out_ch: 4,
+        kernel: [3, 3, 3],
+        stride: [1, 1, 1],
+        padding: [1, 1, 1],
+        relu: false,
+        weights: WeightRefs {
+            w: TensorRef { offset: 0, shape: vec![], dtype: "f32".into() },
+            b: TensorRef { offset: 0, shape: vec![], dtype: "f32".into() },
+        },
+        weights_sparse: None,
+        unit_mask: None,
+    };
+    let g = big_geom();
+    let w = vec![0.1f32; g.out_ch * g.cols()];
+    let mut cc = codegen::compile_conv_dense(&layer, &g, &w, vec![0.0; g.out_ch]);
+    if FuseMode::active() == FuseMode::Auto {
+        assert!(cc.bind(g.in_spatial).fused, "heuristic fuses this shape");
+        cc.fused = Some(false);
+        assert!(!cc.bind(g.in_spatial).fused, "tuned flag outranks heuristic");
+        assert!(
+            cc.bind_full(g.in_spatial, None, Some(true)).fused,
+            "builder force outranks the tuned flag"
+        );
+    }
+}

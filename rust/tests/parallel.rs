@@ -204,8 +204,16 @@ fn full_model_forward_bit_identical_across_threads() {
         (EngineKind::Rt3d, true),
         (EngineKind::Untuned, false),
     ] {
-        let e1 = NativeEngine::with_threads(&model, kind, sparse, 1);
-        let e4 = NativeEngine::with_threads(&model, kind, sparse, 4);
+        let e1 = NativeEngine::builder(&model)
+            .kind(kind)
+            .sparsity(sparse)
+            .threads(1)
+            .build();
+        let e4 = NativeEngine::builder(&model)
+            .kind(kind)
+            .sparsity(sparse)
+            .threads(4)
+            .build();
         let l1 = e1.forward(&clip);
         let l4 = e4.forward(&clip);
         assert_eq!(l1.data, l4.data, "{kind:?} sparse={sparse}");
@@ -256,9 +264,17 @@ fn full_model_simd_vs_scalar_bit_identical() {
     let input = model.manifest.input;
     let clip = Tensor5::random([2, input[0], input[1], input[2], input[3]], 151);
     for (kind, sparse) in [(EngineKind::Rt3d, false), (EngineKind::Rt3d, true)] {
-        let simd = NativeEngine::with_threads(&model, kind, sparse, 3);
-        let mut scalar = NativeEngine::with_threads(&model, kind, sparse, 3);
-        scalar.set_kernel(KernelArch::Scalar);
+        let simd = NativeEngine::builder(&model)
+            .kind(kind)
+            .sparsity(sparse)
+            .threads(3)
+            .build();
+        let scalar = NativeEngine::builder(&model)
+            .kind(kind)
+            .sparsity(sparse)
+            .threads(3)
+            .kernel(KernelArch::Scalar)
+            .build();
         assert_eq!(
             simd.forward(&clip).data,
             scalar.forward(&clip).data,
@@ -275,7 +291,7 @@ fn repeated_forwards_on_one_engine_are_stable() {
     // after warm-up (steady-state forward is allocation-free).
     let model = Model::synthetic_c3d(SyntheticC3d::tiny());
     let input = model.manifest.input;
-    let engine = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 4);
+    let engine = NativeEngine::builder(&model).sparsity(true).threads(4).build();
     let clip = Tensor5::random([2, input[0], input[1], input[2], input[3]], 161);
     let first = engine.forward(&clip);
     // Warm-up: let the recycled buffer capacities converge (best-fit may
@@ -383,15 +399,20 @@ fn engine_fused_matches_materialized_bitwise() {
     let input = model.manifest.input;
     let clip = Tensor5::random([2, input[0], input[1], input[2], input[3]], 221);
     for sparse in [false, true] {
-        let mut mat = NativeEngine::with_threads(&model, EngineKind::Rt3d, sparse, 1);
-        mat.set_fused(false);
+        let mat = NativeEngine::builder(&model)
+            .sparsity(sparse)
+            .threads(1)
+            .fused(false)
+            .build();
         let want = mat.forward(&clip);
-        let auto4 = NativeEngine::with_threads(&model, EngineKind::Rt3d, sparse, 4);
+        let auto4 = NativeEngine::builder(&model).sparsity(sparse).threads(4).build();
         assert_eq!(want.data, auto4.forward(&clip).data, "auto sparse={sparse}");
         for threads in [1usize, 4] {
-            let mut fus =
-                NativeEngine::with_threads(&model, EngineKind::Rt3d, sparse, threads);
-            fus.set_fused(true);
+            let fus = NativeEngine::builder(&model)
+                .sparsity(sparse)
+                .threads(threads)
+                .fused(true)
+                .build();
             assert_eq!(
                 want.data,
                 fus.forward(&clip).data,
@@ -399,7 +420,7 @@ fn engine_fused_matches_materialized_bitwise() {
             );
         }
         // Forks inherit the force and still share the core.
-        let fork = mat.fork_with_threads(2);
+        let fork = mat.forked(2);
         assert_eq!(want.data, fork.forward(&clip).data, "fork sparse={sparse}");
     }
 }
@@ -474,7 +495,7 @@ fn residual_concat_graph_recycles_buffers() {
     let model = Model::synthetic_residual(SyntheticC3d::tiny());
     let input = model.manifest.input;
     let clip = Tensor5::random([2, input[0], input[1], input[2], input[3]], 241);
-    let engine = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 4);
+    let engine = NativeEngine::builder(&model).sparsity(true).threads(4).build();
     let first = engine.forward(&clip);
     assert_eq!(first.rows, 2);
     assert!(first.data.iter().all(|v| v.is_finite()));
@@ -491,7 +512,7 @@ fn residual_concat_graph_recycles_buffers() {
         "branching graph must not allocate in steady state"
     );
     // Thread-count parity holds through the branching layers too.
-    let serial = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 1);
+    let serial = NativeEngine::builder(&model).sparsity(true).threads(1).build();
     assert_eq!(serial.forward(&clip).data, first.data);
 }
 
@@ -499,7 +520,7 @@ fn residual_concat_graph_recycles_buffers() {
 fn arena_reused_across_batch_sizes() {
     let model = Model::synthetic_c3d(SyntheticC3d::tiny());
     let input = model.manifest.input;
-    let engine = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 2);
+    let engine = NativeEngine::builder(&model).sparsity(true).threads(2).build();
     // Pre-sized at construction for batch 1.
     let (p0, o0) = engine.arena_capacities();
     assert!(p0 > 0 && o0 > 0, "arena must be pre-sized");
@@ -524,7 +545,7 @@ fn arena_reused_across_batch_sizes() {
     // Reuse never corrupts results: same input, same logits; and a fresh
     // engine agrees bit-for-bit.
     assert_eq!(r1a.data, r1b.data);
-    let fresh = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 2);
+    let fresh = NativeEngine::builder(&model).sparsity(true).threads(2).build();
     assert_eq!(fresh.forward(&clip3).data, r3.data);
     assert_eq!(fresh.forward(&clip1).data, r1a.data);
 }

@@ -5,7 +5,7 @@
 //! Compiled only with `--features pjrt` (needs the external `xla` crate).
 #![cfg(feature = "pjrt")]
 
-use rt3d::executors::{EngineKind, NativeEngine};
+use rt3d::executors::NativeEngine;
 use rt3d::model::Model;
 use rt3d::runtime::Runtime;
 use rt3d::tensor::Tensor5;
@@ -48,7 +48,7 @@ fn pjrt_dense_matches_native_engine() {
             [1, input[0], input[1], input[2], input[3]],
         )
         .unwrap();
-    let native = NativeEngine::new(&model, EngineKind::Rt3d, false);
+    let native = NativeEngine::builder(&model).build();
     let x = Tensor5::random([1, input[0], input[1], input[2], input[3]], 12);
     let pjrt_logits = exe.run(&x.data).unwrap();
     let native_logits = native.forward(&x);
@@ -89,7 +89,7 @@ fn pjrt_sparse_kgs_matches_masked_native() {
     let dims = [1, input[0], input[1], input[2], input[3]];
     let Some(path) = model.hlo_path("kgs_pallas_b1") else { return };
     let sparse_exe = rt.load(path, dims).unwrap();
-    let native_sparse = NativeEngine::new(&model, EngineKind::Rt3d, true);
+    let native_sparse = NativeEngine::builder(&model).sparsity(true).build();
     let x = Tensor5::random(dims, 14);
     let a = sparse_exe.run(&x.data).unwrap();
     let b = native_sparse.forward(&x);

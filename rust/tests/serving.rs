@@ -13,8 +13,8 @@
 //! * **shared core** — forked native engines share one compiled core
 //!   (no packed-weight clones) and keep kernel forcing per handle.
 
-use rt3d::coordinator::{BatcherConfig, Engine, Server, ServerConfig};
-use rt3d::executors::{EngineKind, NativeEngine};
+use rt3d::coordinator::{Backend, BatcherConfig, Server, ServerConfig};
+use rt3d::executors::NativeEngine;
 use rt3d::model::{Model, SyntheticC3d};
 use rt3d::tensor::{Mat, Tensor5};
 use rt3d::workload;
@@ -41,7 +41,7 @@ impl Gated {
     }
 }
 
-impl Engine for Gated {
+impl Backend for Gated {
     fn infer(&self, batch: Tensor5) -> Mat {
         let mut open = self.gate.lock().unwrap();
         while !*open {
@@ -116,7 +116,7 @@ fn saturation_answers_every_id_once_with_bounded_inflight() {
 
 /// Run `n` labelled clips through a server and return id -> logits.
 fn serve_collect(
-    engine: Arc<dyn Engine>,
+    engine: Arc<dyn Backend>,
     workers: usize,
     n: usize,
     frames: usize,
@@ -158,14 +158,14 @@ fn multi_worker_logits_bit_identical_to_single_worker() {
     let input = model.manifest.input;
     let n = 12;
     let single = serve_collect(
-        Arc::new(NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 2)),
+        Arc::new(NativeEngine::builder(&model).sparsity(true).threads(2).build()),
         1,
         n,
         input[1],
         input[2],
     );
     let multi = serve_collect(
-        Arc::new(NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 2)),
+        Arc::new(NativeEngine::builder(&model).sparsity(true).threads(2).build()),
         3,
         n,
         input[1],
@@ -186,7 +186,7 @@ fn more_workers_beat_one_on_a_slow_engine() {
     /// Fixed service time per batch — throughput is then purely a
     /// function of how many batches run concurrently.
     struct Slow;
-    impl Engine for Slow {
+    impl Backend for Slow {
         fn infer(&self, batch: Tensor5) -> Mat {
             std::thread::sleep(Duration::from_millis(10));
             Mat::zeros(batch.dims[0], 2)
@@ -244,7 +244,7 @@ fn more_workers_beat_one_on_a_slow_engine() {
 fn forked_native_engines_share_one_compiled_core() {
     let model = Model::synthetic_c3d(SyntheticC3d::tiny());
     let input = model.manifest.input;
-    let engine = NativeEngine::with_threads(&model, EngineKind::Rt3d, true, 2);
+    let engine = NativeEngine::builder(&model).sparsity(true).threads(2).build();
     let fork = engine.fork();
     assert!(
         Arc::ptr_eq(engine.core(), fork.core()),
@@ -261,7 +261,7 @@ fn forked_native_engines_share_one_compiled_core() {
     // shared core: the original keeps its auto selection.
     let mut scalar = engine.fork();
     scalar.set_kernel(rt3d::codegen::KernelArch::Scalar);
-    let narrower = scalar.fork_with_threads(1);
+    let narrower = scalar.forked(1);
     assert_eq!(narrower.kernel(), rt3d::codegen::KernelArch::Scalar);
     assert_eq!(narrower.threads(), 1);
     assert_eq!(

@@ -1,0 +1,112 @@
+//! Streaming `Session` tests over the real native engine: for
+//! stride == window the streamed windows must reproduce the pre-chopped
+//! clip path **bit for bit** (the windowing is pure bookkeeping; batching
+//! cannot change per-element accumulation order), results arrive in
+//! stream order even with several serving workers, and overlapping
+//! strides assemble exactly the frames they claim.
+
+use rt3d::coordinator::{Server, ServerConfig, Session, SessionConfig};
+use rt3d::executors::NativeEngine;
+use rt3d::model::{Model, SyntheticC3d};
+use rt3d::tensor::Tensor5;
+use rt3d::workload;
+use std::sync::Arc;
+
+fn server_over(model: &Model, workers: usize) -> (Arc<NativeEngine>, Server) {
+    let engine =
+        Arc::new(NativeEngine::builder(model).sparsity(true).threads(2).build());
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig::new()
+            .max_batch(3)
+            .max_wait(std::time::Duration::from_millis(2))
+            .queue_depth(16)
+            .workers(workers),
+    );
+    (engine, server)
+}
+
+#[test]
+fn stride_equals_window_matches_prechopped_clips_bitwise() {
+    let model = Model::synthetic_c3d(SyntheticC3d::tiny());
+    let input = model.manifest.input;
+    let n_clips = 6;
+    let clips: Vec<Tensor5> = (0..n_clips)
+        .map(|i| workload::make_clip(i % 8, 40 + i as u64, input[1], input[2]))
+        .collect();
+
+    // Reference: the pre-chopped path, one forward per clip on a plain
+    // engine handle (no serving pipeline at all).
+    let reference = NativeEngine::builder(&model).sparsity(true).threads(2).build();
+    let want: Vec<Vec<f32>> =
+        clips.iter().map(|c| reference.forward(c).row(0).to_vec()).collect();
+
+    // Streamed: the same clips played as one continuous frame stream
+    // through a 3-worker batched server — out-of-order completion is
+    // likely, delivery order must not be.
+    let (engine, server) = server_over(&model, 3);
+    let cfg = SessionConfig::for_backend(engine.as_ref()).unwrap();
+    assert_eq!(cfg.window, input[1]);
+    assert_eq!(cfg.frame_dims, [input[0], input[2], input[3]]);
+    let mut session = Session::new(&server, cfg).unwrap();
+    for clip in &clips {
+        assert_eq!(session.push_clip(clip).unwrap(), 1);
+    }
+    let results = session.finish().unwrap();
+    server.shutdown();
+
+    assert_eq!(results.len(), n_clips);
+    for (i, win) in results.iter().enumerate() {
+        assert_eq!(win.window, i, "windows must arrive in stream order");
+        assert_eq!(win.first_frame, i * input[1]);
+        assert_eq!(
+            win.logits, want[i],
+            "window {i}: streamed logits must be bit-identical to the \
+             pre-chopped clip forward"
+        );
+    }
+}
+
+#[test]
+fn overlapping_windows_match_manually_assembled_clips() {
+    let model = Model::synthetic_c3d(SyntheticC3d::tiny());
+    let input = model.manifest.input;
+    let (c, d, h, w) = (input[0], input[1], input[2], input[3]);
+    let stride = d / 2; // 50% overlap
+    assert!(stride >= 1);
+
+    // One long random "video" of 2.5 windows worth of frames.
+    let frames_total = d * 2 + stride;
+    let video = Tensor5::random([1, c, frames_total, h, w], 77);
+
+    let reference = NativeEngine::builder(&model).sparsity(true).threads(2).build();
+    let (engine, server) = server_over(&model, 2);
+    let cfg = SessionConfig::for_backend(engine.as_ref()).unwrap().stride(stride);
+    let mut session = Session::new(&server, cfg).unwrap();
+    let submitted = session.push_clip(&video).unwrap();
+    let expected_windows = (frames_total - d) / stride + 1;
+    assert_eq!(submitted, expected_windows);
+    let results = session.finish().unwrap();
+    server.shutdown();
+
+    let hw = h * w;
+    for (wi, win) in results.iter().enumerate() {
+        assert_eq!(win.first_frame, wi * stride);
+        // Manually slice frames [wi*stride, wi*stride + d) out of the
+        // video and run them as a clip — must agree bit for bit.
+        let mut clip = Tensor5::zeros([1, c, d, h, w]);
+        for di in 0..d {
+            for ci in 0..c {
+                let src = video.idx(0, ci, wi * stride + di, 0, 0);
+                let dst = clip.idx(0, ci, di, 0, 0);
+                clip.data[dst..dst + hw]
+                    .copy_from_slice(&video.data[src..src + hw]);
+            }
+        }
+        assert_eq!(
+            win.logits,
+            reference.forward(&clip).row(0).to_vec(),
+            "window {wi} diverged from its manually assembled clip"
+        );
+    }
+}
