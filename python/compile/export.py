@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from . import nn
+from . import quantize
 from .kernels import ref as kref
 from .kernels.conv3d_kgs import compact_kgs, conv3d_kgs
 from .kernels.conv3d_vanilla import compact_vanilla, conv3d_vanilla
@@ -173,13 +174,21 @@ class TensorPool:
 
 
 def annotate_ir(specs, params, pool, unit_masks=None, weight_masks=None,
-                sparse_params=None):
+                sparse_params=None, calibration=None):
     """Deep-copy the IR, attaching weight/mask refs to conv + dense nodes.
 
     ``params`` are the DENSE model weights (pre-pruning); when the sparse
     deployment exists, ``sparse_params`` carries the pruned+retrained
     weights (stored masked under "weights_sparse" so the two deployments
     are independently correct).
+
+    Every conv3d node additionally carries a ``"quant"`` block:
+    per-output-channel symmetric absmax weight scales plus an optional
+    static input scale (``calibration`` maps layer name -> a captured
+    input activation tensor for that layer; absent, ``in_scale`` is null
+    and the runtime scales activations dynamically per forward). Scales
+    come from the dense weights — the sparse deployment's surviving taps
+    are a subset, so the grid stays valid for both plans.
     """
     out = []
     for s in specs:
@@ -202,19 +211,23 @@ def annotate_ir(specs, params, pool, unit_masks=None, weight_masks=None,
                     "w": pool.add(w),
                     "b": pool.add(np.asarray(sp["b"], dtype=np.float32)),
                 }
+            if k == "conv3d":
+                calib = calibration.get(s["name"]) if calibration else None
+                s["quant"] = quantize.conv_quant_info(p["w"], calib)
             if k == "conv3d" and unit_masks and s["name"] in unit_masks:
                 s["unit_mask"] = pool.add(
                     np.asarray(unit_masks[s["name"]], dtype=bool)
                 )
         elif k == "residual":
             s["body"] = annotate_ir(s["body"], params, pool, unit_masks,
-                                    weight_masks, sparse_params)
+                                    weight_masks, sparse_params, calibration)
             s["shortcut"] = annotate_ir(s["shortcut"], params, pool,
-                                        unit_masks, weight_masks, sparse_params)
+                                        unit_masks, weight_masks,
+                                        sparse_params, calibration)
         elif k == "concat":
             s["branches"] = [
                 annotate_ir(b, params, pool, unit_masks, weight_masks,
-                            sparse_params)
+                            sparse_params, calibration)
                 for b in s["branches"]
             ]
         out.append(s)
@@ -223,11 +236,14 @@ def annotate_ir(specs, params, pool, unit_masks=None, weight_masks=None,
 
 def export_model(outdir, model_name, specs, params, *, in_shape=(3, 16, 32, 32),
                  sparse=None, batches=(1, 4), eval_acc=None,
-                 pallas_batches=(1,), extra=None):
+                 pallas_batches=(1,), extra=None, calibration=None):
     """Write all artifacts for one model.
 
     sparse: optional dict {scheme, g_m, g_n, rate, unit_masks, weight_masks,
     acc} — adds the sparse HLO + annotated masks.
+    calibration: optional dict {conv name: input activation tensor} — pins
+    static int8 input scales in each conv's "quant" block; without it the
+    runtime falls back to dynamic per-forward activation scaling.
     """
     os.makedirs(outdir, exist_ok=True)
     pool = TensorPool()
@@ -235,7 +251,7 @@ def export_model(outdir, model_name, specs, params, *, in_shape=(3, 16, 32, 32),
     weight_masks = sparse["weight_masks"] if sparse else None
     sparse_params = sparse.get("params") if sparse else None
     ir = annotate_ir(specs, params, pool, unit_masks, weight_masks,
-                     sparse_params)
+                     sparse_params, calibration)
 
     hlo = {}
     for b in batches:

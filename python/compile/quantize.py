@@ -1,0 +1,91 @@
+"""Pure-numpy reference quantizer for the int8 deployment path.
+
+Mirrors the Rust side (``codegen::plan``) bit-for-bit so differential
+tests can compare artifacts and executors without tolerance fudging:
+
+* ``quant_scale``: symmetric absmax scale, ``absmax / 127`` (``1.0`` for
+  an all-zero span, so quantization is a well-defined no-op).
+* ``quantize``: ``round(v * (1/scale))`` clamped to ``[-127, 127]``,
+  computed in float32. The rounding convention is **half away from
+  zero** — Rust's ``f32::round`` — NOT ``np.round``, which rounds half
+  to even (banker's rounding) and would disagree on every exact .5
+  midpoint.
+* ``weight_scales``: one scale per output channel (axis 0 of the weight
+  tensor), matching the per-row grid the Rust packer uses.
+
+The exporter (``export.annotate_ir``) calls :func:`conv_quant_info` to
+attach a ``"quant"`` block to every conv3d manifest node; the Rust
+manifest parser reads it as ``QuantInfo { w_scales, in_scale }`` and
+``apply_quant`` installs the scales into the compiled plan.
+"""
+
+import numpy as np
+
+
+def quant_scale(absmax):
+    """Symmetric int8 scale for a span with the given absolute maximum."""
+    absmax = float(absmax)
+    return absmax / 127.0 if absmax > 0.0 else 1.0
+
+
+def round_half_away(x):
+    """Round half away from zero, elementwise (Rust ``f32::round``).
+
+    ``np.round`` is half-to-even and diverges at midpoints (e.g. 0.5 ->
+    0.0 vs 1.0 here), so it must never be used on the quantization path.
+    """
+    x = np.asarray(x, dtype=np.float32)
+    return np.sign(x) * np.floor(np.abs(x) + np.float32(0.5))
+
+
+def quantize(x, scale):
+    """Quantize float values onto an int8 grid with the given scale.
+
+    Matches Rust ``quantize_span``: the value is multiplied by the f32
+    reciprocal of the scale (not divided), rounded half away from zero,
+    and clamped to the symmetric range [-127, 127].
+    """
+    inv = np.float32(1.0) / np.float32(scale)
+    q = round_half_away(np.asarray(x, dtype=np.float32) * inv)
+    return np.clip(q, -127, 127).astype(np.int8)
+
+
+def dequantize(q, scale):
+    """Map int8 grid points back to float32 (``q * scale``)."""
+    return np.asarray(q, dtype=np.float32) * np.float32(scale)
+
+
+def weight_scales(w):
+    """Per-output-channel absmax scales for a conv/dense weight tensor.
+
+    ``w`` has shape ``(out_ch, ...)``; each channel's scale is computed
+    over all of its taps, so every row of the packed GEMM operand shares
+    one grid — exactly the layout ``int8_row_scales`` produces in Rust.
+    """
+    w = np.asarray(w, dtype=np.float32)
+    flat = w.reshape(w.shape[0], -1)
+    return np.array(
+        [quant_scale(np.max(np.abs(row)) if row.size else 0.0) for row in flat],
+        dtype=np.float32,
+    )
+
+
+def input_scale(x):
+    """Per-tensor activation scale from a calibration batch (absmax)."""
+    x = np.asarray(x, dtype=np.float32)
+    return quant_scale(np.max(np.abs(x)) if x.size else 0.0)
+
+
+def conv_quant_info(w, calibration=None):
+    """Build the manifest ``"quant"`` block for one conv3d layer.
+
+    Returns ``{"w_scales": [...], "in_scale": float | None}``. Without a
+    calibration tensor the input scale is left ``None`` and the runtime
+    falls back to dynamic per-forward activation scaling (absmax of the
+    layer input), which is its default and is always safe.
+    """
+    info = {"w_scales": [float(s) for s in weight_scales(w)]}
+    info["in_scale"] = (
+        float(input_scale(calibration)) if calibration is not None else None
+    )
+    return info

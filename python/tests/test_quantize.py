@@ -1,0 +1,72 @@
+# Reference quantizer: scale formula, rounding convention, manifest emission.
+import json
+
+import numpy as np
+
+from compile import models, nn, quantize
+from compile.export import TensorPool, annotate_ir
+
+
+def test_quant_scale_absmax_over_127_and_zero_span():
+    assert quantize.quant_scale(12.7) == np.float32(12.7 / 127.0)
+    assert quantize.quant_scale(0.0) == 1.0  # all-zero span: identity grid
+    assert quantize.input_scale(np.zeros((2, 3), np.float32)) == 1.0
+    assert quantize.input_scale(np.array([], np.float32)) == 1.0
+
+
+def test_rounding_is_half_away_from_zero_not_bankers():
+    # Exact .5 midpoints: rust f32::round gives ±1, ±2; np.round (half to
+    # even) would give 0, ±2 — the conventions must visibly disagree here
+    # or this test guards nothing.
+    v = np.array([0.5, -0.5, 1.5, -1.5, 2.5], np.float32)
+    got = quantize.quantize(v, 1.0)
+    np.testing.assert_array_equal(got, [1, -1, 2, -2, 3])
+    bankers = np.round(v)
+    assert not np.array_equal(got, bankers), "np.round crept in"
+
+
+def test_quantize_clamps_and_round_trips():
+    s = quantize.quant_scale(4.0)
+    v = np.array([4.0, -4.0, 9.9, -9.9, 0.0], np.float32)
+    q = quantize.quantize(v, s)
+    np.testing.assert_array_equal(q, [127, -127, 127, -127, 0])
+    # In-range values survive a round trip to within half a grid step.
+    rng = np.random.default_rng(0)
+    v = rng.uniform(-4.0, 4.0, size=256).astype(np.float32)
+    err = np.abs(quantize.dequantize(quantize.quantize(v, s), s) - v)
+    assert float(err.max()) <= s / 2 + 1e-6
+
+
+def test_weight_scales_are_per_output_channel():
+    w = np.zeros((3, 2, 2, 2, 2), np.float32)
+    w[0] = 1.27
+    w[1, 1, 1, 0, 0] = -63.5
+    # channel 2 all zero -> scale 1.0
+    s = quantize.weight_scales(w)
+    assert s.shape == (3,)
+    np.testing.assert_allclose(s, [0.01, 0.5, 1.0], rtol=1e-6)
+
+
+def test_annotate_ir_emits_quant_block_json_round_trip():
+    specs = models.build("c3d", width=4, frames=8, size=16)
+    params = nn.init_params(specs, seed=0)
+    calib = {specs[0]["name"]: np.full((1, 3, 8, 16, 16), 2.54, np.float32)}
+    ir = annotate_ir(specs, params, TensorPool(), calibration=calib)
+    # Survives JSON (plain floats / null, no numpy scalars).
+    ir = json.loads(json.dumps(ir))
+    convs = [s for s in ir if s["kind"] == "conv3d"]
+    assert convs, "no conv3d nodes in the c3d IR"
+    for s in convs:
+        q = s["quant"]
+        assert len(q["w_scales"]) == s["out_ch"]
+        want = quantize.weight_scales(params[s["name"]]["w"])
+        np.testing.assert_allclose(q["w_scales"], want, rtol=1e-6)
+        assert all(v > 0 for v in q["w_scales"])
+    # Only the calibrated layer gets a static input scale.
+    assert convs[0]["quant"]["in_scale"] == np.float32(2.54 / 127.0)
+    for s in convs[1:]:
+        assert s["quant"]["in_scale"] is None
+    # Dense nodes carry weights but no quant block (f32 classifier head).
+    for s in ir:
+        if s["kind"] == "dense":
+            assert "quant" not in s

@@ -13,11 +13,14 @@
 //! at the repo root with detected ISA, selected kernel and per-shape
 //! GFLOP/s.
 
-use rt3d::codegen::{self, GemmTile, KernelArch, PackedDense};
+use rt3d::codegen::{
+    self, absmax, quant_scale, quantize_span, GemmTile, KernelArch, PackedDense,
+    PackedDenseI8,
+};
 use rt3d::executors::gemm::{self, GemmCtx};
 use rt3d::executors::{self, AccSlabs, ScratchArena};
 use rt3d::model::{ConvLayer, TensorRef, WeightRefs};
-use rt3d::tensor::{Conv3dGeometry, Mat, Tensor5};
+use rt3d::tensor::{Conv3dGeometry, Mat, MatI8, Tensor5};
 use rt3d::util::bench::{budget_from_env, write_repo_json, BenchGroup};
 use rt3d::util::pool::ThreadPool;
 
@@ -41,6 +44,8 @@ fn main() {
     let tile = GemmTile::default();
     let mut group = BenchGroup::new("gemm_kernels").budget(budget_from_env(2000));
     let mut entries = Vec::new();
+    let mut int8_entries = Vec::new();
+    let (mut int8_best, mut int8_speedup_best) = (0.0f64, 0.0f64);
     for (m, k, r) in shapes {
         let w = Mat::random(m, k, 1);
         let p = Mat::random(k, r, 2);
@@ -81,6 +86,67 @@ fn main() {
         let mut b = Mat::zeros(m, r);
         gemm::gemm_dense_packed(&packed, &p, &mut b, &simd_ctx);
         assert_eq!(a.data, b.data, "SIMD output must be bit-identical to scalar");
+
+        // ---- int8 widening kernels on the same shape ------------------
+        // Pre-quantized operands (per-row weight scales, one patch-matrix
+        // scale) so the timed region is exactly the widening GEMM +
+        // requant epilogue — the work `RT3D_PRECISION=int8` moves onto
+        // every layer's inner loop.
+        let scales: Vec<f32> =
+            (0..m).map(|i| quant_scale(absmax(w.row(i)))).collect();
+        let mut qw = vec![0i8; m * k];
+        for i in 0..m {
+            quantize_span(w.row(i), 1.0 / scales[i], &mut qw[i * k..(i + 1) * k]);
+        }
+        let qpacked = PackedDenseI8::pack(&qw, m, k, tile.mr);
+        let in_scale = quant_scale(absmax(&p.data));
+        let mut qp = MatI8::zeros(k, r);
+        quantize_span(&p.data, 1.0 / in_scale, &mut qp.data);
+        let t_i8_scalar = group
+            .bench(&format!("int8_scalar/{m}x{k}x{r}"), || {
+                gemm::gemm_dense_packed_i8(
+                    &qpacked, &scales, in_scale, &qp, &mut out, &scalar_ctx,
+                );
+            })
+            .median_s;
+        let t_i8_simd = group
+            .bench(&format!("int8_{}/{m}x{k}x{r}", active.name()), || {
+                gemm::gemm_dense_packed_i8(
+                    &qpacked, &scales, in_scale, &qp, &mut out, &simd_ctx,
+                );
+            })
+            .median_s;
+        let mut ia = Mat::zeros(m, r);
+        gemm::gemm_dense_packed_i8(
+            &qpacked, &scales, in_scale, &qp, &mut ia, &scalar_ctx,
+        );
+        let mut ib = Mat::zeros(m, r);
+        gemm::gemm_dense_packed_i8(
+            &qpacked, &scales, in_scale, &qp, &mut ib, &simd_ctx,
+        );
+        assert_eq!(
+            ia.data, ib.data,
+            "int8 SIMD output must be bit-identical to int8 scalar"
+        );
+        let t_i8 = t_i8_simd.min(t_i8_scalar);
+        let i8_speedup = t_packed_simd / t_i8;
+        int8_best = int8_best.max(gflop / t_i8);
+        int8_speedup_best = int8_speedup_best.max(i8_speedup);
+        println!(
+            "gemm {m}x{k}x{r} int8: scalar {:.2} GFLOP/s, {} {:.2} GFLOP/s, \
+             speedup vs f32 simd {i8_speedup:.2}x",
+            gflop / t_i8_scalar,
+            active.name(),
+            gflop / t_i8_simd
+        );
+        int8_entries.push(format!(
+            "    {{\"m\": {m}, \"k\": {k}, \"r\": {r}, \
+             \"int8_scalar_gflops\": {:.4}, \"int8_simd_gflops\": {:.4}, \
+             \"speedup_vs_f32_simd\": {:.4}}}",
+            gflop / t_i8_scalar,
+            gflop / t_i8_simd,
+            i8_speedup
+        ));
 
         let speedup = t_pr1 / t_packed_simd;
         for (label, t) in [
@@ -131,6 +197,7 @@ fn main() {
             weights: WeightRefs { w: dummy.clone(), b: dummy },
             weights_sparse: None,
             unit_mask: None,
+            quant: None,
         };
         let g = Conv3dGeometry {
             in_ch: c,
@@ -200,8 +267,9 @@ fn main() {
          \"isa_detected\": \"{}\",\n  \"kernel\": \"{}\",\n  \
          \"simd_lanes\": {},\n  \"tile\": {{\"mr\": {}, \"rc\": {}, \"kc\": {}}},\n  \
          \"fused_best_gflops\": {:.4},\n  \"materialized_best_gflops\": {:.4},\n  \
+         \"int8_best_gflops\": {:.4},\n  \"int8_speedup_vs_f32\": {:.4},\n  \
          \"fused_peak_scratch_mb\": {:.3},\n  \"materialized_peak_scratch_mb\": {:.3},\n  \
-         \"shapes\": [\n{}\n  ],\n  \"fused\": [\n{}\n  ]\n}}\n",
+         \"shapes\": [\n{}\n  ],\n  \"int8\": [\n{}\n  ],\n  \"fused\": [\n{}\n  ]\n}}\n",
         pool.threads(),
         KernelArch::best_supported().name(),
         active.name(),
@@ -211,9 +279,12 @@ fn main() {
         tile.kc,
         fused_best,
         mat_best,
+        int8_best,
+        int8_speedup_best,
         fused_peak as f64 / (1024.0 * 1024.0),
         mat_peak as f64 / (1024.0 * 1024.0),
         entries.join(",\n"),
+        int8_entries.join(",\n"),
         fused_entries.join(",\n")
     );
     let out = write_repo_json("BENCH_gemm_kernels.json", &json);

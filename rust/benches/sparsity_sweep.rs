@@ -28,6 +28,7 @@ fn main() {
         weights: WeightRefs { w: dummy.clone(), b: dummy },
         weights_sparse: None,
         unit_mask: None,
+        quant: None,
     };
     let geom = Conv3dGeometry {
         in_ch: ch,

@@ -25,6 +25,7 @@ fn conv(m: usize, c: usize) -> (ConvLayer, Conv3dGeometry) {
         weights: WeightRefs { w: dummy.clone(), b: dummy },
         weights_sparse: None,
         unit_mask: None,
+        quant: None,
     };
     let geom = Conv3dGeometry {
         in_ch: c,

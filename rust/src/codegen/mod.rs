@@ -17,8 +17,9 @@ pub mod plan;
 pub mod tuner;
 
 pub use plan::{
-    CompiledConv, ConvCall, ConvKind, FuseMode, GemmTile, KernelArch, KgsGroup,
-    PackedDense, PanelSchedule, FUSE_PATCH_BYTES,
+    absmax, quant_scale, quantize_span, CompiledConv, ConvCall, ConvKind,
+    FuseMode, GemmTile, GroupI8, Int8Plan, KernelArch, KgsGroup, PackedDense,
+    PackedDenseI8, PanelSchedule, Precision, FUSE_PATCH_BYTES,
 };
 
 use crate::model::{ConvLayer, Model};
@@ -70,13 +71,20 @@ pub fn compile_model(model: &Model, use_sparsity: bool) -> Vec<CompiledConv> {
             };
             let w = model.pool.f32(&refs.w);
             let b = model.pool.f32(&refs.b);
-            match (&layer.unit_mask, scheme, use_sparsity) {
+            let mut cc = match (&layer.unit_mask, scheme, use_sparsity) {
                 (Some(mr), Some(sch), true) => {
                     let mask = model.pool.bool(mr);
                     compile_conv_sparse(layer, &geom, &w, b, &mask, sch, g_m, g_n)
                 }
                 _ => compile_conv_dense(layer, &geom, &w, b),
+            };
+            // Artifact-provided quantization scales (export.py) override
+            // the compile-time recomputation so the deployed int8 path
+            // matches the exporting quantizer exactly.
+            if let Some(q) = &layer.quant {
+                cc.apply_quant(&q.w_scales, q.in_scale);
             }
+            cc
         })
         .collect()
 }
@@ -102,6 +110,7 @@ pub fn compile_conv_dense(
         kernel: None,
         threads: 0,
         fused: None,
+        int8: None,
         flops: geom.flops(1),
     };
     cc.finalize();
@@ -201,6 +210,7 @@ fn compile_kgs(
         kernel: None,
         threads: 0,
         fused: None,
+        int8: None,
     };
     cc.finalize();
     cc
@@ -262,6 +272,7 @@ fn compile_vanilla(
         kernel: None,
         threads: 0,
         fused: None,
+        int8: None,
     };
     cc.finalize();
     cc
@@ -297,6 +308,7 @@ fn compile_filter(
         kernel: None,
         threads: 0,
         fused: None,
+        int8: None,
     };
     cc.finalize();
     cc
@@ -318,8 +330,9 @@ mod tests {
             padding: [k[0] / 2, k[1] / 2, k[2] / 2],
             relu: false,
             weights: WeightRefs { w: dummy.clone(), b: dummy },
-        weights_sparse: None,
+            weights_sparse: None,
             unit_mask: None,
+            quant: None,
         }
     }
 

@@ -74,6 +74,93 @@ impl FuseMode {
     }
 }
 
+/// Arithmetic precision a plan executes at.
+///
+/// * `F32` — the paper pipeline: f32 weights, f32 accumulation, the
+///   crate-wide bit-identity invariant (fixed K accumulation order).
+/// * `Int8` — symmetric per-output-channel quantized weights
+///   (`absmax/127`, [`quant_scale`]) against per-call quantized
+///   activations, i32 accumulation, and an f32 requant epilogue
+///   (`acc * w_scale[row] * in_scale`, then bias/ReLU). Integer addition
+///   is associative and commutative, so the int8 path is bit-identical
+///   *within itself* (scalar ↔ SIMD ↔ fused ↔ materialized ↔ any thread
+///   count) by construction; against f32 it is tolerance-gated
+///   (`tests/quantize.rs`).
+///
+/// Selected via `EngineOptions::precision` > `RT3D_PRECISION` > `F32`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    Int8,
+}
+
+impl Precision {
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "" | "f32" | "fp32" | "float" => Some(Precision::F32),
+            "int8" | "i8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn from_env() -> Precision {
+        match crate::util::env::precision() {
+            Some(v) => Precision::parse(v.trim()).unwrap_or_else(|| {
+                eprintln!("RT3D_PRECISION={v:?} not recognized; using f32");
+                Precision::F32
+            }),
+            None => Precision::F32,
+        }
+    }
+
+    /// Process-wide default (env resolved once); an explicit
+    /// `EngineOptions::precision` outranks it per engine handle.
+    pub fn active() -> Precision {
+        static PREC: OnceLock<Precision> = OnceLock::new();
+        *PREC.get_or_init(Precision::from_env)
+    }
+}
+
+/// Symmetric quantization scale for a span with the given absolute
+/// maximum: `absmax / 127` so the span maps onto `[-127, 127]`; an
+/// all-zero span gets scale 1.0 (its quantized values are all zero
+/// anyway, and a zero scale would poison the requant multiplier).
+pub fn quant_scale(absmax: f32) -> f32 {
+    if absmax > 0.0 {
+        absmax / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Largest |v| over a span (0.0 for an empty span). An exact max
+/// reduction — order-independent, so dynamic activation scales are
+/// deterministic regardless of how the span was produced.
+pub fn absmax(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+/// Quantize `src` into `dst` with the given inverse scale:
+/// `round(v * inv_scale)` clamped to `[-127, 127]` (round half away from
+/// zero — `f32::round`; the python reference quantizer matches this
+/// exactly). The **single** quantization routine in the crate: every
+/// weight panel and every activation span goes through here, so the
+/// fused and materialized paths quantize identical f32 values to
+/// identical i8 values.
+pub fn quantize_span(src: &[f32], inv_scale: f32, dst: &mut [i8]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = (s * inv_scale).round().clamp(-127.0, 127.0) as i8;
+    }
+}
+
 /// Untuned layers default to the fused path once the materialized patch
 /// matrix would exceed this many bytes at batch 1 (~the L2 capacity class:
 /// beyond it the `(K, R)` matrix round-trips through DRAM, which is what
@@ -246,6 +333,53 @@ impl PackedDense {
     }
 }
 
+/// The int8 sibling of [`PackedDense`]: identical mr-major k-contiguous
+/// panel layout (`data[p*mr*K + ki*rows + i] == qmat[(p*mr+i)*K + ki]`),
+/// holding per-output-channel symmetrically quantized weights. A quarter
+/// of the f32 layout's bytes — the bandwidth win the int8 path exists for.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedDenseI8 {
+    pub m: usize,
+    pub k: usize,
+    pub mr: usize,
+    pub data: Vec<i8>,
+}
+
+impl PackedDenseI8 {
+    pub fn pack(qmat: &[i8], m: usize, k: usize, mr: usize) -> PackedDenseI8 {
+        let mr = mr.max(1);
+        assert_eq!(qmat.len(), m * k, "quantized weight matrix shape");
+        let mut data = vec![0i8; m * k];
+        let mut off = 0;
+        let mut m0 = 0;
+        while m0 < m {
+            let rows = mr.min(m - m0);
+            for ki in 0..k {
+                for i in 0..rows {
+                    data[off + ki * rows + i] = qmat[(m0 + i) * k + ki];
+                }
+            }
+            off += rows * k;
+            m0 += rows;
+        }
+        PackedDenseI8 { m, k, mr, data }
+    }
+
+    pub fn panels(&self) -> usize {
+        self.m.div_ceil(self.mr)
+    }
+
+    pub fn panel_rows(&self, p: usize) -> usize {
+        self.mr.min(self.m - p * self.mr)
+    }
+
+    /// Panel `p`'s packed block: `panel_rows(p) * k` bytes, k-major.
+    pub fn panel(&self, p: usize) -> &[i8] {
+        let off = p * self.mr * self.k;
+        &self.data[off..off + self.panel_rows(p) * self.k]
+    }
+}
+
 /// One kernel group's compacted panel (KGS) or one kept channel-group panel
 /// (Vanilla): `panel` is (m_eff x cols.len()) row-major; `cols[j]` is the
 /// row of the transposed patch matrix feeding column j.
@@ -334,6 +468,41 @@ impl PanelSchedule {
     }
 }
 
+/// One sparse group's quantized panel, always stored column-major
+/// (`cm[j*m_eff + i]` is the weight of output row `m0+i`, gathered
+/// column `j`) — for `m_eff == 1` column-major and row-major coincide,
+/// so the int8 kernel has a single layout to stream.
+#[derive(Debug, Clone)]
+pub struct GroupI8 {
+    pub panel_cm: Vec<i8>,
+}
+
+/// The quantized execution sidecar of a [`CompiledConv`], built by
+/// [`CompiledConv::finalize`] alongside the f32 layouts (~25% extra
+/// weight memory) so one shared [`crate::executors::EngineCore`] can
+/// serve both precisions and the differential tests diff them in-process.
+#[derive(Debug, Clone)]
+pub struct Int8Plan {
+    /// Per-output-row dequantization scale (`absmax/127`, 1.0 for
+    /// all-zero rows). Indexed by **compact** row for `Filter` plans and
+    /// by absolute output channel otherwise; for sparse plans every
+    /// group touching a row shares that row's scale, so the requant-add
+    /// over groups is exact per element.
+    pub scales: Vec<f32>,
+    /// Static activation scale from the exported artifact; `None` =
+    /// dynamic per-call absmax quantization of the layer input.
+    pub in_scale: Option<f32>,
+    /// `scales` came from the exported artifact ([`CompiledConv::
+    /// apply_quant`]) and survive repacking; recomputed ones are rebuilt
+    /// from the f32 weights on every [`CompiledConv::finalize`].
+    pub provided: bool,
+    /// mr-major quantized panels for Dense/Filter plans.
+    pub packed: Option<PackedDenseI8>,
+    /// Quantized group panels for Kgs/Vanilla plans, parallel to the f32
+    /// group list.
+    pub groups: Vec<GroupI8>,
+}
+
 /// Executor-ready form of one conv layer.
 #[derive(Debug, Clone)]
 pub enum ConvKind {
@@ -372,6 +541,9 @@ pub struct CompiledConv {
     /// ([`Self::fused_default`]). An explicit engine option or the
     /// `RT3D_FUSE=on|off` policy overrides both ([`Self::resolve_fused`]).
     pub fused: Option<bool>,
+    /// Quantized execution sidecar (built by [`Self::finalize`]); `None`
+    /// only for hand-rolled plans, which can only execute at f32.
+    pub int8: Option<Int8Plan>,
     /// Actual FLOPs per clip after compaction (2*MACs).
     pub flops: usize,
 }
@@ -399,6 +571,9 @@ pub struct ConvCall<'a> {
     /// per-call/builder force, then `RT3D_FUSE=on|off`, then the plan's
     /// tuned flag, then the footprint heuristic.
     pub fused: bool,
+    /// Resolved arithmetic precision for this call. Downgraded to `F32`
+    /// when the plan has no quantized sidecar (hand-rolled plans).
+    pub precision: Precision,
 }
 
 impl CompiledConv {
@@ -440,9 +615,27 @@ impl CompiledConv {
         force: Option<KernelArch>,
         force_fused: Option<bool>,
     ) -> ConvCall<'_> {
+        self.bind_exec(in_spatial, force, force_fused, Precision::active())
+    }
+
+    /// [`Self::bind_full`] plus the resolved arithmetic precision (the
+    /// engine passes its handle-level resolution: explicit option >
+    /// `RT3D_PRECISION` > f32). A requested `Int8` silently downgrades
+    /// to `F32` when the plan carries no quantized sidecar.
+    pub fn bind_exec(
+        &self,
+        in_spatial: [usize; 3],
+        force: Option<KernelArch>,
+        force_fused: Option<bool>,
+        precision: Precision,
+    ) -> ConvCall<'_> {
         let geom = Conv3dGeometry { in_spatial, ..self.geom };
         let fused =
             Self::resolve_fused(force_fused, FuseMode::active(), self.fused, &geom);
+        let precision = match precision {
+            Precision::Int8 if self.int8.is_some() => Precision::Int8,
+            _ => Precision::F32,
+        };
         ConvCall {
             cc: self,
             geom,
@@ -454,6 +647,7 @@ impl CompiledConv {
                 .unwrap_or_else(KernelArch::active),
             cap: if self.threads == 0 { usize::MAX } else { self.threads },
             fused,
+            precision,
         }
     }
 
@@ -511,8 +705,11 @@ impl CompiledConv {
     }
 
     /// Build the derived execution layouts (packed dense panels / sparse
-    /// bucket schedule) for the current `tile`. Codegen calls this once
-    /// per plan; call it again after mutating `kind` by hand.
+    /// bucket schedule, plus the quantized int8 sidecar) for the current
+    /// `tile`. Codegen calls this once per plan; call it again after
+    /// mutating `kind` by hand. Artifact-provided quantization scales
+    /// ([`Self::apply_quant`]) are preserved across repacks; recomputed
+    /// scales are rebuilt from the f32 weights.
     pub fn finalize(&mut self) {
         match &self.kind {
             ConvKind::Dense { wmat } => {
@@ -535,6 +732,126 @@ impl CompiledConv {
                 self.sched = Some(PanelSchedule::build(groups, self.geom.out_ch));
             }
         }
+        let (scales, in_scale, provided) = match self.int8.take() {
+            Some(prev) if prev.provided => {
+                (prev.scales, prev.in_scale, true)
+            }
+            _ => (self.int8_row_scales(), None, false),
+        };
+        self.int8 = Some(self.build_int8(scales, in_scale, provided));
+    }
+
+    /// Default per-row quantization scales from the f32 weights:
+    /// symmetric absmax over each output row's kept weights. Length is
+    /// the plan's row-index space (compact rows for `Filter`, absolute
+    /// output channels otherwise).
+    fn int8_row_scales(&self) -> Vec<f32> {
+        let k = self.geom.cols().max(1);
+        let maxes: Vec<f32> = match &self.kind {
+            ConvKind::Dense { wmat } => {
+                (0..self.geom.out_ch).map(|i| absmax(&wmat[i * k..(i + 1) * k])).collect()
+            }
+            ConvKind::Filter { rows, wmat } => {
+                (0..rows.len()).map(|i| absmax(&wmat[i * k..(i + 1) * k])).collect()
+            }
+            ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => {
+                let mut maxes = vec![0.0f32; self.geom.out_ch];
+                for g in groups {
+                    let ncols = g.cols.len();
+                    for i in 0..g.m_eff {
+                        let row = absmax(&g.panel[i * ncols..(i + 1) * ncols]);
+                        maxes[g.m0 + i] = maxes[g.m0 + i].max(row);
+                    }
+                }
+                maxes
+            }
+        };
+        maxes.into_iter().map(quant_scale).collect()
+    }
+
+    /// Quantize the f32 weights with the given per-row scales and pack
+    /// them into the executor layouts.
+    fn build_int8(
+        &self,
+        scales: Vec<f32>,
+        in_scale: Option<f32>,
+        provided: bool,
+    ) -> Int8Plan {
+        let k = self.geom.cols();
+        let (packed, groups) = match &self.kind {
+            ConvKind::Dense { wmat } => {
+                let m = self.geom.out_ch;
+                assert_eq!(scales.len(), m, "one scale per output channel");
+                let mut q = vec![0i8; m * k];
+                for i in 0..m {
+                    quantize_span(
+                        &wmat[i * k..(i + 1) * k],
+                        1.0 / scales[i],
+                        &mut q[i * k..(i + 1) * k],
+                    );
+                }
+                (Some(PackedDenseI8::pack(&q, m, k, self.tile.mr)), Vec::new())
+            }
+            ConvKind::Filter { rows, wmat } => {
+                let m = rows.len();
+                assert_eq!(scales.len(), m, "one scale per kept filter row");
+                let mut q = vec![0i8; m * k];
+                for i in 0..m {
+                    quantize_span(
+                        &wmat[i * k..(i + 1) * k],
+                        1.0 / scales[i],
+                        &mut q[i * k..(i + 1) * k],
+                    );
+                }
+                (Some(PackedDenseI8::pack(&q, m, k, self.tile.mr)), Vec::new())
+            }
+            ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => {
+                assert_eq!(scales.len(), self.geom.out_ch);
+                let qgroups = groups
+                    .iter()
+                    .map(|g| {
+                        let ncols = g.cols.len();
+                        let mut cm = vec![0i8; g.m_eff * ncols];
+                        for i in 0..g.m_eff {
+                            let inv = 1.0 / scales[g.m0 + i];
+                            for j in 0..ncols {
+                                cm[j * g.m_eff + i] = (g.panel[i * ncols + j] * inv)
+                                    .round()
+                                    .clamp(-127.0, 127.0)
+                                    as i8;
+                            }
+                        }
+                        GroupI8 { panel_cm: cm }
+                    })
+                    .collect();
+                (None, qgroups)
+            }
+        };
+        Int8Plan { scales, in_scale, provided, packed, groups }
+    }
+
+    /// Install artifact-provided quantization: `w_scales` per **absolute**
+    /// output channel (the exported convention; `Filter` plans map them
+    /// onto compact rows here) and an optional static input scale. The
+    /// weights are requantized with the provided scales so the rust
+    /// execution matches the exporting quantizer exactly.
+    pub fn apply_quant(&mut self, w_scales: &[f32], in_scale: Option<f32>) {
+        if w_scales.len() != self.geom.out_ch {
+            eprintln!(
+                "{}: artifact w_scales len {} != out_ch {}; keeping computed scales",
+                self.name,
+                w_scales.len(),
+                self.geom.out_ch
+            );
+            return;
+        }
+        let scales: Vec<f32> = match &self.kind {
+            ConvKind::Filter { rows, .. } => {
+                rows.iter().map(|&r| w_scales[r as usize].max(f32::MIN_POSITIVE)).collect()
+            }
+            _ => w_scales.iter().map(|&s| s.max(f32::MIN_POSITIVE)).collect(),
+        };
+        self.int8 = Some(self.build_int8(scales, in_scale, true));
     }
 
     /// Change the tile, repacking the dense panel layout when `mr` moved
@@ -637,6 +954,7 @@ mod tests {
             kernel: None,
             threads: 0,
             fused: None,
+            int8: None,
             flops: 0,
         };
         cc.finalize();
@@ -683,6 +1001,7 @@ mod tests {
             kernel: None,
             threads: 0,
             fused: None,
+            int8: None,
             flops: 0,
         };
         cc.finalize();

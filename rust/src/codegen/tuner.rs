@@ -10,9 +10,11 @@
 //! `RT3D_TUNE_DB`, falling back to `<crate>/tune_db.json`), so a tuned
 //! deployment keeps its per-layer config across restarts.
 
-use crate::codegen::{CompiledConv, ConvKind, GemmTile, KernelArch};
+use crate::codegen::{
+    quantize_span, CompiledConv, ConvKind, GemmTile, KernelArch, Precision,
+};
 use crate::executors::{self, AccSlabs};
-use crate::tensor::{Mat, Tensor5};
+use crate::tensor::{Mat, MatI8, Tensor5};
 use crate::util::error::Context;
 use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
@@ -92,6 +94,99 @@ pub fn time_conv_path(cc: &CompiledConv, x: &Tensor5, fused: bool, reps: usize) 
     times[times.len() / 2]
 }
 
+/// [`time_conv`] at a chosen precision. Int8 times the widening-kernel
+/// GEMM over a pre-quantized patch matrix — quantization excluded, like
+/// `time_conv` times the f32 GEMM alone. Falls back to f32 timing when
+/// the plan carries no quantized sidecar.
+pub fn time_conv_prec(
+    cc: &CompiledConv,
+    x: &Tensor5,
+    tile: GemmTile,
+    reps: usize,
+    precision: Precision,
+) -> f64 {
+    if precision == Precision::F32 || cc.int8.is_none() {
+        return time_conv(cc, x, tile, reps);
+    }
+    debug_assert!(
+        cc.packed.as_ref().map_or(true, |p| p.mr == tile.mr.max(1)),
+        "tile.mr must match the packed panel height (call set_tile first)"
+    );
+    let g = cc.geom;
+    let pt = executors::im2col_t(x, &g);
+    let plan = cc.int8.as_ref().unwrap();
+    let in_scale = executors::layer_input_scale(plan, x);
+    let n = pt.rows * pt.cols;
+    let mut qpt = MatI8::zeros(pt.rows, pt.cols);
+    quantize_span(&pt.data[..n], 1.0 / in_scale, &mut qpt.data[..n]);
+    let mut out = Mat::zeros(g.out_ch, pt.cols);
+    let mut call = cc.bind_exec(g.in_spatial, None, None, Precision::Int8);
+    call.tile = tile;
+    let pool = ThreadPool::global();
+    let slabs = AccSlabs::global();
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            executors::run_conv_bound_i8(
+                &call, in_scale, &qpt, &mut out, pool, slabs,
+            );
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// [`time_conv_path`] at a chosen precision. Int8 times the full int8
+/// pipeline per rep — patch formation, activation quantization and the
+/// widening GEMM — since that is what the engine executes per layer call.
+pub fn time_conv_path_prec(
+    cc: &CompiledConv,
+    x: &Tensor5,
+    fused: bool,
+    reps: usize,
+    precision: Precision,
+) -> f64 {
+    if precision == Precision::F32 || cc.int8.is_none() {
+        return time_conv_path(cc, x, fused, reps);
+    }
+    let g = cc.geom;
+    let pool = ThreadPool::global();
+    let slabs = AccSlabs::global();
+    let plan = cc.int8.as_ref().unwrap();
+    let in_scale = executors::layer_input_scale(plan, x);
+    let mut patches = Mat::zeros(0, 0);
+    let mut qpatches = MatI8::zeros(0, 0);
+    let mut out = Mat::zeros(g.out_ch, g.rows(x.dims[0]));
+    let call = cc.bind_exec(g.in_spatial, None, None, Precision::Int8);
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            if fused {
+                executors::run_conv_fused_i8(
+                    &call, in_scale, x, &mut out, pool, slabs,
+                );
+            } else {
+                patches.reset(g.cols(), g.rows(x.dims[0]));
+                executors::im2col_t_into_with(x, &g, &mut patches, pool);
+                let n = patches.rows * patches.cols;
+                qpatches.reset(patches.rows, patches.cols);
+                quantize_span(
+                    &patches.data[..n],
+                    1.0 / in_scale,
+                    &mut qpatches.data[..n],
+                );
+                executors::run_conv_bound_i8(
+                    &call, in_scale, &qpatches, &mut out, pool, slabs,
+                );
+            }
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
 /// Result of tuning one layer.
 #[derive(Debug, Clone)]
 pub struct TuneReport {
@@ -116,8 +211,21 @@ impl TuneReport {
 
 /// Tune a compiled conv in place (tile grid, then kernel variant, then
 /// worker cap, then fused-vs-materialized — a coordinate descent over the
-/// four config axes); returns the report.
+/// four config axes); returns the report. Tunes the f32 path; see
+/// [`tune_conv_prec`] for the precision axis.
 pub fn tune_conv(cc: &mut CompiledConv, reps: usize) -> TuneReport {
+    tune_conv_prec(cc, reps, Precision::F32)
+}
+
+/// [`tune_conv`] at a chosen precision: the identical coordinate descent,
+/// timed through that precision's drivers, so the int8 path gets its own
+/// winning tile/kernel/cap/fused choice (persist with
+/// [`TuneDb::record_prec`]).
+pub fn tune_conv_prec(
+    cc: &mut CompiledConv,
+    reps: usize,
+    precision: Precision,
+) -> TuneReport {
     let x = Tensor5::random(
         [
             1,
@@ -132,7 +240,7 @@ pub fn tune_conv(cc: &mut CompiledConv, reps: usize) -> TuneReport {
     cc.kernel = None;
     cc.threads = 0;
     cc.fused = None;
-    let default_s = time_conv(cc, &x, GemmTile::default(), reps);
+    let default_s = time_conv_prec(cc, &x, GemmTile::default(), reps, precision);
     let mut best = GemmTile::default();
     let mut best_s = default_s;
     // --- tile grid (repack once per mr step) ---------------------------
@@ -147,7 +255,7 @@ pub fn tune_conv(cc: &mut CompiledConv, reps: usize) -> TuneReport {
         if t.mr != cc.tile.mr {
             cc.set_tile(GemmTile { mr: t.mr, ..cc.tile });
         }
-        let s = time_conv(cc, &x, t, reps);
+        let s = time_conv_prec(cc, &x, t, reps, precision);
         if s < best_s {
             best_s = s;
             best = t;
@@ -158,7 +266,7 @@ pub fn tune_conv(cc: &mut CompiledConv, reps: usize) -> TuneReport {
     let active = KernelArch::active();
     if active != KernelArch::Scalar {
         cc.kernel = Some(KernelArch::Scalar);
-        let s = time_conv(cc, &x, best, reps);
+        let s = time_conv_prec(cc, &x, best, reps, precision);
         if s < best_s {
             best_s = s;
         } else {
@@ -173,7 +281,7 @@ pub fn tune_conv(cc: &mut CompiledConv, reps: usize) -> TuneReport {
             break;
         }
         cc.threads = cap;
-        let s = time_conv(cc, &x, best, reps);
+        let s = time_conv_prec(cc, &x, best, reps, precision);
         if s < best_s {
             best_s = s;
             best_cap = cap;
@@ -191,8 +299,8 @@ pub fn tune_conv(cc: &mut CompiledConv, reps: usize) -> TuneReport {
     // only affects the weight packing, which both drivers share). The
     // path choice never changes output bits — only scratch shape and
     // memory traffic — so it is free to flip per machine.
-    let t_mat = time_conv_path(cc, &x, false, reps);
-    let mut t_fus = time_conv_path(cc, &x, true, reps);
+    let t_mat = time_conv_path_prec(cc, &x, false, reps, precision);
+    let mut t_fus = time_conv_path_prec(cc, &x, true, reps, precision);
     let mut fus_tile = best;
     for rc in [128usize, 256, 512] {
         for kc in [64usize, 128, 256] {
@@ -201,7 +309,7 @@ pub fn tune_conv(cc: &mut CompiledConv, reps: usize) -> TuneReport {
                 continue;
             }
             cc.set_tile(t); // same mr -> no repack
-            let s = time_conv_path(cc, &x, true, reps);
+            let s = time_conv_path_prec(cc, &x, true, reps, precision);
             if s < t_fus {
                 t_fus = s;
                 fus_tile = t;
@@ -235,6 +343,25 @@ pub fn tune_model_db(convs: &mut [CompiledConv], reps: usize) -> (Vec<TuneReport
     let mut db = TuneDb::default();
     for cc in convs.iter() {
         db.record(cc);
+    }
+    (reports, db)
+}
+
+/// [`tune_model_db`] at a chosen precision, recording the winners under
+/// that precision's database keys — run once per precision over the same
+/// plans to grow one database carrying both tunings.
+pub fn tune_model_db_prec(
+    convs: &mut [CompiledConv],
+    reps: usize,
+    precision: Precision,
+) -> (Vec<TuneReport>, TuneDb) {
+    let reports = convs
+        .iter_mut()
+        .map(|c| tune_conv_prec(c, reps, precision))
+        .collect();
+    let mut db = TuneDb::default();
+    for cc in convs.iter() {
+        db.record_prec(cc, precision);
     }
     (reports, db)
 }
@@ -277,9 +404,24 @@ impl TuneDb {
         )
     }
 
+    /// [`Self::key`] at a precision — the database's precision axis. Int8
+    /// entries append `|int8`; f32 keys stay unsuffixed so pre-int8
+    /// databases keep matching unchanged.
+    pub fn key_prec(cc: &CompiledConv, precision: Precision) -> String {
+        match precision {
+            Precision::F32 => Self::key(cc),
+            Precision::Int8 => format!("{}|int8", Self::key(cc)),
+        }
+    }
+
     pub fn record(&mut self, cc: &CompiledConv) {
+        self.record_prec(cc, Precision::F32);
+    }
+
+    /// Record the plan's current config under the given precision's key.
+    pub fn record_prec(&mut self, cc: &CompiledConv, precision: Precision) {
         self.entries.insert(
-            Self::key(cc),
+            Self::key_prec(cc, precision),
             TuneEntry {
                 tile: cc.tile,
                 kernel: cc.kernel,
@@ -296,7 +438,19 @@ impl TuneDb {
     /// that would be UB in the `target_feature` kernels. Returns whether
     /// an entry matched.
     pub fn apply(&self, cc: &mut CompiledConv) -> bool {
-        match self.entries.get(&Self::key(cc)) {
+        self.apply_prec(cc, Precision::F32)
+    }
+
+    /// [`Self::apply`] preferring the given precision's entry. An int8
+    /// engine on a database without int8 entries falls back to the f32
+    /// tuning (better than stock defaults: the cache-blocking pressure is
+    /// similar), so older databases keep working under `RT3D_PRECISION`.
+    pub fn apply_prec(&self, cc: &mut CompiledConv, precision: Precision) -> bool {
+        let entry = self
+            .entries
+            .get(&Self::key_prec(cc, precision))
+            .or_else(|| self.entries.get(&Self::key(cc)));
+        match entry {
             Some(e) => {
                 cc.set_tile(e.tile);
                 cc.kernel = e.kernel.filter(|k| k.supported());
@@ -454,6 +608,7 @@ pub fn time_group_size(
         weights: WeightRefs { w: dummy.clone(), b: dummy },
         weights_sparse: None,
         unit_mask: None,
+        quant: None,
     };
     let geom = crate::tensor::Conv3dGeometry {
         in_ch: c,
@@ -574,6 +729,7 @@ mod tests {
             weights: WeightRefs { w: dummy.clone(), b: dummy },
             weights_sparse: None,
             unit_mask: None,
+            quant: None,
         };
         let geom = crate::tensor::Conv3dGeometry {
             in_ch: 4,
@@ -596,5 +752,58 @@ mod tests {
         assert_eq!(cc.threads, 2);
         assert_eq!(cc.fused, Some(true), "apply must carry the fused flag");
         assert_eq!(cc.packed.as_ref().unwrap().mr, 3, "apply must repack");
+    }
+
+    #[test]
+    fn tune_db_precision_axis_suffixes_and_falls_back() {
+        use crate::codegen::compile_conv_dense;
+        use crate::model::{TensorRef, WeightRefs};
+        let dummy = TensorRef { offset: 0, shape: vec![], dtype: "f32".into() };
+        let layer = crate::model::ConvLayer {
+            name: "q".into(),
+            in_ch: 4,
+            out_ch: 6,
+            kernel: [1, 1, 1],
+            stride: [1, 1, 1],
+            padding: [0, 0, 0],
+            relu: false,
+            weights: WeightRefs { w: dummy.clone(), b: dummy },
+            weights_sparse: None,
+            unit_mask: None,
+            quant: None,
+        };
+        let geom = crate::tensor::Conv3dGeometry {
+            in_ch: 4,
+            out_ch: 6,
+            kernel: [1, 1, 1],
+            stride: [1, 1, 1],
+            padding: [0, 0, 0],
+            in_spatial: [2, 2, 2],
+        };
+        let w = vec![0.25f32; 6 * 4];
+        let mut cc = compile_conv_dense(&layer, &geom, &w, vec![0.0; 6]);
+        assert_eq!(
+            TuneDb::key_prec(&cc, Precision::Int8),
+            format!("{}|int8", TuneDb::key(&cc))
+        );
+        // A database with only an f32 entry still tunes an int8 engine
+        // (fallback), and a dedicated int8 entry wins once present.
+        let mut f32_tuned = cc.clone();
+        f32_tuned.set_tile(GemmTile { mr: 2, rc: 64, kc: 32 });
+        let mut db = TuneDb::default();
+        db.record(&f32_tuned);
+        assert!(db.apply_prec(&mut cc, Precision::Int8), "falls back to f32");
+        assert_eq!(cc.tile, GemmTile { mr: 2, rc: 64, kc: 32 });
+        let mut i8_tuned = cc.clone();
+        i8_tuned.set_tile(GemmTile { mr: 3, rc: 128, kc: 64 });
+        i8_tuned.threads = 1;
+        db.record_prec(&i8_tuned, Precision::Int8);
+        assert!(db.apply_prec(&mut cc, Precision::Int8));
+        assert_eq!(cc.tile, GemmTile { mr: 3, rc: 128, kc: 64 });
+        assert_eq!(cc.threads, 1);
+        // The f32 view of the same database is untouched by the int8 entry.
+        let mut cc2 = compile_conv_dense(&layer, &geom, &w, vec![0.0; 6]);
+        assert!(db.apply(&mut cc2));
+        assert_eq!(cc2.tile, GemmTile { mr: 2, rc: 64, kc: 32 });
     }
 }

@@ -46,10 +46,6 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::{LatencyStats, Metrics};
 pub use router::{Deployment, Policy, Router};
 pub use server::{Backend, Route, Server, ServerConfig};
-// Pre-redesign name of `Backend`, kept so downstream `Arc<dyn Engine>` /
-// `impl Engine for ..` keep compiling for one release (same trait, so
-// both spellings are interchangeable everywhere).
-pub use server::Backend as Engine;
 pub use session::{Session, SessionConfig, WindowResult};
 
 use crate::tensor::Tensor5;

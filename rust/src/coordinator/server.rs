@@ -182,17 +182,6 @@ impl Server {
         Self::launch(backend, cfg, route, None)
     }
 
-    /// Positional-argument predecessor of [`Self::start_routed`].
-    #[deprecated(note = "use Server::start_routed(backend, cfg, Route { .. })")]
-    pub fn start_shared(
-        backend: Arc<dyn Backend>,
-        cfg: ServerConfig,
-        resp_tx: SyncSender<Response>,
-        ids: Arc<AtomicU64>,
-    ) -> Self {
-        Self::start_routed(backend, cfg, Route { resp_tx, ids })
-    }
-
     fn launch(
         engine: Arc<dyn Backend>,
         cfg: ServerConfig,

@@ -145,6 +145,8 @@ mod tests {
             sched: None,
             kernel: None,
             threads: 0,
+            fused: None,
+            int8: None,
             flops: g.flops(1),
         }
     }

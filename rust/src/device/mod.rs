@@ -195,6 +195,8 @@ mod tests {
             sched: None,
             kernel: None,
             threads: 0,
+            fused: None,
+            int8: None,
             flops: geom.flops(1),
         }
     }

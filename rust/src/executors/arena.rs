@@ -22,7 +22,7 @@
 //! current capacity *is* the peak) — the number the gemm-kernels bench
 //! publishes as `*_peak_scratch_bytes`.
 
-use crate::tensor::Mat;
+use crate::tensor::{Mat, MatI8};
 use std::sync::{Mutex, OnceLock};
 
 /// Per-worker accumulator slabs shared by the GEMM micro-kernels, the
@@ -39,6 +39,14 @@ pub struct AccSlabs {
     /// (`pack_patch_panel` targets; fully overwritten per block, like the
     /// accumulator slabs).
     panels: Vec<Mutex<Mat>>,
+    /// Per-worker i32 accumulator slabs for the int8 path (the widening
+    /// kernels accumulate exactly in i32; the requant epilogue drains into
+    /// f32). Same discipline as `workers`: zero-filled per span before use.
+    acc32: Vec<Mutex<Vec<i32>>>,
+    /// Per-worker quantized patch panels for the fused int8 path: the f32
+    /// panel packed by `pack_patch_panel` is quantized into this sibling
+    /// before the widening kernels consume it.
+    qpanels: Vec<Mutex<MatI8>>,
     filter: Mutex<Mat>,
 }
 
@@ -48,6 +56,10 @@ impl AccSlabs {
         Self {
             workers: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
             panels: (0..workers).map(|_| Mutex::new(Mat::zeros(0, 0))).collect(),
+            acc32: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
+            qpanels: (0..workers)
+                .map(|_| Mutex::new(MatI8::zeros(0, 0)))
+                .collect(),
             filter: Mutex::new(Mat::zeros(0, 0)),
         }
     }
@@ -95,6 +107,36 @@ impl AccSlabs {
         f(&mut panel)
     }
 
+    /// Borrow worker `w`'s i32 accumulator slab grown to at least `len`
+    /// elements (the int8 kernels' exact-integer accumulator). Contents
+    /// are unspecified — callers zero the span they accumulate into.
+    pub fn with_slab_i32<R>(
+        &self,
+        worker: usize,
+        len: usize,
+        f: impl FnOnce(&mut [i32]) -> R,
+    ) -> R {
+        let mut slab = self.acc32[worker % self.acc32.len()].lock().unwrap();
+        if slab.len() < len {
+            slab.resize(len, 0);
+        }
+        f(&mut slab[..len])
+    }
+
+    /// Borrow worker `w`'s quantized patch panel shaped to `(rows, cols)`.
+    /// Contents are unspecified until the caller quantizes into it.
+    pub fn with_panel_i8<R>(
+        &self,
+        worker: usize,
+        rows: usize,
+        cols: usize,
+        f: impl FnOnce(&mut MatI8) -> R,
+    ) -> R {
+        let mut panel = self.qpanels[worker % self.qpanels.len()].lock().unwrap();
+        panel.reset(rows, cols);
+        f(&mut panel)
+    }
+
     /// Pre-size every worker's panel slab to at least `elems` elements so
     /// the first fused forward does not grow them (the engine calls this
     /// with the max fused panel footprint over all layers).
@@ -103,6 +145,24 @@ impl AccSlabs {
             let mut panel = p.lock().unwrap();
             if panel.data.len() < elems {
                 panel.data.resize(elems, 0.0);
+            }
+        }
+    }
+
+    /// Pre-size the int8 working set: every worker's i32 accumulator slab
+    /// to `acc_elems` and its quantized panel to `panel_elems` (no-ops at
+    /// zero, so f32-only engines pay nothing).
+    pub fn reserve_int8(&self, acc_elems: usize, panel_elems: usize) {
+        for w in &self.acc32 {
+            let mut slab = w.lock().unwrap();
+            if slab.len() < acc_elems {
+                slab.resize(acc_elems, 0);
+            }
+        }
+        for p in &self.qpanels {
+            let mut panel = p.lock().unwrap();
+            if panel.data.len() < panel_elems {
+                panel.data.resize(panel_elems, 0);
             }
         }
     }
@@ -120,8 +180,12 @@ impl AccSlabs {
             self.workers.iter().map(|w| w.lock().unwrap().capacity()).sum();
         let pan: usize =
             self.panels.iter().map(|p| p.lock().unwrap().data.capacity()).sum();
+        let a32: usize =
+            self.acc32.iter().map(|w| w.lock().unwrap().capacity()).sum();
+        let qpan: usize =
+            self.qpanels.iter().map(|p| p.lock().unwrap().data.capacity()).sum();
         let fil = self.filter.lock().unwrap().data.capacity();
-        4 * (acc + pan + fil)
+        4 * (acc + pan + fil + a32) + qpan
     }
 }
 
@@ -190,6 +254,10 @@ impl BufPool {
 pub struct ScratchArena {
     /// Transposed im2col patch matrix `(K, R)`.
     pub patches: Mat,
+    /// Quantized sibling of `patches` for the materialized int8 path: the
+    /// f32 patch matrix is quantized wholesale into this buffer before the
+    /// widening kernels run.
+    pub qpatches: MatI8,
     /// GEMM output `(M, R)` before reshaping to NCDHW.
     pub out: Mat,
     /// Per-worker accumulators + filter compaction buffer.
@@ -202,6 +270,7 @@ impl ScratchArena {
     pub fn new(workers: usize) -> Self {
         Self {
             patches: Mat::zeros(0, 0),
+            qpatches: MatI8::zeros(0, 0),
             out: Mat::zeros(0, 0),
             slabs: AccSlabs::new(workers),
             recycler: BufPool::default(),
@@ -234,7 +303,16 @@ impl ScratchArena {
     /// materializing the `(K, R)` patch matrix.
     pub fn peak_bytes(&self) -> usize {
         4 * (self.patches.data.capacity() + self.out.data.capacity())
+            + self.qpatches.data.capacity()
             + self.slabs.scratch_bytes()
+    }
+
+    /// Pre-size the materialized int8 patch buffer (element count). The
+    /// engine calls this only when running at int8 precision.
+    pub fn reserve_qpatches(&mut self, elems: usize) {
+        if self.qpatches.data.len() < elems {
+            self.qpatches.data.resize(elems, 0);
+        }
     }
 }
 
@@ -292,6 +370,31 @@ mod tests {
         // Worker ids wrap, like the accumulator slabs.
         slabs.with_panel(7, 1, 1, |p| assert_eq!(p.data.len(), 1));
         assert!(slabs.scratch_bytes() >= 4 * (64 + 64));
+    }
+
+    #[test]
+    fn int8_slabs_grow_reuse_and_count() {
+        let slabs = AccSlabs::new(2);
+        slabs.with_slab_i32(0, 16, |s| {
+            assert_eq!(s.len(), 16);
+            s[15] = -3;
+        });
+        slabs.with_slab_i32(0, 4, |s| assert_eq!(s.len(), 4));
+        slabs.with_panel_i8(1, 3, 5, |p| {
+            assert_eq!((p.rows, p.cols), (3, 5));
+            p.data[14] = -7;
+        });
+        // Worker ids wrap, like the f32 slabs.
+        slabs.with_slab_i32(9, 8, |s| assert_eq!(s.len(), 8));
+        slabs.with_panel_i8(9, 1, 1, |p| assert_eq!(p.data.len(), 1));
+        slabs.reserve_int8(64, 32);
+        // 2 workers * (64 i32 * 4B + 32 i8 * 1B) at minimum.
+        assert!(slabs.scratch_bytes() >= 2 * (64 * 4 + 32));
+
+        let mut a = ScratchArena::new(1);
+        let base = a.peak_bytes();
+        a.reserve_qpatches(100);
+        assert!(a.peak_bytes() >= base + 100);
     }
 
     #[test]

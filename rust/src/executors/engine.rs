@@ -6,7 +6,10 @@
 //! * [`EngineKind::Untuned`]  — im2col + untuned GEMM (MNN-class)
 //! * [`EngineKind::Rt3d`]     — blocked micro-kernel, dense or sparse plans
 
-use crate::codegen::{self, tuner::TuneDb, CompiledConv, ConvKind, KernelArch};
+use crate::codegen::{
+    self, quantize_span, tuner::TuneDb, CompiledConv, ConvKind, KernelArch,
+    Precision,
+};
 use crate::executors::options::EngineOptions;
 use crate::executors::{self, gemm, naive, ScratchArena};
 use crate::model::{Layer, Model};
@@ -58,16 +61,26 @@ impl EngineCore {
     /// resolves an explicit path first and calls
     /// [`Self::compile_with_db`] instead.
     pub fn compile(model: &Model, kind: EngineKind, use_sparsity: bool) -> Self {
-        Self::compile_with_db(model, kind, use_sparsity, TuneDb::load_default().as_ref())
+        Self::compile_with_db(
+            model,
+            kind,
+            use_sparsity,
+            TuneDb::load_default().as_ref(),
+            Precision::from_env(),
+        )
     }
 
     /// [`Self::compile`] with an explicit (already loaded) tuning
-    /// database; `None` compiles untuned.
+    /// database (`None` compiles untuned) and the precision whose tuned
+    /// entries to prefer: int8 entries are recorded under a
+    /// precision-suffixed key and fall back to the f32 entry when absent
+    /// (`TuneDb::apply_prec`).
     pub fn compile_with_db(
         model: &Model,
         kind: EngineKind,
         use_sparsity: bool,
         db: Option<&TuneDb>,
+        precision: Precision,
     ) -> Self {
         let mut compiled =
             codegen::compile_model(model, use_sparsity && kind == EngineKind::Rt3d);
@@ -76,7 +89,7 @@ impl EngineCore {
         // `codegen::tuner`.
         if let Some(db) = db {
             for cc in compiled.iter_mut() {
-                db.apply(cc);
+                db.apply_prec(cc, precision);
             }
         }
         let convs: std::collections::HashMap<String, CompiledConv> = compiled
@@ -114,7 +127,12 @@ impl EngineCore {
     /// patch matrix is never allocated at all. (A later handle-level
     /// `set_fused` flip can still grow the other buffer set once, on
     /// first forward.)
-    fn presized_arena(&self, workers: usize, fuse_forced: Option<bool>) -> ScratchArena {
+    fn presized_arena(
+        &self,
+        workers: usize,
+        fuse_forced: Option<bool>,
+        precision: Precision,
+    ) -> ScratchArena {
         let mut arena = ScratchArena::new(workers);
         let (mut pmax, mut omax, mut panel_max) = (0usize, 0usize, 0usize);
         for cc in self.convs.values() {
@@ -130,12 +148,39 @@ impl EngineCore {
         }
         arena.reserve(pmax, omax);
         arena.slabs.reserve_panels(panel_max);
+        if precision == Precision::Int8 && self.kind == EngineKind::Rt3d {
+            // Warm-start the int8 buffers for layers that carry a
+            // quantized sidecar: i32 accumulator slabs sized for the
+            // widest driver (full-M fused dense), i8 panel slabs mirroring
+            // the f32 panels, and the quantized patch matrix for
+            // materialized layers. Plans without a sidecar run f32 and
+            // need none of this; everything still grows on demand.
+            let (mut acc_max, mut qpanel_max, mut qpatch_max) =
+                (0usize, 0usize, 0usize);
+            for cc in self.convs.values() {
+                if cc.int8.is_none() {
+                    continue;
+                }
+                let r = cc.geom.rows(1).max(1);
+                let span = cc.tile.rc.max(1).min(r);
+                acc_max =
+                    acc_max.max(cc.geom.out_ch.max(cc.tile.mr) * span);
+                let fused =
+                    cc.bind_full(cc.geom.in_spatial, None, fuse_forced).fused;
+                if fused {
+                    qpanel_max = qpanel_max.max(cc.panel_footprint());
+                } else {
+                    qpatch_max = qpatch_max.max(cc.scratch_footprint(1).0);
+                }
+            }
+            arena.reserve_qpatches(qpatch_max);
+            arena.slabs.reserve_int8(acc_max, qpanel_max);
+        }
         arena
     }
 
     /// Mint an execution handle over a (shared) compiled core with the
-    /// default execution configuration at `threads` width — the
-    /// non-deprecated successor of `NativeEngine::from_core`. Handles over
+    /// default execution configuration at `threads` width. Handles over
     /// one core share the packed weights; each owns its pool and arena.
     pub fn handle(core: &Arc<EngineCore>, threads: usize) -> NativeEngine {
         NativeEngine::over_core(
@@ -146,6 +191,7 @@ impl EngineCore {
                 spin: ThreadPool::env_spin(),
                 kernel: None,
                 fused: None,
+                precision: Precision::from_env(),
             },
         )
     }
@@ -162,6 +208,8 @@ struct ExecConfig {
     kernel: Option<KernelArch>,
     /// `Some` = force every conv fused/materialized.
     fused: Option<bool>,
+    /// Arithmetic precision (already resolved: option > env > f32).
+    precision: Precision,
 }
 
 /// A ready-to-run native model instance: a shared compiled core plus the
@@ -175,8 +223,8 @@ pub struct NativeEngine {
     pub profile: std::sync::atomic::AtomicBool,
     timings: std::sync::Mutex<Vec<LayerTiming>>,
     /// Worker pool for im2col + GEMM (width from `RT3D_THREADS` unless set
-    /// explicitly via [`Self::with_threads`]); parked workers live as long
-    /// as the engine handle.
+    /// explicitly via the builder's `threads(..)`); parked workers live as
+    /// long as the engine handle.
     pool: ThreadPool,
     /// SIMD kernel variant for layers without a tuned override (and for
     /// the dense head). Defaults to [`KernelArch::active`].
@@ -190,6 +238,11 @@ pub struct NativeEngine {
     /// binding (handle-local, like the kernel force). `None` = env
     /// (`RT3D_FUSE`) > tuned > heuristic per-layer resolution.
     fuse_forced: Option<bool>,
+    /// Arithmetic precision this handle binds conv calls at (resolved at
+    /// construction: builder/option > `RT3D_PRECISION` > f32). Layers
+    /// whose plans lack a quantized sidecar silently stay f32 — see
+    /// [`CompiledConv::bind_exec`].
+    precision: Precision,
     /// Reused im2col/GEMM/accumulator/activation buffers — the steady
     /// state forward allocates nothing but the returned logits. Behind a
     /// mutex because `forward` takes `&self`; one layer holds it at a
@@ -221,6 +274,7 @@ impl NativeEngine {
             r.kind,
             r.sparsity,
             r.tune_db.as_ref(),
+            r.precision,
         ));
         Self::over_core(
             core,
@@ -230,46 +284,18 @@ impl NativeEngine {
                 spin: r.spin,
                 kernel: r.kernel,
                 fused: r.fused,
+                precision: r.precision,
             },
         )
     }
 
-    /// Build from a loaded model with the thread count from `RT3D_THREADS`
-    /// (default: all cores). `use_sparsity` activates the compacted sparse
-    /// plans (only meaningful for `EngineKind::Rt3d`).
-    #[deprecated(note = "use NativeEngine::builder(&model).kind(..).sparsity(..)")]
-    pub fn new(model: &Model, kind: EngineKind, use_sparsity: bool) -> Self {
-        Self::builder(model).kind(kind).sparsity(use_sparsity).build()
-    }
-
-    /// Build with an explicit executor thread count.
-    #[deprecated(note = "use NativeEngine::builder(&model)...threads(n)")]
-    pub fn with_threads(
-        model: &Model,
-        kind: EngineKind,
-        use_sparsity: bool,
-        threads: usize,
-    ) -> Self {
-        Self::builder(model)
-            .kind(kind)
-            .sparsity(use_sparsity)
-            .threads(threads)
-            .build()
-    }
-
-    /// Build an execution handle over an existing (possibly shared)
-    /// compiled core.
-    #[deprecated(note = "use EngineCore::handle(&core, threads)")]
-    pub fn from_core(core: Arc<EngineCore>, threads: usize) -> Self {
-        EngineCore::handle(&core, threads)
-    }
-
     /// The one real handle constructor: every public construction path
-    /// (builder, core handle, fork, deprecated shims) funnels here.
+    /// (builder, core handle, fork) funnels here.
     fn over_core(core: Arc<EngineCore>, exec: ExecConfig) -> Self {
         let pool =
             ThreadPool::with_config(exec.threads, exec.pool_mode, exec.spin);
-        let arena = core.presized_arena(pool.threads(), exec.fused);
+        let arena =
+            core.presized_arena(pool.threads(), exec.fused, exec.precision);
         if let Some(k) = exec.kernel {
             assert!(
                 k.supported(),
@@ -286,6 +312,7 @@ impl NativeEngine {
             kernel: exec.kernel.unwrap_or_else(KernelArch::active),
             kernel_forced: exec.kernel.is_some(),
             fuse_forced: exec.fused,
+            precision: exec.precision,
             arena: Mutex::new(arena),
         }
     }
@@ -299,6 +326,7 @@ impl NativeEngine {
             spin: self.pool.spin(),
             kernel: self.kernel_forced.then_some(self.kernel),
             fused: self.fuse_forced,
+            precision: self.precision,
         }
     }
 
@@ -316,12 +344,6 @@ impl NativeEngine {
     /// kernel/fused forces and pool mode carry over.
     pub fn forked(&self, threads: usize) -> NativeEngine {
         Self::over_core(self.core.clone(), self.exec_config(threads))
-    }
-
-    /// Renamed to [`Self::forked`].
-    #[deprecated(note = "renamed to NativeEngine::forked(threads)")]
-    pub fn fork_with_threads(&self, threads: usize) -> NativeEngine {
-        self.forked(threads)
     }
 
     /// The shared compiled core (plans + weights) behind this handle.
@@ -346,6 +368,12 @@ impl NativeEngine {
     /// The SIMD kernel variant layers run with by default.
     pub fn kernel(&self) -> KernelArch {
         self.kernel
+    }
+
+    /// The arithmetic precision this handle binds conv calls at. Layers
+    /// whose plans lack a quantized sidecar still run f32 under `Int8`.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Force every layer (and the dense head) onto one kernel variant —
@@ -572,10 +600,11 @@ impl NativeEngine {
         // binding shares the plan's weights — no per-call clone — and
         // resolves this handle's forced kernel / fused-path choice, if
         // any, without touching the shared core.
-        let call = cc.bind_full(
+        let call = cc.bind_exec(
             [x.dims[2], x.dims[3], x.dims[4]],
             self.kernel_forced.then_some(self.kernel),
             self.fuse_forced,
+            self.precision,
         );
         let g = call.geom;
         let batch = x.dims[0];
@@ -612,9 +641,40 @@ impl NativeEngine {
             }
             EngineKind::Rt3d => {
                 let mut arena = self.arena.lock().unwrap();
-                let ScratchArena { patches, out, slabs, recycler } = &mut *arena;
+                let ScratchArena { patches, qpatches, out, slabs, recycler } =
+                    &mut *arena;
                 out.reset(g.out_ch, g.rows(batch));
-                if call.fused {
+                if call.precision == Precision::Int8 {
+                    // Quantized path: one dynamic activation scale per
+                    // layer call, computed from the input tensor so the
+                    // fused and materialized drivers see the identical
+                    // value (`executors::layer_input_scale`).
+                    let plan = cc
+                        .int8
+                        .as_ref()
+                        .expect("Int8 binding implies a quantized sidecar");
+                    let in_scale = executors::layer_input_scale(plan, &x);
+                    if call.fused {
+                        executors::run_conv_fused_i8(
+                            &call, in_scale, &x, out, &self.pool, slabs,
+                        );
+                    } else {
+                        patches.reset(g.cols(), g.rows(batch));
+                        executors::im2col_t_into_with(
+                            &x, &g, patches, &self.pool,
+                        );
+                        let n = patches.rows * patches.cols;
+                        qpatches.reset(patches.rows, patches.cols);
+                        quantize_span(
+                            &patches.data[..n],
+                            1.0 / in_scale,
+                            &mut qpatches.data[..n],
+                        );
+                        executors::run_conv_bound_i8(
+                            &call, in_scale, qpatches, out, &self.pool, slabs,
+                        );
+                    }
+                } else if call.fused {
                     // Fused implicit GEMM: patch panels are packed inside
                     // the column-block tasks; the monolithic patch matrix
                     // is never touched.
@@ -678,6 +738,15 @@ impl EngineBuilder<'_> {
     /// traffic change.
     pub fn fused(mut self, fused: bool) -> Self {
         self.opts.fused = Some(fused);
+        self
+    }
+
+    /// Arithmetic precision for conv layers (overrides `RT3D_PRECISION`).
+    /// [`Precision::Int8`] runs every layer whose plan carries a quantized
+    /// sidecar through the widening int8 kernels; layers without one stay
+    /// f32.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.opts.precision = Some(precision);
         self
     }
 

@@ -45,10 +45,13 @@
 //! [`gemm_dense_unpacked`] preserves the PR-1 strided scalar kernel as the
 //! micro-bench baseline; it accumulates like the old code did.
 
-use crate::codegen::{GemmTile, KernelArch, KgsGroup, PackedDense};
+use crate::codegen::{
+    quantize_span, GemmTile, GroupI8, KernelArch, KgsGroup, PackedDense,
+    PackedDenseI8,
+};
 use crate::executors::arena::AccSlabs;
 use crate::executors::{pack_patch_panel, pack_patch_rows};
-use crate::tensor::{Conv3dGeometry, Mat, Tensor5};
+use crate::tensor::{Conv3dGeometry, Mat, MatI8, Tensor5};
 use crate::util::pool::{SendPtr, ThreadPool};
 
 /// MNN-class baseline: im2col GEMM with no blocking or register tiling.
@@ -750,6 +753,569 @@ fn panel_block_gathered(
 }
 
 // --------------------------------------------------------------------------
+// Int8 widening kernels: acc_i32 += w_i8 * p_i8 over a span. The f32
+// kernels above must never fuse (FMA changes rounding); here the problem
+// disappears — i32 accumulation of i8×i8 products is *exact*, so every
+// variant and every accumulation order produces the same bits. The scalar
+// tail uses `wrapping_add`/`wrapping_mul` to match SIMD wraparound
+// semantics in the (unreachable for sane K) overflow case, keeping the
+// parity contract total rather than "total except on overflow".
+//
+// Epilogue contract: drivers accumulate the FULL K reduction in i32 and
+// only then requantize, `out = (acc as f32) * (w_scale[row] * in_scale)`
+// — one f32 rounding per output element, so fused ↔ materialized ↔ any
+// thread count ↔ any ISA stay bit-identical within the int8 path.
+// --------------------------------------------------------------------------
+
+#[inline(always)]
+fn madd_span_scalar_i8(acc: &mut [i32], prow: &[i8], w: i8) {
+    let w = w as i32;
+    for (av, pv) in acc.iter_mut().zip(prow) {
+        *av = av.wrapping_add(w.wrapping_mul(*pv as i32));
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86_i8 {
+    use core::arch::x86_64::*;
+
+    /// acc_i32 += w * p_i8 over `span`, 16 lanes per iteration.
+    ///
+    /// Widening chain: load 16×i8 → sign-extend to 16×i16 →
+    /// `_mm256_mullo_epi16` against the broadcast weight (exact:
+    /// |w·p| ≤ 127·127 = 16129 < 2^15) → sign-extend each half to 8×i32 →
+    /// `_mm256_add_epi32`. `_mm256_maddubs_epi16` is deliberately NOT
+    /// used: it is u8×i8 and *saturates* the i16 pair-sum
+    /// (127·127·2 = 32258 > 32767), which would silently clip real
+    /// accumulations and break exactness.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support, and `a`/`p` must be valid
+    /// for `span` writes/reads.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn madd_span_i8(a: *mut i32, p: *const i8, w: i8, span: usize) {
+        let wv = _mm256_set1_epi16(w as i16);
+        let mut j = 0usize;
+        while j + 16 <= span {
+            let pv8 = _mm_loadu_si128(p.add(j) as *const __m128i);
+            let pv16 = _mm256_cvtepi8_epi16(pv8);
+            let prod = _mm256_mullo_epi16(pv16, wv);
+            let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(prod));
+            let hi =
+                _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(prod));
+            let a0 = _mm256_loadu_si256(a.add(j) as *const __m256i);
+            _mm256_storeu_si256(
+                a.add(j) as *mut __m256i,
+                _mm256_add_epi32(a0, lo),
+            );
+            let a1 = _mm256_loadu_si256(a.add(j + 8) as *const __m256i);
+            _mm256_storeu_si256(
+                a.add(j + 8) as *mut __m256i,
+                _mm256_add_epi32(a1, hi),
+            );
+            j += 16;
+        }
+        while j < span {
+            *a.add(j) =
+                (*a.add(j)).wrapping_add((w as i32) * (*p.add(j) as i32));
+            j += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon_i8 {
+    use core::arch::aarch64::*;
+
+    /// acc_i32 += w * p_i8 over `span`, 8 lanes per iteration:
+    /// `vmull_s8` widens i8×i8 → i16 exactly, `vaddw_s16` widens each
+    /// i16 half into the i32 accumulators (the paper's smull/smlal
+    /// pattern).
+    ///
+    /// # Safety
+    /// `a`/`p` must be valid for `span` writes/reads.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn madd_span_i8(a: *mut i32, p: *const i8, w: i8, span: usize) {
+        let wv = vdup_n_s8(w);
+        let mut j = 0usize;
+        while j + 8 <= span {
+            let pv = vld1_s8(p.add(j));
+            let prod = vmull_s8(pv, wv);
+            let acc0 = vaddw_s16(vld1q_s32(a.add(j)), vget_low_s16(prod));
+            let acc1 =
+                vaddw_s16(vld1q_s32(a.add(j + 4)), vget_high_s16(prod));
+            vst1q_s32(a.add(j), acc0);
+            vst1q_s32(a.add(j + 4), acc1);
+            j += 8;
+        }
+        while j < span {
+            *a.add(j) =
+                (*a.add(j)).wrapping_add((w as i32) * (*p.add(j) as i32));
+            j += 1;
+        }
+    }
+}
+
+/// Dispatched widening axpy (the int8 analog of [`madd_span_dispatch`]).
+#[inline]
+fn madd_span_dispatch_i8(kernel: KernelArch, acc: &mut [i32], prow: &[i8], w: i8) {
+    debug_assert_eq!(acc.len(), prow.len());
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        KernelArch::Avx2 => unsafe {
+            x86_i8::madd_span_i8(acc.as_mut_ptr(), prow.as_ptr(), w, acc.len());
+        },
+        #[cfg(target_arch = "aarch64")]
+        KernelArch::Neon => unsafe {
+            neon_i8::madd_span_i8(acc.as_mut_ptr(), prow.as_ptr(), w, acc.len());
+        },
+        _ => madd_span_scalar_i8(acc, prow, w),
+    }
+}
+
+/// Int8 packed-dense block: acc (rows, span) += wblock × qpatches block.
+/// Unlike the f32 [`packed_block`], this **accumulates into caller-zeroed
+/// acc** — drivers zero once per r-block and run every K block before the
+/// requant epilogue, so the i32 sums are the exact full-K dot products.
+#[allow(clippy::too_many_arguments)]
+fn packed_block_i8(
+    kernel: KernelArch,
+    wblock: &[i8],
+    rows: usize,
+    qpatches: &MatI8,
+    k0: usize,
+    k1: usize,
+    r0: usize,
+    r1: usize,
+    acc: &mut [i32],
+) {
+    let span = r1 - r0;
+    let acc = &mut acc[..rows * span];
+    for ki in k0..k1 {
+        let ws = &wblock[(ki - k0) * rows..(ki - k0) * rows + rows];
+        if ws.iter().all(|&w| w == 0) {
+            continue;
+        }
+        let prow = &qpatches.row(ki)[r0..r1];
+        for (i, &w) in ws.iter().enumerate() {
+            if w == 0 {
+                continue;
+            }
+            madd_span_dispatch_i8(
+                kernel,
+                &mut acc[i * span..(i + 1) * span],
+                prow,
+                w,
+            );
+        }
+    }
+}
+
+/// Materialized int8 dense driver: the exact loop structure of
+/// [`gemm_dense_packed`] with the r-block outermost so each (mr, span)
+/// i32 accumulator sees the full K reduction before the requant epilogue
+/// assigns `acc · (w_scale[row] · in_scale)` into the output. Writes (not
+/// accumulates) rows `0..packed.m` of `out`. `scales` are per *absolute*
+/// output row.
+pub fn gemm_dense_packed_i8(
+    packed: &PackedDenseI8,
+    scales: &[f32],
+    in_scale: f32,
+    qpatches: &MatI8,
+    out: &mut Mat,
+    ctx: &GemmCtx,
+) {
+    let m = packed.m;
+    let k = packed.k;
+    let r = qpatches.cols;
+    assert_eq!(k, qpatches.rows, "packed K must match the patch matrix");
+    assert_eq!(out.cols, r);
+    assert!(out.rows >= m);
+    assert!(scales.len() >= m);
+    if m == 0 || r == 0 {
+        return;
+    }
+    if k == 0 {
+        out.data[..m * r].fill(0.0);
+        return;
+    }
+    let mr = packed.mr;
+    let cols = out.cols;
+    let kc = ctx.tile.kc.max(1);
+    let rc = ctx.tile.rc.max(1);
+    let kernel = ctx.kernel;
+    let slabs = ctx.slabs;
+    let scratch_len = mr * rc.min(r);
+    ctx.pool.run_chunks_capped(
+        &mut out.data[..m * cols],
+        mr * cols,
+        ctx.cap,
+        |p, worker, chunk| {
+            let rows = chunk.len() / cols;
+            let m0 = p * mr;
+            let panel = packed.panel(p);
+            slabs.with_slab_i32(worker, scratch_len, |scratch| {
+                for r0 in (0..r).step_by(rc) {
+                    let r1 = (r0 + rc).min(r);
+                    let span = r1 - r0;
+                    let acc = &mut scratch[..rows * span];
+                    acc.fill(0);
+                    for k0 in (0..k).step_by(kc) {
+                        let k1 = (k0 + kc).min(k);
+                        let wblock = &panel[k0 * rows..k1 * rows];
+                        packed_block_i8(
+                            kernel, wblock, rows, qpatches, k0, k1, r0, r1, acc,
+                        );
+                    }
+                    for i in 0..rows {
+                        let s = scales[m0 + i] * in_scale;
+                        let orow = &mut chunk[i * cols + r0..i * cols + r1];
+                        for (ov, &av) in
+                            orow.iter_mut().zip(&acc[i * span..(i + 1) * span])
+                        {
+                            *ov = av as f32 * s;
+                        }
+                    }
+                }
+            });
+        },
+    );
+}
+
+/// Fused int8 dense driver: like [`gemm_dense_fused`], each rc column
+/// block packs the `(kc, rc)` f32 patch panel it is about to consume,
+/// quantizes it into the worker's i8 panel slab (elementwise — identical
+/// values to quantizing the materialized matrix), and accumulates every
+/// weight panel into one full `(M, span)` i32 accumulator. Requant runs
+/// once after the whole K walk, so the output is bit-identical to
+/// [`gemm_dense_packed_i8`].
+pub fn gemm_dense_fused_i8(
+    packed: &PackedDenseI8,
+    scales: &[f32],
+    in_scale: f32,
+    x: &Tensor5,
+    g: &Conv3dGeometry,
+    out: &mut Mat,
+    ctx: &GemmCtx,
+) {
+    let m = packed.m;
+    let k = packed.k;
+    let r = out.cols;
+    assert_eq!(k, g.cols(), "packed K must match the conv geometry");
+    assert_eq!(r, g.rows(x.dims[0]), "output columns must match the geometry");
+    assert!(out.rows >= m);
+    assert!(scales.len() >= m);
+    if m == 0 || r == 0 {
+        return;
+    }
+    if k == 0 {
+        out.data[..m * r].fill(0.0);
+        return;
+    }
+    let mr = packed.mr;
+    let cols = out.cols;
+    let kc = ctx.tile.kc.max(1);
+    let rc = ctx.tile.rc.max(1);
+    let kernel = ctx.kernel;
+    let slabs = ctx.slabs;
+    let tasks = r.div_ceil(rc);
+    // Same division the materialized caller performs when quantizing the
+    // patch matrix — identical inverse, identical quantized values.
+    let inv = 1.0 / in_scale;
+    let scratch_len = m * rc.min(r);
+    let base = SendPtr::new(out.data.as_mut_ptr());
+    ctx.pool.run_tasks(tasks, ctx.cap, move |t, worker| {
+        let r0 = t * rc;
+        let r1 = (r0 + rc).min(r);
+        let span = r1 - r0;
+        slabs.with_slab_i32(worker, scratch_len, |scratch| {
+            let acc = &mut scratch[..m * span];
+            acc.fill(0);
+            slabs.with_panel(worker, kc.min(k), span, |panel| {
+                slabs.with_panel_i8(worker, kc.min(k), span, |qpanel| {
+                    for k0 in (0..k).step_by(kc) {
+                        let k1 = (k0 + kc).min(k);
+                        panel.reset(k1 - k0, span);
+                        pack_patch_panel(x, g, k0, k1, r0, r1, panel);
+                        qpanel.reset(k1 - k0, span);
+                        let n = (k1 - k0) * span;
+                        quantize_span(
+                            &panel.data[..n],
+                            inv,
+                            &mut qpanel.data[..n],
+                        );
+                        for p in 0..packed.panels() {
+                            let rows = packed.panel_rows(p);
+                            let wblock =
+                                &packed.panel(p)[k0 * rows..k1 * rows];
+                            let m0 = p * mr;
+                            packed_block_i8(
+                                kernel,
+                                wblock,
+                                rows,
+                                qpanel,
+                                0,
+                                k1 - k0,
+                                0,
+                                span,
+                                &mut acc[m0 * span..(m0 + rows) * span],
+                            );
+                        }
+                    }
+                });
+            });
+            for mi in 0..m {
+                let s = scales[mi] * in_scale;
+                // Safety: this task owns columns r0..r1 of every output
+                // row; tasks never alias.
+                let orow = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        base.get().add(mi * cols + r0),
+                        span,
+                    )
+                };
+                for (ov, &av) in
+                    orow.iter_mut().zip(&acc[mi * span..(mi + 1) * span])
+                {
+                    *ov = av as f32 * s;
+                }
+            }
+        });
+    });
+}
+
+/// Materialized int8 filter driver: int8 dense over the surviving rows
+/// into the shared compaction buffer (`scales` indexed by *compact* row,
+/// matching [`crate::codegen::Int8Plan::scales`] for Filter plans), then
+/// the same scatter-back as [`gemm_filter_packed`]. Owns init of `out`.
+pub fn gemm_filter_packed_i8(
+    rows: &[u32],
+    packed: &PackedDenseI8,
+    scales: &[f32],
+    in_scale: f32,
+    qpatches: &MatI8,
+    out: &mut Mat,
+    ctx: &GemmCtx,
+) {
+    let r = qpatches.cols;
+    let mut compact = ctx.slabs.filter_buf();
+    compact.reset(rows.len(), r);
+    gemm_dense_packed_i8(packed, scales, in_scale, qpatches, &mut compact, ctx);
+    scatter_filter_rows(rows, &compact, out);
+}
+
+/// Fused int8 filter driver: [`gemm_dense_fused_i8`] into the compaction
+/// buffer, then scatter. Owns init of `out`.
+pub fn gemm_filter_fused_i8(
+    rows: &[u32],
+    packed: &PackedDenseI8,
+    scales: &[f32],
+    in_scale: f32,
+    x: &Tensor5,
+    g: &Conv3dGeometry,
+    out: &mut Mat,
+    ctx: &GemmCtx,
+) {
+    let r = out.cols;
+    let mut compact = ctx.slabs.filter_buf();
+    compact.reset(rows.len(), r);
+    gemm_dense_fused_i8(packed, scales, in_scale, x, g, &mut compact, ctx);
+    scatter_filter_rows(rows, &compact, out);
+}
+
+/// Materialized int8 sparse panel: the int8 analog of
+/// [`gemm_panel_core`]. Per r-block the group's full gather list
+/// accumulates into a zeroed `(m_eff, span)` i32 slab, then the requant
+/// epilogue **adds** `acc · (w_scale[row] · in_scale)` into the
+/// caller-zeroed rows — one f32 add per group per element, the same
+/// order as the fused sparse driver.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_panel_core_i8(
+    grp: &KgsGroup,
+    qgrp: &GroupI8,
+    scales: &[f32],
+    in_scale: f32,
+    qpatches: &MatI8,
+    chunk: &mut [f32],
+    cols_out: usize,
+    row0: usize,
+    tile: GemmTile,
+    kernel: KernelArch,
+    scratch: &mut [i32],
+) {
+    let r = qpatches.cols;
+    debug_assert!(grp.m0 >= row0, "panel above its bucket");
+    let base = grp.m0 - row0;
+    let m_eff = grp.m_eff;
+    let rc = tile.rc.max(1);
+    for r0 in (0..r).step_by(rc) {
+        let r1 = (r0 + rc).min(r);
+        let span = r1 - r0;
+        let acc = &mut scratch[..m_eff * span];
+        acc.fill(0);
+        for (j, &src) in grp.cols.iter().enumerate() {
+            let prow = &qpatches.row(src as usize)[r0..r1];
+            for i in 0..m_eff {
+                let w = qgrp.panel_cm[j * m_eff + i];
+                if w == 0 {
+                    continue;
+                }
+                madd_span_dispatch_i8(
+                    kernel,
+                    &mut acc[i * span..(i + 1) * span],
+                    prow,
+                    w,
+                );
+            }
+        }
+        for i in 0..m_eff {
+            let s = scales[grp.m0 + i] * in_scale;
+            let mrow = base + i;
+            let orow = &mut chunk[mrow * cols_out + r0..mrow * cols_out + r1];
+            for (ov, &av) in
+                orow.iter_mut().zip(&acc[i * span..(i + 1) * span])
+            {
+                *ov += av as f32 * s;
+            }
+        }
+    }
+}
+
+/// Fused int8 sparse driver: [`gemm_panels_fused`] with the kc-sliced
+/// gathered panels quantized into the worker's i8 slab before the
+/// widening block. Each group's exact i32 sum requant-adds into the
+/// zeroed output block in flat group order — the same per-element f32
+/// add sequence as the materialized bucket schedule, so fused ↔
+/// materialized stay bit-identical. Owns init of `out`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_panels_fused_i8(
+    groups: &[KgsGroup],
+    qgroups: &[GroupI8],
+    scales: &[f32],
+    in_scale: f32,
+    max_m_eff: usize,
+    x: &Tensor5,
+    g: &Conv3dGeometry,
+    out: &mut Mat,
+    ctx: &GemmCtx,
+) {
+    let r = out.cols;
+    let m = out.rows;
+    debug_assert_eq!(r, g.rows(x.dims[0]));
+    assert_eq!(groups.len(), qgroups.len());
+    if r == 0 || m == 0 {
+        return;
+    }
+    let cols = out.cols;
+    let rc = ctx.tile.rc.max(1);
+    let kc = ctx.tile.kc.max(1);
+    let tasks = r.div_ceil(rc);
+    let scratch_len = panel_scratch_len(max_m_eff, ctx.tile, r);
+    let kernel = ctx.kernel;
+    let slabs = ctx.slabs;
+    let inv = 1.0 / in_scale;
+    let base = SendPtr::new(out.data.as_mut_ptr());
+    ctx.pool.run_tasks(tasks, ctx.cap, move |t, worker| {
+        let r0 = t * rc;
+        let r1 = (r0 + rc).min(r);
+        let span = r1 - r0;
+        slabs.with_slab_i32(worker, scratch_len, |scratch| {
+            for mi in 0..m {
+                // Safety: this task owns columns r0..r1 of every output
+                // row; tasks never alias.
+                let orow = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        base.get().add(mi * cols + r0),
+                        span,
+                    )
+                };
+                orow.fill(0.0);
+            }
+            for (grp, qgrp) in groups.iter().zip(qgroups) {
+                let ncols = grp.cols.len();
+                if ncols == 0 {
+                    continue; // adds nothing; materialized path agrees
+                }
+                let acc_len = grp.m_eff * span;
+                scratch[..acc_len].fill(0);
+                for j0 in (0..ncols).step_by(kc) {
+                    let j1 = (j0 + kc).min(ncols);
+                    slabs.with_panel(worker, j1 - j0, span, |panel| {
+                        pack_patch_rows(x, g, &grp.cols[j0..j1], r0, r1, panel);
+                        slabs.with_panel_i8(worker, j1 - j0, span, |qpanel| {
+                            let n = (j1 - j0) * span;
+                            quantize_span(
+                                &panel.data[..n],
+                                inv,
+                                &mut qpanel.data[..n],
+                            );
+                            panel_block_gathered_i8(
+                                kernel,
+                                grp,
+                                qgrp,
+                                j0,
+                                j1,
+                                qpanel,
+                                span,
+                                &mut scratch[..acc_len],
+                            );
+                        });
+                    });
+                }
+                for i in 0..grp.m_eff {
+                    let s = scales[grp.m0 + i] * in_scale;
+                    let orow = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            base.get().add((grp.m0 + i) * cols + r0),
+                            span,
+                        )
+                    };
+                    for (ov, &av) in
+                        orow.iter_mut().zip(&scratch[i * span..(i + 1) * span])
+                    {
+                        *ov += av as f32 * s;
+                    }
+                }
+            }
+        });
+    });
+}
+
+/// Int8 analog of [`panel_block_gathered`]: accumulate quantized columns
+/// `j0..j1` of the group into `acc` without zeroing (the caller zeroes
+/// once per group; slices accumulate exactly in i32).
+#[allow(clippy::too_many_arguments)]
+fn panel_block_gathered_i8(
+    kernel: KernelArch,
+    grp: &KgsGroup,
+    qgrp: &GroupI8,
+    j0: usize,
+    j1: usize,
+    qpanel: &MatI8,
+    span: usize,
+    acc: &mut [i32],
+) {
+    let m_eff = grp.m_eff;
+    for (jj, j) in (j0..j1).enumerate() {
+        let prow = &qpanel.row(jj)[..span];
+        for i in 0..m_eff {
+            let w = qgrp.panel_cm[j * m_eff + i];
+            if w == 0 {
+                continue;
+            }
+            madd_span_dispatch_i8(
+                kernel,
+                &mut acc[i * span..(i + 1) * span],
+                prow,
+                w,
+            );
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
 // PR-1 reference kernel (kept for the micro-bench baseline and as a
 // differential oracle): strided scalar weight loads, no prepacking.
 // Accumulates into a caller-zeroed `out`.
@@ -1223,6 +1789,64 @@ mod tests {
                 assert_eq!(outs[0].data, o.data, "m={m} r={r}");
             }
         }
+    }
+
+    #[test]
+    fn int8_dense_bit_identical_and_close_to_f32() {
+        use crate::codegen::{absmax, quant_scale};
+        let (m, kdim, r) = (13usize, 48usize, 100usize);
+        let w = Mat::random(m, kdim, 91);
+        let p = Mat::random(kdim, r, 92);
+        // Per-row weight scales + one activation scale (the plan's recipe).
+        let scales: Vec<f32> =
+            (0..m).map(|i| quant_scale(absmax(w.row(i)))).collect();
+        let in_scale = quant_scale(absmax(&p.data));
+        let mut qw = vec![0i8; m * kdim];
+        for i in 0..m {
+            quantize_span(
+                w.row(i),
+                1.0 / scales[i],
+                &mut qw[i * kdim..(i + 1) * kdim],
+            );
+        }
+        let mut qp = MatI8::zeros(kdim, r);
+        quantize_span(&p.data, 1.0 / in_scale, &mut qp.data);
+        let tile = GemmTile { mr: 4, rc: 32, kc: 16 };
+        let packed = PackedDenseI8::pack(&qw, m, kdim, tile.mr);
+        let mut outs = Vec::new();
+        for kernel in kernels() {
+            for threads in [1usize, 4] {
+                let pool = ThreadPool::new(threads);
+                let slabs = AccSlabs::new(threads);
+                let mut out = Mat::zeros(m, r);
+                gemm_dense_packed_i8(
+                    &packed,
+                    &scales,
+                    in_scale,
+                    &qp,
+                    &mut out,
+                    &GemmCtx {
+                        tile,
+                        kernel,
+                        cap: usize::MAX,
+                        pool: &pool,
+                        slabs: &slabs,
+                    },
+                );
+                outs.push(out);
+            }
+        }
+        // Exact integer accumulation: every ISA and thread count agrees
+        // bit for bit.
+        for o in &outs[1..] {
+            assert_eq!(outs[0].data, o.data);
+        }
+        // And the requantized result tracks the f32 oracle within the
+        // per-product quantization noise bound.
+        let smax = scales.iter().fold(0.0f32, |a, &s| a.max(s));
+        let bound = kdim as f32 * (in_scale + smax);
+        let diff = outs[0].max_abs_diff(&dense_oracle(&w.data, m, &p));
+        assert!(diff < bound, "diff {diff} vs bound {bound}");
     }
 
     #[test]

@@ -38,9 +38,86 @@ pub use engine::{EngineBuilder, EngineCore, EngineKind, LayerTiming, NativeEngin
 pub use naive::NaiveBackend;
 pub use options::{EngineOptions, ResolvedOptions};
 
-use crate::codegen::{CompiledConv, ConvCall, ConvKind, KgsGroup, PanelSchedule};
-use crate::tensor::{Mat, Tensor5};
+use crate::codegen::{
+    absmax, quant_scale, CompiledConv, ConvCall, ConvKind, GroupI8, KgsGroup,
+    PanelSchedule,
+};
+use crate::tensor::{Mat, MatI8, Tensor5};
 use crate::util::pool::ThreadPool;
+use std::sync::OnceLock;
+
+/// Software-prefetch the cache line at `p` for reading (L1). A pure hint:
+/// no-op on ISAs without one.
+#[inline(always)]
+fn prefetch_read(p: *const f32) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        core::arch::x86_64::_mm_prefetch(
+            p as *const i8,
+            core::arch::x86_64::_MM_HINT_T0,
+        );
+    }
+    #[cfg(target_arch = "aarch64")]
+    unsafe {
+        core::arch::asm!(
+            "prfm pldl1keep, [{p}]",
+            p = in(reg) p,
+            options(nostack, preserves_flags, readonly)
+        );
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let _ = p;
+}
+
+/// Cached `RT3D_PREFETCH` (the packers are on the per-row hot path;
+/// re-reading the environment there would dwarf the prefetch win).
+fn prefetch_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(crate::util::env::prefetch)
+}
+
+/// Prefetch the first source element the packer will touch for virtual
+/// patch row `row_i` at output column `r0` — issued one row ahead while
+/// the current row is being copied, so the next row's first input line is
+/// in flight by the time the packer reaches it. Best effort: if the row's
+/// first position lands in padding there is nothing to prefetch.
+fn prefetch_patch_row(
+    x: &Tensor5,
+    g: &crate::tensor::Conv3dGeometry,
+    row_i: usize,
+    r0: usize,
+) {
+    let [_b, _c, di, hi, wi] = x.dims;
+    let [kd, kh, kw] = g.kernel;
+    let [sd, sh, sw] = g.stride;
+    let [pd, ph, pw] = g.padding;
+    let [od, oh, ow] = g.out_spatial();
+    let khw = kh * kw;
+    let ks = kd * khw;
+    let ci = row_i / ks;
+    let loc = row_i % ks;
+    let dz = loc / khw;
+    let dy = (loc % khw) / kw;
+    let dx = loc % kw;
+    let band = r0 / ow;
+    let yo = band % oh;
+    let zo = (band / oh) % od;
+    let n = band / (oh * od);
+    let z = (zo * sd + dz) as isize - pd as isize;
+    let y = (yo * sh + dy) as isize - ph as isize;
+    let xx = ((r0 % ow) * sw + dx) as isize - pw as isize;
+    if z < 0
+        || z >= di as isize
+        || y < 0
+        || y >= hi as isize
+        || xx < 0
+        || xx >= wi as isize
+    {
+        return;
+    }
+    let src = x.idx(n, ci, z as usize, y as usize, xx as usize);
+    prefetch_read(x.data[src..].as_ptr());
+}
 
 /// im2col producing the *transposed* patch matrix (K rows, R cols): row
 /// `c*Ks + loc` holds the activation for kernel tap `loc` of channel `c`
@@ -177,7 +254,11 @@ pub fn pack_patch_panel(
     if span == 0 {
         return;
     }
+    let pf = prefetch_enabled();
     for row_i in k0..k1 {
+        if pf && row_i + 1 < k1 {
+            prefetch_patch_row(x, g, row_i + 1, r0);
+        }
         pack_patch_row_span(x, g, row_i, r0, r1, out.row_mut(row_i - k0));
     }
 }
@@ -203,7 +284,11 @@ pub fn pack_patch_rows(
     if span == 0 {
         return;
     }
+    let pf = prefetch_enabled();
     for (j, &row_i) in rows.iter().enumerate() {
+        if pf && j + 1 < rows.len() {
+            prefetch_patch_row(x, g, rows[j + 1] as usize, r0);
+        }
         debug_assert!((row_i as usize) < g.cols(), "gathered row escapes K");
         pack_patch_row_span(x, g, row_i as usize, r0, r1, out.row_mut(j));
     }
@@ -426,6 +511,187 @@ pub fn run_conv_fused(
         },
     }
     finish_bias_relu(cc, out, pool);
+}
+
+/// Per-call activation scale for one int8 layer: the artifact's static
+/// scale when exported, else a dynamic symmetric absmax over the **input
+/// tensor**. Deliberately *not* computed from the patch matrix: patches
+/// and input can have different absmax sets in exotic geometries
+/// (stride > kernel skips elements), and fused never materializes the
+/// patches — sourcing the scale from `x` gives both paths the identical
+/// number.
+pub fn layer_input_scale(plan: &crate::codegen::Int8Plan, x: &Tensor5) -> f32 {
+    plan.in_scale.unwrap_or_else(|| quant_scale(absmax(&x.data)))
+}
+
+/// Int8 sibling of [`run_conv_bound`]: the caller quantized the
+/// materialized patch matrix with `1.0 / in_scale` (see `NativeEngine`);
+/// this runs the widening kernels, the requant epilogue, then the shared
+/// f32 bias/ReLU pass. Requires the plan's int8 sidecar (`finalize()`
+/// builds it). Owns init of `out`.
+pub fn run_conv_bound_i8(
+    call: &ConvCall<'_>,
+    in_scale: f32,
+    qpatches: &MatI8,
+    out: &mut Mat,
+    pool: &ThreadPool,
+    slabs: &AccSlabs,
+) {
+    let cc = call.cc;
+    let plan = cc.int8.as_ref().expect("int8 plan (finalize() builds it)");
+    let r = qpatches.cols;
+    assert_eq!((out.rows, out.cols), (call.geom.out_ch, r));
+    let ctx = gemm::GemmCtx {
+        tile: call.tile,
+        kernel: call.kernel,
+        cap: call.cap,
+        pool,
+        slabs,
+    };
+    match &cc.kind {
+        ConvKind::Dense { .. } => {
+            let packed = plan.packed.as_ref().expect("dense int8 panels");
+            gemm::gemm_dense_packed_i8(
+                packed, &plan.scales, in_scale, qpatches, out, &ctx,
+            );
+        }
+        ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => {
+            out.data.fill(0.0);
+            match &cc.sched {
+                Some(sched) => run_panel_buckets_i8(
+                    groups, &plan.groups, &plan.scales, in_scale, sched,
+                    qpatches, out, &ctx,
+                ),
+                None => {
+                    let sched = PanelSchedule::build(groups, out.rows);
+                    run_panel_buckets_i8(
+                        groups, &plan.groups, &plan.scales, in_scale, &sched,
+                        qpatches, out, &ctx,
+                    )
+                }
+            }
+        }
+        ConvKind::Filter { rows, .. } => {
+            let packed = plan.packed.as_ref().expect("filter int8 panels");
+            gemm::gemm_filter_packed_i8(
+                rows, packed, &plan.scales, in_scale, qpatches, out, &ctx,
+            );
+        }
+    }
+    finish_bias_relu(cc, out, pool);
+}
+
+/// Int8 sibling of [`run_conv_fused`]: packs + quantizes patch panels on
+/// the fly inside the fused drivers. `in_scale` must be the same scale the
+/// materialized path uses ([`layer_input_scale`]) — that is what keeps
+/// fused ↔ materialized bit-identical within int8. Owns init of `out`.
+pub fn run_conv_fused_i8(
+    call: &ConvCall<'_>,
+    in_scale: f32,
+    x: &Tensor5,
+    out: &mut Mat,
+    pool: &ThreadPool,
+    slabs: &AccSlabs,
+) {
+    let cc = call.cc;
+    let plan = cc.int8.as_ref().expect("int8 plan (finalize() builds it)");
+    let g = &call.geom;
+    let r = g.rows(x.dims[0]);
+    assert_eq!((out.rows, out.cols), (g.out_ch, r));
+    let ctx = gemm::GemmCtx {
+        tile: call.tile,
+        kernel: call.kernel,
+        cap: call.cap,
+        pool,
+        slabs,
+    };
+    match &cc.kind {
+        ConvKind::Dense { .. } => {
+            let packed = plan.packed.as_ref().expect("dense int8 panels");
+            gemm::gemm_dense_fused_i8(
+                packed, &plan.scales, in_scale, x, g, out, &ctx,
+            );
+        }
+        ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => {
+            let max_m_eff = match &cc.sched {
+                Some(sched) => sched.max_m_eff,
+                None => groups.iter().map(|grp| grp.m_eff).max().unwrap_or(1),
+            };
+            gemm::gemm_panels_fused_i8(
+                groups,
+                &plan.groups,
+                &plan.scales,
+                in_scale,
+                max_m_eff,
+                x,
+                g,
+                out,
+                &ctx,
+            );
+        }
+        ConvKind::Filter { rows, .. } => {
+            let packed = plan.packed.as_ref().expect("filter int8 panels");
+            gemm::gemm_filter_fused_i8(
+                rows, packed, &plan.scales, in_scale, x, g, out, &ctx,
+            );
+        }
+    }
+    finish_bias_relu(cc, out, pool);
+}
+
+/// Int8 bucket scheduler: [`run_panel_buckets`] with the widening panel
+/// kernel and an i32 accumulator slab.
+#[allow(clippy::too_many_arguments)]
+fn run_panel_buckets_i8(
+    groups: &[KgsGroup],
+    qgroups: &[GroupI8],
+    scales: &[f32],
+    in_scale: f32,
+    sched: &PanelSchedule,
+    qpatches: &MatI8,
+    out: &mut Mat,
+    ctx: &gemm::GemmCtx,
+) {
+    if out.cols == 0 {
+        return;
+    }
+    debug_assert_eq!(groups.len(), qgroups.len());
+    let cols = out.cols;
+    let scratch_len =
+        gemm::panel_scratch_len(sched.max_m_eff, ctx.tile, qpatches.cols);
+    let (tile, kernel, slabs) = (ctx.tile, ctx.kernel, ctx.slabs);
+    ctx.pool.run_parts_scaled(
+        &mut out.data,
+        &sched.rows,
+        cols,
+        ctx.cap,
+        |j, worker, chunk| {
+            let (a, b) = sched.spans[j];
+            if a == b {
+                return; // fully pruned row range: stays zero
+            }
+            slabs.with_slab_i32(worker, scratch_len, |scratch| {
+                for (grp, qgrp) in groups[a as usize..b as usize]
+                    .iter()
+                    .zip(&qgroups[a as usize..b as usize])
+                {
+                    gemm::gemm_panel_core_i8(
+                        grp,
+                        qgrp,
+                        scales,
+                        in_scale,
+                        qpatches,
+                        chunk,
+                        cols,
+                        sched.starts[j],
+                        tile,
+                        kernel,
+                        scratch,
+                    );
+                }
+            });
+        },
+    );
 }
 
 /// Run compacted panels over their precompiled bucket schedule, one pool

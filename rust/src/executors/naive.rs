@@ -169,6 +169,7 @@ mod tests {
             kernel: None,
             threads: 0,
             fused: None,
+            int8: None,
             flops: g.flops(1),
         };
         cc.finalize();
@@ -204,6 +205,7 @@ mod tests {
             kernel: None,
             threads: 0,
             fused: None,
+            int8: None,
             flops: g.flops(1),
         };
         cc.finalize();

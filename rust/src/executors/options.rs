@@ -20,7 +20,7 @@
 //! tuned entry, falling back to the detected ISA / footprint heuristic —
 //! see `CompiledConv::bind_full` and `CompiledConv::resolve_fused`.
 
-use crate::codegen::{tuner::TuneDb, KernelArch};
+use crate::codegen::{tuner::TuneDb, KernelArch, Precision};
 use crate::executors::EngineKind;
 use crate::util::pool::{PoolMode, ThreadPool};
 use std::path::PathBuf;
@@ -53,6 +53,11 @@ pub struct EngineOptions {
     /// Tuning-database path. Env: `RT3D_TUNE_DB`; default:
     /// `<crate>/tune_db.json`. A missing file simply means "untuned".
     pub tune_db: Option<PathBuf>,
+    /// Arithmetic precision for conv layers. Env: `RT3D_PRECISION`;
+    /// default: f32. `Int8` runs layers whose plans carry a quantized
+    /// sidecar through the widening int8 kernels (per-layer plans without
+    /// one silently stay f32 — see `CompiledConv::bind_exec`).
+    pub precision: Option<Precision>,
 }
 
 /// [`EngineOptions`] after the builder > env > default resolution: every
@@ -75,6 +80,8 @@ pub struct ResolvedOptions {
     pub spin: usize,
     /// The loaded tuning database, if one exists at the resolved path.
     pub tune_db: Option<TuneDb>,
+    /// Concrete precision for every handle minted from these options.
+    pub precision: Precision,
 }
 
 impl EngineOptions {
@@ -106,6 +113,9 @@ impl EngineOptions {
             pool_mode: self.pool_mode.unwrap_or_else(PoolMode::from_env),
             spin: resolve_spin(self.spin, crate::util::env::spin()),
             tune_db,
+            // Re-read (not the process-wide cache): CI sets
+            // RT3D_PRECISION per test leg and builds engines in-process.
+            precision: self.precision.unwrap_or_else(Precision::from_env),
         }
     }
 }
@@ -166,6 +176,7 @@ mod tests {
             pool_mode: Some(PoolMode::Scoped),
             spin: Some(7),
             tune_db: Some(PathBuf::from("/definitely/not/here.json")),
+            precision: Some(Precision::Int8),
         };
         let r = opts.resolve();
         assert_eq!(r.kind, EngineKind::Untuned);
@@ -176,5 +187,6 @@ mod tests {
         assert_eq!(r.pool_mode, PoolMode::Scoped);
         assert_eq!(r.spin, 7);
         assert!(r.tune_db.is_none(), "missing db file means untuned");
+        assert_eq!(r.precision, Precision::Int8);
     }
 }

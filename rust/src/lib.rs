@@ -38,6 +38,28 @@
 //!                                └─ Session::push_frames -> windowed logits
 //! ```
 //!
+//! # Precision
+//!
+//! Every compiled conv plan carries a quantized int8 sidecar next to its
+//! f32 packing: per-output-channel symmetric absmax weight scales
+//! (artifact-provided via the manifest's `"quant"` block, or recomputed
+//! at compile time), prepacked i8 panels, and a per-layer input scale
+//! (static from calibration, else dynamic absmax per forward). Select
+//! with [`codegen::Precision`] — `EngineOptions::precision` /
+//! `RT3D_PRECISION=int8` — and both the fused and materialized drivers
+//! run widening-multiply kernels (AVX2 / NEON / scalar) that accumulate
+//! exact i8×i8 products in i32, then requantize once per output in an
+//! f32 epilogue (bias + ReLU + `acc * w_scale * in_scale`).
+//!
+//! The numeric contract is two-sided. **Within** int8, i32 accumulation
+//! is exact and order-independent, so logits are bit-identical across
+//! scalar/SIMD kernels, fused/materialized paths, plan kinds and thread
+//! counts — the same parity invariant the f32 path holds, enforced by
+//! `tests/quantize.rs` and the CI `RT3D_PRECISION=int8` legs. **Against**
+//! f32 the gate is tolerance-based: an elementwise logit bound plus
+//! top-1 agreement on the synthetic models. Plans without a sidecar
+//! silently bind f32.
+//!
 //! # Layers
 //!
 //! * `runtime` — PJRT client loading the AOT HLO artifacts produced by

@@ -45,6 +45,34 @@ impl WeightRefs {
     }
 }
 
+/// Exported symmetric-quantization parameters for one conv layer (the
+/// `python/compile/quantize.py` convention): per-output-channel weight
+/// scales (`absmax/127`) and an optional static activation scale.
+/// Optional in the manifest — layers without it are quantized at compile
+/// time from the f32 weights with the identical rust-side algorithm.
+#[derive(Debug, Clone)]
+pub struct QuantInfo {
+    pub w_scales: Vec<f32>,
+    pub in_scale: Option<f32>,
+}
+
+impl QuantInfo {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            w_scales: j
+                .req("w_scales")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64().map(|x| x as f32))
+                .collect::<Result<Vec<f32>>>()?,
+            in_scale: match j.get("in_scale") {
+                Some(Json::Num(n)) => Some(*n as f32),
+                _ => None,
+            },
+        })
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ConvLayer {
     pub name: String,
@@ -59,6 +87,8 @@ pub struct ConvLayer {
     pub weights_sparse: Option<WeightRefs>,
     /// Per-unit sparsity mask (shape depends on the scheme; see codegen).
     pub unit_mask: Option<TensorRef>,
+    /// Exported quantization scales for the int8 path (optional).
+    pub quant: Option<QuantInfo>,
 }
 
 #[derive(Debug, Clone)]
@@ -113,6 +143,10 @@ impl Layer {
                 },
                 unit_mask: match j.get("unit_mask") {
                     Some(m) if !m.is_null() => Some(TensorRef::from_json(m)?),
+                    _ => None,
+                },
+                quant: match j.get("quant") {
+                    Some(m) if !m.is_null() => Some(QuantInfo::from_json(m)?),
                     _ => None,
                 },
             }),
@@ -236,7 +270,8 @@ mod tests {
          "relu": true,
          "weights": {"w": {"offset": 0, "shape": [4,3,3,3,3], "dtype": "f32"},
                      "b": {"offset": 1296, "shape": [4], "dtype": "f32"}},
-         "unit_mask": {"offset": 1312, "shape": [1,1,27], "dtype": "u8"}},
+         "unit_mask": {"offset": 1312, "shape": [1,1,27], "dtype": "u8"},
+         "quant": {"w_scales": [0.0125, 0.5, 1.0, 0.25], "in_scale": 0.75}},
         {"kind": "maxpool3d", "kernel": [2,2,2], "stride": [2,2,2]},
         {"kind": "residual", "name": "r1", "body": [], "shortcut": []},
         {"kind": "flatten"},
@@ -260,6 +295,9 @@ mod tests {
                 assert_eq!(c.name, "c1");
                 assert!(c.unit_mask.is_some());
                 assert_eq!(c.weights.b.shape, vec![4]);
+                let q = c.quant.as_ref().expect("quant parsed");
+                assert_eq!(q.w_scales, vec![0.0125, 0.5, 1.0, 0.25]);
+                assert_eq!(q.in_scale, Some(0.75));
             }
             _ => panic!("expected conv"),
         }

@@ -10,7 +10,8 @@ mod pool;
 mod synthetic;
 
 pub use manifest::{
-    ConvLayer, DenseLayer, Layer, Manifest, SparsityInfo, TensorRef, WeightRefs,
+    ConvLayer, DenseLayer, Layer, Manifest, QuantInfo, SparsityInfo, TensorRef,
+    WeightRefs,
 };
 pub use pool::TensorPool;
 pub use synthetic::SyntheticC3d;

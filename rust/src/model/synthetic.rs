@@ -99,6 +99,7 @@ fn conv(
         weights,
         weights_sparse: None,
         unit_mask,
+        quant: None,
     })
 }
 

@@ -95,6 +95,42 @@ impl Mat {
     }
 }
 
+/// Dense row-major i8 matrix — the quantized-activation sibling of [`Mat`],
+/// used by the int8 executors for the quantized patch matrix and per-worker
+/// quantized patch panels. Same reset-for-reuse contract as `Mat`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatI8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+}
+
+impl MatI8 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    /// Re-shape in place for buffer reuse: sets the dims and resizes the
+    /// backing vec to exactly `rows * cols`. Never reallocates when
+    /// shrinking or when capacity already suffices; element values are
+    /// unspecified afterwards.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0);
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [i8] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

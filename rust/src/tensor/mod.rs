@@ -7,7 +7,7 @@ mod im2col;
 mod mat;
 
 pub use im2col::{im2col, im2col_into, Conv3dGeometry};
-pub use mat::Mat;
+pub use mat::{Mat, MatI8};
 
 /// A dense 5-D tensor in NCDHW (activations) or OIDHW (weights) layout.
 #[derive(Debug, Clone, PartialEq)]

@@ -27,6 +27,8 @@ pub const POOL: &str = "RT3D_POOL";
 pub const SPIN: &str = "RT3D_SPIN";
 pub const TUNE_DB: &str = "RT3D_TUNE_DB";
 pub const BENCH_BUDGET_MS: &str = "RT3D_BENCH_BUDGET_MS";
+pub const PRECISION: &str = "RT3D_PRECISION";
+pub const PREFETCH: &str = "RT3D_PREFETCH";
 
 /// One registered environment knob.
 pub struct Knob {
@@ -119,6 +121,30 @@ const KNOBS: &[Knob] = &[
             None => "per-bench default".to_string(),
         },
     },
+    Knob {
+        name: PRECISION,
+        help: "conv arithmetic precision: f32 (default) | int8 (widening \
+               integer kernels + requant epilogue)",
+        render: |raw| match raw.map(str::trim) {
+            None | Some("") => "f32 (default)".to_string(),
+            Some(v) => match crate::codegen::Precision::parse(v) {
+                Some(p) => p.name().to_string(),
+                None => format!("{v:?} (unrecognized -> f32)"),
+            },
+        },
+    },
+    Knob {
+        name: PREFETCH,
+        help: "software prefetch of the next source row in the fused patch \
+               packers: on (default) | off",
+        render: |raw| {
+            if parse_prefetch(raw) {
+                "on".to_string()
+            } else {
+                "off".to_string()
+            }
+        },
+    },
 ];
 
 /// Default pre-park spin budget (see `util::pool`).
@@ -172,6 +198,25 @@ pub fn fuse() -> Option<String> {
 /// Raw `RT3D_POOL` text (parsing lives with [`crate::util::pool::PoolMode`]).
 pub fn pool() -> Option<String> {
     var(POOL)
+}
+
+/// Raw `RT3D_PRECISION` text (parsing lives with
+/// [`crate::codegen::Precision`]).
+pub fn precision() -> Option<String> {
+    var(PRECISION)
+}
+
+fn parse_prefetch(raw: Option<&str>) -> bool {
+    !matches!(
+        raw.map(str::trim),
+        Some("0") | Some("off") | Some("false") | Some("no")
+    )
+}
+
+/// `RT3D_PREFETCH`: software prefetch in the patch packers. On unless set
+/// to `0`/`off`/`false`/`no`.
+pub fn prefetch() -> bool {
+    parse_prefetch(var(PREFETCH).as_deref())
 }
 
 /// `RT3D_TUNE_DB` when set and non-empty.
@@ -252,10 +297,13 @@ mod tests {
     fn registry_covers_every_typed_accessor() {
         // The constants used by the typed accessors must all be registered
         // (the debug_assert in `var` enforces this at runtime too).
-        for name in [THREADS, SIMD, FUSE, POOL, SPIN, TUNE_DB, BENCH_BUDGET_MS] {
+        for name in [
+            THREADS, SIMD, FUSE, POOL, SPIN, TUNE_DB, BENCH_BUDGET_MS,
+            PRECISION, PREFETCH,
+        ] {
             assert!(knobs().iter().any(|k| k.name == name), "{name} unregistered");
         }
-        assert_eq!(knobs().len(), 7, "new knob? register + document it");
+        assert_eq!(knobs().len(), 9, "new knob? register + document it");
     }
 
     #[test]
@@ -283,5 +331,17 @@ mod tests {
         assert_eq!(parse_usize(Some(" 8 ")), Some(8));
         assert_eq!(parse_usize(Some("x")), None);
         assert_eq!(parse_usize(None), None);
+    }
+
+    #[test]
+    fn prefetch_defaults_on_and_parses_disables() {
+        assert!(parse_prefetch(None));
+        assert!(parse_prefetch(Some("1")));
+        assert!(parse_prefetch(Some("on")));
+        assert!(parse_prefetch(Some("garbage")));
+        assert!(!parse_prefetch(Some("0")));
+        assert!(!parse_prefetch(Some(" off ")));
+        assert!(!parse_prefetch(Some("false")));
+        assert!(!parse_prefetch(Some("no")));
     }
 }

@@ -26,6 +26,7 @@ fn conv_layer(m: usize, c: usize) -> ConvLayer {
         weights: WeightRefs { w: dummy_ref(), b: dummy_ref() },
         weights_sparse: None,
         unit_mask: None,
+        quant: None,
     }
 }
 

@@ -85,6 +85,7 @@ fn kernel_force_beats_tuned_choice_on_the_binding() {
         },
         weights_sparse: None,
         unit_mask: None,
+        quant: None,
     };
     let g = small_geom();
     let w = vec![0.25f32; g.out_ch * g.cols()];
@@ -170,6 +171,7 @@ fn tuned_per_layer_flags_still_apply_under_the_builder() {
         },
         weights_sparse: None,
         unit_mask: None,
+        quant: None,
     };
     let g = big_geom();
     let w = vec![0.1f32; g.out_ch * g.cols()];

@@ -28,6 +28,7 @@ fn conv_layer(m: usize, c: usize) -> ConvLayer {
         weights: WeightRefs { w: dummy.clone(), b: dummy },
         weights_sparse: None,
         unit_mask: None,
+        quant: None,
     }
 }
 

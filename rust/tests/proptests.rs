@@ -26,6 +26,7 @@ fn layer(m: usize, c: usize, k: [usize; 3]) -> ConvLayer {
         weights: WeightRefs { w: dummy.clone(), b: dummy },
         weights_sparse: None,
         unit_mask: None,
+        quant: None,
     }
 }
 

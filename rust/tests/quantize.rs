@@ -1,0 +1,291 @@
+//! Int8 quantized-path tests: the contract under test (see
+//! `codegen::plan` docs) is two-sided. **Within** int8, i32 accumulation
+//! of i8 products is exact and associative, so logits are bit-identical
+//! (`assert_eq!`, not tolerance) across scalar/SIMD kernels, the
+//! fused/materialized drivers, thread counts and plan kinds. **Against**
+//! f32, int8 is tolerance-gated: an elementwise logits bound plus top-1
+//! agreement on synthetic C3D / residual models. Also covered: artifact
+//! scale round-trip through `apply_quant` (including repacks) and the
+//! steady-state zero-allocation invariant of the int8 scratch buffers.
+
+use rt3d::codegen::{self, GemmTile, KernelArch, Precision};
+use rt3d::executors::NativeEngine;
+use rt3d::model::{Model, SyntheticC3d};
+use rt3d::tensor::{Mat, Tensor5};
+
+fn clip_batch(model: &Model, batch: usize, seed: u64) -> Tensor5 {
+    let [c, d, h, w] = model.manifest.input;
+    Tensor5::random([batch, c, d, h, w], seed)
+}
+
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+/// Every int8 execution configuration must produce the same bits: the
+/// requant epilogue performs one f32 rounding per element after the full
+/// i32 K-reduction, and integer accumulation is order-independent.
+#[test]
+fn int8_bit_identical_across_kernels_paths_threads() {
+    for build in [Model::synthetic_c3d, Model::synthetic_residual] {
+        for sparsity in [false, true] {
+            let model = build(SyntheticC3d::tiny());
+            let x = clip_batch(&model, 2, 42);
+            let reference = NativeEngine::builder(&model)
+                .sparsity(sparsity)
+                .precision(Precision::Int8)
+                .kernel(KernelArch::Scalar)
+                .fused(false)
+                .threads(1)
+                .build();
+            let want = reference.forward(&x);
+            let simd = KernelArch::active();
+            let configs: [(KernelArch, bool, usize); 4] = [
+                (KernelArch::Scalar, true, 4),
+                (simd, false, 4),
+                (simd, true, 2),
+                (simd, true, 1),
+            ];
+            for (kernel, fused, threads) in configs {
+                let engine = NativeEngine::builder(&model)
+                    .sparsity(sparsity)
+                    .precision(Precision::Int8)
+                    .kernel(kernel)
+                    .fused(fused)
+                    .threads(threads)
+                    .build();
+                assert_eq!(engine.precision(), Precision::Int8);
+                let got = engine.forward(&x);
+                assert_eq!(
+                    want.data, got.data,
+                    "int8 logits must be bit-identical \
+                     (sparsity={sparsity}, kernel={}, fused={fused}, \
+                     threads={threads})",
+                    kernel.name()
+                );
+            }
+        }
+    }
+}
+
+/// The differential gate vs f32: quantization error through the conv
+/// stack stays a small fraction of the logit range, and the predicted
+/// class agrees on (almost) every clip. The models and inputs are
+/// deterministic, so this is a fixed numeric check, not a flaky one.
+#[test]
+fn int8_tracks_f32_within_tolerance_and_top1() {
+    for build in [Model::synthetic_c3d, Model::synthetic_residual] {
+        for sparsity in [false, true] {
+            let model = build(SyntheticC3d::tiny());
+            let x = clip_batch(&model, 4, 7);
+            // Pin f32 explicitly: under the CI `RT3D_PRECISION=int8`
+            // leg an unpinned builder would resolve to int8 from the
+            // environment and this would compare int8 against itself.
+            let f32_engine = NativeEngine::builder(&model)
+                .sparsity(sparsity)
+                .precision(Precision::F32)
+                .threads(2)
+                .build();
+            assert_eq!(f32_engine.precision(), Precision::F32);
+            let int8_engine = NativeEngine::builder(&model)
+                .sparsity(sparsity)
+                .precision(Precision::Int8)
+                .threads(2)
+                .build();
+            let a = f32_engine.forward(&x);
+            let b = int8_engine.forward(&x);
+            assert_eq!(a.rows, b.rows);
+            let mut agree = 0;
+            for i in 0..a.rows {
+                let (ra, rb) = (a.row(i), b.row(i));
+                let range =
+                    ra.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-3);
+                let worst = ra
+                    .iter()
+                    .zip(rb)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(
+                    worst <= 0.25 * range,
+                    "clip {i}: int8 logits drifted {worst} vs f32 range \
+                     {range} (sparsity={sparsity})"
+                );
+                if argmax(ra) == argmax(rb) {
+                    agree += 1;
+                }
+            }
+            assert!(
+                agree >= a.rows - 1,
+                "top-1 agreement {agree}/{} too low (sparsity={sparsity})",
+                a.rows
+            );
+        }
+    }
+}
+
+/// Artifact-provided scales survive the compile pipeline end-to-end:
+/// `apply_quant` installs them, `set_tile` repacks keep them (the
+/// `provided` flag pins them across `finalize`), and the executed output
+/// reflects the provided quantization grid rather than recomputed scales.
+#[test]
+fn artifact_scales_round_trip_through_repacks() {
+    use rt3d::model::{ConvLayer, TensorRef, WeightRefs};
+    let dummy = TensorRef { offset: 0, shape: vec![], dtype: "f32".into() };
+    let layer = ConvLayer {
+        name: "rt".into(),
+        in_ch: 3,
+        out_ch: 5,
+        kernel: [3, 3, 3],
+        stride: [1, 1, 1],
+        padding: [1, 1, 1],
+        relu: false,
+        weights: WeightRefs { w: dummy.clone(), b: dummy },
+        weights_sparse: None,
+        unit_mask: None,
+        quant: None,
+    };
+    let geom = rt3d::tensor::Conv3dGeometry {
+        in_ch: 3,
+        out_ch: 5,
+        kernel: [3, 3, 3],
+        stride: [1, 1, 1],
+        padding: [1, 1, 1],
+        in_spatial: [4, 6, 6],
+    };
+    let w = Tensor5::random([5, 3, 3, 3, 3], 9).data;
+    let mut cc = codegen::compile_conv_dense(&layer, &geom, &w, vec![0.0; 5]);
+    let computed = cc.int8.as_ref().unwrap().scales.clone();
+    assert!(!cc.int8.as_ref().unwrap().provided);
+
+    // Install a deliberately different (coarser) grid, as an exporter
+    // would provide it: per-output-channel scales + a static input scale.
+    let provided: Vec<f32> = computed.iter().map(|s| s * 2.0).collect();
+    cc.apply_quant(&provided, Some(0.5));
+    let plan = cc.int8.as_ref().unwrap();
+    assert!(plan.provided);
+    assert_eq!(plan.scales, provided);
+    assert_eq!(plan.in_scale, Some(0.5));
+
+    // A repack (mr change) must preserve the provided grid, not silently
+    // recompute absmax scales from the f32 weights.
+    cc.set_tile(GemmTile { mr: 3, ..cc.tile });
+    let plan = cc.int8.as_ref().unwrap();
+    assert!(plan.provided, "repack dropped the provided flag");
+    assert_eq!(plan.scales, provided, "repack recomputed the scales");
+    assert_eq!(plan.in_scale, Some(0.5));
+
+    // And the executed output actually uses the provided grid: quantize
+    // the oracle input by hand on that grid and compare exactly.
+    let x = Tensor5::random([1, 3, 4, 6, 6], 10);
+    let patches = rt3d::executors::im2col_t(&x, &cc.geom);
+    let in_scale = 0.5f32;
+    let mut qp = rt3d::tensor::MatI8::zeros(patches.rows, patches.cols);
+    codegen::quantize_span(&patches.data, 1.0 / in_scale, &mut qp.data);
+    let mut want = Mat::zeros(5, patches.cols);
+    let k = cc.geom.cols();
+    for i in 0..5 {
+        let mut qw = vec![0i8; k];
+        codegen::quantize_span(&w[i * k..(i + 1) * k], 1.0 / provided[i], &mut qw);
+        for r in 0..patches.cols {
+            let mut acc = 0i32;
+            for (j, &wq) in qw.iter().enumerate() {
+                acc += wq as i32 * qp.data[j * patches.cols + r] as i32;
+            }
+            *want.at_mut(i, r) = acc as f32 * (provided[i] * in_scale);
+        }
+    }
+    let call = cc.bind_exec(cc.geom.in_spatial, None, None, Precision::Int8);
+    assert_eq!(call.precision, Precision::Int8);
+    let mut got = Mat::zeros(5, patches.cols);
+    rt3d::executors::run_conv_bound_i8(
+        &call,
+        in_scale,
+        &qp,
+        &mut got,
+        &rt3d::util::pool::ThreadPool::new(2),
+        &rt3d::executors::AccSlabs::new(2),
+    );
+    assert_eq!(want.data, got.data, "executor ignored the provided grid");
+}
+
+/// Steady state allocates nothing: after the first forward warmed every
+/// int8 buffer (i32 accumulator slabs, i8 panels, the quantized patch
+/// matrix), further forwards must not grow the arena, the recycler, or
+/// the scratch high-water mark.
+#[test]
+fn int8_steady_state_allocates_nothing() {
+    for sparsity in [false, true] {
+        let model = Model::synthetic_c3d(SyntheticC3d::tiny());
+        let engine = NativeEngine::builder(&model)
+            .sparsity(sparsity)
+            .precision(Precision::Int8)
+            .threads(2)
+            .build();
+        let x = clip_batch(&model, 2, 3);
+        let warm = engine.forward(&x);
+        let grows = engine.recycler_grows();
+        let caps = engine.arena_capacities();
+        let peak = engine.scratch_peak_bytes();
+        for _ in 0..3 {
+            let again = engine.forward(&x);
+            assert_eq!(warm.data, again.data, "int8 forward must be stable");
+        }
+        assert_eq!(
+            engine.recycler_grows(),
+            grows,
+            "recycler grew in int8 steady state (sparsity={sparsity})"
+        );
+        assert_eq!(
+            engine.arena_capacities(),
+            caps,
+            "arena grew in int8 steady state (sparsity={sparsity})"
+        );
+        assert_eq!(
+            engine.scratch_peak_bytes(),
+            peak,
+            "scratch peak moved in int8 steady state (sparsity={sparsity})"
+        );
+    }
+}
+
+/// A plan without a quantized sidecar silently binds f32 even under an
+/// int8 handle — and an int8 handle's outputs differ from f32's (the
+/// quantization actually happened; bit-equality would mean the int8 path
+/// silently fell through to f32).
+#[test]
+fn int8_binding_downgrades_without_sidecar_and_diverges_with_one() {
+    let model = Model::synthetic_c3d(SyntheticC3d::tiny());
+    let x = clip_batch(&model, 1, 5);
+    let f32_engine = NativeEngine::builder(&model)
+        .precision(Precision::F32)
+        .threads(1)
+        .build();
+    let int8_engine = NativeEngine::builder(&model)
+        .precision(Precision::Int8)
+        .threads(1)
+        .build();
+    let a = f32_engine.forward(&x);
+    let b = int8_engine.forward(&x);
+    assert_ne!(
+        a.data, b.data,
+        "int8 logits bit-equal to f32 — quantization never ran"
+    );
+
+    // Sidecar-free binding: a hand-built plan stripped of its int8 plan
+    // downgrades the call to f32.
+    let convs = model.conv_layers();
+    let g = model.conv_geometries()[0].1;
+    let w = model.pool.f32(&convs[0].weights.w);
+    let mut cc = codegen::compile_conv_dense(convs[0], &g, &w, vec![0.0; g.out_ch]);
+    cc.int8 = None;
+    let call = cc.bind_exec(g.in_spatial, None, None, Precision::Int8);
+    assert_eq!(
+        call.precision,
+        Precision::F32,
+        "binding must downgrade when no sidecar exists"
+    );
+}

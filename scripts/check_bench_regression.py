@@ -36,8 +36,12 @@ UPDATE_TOLERANCE = 1.5  # tolerance stamped into refreshed baselines
 # path's working set regressed (e.g. panel slabs started scaling with R).
 LATENCY_KEYS = ("p95_ms", "p50_ms", "p95_ms_1t", "p50_ms_1t",
                 "fused_peak_scratch_mb", "materialized_peak_scratch_mb")
-# Throughput-style keys: smaller is worse.
-THROUGHPUT_KEYS = ("saturation_clips_per_s", "fused_best_gflops")
+# Throughput-style keys: smaller is worse. The int8 keys gate the
+# quantized GEMM path: int8_best_gflops is its raw throughput and
+# int8_speedup_vs_f32 its advantage over the f32 SIMD kernels — the
+# acceptance criterion for the quantized path is that it stays > 1.0.
+THROUGHPUT_KEYS = ("saturation_clips_per_s", "fused_best_gflops",
+                   "int8_best_gflops", "int8_speedup_vs_f32")
 # Context carried into a refreshed baseline from the first run.
 CONTEXT_KEYS = ("bench", "model", "threads", "isa_detected", "kernel",
                 "simd_lanes", "workers_best")
