@@ -72,9 +72,11 @@ fn main() -> rt3d::Result<()> {
         labels.push(label);
         let clip = workload::make_clip(label, 1000 + i as u64, input[1], input[2]);
         session.push_clip(&clip)?;
-        // Results stream back while the camera keeps rolling.
+        // Results stream back while the camera keeps rolling. A failed
+        // window (`try_next` yields `Some(Err(..))`) aborts this driver;
+        // long-lived deployments would log it and keep streaming.
         while let Some(win) = session.try_next() {
-            tally.report(&win, &labels, stride_tiles);
+            tally.report(&win?, &labels, stride_tiles);
         }
     }
     println!(

@@ -18,7 +18,7 @@
 //! synthetic C3D model when `make artifacts` has not been run.
 
 use rt3d::codegen::KernelArch;
-use rt3d::coordinator::{Server, ServerConfig};
+use rt3d::coordinator::{Admission, Server, ServerConfig};
 use rt3d::executors::NativeEngine;
 use rt3d::model::{Model, SyntheticC3d};
 use rt3d::tensor::Tensor5;
@@ -123,7 +123,7 @@ fn main() {
                 .queue_depth(64)
                 .workers(1),
         );
-        let responses = server.take_responses();
+        let responses = server.take_responses().expect("responses");
         let t0 = Instant::now();
         for i in 0..n {
             server
@@ -180,7 +180,7 @@ fn main() {
                 .queue_depth(16)
                 .workers(wk),
         );
-        let responses = server.take_responses();
+        let responses = server.take_responses().expect("responses");
         let t0 = Instant::now();
         std::thread::scope(|s| {
             // Open-loop generator: offers the whole trace back-to-back;
@@ -222,6 +222,52 @@ fn main() {
         best.2
     );
 
+    // --- Admission control under overload -------------------------------
+    // Offer the whole trace through the non-blocking front door against a
+    // deliberately tiny pipeline (ingress depth 4, one worker): try_submit
+    // must shed the excess synchronously instead of blocking, every
+    // accepted request must still complete, and the shed/failed rates are
+    // tracked in the bench JSON (a fault-free run must report
+    // failed_rate = 0).
+    let engine = Arc::new(build(threads));
+    let server = Server::start(
+        engine,
+        ServerConfig::new()
+            .max_batch(4)
+            .max_wait(std::time::Duration::from_millis(2))
+            .queue_depth(4)
+            .workers(1),
+    );
+    let responses = server.take_responses().expect("responses");
+    let offered = sat_n;
+    let mut accepted = 0usize;
+    let t0 = Instant::now();
+    for i in 0..offered {
+        match server
+            .try_submit(clip_set[i % clip_set.len()].clone(), Some(i % 8), None)
+            .unwrap()
+        {
+            Admission::Accepted(_) => accepted += 1,
+            Admission::Shed(_) => {}
+        }
+    }
+    let offer_wall = t0.elapsed().as_secs_f64();
+    for _ in 0..accepted {
+        responses.recv().unwrap();
+    }
+    let m = server.shutdown();
+    let snap = m.snapshot();
+    assert_eq!(snap.ok, accepted, "every admitted request completed");
+    assert_eq!(snap.shed, offered - accepted, "shed accounting");
+    let shed_rate = snap.shed_rate();
+    let failed_rate = snap.failed_rate();
+    assert_eq!(failed_rate, 0.0, "fault-free run must not fail batches");
+    println!(
+        "serving overload: offered={offered} in {:.1}ms accepted={accepted} shed={} shed_rate={shed_rate:.3} failed_rate={failed_rate:.3}",
+        offer_wall * 1e3,
+        snap.shed,
+    );
+
     // --- Machine-readable output ---------------------------------------
     let mut json = String::new();
     json.push_str("{\n");
@@ -241,6 +287,8 @@ fn main() {
     json.push_str(&format!("  \"speedup_vs_1t\": {speedup:.4},\n"));
     json.push_str(&format!("  \"gflops\": {gflops:.4},\n"));
     json.push_str("  \"bit_identical_logits\": true,\n");
+    json.push_str(&format!("  \"shed_rate\": {shed_rate:.4},\n"));
+    json.push_str(&format!("  \"failed_rate\": {failed_rate:.4},\n"));
     json.push_str(&format!("  \"saturation_clips_per_s\": {:.4},\n", best.2));
     json.push_str(&format!("  \"workers_best\": {},\n", best.0));
     json.push_str(&format!("  \"workers_speedup\": {workers_speedup:.4},\n"));

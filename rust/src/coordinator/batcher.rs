@@ -1,4 +1,13 @@
 //! Dynamic batcher: size-capped, deadline-flushed request aggregation.
+//!
+//! Deadline-aware: when the oldest pending request carries a completion
+//! deadline, the batch closes once **half** that request's budget is
+//! spent (even if `max_wait` has not elapsed), leaving the other half
+//! for execution — waiting for stragglers past that point would turn a
+//! meetable deadline into a guaranteed miss. Requests whose deadline has
+//! fully expired are still forwarded: the execution worker sheds them
+//! with a [`super::Outcome::DeadlineExceeded`] response instead of
+//! running them, so every accepted request gets exactly one response.
 
 use super::Request;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
@@ -37,10 +46,7 @@ impl Batcher {
             if self.pending.len() >= self.cfg.max_batch {
                 return Some(self.take());
             }
-            let deadline = self
-                .pending
-                .first()
-                .map(|r| r.arrival + self.cfg.max_wait);
+            let deadline = self.pending.first().map(|r| flush_at(r, &self.cfg));
             let timeout = match deadline {
                 Some(d) => d.saturating_duration_since(Instant::now()),
                 None => Duration::from_secs(3600),
@@ -82,6 +88,20 @@ impl Batcher {
     }
 }
 
+/// When a batch whose oldest request is `r` must flush: `max_wait` after
+/// arrival, pulled earlier to the half-budget point when `r` carries a
+/// deadline.
+fn flush_at(r: &Request, cfg: &BatcherConfig) -> Instant {
+    let wait_flush = r.arrival + cfg.max_wait;
+    match r.deadline {
+        Some(d) => {
+            let budget = d.saturating_duration_since(r.arrival);
+            wait_flush.min(r.arrival + budget / 2)
+        }
+        None => wait_flush,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,6 +114,7 @@ mod tests {
             clip: Tensor5::zeros([1, 1, 1, 1, 1]),
             label: None,
             arrival: Instant::now(),
+            deadline: None,
         }
     }
 
@@ -148,6 +169,37 @@ mod tests {
         }
         assert_eq!(total, 5);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn deadline_budget_closes_batch_early() {
+        let (tx, rx) = mpsc::channel();
+        let mut b = Batcher::new(
+            // max_wait is far away: only the half-budget rule can flush.
+            BatcherConfig { max_batch: 100, max_wait: Duration::from_secs(10) },
+            rx,
+        );
+        let mut r = req(0);
+        r.deadline = Some(r.arrival + Duration::from_millis(40));
+        tx.send(r).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch.len(), 1);
+        // Half of the 40 ms budget, not the 10 s max_wait.
+        assert!(waited < Duration::from_secs(2), "waited {waited:?}");
+    }
+
+    #[test]
+    fn expired_deadline_still_forwards_the_request() {
+        // The batcher never drops requests — expiry shedding happens at
+        // the execution worker so the caller still gets a response.
+        let (tx, rx) = mpsc::channel();
+        let mut b = Batcher::new(BatcherConfig::default(), rx);
+        let mut r = req(0);
+        r.deadline = Some(r.arrival); // already expired
+        tx.send(r).unwrap();
+        assert_eq!(b.next_batch().unwrap().len(), 1);
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! Deterministic fault injection for the serving pipeline.
+//!
+//! A [`FaultBackend`] wraps any inner [`Backend`] and, **before**
+//! delegating each batch, draws from a seeded [`crate::util::rng::Rng`]
+//! against a [`FaultPlan`]: with probability `panic_p` it panics (the
+//! batch never reaches the inner backend, so unaffected requests stay
+//! bit-identical to a fault-free run), with probability `slow_p` it
+//! sleeps `slow_for` first (exercising deadline shedding and batcher
+//! early-close). The plan parses from the `RT3D_FAULTS` knob
+//! ([`crate::util::env`]) and wires into `rt3d serve --faults` and the
+//! chaos tests (`tests/chaos.rs`).
+//!
+//! Grammar (comma-separated, all parts optional, at least one required):
+//!
+//! ```text
+//! panic@0.02           panic on 2% of batches
+//! slow=5ms@0.1         sleep 5 ms before 10% of batches
+//! seed=7               PRNG seed (default 0x5EED)
+//! ```
+//!
+//! e.g. `RT3D_FAULTS=panic@0.02,slow=5ms@0.1,seed=7`. Durations accept
+//! `us` / `ms` / `s` suffixes. Each forked handle ([`Backend::fork`])
+//! derives its own seed from the plan's, so every server worker draws a
+//! reproducible stream regardless of batch interleaving.
+
+use super::Backend;
+use crate::anyhow;
+use crate::tensor::{Mat, Tensor5};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Default PRNG seed when the plan does not name one.
+pub const DEFAULT_SEED: u64 = 0x5EED;
+
+/// One injected fault, as drawn for a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic before the inner backend runs — the batch fails with
+    /// [`super::Outcome::Failed`] once the worker catches the unwind.
+    Panic,
+    /// Sleep this long before delegating (deadline pressure).
+    Slow(Duration),
+}
+
+/// A parsed, seeded fault-injection plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Probability a batch panics.
+    pub panic_p: f64,
+    /// Probability a batch is delayed by `slow_for`.
+    pub slow_p: f64,
+    /// Injected delay for slow faults.
+    pub slow_for: Duration,
+    /// PRNG seed — same plan + same per-handle draw order reproduces
+    /// the same fault sequence.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            panic_p: 0.0,
+            slow_p: 0.0,
+            slow_for: Duration::ZERO,
+            seed: DEFAULT_SEED,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse the `RT3D_FAULTS` grammar (see module docs). Errors on an
+    /// empty spec, unknown parts, or probabilities outside [0, 1].
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        let mut any = false;
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            any = true;
+            if let Some(p) = part.strip_prefix("panic@") {
+                plan.panic_p = parse_prob(p)?;
+            } else if let Some(rest) = part.strip_prefix("slow=") {
+                let (dur, p) = rest.split_once('@').ok_or_else(|| {
+                    anyhow!("fault part {part:?}: expected slow=DURATION@P")
+                })?;
+                plan.slow_for = parse_duration(dur)?;
+                plan.slow_p = parse_prob(p)?;
+            } else if let Some(s) = part.strip_prefix("seed=") {
+                plan.seed = s.trim().parse::<u64>().map_err(|_| {
+                    anyhow!("fault part {part:?}: seed must be a u64")
+                })?;
+            } else {
+                return Err(anyhow!(
+                    "unknown fault part {part:?} (grammar: panic@P, \
+                     slow=DURATION@P, seed=N)"
+                ));
+            }
+        }
+        if !any {
+            return Err(anyhow!("empty fault plan (unset RT3D_FAULTS to disable)"));
+        }
+        if plan.panic_p + plan.slow_p > 1.0 {
+            return Err(anyhow!(
+                "fault probabilities sum to {} > 1",
+                plan.panic_p + plan.slow_p
+            ));
+        }
+        Ok(plan)
+    }
+
+    /// Whether the plan can ever fire.
+    pub fn is_active(&self) -> bool {
+        self.panic_p > 0.0 || self.slow_p > 0.0
+    }
+
+    /// One draw: a single uniform sample partitioned into panic / slow /
+    /// clean bands, so a plan is reproducible from the seed alone.
+    pub fn draw(&self, rng: &mut Rng) -> Option<Fault> {
+        if !self.is_active() {
+            return None;
+        }
+        let x = rng.f64();
+        if x < self.panic_p {
+            Some(Fault::Panic)
+        } else if x < self.panic_p + self.slow_p {
+            Some(Fault::Slow(self.slow_for))
+        } else {
+            None
+        }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut parts = Vec::new();
+        if self.panic_p > 0.0 {
+            parts.push(format!("panic@{}", self.panic_p));
+        }
+        if self.slow_p > 0.0 {
+            parts.push(format!(
+                "slow={}us@{}",
+                self.slow_for.as_micros(),
+                self.slow_p
+            ));
+        }
+        if parts.is_empty() {
+            parts.push("off".to_string());
+        }
+        parts.push(format!("seed={}", self.seed));
+        f.write_str(&parts.join(","))
+    }
+}
+
+fn parse_prob(s: &str) -> Result<f64> {
+    let p: f64 = s
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("fault probability {s:?} is not a number"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(anyhow!("fault probability {p} outside [0, 1]"));
+    }
+    Ok(p)
+}
+
+fn parse_duration(s: &str) -> Result<Duration> {
+    let s = s.trim();
+    // "ms"/"us" end in 's' too — strip the longer suffixes first.
+    let (num, scale) = if let Some(v) = s.strip_suffix("ms") {
+        (v, 1e-3)
+    } else if let Some(v) = s.strip_suffix("us") {
+        (v, 1e-6)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1.0)
+    } else {
+        return Err(anyhow!("duration {s:?}: expected a us/ms/s suffix"));
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("duration {s:?} is not a number"))?;
+    if !(v >= 0.0 && v.is_finite()) {
+        return Err(anyhow!("duration {s:?} must be finite and >= 0"));
+    }
+    Ok(Duration::from_secs_f64(v * scale))
+}
+
+/// A [`Backend`] wrapper injecting faults per the plan. Geometry and
+/// threading questions delegate to the inner backend, so the wrapped
+/// backend serves through the identical pipeline (and
+/// [`super::Outcome`]s are the only observable difference).
+pub struct FaultBackend {
+    inner: Arc<dyn Backend>,
+    plan: FaultPlan,
+    rng: Mutex<Rng>,
+    /// Fork counter shared across the whole handle tree: fork k seeds
+    /// its PRNG from `seed + k * odd-constant`, so worker streams are
+    /// distinct but reproducible.
+    forks: Arc<AtomicU64>,
+}
+
+impl FaultBackend {
+    pub fn new(inner: Arc<dyn Backend>, plan: FaultPlan) -> Self {
+        let rng = Mutex::new(Rng::new(plan.seed));
+        Self { inner, plan, rng, forks: Arc::new(AtomicU64::new(0)) }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+impl Backend for FaultBackend {
+    fn infer(&self, batch: Tensor5) -> Mat {
+        let fault = {
+            // Poison-tolerant: a panic between draw and delegate must not
+            // wedge sibling handles sharing this RNG.
+            let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
+            self.plan.draw(&mut rng)
+        };
+        match fault {
+            Some(Fault::Panic) => panic!(
+                "injected fault: panic before batch execution ({})",
+                self.plan
+            ),
+            Some(Fault::Slow(d)) => std::thread::sleep(d),
+            None => {}
+        }
+        self.inner.infer(batch)
+    }
+
+    fn name(&self) -> String {
+        format!("faulty({})-{}", self.plan, self.inner.name())
+    }
+
+    fn input_dims(&self) -> Option<[usize; 4]> {
+        self.inner.input_dims()
+    }
+
+    fn num_classes(&self) -> Option<usize> {
+        self.inner.num_classes()
+    }
+
+    fn threads(&self) -> usize {
+        self.inner.threads()
+    }
+
+    fn fork(&self) -> Option<Arc<dyn Backend>> {
+        let inner = self.inner.fork().unwrap_or_else(|| self.inner.clone());
+        let k = self.forks.fetch_add(1, Ordering::Relaxed) + 1;
+        Some(Arc::new(FaultBackend {
+            inner,
+            plan: self.plan.clone(),
+            rng: Mutex::new(Rng::new(
+                self.plan.seed.wrapping_add(k.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            )),
+            forks: self.forks.clone(),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar() {
+        let p = FaultPlan::parse("panic@0.02,slow=5ms@0.1,seed=7").unwrap();
+        assert_eq!(p.panic_p, 0.02);
+        assert_eq!(p.slow_p, 0.1);
+        assert_eq!(p.slow_for, Duration::from_millis(5));
+        assert_eq!(p.seed, 7);
+        assert!(p.is_active());
+    }
+
+    #[test]
+    fn parses_partial_specs_and_units() {
+        let p = FaultPlan::parse("panic@0.05").unwrap();
+        assert_eq!(p.slow_p, 0.0);
+        assert_eq!(p.seed, DEFAULT_SEED);
+        assert_eq!(
+            FaultPlan::parse("slow=250us@1").unwrap().slow_for,
+            Duration::from_micros(250)
+        );
+        assert_eq!(
+            FaultPlan::parse("slow=2s@0.5").unwrap().slow_for,
+            Duration::from_secs(2)
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(FaultPlan::parse("").is_err(), "empty spec");
+        assert!(FaultPlan::parse("explode@0.5").is_err(), "unknown part");
+        assert!(FaultPlan::parse("panic@1.5").is_err(), "p > 1");
+        assert!(FaultPlan::parse("panic@-0.1").is_err(), "p < 0");
+        assert!(FaultPlan::parse("slow=5@0.1").is_err(), "missing unit");
+        assert!(FaultPlan::parse("slow=5ms").is_err(), "missing probability");
+        assert!(FaultPlan::parse("panic@0.6,slow=1ms@0.6").is_err(), "p sum > 1");
+        assert!(FaultPlan::parse("seed=x").is_err(), "bad seed");
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_banded() {
+        let p = FaultPlan::parse("panic@0.3,slow=1ms@0.3,seed=9").unwrap();
+        let run = || {
+            let mut rng = Rng::new(p.seed);
+            (0..200).map(|_| p.draw(&mut rng)).collect::<Vec<_>>()
+        };
+        let a = run();
+        assert_eq!(a, run(), "same seed must reproduce the fault sequence");
+        let panics = a.iter().filter(|f| matches!(f, Some(Fault::Panic))).count();
+        let slows =
+            a.iter().filter(|f| matches!(f, Some(Fault::Slow(_)))).count();
+        // 200 draws at p=0.3 each: both bands must actually fire.
+        assert!(panics > 20 && panics < 100, "panics={panics}");
+        assert!(slows > 20 && slows < 100, "slows={slows}");
+    }
+
+    #[test]
+    fn inactive_plan_never_fires() {
+        let p = FaultPlan::parse("seed=3").unwrap();
+        assert!(!p.is_active());
+        let mut rng = Rng::new(3);
+        assert!((0..100).all(|_| p.draw(&mut rng).is_none()));
+    }
+
+    #[test]
+    fn display_round_trips() {
+        let p = FaultPlan::parse("panic@0.02,slow=5ms@0.1,seed=7").unwrap();
+        let again = FaultPlan::parse(&p.to_string()).unwrap();
+        assert_eq!(p, again);
+    }
+}

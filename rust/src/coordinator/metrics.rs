@@ -1,6 +1,8 @@
-//! Serving metrics: latency percentiles, throughput, accuracy.
+//! Serving metrics: latency percentiles, throughput, accuracy, and the
+//! fault-tolerance counters (shed / failed / panic / deadline-miss /
+//! breaker trips) surfaced as a [`MetricsSnapshot`].
 
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 /// Aggregated latency distribution (seconds).
 #[derive(Debug, Clone, Default)]
@@ -18,7 +20,10 @@ impl LatencyStats {
         if samples.is_empty() {
             return Self::default();
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): a NaN sample (e.g. from a
+        // poisoned clock delta) must never panic the stats path — NaNs
+        // sort past every finite latency instead.
+        samples.sort_by(f64::total_cmp);
         let n = samples.len();
         let pct = |p: f64| samples[((n as f64 - 1.0) * p).round() as usize];
         Self {
@@ -29,6 +34,50 @@ impl LatencyStats {
             p99_s: pct(0.99),
             max_s: samples[n - 1],
         }
+    }
+}
+
+/// Point-in-time view of the outcome counters. `ok` counts executed
+/// responses; the other classes partition everything that was accepted
+/// or offered but not served.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// Requests served normally ([`super::Outcome::Ok`]).
+    pub ok: usize,
+    /// Requests answered `Failed` (their batch panicked).
+    pub failed: usize,
+    /// Requests shed at admission (`try_submit` on a full queue).
+    pub shed: usize,
+    /// Requests shed because their deadline expired before execution.
+    pub deadline_miss: usize,
+    /// Batches that panicked inside `Backend::infer`.
+    pub panics: usize,
+    /// Times a worker's consecutive-failure breaker tripped into cooldown.
+    pub breaker_trips: usize,
+}
+
+impl MetricsSnapshot {
+    /// Everything that got an outcome (served or not).
+    pub fn total(&self) -> usize {
+        self.ok + self.failed + self.shed + self.deadline_miss
+    }
+
+    /// Fraction of offered requests shed (admission + deadline).
+    pub fn shed_rate(&self) -> f64 {
+        rate(self.shed + self.deadline_miss, self.total())
+    }
+
+    /// Fraction of offered requests that failed (batch panic).
+    pub fn failed_rate(&self) -> f64 {
+        rate(self.failed, self.total())
+    }
+}
+
+fn rate(part: usize, total: usize) -> f64 {
+    if total == 0 {
+        0.0
+    } else {
+        part as f64 / total as f64
     }
 }
 
@@ -49,13 +98,23 @@ struct Inner {
     /// Batches executed per serving worker — the merged per-worker view of
     /// a multi-worker server (one shared sink, per-worker accounting).
     worker_batches: Vec<usize>,
+    counters: MetricsSnapshot,
 }
 
 impl Metrics {
+    /// Poison-tolerant lock: a worker that panicked while holding the
+    /// sink must not wedge its siblings — the counters it wrote are
+    /// still consistent (every mutation is a single push/add).
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Record one **served** response (latency sample + accuracy).
     pub fn record(&self, latency_s: f64, batch: usize, correct: Option<bool>) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.latencies.push(latency_s);
         g.batches.push(batch);
+        g.counters.ok += 1;
         if let Some(c) = correct {
             g.labelled += 1;
             if c {
@@ -68,12 +127,12 @@ impl Metrics {
     }
 
     pub fn latency(&self) -> LatencyStats {
-        LatencyStats::from_samples(self.inner.lock().unwrap().latencies.clone())
+        LatencyStats::from_samples(self.lock().latencies.clone())
     }
 
     /// Requests per second over the observed span.
     pub fn throughput(&self) -> f64 {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         match (g.first_s, g.last_s) {
             (Some(a), Some(b)) if b > a => {
                 g.latencies.len() as f64 / (b - a).as_secs_f64()
@@ -83,7 +142,7 @@ impl Metrics {
     }
 
     pub fn accuracy(&self) -> Option<f64> {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         if g.labelled == 0 {
             None
         } else {
@@ -92,7 +151,7 @@ impl Metrics {
     }
 
     pub fn mean_batch(&self) -> f64 {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         if g.batches.is_empty() {
             0.0
         } else {
@@ -100,13 +159,14 @@ impl Metrics {
         }
     }
 
+    /// Served (Ok) responses recorded so far.
     pub fn count(&self) -> usize {
-        self.inner.lock().unwrap().latencies.len()
+        self.lock().latencies.len()
     }
 
     /// Count one executed batch against serving worker `worker`.
     pub fn record_batch(&self, worker: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         if g.worker_batches.len() <= worker {
             g.worker_batches.resize(worker + 1, 0);
         }
@@ -117,7 +177,37 @@ impl Metrics {
     /// ran a batch). Index = worker id; a saturated N-worker pipeline
     /// shows every entry non-zero.
     pub fn worker_batches(&self) -> Vec<usize> {
-        self.inner.lock().unwrap().worker_batches.clone()
+        self.lock().worker_batches.clone()
+    }
+
+    /// `n` requests answered `Failed` (their batch panicked).
+    pub fn record_failed(&self, n: usize) {
+        self.lock().counters.failed += n;
+    }
+
+    /// One request shed at admission (full ingress queue).
+    pub fn record_shed(&self) {
+        self.lock().counters.shed += 1;
+    }
+
+    /// One request shed for an expired deadline.
+    pub fn record_deadline_miss(&self) {
+        self.lock().counters.deadline_miss += 1;
+    }
+
+    /// One batch panic caught by an execution worker.
+    pub fn record_panic(&self) {
+        self.lock().counters.panics += 1;
+    }
+
+    /// One worker breaker trip (cooldown entered).
+    pub fn record_breaker_trip(&self) {
+        self.lock().counters.breaker_trips += 1;
+    }
+
+    /// Snapshot the outcome counters.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.lock().counters
     }
 }
 
@@ -141,6 +231,17 @@ mod tests {
     }
 
     #[test]
+    fn nan_samples_never_panic() {
+        // Regression: partial_cmp().unwrap() aborted the whole metrics
+        // path on a single NaN latency. total_cmp sorts NaN past every
+        // finite sample instead.
+        let s = LatencyStats::from_samples(vec![0.2, f64::NAN, 0.1]);
+        assert_eq!(s.count, 3);
+        assert_eq!(s.p50_s, 0.2, "finite percentiles stay ordered");
+        assert!(s.max_s.is_nan(), "NaN sorts last under total_cmp");
+    }
+
+    #[test]
     fn accuracy_accounting() {
         let m = Metrics::default();
         m.record(0.1, 1, Some(true));
@@ -159,5 +260,29 @@ mod tests {
         m.record_batch(0);
         m.record_batch(2);
         assert_eq!(m.worker_batches(), vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn snapshot_counters_and_rates() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot(), MetricsSnapshot::default());
+        assert_eq!(m.snapshot().shed_rate(), 0.0, "no division by zero");
+        m.record(0.1, 1, None); // ok
+        m.record(0.1, 1, None); // ok
+        m.record_failed(2);
+        m.record_panic();
+        m.record_shed();
+        m.record_deadline_miss();
+        m.record_breaker_trip();
+        let s = m.snapshot();
+        assert_eq!(s.ok, 2);
+        assert_eq!(s.failed, 2);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.deadline_miss, 1);
+        assert_eq!(s.panics, 1);
+        assert_eq!(s.breaker_trips, 1);
+        assert_eq!(s.total(), 6);
+        assert!((s.failed_rate() - 2.0 / 6.0).abs() < 1e-12);
+        assert!((s.shed_rate() - 2.0 / 6.0).abs() < 1e-12);
     }
 }

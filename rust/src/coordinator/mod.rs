@@ -34,18 +34,42 @@
 //!   (configurable stride/overlap), served through the batched pipeline,
 //!   per-window logits yielded in order.
 //! * [`metrics`] — latency percentiles + throughput + per-worker batch
-//!   accounting used by the Table 2 harness and the E2E example.
+//!   accounting, plus the fault counters (shed / failed / panic /
+//!   deadline-miss) used by the Table 2 harness and the E2E example.
+//! * [`faults`] — deterministic fault injection: a [`FaultBackend`]
+//!   wrapper driven by a seeded [`FaultPlan`] (`RT3D_FAULTS`), used by
+//!   the chaos tests and `rt3d serve --faults`.
+//!
+//! # Fault model
+//!
+//! The pipeline is **fault-tolerant at batch granularity**. A panic
+//! inside [`Backend::infer`] unwinds only that batch: the execution
+//! worker catches it, answers every request of the batch with
+//! [`Outcome::Failed`], and keeps draining. A worker that fails several
+//! batches in a row trips a circuit breaker and sleeps through a
+//! cooldown before retrying ([`ServerConfig::breaker`]). Requests whose
+//! deadline expired before execution are shed with
+//! [`Outcome::DeadlineExceeded`] instead of being run, and
+//! [`Server::try_submit`] sheds at admission ([`Outcome::Shed`]) when
+//! the ingress queue is full. Every accepted request therefore gets
+//! **exactly one** [`Response`]; callers inspect [`Response::outcome`]
+//! instead of hanging on a dead channel. What is *not* isolated: panics
+//! on threads the backend itself spawns (e.g. inside an executor's
+//! thread pool) still abort the process, and a poisoned mutex never
+//! wedges a sibling — every coordinator lock recovers the inner value.
 
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod router;
 pub mod server;
 pub mod session;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use metrics::{LatencyStats, Metrics};
+pub use faults::{Fault, FaultBackend, FaultPlan};
+pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
 pub use router::{Deployment, Policy, Router};
-pub use server::{Backend, Route, Server, ServerConfig};
+pub use server::{Admission, Backend, Route, Server, ServerConfig};
 pub use session::{Session, SessionConfig, WindowResult};
 
 use crate::tensor::Tensor5;
@@ -59,23 +83,56 @@ pub struct Request {
     /// driver report serving accuracy, not just latency.
     pub label: Option<usize>,
     pub arrival: Instant,
+    /// Absolute completion deadline. The batcher closes a batch early
+    /// once the oldest request's budget is half-spent; a request whose
+    /// deadline has already passed when its batch reaches an execution
+    /// worker is shed with [`Outcome::DeadlineExceeded`] instead of run.
+    pub deadline: Option<Instant>,
+}
+
+/// How a request left the pipeline — the typed contract threaded through
+/// server, router and [`Session`]. Exactly one response per accepted
+/// request, whatever the outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Executed normally; `logits` are valid.
+    Ok,
+    /// The batch panicked inside [`Backend::infer`]; no logits.
+    Failed,
+    /// Shed at admission (ingress queue full, [`Server::try_submit`]).
+    Shed,
+    /// Deadline expired before execution; shed without running.
+    DeadlineExceeded,
 }
 
 /// The completed response for one request.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
+    /// Empty unless `outcome` is [`Outcome::Ok`].
     pub logits: Vec<f32>,
     pub predicted: usize,
     pub label: Option<usize>,
     /// Queueing + execution latency.
     pub latency_s: f64,
-    /// Size of the batch this request rode in.
+    /// Size of the batch this request rode in (0 when never executed).
     pub batch_size: usize,
+    pub outcome: Outcome,
 }
 
 impl Response {
+    /// Prediction correctness — `None` when unlabelled **or** when the
+    /// request was not actually served ([`Outcome`] other than `Ok`), so
+    /// shed/failed requests never pollute accuracy accounting.
     pub fn correct(&self) -> Option<bool> {
+        if self.outcome != Outcome::Ok {
+            return None;
+        }
         self.label.map(|l| l == self.predicted)
+    }
+
+    /// True when the request was actually executed.
+    pub fn is_ok(&self) -> bool {
+        self.outcome == Outcome::Ok
     }
 }

@@ -140,6 +140,12 @@ impl Router {
     /// unique per model and matches the eventual [`Response::id`] on the
     /// shared channel. A dead deployment pipeline surfaces as `Err` here
     /// instead of aborting the caller.
+    ///
+    /// `deadline_s` does double duty: it steers [`Policy::Deadline`]
+    /// engine selection **and** rides along as the request's completion
+    /// deadline, so the batcher flushes early for it and the execution
+    /// worker sheds it ([`super::Outcome::DeadlineExceeded`]) once it is
+    /// unmeetable.
     pub fn submit(
         &self,
         model: &str,
@@ -153,9 +159,15 @@ impl Router {
             .ok_or_else(|| anyhow!("unknown model {model:?}"))?;
         let i = self.pick(entry, deadline_s);
         let (dep, server) = &entry.servers[i];
-        let id = server
-            .submit(clip, label)
-            .map_err(|e| anyhow!("deployment {:?} of {model:?}: {e}", dep.name))?;
+        let id = match deadline_s {
+            Some(d) if d > 0.0 => server.submit_with_deadline(
+                clip,
+                label,
+                Duration::from_secs_f64(d),
+            ),
+            _ => server.submit(clip, label),
+        }
+        .map_err(|e| anyhow!("deployment {:?} of {model:?}: {e}", dep.name))?;
         Ok((dep.name.clone(), id))
     }
 
@@ -279,6 +291,51 @@ mod tests {
         let (c, _) = r.submit("m", clip(), None, Some(0.01)).unwrap();
         assert_eq!(c, "sparse");
         r.drain("m", 3).unwrap();
+        r.shutdown();
+    }
+
+    #[test]
+    fn deadline_propagates_to_execution_shedding() {
+        use crate::coordinator::Outcome;
+        // 50 ms service time against a 5 ms deadline queued behind another
+        // request: by the time its batch reaches the worker the deadline
+        // is unmeetable, so it must come back DeadlineExceeded — proof the
+        // router threads the deadline into the request, not just into
+        // policy selection.
+        struct Slow;
+        impl Backend for Slow {
+            fn infer(&self, batch: Tensor5) -> Mat {
+                std::thread::sleep(Duration::from_millis(50));
+                Mat::zeros(batch.dims[0], 2)
+            }
+            fn name(&self) -> String {
+                "slow".into()
+            }
+        }
+        let mut r = Router::new(Policy::Deadline);
+        r.add_deployment(
+            "m",
+            Deployment {
+                name: "only".into(),
+                engine: Arc::new(Slow),
+                expected_latency_s: 0.05,
+                accuracy: Some(0.5),
+            },
+            ServerConfig::default(),
+        );
+        let (_, slow_id) = r.submit("m", clip(), None, None).unwrap();
+        let (_, dl_id) = r.submit("m", clip(), None, Some(0.005)).unwrap();
+        let resps = r.drain("m", 2).unwrap();
+        assert_eq!(resps.len(), 2);
+        for resp in resps {
+            if resp.id == dl_id {
+                assert_eq!(resp.outcome, Outcome::DeadlineExceeded);
+                assert!(resp.logits.is_empty());
+            } else {
+                assert_eq!(resp.id, slow_id);
+                assert_eq!(resp.outcome, Outcome::Ok);
+            }
+        }
         r.shutdown();
     }
 

@@ -1,4 +1,5 @@
-//! Server: a pipelined batching front-end over a [`Backend`].
+//! Server: a pipelined, fault-tolerant batching front-end over a
+//! [`Backend`].
 //!
 //! One batcher thread aggregates requests (size-capped, deadline-flushed)
 //! and feeds a bounded shared batch queue; `workers` execution threads
@@ -9,16 +10,24 @@
 //! one shared [`Metrics`] sink (per-worker batch counts included), so the
 //! caller sees a single ordered-by-completion stream correlated by
 //! request id.
+//!
+//! Fault tolerance (see the [`super`] module docs for the full model):
+//! workers run [`Backend::infer`] under `catch_unwind`, so a panicking
+//! batch becomes per-request [`Outcome::Failed`] responses instead of a
+//! dead pipeline; repeated failures trip a per-worker circuit breaker
+//! into a cooldown; requests with expired deadlines are shed before
+//! execution; and [`Server::try_submit`] sheds at admission instead of
+//! blocking when the ingress queue is full.
 
-use super::{Batcher, BatcherConfig, Metrics, Request, Response};
+use super::{Batcher, BatcherConfig, Metrics, Outcome, Request, Response};
 use crate::anyhow;
 use crate::tensor::{Mat, Tensor5};
 use crate::util::error::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// The backend-agnostic execution interface the whole serving stack is
 /// written against: anything that can run a batched forward pass — the
@@ -36,6 +45,10 @@ pub trait Backend: Send + Sync {
     /// (batch NCDHW) -> logits (batch x classes). Takes the batch by
     /// value: the batcher owns the packed batch, so backends can consume
     /// it without a per-request data-sized clone.
+    ///
+    /// May panic: the serving workers catch the unwind and turn it into
+    /// per-request [`Outcome::Failed`] responses, so a panicking backend
+    /// degrades requests, never the pipeline.
     fn infer(&self, batch: Tensor5) -> Mat;
     fn name(&self) -> String;
     /// Native input dims (C, D, H, W) when the backend serves one fixed
@@ -93,11 +106,23 @@ pub struct ServerConfig {
     /// Each worker runs on its own backend handle ([`Backend::fork`]) when
     /// the backend supports cheap forking.
     pub workers: usize,
+    /// Consecutive failed (panicked) batches before a worker trips its
+    /// circuit breaker into a cooldown.
+    pub breaker_threshold: usize,
+    /// How long a tripped worker sleeps before retrying. The worker keeps
+    /// its queue slot; siblings continue draining meanwhile.
+    pub breaker_cooldown: Duration,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { batcher: BatcherConfig::default(), queue_depth: 64, workers: 1 }
+        Self {
+            batcher: BatcherConfig::default(),
+            queue_depth: 64,
+            workers: 1,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(50),
+        }
     }
 }
 
@@ -128,9 +153,43 @@ impl ServerConfig {
     }
 
     /// Batcher deadline: flush when the oldest request has waited this long.
-    pub fn max_wait(mut self, d: std::time::Duration) -> Self {
+    pub fn max_wait(mut self, d: Duration) -> Self {
         self.batcher.max_wait = d;
         self
+    }
+
+    /// Circuit breaker: trip a worker into `cooldown` after `threshold`
+    /// consecutive failed batches.
+    pub fn breaker(mut self, threshold: usize, cooldown: Duration) -> Self {
+        self.breaker_threshold = threshold;
+        self.breaker_cooldown = cooldown;
+        self
+    }
+}
+
+/// Result of a non-blocking [`Server::try_submit`].
+#[derive(Debug)]
+pub enum Admission {
+    /// Accepted into the pipeline; the [`Response`] for this id arrives
+    /// on the response channel.
+    Accepted(u64),
+    /// Shed at admission (ingress queue full). The complete
+    /// [`Outcome::Shed`] response is returned synchronously — callers
+    /// never wait on a black hole for work that was never enqueued.
+    Shed(Response),
+}
+
+impl Admission {
+    /// The request id, either way.
+    pub fn id(&self) -> u64 {
+        match self {
+            Admission::Accepted(id) => *id,
+            Admission::Shed(resp) => resp.id,
+        }
+    }
+
+    pub fn accepted(&self) -> bool {
+        matches!(self, Admission::Accepted(_))
     }
 }
 
@@ -204,6 +263,10 @@ impl Server {
         // receivers are single-consumer, so pickup is serialized by a
         // mutex — execution (the expensive part) still overlaps fully.
         let shared_rx = Arc::new(Mutex::new(batch_rx));
+        let breaker = Breaker {
+            threshold: cfg.breaker_threshold.max(1),
+            cooldown: cfg.breaker_cooldown,
+        };
         let mut workers = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
             let worker_engine = if w == 0 {
@@ -214,9 +277,19 @@ impl Server {
             let batch_rx = shared_rx.clone();
             let resp_tx = resp_tx.clone();
             let m = metrics.clone();
+            let breaker = breaker.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("rt3d-serve-{w}"))
-                .spawn(move || worker_loop(w, worker_engine.as_ref(), &batch_rx, &resp_tx, &m))
+                .spawn(move || {
+                    worker_loop(
+                        w,
+                        worker_engine.as_ref(),
+                        &batch_rx,
+                        &resp_tx,
+                        &m,
+                        &breaker,
+                    )
+                })
                 .expect("spawn server worker");
             workers.push(handle);
         }
@@ -235,28 +308,98 @@ impl Server {
 
     /// Submit a clip; blocks when the queue is full (back-pressure).
     /// Returns the request id, or an error when the server has been shut
-    /// down or the serving pipeline died (batcher/worker panic) — callers
+    /// down or the serving pipeline died (batcher/worker thread gone —
+    /// which panic isolation makes exceptional, not routine) — callers
     /// decide how to degrade instead of aborting on a dead channel.
     pub fn submit(&self, clip: Tensor5, label: Option<usize>) -> Result<u64> {
+        self.submit_inner(clip, label, None)
+    }
+
+    /// [`Self::submit`] with a completion deadline: the batcher closes
+    /// the request's batch once half the budget is spent, and the
+    /// execution worker sheds it with [`Outcome::DeadlineExceeded`]
+    /// (instead of running it) if the deadline passes while it queues.
+    pub fn submit_with_deadline(
+        &self,
+        clip: Tensor5,
+        label: Option<usize>,
+        deadline: Duration,
+    ) -> Result<u64> {
+        self.submit_inner(clip, label, Some(deadline))
+    }
+
+    fn submit_inner(
+        &self,
+        clip: Tensor5,
+        label: Option<usize>,
+        deadline: Option<Duration>,
+    ) -> Result<u64> {
         let tx = self
             .tx
             .as_ref()
             .ok_or_else(|| anyhow!("server already shut down"))?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        tx.send(Request { id, clip, label, arrival: Instant::now() })
-            .map_err(|_| anyhow!("serving pipeline closed (batcher or workers died)"))?;
+        let arrival = Instant::now();
+        tx.send(Request {
+            id,
+            clip,
+            label,
+            arrival,
+            deadline: deadline.map(|d| arrival + d),
+        })
+        .map_err(|_| anyhow!("serving pipeline closed (batcher or workers died)"))?;
         Ok(id)
     }
 
+    /// Non-blocking admission: enqueue if the ingress queue has room,
+    /// otherwise **shed immediately** with a complete [`Outcome::Shed`]
+    /// response (returned synchronously, counted in
+    /// [`Metrics::snapshot`]) — the load-shedding front door for callers
+    /// that must not block under overload. `deadline` as in
+    /// [`Self::submit_with_deadline`].
+    pub fn try_submit(
+        &self,
+        clip: Tensor5,
+        label: Option<usize>,
+        deadline: Option<Duration>,
+    ) -> Result<Admission> {
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("server already shut down"))?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let arrival = Instant::now();
+        let req = Request {
+            id,
+            clip,
+            label,
+            arrival,
+            deadline: deadline.map(|d| arrival + d),
+        };
+        match tx.try_send(req) {
+            Ok(()) => Ok(Admission::Accepted(id)),
+            Err(TrySendError::Full(req)) => {
+                self.metrics.record_shed();
+                Ok(Admission::Shed(unserved_response(
+                    &req,
+                    Outcome::Shed,
+                    Instant::now(),
+                )))
+            }
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!(
+                "serving pipeline closed (batcher or workers died)"
+            )),
+        }
+    }
+
     /// Take ownership of the response receiver (standalone servers; call
-    /// once). Panics for routed servers — their responses flow through
-    /// the router's shared channel.
-    pub fn take_responses(&self) -> Receiver<Response> {
+    /// once). `None` when it was already taken or the server is
+    /// router-shared (responses flow through the router's channel).
+    pub fn take_responses(&self) -> Option<Receiver<Response>> {
         self.responses
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .take()
-            .expect("response receiver already taken (or server is router-shared)")
     }
 
     /// Close ingress and wait for in-flight batches to finish.
@@ -272,47 +415,129 @@ impl Server {
     }
 }
 
-/// One execution worker: pull a batch, pack, infer, respond. Exits when
-/// the batch queue closes (batcher done after shutdown).
+/// Per-worker circuit-breaker policy (shared config, per-thread state).
+#[derive(Debug, Clone)]
+struct Breaker {
+    threshold: usize,
+    cooldown: Duration,
+}
+
+/// A response for a request that was never (successfully) executed.
+fn unserved_response(req: &Request, outcome: Outcome, now: Instant) -> Response {
+    Response {
+        id: req.id,
+        logits: Vec::new(),
+        predicted: 0,
+        label: req.label,
+        latency_s: now.saturating_duration_since(req.arrival).as_secs_f64(),
+        batch_size: 0,
+        outcome,
+    }
+}
+
+/// One execution worker: pull a batch, shed expired requests, pack,
+/// infer under `catch_unwind`, respond. A panicking batch yields
+/// [`Outcome::Failed`] responses and the worker keeps draining; after
+/// `breaker.threshold` consecutive failures it sleeps `breaker.cooldown`
+/// before retrying. Exits when the batch queue closes (batcher done
+/// after shutdown).
 fn worker_loop(
     worker: usize,
     engine: &dyn Backend,
     batch_rx: &Mutex<Receiver<Vec<Request>>>,
     resp_tx: &SyncSender<Response>,
     metrics: &Metrics,
+    breaker: &Breaker,
 ) {
+    let mut consecutive_failures = 0usize;
     loop {
         // Hold the pickup lock only across the recv; the guard drops
         // before packing so the next worker can wait for the next batch
-        // while this one executes.
+        // while this one executes. Poison-tolerant: a sibling that
+        // panicked while holding the lock must not wedge this worker.
         let batch = {
-            let rx = batch_rx.lock().unwrap();
+            let rx = batch_rx.lock().unwrap_or_else(|e| e.into_inner());
             match rx.recv() {
                 Ok(b) => b,
                 Err(_) => return,
             }
         };
+        // Deadline admission at the execution boundary: anything already
+        // expired is shed with a response instead of burning a batch slot
+        // on work whose deadline is unmeetable.
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(batch.len());
+        for req in batch {
+            match req.deadline {
+                Some(d) if d <= now => {
+                    metrics.record_deadline_miss();
+                    let _ = resp_tx.send(unserved_response(
+                        &req,
+                        Outcome::DeadlineExceeded,
+                        now,
+                    ));
+                }
+                _ => live.push(req),
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
         // Pack straight from the queued requests — no per-request clip
         // clone on the hot path.
-        let clips: Vec<&Tensor5> = batch.iter().map(|r| &r.clip).collect();
-        let packed = crate::workload::clips::batch_clip_refs(&clips);
-        let logits = engine.infer(packed);
+        let packed = {
+            let clips: Vec<&Tensor5> = live.iter().map(|r| &r.clip).collect();
+            crate::workload::clips::batch_clip_refs(&clips)
+        };
+        // Panic isolation: a backend that unwinds mid-batch fails this
+        // batch, not the pipeline. AssertUnwindSafe is sound here — the
+        // worker only touches the engine handle again on the next batch,
+        // and coordinator locks recover poison.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || engine.infer(packed),
+        ));
         let done = Instant::now();
-        metrics.record_batch(worker);
-        for (i, req) in batch.iter().enumerate() {
-            let row = logits.row(i);
-            let predicted = argmax(row);
-            let resp = Response {
-                id: req.id,
-                logits: row.to_vec(),
-                predicted,
-                label: req.label,
-                latency_s: (done - req.arrival).as_secs_f64(),
-                batch_size: batch.len(),
-            };
-            metrics.record(resp.latency_s, batch.len(), resp.correct());
-            // Receiver may have hung up at shutdown; ignore.
-            let _ = resp_tx.send(resp);
+        match result {
+            Ok(logits) => {
+                consecutive_failures = 0;
+                metrics.record_batch(worker);
+                for (i, req) in live.iter().enumerate() {
+                    let row = logits.row(i);
+                    let predicted = argmax(row);
+                    let resp = Response {
+                        id: req.id,
+                        logits: row.to_vec(),
+                        predicted,
+                        label: req.label,
+                        latency_s: (done - req.arrival).as_secs_f64(),
+                        batch_size: live.len(),
+                        outcome: Outcome::Ok,
+                    };
+                    metrics.record(resp.latency_s, live.len(), resp.correct());
+                    // Receiver may have hung up at shutdown; ignore.
+                    let _ = resp_tx.send(resp);
+                }
+            }
+            Err(_panic) => {
+                consecutive_failures += 1;
+                metrics.record_panic();
+                metrics.record_failed(live.len());
+                for req in &live {
+                    let _ = resp_tx.send(unserved_response(
+                        req,
+                        Outcome::Failed,
+                        done,
+                    ));
+                }
+                if consecutive_failures >= breaker.threshold {
+                    // Trip: cool down, then resume draining with a clean
+                    // slate. The batch queue buffers meanwhile (bounded,
+                    // so back-pressure still reaches submitters).
+                    metrics.record_breaker_trip();
+                    std::thread::sleep(breaker.cooldown);
+                    consecutive_failures = 0;
+                }
+            }
         }
     }
 }
@@ -355,7 +580,11 @@ mod tests {
     #[test]
     fn serve_round_trip() {
         let server = Server::start(Arc::new(Toy), ServerConfig::default());
-        let responses = server.take_responses();
+        let responses = server.take_responses().expect("first take");
+        assert!(
+            server.take_responses().is_none(),
+            "second take must yield None, not panic"
+        );
         for i in 0..8 {
             let mut clip = Tensor5::zeros([1, 1, 2, 2, 2]);
             clip.data.fill(1.0 + i as f32);
@@ -365,6 +594,7 @@ mod tests {
         let mut got = 0;
         while got < 8 {
             let r = responses.recv().unwrap();
+            assert_eq!(r.outcome, Outcome::Ok);
             assert_eq!(r.predicted, 3);
             assert_eq!(r.correct(), Some(true));
             got += 1;
@@ -372,6 +602,8 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.count(), 8);
         assert_eq!(m.accuracy(), Some(1.0));
+        assert_eq!(m.snapshot().ok, 8);
+        assert_eq!(m.snapshot().total(), 8);
     }
 
     #[test]
@@ -379,13 +611,14 @@ mod tests {
         let cfg = ServerConfig {
             batcher: BatcherConfig {
                 max_batch: 4,
-                max_wait: std::time::Duration::from_millis(50),
+                max_wait: Duration::from_millis(50),
             },
             queue_depth: 64,
             workers: 1,
+            ..ServerConfig::default()
         };
         let server = Server::start(Arc::new(Toy), cfg);
-        let responses = server.take_responses();
+        let responses = server.take_responses().expect("responses");
         for _ in 0..16 {
             server.submit(Tensor5::zeros([1, 1, 2, 2, 2]), None).unwrap();
         }
@@ -401,13 +634,14 @@ mod tests {
         let cfg = ServerConfig {
             batcher: BatcherConfig {
                 max_batch: 2,
-                max_wait: std::time::Duration::from_millis(2),
+                max_wait: Duration::from_millis(2),
             },
             queue_depth: 8,
             workers: 3,
+            ..ServerConfig::default()
         };
         let server = Server::start(Arc::new(Toy), cfg);
-        let responses = server.take_responses();
+        let responses = server.take_responses().expect("responses");
         let mut ids = std::collections::HashSet::new();
         for _ in 0..20 {
             ids.insert(server.submit(Tensor5::zeros([1, 1, 2, 2, 2]), None).unwrap());
@@ -426,11 +660,11 @@ mod tests {
     }
 
     #[test]
-    fn submit_after_shutdown_errors_instead_of_panicking() {
-        // A dead pipeline must surface as Err from submit, never abort the
-        // caller. Kill the pipeline from the inside: a panicking engine
-        // takes its worker down, the batcher then exits, and the ingress
-        // channel closes.
+    fn panicking_backend_fails_requests_not_the_pipeline() {
+        // The PR-3..6 pipeline died here: one panicking batch killed its
+        // worker, the batcher unwound, and every later submit errored.
+        // Inverted contract: every request gets an Outcome::Failed
+        // response, the pipeline stays live, and submits keep succeeding.
         struct Bomb;
         impl Backend for Bomb {
             fn infer(&self, _batch: Tensor5) -> Mat {
@@ -443,29 +677,107 @@ mod tests {
         let cfg = ServerConfig {
             batcher: BatcherConfig {
                 max_batch: 1,
-                max_wait: std::time::Duration::from_millis(1),
+                max_wait: Duration::from_millis(1),
+            },
+            queue_depth: 4,
+            workers: 1,
+            ..ServerConfig::default()
+        }
+        // Tiny cooldown keeps the test fast while still exercising trips.
+        .breaker(3, Duration::from_millis(1));
+        let server = Server::start(Arc::new(Bomb), cfg);
+        let responses = server.take_responses().expect("responses");
+        let n = 8;
+        for _ in 0..n {
+            server
+                .submit(Tensor5::zeros([1, 1, 1, 1, 1]), None)
+                .expect("pipeline must accept work while the backend panics");
+        }
+        for _ in 0..n {
+            let r = responses.recv().expect("every request gets a response");
+            assert_eq!(r.outcome, Outcome::Failed);
+            assert!(r.logits.is_empty());
+            assert_eq!(r.correct(), None);
+        }
+        // The pipeline is still alive after n consecutive panics.
+        server
+            .submit(Tensor5::zeros([1, 1, 1, 1, 1]), None)
+            .expect("submit must still succeed after panics");
+        assert_eq!(responses.recv().unwrap().outcome, Outcome::Failed);
+        let m = server.shutdown();
+        assert_eq!(m.count(), 0, "nothing was actually served");
+        let snap = m.snapshot();
+        assert_eq!(snap.failed, n + 1);
+        assert_eq!(snap.panics, n + 1);
+        // 9 consecutive failures at threshold 3 -> 3 breaker trips.
+        assert_eq!(snap.breaker_trips, (n + 1) / 3);
+        assert_eq!(snap.failed_rate(), 1.0);
+    }
+
+    #[test]
+    fn try_submit_sheds_on_a_full_queue_with_a_response() {
+        // Freeze the pipeline (worker parked in infer) and overfill the
+        // ingress queue: try_submit must return Shed synchronously, with
+        // the shed response carrying the allocated id.
+        struct Stall;
+        impl Backend for Stall {
+            fn infer(&self, batch: Tensor5) -> Mat {
+                std::thread::sleep(Duration::from_millis(200));
+                Mat::zeros(batch.dims[0], 2)
+            }
+            fn name(&self) -> String {
+                "stall".into()
+            }
+        }
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
             },
             queue_depth: 2,
             workers: 1,
+            ..ServerConfig::default()
         };
-        let server = Server::start(Arc::new(Bomb), cfg);
-        let _responses = server.take_responses();
-        // First submit is accepted (queue has room)...
-        let first = server.submit(Tensor5::zeros([1, 1, 1, 1, 1]), None);
-        assert!(first.is_ok());
-        // ...then the worker dies on it and the pipeline unwinds; retries
-        // must eventually return Err rather than panic.
-        let mut saw_err = false;
-        for _ in 0..200 {
-            match server.submit(Tensor5::zeros([1, 1, 1, 1, 1]), None) {
-                Ok(_) => std::thread::sleep(std::time::Duration::from_millis(2)),
-                Err(e) => {
-                    assert!(e.to_string().contains("pipeline closed"), "{e}");
-                    saw_err = true;
-                    break;
+        let server = Server::start(Arc::new(Stall), cfg);
+        let responses = server.take_responses().expect("responses");
+        let mut accepted = Vec::new();
+        let mut shed = Vec::new();
+        let t0 = Instant::now();
+        for _ in 0..32 {
+            match server
+                .try_submit(Tensor5::zeros([1, 1, 1, 1, 1]), None, None)
+                .unwrap()
+            {
+                Admission::Accepted(id) => accepted.push(id),
+                Admission::Shed(resp) => {
+                    assert_eq!(resp.outcome, Outcome::Shed);
+                    assert!(resp.logits.is_empty());
+                    shed.push(resp.id);
                 }
             }
         }
-        assert!(saw_err, "submit kept succeeding against a dead pipeline");
+        // 32 offered against a frozen depth-2 pipeline: most are shed,
+        // and none of the calls blocked on the 200 ms service time.
+        assert!(!shed.is_empty(), "nothing was shed");
+        assert!(
+            t0.elapsed() < Duration::from_millis(150),
+            "try_submit blocked: {:?}",
+            t0.elapsed()
+        );
+        // Ids are unique across accepted and shed.
+        let mut all: Vec<u64> =
+            accepted.iter().chain(shed.iter()).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 32);
+        // Every accepted request still gets its (Ok) response.
+        for _ in 0..accepted.len() {
+            let r = responses.recv().unwrap();
+            assert_eq!(r.outcome, Outcome::Ok);
+            assert!(accepted.contains(&r.id));
+        }
+        let m = server.shutdown();
+        assert_eq!(m.snapshot().shed, shed.len());
+        assert_eq!(m.snapshot().ok, accepted.len());
     }
 }

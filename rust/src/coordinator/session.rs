@@ -16,8 +16,13 @@
 //! the same video, so the per-window logits are **bit-identical** to the
 //! batch path (asserted by `tests/session.rs`) — the streaming API adds
 //! zero numeric surface.
+//!
+//! Fault-aware: a window whose batch panicked (or was shed / missed its
+//! deadline — see [`super::Outcome`]) surfaces as an **error for that
+//! window** in stream order, never as a hang; the stream continues past
+//! it and later windows still deliver.
 
-use super::{Backend, Response, Server};
+use super::{Backend, Outcome, Response, Server};
 use crate::anyhow;
 use crate::tensor::Tensor5;
 use crate::util::error::Result;
@@ -105,14 +110,19 @@ pub struct Session<'s> {
 
 impl<'s> Session<'s> {
     /// Open a session over a standalone server. Takes ownership of the
-    /// server's response receiver — panics if it was already taken (or if
+    /// server's response receiver — errors if it was already taken (or if
     /// the server is router-shared), exactly like
-    /// [`Server::take_responses`].
+    /// [`Server::take_responses`] returning `None`.
     pub fn new(server: &'s Server, cfg: SessionConfig) -> Result<Session<'s>> {
         cfg.validate()?;
         Ok(Session {
             server,
-            responses: server.take_responses(),
+            responses: server.take_responses().ok_or_else(|| {
+                anyhow!(
+                    "server's response receiver is gone (already taken, or \
+                     the server is router-shared)"
+                )
+            })?,
             cfg,
             buf: VecDeque::new(),
             skip: 0,
@@ -213,7 +223,10 @@ impl<'s> Session<'s> {
     }
 
     /// Next window result in stream order, blocking until it arrives.
-    /// Errors when nothing is in flight or the serving pipeline died.
+    /// Errors when nothing is in flight, the serving pipeline died, or
+    /// the window itself failed (batch panic / shed / deadline miss —
+    /// [`super::Outcome`]). A failed window consumes its slot: the stream
+    /// continues and the next call yields the following window.
     pub fn next_window(&mut self) -> Result<WindowResult> {
         let front = *self
             .in_flight
@@ -225,13 +238,14 @@ impl<'s> Session<'s> {
             })?;
             self.ready.insert(resp.id, resp);
         }
-        Ok(self.deliver_front().expect("front response is ready"))
+        self.deliver_front().expect("front response is ready")
     }
 
     /// Next window result in stream order if it has already arrived;
     /// `None` when the stream-order head is still executing (results that
-    /// arrived out of order are held back, never reordered).
-    pub fn try_next(&mut self) -> Option<WindowResult> {
+    /// arrived out of order are held back, never reordered). An arrived
+    /// window that failed yields `Some(Err(..))` and the stream continues.
+    pub fn try_next(&mut self) -> Option<Result<WindowResult>> {
         // Drain whatever has arrived without blocking (a closed pipeline
         // just stops producing; next() reports it as an error).
         while let Ok(resp) = self.responses.try_recv() {
@@ -242,6 +256,8 @@ impl<'s> Session<'s> {
 
     /// Drain every in-flight window (end of stream). Frames short of a
     /// full window remain buffered — push more or drop the session.
+    /// Errors on the **first** failed window; remaining in-flight windows
+    /// are dropped with the session.
     pub fn finish(mut self) -> Result<Vec<WindowResult>> {
         let mut out = Vec::with_capacity(self.in_flight.len());
         while !self.in_flight.is_empty() {
@@ -250,19 +266,29 @@ impl<'s> Session<'s> {
         Ok(out)
     }
 
-    fn deliver_front(&mut self) -> Option<WindowResult> {
+    /// Pop the stream-order head if its response has arrived. A non-Ok
+    /// outcome still consumes the window's slot (delivered count and
+    /// in-flight queue advance) so one failed window never stalls the
+    /// stream — it is reported as that window's error instead.
+    fn deliver_front(&mut self) -> Option<Result<WindowResult>> {
         let front = *self.in_flight.front()?;
         let resp = self.ready.remove(&front)?;
         self.in_flight.pop_front();
         let window = self.delivered;
         self.delivered += 1;
-        Some(WindowResult {
+        if resp.outcome != Outcome::Ok {
+            return Some(Err(anyhow!(
+                "window {window} was not served: {:?} (request id {front})",
+                resp.outcome
+            )));
+        }
+        Some(Ok(WindowResult {
             window,
             first_frame: window * self.cfg.stride,
             logits: resp.logits,
             predicted: resp.predicted,
             latency_s: resp.latency_s,
-        })
+        }))
     }
 
     /// Submit every full window currently buffered, advancing by `stride`
@@ -427,6 +453,53 @@ mod tests {
             assert_eq!(win.window, i, "stream order preserved");
             assert_eq!(win.logits[0], i as f32);
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn failed_window_is_an_error_not_a_hang_and_stream_continues() {
+        // Backend that panics on any negative input: window 1 is poison,
+        // windows 0 and 2 are fine. The session must surface window 1 as
+        // an error in stream order and still deliver window 2.
+        struct Picky;
+        impl Backend for Picky {
+            fn infer(&self, batch: Tensor5) -> Mat {
+                assert!(
+                    batch.data.iter().all(|&v| v >= 0.0),
+                    "negative frame"
+                );
+                let b = batch.dims[0];
+                let n = batch.len() / b;
+                let mut out = Mat::zeros(b, 2);
+                for i in 0..b {
+                    *out.at_mut(i, 0) = batch.data[i * n..(i + 1) * n]
+                        .iter()
+                        .sum::<f32>()
+                        / n as f32;
+                }
+                out
+            }
+            fn name(&self) -> String {
+                "picky".into()
+            }
+        }
+        let server = Server::start(
+            Arc::new(Picky),
+            // One window per batch so only the poisoned window fails.
+            ServerConfig::new()
+                .max_batch(1)
+                .max_wait(std::time::Duration::from_millis(1)),
+        );
+        let cfg = SessionConfig { frame_dims: [1, 1, 1], window: 1, stride: 1 };
+        let mut s = Session::new(&server, cfg).unwrap();
+        s.push_frames(&[2.0, -1.0, 6.0]).unwrap();
+        let w0 = s.next_window().expect("window 0 is fine");
+        assert_eq!(w0.logits[0], 2.0);
+        let err = s.next_window().expect_err("window 1 must fail, not hang");
+        assert!(err.to_string().contains("Failed"), "got: {err}");
+        let w2 = s.next_window().expect("stream continues past the failure");
+        assert_eq!(w2.window, 2);
+        assert_eq!(w2.logits[0], 6.0);
         server.shutdown();
     }
 

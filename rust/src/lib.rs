@@ -60,6 +60,32 @@
 //! top-1 agreement on the synthetic models. Plans without a sidecar
 //! silently bind f32.
 //!
+//! # Fault model
+//!
+//! The serving pipeline is fault-tolerant at **batch granularity**
+//! (full model: [`coordinator`] module docs). Every accepted request
+//! gets exactly one [`coordinator::Response`] stamped with a typed
+//! [`coordinator::Outcome`]:
+//!
+//! * `Ok` — executed; logits valid.
+//! * `Failed` — its batch panicked inside [`coordinator::Backend::infer`];
+//!   the worker catches the unwind, answers the batch, and keeps
+//!   draining (a consecutive-failure circuit breaker adds a cooldown).
+//! * `Shed` — rejected at admission by the non-blocking
+//!   [`coordinator::Server::try_submit`] when the ingress queue is full.
+//! * `DeadlineExceeded` — the deadline passed before execution
+//!   ([`coordinator::Server::submit_with_deadline`]); shed without
+//!   running. The batcher also closes a batch early once the oldest
+//!   request's deadline budget is half-spent.
+//!
+//! Injected faults for testing come from the `RT3D_FAULTS` knob (e.g.
+//! `panic@0.05,slow=5ms@0.1,seed=7` — see [`coordinator::faults`]),
+//! which wraps any backend in a deterministic, seeded fault injector;
+//! `rt3d serve --faults` and the CI chaos leg run it. Faults fire
+//! *before* the inner backend executes, so surviving requests stay
+//! bit-identical to a fault-free run. Not isolated: panics on threads a
+//! backend spawns itself still abort the process.
+//!
 //! # Layers
 //!
 //! * `runtime` — PJRT client loading the AOT HLO artifacts produced by

@@ -4,7 +4,7 @@
 //! through artifacts built once by `make artifacts` (python never runs on
 //! the request path).
 
-use rt3d::coordinator::{Backend, Server, ServerConfig};
+use rt3d::coordinator::{Backend, FaultBackend, FaultPlan, Server, ServerConfig};
 use rt3d::device::ExecutorClass;
 use rt3d::executors::{EngineKind, NaiveBackend, NativeEngine};
 use rt3d::model::Model;
@@ -19,7 +19,7 @@ USAGE: rt3d [--artifacts DIR] <serve|bench|tune|inspect|env> [options]
 
   serve    --model c3d --backend rt3d|naive|untuned|pjrt [--sparse] \
            [--requests 32] [--max-batch 4] [--threads N] [--workers W] \
-           [--variant dense_xla_b1]
+           [--variant dense_xla_b1] [--faults PLAN]
   bench    --table 2|3|cache
   tune     --model c3d [--reps 3]
   inspect  --model c3d
@@ -32,6 +32,11 @@ value here. --workers W runs W batch-execution workers over one shared
 compiled model (total parallelism ~ W x threads). --backend pjrt needs
 a build with `--features pjrt`. (--engine is accepted as the old
 spelling of --backend.)
+
+--faults PLAN (or RT3D_FAULTS; --faults wins) wraps the backend in the
+deterministic fault injector, e.g. panic@0.02,slow=5ms@0.1,seed=7 —
+injected panics become per-request failed responses, not crashes; the
+serve summary then reports shed/failed/panic counters.
 ";
 
 fn main() -> rt3d::Result<()> {
@@ -55,6 +60,10 @@ fn main() -> rt3d::Result<()> {
                 args.get_usize("threads", 0),
                 args.get_usize("workers", 1),
                 &args.get_or("variant", "dense_xla_b1"),
+                // CLI wins over the RT3D_FAULTS knob, like --threads.
+                args.get("faults")
+                    .map(str::to_string)
+                    .or_else(rt3d::util::env::faults),
             )
         }
         Some("bench") => match args.get_or("table", "2").as_str() {
@@ -123,10 +132,15 @@ fn serve(
     threads: usize,
     workers: usize,
     variant: &str,
+    faults: Option<String>,
 ) -> rt3d::Result<()> {
     let model = Model::load(artifacts, model_name)?;
     let in_dims = model.manifest.input;
-    let eng = build_backend(&model, backend, sparse, threads, variant)?;
+    let mut eng = build_backend(&model, backend, sparse, threads, variant)?;
+    if let Some(spec) = faults {
+        let plan = FaultPlan::parse(&spec)?;
+        eng = Arc::new(FaultBackend::new(eng, plan));
+    }
     println!(
         "backend: {} ({} executor threads x {} serving workers)",
         eng.name(),
@@ -138,7 +152,9 @@ fn serve(
         .max_wait(std::time::Duration::from_millis(10))
         .workers(workers);
     let server = Server::start(eng, cfg);
-    let responses = server.take_responses();
+    let responses = server
+        .take_responses()
+        .ok_or_else(|| rt3d::anyhow!("response receiver already taken"))?;
     let frames = in_dims[1];
     let size = in_dims[2];
     for i in 0..requests {
@@ -159,6 +175,19 @@ fn serve(
         m.throughput(),
         m.mean_batch()
     );
+    let snap = m.snapshot();
+    if snap.total() != snap.ok {
+        println!(
+            "outcomes: ok={} failed={} shed={} deadline_miss={} \
+             (panics={} breaker_trips={})",
+            snap.ok,
+            snap.failed,
+            snap.shed,
+            snap.deadline_miss,
+            snap.panics,
+            snap.breaker_trips
+        );
+    }
     let wb = m.worker_batches();
     if wb.len() > 1 {
         println!("batches per worker: {wb:?}");

@@ -29,6 +29,7 @@ pub const TUNE_DB: &str = "RT3D_TUNE_DB";
 pub const BENCH_BUDGET_MS: &str = "RT3D_BENCH_BUDGET_MS";
 pub const PRECISION: &str = "RT3D_PRECISION";
 pub const PREFETCH: &str = "RT3D_PREFETCH";
+pub const FAULTS: &str = "RT3D_FAULTS";
 
 /// One registered environment knob.
 pub struct Knob {
@@ -145,6 +146,20 @@ const KNOBS: &[Knob] = &[
             }
         },
     },
+    Knob {
+        name: FAULTS,
+        help: "deterministic fault injection plan for the serving pipeline \
+               (e.g. panic@0.05,slow=5ms@0.1,seed=7); empty/unset = off",
+        render: |raw| match raw.map(str::trim) {
+            None | Some("") => "off".to_string(),
+            Some(spec) => {
+                match crate::coordinator::faults::FaultPlan::parse(spec) {
+                    Ok(plan) => plan.to_string(),
+                    Err(e) => format!("{spec:?} (invalid: {e})"),
+                }
+            }
+        },
+    },
 ];
 
 /// Default pre-park spin budget (see `util::pool`).
@@ -217,6 +232,14 @@ fn parse_prefetch(raw: Option<&str>) -> bool {
 /// to `0`/`off`/`false`/`no`.
 pub fn prefetch() -> bool {
     parse_prefetch(var(PREFETCH).as_deref())
+}
+
+/// Raw `RT3D_FAULTS` text when set and non-empty (parsing lives with
+/// [`crate::coordinator::faults::FaultPlan`]). Empty = injection off.
+pub fn faults() -> Option<String> {
+    var(FAULTS)
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
 }
 
 /// `RT3D_TUNE_DB` when set and non-empty.
@@ -299,11 +322,11 @@ mod tests {
         // (the debug_assert in `var` enforces this at runtime too).
         for name in [
             THREADS, SIMD, FUSE, POOL, SPIN, TUNE_DB, BENCH_BUDGET_MS,
-            PRECISION, PREFETCH,
+            PRECISION, PREFETCH, FAULTS,
         ] {
             assert!(knobs().iter().any(|k| k.name == name), "{name} unregistered");
         }
-        assert_eq!(knobs().len(), 9, "new knob? register + document it");
+        assert_eq!(knobs().len(), 10, "new knob? register + document it");
     }
 
     #[test]

@@ -32,7 +32,7 @@ fn serve_collect(
             .queue_depth(16)
             .workers(workers),
     );
-    let responses = server.take_responses();
+    let responses = server.take_responses().expect("responses");
     let mut by_id = HashMap::new();
     for i in 0..n {
         let clip = workload::make_clip(i % 8, 7 + i as u64, frames, size);

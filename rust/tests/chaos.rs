@@ -1,0 +1,367 @@
+//! Chaos tests: the fault-tolerance contracts of the serving pipeline
+//! under deterministic fault injection (`coordinator::faults`).
+//!
+//! The contracts (see the coordinator module docs' fault model):
+//! * **exactly-once, whatever happens** — under injected panics and
+//!   slowdowns, every accepted request gets exactly one [`Response`],
+//!   with [`Outcome::Ok`] or [`Outcome::Failed`]; the pipeline never
+//!   dies, and a clean shutdown still works afterwards;
+//! * **bit-identical survivors** — faults fire *before* the inner
+//!   backend runs, so requests whose batch was spared return logits
+//!   bit-identical to a fault-free run of the same clips;
+//! * **shedding, not blocking** — `try_submit` against a saturated
+//!   pipeline returns `Admission::Shed` synchronously; accepted work
+//!   still completes;
+//! * **deadline shedding** — requests whose deadline expires while the
+//!   pipeline is wedged come back [`Outcome::DeadlineExceeded`] without
+//!   executing;
+//! * **the `RT3D_FAULTS` knob** — the CI chaos leg runs this suite with
+//!   `RT3D_FAULTS=panic@0.05`; the env-driven test parses whatever plan
+//!   is set and serves through it.
+
+use rt3d::coordinator::{
+    Admission, Backend, FaultBackend, FaultPlan, Outcome, Server, ServerConfig,
+};
+use rt3d::tensor::{Mat, Tensor5};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Deterministic toy backend: logit c = clip mean * (c + 1). Constant
+/// clips of value v sum exactly in f32 (8 elements, representable
+/// values), so the expected logits are bit-exact and — crucially —
+/// independent of batch composition: surviving requests must match a
+/// fault-free run bit for bit no matter how faults reshaped the batches.
+struct Mean;
+impl Backend for Mean {
+    fn infer(&self, batch: Tensor5) -> Mat {
+        let b = batch.dims[0];
+        let n = batch.len() / b;
+        let mut out = Mat::zeros(b, 2);
+        for i in 0..b {
+            let mean: f32 =
+                batch.data[i * n..(i + 1) * n].iter().sum::<f32>() / n as f32;
+            *out.at_mut(i, 0) = mean;
+            *out.at_mut(i, 1) = mean * 2.0;
+        }
+        out
+    }
+    fn name(&self) -> String {
+        "mean".into()
+    }
+}
+
+fn clip_of(value: f32) -> Tensor5 {
+    let mut clip = Tensor5::zeros([1, 1, 2, 2, 2]);
+    clip.data.fill(value);
+    clip
+}
+
+/// Gate + entry counter: freezes the execution stage and reports how many
+/// batches have entered `infer` (for deterministic deadline expiry).
+struct Gated {
+    gate: Mutex<bool>,
+    cv: Condvar,
+    entered: AtomicUsize,
+}
+
+impl Gated {
+    fn new() -> Arc<Self> {
+        Arc::new(Self {
+            gate: Mutex::new(false),
+            cv: Condvar::new(),
+            entered: AtomicUsize::new(0),
+        })
+    }
+
+    fn open(&self) {
+        *self.gate.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+impl Backend for Gated {
+    fn infer(&self, batch: Tensor5) -> Mat {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        let mut open = self.gate.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+        Mat::zeros(batch.dims[0], 2)
+    }
+    fn name(&self) -> String {
+        "gated".into()
+    }
+}
+
+#[test]
+fn injected_panics_exactly_one_response_per_id_and_survivors_bit_identical() {
+    const SUBMITTERS: usize = 32;
+    const PER_SUBMITTER: usize = 4;
+    const N: usize = SUBMITTERS * PER_SUBMITTER;
+
+    // Fault-free reference: value -> logits for every clip in the trace.
+    let reference: HashMap<u32, Vec<f32>> = {
+        let server = Server::start(
+            Arc::new(Mean),
+            ServerConfig::new()
+                .max_batch(2)
+                .max_wait(Duration::from_millis(1))
+                .workers(2),
+        );
+        let responses = server.take_responses().expect("responses");
+        let mut id_to_value = HashMap::new();
+        for i in 0..N {
+            let v = (i + 1) as f32;
+            let id = server.submit(clip_of(v), None).unwrap();
+            id_to_value.insert(id, v);
+        }
+        let mut out = HashMap::new();
+        for _ in 0..N {
+            let r = responses.recv().unwrap();
+            assert_eq!(r.outcome, Outcome::Ok);
+            out.insert(id_to_value[&r.id].to_bits(), r.logits);
+        }
+        server.shutdown();
+        out
+    };
+
+    // Chaos run: panic on 20% of batches, slow down another 10%, 32
+    // concurrent submitters. max_batch 2 over 128 requests means >= 64
+    // fault draws, so a zero-panic run is ~1e-6 improbable — the failure
+    // path is genuinely exercised every run, deterministically seeded.
+    let plan = FaultPlan::parse("panic@0.2,slow=1ms@0.1,seed=42").unwrap();
+    let backend = Arc::new(FaultBackend::new(Arc::new(Mean), plan));
+    let server = Server::start(
+        backend,
+        ServerConfig::new()
+            .max_batch(2)
+            .max_wait(Duration::from_millis(1))
+            .queue_depth(64)
+            .workers(2)
+            .breaker(3, Duration::from_millis(1)),
+    );
+    let responses = server.take_responses().expect("responses");
+    let id_to_value = Mutex::new(HashMap::new());
+    std::thread::scope(|s| {
+        for t in 0..SUBMITTERS {
+            let id_to_value = &id_to_value;
+            let server = &server;
+            s.spawn(move || {
+                for j in 0..PER_SUBMITTER {
+                    let v = (t * PER_SUBMITTER + j + 1) as f32;
+                    let id = server
+                        .submit(clip_of(v), None)
+                        .expect("pipeline must stay accepting under faults");
+                    id_to_value.lock().unwrap().insert(id, v);
+                }
+            });
+        }
+    });
+    let id_to_value = id_to_value.into_inner().unwrap();
+    assert_eq!(id_to_value.len(), N);
+
+    // Exactly one response per id; survivors bit-identical to reference.
+    let mut seen = std::collections::HashSet::new();
+    let (mut ok, mut failed) = (0usize, 0usize);
+    for _ in 0..N {
+        let r = responses
+            .recv()
+            .expect("every accepted request gets a response");
+        assert!(seen.insert(r.id), "id {} answered twice", r.id);
+        let v = id_to_value[&r.id];
+        match r.outcome {
+            Outcome::Ok => {
+                ok += 1;
+                assert_eq!(
+                    r.logits,
+                    reference[&v.to_bits()],
+                    "surviving clip v={v} diverged from the fault-free run"
+                );
+            }
+            Outcome::Failed => {
+                failed += 1;
+                assert!(r.logits.is_empty());
+                assert_eq!(r.correct(), None);
+            }
+            other => panic!("unexpected outcome {other:?} for id {}", r.id),
+        }
+    }
+    assert_eq!(ok + failed, N);
+
+    // The pipeline is still alive: one more request round-trips.
+    let id = server
+        .submit(clip_of(0.5), None)
+        .expect("pipeline alive after chaos");
+    let r = responses.recv().unwrap();
+    assert_eq!(r.id, id);
+
+    // Clean shutdown, consistent accounting.
+    let m = server.shutdown();
+    let snap = m.snapshot();
+    assert!(snap.panics > 0, "fault plan never fired — test is vacuous");
+    assert_eq!(snap.failed + snap.ok, N + 1);
+    assert_eq!(m.count(), snap.ok, "latency samples are Ok responses only");
+    assert_eq!(snap.shed, 0);
+    assert_eq!(snap.deadline_miss, 0);
+}
+
+#[test]
+fn overloaded_pipeline_sheds_at_admission_instead_of_blocking() {
+    const OFFERED: usize = 32;
+    // Frozen worker + depth-2 ingress: capacity is ingress (2) + batcher
+    // pending (< max_batch = 1) + batch queue (1) + in-execution (1).
+    const CAPACITY: usize = 2 + 1 + 1 + 1;
+
+    let gated = Gated::new();
+    let server = Server::start(
+        gated.clone(),
+        ServerConfig::new()
+            .max_batch(1)
+            .max_wait(Duration::from_millis(1))
+            .queue_depth(2)
+            .workers(1),
+    );
+    let responses = server.take_responses().expect("responses");
+    let (mut accepted, mut shed) = (Vec::new(), Vec::new());
+    let t0 = Instant::now();
+    for _ in 0..OFFERED {
+        match server.try_submit(clip_of(1.0), None, None).unwrap() {
+            Admission::Accepted(id) => accepted.push(id),
+            Admission::Shed(resp) => {
+                assert_eq!(resp.outcome, Outcome::Shed);
+                assert!(resp.logits.is_empty());
+                shed.push(resp.id);
+            }
+        }
+        // Give the batcher a beat to pull, so acceptance isn't limited to
+        // the raw ingress buffer on slow machines.
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(2),
+        "try_submit must never block on the frozen pipeline ({elapsed:?})"
+    );
+    assert!(
+        accepted.len() <= CAPACITY,
+        "accepted {} exceeds frozen capacity {CAPACITY}",
+        accepted.len()
+    );
+    assert!(
+        shed.len() >= OFFERED - CAPACITY,
+        "only {} shed of {OFFERED} offered",
+        shed.len()
+    );
+
+    // Unfreeze: every accepted request completes Ok; shed ones are gone.
+    gated.open();
+    for _ in 0..accepted.len() {
+        let r = responses.recv().unwrap();
+        assert_eq!(r.outcome, Outcome::Ok);
+        assert!(accepted.contains(&r.id));
+    }
+    let m = server.shutdown();
+    let snap = m.snapshot();
+    assert_eq!(snap.shed, shed.len());
+    assert_eq!(snap.ok, accepted.len());
+    assert_eq!(snap.total(), OFFERED);
+}
+
+#[test]
+fn expired_deadlines_are_shed_with_a_response_not_executed() {
+    let gated = Gated::new();
+    let server = Server::start(
+        gated.clone(),
+        ServerConfig::new()
+            .max_batch(1)
+            .max_wait(Duration::from_millis(1))
+            .queue_depth(16)
+            .workers(1),
+    );
+    let responses = server.take_responses().expect("responses");
+
+    // Wedge the worker inside a sacrificial request, then queue deadline
+    // work behind it — deterministic expiry, no sleep races.
+    let sacrificial = server.submit(clip_of(1.0), None).unwrap();
+    while gated.entered.load(Ordering::SeqCst) == 0 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let mut with_deadline = Vec::new();
+    for _ in 0..4 {
+        with_deadline.push(
+            server
+                .submit_with_deadline(
+                    clip_of(2.0),
+                    None,
+                    Duration::from_millis(5),
+                )
+                .unwrap(),
+        );
+    }
+    let unbounded = server.submit(clip_of(3.0), None).unwrap();
+    // Let every 5 ms deadline expire while the worker is still wedged.
+    std::thread::sleep(Duration::from_millis(20));
+    gated.open();
+
+    let mut outcomes: HashMap<u64, Outcome> = HashMap::new();
+    for _ in 0..6 {
+        let r = responses.recv().unwrap();
+        outcomes.insert(r.id, r.outcome);
+    }
+    assert_eq!(outcomes[&sacrificial], Outcome::Ok);
+    assert_eq!(outcomes[&unbounded], Outcome::Ok);
+    for id in &with_deadline {
+        assert_eq!(
+            outcomes[id],
+            Outcome::DeadlineExceeded,
+            "expired request {id} must be shed, not executed"
+        );
+    }
+    let m = server.shutdown();
+    let snap = m.snapshot();
+    assert_eq!(snap.deadline_miss, 4);
+    assert_eq!(snap.ok, 2);
+    // The expired batches never reached the backend.
+    assert_eq!(gated.entered.load(Ordering::SeqCst), 2);
+}
+
+#[test]
+fn env_fault_plan_serves_with_exactly_once_delivery() {
+    // The CI chaos leg sets RT3D_FAULTS=panic@0.05; locally (unset) a
+    // default plan keeps the test meaningful. Either way: parse the plan,
+    // serve through it, and demand exactly-once delivery.
+    let plan = match rt3d::util::env::faults() {
+        Some(spec) => FaultPlan::parse(&spec)
+            .expect("RT3D_FAULTS must parse (the env knob grammar)"),
+        None => FaultPlan::parse("panic@0.05,seed=11").unwrap(),
+    };
+    let backend = Arc::new(FaultBackend::new(Arc::new(Mean), plan));
+    let server = Server::start(
+        backend,
+        ServerConfig::new()
+            .max_batch(1)
+            .max_wait(Duration::from_millis(1))
+            .workers(2)
+            .breaker(2, Duration::from_millis(1)),
+    );
+    let responses = server.take_responses().expect("responses");
+    let n = 64;
+    let mut ids = std::collections::HashSet::new();
+    for i in 0..n {
+        ids.insert(server.submit(clip_of((i + 1) as f32), None).unwrap());
+    }
+    for _ in 0..n {
+        let r = responses.recv().unwrap();
+        assert!(ids.remove(&r.id), "duplicate or unknown id {}", r.id);
+        assert!(
+            matches!(r.outcome, Outcome::Ok | Outcome::Failed),
+            "unexpected outcome {:?}",
+            r.outcome
+        );
+    }
+    assert!(ids.is_empty());
+    let m = server.shutdown();
+    assert_eq!(m.snapshot().ok + m.snapshot().failed, n);
+}

@@ -235,9 +235,10 @@ fn server_with_toy_conv_engine() {
             },
             queue_depth: 16,
             workers: 1,
+            ..ServerConfig::default()
         },
     );
-    let responses = server.take_responses();
+    let responses = server.take_responses().expect("responses");
     for i in 0..12 {
         server
             .submit(workload::make_clip(i % 8, i as u64, 4, 8), None)

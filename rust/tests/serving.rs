@@ -75,9 +75,10 @@ fn saturation_answers_every_id_once_with_bounded_inflight() {
             },
             queue_depth: QUEUE_DEPTH,
             workers: WORKERS,
+            ..ServerConfig::default()
         },
     );
-    let responses = server.take_responses();
+    let responses = server.take_responses().expect("responses");
     let accepted = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..SUBMITTERS {
@@ -131,9 +132,10 @@ fn serve_collect(
             },
             queue_depth: 16,
             workers,
+            ..ServerConfig::default()
         },
     );
-    let responses = server.take_responses();
+    let responses = server.take_responses().expect("responses");
     let mut id_to_seed = HashMap::new();
     for i in 0..n {
         let clip = workload::make_clip(i % 8, i as u64, frames, size);
@@ -206,9 +208,10 @@ fn more_workers_beat_one_on_a_slow_engine() {
                 },
                 queue_depth: 16,
                 workers,
+                ..ServerConfig::default()
             },
         );
-        let responses = server.take_responses();
+        let responses = server.take_responses().expect("responses");
         let n = 16;
         let t0 = std::time::Instant::now();
         for _ in 0..n {

@@ -34,8 +34,14 @@ UPDATE_TOLERANCE = 1.5  # tolerance stamped into refreshed baselines
 # gemm-kernels bench's measured scratch high-water marks — deterministic
 # for a given thread count, so a growth past tolerance means the fused
 # path's working set regressed (e.g. panel slabs started scaling with R).
+# shed_rate/failed_rate come from the serving bench's overload section:
+# shed_rate is bounded by 1.0 (so with the committed 0.7 baseline at 1.5x
+# tolerance it can never warn spuriously — it is tracking data), and
+# failed_rate's baseline of 0.0 skips the ratio check by design; a
+# fault-free serving bench asserts failed_rate == 0 itself.
 LATENCY_KEYS = ("p95_ms", "p50_ms", "p95_ms_1t", "p50_ms_1t",
-                "fused_peak_scratch_mb", "materialized_peak_scratch_mb")
+                "fused_peak_scratch_mb", "materialized_peak_scratch_mb",
+                "shed_rate", "failed_rate")
 # Throughput-style keys: smaller is worse. The int8 keys gate the
 # quantized GEMM path: int8_best_gflops is its raw throughput and
 # int8_speedup_vs_f32 its advantage over the f32 SIMD kernels — the
