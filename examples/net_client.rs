@@ -1,0 +1,196 @@
+//! Wire client for a live `rt3d serve --listen` server — the driver the
+//! CI `serve-e2e` job points at a background server. Speaks the binary
+//! frame protocol (crate docs, "Wire protocol"): streams labelled clips
+//! (some with deliberately tight deadlines), optionally triggers one hot
+//! model swap mid-stream, scrapes `GET /metrics`, and exits non-zero when
+//! any invariant breaks — every submitted id answered exactly once, no
+//! failed windows in normal mode, injected panics surfaced (and survived)
+//! in `--expect-panics` mode.
+//!
+//! ```sh
+//! rt3d serve --listen 127.0.0.1:4070 --allow-shutdown &
+//! cargo run --release --example net_client -- \
+//!     --addr 127.0.0.1:4070 [--clips 32] [--model c3d] \
+//!     [--swap] [--expect-panics] [--shutdown] [--frames D] [--size S]
+//! ```
+//!
+//! Clip geometry defaults to the synthetic C3D model the server falls
+//! back to without artifacts; pass `--frames/--size` when the server
+//! loaded real artifacts with a different input shape.
+
+use rt3d::coordinator::net::fetch_metrics;
+use rt3d::coordinator::{Frame, NetClient, Outcome};
+use rt3d::model::SyntheticC3d;
+use rt3d::util::args::Args;
+use rt3d::workload;
+use std::collections::HashSet;
+
+#[derive(Default)]
+struct Tally {
+    ok: usize,
+    failed: usize,
+    shed: usize,
+    deadline: usize,
+}
+
+impl Tally {
+    fn add(&mut self, outcome: Outcome) {
+        match outcome {
+            Outcome::Ok => self.ok += 1,
+            Outcome::Failed => self.failed += 1,
+            Outcome::Shed => self.shed += 1,
+            Outcome::DeadlineExceeded => self.deadline += 1,
+        }
+    }
+}
+
+/// Submit one deterministic labelled clip as request `id`.
+fn submit(
+    client: &mut NetClient,
+    model: &str,
+    id: u64,
+    frames: usize,
+    size: usize,
+    deadline_ms: u32,
+) -> rt3d::Result<()> {
+    let label = (id as usize) % workload::NUM_CLASSES;
+    let clip = workload::make_clip(label, 4242 + id, frames, size);
+    client.request(id, model, clip, Some(label as u32), deadline_ms)
+}
+
+/// Read server frames until `want` response ids are answered (plus
+/// `want_swaps` SwapDone verdicts), tallying outcomes. Errors on a
+/// duplicate/unknown id, a failed swap, or a typed server error.
+fn collect(
+    client: &mut NetClient,
+    expect: &mut HashSet<u64>,
+    want: usize,
+    want_swaps: usize,
+    tally: &mut Tally,
+) -> rt3d::Result<usize> {
+    let mut responses = 0;
+    let mut swaps = 0;
+    while responses < want || swaps < want_swaps {
+        match client.recv()? {
+            Frame::Response { id, outcome, .. } => {
+                if !expect.remove(&id) {
+                    rt3d::bail!("duplicate or unknown response id {id}");
+                }
+                tally.add(outcome);
+                responses += 1;
+            }
+            Frame::SwapDone { ok, msg } => {
+                if !ok {
+                    rt3d::bail!("hot swap failed: {msg}");
+                }
+                println!("net_client: {msg}");
+                swaps += 1;
+            }
+            Frame::Error { code, msg } => {
+                rt3d::bail!("server error (code {code}): {msg}")
+            }
+            other => rt3d::bail!("unexpected server frame {other:?}"),
+        }
+    }
+    Ok(swaps)
+}
+
+fn main() -> rt3d::Result<()> {
+    let args = Args::parse_env();
+    let addr = args.get_or("addr", "127.0.0.1:4070");
+    let model = args.get_or("model", "c3d");
+    let clips = args.get_usize("clips", 32).max(2);
+    let do_swap = args.flag("swap");
+    let expect_panics = args.flag("expect-panics");
+    let do_shutdown = args.flag("shutdown");
+    let synth = SyntheticC3d::default();
+    let frames = args.get_usize("frames", synth.frames);
+    let size = args.get_usize("size", synth.size);
+
+    let mut client = NetClient::connect(addr.as_str())?;
+    let mut tally = Tally::default();
+    let mut expect: HashSet<u64> = HashSet::new();
+    let mut next_id: u64 = 0;
+    let mut swaps = 0;
+
+    // Main stream: half the clips, one optional hot swap, the other half.
+    // Every 8th request carries a 1 ms deadline — tight enough that the
+    // deadline path gets exercised without making the outcome count part
+    // of the contract (a fast engine may legitimately beat it).
+    let half = clips / 2;
+    for phase in 0..2u32 {
+        let n = if phase == 0 { half } else { clips - half };
+        if phase == 1 && do_swap {
+            // Empty dir = the server-side `--swap-artifacts` default.
+            client.send(&Frame::Swap { model: model.clone(), dir: String::new() })?;
+        }
+        for _ in 0..n {
+            let deadline_ms = u32::from(next_id % 8 == 3);
+            submit(&mut client, &model, next_id, frames, size, deadline_ms)?;
+            expect.insert(next_id);
+            next_id += 1;
+        }
+    }
+    swaps += collect(&mut client, &mut expect, clips, usize::from(do_swap), &mut tally)?;
+
+    if expect_panics {
+        // Fault mode (`RT3D_FAULTS=panic@p` on the server): keep streaming
+        // bounded extra rounds until at least one injected panic surfaces
+        // as a Failed response, then prove the server still serves.
+        let mut rounds = 0;
+        while tally.failed == 0 && rounds < 40 {
+            rounds += 1;
+            for _ in 0..8 {
+                submit(&mut client, &model, next_id, frames, size, 0)?;
+                expect.insert(next_id);
+                next_id += 1;
+            }
+            collect(&mut client, &mut expect, 8, 0, &mut tally)?;
+        }
+        if tally.failed == 0 {
+            rt3d::bail!("no injected panic surfaced after {rounds} extra rounds");
+        }
+        let before_ok = tally.ok;
+        for _ in 0..4 {
+            submit(&mut client, &model, next_id, frames, size, 0)?;
+            expect.insert(next_id);
+            next_id += 1;
+        }
+        collect(&mut client, &mut expect, 4, 0, &mut tally)?;
+        if tally.ok <= before_ok {
+            rt3d::bail!("server stopped serving Ok responses after injected panics");
+        }
+    } else if tally.failed > 0 {
+        rt3d::bail!("{} failed windows in a fault-free run", tally.failed);
+    }
+    if tally.ok == 0 {
+        rt3d::bail!("no request executed successfully");
+    }
+    if !expect.is_empty() {
+        rt3d::bail!("{} submitted ids were never answered", expect.len());
+    }
+
+    // Scrape the Prometheus endpoint on the same listener; CI greps the
+    // echoed body for the counter families.
+    let metrics = fetch_metrics(addr.as_str())?;
+    if !metrics.contains("rt3d_requests_total") {
+        rt3d::bail!("/metrics is missing rt3d_requests_total:\n{metrics}");
+    }
+    println!("--- GET /metrics ---");
+    print!("{metrics}");
+    println!("--- end /metrics ---");
+
+    if do_shutdown {
+        client.send(&Frame::Shutdown)?;
+        match client.recv()? {
+            Frame::Bye => println!("net_client: server acknowledged shutdown"),
+            other => rt3d::bail!("expected Bye after Shutdown, got {other:?}"),
+        }
+    }
+
+    println!(
+        "net_client: ok={} failed={} shed={} deadline_exceeded={} swaps={swaps}",
+        tally.ok, tally.failed, tally.shed, tally.deadline
+    );
+    Ok(())
+}

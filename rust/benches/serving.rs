@@ -18,7 +18,10 @@
 //! synthetic C3D model when `make artifacts` has not been run.
 
 use rt3d::codegen::KernelArch;
-use rt3d::coordinator::{Admission, Server, ServerConfig};
+use rt3d::coordinator::{
+    Admission, Deployment, Frame, NetClient, NetServer, NetServerConfig,
+    Outcome, Policy, Router, Server, ServerConfig,
+};
 use rt3d::executors::NativeEngine;
 use rt3d::model::{Model, SyntheticC3d};
 use rt3d::tensor::Tensor5;
@@ -268,6 +271,73 @@ fn main() {
         snap.shed,
     );
 
+    // --- Network loopback: the wire front door over the same pipeline ---
+    // A closed-loop client with a bounded in-flight window (below the
+    // ingress queue depth, so nothing sheds) streams the trace through
+    // `NetServer` on 127.0.0.1 — measuring what the TCP framing, demux and
+    // per-connection writer add on top of the in-process pipeline. The
+    // per-request latency comes off the response frames (server-side
+    // clock), the throughput from the wall.
+    let engine = Arc::new(build(threads));
+    let router = Arc::new(Router::new(Policy::BestAccuracy));
+    router.add_deployment(
+        "c3d",
+        Deployment {
+            name: "bench".into(),
+            engine,
+            expected_latency_s: 0.05,
+            accuracy: None,
+        },
+        ServerConfig::new()
+            .max_batch(4)
+            .max_wait(std::time::Duration::from_millis(2))
+            .queue_depth(16)
+            .workers(1),
+    );
+    let net =
+        NetServer::bind("127.0.0.1:0", router.clone(), NetServerConfig::new(), None)
+            .unwrap();
+    let mut client = NetClient::connect(net.local_addr()).unwrap();
+    let net_n = sat_n;
+    let window = 8;
+    let mut net_lat = Vec::with_capacity(net_n);
+    let (mut submitted, mut received) = (0usize, 0usize);
+    let t0 = Instant::now();
+    while received < net_n {
+        while submitted < net_n && submitted - received < window {
+            client
+                .request(
+                    submitted as u64,
+                    "c3d",
+                    clip_set[submitted % clip_set.len()].clone(),
+                    Some((submitted % 8) as u32),
+                    0,
+                )
+                .unwrap();
+            submitted += 1;
+        }
+        match client.recv().unwrap() {
+            Frame::Response { outcome, latency_us, .. } => {
+                assert_eq!(outcome, Outcome::Ok, "loopback request not served");
+                net_lat.push(latency_us as f64 / 1e6);
+                received += 1;
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    let net_wall = t0.elapsed().as_secs_f64();
+    let net_clips_s = net_n as f64 / net_wall;
+    net_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let net_p95_s = net_lat[((net_lat.len() as f64 - 1.0) * 0.95).round() as usize];
+    net.shutdown();
+    if let Ok(r) = Arc::try_unwrap(router) {
+        r.shutdown();
+    }
+    println!(
+        "serving net loopback: {net_clips_s:.2} clips/s p95={} ({net_n} clips over TCP, window {window})",
+        fmt_s(net_p95_s),
+    );
+
     // --- Machine-readable output ---------------------------------------
     let mut json = String::new();
     json.push_str("{\n");
@@ -289,6 +359,8 @@ fn main() {
     json.push_str("  \"bit_identical_logits\": true,\n");
     json.push_str(&format!("  \"shed_rate\": {shed_rate:.4},\n"));
     json.push_str(&format!("  \"failed_rate\": {failed_rate:.4},\n"));
+    json.push_str(&format!("  \"net_clips_per_s\": {net_clips_s:.4},\n"));
+    json.push_str(&format!("  \"net_p95_ms\": {:.4},\n", net_p95_s * 1e3));
     json.push_str(&format!("  \"saturation_clips_per_s\": {:.4},\n", best.2));
     json.push_str(&format!("  \"workers_best\": {},\n", best.0));
     json.push_str(&format!("  \"workers_speedup\": {workers_speedup:.4},\n"));

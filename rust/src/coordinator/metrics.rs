@@ -1,8 +1,10 @@
 //! Serving metrics: latency percentiles, throughput, accuracy, and the
 //! fault-tolerance counters (shed / failed / panic / deadline-miss /
-//! breaker trips) surfaced as a [`MetricsSnapshot`].
+//! breaker trips) surfaced as a [`MetricsSnapshot`] — plus the
+//! [`render_prometheus`] text renderer behind the `/metrics` endpoint.
 
-use std::sync::{Mutex, MutexGuard};
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Aggregated latency distribution (seconds).
 #[derive(Debug, Clone, Default)]
@@ -211,6 +213,115 @@ impl Metrics {
     }
 }
 
+/// Render every model's [`Metrics`] in Prometheus text exposition format
+/// (version 0.0.4): one `rt3d_requests_total{model,outcome}` counter per
+/// [`super::Outcome`] class, panic / breaker-trip counters, shed / failed
+/// rate gauges, and the served-latency distribution as a summary with
+/// p50/p95/p99 quantiles. This is exactly [`Metrics::snapshot`] +
+/// [`Metrics::latency`] — the CLI summary, the bench JSON and the
+/// `/metrics` endpoint all read the same counters, so they cannot
+/// disagree.
+pub fn render_prometheus(models: &[(String, Arc<Metrics>)]) -> String {
+    let mut out = String::with_capacity(1024);
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+
+    out.push_str("# HELP rt3d_requests_total Requests by final outcome.\n");
+    out.push_str("# TYPE rt3d_requests_total counter\n");
+    for (model, m) in models {
+        let s = m.snapshot();
+        let model = esc(model);
+        for (outcome, n) in [
+            ("ok", s.ok),
+            ("failed", s.failed),
+            ("shed", s.shed),
+            ("deadline_exceeded", s.deadline_miss),
+        ] {
+            let _ = writeln!(
+                out,
+                "rt3d_requests_total{{model=\"{model}\",outcome=\"{outcome}\"}} {n}"
+            );
+        }
+    }
+
+    out.push_str(
+        "# HELP rt3d_batch_panics_total Batches that panicked inside Backend::infer.\n",
+    );
+    out.push_str("# TYPE rt3d_batch_panics_total counter\n");
+    for (model, m) in models {
+        let _ = writeln!(
+            out,
+            "rt3d_batch_panics_total{{model=\"{}\"}} {}",
+            esc(model),
+            m.snapshot().panics
+        );
+    }
+
+    out.push_str(
+        "# HELP rt3d_breaker_trips_total Worker circuit-breaker trips into cooldown.\n",
+    );
+    out.push_str("# TYPE rt3d_breaker_trips_total counter\n");
+    for (model, m) in models {
+        let _ = writeln!(
+            out,
+            "rt3d_breaker_trips_total{{model=\"{}\"}} {}",
+            esc(model),
+            m.snapshot().breaker_trips
+        );
+    }
+
+    out.push_str(
+        "# HELP rt3d_shed_rate Fraction of offered requests shed (admission + deadline).\n",
+    );
+    out.push_str("# TYPE rt3d_shed_rate gauge\n");
+    for (model, m) in models {
+        let _ = writeln!(
+            out,
+            "rt3d_shed_rate{{model=\"{}\"}} {}",
+            esc(model),
+            m.snapshot().shed_rate()
+        );
+    }
+
+    out.push_str(
+        "# HELP rt3d_failed_rate Fraction of offered requests that failed (batch panic).\n",
+    );
+    out.push_str("# TYPE rt3d_failed_rate gauge\n");
+    for (model, m) in models {
+        let _ = writeln!(
+            out,
+            "rt3d_failed_rate{{model=\"{}\"}} {}",
+            esc(model),
+            m.snapshot().failed_rate()
+        );
+    }
+
+    out.push_str("# HELP rt3d_request_latency_seconds Served request latency.\n");
+    out.push_str("# TYPE rt3d_request_latency_seconds summary\n");
+    for (model, m) in models {
+        let lat = m.latency();
+        let model = esc(model);
+        for (q, v) in
+            [("0.5", lat.p50_s), ("0.95", lat.p95_s), ("0.99", lat.p99_s)]
+        {
+            let _ = writeln!(
+                out,
+                "rt3d_request_latency_seconds{{model=\"{model}\",quantile=\"{q}\"}} {v}"
+            );
+        }
+        let _ = writeln!(
+            out,
+            "rt3d_request_latency_seconds_sum{{model=\"{model}\"}} {}",
+            lat.mean_s * lat.count as f64
+        );
+        let _ = writeln!(
+            out,
+            "rt3d_request_latency_seconds_count{{model=\"{model}\"}} {}",
+            lat.count
+        );
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -284,5 +395,36 @@ mod tests {
         assert_eq!(s.total(), 6);
         assert!((s.failed_rate() - 2.0 / 6.0).abs() < 1e-12);
         assert!((s.shed_rate() - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prometheus_render_exposes_every_counter_family() {
+        let m = Arc::new(Metrics::default());
+        m.record(0.010, 1, None);
+        m.record(0.030, 1, None);
+        m.record_shed();
+        m.record_panic();
+        m.record_failed(1);
+        let text = render_prometheus(&[("c3d".to_string(), m)]);
+        for needle in [
+            "# TYPE rt3d_requests_total counter",
+            "rt3d_requests_total{model=\"c3d\",outcome=\"ok\"} 2",
+            "rt3d_requests_total{model=\"c3d\",outcome=\"failed\"} 1",
+            "rt3d_requests_total{model=\"c3d\",outcome=\"shed\"} 1",
+            "rt3d_requests_total{model=\"c3d\",outcome=\"deadline_exceeded\"} 0",
+            "rt3d_batch_panics_total{model=\"c3d\"} 1",
+            "rt3d_breaker_trips_total{model=\"c3d\"} 0",
+            "rt3d_shed_rate{model=\"c3d\"} 0.25",
+            "rt3d_failed_rate{model=\"c3d\"} 0.25",
+            "# TYPE rt3d_request_latency_seconds summary",
+            "rt3d_request_latency_seconds{model=\"c3d\",quantile=\"0.95\"} 0.03",
+            "rt3d_request_latency_seconds_count{model=\"c3d\"} 2",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // Every non-comment line is `name{labels} value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.contains('}') && line.rsplit(' ').next().is_some());
+        }
     }
 }

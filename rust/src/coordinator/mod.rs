@@ -35,10 +35,17 @@
 //!   per-window logits yielded in order.
 //! * [`metrics`] — latency percentiles + throughput + per-worker batch
 //!   accounting, plus the fault counters (shed / failed / panic /
-//!   deadline-miss) used by the Table 2 harness and the E2E example.
+//!   deadline-miss) used by the Table 2 harness and the E2E example —
+//!   and the Prometheus text renderer behind `/metrics`.
 //! * [`faults`] — deterministic fault injection: a [`FaultBackend`]
 //!   wrapper driven by a seeded [`FaultPlan`] (`RT3D_FAULTS`), used by
 //!   the chaos tests and `rt3d serve --faults`.
+//! * [`net`] — the network front door (`rt3d serve --listen`): a
+//!   std-only TCP listener speaking a length-prefixed binary frame
+//!   protocol mapped 1:1 onto [`Router::try_submit`], an HTTP/1.1
+//!   `/metrics` thin layer on the same socket, and the hot-swap control
+//!   frame driving [`Router::stage`]. See the crate-level "Wire
+//!   protocol" section.
 //!
 //! # Fault model
 //!
@@ -61,13 +68,15 @@
 pub mod batcher;
 pub mod faults;
 pub mod metrics;
+pub mod net;
 pub mod router;
 pub mod server;
 pub mod session;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use faults::{Fault, FaultBackend, FaultPlan};
-pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
+pub use metrics::{render_prometheus, LatencyStats, Metrics, MetricsSnapshot};
+pub use net::{BackendFactory, Frame, NetClient, NetServer, NetServerConfig};
 pub use router::{Deployment, Policy, Router};
 pub use server::{Admission, Backend, Route, Server, ServerConfig};
 pub use session::{Session, SessionConfig, WindowResult};

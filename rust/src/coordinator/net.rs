@@ -1,0 +1,1050 @@
+//! Network front door: `rt3d serve --listen` — a std-only TCP server
+//! speaking a length-prefixed binary frame protocol, with an HTTP/1.1
+//! `/metrics` thin layer on the same listener and a hot-swap control
+//! frame.
+//!
+//! Wire clients get **exactly** the in-process serving semantics: every
+//! request frame goes through [`Router::try_submit`] (non-blocking
+//! admission → [`Outcome::Shed`] on a full queue, deadline-ms → batcher
+//! half-budget flush + worker-side [`Outcome::DeadlineExceeded`]
+//! shedding), and every accepted request produces exactly one response
+//! frame, streamed back in completion order.
+//!
+//! # Frame layout (version 1)
+//!
+//! Every frame is a 12-byte header followed by `payload_len` bytes:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "RT3D"
+//! 4       1     protocol version (1)
+//! 5       1     frame type
+//! 6       2     reserved (0)
+//! 8       4     payload_len (u32 LE)
+//! ```
+//!
+//! All multi-byte integers are little-endian; floats are f32 LE bit
+//! patterns (the serving stack's bit-identity invariant extends across
+//! the wire — logits arrive with the exact bits `forward_owned`
+//! produced). Frame types and payloads:
+//!
+//! | type | frame      | payload |
+//! |------|------------|---------|
+//! | 1    | Request    | client id u64 · deadline_ms u32 (0 = none) · label u32 (`u32::MAX` = none) · model_len u16 + UTF-8 · dims 5×u32 · f32 clip data |
+//! | 2    | Response   | client id u64 · outcome u8 · predicted u32 · latency_us u64 · n_logits u32 + f32 logits |
+//! | 3    | Swap       | model_len u16 + UTF-8 · dir_len u16 + UTF-8 (empty = server-side `--swap-artifacts` default) |
+//! | 4    | SwapDone   | ok u8 · msg_len u16 + UTF-8 |
+//! | 5    | Error      | code u8 · msg_len u16 + UTF-8 (server closes the connection after sending) |
+//! | 6    | Shutdown   | (empty) request server shutdown (honored only with `--allow-shutdown`) |
+//! | 7    | Bye        | (empty) shutdown acknowledged |
+//!
+//! `Outcome` tags: 0 = Ok, 1 = Failed, 2 = Shed, 3 = DeadlineExceeded.
+//!
+//! A malformed or oversize frame ([`RT3D_MAX_FRAME_MB`][crate::util::env])
+//! earns a typed [`Frame::Error`] and closes **only that connection**;
+//! the listener and every other connection keep serving.
+//!
+//! # Connection model
+//!
+//! One acceptor thread; per connection, a reader (the spawned thread) and
+//! a writer thread joined by an unbounded in-process channel, so a slow
+//! reader never blocks response delivery and responses stream back in
+//! completion order regardless of submission order. Responses are routed
+//! from the per-model shared channel by a demux thread per model, which
+//! matches server-side ids to (connection, client id) slots; an id whose
+//! slot is not yet registered (worker answered between `try_submit`
+//! returning and the slot insert) parks in an unclaimed stash until the
+//! reader catches up. Steady-state per-request work allocates only the
+//! recycled per-connection frame buffers plus the clip itself — the clip
+//! decoded off the wire is moved, never cloned, into the pipeline.
+//!
+//! GET sniffing: a connection whose first four bytes are `"GET "` is an
+//! HTTP/1.1 client; `GET /metrics` answers one Prometheus text page
+//! ([`super::metrics::render_prometheus`]) and closes.
+
+use super::metrics::render_prometheus;
+use super::{Admission, Outcome, Response, Router, ServerConfig};
+use crate::anyhow;
+use crate::coordinator::Deployment;
+use crate::tensor::Tensor5;
+use crate::util::error::Result;
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// First four bytes of every binary frame.
+pub const MAGIC: [u8; 4] = *b"RT3D";
+/// Wire protocol version carried in byte 4 of the header.
+pub const VERSION: u8 = 1;
+/// Fixed header size: magic + version + type + reserved + payload_len.
+pub const HEADER_LEN: usize = 12;
+/// Default cap on a single frame's payload (overridden by
+/// `RT3D_MAX_FRAME_MB` / [`NetServerConfig::max_frame_bytes`]).
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+// Frame type tags (header byte 5).
+const FT_REQUEST: u8 = 1;
+const FT_RESPONSE: u8 = 2;
+const FT_SWAP: u8 = 3;
+const FT_SWAP_DONE: u8 = 4;
+const FT_ERROR: u8 = 5;
+const FT_SHUTDOWN: u8 = 6;
+const FT_BYE: u8 = 7;
+
+// Error frame codes.
+/// Malformed / oversize / unparseable frame.
+pub const ERR_BAD_FRAME: u8 = 1;
+/// Request named a model this server does not route.
+pub const ERR_UNKNOWN_MODEL: u8 = 2;
+/// Operation disabled by server policy (e.g. remote shutdown).
+pub const ERR_FORBIDDEN: u8 = 3;
+/// Serving pipeline error (admission failed internally).
+pub const ERR_INTERNAL: u8 = 4;
+
+/// Wire tag for an [`Outcome`] (Response frame byte 8).
+pub fn outcome_tag(outcome: Outcome) -> u8 {
+    match outcome {
+        Outcome::Ok => 0,
+        Outcome::Failed => 1,
+        Outcome::Shed => 2,
+        Outcome::DeadlineExceeded => 3,
+    }
+}
+
+/// Inverse of [`outcome_tag`]; errors on an unknown tag instead of
+/// panicking (the decoder sees hostile bytes).
+pub fn outcome_from_tag(tag: u8) -> Result<Outcome> {
+    Ok(match tag {
+        0 => Outcome::Ok,
+        1 => Outcome::Failed,
+        2 => Outcome::Shed,
+        3 => Outcome::DeadlineExceeded,
+        _ => return Err(anyhow!("unknown outcome tag {tag}")),
+    })
+}
+
+/// One decoded protocol frame. The codec is symmetric and standalone
+/// ([`Frame::encode_into`] / [`Frame::decode`]), so tests and clients
+/// round-trip frames without a socket.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server: serve one clip on `model`.
+    Request {
+        /// Client-chosen correlation id, echoed on the response.
+        id: u64,
+        model: String,
+        /// Completion deadline in ms; 0 = no deadline.
+        deadline_ms: u32,
+        /// Ground-truth label (accuracy accounting); `None` = unlabelled.
+        label: Option<u32>,
+        clip: Tensor5,
+    },
+    /// Server → client: the outcome for one request id.
+    Response {
+        id: u64,
+        outcome: Outcome,
+        predicted: u32,
+        latency_us: u64,
+        /// Empty unless `outcome` is [`Outcome::Ok`]; exact forward bits.
+        logits: Vec<f32>,
+    },
+    /// Client → server: hot-swap `model` to the artifacts in `dir`
+    /// (empty `dir` = the server's `--swap-artifacts` default).
+    Swap { model: String, dir: String },
+    /// Server → client: swap verdict.
+    SwapDone { ok: bool, msg: String },
+    /// Server → client: typed failure; the connection closes after this.
+    Error { code: u8, msg: String },
+    /// Client → server: stop serving (requires `--allow-shutdown`).
+    Shutdown,
+    /// Server → client: shutdown acknowledged.
+    Bye,
+}
+
+impl Frame {
+    fn frame_type(&self) -> u8 {
+        match self {
+            Frame::Request { .. } => FT_REQUEST,
+            Frame::Response { .. } => FT_RESPONSE,
+            Frame::Swap { .. } => FT_SWAP,
+            Frame::SwapDone { .. } => FT_SWAP_DONE,
+            Frame::Error { .. } => FT_ERROR,
+            Frame::Shutdown => FT_SHUTDOWN,
+            Frame::Bye => FT_BYE,
+        }
+    }
+
+    /// Serialize into `out` (cleared first — callers recycle one buffer
+    /// per connection, so steady-state encoding allocates nothing once
+    /// the buffer has grown to the working-set frame size).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.push(self.frame_type());
+        out.extend_from_slice(&[0, 0]); // reserved
+        out.extend_from_slice(&[0, 0, 0, 0]); // payload_len patched below
+        match self {
+            Frame::Request { id, model, deadline_ms, label, clip } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&deadline_ms.to_le_bytes());
+                out.extend_from_slice(&label.unwrap_or(u32::MAX).to_le_bytes());
+                put_str16(out, model);
+                for d in clip.dims {
+                    out.extend_from_slice(&(d as u32).to_le_bytes());
+                }
+                for v in &clip.data {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::Response { id, outcome, predicted, latency_us, logits } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(outcome_tag(*outcome));
+                out.extend_from_slice(&predicted.to_le_bytes());
+                out.extend_from_slice(&latency_us.to_le_bytes());
+                out.extend_from_slice(&(logits.len() as u32).to_le_bytes());
+                for v in logits {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::Swap { model, dir } => {
+                put_str16(out, model);
+                put_str16(out, dir);
+            }
+            Frame::SwapDone { ok, msg } => {
+                out.push(u8::from(*ok));
+                put_str16(out, msg);
+            }
+            Frame::Error { code, msg } => {
+                out.push(*code);
+                put_str16(out, msg);
+            }
+            Frame::Shutdown | Frame::Bye => {}
+        }
+        let payload_len = (out.len() - HEADER_LEN) as u32;
+        out[8..12].copy_from_slice(&payload_len.to_le_bytes());
+    }
+
+    /// Decode one complete frame from the front of `buf`; returns the
+    /// frame and the bytes consumed. Never panics on truncated, oversize
+    /// or otherwise malformed input — every failure is a typed `Err`.
+    pub fn decode(buf: &[u8], max_frame_bytes: usize) -> Result<(Frame, usize)> {
+        if buf.len() < HEADER_LEN {
+            return Err(anyhow!(
+                "truncated frame: {} bytes, header needs {HEADER_LEN}",
+                buf.len()
+            ));
+        }
+        let mut header = [0u8; HEADER_LEN];
+        header.copy_from_slice(&buf[..HEADER_LEN]);
+        let (ftype, payload_len) = parse_header(&header, max_frame_bytes)?;
+        let end = HEADER_LEN + payload_len;
+        if buf.len() < end {
+            return Err(anyhow!(
+                "truncated frame: {} bytes, payload needs {end}",
+                buf.len()
+            ));
+        }
+        let frame = Frame::decode_payload(ftype, &buf[HEADER_LEN..end])?;
+        Ok((frame, end))
+    }
+
+    fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame> {
+        let mut r = Cursor { buf: payload, pos: 0 };
+        let frame = match ftype {
+            FT_REQUEST => {
+                let id = r.u64()?;
+                let deadline_ms = r.u32()?;
+                let label = match r.u32()? {
+                    u32::MAX => None,
+                    l => Some(l),
+                };
+                let model = r.str16()?;
+                let mut dims = [0usize; 5];
+                for d in &mut dims {
+                    *d = r.u32()? as usize;
+                }
+                if dims[0] != 1 {
+                    return Err(anyhow!(
+                        "request clip batch dim must be 1, got {}",
+                        dims[0]
+                    ));
+                }
+                let n: usize = dims
+                    .iter()
+                    .try_fold(1usize, |a, &d| a.checked_mul(d))
+                    .ok_or_else(|| anyhow!("clip dims overflow"))?;
+                let data = r.f32s(n)?;
+                Frame::Request {
+                    id,
+                    model,
+                    deadline_ms,
+                    label,
+                    clip: Tensor5::from_vec(dims, data),
+                }
+            }
+            FT_RESPONSE => {
+                let id = r.u64()?;
+                let outcome = outcome_from_tag(r.u8()?)?;
+                let predicted = r.u32()?;
+                let latency_us = r.u64()?;
+                let n = r.u32()? as usize;
+                let logits = r.f32s(n)?;
+                Frame::Response { id, outcome, predicted, latency_us, logits }
+            }
+            FT_SWAP => Frame::Swap { model: r.str16()?, dir: r.str16()? },
+            FT_SWAP_DONE => {
+                Frame::SwapDone { ok: r.u8()? != 0, msg: r.str16()? }
+            }
+            FT_ERROR => Frame::Error { code: r.u8()?, msg: r.str16()? },
+            FT_SHUTDOWN => Frame::Shutdown,
+            FT_BYE => Frame::Bye,
+            t => return Err(anyhow!("unknown frame type {t}")),
+        };
+        if r.pos != payload.len() {
+            return Err(anyhow!(
+                "frame payload has {} trailing bytes",
+                payload.len() - r.pos
+            ));
+        }
+        Ok(frame)
+    }
+}
+
+fn put_str16(out: &mut Vec<u8>, s: &str) {
+    let len = s.len().min(u16::MAX as usize) as u16;
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(&s.as_bytes()[..len as usize]);
+}
+
+fn parse_header(header: &[u8; HEADER_LEN], max_frame_bytes: usize) -> Result<(u8, usize)> {
+    if header[..4] != MAGIC {
+        return Err(anyhow!("bad magic {:?} (want \"RT3D\")", &header[..4]));
+    }
+    if header[4] != VERSION {
+        return Err(anyhow!(
+            "unsupported protocol version {} (this build speaks {VERSION})",
+            header[4]
+        ));
+    }
+    let payload_len =
+        u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as usize;
+    if payload_len > max_frame_bytes {
+        return Err(anyhow!(
+            "oversize frame: {payload_len} B payload exceeds the {max_frame_bytes} B cap (RT3D_MAX_FRAME_MB)"
+        ));
+    }
+    Ok((header[5], payload_len))
+}
+
+/// Bounds-checked little-endian reader over a payload slice.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| anyhow!("truncated frame payload"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn str16(&mut self) -> Result<String> {
+        let b = self.take(2)?;
+        let len = u16::from_le_bytes([b[0], b[1]]) as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow!("string field is not UTF-8"))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(
+            n.checked_mul(4)
+                .ok_or_else(|| anyhow!("float array length overflow"))?,
+        )?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Read one frame from a stream into a recycled `scratch` payload buffer.
+/// Used by wire clients (and tests); the server's reader adds EOF
+/// tolerance on top of the same path.
+pub fn read_frame(
+    r: &mut impl Read,
+    scratch: &mut Vec<u8>,
+    max_frame_bytes: usize,
+) -> Result<Frame> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header)?;
+    let (ftype, payload_len) = parse_header(&header, max_frame_bytes)?;
+    scratch.clear();
+    scratch.resize(payload_len, 0);
+    r.read_exact(scratch)?;
+    Frame::decode_payload(ftype, scratch)
+}
+
+/// Encode into a recycled `scratch` buffer and write + flush.
+pub fn write_frame(
+    w: &mut impl Write,
+    frame: &Frame,
+    scratch: &mut Vec<u8>,
+) -> Result<()> {
+    frame.encode_into(scratch);
+    w.write_all(scratch)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Builds a [`Deployment`] for a hot-swap control frame:
+/// `(model, artifacts_dir) -> Deployment`. The CLI supplies one that
+/// loads artifacts with the serve-time engine options; tests supply toys.
+pub type BackendFactory =
+    Box<dyn Fn(&str, &str) -> Result<Deployment> + Send + Sync>;
+
+/// Listener policy knobs (resolved by the caller; the env layer is
+/// `RT3D_LISTEN` / `RT3D_MAX_FRAME_MB` via [`crate::util::env`]).
+pub struct NetServerConfig {
+    /// Per-frame payload cap; larger request frames close the connection
+    /// with [`ERR_BAD_FRAME`].
+    pub max_frame_bytes: usize,
+    /// Honor [`Frame::Shutdown`] (CI drives clean teardown over the wire;
+    /// off by default).
+    pub allow_shutdown: bool,
+    /// Default artifacts dir for [`Frame::Swap`] frames with an empty
+    /// `dir` (`rt3d serve --swap-artifacts DIR`).
+    pub swap_dir: Option<String>,
+    /// Server config for swapped-in deployments (match the serve-time
+    /// batching/worker shape).
+    pub swap_server_cfg: ServerConfig,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        Self {
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            allow_shutdown: false,
+            swap_dir: None,
+            swap_server_cfg: ServerConfig::default(),
+        }
+    }
+}
+
+impl NetServerConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn max_frame_bytes(mut self, n: usize) -> Self {
+        self.max_frame_bytes = n.max(HEADER_LEN);
+        self
+    }
+
+    pub fn allow_shutdown(mut self, yes: bool) -> Self {
+        self.allow_shutdown = yes;
+        self
+    }
+
+    pub fn swap_dir(mut self, dir: Option<String>) -> Self {
+        self.swap_dir = dir;
+        self
+    }
+
+    pub fn swap_server_cfg(mut self, cfg: ServerConfig) -> Self {
+        self.swap_server_cfg = cfg;
+        self
+    }
+}
+
+/// What a connection's writer thread sends back to its client.
+enum ConnOut {
+    Response { client_id: u64, resp: Response },
+    SwapDone { ok: bool, msg: String },
+    Error { code: u8, msg: String },
+    Bye,
+}
+
+/// Where a routed response should be delivered: which connection, and
+/// which client-side correlation id to stamp on the frame.
+struct PendingSlot {
+    client_id: u64,
+    out: Sender<ConnOut>,
+}
+
+#[derive(Default)]
+struct DemuxState {
+    /// Server-side id → destination, registered by the reader right after
+    /// admission.
+    pending: HashMap<u64, PendingSlot>,
+    /// Responses that beat their registration (worker finished between
+    /// `try_submit` returning and the slot insert); the reader claims
+    /// them immediately after registering.
+    unclaimed: HashMap<u64, Response>,
+}
+
+struct Shared {
+    router: Arc<Router>,
+    cfg: NetServerConfig,
+    factory: Option<BackendFactory>,
+    stop: AtomicBool,
+    local_addr: SocketAddr,
+    /// Stream clones for force-closing lingering connections at shutdown.
+    conns: Mutex<Vec<TcpStream>>,
+    conn_threads: Mutex<Vec<JoinHandle<()>>>,
+    /// Per-model response demux state (model set fixed at bind).
+    demux: HashMap<String, Mutex<DemuxState>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The running network front door. Owns the acceptor, one demux thread
+/// per model, and every connection's reader/writer pair.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    acceptor: Option<JoinHandle<()>>,
+    demuxers: Vec<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind and start serving. Takes exclusive ownership of every model's
+    /// response stream ([`Router::take_responses`]) — in-process
+    /// [`Router::drain`] is unavailable while the net server runs.
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        router: Arc<Router>,
+        cfg: NetServerConfig,
+        factory: Option<BackendFactory>,
+    ) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let mut demux = HashMap::new();
+        let mut streams = Vec::new();
+        for model in router.models() {
+            let rx = router.take_responses(&model).ok_or_else(|| {
+                anyhow!("response stream for {model:?} already taken")
+            })?;
+            demux.insert(model.clone(), Mutex::new(DemuxState::default()));
+            streams.push((model, rx));
+        }
+        let shared = Arc::new(Shared {
+            router,
+            cfg,
+            factory,
+            stop: AtomicBool::new(false),
+            local_addr,
+            conns: Mutex::new(Vec::new()),
+            conn_threads: Mutex::new(Vec::new()),
+            demux,
+        });
+        let mut demuxers = Vec::with_capacity(streams.len());
+        for (model, rx) in streams {
+            let s = shared.clone();
+            demuxers.push(
+                std::thread::Builder::new()
+                    .name(format!("rt3d-net-demux-{model}"))
+                    .spawn(move || demux_loop(&s, &model, rx))
+                    .map_err(|e| anyhow!("spawn demux thread: {e}"))?,
+            );
+        }
+        let s = shared.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("rt3d-net-accept".into())
+            .spawn(move || accept_loop(&s, &listener))
+            .map_err(|e| anyhow!("spawn acceptor thread: {e}"))?;
+        Ok(NetServer { shared, acceptor: Some(acceptor), demuxers })
+    }
+
+    /// The bound address (resolves `--listen 127.0.0.1:0` to the real
+    /// ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.local_addr
+    }
+
+    /// Block until a shutdown is requested (a [`Frame::Shutdown`] control
+    /// frame with `allow_shutdown`, or [`NetServer::shutdown`] from
+    /// another thread via a shared handle is not possible — call this
+    /// from the serving main thread, then `shutdown()` to join the rest).
+    pub fn wait(&mut self) {
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+    }
+
+    /// Stop accepting, force-close lingering connections, and join every
+    /// thread. In-flight responses already queued to writers are sent
+    /// best-effort before their sockets close.
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // Wake the acceptor out of `accept()` with a throwaway connect.
+        let _ = TcpStream::connect(self.shared.local_addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        // Give writers a beat to flush queued responses, then force-close
+        // so readers blocked in read_exact unblock.
+        std::thread::sleep(Duration::from_millis(50));
+        for c in lock(&self.shared.conns).drain(..) {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+        let handles: Vec<_> = lock(&self.shared.conn_threads).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        for d in self.demuxers.drain(..) {
+            let _ = d.join();
+        }
+    }
+}
+
+/// Route responses off one model's shared channel to the connection that
+/// submitted each request.
+fn demux_loop(shared: &Shared, model: &str, rx: Receiver<Response>) {
+    let state = &shared.demux[model];
+    loop {
+        match rx.recv_timeout(Duration::from_millis(200)) {
+            Ok(resp) => {
+                let mut st = lock(state);
+                match st.pending.remove(&resp.id) {
+                    Some(slot) => {
+                        // Writer gone (connection died): drop the response.
+                        let _ = slot
+                            .out
+                            .send(ConnOut::Response { client_id: slot.client_id, resp });
+                    }
+                    None => {
+                        st.unclaimed.insert(resp.id, resp);
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+fn accept_loop(shared: &Arc<Shared>, listener: &TcpListener) {
+    for conn in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = conn else { continue };
+        if let Ok(clone) = stream.try_clone() {
+            lock(&shared.conns).push(clone);
+        }
+        let s = shared.clone();
+        match std::thread::Builder::new()
+            .name("rt3d-net-conn".into())
+            .spawn(move || handle_conn(stream, &s))
+        {
+            Ok(h) => lock(&shared.conn_threads).push(h),
+            Err(_) => continue, // spawn failure: drop the connection
+        }
+    }
+}
+
+/// Sniff the first four bytes: HTTP GET or binary protocol.
+fn handle_conn(mut stream: TcpStream, shared: &Arc<Shared>) {
+    let mut first = [0u8; 4];
+    if stream.read_exact(&mut first).is_err() {
+        return;
+    }
+    if &first == b"GET " {
+        handle_http(stream, shared);
+    } else if first == MAGIC {
+        handle_binary(stream, shared);
+    } else {
+        // Not our protocol: answer with a typed error and close.
+        let mut scratch = Vec::new();
+        let _ = write_frame(
+            &mut stream,
+            &Frame::Error {
+                code: ERR_BAD_FRAME,
+                msg: "bad magic (want \"RT3D\" or \"GET \")".into(),
+            },
+            &mut scratch,
+        );
+        let _ = stream.shutdown(Shutdown::Both);
+    }
+}
+
+/// One-shot HTTP/1.1 responder (`"GET "` already consumed).
+fn handle_http(mut stream: TcpStream, shared: &Shared) {
+    // Read the rest of the request head, bounded; the path is the first
+    // token after the consumed method.
+    let mut head = Vec::with_capacity(256);
+    let mut byte = [0u8; 1];
+    while head.len() < 8192 && !head.ends_with(b"\r\n\r\n") {
+        match stream.read(&mut byte) {
+            Ok(1) => head.push(byte[0]),
+            _ => break,
+        }
+    }
+    let path_end = head.iter().position(|&b| b == b' ').unwrap_or(head.len());
+    let path = String::from_utf8_lossy(&head[..path_end]);
+    let (status, body) = if path == "/metrics" {
+        ("200 OK", render_prometheus(&shared.router.metrics_all()))
+    } else {
+        ("404 Not Found", format!("no route {path}; try GET /metrics\n"))
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(resp.as_bytes());
+    let _ = stream.flush();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Binary protocol reader: decode frames off the socket, feed the
+/// router, register response slots. The paired writer thread owns the
+/// write half; responses reach it through the demux.
+fn handle_binary(stream: TcpStream, shared: &Arc<Shared>) {
+    let Ok(write_half) = stream.try_clone() else { return };
+    let (out_tx, out_rx) = channel::<ConnOut>();
+    let writer = std::thread::Builder::new()
+        .name("rt3d-net-write".into())
+        .spawn(move || writer_loop(write_half, &out_rx));
+    let mut reader = BufReader::new(stream);
+    let mut scratch = Vec::new(); // recycled payload buffer
+    let max = shared.cfg.max_frame_bytes;
+    // First frame: the magic was consumed by the sniffer.
+    let mut skip_magic = true;
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let frame = match read_frame_server(&mut reader, &mut scratch, max, skip_magic) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // clean close
+            Err(e) => {
+                // Malformed/oversize: typed error, then close only this
+                // connection.
+                let _ = out_tx.send(ConnOut::Error { code: ERR_BAD_FRAME, msg: e.to_string() });
+                break;
+            }
+        };
+        skip_magic = false;
+        match frame {
+            Frame::Request { id: client_id, model, deadline_ms, label, clip } => {
+                let deadline = (deadline_ms > 0)
+                    .then(|| Duration::from_millis(u64::from(deadline_ms)));
+                let Some(state) = shared.demux.get(&model) else {
+                    let _ = out_tx.send(ConnOut::Error {
+                        code: ERR_UNKNOWN_MODEL,
+                        msg: format!("unknown model {model:?}"),
+                    });
+                    break;
+                };
+                match shared.router.try_submit(
+                    &model,
+                    clip,
+                    label.map(|l| l as usize),
+                    deadline,
+                ) {
+                    Ok((_dep, Admission::Accepted(server_id))) => {
+                        let mut st = lock(state);
+                        // Close the register-vs-respond race: the worker
+                        // may have answered already.
+                        if let Some(resp) = st.unclaimed.remove(&server_id) {
+                            let _ = out_tx.send(ConnOut::Response { client_id, resp });
+                        } else {
+                            st.pending.insert(
+                                server_id,
+                                PendingSlot { client_id, out: out_tx.clone() },
+                            );
+                        }
+                    }
+                    Ok((_dep, Admission::Shed(resp))) => {
+                        // Shed semantics over the wire: the synchronous
+                        // shed response becomes a response frame.
+                        let _ = out_tx.send(ConnOut::Response { client_id, resp });
+                    }
+                    Err(e) => {
+                        let _ = out_tx.send(ConnOut::Error {
+                            code: ERR_INTERNAL,
+                            msg: e.to_string(),
+                        });
+                        break;
+                    }
+                }
+            }
+            Frame::Swap { model, dir } => {
+                let verdict = match shared.factory.as_ref() {
+                    None => Err(anyhow!("hot swap disabled (no backend factory)")),
+                    Some(build) => {
+                        let dir = if dir.is_empty() {
+                            shared.cfg.swap_dir.clone().unwrap_or_default()
+                        } else {
+                            dir
+                        };
+                        build(&model, &dir).and_then(|dep| {
+                            let name = dep.name.clone();
+                            shared
+                                .router
+                                .stage(&model, dep, shared.cfg.swap_server_cfg.clone())
+                                .map(|retired| {
+                                    format!(
+                                        "swapped {model:?} to {name:?} (retired {retired:?})"
+                                    )
+                                })
+                        })
+                    }
+                };
+                let _ = out_tx.send(match verdict {
+                    Ok(msg) => ConnOut::SwapDone { ok: true, msg },
+                    Err(e) => ConnOut::SwapDone { ok: false, msg: e.to_string() },
+                });
+            }
+            Frame::Shutdown => {
+                if shared.cfg.allow_shutdown {
+                    let _ = out_tx.send(ConnOut::Bye);
+                    shared.stop.store(true, Ordering::SeqCst);
+                    // Wake the acceptor so NetServer::wait returns.
+                    let _ = TcpStream::connect(shared.local_addr);
+                } else {
+                    let _ = out_tx.send(ConnOut::Error {
+                        code: ERR_FORBIDDEN,
+                        msg: "remote shutdown disabled (start with --allow-shutdown)"
+                            .into(),
+                    });
+                }
+                break;
+            }
+            // Server-to-client frames arriving at the server are protocol
+            // violations.
+            Frame::Response { .. }
+            | Frame::SwapDone { .. }
+            | Frame::Error { .. }
+            | Frame::Bye => {
+                let _ = out_tx.send(ConnOut::Error {
+                    code: ERR_BAD_FRAME,
+                    msg: "unexpected server-to-client frame type".into(),
+                });
+                break;
+            }
+        }
+    }
+    // Drop our sender; the writer exits once every pending slot for this
+    // connection has been answered (their senders drop as the demux
+    // delivers), so a client that half-closed after its last request
+    // still receives every in-flight response before EOF.
+    drop(out_tx);
+    if let Ok(w) = writer {
+        let _ = w.join();
+    }
+}
+
+/// Server-side frame read: `Ok(None)` on a clean peer close (EOF at a
+/// frame boundary), `Err` on anything malformed.
+fn read_frame_server(
+    r: &mut impl Read,
+    scratch: &mut Vec<u8>,
+    max_frame_bytes: usize,
+    skip_magic: bool,
+) -> Result<Option<Frame>> {
+    let mut header = [0u8; HEADER_LEN];
+    let start = if skip_magic {
+        header[..4].copy_from_slice(&MAGIC);
+        4
+    } else {
+        0
+    };
+    match r.read_exact(&mut header[start..]) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof && !skip_magic => {
+            return Ok(None);
+        }
+        Err(e) => return Err(e.into()),
+    }
+    let (ftype, payload_len) = parse_header(&header, max_frame_bytes)?;
+    scratch.clear();
+    scratch.resize(payload_len, 0);
+    r.read_exact(scratch)?;
+    Frame::decode_payload(ftype, scratch).map(Some)
+}
+
+/// Connection writer: encode queued [`ConnOut`]s into one recycled buffer
+/// and stream them out. Exits when every sender (reader + pending demux
+/// slots) is gone, or on a write error; a typed error frame closes the
+/// socket immediately after sending.
+fn writer_loop(stream: TcpStream, rx: &Receiver<ConnOut>) {
+    let mut w = BufWriter::new(stream);
+    let mut buf = Vec::new();
+    while let Ok(out) = rx.recv() {
+        let close_after = matches!(out, ConnOut::Error { .. });
+        let frame = match out {
+            ConnOut::Response { client_id, resp } => Frame::Response {
+                id: client_id,
+                outcome: resp.outcome,
+                predicted: resp.predicted as u32,
+                latency_us: (resp.latency_s * 1e6) as u64,
+                logits: resp.logits,
+            },
+            ConnOut::SwapDone { ok, msg } => Frame::SwapDone { ok, msg },
+            ConnOut::Error { code, msg } => Frame::Error { code, msg },
+            ConnOut::Bye => Frame::Bye,
+        };
+        if write_frame(&mut w, &frame, &mut buf).is_err() {
+            return;
+        }
+        if close_after {
+            let _ = w.get_ref().shutdown(Shutdown::Both);
+            return;
+        }
+    }
+}
+
+/// Minimal blocking wire client: one connection, recycled frame buffers.
+/// Drives the loopback CI job (`examples/net_client.rs`), the serving
+/// bench's network section, and the protocol tests.
+pub struct NetClient {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    scratch_in: Vec<u8>,
+    scratch_out: Vec<u8>,
+    max_frame_bytes: usize,
+}
+
+impl NetClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Self {
+            stream,
+            reader,
+            scratch_in: Vec::new(),
+            scratch_out: Vec::new(),
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+        })
+    }
+
+    pub fn send(&mut self, frame: &Frame) -> Result<()> {
+        write_frame(&mut self.stream, frame, &mut self.scratch_out)
+    }
+
+    /// Blocking read of the next server frame.
+    pub fn recv(&mut self) -> Result<Frame> {
+        read_frame(&mut self.reader, &mut self.scratch_in, self.max_frame_bytes)
+    }
+
+    /// Submit one clip (convenience over [`Self::send`]).
+    pub fn request(
+        &mut self,
+        id: u64,
+        model: &str,
+        clip: Tensor5,
+        label: Option<u32>,
+        deadline_ms: u32,
+    ) -> Result<()> {
+        self.send(&Frame::Request {
+            id,
+            model: model.to_string(),
+            deadline_ms,
+            label,
+            clip,
+        })
+    }
+
+    /// Half-close the write side: the server drains in-flight responses,
+    /// then closes (the streaming "submit all, then read all" pattern).
+    pub fn finish_writes(&mut self) -> Result<()> {
+        self.stream.shutdown(Shutdown::Write)?;
+        Ok(())
+    }
+}
+
+/// One-shot HTTP scrape of `/metrics` from a listening net server.
+pub fn fetch_metrics(addr: impl ToSocketAddrs) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(
+        b"GET /metrics HTTP/1.1\r\nHost: rt3d\r\nConnection: close\r\n\r\n",
+    )?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow!("malformed HTTP response"))?;
+    if !head.starts_with("HTTP/1.1 200") {
+        return Err(anyhow!(
+            "GET /metrics failed: {}",
+            head.lines().next().unwrap_or("?")
+        ));
+    }
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_rejects_bad_magic_and_version() {
+        let mut buf = Vec::new();
+        Frame::Shutdown.encode_into(&mut buf);
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(Frame::decode(&bad, usize::MAX).is_err());
+        let mut vers = buf.clone();
+        vers[4] = 99;
+        assert!(Frame::decode(&vers, usize::MAX).is_err());
+        assert!(Frame::decode(&buf, usize::MAX).is_ok());
+    }
+
+    #[test]
+    fn oversize_cap_is_enforced() {
+        let mut buf = Vec::new();
+        Frame::Error { code: 1, msg: "x".repeat(100) }.encode_into(&mut buf);
+        let err = Frame::decode(&buf, 16).unwrap_err();
+        assert!(err.to_string().contains("oversize"), "err: {err}");
+    }
+
+    #[test]
+    fn request_batch_dim_must_be_one() {
+        let mut buf = Vec::new();
+        Frame::Request {
+            id: 1,
+            model: "m".into(),
+            deadline_ms: 0,
+            label: None,
+            clip: Tensor5::zeros([2, 1, 1, 1, 1]),
+        }
+        .encode_into(&mut buf);
+        let err = Frame::decode(&buf, usize::MAX).unwrap_err();
+        assert!(err.to_string().contains("batch dim"), "err: {err}");
+    }
+}

@@ -12,16 +12,30 @@
 //! one receiver instead of round-robin-polling every deployment (the old
 //! scheme paid a 200 ms `recv_timeout` on every idle deployment per
 //! loop). Callers correlate responses to submissions via [`Response::id`].
+//!
+//! The router is `Sync` (interior `RwLock` over the model table), so the
+//! network front door ([`super::net`]) can share one `Arc<Router>` across
+//! connection threads, and [`Router::stage`] can **hot-swap** a model's
+//! deployments while submissions keep flowing:
+//!
+//! 1. warm the incoming backend with one real forward on a forked handle
+//!    (a panic here aborts the swap and leaves the route untouched);
+//! 2. start its server on the *same* [`Route`] (response channel, id
+//!    allocator, metrics sink) as the deployments it replaces;
+//! 3. atomically flip the route table entry;
+//! 4. drain + shut down the old servers outside the lock — their
+//!    in-flight requests still deliver into the shared channel, so a
+//!    mid-stream client loses zero responses.
 
 use super::server::Route;
-use super::{Backend, Metrics, Response, Server, ServerConfig};
+use super::{Admission, Backend, Metrics, Response, Server, ServerConfig};
 use crate::anyhow;
 use crate::tensor::Tensor5;
 use crate::util::error::Result;
 use std::collections::HashMap;
 use std::sync::atomic::AtomicU64;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::Duration;
 
 /// How long [`Router::drain`] waits without *any* response arriving
@@ -53,54 +67,171 @@ pub enum Policy {
 
 struct ModelEntry {
     servers: Vec<(Deployment, Server)>,
-    /// Shared response stream for every deployment of this model.
-    resp_rx: Receiver<Response>,
-    /// Kept for handing to later-added deployments.
+    /// Shared response stream for every deployment of this model. Behind
+    /// `Arc<Mutex<Option<..>>>` so the network demux can *take* it
+    /// ([`Router::take_responses`]) while in-process callers keep using
+    /// [`Router::drain`] otherwise, and so `drain` can block on it after
+    /// releasing the model-table lock.
+    resp_rx: Arc<Mutex<Option<Receiver<Response>>>>,
+    /// Kept for handing to later-added / swapped-in deployments.
     resp_tx: SyncSender<Response>,
     /// Model-wide id allocator shared by every deployment's server, so
     /// ids on the shared channel are unique and correlate 1:1 with
-    /// submissions.
+    /// submissions — including across hot swaps.
     ids: Arc<AtomicU64>,
+    /// Model-wide metrics sink shared by every deployment (and every
+    /// swapped-in successor): `/metrics` keeps counting across swaps.
+    metrics: Arc<Metrics>,
 }
 
 /// The router owns one or more models, each with >=1 running deployment.
 pub struct Router {
-    models: HashMap<String, ModelEntry>,
+    models: RwLock<HashMap<String, ModelEntry>>,
     policy: Policy,
 }
 
 impl Router {
     pub fn new(policy: Policy) -> Self {
-        Self { models: HashMap::new(), policy }
+        Self { models: RwLock::new(HashMap::new()), policy }
+    }
+
+    // Poison-tolerant lock helpers: a panicking backend thread must never
+    // wedge the route table (same policy as the coordinator's other locks).
+    fn read(&self) -> RwLockReadGuard<'_, HashMap<String, ModelEntry>> {
+        self.models.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn write(&self) -> RwLockWriteGuard<'_, HashMap<String, ModelEntry>> {
+        self.models.write().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Register a model deployment and start its server (routed into the
     /// model's shared response channel).
-    pub fn add_deployment(
-        &mut self,
-        model: &str,
-        dep: Deployment,
-        cfg: ServerConfig,
-    ) {
-        let entry = self.models.entry(model.to_string()).or_insert_with(|| {
+    pub fn add_deployment(&self, model: &str, dep: Deployment, cfg: ServerConfig) {
+        let mut models = self.write();
+        let entry = models.entry(model.to_string()).or_insert_with(|| {
             let (resp_tx, resp_rx) = sync_channel::<Response>(256);
             ModelEntry {
                 servers: Vec::new(),
-                resp_rx,
+                resp_rx: Arc::new(Mutex::new(Some(resp_rx))),
                 resp_tx,
                 ids: Arc::new(AtomicU64::new(0)),
+                metrics: Arc::new(Metrics::default()),
             }
         });
         let server = Server::start_routed(
             dep.engine.clone(),
             cfg,
-            Route { resp_tx: entry.resp_tx.clone(), ids: entry.ids.clone() },
+            Route {
+                resp_tx: entry.resp_tx.clone(),
+                ids: entry.ids.clone(),
+                metrics: entry.metrics.clone(),
+            },
         );
         entry.servers.push((dep, server));
     }
 
-    pub fn models(&self) -> Vec<&str> {
-        self.models.keys().map(|s| s.as_str()).collect()
+    /// Hot model swap: warm `dep`, start it on the model's existing
+    /// [`Route`], atomically replace the active deployment set, then
+    /// drain + shut down the replaced servers. Returns the names of the
+    /// retired deployments.
+    ///
+    /// In-flight requests on the old servers still deliver into the
+    /// shared response channel during the drain, and the new server
+    /// allocates ids from the same counter — a concurrent submitter sees
+    /// every response exactly once, with no id collisions and no dropped
+    /// or failed windows attributable to the swap.
+    ///
+    /// Warm-up runs one real forward (zero clip of the backend's native
+    /// geometry) on a forked handle, outside any lock, under
+    /// `catch_unwind`: a backend that cannot execute is rejected *before*
+    /// it takes traffic, and the current route keeps serving. Backends
+    /// without fixed input dims (shape-agnostic toys) skip the forward.
+    pub fn stage(
+        &self,
+        model: &str,
+        dep: Deployment,
+        cfg: ServerConfig,
+    ) -> Result<Vec<String>> {
+        // Clone the route under a read lock; warm + spawn outside locks.
+        let route = {
+            let models = self.read();
+            let entry = models
+                .get(model)
+                .ok_or_else(|| anyhow!("unknown model {model:?}"))?;
+            Route {
+                resp_tx: entry.resp_tx.clone(),
+                ids: entry.ids.clone(),
+                metrics: entry.metrics.clone(),
+            }
+        };
+        warm(&dep.engine)
+            .map_err(|e| anyhow!("staging {:?} for {model:?}: {e}", dep.name))?;
+        let server = Server::start_routed(dep.engine.clone(), cfg, route);
+        let old = {
+            let mut models = self.write();
+            match models.get_mut(model) {
+                Some(entry) => {
+                    std::mem::replace(&mut entry.servers, vec![(dep, server)])
+                }
+                None => {
+                    // Model vanished between the read and write lock (no
+                    // public removal path today, but don't leak threads).
+                    server.shutdown();
+                    return Err(anyhow!("unknown model {model:?}"));
+                }
+            }
+        };
+        // The flip is done; retire the old servers outside the lock so
+        // concurrent submitters already land on the new deployment while
+        // in-flight batches finish draining into the shared channel.
+        let mut retired = Vec::with_capacity(old.len());
+        for (old_dep, old_server) in old {
+            old_server.shutdown();
+            retired.push(old_dep.name);
+        }
+        Ok(retired)
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.read().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Active deployment names for one model (post-swap inspection).
+    pub fn deployments(&self, model: &str) -> Vec<String> {
+        self.read()
+            .get(model)
+            .map(|e| e.servers.iter().map(|(d, _)| d.name.clone()).collect())
+            .unwrap_or_default()
+    }
+
+    /// The model's shared metrics sink (all deployments, surviving swaps).
+    pub fn metrics(&self, model: &str) -> Option<Arc<Metrics>> {
+        self.read().get(model).map(|e| e.metrics.clone())
+    }
+
+    /// Every model's metrics sink, sorted by model name (stable render
+    /// order for the `/metrics` endpoint).
+    pub fn metrics_all(&self) -> Vec<(String, Arc<Metrics>)> {
+        let models = self.read();
+        let mut out: Vec<(String, Arc<Metrics>)> = models
+            .iter()
+            .map(|(name, e)| (name.clone(), e.metrics.clone()))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Take exclusive ownership of a model's response stream (the network
+    /// demux does this once per model at bind). `None` for an unknown
+    /// model or when it was already taken — after which [`Router::drain`]
+    /// on that model errors rather than blocking forever.
+    pub fn take_responses(&self, model: &str) -> Option<Receiver<Response>> {
+        let models = self.read();
+        let entry = models.get(model)?;
+        entry.resp_rx.lock().unwrap_or_else(|e| e.into_inner()).take()
     }
 
     fn pick(&self, entry: &ModelEntry, deadline_s: Option<f64>) -> usize {
@@ -153,8 +284,8 @@ impl Router {
         label: Option<usize>,
         deadline_s: Option<f64>,
     ) -> Result<(String, u64)> {
-        let entry = self
-            .models
+        let models = self.read();
+        let entry = models
             .get(model)
             .ok_or_else(|| anyhow!("unknown model {model:?}"))?;
         let i = self.pick(entry, deadline_s);
@@ -171,17 +302,53 @@ impl Router {
         Ok((dep.name.clone(), id))
     }
 
-    /// Drain `n` responses for a model from its shared channel (all
-    /// deployments deliver there; correlate by [`Response::id`]). Errors
-    /// when no response arrives for `DRAIN_STALL_TIMEOUT`.
-    pub fn drain(&self, model: &str, n: usize) -> Result<Vec<Response>> {
-        let entry = self
-            .models
+    /// Non-blocking admission through the route: the wire front door for
+    /// each network request ([`super::net`] maps request frames here), so
+    /// TCP clients get the identical shedding/deadline semantics as
+    /// in-process [`Server::try_submit`] callers. Returns the picked
+    /// deployment name and the [`Admission`] verdict.
+    pub fn try_submit(
+        &self,
+        model: &str,
+        clip: Tensor5,
+        label: Option<usize>,
+        deadline: Option<Duration>,
+    ) -> Result<(String, Admission)> {
+        let models = self.read();
+        let entry = models
             .get(model)
             .ok_or_else(|| anyhow!("unknown model {model:?}"))?;
+        let i = self.pick(entry, deadline.map(|d| d.as_secs_f64()));
+        let (dep, server) = &entry.servers[i];
+        let adm = server
+            .try_submit(clip, label, deadline)
+            .map_err(|e| anyhow!("deployment {:?} of {model:?}: {e}", dep.name))?;
+        Ok((dep.name.clone(), adm))
+    }
+
+    /// Drain `n` responses for a model from its shared channel (all
+    /// deployments deliver there; correlate by [`Response::id`]). Errors
+    /// when no response arrives for `DRAIN_STALL_TIMEOUT`, or when the
+    /// stream was taken by [`Router::take_responses`].
+    pub fn drain(&self, model: &str, n: usize) -> Result<Vec<Response>> {
+        // Clone the stream handle, then release the model-table lock
+        // before blocking — a concurrent stage() must not deadlock behind
+        // a drain.
+        let rx_slot = {
+            let models = self.read();
+            models
+                .get(model)
+                .ok_or_else(|| anyhow!("unknown model {model:?}"))?
+                .resp_rx
+                .clone()
+        };
+        let guard = rx_slot.lock().unwrap_or_else(|e| e.into_inner());
+        let rx = guard.as_ref().ok_or_else(|| {
+            anyhow!("response stream for {model:?} was taken (net demux owns it)")
+        })?;
         let mut out = Vec::with_capacity(n);
         while out.len() < n {
-            match entry.resp_rx.recv_timeout(DRAIN_STALL_TIMEOUT) {
+            match rx.recv_timeout(DRAIN_STALL_TIMEOUT) {
                 Ok(resp) => out.push(resp),
                 Err(_) => {
                     return Err(anyhow!(
@@ -196,14 +363,41 @@ impl Router {
     }
 
     /// Shut down every server, returning (model, deployment, metrics).
+    /// The metrics sink is shared per model, so multiple deployments of
+    /// one model report the same (model-wide) counters.
     pub fn shutdown(self) -> Vec<(String, String, Arc<Metrics>)> {
+        let models = self.models.into_inner().unwrap_or_else(|e| e.into_inner());
         let mut out = Vec::new();
-        for (model, entry) in self.models {
+        for (model, entry) in models {
             for (dep, server) in entry.servers {
-                out.push((model.clone(), dep.name, server.shutdown()));
+                server.shutdown();
+                out.push((model.clone(), dep.name, entry.metrics.clone()));
             }
         }
+        out.sort_by(|a, b| (&a.0, &a.1).cmp(&(&b.0, &b.1)));
         out
+    }
+}
+
+/// One real forward on a forked handle, under `catch_unwind` — the
+/// swap-time proof that an incoming backend can actually execute.
+fn warm(engine: &Arc<dyn Backend>) -> Result<()> {
+    let Some([c, d, h, w]) = engine.input_dims() else {
+        return Ok(()); // shape-agnostic backend: nothing to warm against
+    };
+    let handle = engine.fork().unwrap_or_else(|| engine.clone());
+    let clip = Tensor5::zeros([1, c, d, h, w]);
+    let result =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            handle.infer(clip)
+        }));
+    match result {
+        Ok(logits) if logits.rows == 1 => Ok(()),
+        Ok(logits) => Err(anyhow!(
+            "warm-up forward returned {} rows for a 1-clip batch",
+            logits.rows
+        )),
+        Err(_) => Err(anyhow!("warm-up forward panicked")),
     }
 }
 
@@ -222,6 +416,7 @@ fn fastest(deps: &[&Deployment]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Outcome;
     use crate::tensor::Mat;
 
     struct Tagged(f32);
@@ -248,7 +443,7 @@ mod tests {
     }
 
     fn router(policy: Policy) -> Router {
-        let mut r = Router::new(policy);
+        let r = Router::new(policy);
         // dense: slow + accurate; sparse: fast + slightly less accurate.
         r.add_deployment("m", dep("dense", 1.0, 0.9, 0.80), ServerConfig::default());
         r.add_deployment("m", dep("sparse", 2.0, 0.3, 0.78), ServerConfig::default());
@@ -296,7 +491,6 @@ mod tests {
 
     #[test]
     fn deadline_propagates_to_execution_shedding() {
-        use crate::coordinator::Outcome;
         // 50 ms service time against a 5 ms deadline queued behind another
         // request: by the time its batch reaches the worker the deadline
         // is unmeetable, so it must come back DeadlineExceeded — proof the
@@ -312,7 +506,7 @@ mod tests {
                 "slow".into()
             }
         }
-        let mut r = Router::new(Policy::Deadline);
+        let r = Router::new(Policy::Deadline);
         r.add_deployment(
             "m",
             Deployment {
@@ -343,21 +537,28 @@ mod tests {
     fn unknown_model_errors() {
         let r = router(Policy::BestAccuracy);
         assert!(r.submit("nope", clip(), None, None).is_err());
+        assert!(r.stage("nope", dep("x", 9.0, 0.1, 0.5), ServerConfig::default()).is_err());
         r.shutdown();
     }
 
     #[test]
-    fn metrics_per_deployment() {
+    fn metrics_shared_per_model_survive_routing() {
+        // All deployments of one model record into one sink: counters are
+        // a property of the model's route, not of whichever engine
+        // happened to serve — the invariant that keeps `/metrics` stable
+        // across hot swaps.
         let r = router(Policy::LowestLatency);
         for _ in 0..3 {
             r.submit("m", clip(), Some(0), None).unwrap();
         }
         r.drain("m", 3).unwrap();
+        let m = r.metrics("m").expect("model metrics");
+        assert_eq!(m.count(), 3);
         let stats = r.shutdown();
-        let sparse = stats.iter().find(|(_, d, _)| d == "sparse").unwrap();
-        assert_eq!(sparse.2.count(), 3);
-        let dense = stats.iter().find(|(_, d, _)| d == "dense").unwrap();
-        assert_eq!(dense.2.count(), 0);
+        assert_eq!(stats.len(), 2, "both deployments reported");
+        for (_, _, metrics) in &stats {
+            assert_eq!(metrics.count(), 3, "shared model-wide sink");
+        }
     }
 
     #[test]
@@ -376,6 +577,86 @@ mod tests {
             assert!(ids.remove(&resp.id), "unknown id {}", resp.id);
         }
         assert!(ids.is_empty());
+        r.shutdown();
+    }
+
+    #[test]
+    fn stage_swaps_mid_stream_without_losing_responses() {
+        let r = Router::new(Policy::BestAccuracy);
+        r.add_deployment("m", dep("v1", 1.0, 0.1, 0.8), ServerConfig::default());
+        let mut ids = Vec::new();
+        for _ in 0..10 {
+            ids.push(r.submit("m", clip(), None, None).unwrap().1);
+        }
+        let retired = r
+            .stage("m", dep("v2", 2.0, 0.1, 0.9), ServerConfig::default())
+            .unwrap();
+        assert_eq!(retired, vec!["v1".to_string()]);
+        assert_eq!(r.deployments("m"), vec!["v2".to_string()]);
+        for _ in 0..10 {
+            ids.push(r.submit("m", clip(), None, None).unwrap().1);
+        }
+        // Exactly 20 responses, every id answered once, every window Ok;
+        // pre-swap ids carry v1's tag, post-swap ids carry v2's.
+        let resps = r.drain("m", 20).unwrap();
+        let mut expect: std::collections::HashSet<u64> =
+            ids.iter().copied().collect();
+        assert_eq!(expect.len(), 20, "ids stay unique across the swap");
+        for resp in &resps {
+            assert!(expect.remove(&resp.id), "unknown/duplicate id {}", resp.id);
+            assert_eq!(resp.outcome, Outcome::Ok);
+            let want = if resp.id < 10 { 1.0 } else { 2.0 };
+            assert_eq!(resp.logits[0], want, "id {} served by wrong engine", resp.id);
+        }
+        assert!(expect.is_empty(), "responses dropped across swap");
+        // The shared sink counted both halves.
+        assert_eq!(r.metrics("m").unwrap().snapshot().ok, 20);
+        r.shutdown();
+    }
+
+    #[test]
+    fn stage_rejects_backend_that_fails_warm_up() {
+        // A backend that panics on its warm-up forward must not take the
+        // route; the incumbent keeps serving.
+        struct Bomb;
+        impl Backend for Bomb {
+            fn infer(&self, _batch: Tensor5) -> Mat {
+                panic!("dead on arrival");
+            }
+            fn name(&self) -> String {
+                "bomb".into()
+            }
+            fn input_dims(&self) -> Option<[usize; 4]> {
+                Some([1, 1, 1, 1]) // fixed geometry -> warm-up runs
+            }
+        }
+        let r = Router::new(Policy::BestAccuracy);
+        r.add_deployment("m", dep("good", 1.0, 0.1, 0.8), ServerConfig::default());
+        let bad = Deployment {
+            name: "bomb".into(),
+            engine: Arc::new(Bomb),
+            expected_latency_s: 0.1,
+            accuracy: Some(0.99),
+        };
+        let err = r.stage("m", bad, ServerConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("warm-up"), "err: {err}");
+        assert_eq!(r.deployments("m"), vec!["good".to_string()]);
+        // Still serving on the incumbent.
+        r.submit("m", clip(), None, None).unwrap();
+        assert_eq!(r.drain("m", 1).unwrap()[0].outcome, Outcome::Ok);
+        r.shutdown();
+    }
+
+    #[test]
+    fn take_responses_is_exclusive_and_drain_errors_after() {
+        let r = router(Policy::LowestLatency);
+        let rx = r.take_responses("m").expect("first take");
+        assert!(r.take_responses("m").is_none(), "second take yields None");
+        assert!(r.take_responses("nope").is_none());
+        let (_, id) = r.submit("m", clip(), None, None).unwrap();
+        assert_eq!(rx.recv().unwrap().id, id);
+        let err = r.drain("m", 1).unwrap_err();
+        assert!(err.to_string().contains("taken"), "err: {err}");
         r.shutdown();
     }
 }

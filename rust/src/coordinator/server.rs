@@ -215,6 +215,11 @@ pub struct Server {
 pub struct Route {
     pub resp_tx: SyncSender<Response>,
     pub ids: Arc<AtomicU64>,
+    /// Shared metrics sink. Every server delivering into this route
+    /// records into the same counters, so model-level metrics survive hot
+    /// swaps (a swapped-in deployment continues the story, it does not
+    /// reset `/metrics`).
+    pub metrics: Arc<Metrics>,
 }
 
 impl Server {
@@ -224,7 +229,11 @@ impl Server {
         Self::launch(
             backend,
             cfg,
-            Route { resp_tx, ids: Arc::new(AtomicU64::new(0)) },
+            Route {
+                resp_tx,
+                ids: Arc::new(AtomicU64::new(0)),
+                metrics: Arc::new(Metrics::default()),
+            },
             Some(resp_rx),
         )
     }
@@ -247,13 +256,12 @@ impl Server {
         route: Route,
         resp_rx: Option<Receiver<Response>>,
     ) -> Self {
-        let Route { resp_tx, ids: next_id } = route;
+        let Route { resp_tx, ids: next_id, metrics } = route;
         let n_workers = cfg.workers.max(1);
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         // One queued batch per worker: enough to keep every worker fed,
         // small enough that back-pressure reaches submitters quickly.
         let (batch_tx, batch_rx) = sync_channel::<Vec<Request>>(n_workers);
-        let metrics = Arc::new(Metrics::default());
         let batcher_cfg = cfg.batcher.clone();
         let batcher = std::thread::Builder::new()
             .name("rt3d-batcher".into())

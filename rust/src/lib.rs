@@ -86,6 +86,29 @@
 //! bit-identical to a fault-free run. Not isolated: panics on threads a
 //! backend spawns itself still abort the process.
 //!
+//! # Wire protocol
+//!
+//! `rt3d serve --listen ADDR` (or `RT3D_LISTEN`) puts the same pipeline
+//! behind a TCP socket ([`coordinator::net`]). The protocol is a
+//! length-prefixed binary framing — every frame is a 12-byte header
+//! (`"RT3D"` magic, version byte = 1, frame-type byte, 2 reserved bytes,
+//! `payload_len: u32`) followed by the payload; all integers
+//! little-endian, floats f32 LE bit patterns, so the stack's
+//! bit-identity invariant extends across the wire. Frame types: 1
+//! Request (client id, model, deadline-ms, optional label, one NCDHW
+//! clip), 2 Response (client id, outcome tag, predicted class,
+//! latency-µs, logits), 3 Swap / 4 SwapDone (hot model swap via
+//! [`coordinator::Router::stage`]), 5 Error (typed; closes only that
+//! connection), 6 Shutdown / 7 Bye (clean remote stop, opt-in via
+//! `--allow-shutdown`). [`coordinator::Outcome`] rides byte-sized tags:
+//! 0 `Ok`, 1 `Failed`, 2 `Shed`, 3 `DeadlineExceeded` — a wire client
+//! sees exactly the admission / shedding / deadline semantics of an
+//! in-process caller. A connection whose first bytes are `"GET "`
+//! instead of the magic is answered as HTTP/1.1: `GET /metrics` renders
+//! every model's counters in Prometheus text format
+//! ([`coordinator::render_prometheus`]) on the same listener. Frames
+//! above `RT3D_MAX_FRAME_MB` (default 64) are rejected per connection.
+//!
 //! # Layers
 //!
 //! * `runtime` — PJRT client loading the AOT HLO artifacts produced by
@@ -103,7 +126,7 @@
 //!   (the off-the-shelf-mobile substitute, DESIGN.md §2).
 //! * [`coordinator`] — the backend-agnostic serving runtime: request
 //!   router, clip batcher, pipelined multi-worker server, streaming
-//!   sessions, metrics.
+//!   sessions, metrics, and the TCP front door (`net`).
 //! * [`workload`] — synthetic clip + request-trace generators for benches.
 
 pub mod codegen;

@@ -4,10 +4,13 @@
 //! through artifacts built once by `make artifacts` (python never runs on
 //! the request path).
 
-use rt3d::coordinator::{Backend, FaultBackend, FaultPlan, Server, ServerConfig};
+use rt3d::coordinator::{
+    Backend, BackendFactory, Deployment, FaultBackend, FaultPlan, NetServer,
+    NetServerConfig, Policy, Router, ServerConfig,
+};
 use rt3d::device::ExecutorClass;
 use rt3d::executors::{EngineKind, NaiveBackend, NativeEngine};
-use rt3d::model::Model;
+use rt3d::model::{Model, SyntheticC3d};
 use rt3d::util::args::Args;
 use rt3d::workload;
 use std::sync::Arc;
@@ -19,7 +22,8 @@ USAGE: rt3d [--artifacts DIR] <serve|bench|tune|inspect|env> [options]
 
   serve    --model c3d --backend rt3d|naive|untuned|pjrt [--sparse] \
            [--requests 32] [--max-batch 4] [--threads N] [--workers W] \
-           [--variant dense_xla_b1] [--faults PLAN]
+           [--variant dense_xla_b1] [--faults PLAN] [--listen ADDR] \
+           [--swap-artifacts DIR] [--allow-shutdown]
   bench    --table 2|3|cache
   tune     --model c3d [--reps 3]
   inspect  --model c3d
@@ -33,10 +37,22 @@ compiled model (total parallelism ~ W x threads). --backend pjrt needs
 a build with `--features pjrt`. (--engine is accepted as the old
 spelling of --backend.)
 
+--listen ADDR (or RT3D_LISTEN; --listen wins) serves over TCP instead
+of self-driving: a length-prefixed binary frame protocol (crate docs,
+\"Wire protocol\") mapped onto the same admission/deadline pipeline,
+plus GET /metrics (Prometheus text) on the same port. :0 picks an
+ephemeral port, printed as `listening on ADDR`. --allow-shutdown lets
+a client stop the server with a Shutdown frame (CI teardown).
+--swap-artifacts DIR sets the artifacts dir hot-swap control frames
+load from (and, in self-drive mode, triggers one mid-stream swap).
+Without artifacts the synthetic in-memory C3D model serves instead.
+
 --faults PLAN (or RT3D_FAULTS; --faults wins) wraps the backend in the
 deterministic fault injector, e.g. panic@0.02,slow=5ms@0.1,seed=7 —
 injected panics become per-request failed responses, not crashes; the
-serve summary then reports shed/failed/panic counters.
+serve summary prints the same Metrics::snapshot() counters /metrics
+exports. Hot-swapped-in backends are not fault-wrapped: a swap is the
+operator's remediation path.
 ";
 
 fn main() -> rt3d::Result<()> {
@@ -50,21 +66,28 @@ fn main() -> rt3d::Result<()> {
                 .or_else(|| args.get("engine"))
                 .unwrap_or(if args.flag("pjrt") { "pjrt" } else { "rt3d" })
                 .to_string();
-            serve(
-                &artifacts,
-                &args.get_or("model", "c3d"),
-                &backend,
-                args.flag("sparse"),
-                args.get_usize("requests", 32),
-                args.get_usize("max-batch", 4),
-                args.get_usize("threads", 0),
-                args.get_usize("workers", 1),
-                &args.get_or("variant", "dense_xla_b1"),
+            serve(ServeOpts {
+                artifacts: artifacts.clone(),
+                model: args.get_or("model", "c3d"),
+                backend,
+                sparse: args.flag("sparse"),
+                requests: args.get_usize("requests", 32),
+                max_batch: args.get_usize("max-batch", 4),
+                threads: args.get_usize("threads", 0),
+                workers: args.get_usize("workers", 1),
+                variant: args.get_or("variant", "dense_xla_b1"),
                 // CLI wins over the RT3D_FAULTS knob, like --threads.
-                args.get("faults")
+                faults: args
+                    .get("faults")
                     .map(str::to_string)
                     .or_else(rt3d::util::env::faults),
-            )
+                listen: args
+                    .get("listen")
+                    .map(str::to_string)
+                    .or_else(rt3d::util::env::listen),
+                swap_artifacts: args.get("swap-artifacts").map(str::to_string),
+                allow_shutdown: args.flag("allow-shutdown"),
+            })
         }
         Some("bench") => match args.get_or("table", "2").as_str() {
             "2" => rt3d_bench::table2(&artifacts),
@@ -121,53 +144,166 @@ fn build_backend(
     Ok(Arc::new(builder.build()))
 }
 
-#[allow(clippy::too_many_arguments)]
-fn serve(
-    artifacts: &str,
-    model_name: &str,
-    backend: &str,
+/// Everything `rt3d serve` needs, CLI-resolved (flag > env > default).
+#[derive(Clone)]
+struct ServeOpts {
+    artifacts: String,
+    model: String,
+    backend: String,
     sparse: bool,
     requests: usize,
     max_batch: usize,
     threads: usize,
     workers: usize,
-    variant: &str,
+    variant: String,
     faults: Option<String>,
-) -> rt3d::Result<()> {
-    let model = Model::load(artifacts, model_name)?;
+    listen: Option<String>,
+    swap_artifacts: Option<String>,
+    allow_shutdown: bool,
+}
+
+/// Load the named model, falling back to the in-memory synthetic C3D when
+/// the artifacts are absent (CI and quickstarts serve without `make
+/// artifacts`).
+fn load_or_synthetic(dir: &str, name: &str) -> rt3d::Result<Model> {
+    match Model::load(dir, name) {
+        Ok(m) => Ok(m),
+        Err(e) if name == "c3d" => {
+            eprintln!(
+                "artifacts not found under {dir:?} ({e}); \
+                 serving the in-memory synthetic C3D model"
+            );
+            Ok(Model::synthetic_c3d(SyntheticC3d::default()))
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// One *unfaulted* deployment of the configured backend — used for the
+/// deployments hot swaps stage in (a swap is the operator's remediation
+/// path, so the fault injector never wraps them).
+fn build_deployment(opts: &ServeOpts, dir: &str, name: &str) -> rt3d::Result<Deployment> {
+    let model = load_or_synthetic(dir, &opts.model)?;
+    let eng = build_backend(
+        &model,
+        &opts.backend,
+        opts.sparse,
+        opts.threads,
+        &opts.variant,
+    )?;
+    Ok(Deployment {
+        name: name.to_string(),
+        engine: eng,
+        expected_latency_s: 0.05,
+        accuracy: None,
+    })
+}
+
+fn serve(opts: ServeOpts) -> rt3d::Result<()> {
+    let model = load_or_synthetic(&opts.artifacts, &opts.model)?;
     let in_dims = model.manifest.input;
-    let mut eng = build_backend(&model, backend, sparse, threads, variant)?;
-    if let Some(spec) = faults {
-        let plan = FaultPlan::parse(&spec)?;
+    let mut eng = build_backend(
+        &model,
+        &opts.backend,
+        opts.sparse,
+        opts.threads,
+        &opts.variant,
+    )?;
+    if let Some(spec) = &opts.faults {
+        let plan = FaultPlan::parse(spec)?;
         eng = Arc::new(FaultBackend::new(eng, plan));
     }
     println!(
         "backend: {} ({} executor threads x {} serving workers)",
         eng.name(),
         eng.threads(),
-        workers.max(1)
+        opts.workers.max(1)
     );
     let cfg = ServerConfig::new()
-        .max_batch(max_batch)
+        .max_batch(opts.max_batch)
         .max_wait(std::time::Duration::from_millis(10))
-        .workers(workers);
-    let server = Server::start(eng, cfg);
-    let responses = server
-        .take_responses()
-        .ok_or_else(|| rt3d::anyhow!("response receiver already taken"))?;
-    let frames = in_dims[1];
-    let size = in_dims[2];
-    for i in 0..requests {
+        .workers(opts.workers);
+    let router = Router::new(Policy::BestAccuracy);
+    router.add_deployment(
+        &opts.model,
+        Deployment {
+            name: "primary".into(),
+            engine: eng,
+            expected_latency_s: 0.05,
+            accuracy: None,
+        },
+        cfg.clone(),
+    );
+    let metrics = router
+        .metrics(&opts.model)
+        .ok_or_else(|| rt3d::anyhow!("model just added must have metrics"))?;
+
+    if let Some(addr) = &opts.listen {
+        // Network mode: request frames map onto Router::try_submit; swap
+        // control frames (and `rt3d serve --swap-artifacts`) stage fresh
+        // deployments through Router::stage.
+        let router = Arc::new(router);
+        let swap_dir = opts
+            .swap_artifacts
+            .clone()
+            .unwrap_or_else(|| opts.artifacts.clone());
+        let net_cfg = NetServerConfig::new()
+            .max_frame_bytes(rt3d::util::env::max_frame_bytes())
+            .allow_shutdown(opts.allow_shutdown)
+            .swap_dir(Some(swap_dir))
+            .swap_server_cfg(cfg);
+        let swap_seq = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let factory_opts = opts.clone();
+        let factory: BackendFactory = Box::new(move |model, dir| {
+            if model != factory_opts.model {
+                return Err(rt3d::anyhow!("unknown model {model:?}"));
+            }
+            let n = swap_seq.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            build_deployment(&factory_opts, dir, &format!("swap-{n}"))
+        });
+        let mut net =
+            NetServer::bind(addr.as_str(), router.clone(), net_cfg, Some(factory))?;
+        // CI parses this line for the ephemeral port (`--listen ...:0`).
+        println!("listening on {}", net.local_addr());
+        net.wait();
+        net.shutdown();
+        // The net server joined all its threads, so this is the last Arc.
+        if let Ok(r) = Arc::try_unwrap(router) {
+            r.shutdown();
+        }
+        print_summary(&metrics);
+        return Ok(());
+    }
+
+    // Self-drive mode: synthesize labelled clips through the same router.
+    let (frames, size) = (in_dims[1], in_dims[2]);
+    for i in 0..opts.requests {
+        // `--swap-artifacts` exercises one hot swap mid-stream: stage a
+        // fresh (unfaulted) deployment and keep submitting — zero dropped
+        // windows is the contract under test.
+        match &opts.swap_artifacts {
+            Some(dir) if i == opts.requests / 2 => {
+                let dep = build_deployment(&opts, dir, "swapped")?;
+                let retired = router.stage(&opts.model, dep, cfg.clone())?;
+                println!("hot swap mid-stream: retired {retired:?}");
+            }
+            _ => {}
+        }
         let label = i % workload::NUM_CLASSES;
         let clip = workload::make_clip(label, 1000 + i as u64, frames, size);
-        server.submit(clip, Some(label))?;
+        router.submit(&opts.model, clip, Some(label), None)?;
     }
-    let mut done = 0;
-    while done < requests {
-        let _ = responses.recv()?;
-        done += 1;
-    }
-    let m = server.shutdown();
+    router.drain(&opts.model, opts.requests)?;
+    router.shutdown();
+    print_summary(&metrics);
+    Ok(())
+}
+
+/// The serve summary, printed from one `Metrics::snapshot()` — the same
+/// counters `/metrics` exports and the bench JSON records, so the three
+/// can never disagree.
+fn print_summary(m: &rt3d::coordinator::Metrics) {
+    let snap = m.snapshot();
     let lat = m.latency();
     println!(
         "requests={} throughput={:.2} req/s mean_batch={:.2}",
@@ -175,19 +311,18 @@ fn serve(
         m.throughput(),
         m.mean_batch()
     );
-    let snap = m.snapshot();
-    if snap.total() != snap.ok {
-        println!(
-            "outcomes: ok={} failed={} shed={} deadline_miss={} \
-             (panics={} breaker_trips={})",
-            snap.ok,
-            snap.failed,
-            snap.shed,
-            snap.deadline_miss,
-            snap.panics,
-            snap.breaker_trips
-        );
-    }
+    println!(
+        "outcomes: ok={} failed={} shed={} deadline_miss={} \
+         (panics={} breaker_trips={} shed_rate={:.3} failed_rate={:.3})",
+        snap.ok,
+        snap.failed,
+        snap.shed,
+        snap.deadline_miss,
+        snap.panics,
+        snap.breaker_trips,
+        snap.shed_rate(),
+        snap.failed_rate()
+    );
     let wb = m.worker_batches();
     if wb.len() > 1 {
         println!("batches per worker: {wb:?}");
@@ -202,7 +337,6 @@ fn serve(
     if let Some(acc) = m.accuracy() {
         println!("serving accuracy: {:.3}", acc);
     }
-    Ok(())
 }
 
 fn tune(artifacts: &str, model_name: &str, reps: usize) -> rt3d::Result<()> {

@@ -30,6 +30,8 @@ pub const BENCH_BUDGET_MS: &str = "RT3D_BENCH_BUDGET_MS";
 pub const PRECISION: &str = "RT3D_PRECISION";
 pub const PREFETCH: &str = "RT3D_PREFETCH";
 pub const FAULTS: &str = "RT3D_FAULTS";
+pub const LISTEN: &str = "RT3D_LISTEN";
+pub const MAX_FRAME_MB: &str = "RT3D_MAX_FRAME_MB";
 
 /// One registered environment knob.
 pub struct Knob {
@@ -160,10 +162,31 @@ const KNOBS: &[Knob] = &[
             }
         },
     },
+    Knob {
+        name: LISTEN,
+        help: "TCP listen address for `rt3d serve` (e.g. 127.0.0.1:7433); \
+               unset = in-process self-drive mode",
+        render: |raw| match raw.map(str::trim) {
+            Some(addr) if !addr.is_empty() => addr.to_string(),
+            _ => "unset (no network listener)".to_string(),
+        },
+    },
+    Knob {
+        name: MAX_FRAME_MB,
+        help: "max wire frame payload in MiB for `rt3d serve --listen` \
+               (oversize frames close their connection)",
+        render: |raw| match parse_usize(raw).filter(|&n| n > 0) {
+            Some(n) => format!("{n} MiB"),
+            None => format!("{DEFAULT_MAX_FRAME_MB} MiB (default)"),
+        },
+    },
 ];
 
 /// Default pre-park spin budget (see `util::pool`).
 pub const DEFAULT_SPIN: usize = 4096;
+
+/// Default wire-frame payload cap in MiB (see [`crate::coordinator::net`]).
+pub const DEFAULT_MAX_FRAME_MB: usize = 64;
 
 /// The single raw read point for `RT3D_*` environment variables. Every
 /// other module resolves knobs through the typed accessors below, which
@@ -240,6 +263,23 @@ pub fn faults() -> Option<String> {
     var(FAULTS)
         .map(|s| s.trim().to_string())
         .filter(|s| !s.is_empty())
+}
+
+/// `RT3D_LISTEN` when set and non-empty: the serve-mode TCP address.
+pub fn listen() -> Option<String> {
+    var(LISTEN)
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+}
+
+/// Wire frame payload cap in bytes (`RT3D_MAX_FRAME_MB`, default
+/// [`DEFAULT_MAX_FRAME_MB`] MiB).
+pub fn max_frame_bytes() -> usize {
+    parse_usize(var(MAX_FRAME_MB).as_deref())
+        .filter(|&n| n > 0)
+        .unwrap_or(DEFAULT_MAX_FRAME_MB)
+        * 1024
+        * 1024
 }
 
 /// `RT3D_TUNE_DB` when set and non-empty.
@@ -322,11 +362,11 @@ mod tests {
         // (the debug_assert in `var` enforces this at runtime too).
         for name in [
             THREADS, SIMD, FUSE, POOL, SPIN, TUNE_DB, BENCH_BUDGET_MS,
-            PRECISION, PREFETCH, FAULTS,
+            PRECISION, PREFETCH, FAULTS, LISTEN, MAX_FRAME_MB,
         ] {
             assert!(knobs().iter().any(|k| k.name == name), "{name} unregistered");
         }
-        assert_eq!(knobs().len(), 10, "new knob? register + document it");
+        assert_eq!(knobs().len(), 12, "new knob? register + document it");
     }
 
     #[test]

@@ -1,0 +1,358 @@
+//! Network front door tests: the wire protocol codec and a real loopback
+//! TCP server over the router.
+//!
+//! * the codec round-trips every frame type bit-identically and rejects
+//!   truncated / oversize / corrupt bytes with typed errors, never panics;
+//! * logits served over loopback TCP are **bit-identical** to direct
+//!   `forward` calls (the wire adds zero numeric surface);
+//! * a wire deadline comes back as `DeadlineExceeded` — TCP clients get
+//!   the in-process shedding semantics;
+//! * a hot swap under a concurrent request stream loses zero responses;
+//! * `/metrics` on the same listener speaks Prometheus text, and protocol
+//!   errors (unknown model, oversize frame) close only their connection.
+
+use rt3d::coordinator::net::{ERR_BAD_FRAME, ERR_UNKNOWN_MODEL};
+use rt3d::coordinator::{
+    Backend, BackendFactory, Deployment, Frame, NetClient, NetServer,
+    NetServerConfig, Outcome, Policy, Router, ServerConfig,
+};
+use rt3d::executors::NativeEngine;
+use rt3d::model::{Model, SyntheticC3d};
+use rt3d::tensor::{Mat, Tensor5};
+use rt3d::workload;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Toy backend whose logits identify which engine served the request.
+struct Tagged(f32);
+impl Backend for Tagged {
+    fn infer(&self, batch: Tensor5) -> Mat {
+        let mut m = Mat::zeros(batch.dims[0], 2);
+        for r in 0..m.rows {
+            *m.at_mut(r, 0) = self.0;
+        }
+        m
+    }
+    fn name(&self) -> String {
+        format!("tagged-{}", self.0)
+    }
+}
+
+fn dep(name: &str, engine: Arc<dyn Backend>) -> Deployment {
+    Deployment {
+        name: name.into(),
+        engine,
+        expected_latency_s: 0.05,
+        accuracy: None,
+    }
+}
+
+fn tiny_clip() -> Tensor5 {
+    Tensor5::zeros([1, 1, 1, 1, 1])
+}
+
+/// Bind a net server over a single-deployment router.
+fn serve_one(
+    model: &str,
+    deployment: Deployment,
+    cfg: ServerConfig,
+    net_cfg: NetServerConfig,
+    factory: Option<BackendFactory>,
+) -> (NetServer, Arc<Router>) {
+    let router = Arc::new(Router::new(Policy::BestAccuracy));
+    router.add_deployment(model, deployment, cfg);
+    let net =
+        NetServer::bind("127.0.0.1:0", router.clone(), net_cfg, factory).unwrap();
+    (net, router)
+}
+
+fn teardown(net: NetServer, router: Arc<Router>) {
+    net.shutdown();
+    if let Ok(r) = Arc::try_unwrap(router) {
+        r.shutdown();
+    }
+}
+
+#[test]
+fn codec_round_trips_every_frame_type_bit_identically() {
+    // Include a subnormal and a negative zero: PartialEq would let
+    // -0.0 == 0.0 slip through, so the float payloads are also compared
+    // bit for bit.
+    let clip_data: Vec<f32> =
+        (0..32).map(|i| (i as f32) * 0.1 + 1.0e-42).collect();
+    let frames = vec![
+        Frame::Request {
+            id: 7,
+            model: "c3d".into(),
+            deadline_ms: 12,
+            label: Some(3),
+            clip: Tensor5::from_vec([1, 2, 2, 2, 4], clip_data.clone()),
+        },
+        Frame::Request {
+            id: u64::MAX,
+            model: String::new(),
+            deadline_ms: 0,
+            label: None,
+            clip: tiny_clip(),
+        },
+        Frame::Response {
+            id: 9,
+            outcome: Outcome::Ok,
+            predicted: 4,
+            latency_us: 1234,
+            logits: vec![1.0e-30, -2.5, 3.75, -0.0],
+        },
+        Frame::Response {
+            id: 1,
+            outcome: Outcome::DeadlineExceeded,
+            predicted: 0,
+            latency_us: 0,
+            logits: vec![],
+        },
+        Frame::Swap { model: "c3d".into(), dir: "artifacts/v2".into() },
+        Frame::SwapDone { ok: true, msg: "swapped".into() },
+        Frame::Error { code: ERR_UNKNOWN_MODEL, msg: "unknown model".into() },
+        Frame::Shutdown,
+        Frame::Bye,
+    ];
+    for frame in frames {
+        let mut buf = Vec::new();
+        frame.encode_into(&mut buf);
+        let (decoded, used) = Frame::decode(&buf, usize::MAX).unwrap();
+        assert_eq!(used, buf.len(), "consumed the whole frame");
+        assert_eq!(decoded, frame);
+        let bits = |f: &Frame| -> Vec<u32> {
+            match f {
+                Frame::Request { clip, .. } => {
+                    clip.data.iter().map(|v| v.to_bits()).collect()
+                }
+                Frame::Response { logits, .. } => {
+                    logits.iter().map(|v| v.to_bits()).collect()
+                }
+                _ => Vec::new(),
+            }
+        };
+        assert_eq!(bits(&decoded), bits(&frame), "float payload bits changed");
+    }
+}
+
+#[test]
+fn codec_rejects_truncated_oversize_and_corrupt_bytes() {
+    let mut buf = Vec::new();
+    Frame::Request {
+        id: 3,
+        model: "m".into(),
+        deadline_ms: 0,
+        label: Some(1),
+        clip: Tensor5::zeros([1, 1, 2, 2, 2]),
+    }
+    .encode_into(&mut buf);
+    // Every strict prefix is a typed error, not a panic.
+    for n in 0..buf.len() {
+        assert!(Frame::decode(&buf[..n], usize::MAX).is_err(), "prefix {n}");
+    }
+    // The payload cap rejects before reading the body.
+    let err = Frame::decode(&buf, 8).unwrap_err();
+    assert!(err.to_string().contains("oversize"), "err: {err}");
+    // Garbage, a corrupt frame type, and trailing bytes all error.
+    assert!(Frame::decode(&[0xFF; 64], usize::MAX).is_err());
+    let mut bad_type = buf.clone();
+    bad_type[5] = 200;
+    assert!(Frame::decode(&bad_type, usize::MAX).is_err());
+    let mut trailing = buf.clone();
+    trailing.push(0);
+    let len = u32::from_le_bytes(trailing[8..12].try_into().unwrap()) + 1;
+    trailing[8..12].copy_from_slice(&len.to_le_bytes());
+    assert!(Frame::decode(&trailing, usize::MAX).is_err());
+}
+
+#[test]
+fn loopback_logits_bit_identical_to_direct_forward() {
+    let model = Model::synthetic_c3d(SyntheticC3d::tiny());
+    let input = model.manifest.input;
+    let n = 6;
+    let engine = NativeEngine::builder(&model).threads(2).build();
+    let direct: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let clip =
+                workload::make_clip(i % 8, 7 + i as u64, input[1], input[2]);
+            engine.forward(&clip).row(0).to_vec()
+        })
+        .collect();
+    let (net, router) = serve_one(
+        "c3d",
+        dep("primary", Arc::new(engine.fork())),
+        ServerConfig::new()
+            .max_batch(2)
+            .max_wait(Duration::from_millis(2))
+            .workers(2),
+        NetServerConfig::new(),
+        None,
+    );
+    let mut client = NetClient::connect(net.local_addr()).unwrap();
+    for i in 0..n {
+        let clip = workload::make_clip(i % 8, 7 + i as u64, input[1], input[2]);
+        client
+            .request(i as u64, "c3d", clip, Some((i % 8) as u32), 0)
+            .unwrap();
+    }
+    let mut got: Vec<Option<Vec<f32>>> = vec![None; n];
+    for _ in 0..n {
+        match client.recv().unwrap() {
+            Frame::Response { id, outcome, logits, .. } => {
+                assert_eq!(outcome, Outcome::Ok);
+                got[id as usize] = Some(logits);
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    for (i, want) in direct.iter().enumerate() {
+        let logits = got[i].take().expect("every id answered");
+        assert_eq!(logits.len(), want.len());
+        for (a, b) in logits.iter().zip(want) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "clip {i}: wire logits diverged from the direct forward"
+            );
+        }
+    }
+    teardown(net, router);
+}
+
+#[test]
+fn wire_deadline_comes_back_deadline_exceeded() {
+    struct Slow;
+    impl Backend for Slow {
+        fn infer(&self, batch: Tensor5) -> Mat {
+            std::thread::sleep(Duration::from_millis(50));
+            Mat::zeros(batch.dims[0], 2)
+        }
+        fn name(&self) -> String {
+            "slow".into()
+        }
+    }
+    // max_batch 1: the deadline request queues behind a 50 ms batch, so
+    // its 5 ms budget is unmeetable by the time a worker sees it.
+    let (net, router) = serve_one(
+        "m",
+        dep("only", Arc::new(Slow)),
+        ServerConfig::new().max_batch(1).workers(1),
+        NetServerConfig::new(),
+        None,
+    );
+    let mut client = NetClient::connect(net.local_addr()).unwrap();
+    client.request(0, "m", tiny_clip(), None, 0).unwrap();
+    client.request(1, "m", tiny_clip(), None, 5).unwrap();
+    for _ in 0..2 {
+        match client.recv().unwrap() {
+            Frame::Response { id: 0, outcome, .. } => {
+                assert_eq!(outcome, Outcome::Ok);
+            }
+            Frame::Response { id: 1, outcome, logits, .. } => {
+                assert_eq!(outcome, Outcome::DeadlineExceeded);
+                assert!(logits.is_empty());
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    teardown(net, router);
+}
+
+#[test]
+fn hot_swap_over_the_wire_loses_zero_responses() {
+    let factory: BackendFactory = Box::new(|model, _dir| {
+        assert_eq!(model, "m");
+        Ok(dep("v2", Arc::new(Tagged(2.0))))
+    });
+    let (net, router) = serve_one(
+        "m",
+        dep("v1", Arc::new(Tagged(1.0))),
+        ServerConfig::default(),
+        NetServerConfig::new(),
+        Some(factory),
+    );
+    let mut client = NetClient::connect(net.local_addr()).unwrap();
+    for id in 0..10u64 {
+        client.request(id, "m", tiny_clip(), None, 0).unwrap();
+    }
+    client
+        .send(&Frame::Swap { model: "m".into(), dir: String::new() })
+        .unwrap();
+    for id in 10..20u64 {
+        client.request(id, "m", tiny_clip(), None, 0).unwrap();
+    }
+    // 20 responses + 1 SwapDone, in any order; every id exactly once; the
+    // engine tag proves pre-swap ids ran on v1 and post-swap ids on v2.
+    let mut seen = std::collections::HashSet::new();
+    let mut swap_done = false;
+    while seen.len() < 20 || !swap_done {
+        match client.recv().unwrap() {
+            Frame::Response { id, outcome, logits, .. } => {
+                assert!(seen.insert(id), "id {id} answered twice");
+                assert_eq!(outcome, Outcome::Ok, "id {id} not served");
+                let want = if id < 10 { 1.0 } else { 2.0 };
+                assert_eq!(logits[0], want, "id {id} served by wrong engine");
+            }
+            Frame::SwapDone { ok, msg } => {
+                assert!(ok, "swap failed: {msg}");
+                swap_done = true;
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    assert_eq!(router.deployments("m"), vec!["v2".to_string()]);
+    assert_eq!(router.metrics("m").unwrap().snapshot().ok, 20);
+    teardown(net, router);
+}
+
+#[test]
+fn metrics_endpoint_and_protocol_errors_close_only_their_connection() {
+    // 64-byte frame cap: a [1,1,4,4,4] clip (256 B of floats) is oversize,
+    // a [1,1,1,1,1] clip is not.
+    let (net, router) = serve_one(
+        "m",
+        dep("only", Arc::new(Tagged(1.0))),
+        ServerConfig::default(),
+        NetServerConfig::new().max_frame_bytes(64),
+        None,
+    );
+    let addr = net.local_addr();
+
+    // Unknown model: typed error frame, connection closes.
+    let mut bad = NetClient::connect(addr).unwrap();
+    bad.request(0, "nope", tiny_clip(), None, 0).unwrap();
+    match bad.recv().unwrap() {
+        Frame::Error { code, .. } => assert_eq!(code, ERR_UNKNOWN_MODEL),
+        other => panic!("unexpected frame {other:?}"),
+    }
+
+    // Oversize frame: typed error on that connection only.
+    let mut big = NetClient::connect(addr).unwrap();
+    big.request(0, "m", Tensor5::zeros([1, 1, 4, 4, 4]), None, 0).unwrap();
+    match big.recv().unwrap() {
+        Frame::Error { code, .. } => assert_eq!(code, ERR_BAD_FRAME),
+        other => panic!("unexpected frame {other:?}"),
+    }
+
+    // The listener and the serving path survived both.
+    let mut good = NetClient::connect(addr).unwrap();
+    good.request(42, "m", tiny_clip(), Some(0), 0).unwrap();
+    match good.recv().unwrap() {
+        Frame::Response { id, outcome, .. } => {
+            assert_eq!(id, 42);
+            assert_eq!(outcome, Outcome::Ok);
+        }
+        other => panic!("unexpected frame {other:?}"),
+    }
+
+    // Prometheus text on the same listener, counting the served request.
+    let body = rt3d::coordinator::net::fetch_metrics(addr).unwrap();
+    assert!(
+        body.contains("rt3d_requests_total{model=\"m\",outcome=\"ok\"} 1"),
+        "metrics body:\n{body}"
+    );
+    assert!(body.contains("rt3d_request_latency_seconds"), "body:\n{body}");
+    assert!(body.contains("# TYPE rt3d_requests_total counter"), "body:\n{body}");
+    teardown(net, router);
+}

@@ -15,7 +15,10 @@ tolerance; throughput keys (saturation_clips_per_s) warn when
 baseline/current exceeds it. Never fails the build — CI runners are too
 noisy to gate merges on wall-clock numbers; the warning plus the
 uploaded artifact is the tracking signal. A baseline with null metrics
-means "not seeded yet" and skips the comparison.
+means "not seeded yet" and skips the comparison. When the
+GITHUB_STEP_SUMMARY environment variable is set (any GitHub Actions
+step), a per-key markdown table of the comparison is appended to the
+job summary page.
 
 Update mode (--update-baseline): take one or more BENCH_serving.json
 files from repeated bench runs and write their per-key median as the new
@@ -25,6 +28,7 @@ for a baseline-refresh PR).
 """
 
 import json
+import os
 import sys
 
 THRESHOLD = 1.20  # warn when a metric degrades past 120% of baseline
@@ -41,13 +45,16 @@ UPDATE_TOLERANCE = 1.5  # tolerance stamped into refreshed baselines
 # fault-free serving bench asserts failed_rate == 0 itself.
 LATENCY_KEYS = ("p95_ms", "p50_ms", "p95_ms_1t", "p50_ms_1t",
                 "fused_peak_scratch_mb", "materialized_peak_scratch_mb",
-                "shed_rate", "failed_rate")
+                "shed_rate", "failed_rate", "net_p95_ms")
 # Throughput-style keys: smaller is worse. The int8 keys gate the
 # quantized GEMM path: int8_best_gflops is its raw throughput and
 # int8_speedup_vs_f32 its advantage over the f32 SIMD kernels — the
 # acceptance criterion for the quantized path is that it stays > 1.0.
+# The net_* keys come from the serving bench's TCP-loopback section and
+# track what the wire front door adds on top of the in-process pipeline.
 THROUGHPUT_KEYS = ("saturation_clips_per_s", "fused_best_gflops",
-                   "int8_best_gflops", "int8_speedup_vs_f32")
+                   "int8_best_gflops", "int8_speedup_vs_f32",
+                   "net_clips_per_s")
 # Context carried into a refreshed baseline from the first run.
 CONTEXT_KEYS = ("bench", "model", "threads", "isa_detected", "kernel",
                 "simd_lanes", "workers_best")
@@ -129,6 +136,7 @@ def check(baseline_path, current_path) -> int:
         threshold = THRESHOLD
 
     checked = False
+    rows = []  # (key, base, cur, current/baseline, warned)
     for key in LATENCY_KEYS + THROUGHPUT_KEYS:
         base, cur = baseline.get(key), current.get(key)
         if not isinstance(base, (int, float)) or base <= 0:
@@ -149,7 +157,9 @@ def check(baseline_path, current_path) -> int:
                 f"({ratio:.0%} of baseline, threads base={baseline.get('threads')} "
                 f"cur={current.get('threads')})"
             )
-        if ratio > threshold:
+        warned = ratio > threshold
+        rows.append((key, base, cur, cur / base, warned))
+        if warned:
             # GitHub Actions warning annotation; does not fail the job.
             print(f"::warning title=bench regression::{line} exceeds "
                   f"{threshold:.2f}x baseline")
@@ -158,7 +168,31 @@ def check(baseline_path, current_path) -> int:
     if not checked:
         print("baseline not seeded yet (null metrics); refresh it with the "
               "bench-baseline workflow_dispatch job (--update-baseline)")
+    write_step_summary(current.get("bench", current_path), threshold, rows)
     return 0
+
+
+def write_step_summary(bench, threshold, rows):
+    """Append a per-key markdown table to the GitHub job summary page."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path or not rows:
+        return
+    try:
+        with open(path, "a") as f:
+            f.write(f"### Bench regression check: `{bench}`\n\n")
+            f.write(f"Warning threshold {threshold:.2f}x baseline; "
+                    "warning-only (never fails the job). For throughput "
+                    "keys, under 100% of baseline is slower; for latency "
+                    "keys, over 100% is slower.\n\n")
+            f.write("| key | baseline | current | current/baseline | status |\n")
+            f.write("|-----|---------:|--------:|-----------------:|--------|\n")
+            for key, base, cur, pct, warned in rows:
+                status = "regressed" if warned else "ok"
+                f.write(f"| `{key}` | {base:.2f} | {cur:.2f} | {pct:.0%} "
+                        f"| {status} |\n")
+            f.write("\n")
+    except OSError as e:
+        print(f"could not append to GITHUB_STEP_SUMMARY: {e}")
 
 
 def main() -> int:
