@@ -1,0 +1,130 @@
+//! Open-loop trace-replay driver for a live serving endpoint — the CI
+//! `fleet-e2e` job points this at a background `rt3d fleet` supervisor
+//! (it works identically against a single `rt3d serve --listen` worker).
+//!
+//! Replays a seeded Poisson trace, optionally shaped bursty or diurnal,
+//! over several persistent connections with a mixed fresh-clip /
+//! windowed-stream request pattern (see `rt3d::workload::replay`), then
+//! enforces the serving contract and prints the latency tail:
+//!
+//! * normal mode — every request sent, nothing lost, nothing skipped,
+//!   no failed responses;
+//! * `--expect-kill` — a worker is being killed mid-run: connections
+//!   through it may die (`lost`/`skipped` > 0 allowed), but surviving
+//!   connections must still be answered exactly-once (`unanswered` must
+//!   be 0 in every mode) and some requests must succeed.
+//!
+//! ```sh
+//! rt3d fleet -n 2 --listen 127.0.0.1:4071 --allow-shutdown &
+//! cargo run --release --example trace_replay -- \
+//!     --addr 127.0.0.1:4071 [--rate 40] [--requests 200] [--sessions 4] \
+//!     [--burst PERIOD:DUTY:FACTOR | --diurnal PERIOD:AMP] [--seed 1] \
+//!     [--frames D] [--size S] [--expect-kill] [--scrape] [--shutdown]
+//! ```
+
+use rt3d::coordinator::net::fetch_metrics;
+use rt3d::coordinator::{Frame, NetClient};
+use rt3d::model::SyntheticC3d;
+use rt3d::util::args::Args;
+use rt3d::workload::{replay, Modulation, ReplayConfig};
+
+/// `--burst P:D:F` / `--diurnal P:A` → a [`Modulation`].
+fn parse_modulation(args: &Args) -> rt3d::Result<Modulation> {
+    if let Some(spec) = args.get("burst") {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let [p, d, f] = parts.as_slice() else {
+            rt3d::bail!("--burst wants PERIOD_S:DUTY:FACTOR, got {spec:?}");
+        };
+        return Ok(Modulation::Bursty {
+            period_s: p.parse().map_err(|e| rt3d::anyhow!("bad burst period: {e}"))?,
+            duty: d.parse().map_err(|e| rt3d::anyhow!("bad burst duty: {e}"))?,
+            factor: f.parse().map_err(|e| rt3d::anyhow!("bad burst factor: {e}"))?,
+        });
+    }
+    if let Some(spec) = args.get("diurnal") {
+        let Some((p, a)) = spec.split_once(':') else {
+            rt3d::bail!("--diurnal wants PERIOD_S:AMPLITUDE, got {spec:?}");
+        };
+        return Ok(Modulation::Diurnal {
+            period_s: p.parse().map_err(|e| rt3d::anyhow!("bad diurnal period: {e}"))?,
+            amplitude: a.parse().map_err(|e| rt3d::anyhow!("bad diurnal amplitude: {e}"))?,
+        });
+    }
+    Ok(Modulation::None)
+}
+
+fn main() -> rt3d::Result<()> {
+    let args = Args::parse_env();
+    let addr = args.get_or("addr", "127.0.0.1:4071");
+    let synth = SyntheticC3d::default();
+    let cfg = ReplayConfig {
+        model: args.get_or("model", "c3d"),
+        rate_hz: args.get_f64("rate", 40.0),
+        requests: args.get_usize("requests", 200),
+        seed: args.get_usize("seed", 1) as u64,
+        modulation: parse_modulation(&args)?,
+        sessions: args.get_usize("sessions", 4),
+        frames: args.get_usize("frames", synth.frames),
+        size: args.get_usize("size", synth.size),
+        deadline_ms: args.get_usize("deadline-ms", 0) as u32,
+        ..ReplayConfig::new(addr.clone())
+    };
+    let expect_kill = args.flag("expect-kill");
+
+    println!(
+        "trace_replay: {} requests at {} req/s over {} sessions -> {addr} ({:?})",
+        cfg.requests, cfg.rate_hz, cfg.sessions, cfg.modulation
+    );
+    let r = replay(&cfg)?;
+    println!(
+        "trace_replay: sent={} skipped={} ok={} failed={} shed={} deadline={} lost={} unanswered={}",
+        r.sent, r.skipped, r.ok, r.failed, r.shed, r.deadline_miss, r.lost, r.unanswered
+    );
+    println!(
+        "trace_replay: p50={:.1}ms p99={:.1}ms p99.9={:.1}ms max={:.1}ms shed_rate={:.3} offered={:.1}/s achieved={:.1}/s wall={:.1}s",
+        r.p50_ms, r.p99_ms, r.p999_ms, r.max_ms, r.shed_rate,
+        r.offered_rate_hz, r.achieved_rate_hz, r.wall_s
+    );
+
+    // Exactly-one-response on a cleanly closed connection is the wire
+    // contract — no mode relaxes it.
+    if r.unanswered > 0 {
+        rt3d::bail!("{} responses missing on cleanly-closed connections", r.unanswered);
+    }
+    if r.ok == 0 {
+        rt3d::bail!("no request executed successfully");
+    }
+    if expect_kill {
+        // The killed worker's connections legitimately drop work; the
+        // supervisor must keep the rest of the fleet serving.
+        println!("trace_replay: --expect-kill: {} lost / {} skipped tolerated", r.lost, r.skipped);
+    } else {
+        if r.lost > 0 || r.skipped > 0 {
+            rt3d::bail!(
+                "lost {} / skipped {} requests without --expect-kill",
+                r.lost,
+                r.skipped
+            );
+        }
+        if r.failed > 0 {
+            rt3d::bail!("{} failed responses in a fault-free run", r.failed);
+        }
+    }
+
+    if args.flag("scrape") {
+        let metrics = fetch_metrics(addr.as_str())?;
+        println!("--- GET /metrics ---");
+        print!("{metrics}");
+        println!("--- end /metrics ---");
+    }
+
+    if args.flag("shutdown") {
+        let mut client = NetClient::connect(addr.as_str())?;
+        client.send(&Frame::Shutdown)?;
+        match client.recv()? {
+            Frame::Bye => println!("trace_replay: endpoint acknowledged shutdown"),
+            other => rt3d::bail!("expected Bye after Shutdown, got {other:?}"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,158 @@
+//! Fleet benchmark: open-loop trace replay against a real 2-worker
+//! `rt3d fleet` — supervisor + crash-isolated worker processes — over
+//! loopback TCP.
+//!
+//! What is measured and gated (DESIGN.md §Perf):
+//! * the scheduled-arrival latency tail (p50/p99/p99.9) of a bursty
+//!   Poisson trace proxied through the supervisor to two workers — the
+//!   number the fleet exists to keep bounded when a worker dies;
+//! * the shed rate under that burst (admission control behaving, not
+//!   collapsing);
+//! * the serving contract: nothing lost, nothing unanswered, no failed
+//!   responses, and a graceful Shutdown -> Bye -> exit-0 drain.
+//!
+//! Emits `BENCH_fleet.json` at the repo root; `.github/workflows/ci.yml`
+//! compares it against the committed baseline via
+//! `scripts/check_bench_regression.py`. The workers run the synthetic
+//! default C3D model (`--synthetic default`) so the bench needs no
+//! artifacts and the clip geometry is fixed.
+
+use rt3d::coordinator::net::fetch_metrics;
+use rt3d::coordinator::{Frame, NetClient};
+use rt3d::model::SyntheticC3d;
+use rt3d::util::bench::{budget_from_env, write_repo_json};
+use rt3d::workload::{replay, Modulation, ReplayConfig};
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+const WORKERS: usize = 2;
+
+/// Read supervisor stdout until the public listener and every worker has
+/// announced itself; returns the public address and a drain thread that
+/// keeps echoing the remaining supervisor log.
+fn await_fleet_ready(child: &mut Child) -> (String, std::thread::JoinHandle<()>) {
+    let stdout = child.stdout.take().expect("fleet stdout piped");
+    let mut lines = BufReader::new(stdout).lines();
+    let mut public = None;
+    let mut ready = 0usize;
+    for line in lines.by_ref() {
+        let line = line.expect("fleet stdout readable");
+        println!("[fleet] {line}");
+        if let Some(addr) = line.strip_prefix("listening on ") {
+            public = Some(addr.trim().to_string());
+        }
+        if line.starts_with("fleet: worker") && line.contains(" ready at ") {
+            ready += 1;
+        }
+        if public.is_some() && ready >= WORKERS {
+            break;
+        }
+    }
+    let public = public.expect("fleet exited before announcing its listener");
+    let drain = std::thread::spawn(move || {
+        for line in lines.map_while(|l| l.ok()) {
+            println!("[fleet] {line}");
+        }
+    });
+    (public, drain)
+}
+
+fn main() {
+    let budget = budget_from_env(2000);
+    // Scale the trace to the budget: the replay wall-clock is the trace
+    // duration (requests / rate), independent of server speed.
+    let (requests, rate_hz) = if budget < Duration::from_millis(1000) {
+        (40usize, 40.0)
+    } else {
+        (160usize, 40.0)
+    };
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_rt3d"))
+        .args([
+            "fleet",
+            "-n",
+            "2",
+            "--listen",
+            "127.0.0.1:0",
+            "--allow-shutdown",
+            "--synthetic",
+            "default",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .stdin(Stdio::null())
+        .spawn()
+        .expect("spawn rt3d fleet");
+    let (addr, drain) = await_fleet_ready(&mut child);
+    println!("fleet: supervisor up at {addr}, {WORKERS} workers ready");
+
+    // Bursty open-loop load: 3x the base rate for a quarter of every
+    // second — the supervisor must keep the tail bounded while balancing
+    // across both workers.
+    let synth = SyntheticC3d::default();
+    let cfg = ReplayConfig {
+        rate_hz,
+        requests,
+        seed: 11,
+        modulation: Modulation::Bursty { period_s: 1.0, duty: 0.25, factor: 3.0 },
+        sessions: 4,
+        frames: synth.frames,
+        size: synth.size,
+        ..ReplayConfig::new(addr.clone())
+    };
+    let r = replay(&cfg).expect("trace replay against the fleet");
+    println!(
+        "fleet replay: sent={} ok={} failed={} shed={} lost={} unanswered={} p50={:.1}ms p99={:.1}ms p99.9={:.1}ms shed_rate={:.3} offered={:.1}/s achieved={:.1}/s",
+        r.sent, r.ok, r.failed, r.shed, r.lost, r.unanswered,
+        r.p50_ms, r.p99_ms, r.p999_ms, r.shed_rate,
+        r.offered_rate_hz, r.achieved_rate_hz,
+    );
+    assert_eq!(r.sent, requests, "every request reached a live connection");
+    assert_eq!(r.lost, 0, "no connection may die in a kill-free run");
+    assert_eq!(r.unanswered, 0, "exactly-one-response violated");
+    assert_eq!(r.failed, 0, "no failed responses in a fault-free run");
+    assert!(r.ok > 0, "no request executed successfully");
+
+    // Aggregated supervisor metrics: both workers live, none restarted.
+    let metrics = fetch_metrics(addr.as_str()).expect("GET /metrics on the supervisor");
+    for needle in
+        ["rt3d_workers_live 2", "rt3d_worker_restarts_total 0", "rt3d_requests_total"]
+    {
+        assert!(metrics.contains(needle), "/metrics missing `{needle}`:\n{metrics}");
+    }
+    println!("fleet metrics: workers_live=2 restarts_total=0 confirmed");
+
+    // Graceful drain: Shutdown fans out, workers flush, supervisor exits 0.
+    let mut client = NetClient::connect(addr.as_str()).expect("connect for shutdown");
+    client.send(&Frame::Shutdown).expect("send Shutdown");
+    match client.recv().expect("recv after Shutdown") {
+        Frame::Bye => println!("fleet: shutdown acknowledged"),
+        other => panic!("expected Bye after Shutdown, got {other:?}"),
+    }
+    let status = child.wait().expect("wait for fleet supervisor");
+    drain.join().ok();
+    assert!(status.success(), "fleet supervisor must drain to exit 0, got {status}");
+
+    // --- Machine-readable output ---------------------------------------
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"fleet\",\n");
+    json.push_str(&format!("  \"workers\": {WORKERS},\n"));
+    json.push_str(&format!("  \"sessions\": {},\n", cfg.sessions));
+    json.push_str(&format!("  \"requests\": {requests},\n"));
+    json.push_str(&format!("  \"rate_hz\": {rate_hz:.1},\n"));
+    json.push_str("  \"modulation\": \"bursty period=1s duty=0.25 factor=3\",\n");
+    json.push_str(&format!("  \"fleet_p50_ms\": {:.4},\n", r.p50_ms));
+    json.push_str(&format!("  \"fleet_p99_ms\": {:.4},\n", r.p99_ms));
+    json.push_str(&format!("  \"fleet_p999_ms\": {:.4},\n", r.p999_ms));
+    json.push_str(&format!("  \"fleet_shed_rate\": {:.4},\n", r.shed_rate));
+    json.push_str(&format!("  \"ok\": {},\n", r.ok));
+    json.push_str(&format!("  \"shed\": {},\n", r.shed));
+    json.push_str(&format!("  \"offered_rate_hz\": {:.4},\n", r.offered_rate_hz));
+    json.push_str(&format!("  \"achieved_rate_hz\": {:.4},\n", r.achieved_rate_hz));
+    json.push_str("  \"graceful_exit\": true\n");
+    json.push_str("}\n");
+    let out = write_repo_json("BENCH_fleet.json", &json);
+    println!("fleet: wrote {}", out.display());
+}

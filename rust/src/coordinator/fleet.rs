@@ -1,0 +1,1222 @@
+//! Crash-isolated multi-process fleet: `rt3d fleet -n P`.
+//!
+//! The serving stack up to here is fault-tolerant *within* one process
+//! (batch-level panic isolation, circuit breakers, load shedding) — but a
+//! segfault, OOM kill or abort in any engine thread still takes the whole
+//! server down. This module adds the next isolation ring: a **supervisor**
+//! process that owns the public listener and `P` **worker** processes,
+//! each a full `rt3d serve` re-invocation of the same binary
+//! ([`std::process::Command`], std-only — no fork/libc) running its own
+//! engine + [`super::NetServer`] on a loopback ephemeral port.
+//!
+//! ```text
+//!              public listener (SO_REUSEPORT when available,
+//!                               plain bind otherwise)
+//!                      │ accept
+//!                supervisor ── health probes (Ping/Pong) ──┐
+//!              /     |     \          restarts w/ backoff  │
+//!        worker0  worker1  worker2   (storm -> quarantine) │
+//!        127.0.0.1:p0  :p1  :p2   <────────────────────────┘
+//! ```
+//!
+//! * **Handshake** — a worker is spawned with `serve --listen
+//!   127.0.0.1:0 --allow-shutdown`; the supervisor reads the worker's
+//!   stdout until the `listening on ADDR` line (the same line the CI
+//!   tooling parses) and only then marks it Live.
+//! * **Balancing** — the supervisor round-robins each accepted
+//!   connection across Live workers and splices bytes both ways
+//!   ([`std::io::copy`] per direction, half-close propagation), so one
+//!   connection sticks to one worker and wire semantics — streaming
+//!   responses, hot swap, bit-identical logits — are exactly those of
+//!   single-process serving. Where the platform exposes it, the public
+//!   listener itself is bound with `SO_REUSEPORT` via a raw, `cfg`-gated
+//!   syscall ([`reuseport_listener`]) so a replacement supervisor can
+//!   bind the same port before the old one exits; on other platforms the
+//!   portable `TcpListener::bind` is used and behavior is identical.
+//! * **Supervision** — the monitor thread reaps dead workers
+//!   ([`FleetState::on_death`]), schedules respawns with exponential
+//!   backoff (`RT3D_RESTART_BACKOFF_MS`, doubling per consecutive death,
+//!   capped at 32x), and **quarantines** a worker that dies K times
+//!   within the storm window (`RT3D_RESTART_STORM`, `K@WINDOW_MS`) — its
+//!   share simply redistributes to the surviving workers. Liveness is
+//!   probed over the wire protocol ([`Frame::Ping`]); a worker that
+//!   stops answering is killed and treated as dead.
+//! * **Aggregated `/metrics`** — a `GET /metrics` against the public
+//!   port answers fleet-wide Prometheus text: per-model outcome counters
+//!   summed over live workers, per-worker latency quantiles, plus the
+//!   supervisor-owned `rt3d_worker_restarts_total`, `rt3d_workers_live`
+//!   and `rt3d_workers_quarantined` series ([`render_fleet_metrics`]).
+//! * **Graceful drain** — a first-frame [`Frame::Shutdown`] on the
+//!   public port (with `--allow-shutdown`) answers [`Frame::Bye`], fans
+//!   `Shutdown` out to every worker (each completes in-flight work and
+//!   exits 0), waits for the children, and exits 0 itself.
+//!
+//! The supervision *policy* lives in [`FleetState`], a pure state
+//! machine with an injected clock — every backoff/storm/rebalance
+//! decision is unit-tested without spawning a single process.
+
+use super::net::{self, Frame, ModelStats, NetClient, HEADER_LEN, MAGIC};
+use crate::anyhow;
+use crate::util::error::Result;
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt::Write as _;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Monitor cadence: death detection, handshake polling, due restarts.
+const TICK: Duration = Duration::from_millis(25);
+/// A client must present its first frame header (or HTTP method) within
+/// this budget, so an idle connection can never wedge a drain.
+const SNIFF_TIMEOUT: Duration = Duration::from_secs(30);
+/// A Live worker that cannot answer a Ping within this budget is dead.
+const PROBE_TIMEOUT: Duration = Duration::from_secs(2);
+
+// ---------------------------------------------------------------------------
+// SO_REUSEPORT via raw syscalls (cfg-gated; portable fallback returns None)
+// ---------------------------------------------------------------------------
+
+/// Raw-syscall socket setup for Linux on x86_64/aarch64 — the crate is
+/// dependency-free, so there is no libc to call `setsockopt` through.
+/// Everything here is plain syscall numbers + the 16-byte `sockaddr_in`
+/// layout; any failure degrades to `None` and the caller falls back to
+/// [`TcpListener::bind`].
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sock {
+    use std::net::{SocketAddr, SocketAddrV4, TcpListener};
+    use std::os::fd::FromRawFd;
+
+    const AF_INET: usize = 2;
+    const SOCK_STREAM: usize = 1;
+    const SOCK_CLOEXEC: usize = 0o2000000;
+    const SOL_SOCKET: usize = 1;
+    const SO_REUSEPORT: usize = 15;
+
+    #[cfg(target_arch = "x86_64")]
+    mod nr {
+        pub const CLOSE: usize = 3;
+        pub const SOCKET: usize = 41;
+        pub const BIND: usize = 49;
+        pub const LISTEN: usize = 50;
+        pub const SETSOCKOPT: usize = 54;
+    }
+    #[cfg(target_arch = "aarch64")]
+    mod nr {
+        pub const CLOSE: usize = 57;
+        pub const SOCKET: usize = 198;
+        pub const BIND: usize = 200;
+        pub const LISTEN: usize = 201;
+        pub const SETSOCKOPT: usize = 208;
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn sys(n: usize, a: usize, b: usize, c: usize, d: usize, e: usize) -> isize {
+        let ret: isize;
+        // SAFETY: plain Linux syscall; rcx/r11 are clobbered by `syscall`.
+        unsafe {
+            std::arch::asm!(
+                "syscall",
+                inlateout("rax") n as isize => ret,
+                in("rdi") a,
+                in("rsi") b,
+                in("rdx") c,
+                in("r10") d,
+                in("r8") e,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack),
+            );
+        }
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    fn sys(n: usize, a: usize, b: usize, c: usize, d: usize, e: usize) -> isize {
+        let ret: isize;
+        // SAFETY: plain Linux syscall via svc #0.
+        unsafe {
+            std::arch::asm!(
+                "svc #0",
+                in("x8") n,
+                inlateout("x0") a as isize => ret,
+                in("x1") b,
+                in("x2") c,
+                in("x3") d,
+                in("x4") e,
+                options(nostack),
+            );
+        }
+        ret
+    }
+
+    /// `sockaddr_in`: family (host order) · port (network order) ·
+    /// address (network order) · 8 bytes zero.
+    fn sockaddr_in(v4: SocketAddrV4) -> [u8; 16] {
+        let mut sa = [0u8; 16];
+        sa[0..2].copy_from_slice(&(AF_INET as u16).to_ne_bytes());
+        sa[2..4].copy_from_slice(&v4.port().to_be_bytes());
+        sa[4..8].copy_from_slice(&v4.ip().octets());
+        sa
+    }
+
+    /// Bind a listening TCP socket with `SO_REUSEPORT` set, so a second
+    /// process (or a replacement supervisor) can bind the same port.
+    /// IPv4 only; `None` on any syscall failure.
+    pub fn reuseport_listener(addr: SocketAddr) -> Option<TcpListener> {
+        let SocketAddr::V4(v4) = addr else { return None };
+        let fd = sys(nr::SOCKET, AF_INET, SOCK_STREAM | SOCK_CLOEXEC, 0, 0, 0);
+        if fd < 0 {
+            return None;
+        }
+        let fdu = fd as usize;
+        let one: u32 = 1;
+        let sa = sockaddr_in(v4);
+        let ok = sys(
+            nr::SETSOCKOPT,
+            fdu,
+            SOL_SOCKET,
+            SO_REUSEPORT,
+            &one as *const u32 as usize,
+            4,
+        ) >= 0
+            && sys(nr::BIND, fdu, sa.as_ptr() as usize, sa.len(), 0, 0) >= 0
+            && sys(nr::LISTEN, fdu, 1024, 0, 0, 0) >= 0;
+        if !ok {
+            sys(nr::CLOSE, fdu, 0, 0, 0, 0);
+            return None;
+        }
+        // SAFETY: fd is a fresh listening TCP socket owned only by us.
+        Some(unsafe { TcpListener::from_raw_fd(fd as i32) })
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod sock {
+    use std::net::{SocketAddr, TcpListener};
+
+    /// Portable fallback: no raw syscalls here — callers bind normally.
+    pub fn reuseport_listener(_addr: SocketAddr) -> Option<TcpListener> {
+        None
+    }
+}
+
+pub use sock::reuseport_listener;
+
+// ---------------------------------------------------------------------------
+// Pure supervision state machine
+// ---------------------------------------------------------------------------
+
+/// Restart backoff: delay `base * 2^streak`, capped at `max`. The streak
+/// counts consecutive deaths without an intervening successful handshake.
+#[derive(Debug, Clone, Copy)]
+pub struct BackoffConfig {
+    pub base: Duration,
+    pub max: Duration,
+}
+
+impl BackoffConfig {
+    /// The standard policy: cap at 32x the base delay.
+    pub fn from_base(base: Duration) -> Self {
+        Self { base, max: base.saturating_mul(32) }
+    }
+
+    fn delay(&self, streak: u32) -> Duration {
+        let mul = 1u32.checked_shl(streak.min(16)).unwrap_or(u32::MAX);
+        self.base.saturating_mul(mul).min(self.max)
+    }
+}
+
+/// Restart-storm cap: `max_deaths` deaths inside `window` quarantines the
+/// slot — a worker that can never come up (bad artifacts, poisoned core)
+/// must not burn the fleet in a restart loop.
+#[derive(Debug, Clone, Copy)]
+pub struct StormConfig {
+    pub max_deaths: usize,
+    pub window: Duration,
+}
+
+/// Lifecycle of one worker slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerPhase {
+    /// Process spawned, stdout handshake not yet seen.
+    Starting,
+    /// Serving: receives proxied connections and health probes.
+    Live,
+    /// Dead; respawn scheduled at `until`.
+    Backoff { until: Instant },
+    /// Hit the storm cap; never respawned. Its share redistributes.
+    Quarantined,
+}
+
+/// What the supervisor must do about a death.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Restart { after: Duration },
+    Quarantine,
+}
+
+#[derive(Debug)]
+struct Slot {
+    phase: WorkerPhase,
+    /// Death timestamps still inside the storm window.
+    deaths: VecDeque<Instant>,
+    /// Consecutive deaths without a successful handshake between them.
+    streak: u32,
+}
+
+/// The supervision policy as a pure state machine — no processes, no
+/// sockets, the clock injected through every method, so backoff, storm
+/// quarantine and rebalance are all testable deterministically.
+#[derive(Debug)]
+pub struct FleetState {
+    slots: Vec<Slot>,
+    backoff: BackoffConfig,
+    storm: StormConfig,
+    /// Round-robin cursor for [`Self::pick`].
+    rr: usize,
+    restarts: u64,
+}
+
+impl FleetState {
+    pub fn new(workers: usize, backoff: BackoffConfig, storm: StormConfig) -> Self {
+        let slots = (0..workers.max(1))
+            .map(|_| Slot { phase: WorkerPhase::Starting, deaths: VecDeque::new(), streak: 0 })
+            .collect();
+        Self { slots, backoff, storm, rr: 0, restarts: 0 }
+    }
+
+    pub fn phase(&self, i: usize) -> WorkerPhase {
+        self.slots[i].phase
+    }
+
+    pub fn phases(&self) -> Vec<WorkerPhase> {
+        self.slots.iter().map(|s| s.phase).collect()
+    }
+
+    /// Handshake complete: the worker serves, and the backoff streak
+    /// resets — the *next* death starts again at the base delay.
+    pub fn on_ready(&mut self, i: usize) {
+        self.slots[i].phase = WorkerPhase::Live;
+        self.slots[i].streak = 0;
+    }
+
+    /// Record a death at `now`; decide restart-with-backoff vs quarantine.
+    pub fn on_death(&mut self, i: usize, now: Instant) -> Decision {
+        let slot = &mut self.slots[i];
+        slot.deaths.push_back(now);
+        while let Some(&t) = slot.deaths.front() {
+            if now.duration_since(t) > self.storm.window {
+                slot.deaths.pop_front();
+            } else {
+                break;
+            }
+        }
+        if slot.deaths.len() >= self.storm.max_deaths {
+            slot.phase = WorkerPhase::Quarantined;
+            return Decision::Quarantine;
+        }
+        let after = self.backoff.delay(slot.streak);
+        slot.streak = slot.streak.saturating_add(1);
+        slot.phase = WorkerPhase::Backoff { until: now + after };
+        Decision::Restart { after }
+    }
+
+    /// Slots whose backoff expired by `now`: moved to Starting and
+    /// counted as restarts (initial spawns never pass through here).
+    pub fn due_restarts(&mut self, now: Instant) -> Vec<usize> {
+        let mut due = Vec::new();
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if let WorkerPhase::Backoff { until } = s.phase {
+                if now >= until {
+                    s.phase = WorkerPhase::Starting;
+                    self.restarts += 1;
+                    due.push(i);
+                }
+            }
+        }
+        due
+    }
+
+    /// Round-robin over Live slots; dead/quarantined slots are skipped,
+    /// so their share redistributes with no further bookkeeping.
+    pub fn pick(&mut self) -> Option<usize> {
+        let n = self.slots.len();
+        for k in 0..n {
+            let i = (self.rr + k) % n;
+            if self.slots[i].phase == WorkerPhase::Live {
+                self.rr = (i + 1) % n;
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    pub fn live(&self) -> usize {
+        self.slots.iter().filter(|s| s.phase == WorkerPhase::Live).count()
+    }
+
+    pub fn quarantined(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.phase == WorkerPhase::Quarantined)
+            .count()
+    }
+
+    pub fn restarts_total(&self) -> u64 {
+        self.restarts
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet runtime
+// ---------------------------------------------------------------------------
+
+/// Resolved fleet configuration. The env layer (`RT3D_FLEET`,
+/// `RT3D_RESTART_BACKOFF_MS`, `RT3D_RESTART_STORM`) is applied by the
+/// CLI; this struct is env-free.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// The binary to re-invoke for workers (normally `current_exe()`).
+    pub exe: PathBuf,
+    pub workers: usize,
+    /// Public listen address (the supervisor's front door).
+    pub listen: String,
+    /// Extra `serve` flags forwarded verbatim to every worker
+    /// (`--model`, `--synthetic`, `--max-batch`, ...). Never includes
+    /// `--listen`: workers always bind `127.0.0.1:0`.
+    pub worker_args: Vec<String>,
+    pub backoff: BackoffConfig,
+    pub storm: StormConfig,
+    /// Honor a first-frame [`Frame::Shutdown`] on the public port.
+    pub allow_shutdown: bool,
+    pub probe_interval: Duration,
+    /// A worker that has not completed the stdout handshake within this
+    /// budget is killed and counted as a death.
+    pub startup_timeout: Duration,
+}
+
+impl FleetOptions {
+    pub fn new(exe: PathBuf, workers: usize) -> Self {
+        Self {
+            exe,
+            workers: workers.max(1),
+            listen: "127.0.0.1:0".into(),
+            worker_args: Vec::new(),
+            backoff: BackoffConfig::from_base(Duration::from_millis(
+                crate::util::env::DEFAULT_RESTART_BACKOFF_MS,
+            )),
+            storm: StormConfig { max_deaths: 5, window: Duration::from_secs(30) },
+            allow_shutdown: false,
+            probe_interval: Duration::from_secs(1),
+            startup_timeout: Duration::from_secs(60),
+        }
+    }
+
+    pub fn listen(mut self, addr: impl Into<String>) -> Self {
+        self.listen = addr.into();
+        self
+    }
+
+    pub fn worker_args(mut self, args: Vec<String>) -> Self {
+        self.worker_args = args;
+        self
+    }
+
+    pub fn backoff(mut self, b: BackoffConfig) -> Self {
+        self.backoff = b;
+        self
+    }
+
+    pub fn storm(mut self, s: StormConfig) -> Self {
+        self.storm = s;
+        self
+    }
+
+    pub fn allow_shutdown(mut self, yes: bool) -> Self {
+        self.allow_shutdown = yes;
+        self
+    }
+}
+
+/// One worker process and its plumbing.
+struct Proc {
+    pid: u32,
+    child: Option<Child>,
+    addr: Option<SocketAddr>,
+    /// Delivers the handshake address parsed off the worker's stdout.
+    addr_rx: Option<Receiver<SocketAddr>>,
+    stdout_thread: Option<std::thread::JoinHandle<()>>,
+    spawned: Instant,
+    last_probe: Instant,
+    /// Last successful probe snapshot — the fallback for `/metrics`
+    /// aggregation when a worker does not answer right now.
+    stats: Vec<ModelStats>,
+}
+
+struct Sup {
+    opts: FleetOptions,
+    state: Mutex<FleetState>,
+    procs: Mutex<Vec<Proc>>,
+    draining: AtomicBool,
+    /// Connection threads currently running (drain waits for them).
+    active: AtomicUsize,
+    /// One clone per accepted connection, force-closed at drain.
+    conns: Mutex<Vec<TcpStream>>,
+}
+
+/// Poisoned-lock recovery, same policy as the rest of the coordinator:
+/// a panicking thread never wedges its siblings.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+struct ActiveGuard<'a>(&'a AtomicUsize);
+
+impl<'a> ActiveGuard<'a> {
+    fn enter(c: &'a AtomicUsize) -> Self {
+        c.fetch_add(1, Ordering::SeqCst);
+        Self(c)
+    }
+}
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Run the supervisor until a drain is requested. Blocks the calling
+/// thread; prints the same `listening on ADDR` line as `rt3d serve` so
+/// the CI tooling works unchanged, plus `fleet: ...` lifecycle lines.
+pub fn run_fleet(opts: FleetOptions) -> Result<()> {
+    let addr: SocketAddr = opts
+        .listen
+        .parse()
+        .map_err(|e| anyhow!("bad listen address {:?}: {e}", opts.listen))?;
+    let (listener, reuse) = match reuseport_listener(addr) {
+        Some(l) => (l, true),
+        None => (TcpListener::bind(addr)?, false),
+    };
+    let public = listener.local_addr()?;
+    let state = FleetState::new(opts.workers, opts.backoff, opts.storm);
+    let sup = Arc::new(Sup {
+        opts,
+        state: Mutex::new(state),
+        procs: Mutex::new(Vec::new()),
+        draining: AtomicBool::new(false),
+        active: AtomicUsize::new(0),
+        conns: Mutex::new(Vec::new()),
+    });
+    {
+        let mut procs = lock(&sup.procs);
+        for i in 0..sup.opts.workers {
+            match spawn_worker(&sup.opts, i) {
+                Ok(p) => {
+                    println!("fleet: spawned worker {i} pid={}", p.pid);
+                    procs.push(p);
+                }
+                Err(e) => {
+                    // Never leak the workers that did spawn.
+                    for p in procs.iter_mut() {
+                        kill_and_reap(p);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+    }
+    println!(
+        "fleet: supervising {} workers, public listener {} ({})",
+        sup.opts.workers,
+        public,
+        if reuse { "SO_REUSEPORT" } else { "portable bind" }
+    );
+    println!("listening on {public}");
+    let acceptor = {
+        let sup = Arc::clone(&sup);
+        let l = listener.try_clone()?;
+        std::thread::Builder::new()
+            .name("rt3d-fleet-accept".into())
+            .spawn(move || accept_loop(&sup, &l))?
+    };
+    while !sup.draining.load(Ordering::SeqCst) {
+        tick(&sup, Instant::now());
+        std::thread::sleep(TICK);
+    }
+    drain(&sup);
+    // Unblock the acceptor (it re-checks `draining` after every accept).
+    let _ = TcpStream::connect(public);
+    let _ = acceptor.join();
+    Ok(())
+}
+
+/// Spawn one worker: the same binary, `serve` on a loopback ephemeral
+/// port, stdout piped for the handshake. `RT3D_FLEET` is stripped so a
+/// worker can never recurse into fleet mode, and `RT3D_LISTEN` is
+/// stripped because the explicit `--listen` must win.
+fn spawn_worker(opts: &FleetOptions, i: usize) -> Result<Proc> {
+    let mut cmd = Command::new(&opts.exe);
+    cmd.arg("serve")
+        .args(["--listen", "127.0.0.1:0", "--allow-shutdown"])
+        .args(&opts.worker_args)
+        .env_remove(crate::util::env::FLEET)
+        .env_remove(crate::util::env::LISTEN)
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit());
+    let mut child = cmd
+        .spawn()
+        .map_err(|e| anyhow!("spawn worker {i} ({:?}): {e}", opts.exe))?;
+    let pid = child.id();
+    let stdout = child
+        .stdout
+        .take()
+        .ok_or_else(|| anyhow!("worker {i}: stdout pipe missing"))?;
+    let (tx, rx) = channel();
+    let stdout_thread = std::thread::Builder::new()
+        .name(format!("rt3d-fleet-out-{i}"))
+        .spawn(move || {
+            // Parse the handshake, then keep draining to EOF so the
+            // worker never blocks on a full pipe.
+            for line in BufReader::new(stdout).lines() {
+                let Ok(line) = line else { break };
+                if let Some(rest) = line.strip_prefix("listening on ") {
+                    if let Ok(a) = rest.trim().parse::<SocketAddr>() {
+                        let _ = tx.send(a);
+                    }
+                }
+            }
+        })?;
+    Ok(Proc {
+        pid,
+        child: Some(child),
+        addr: None,
+        addr_rx: Some(rx),
+        stdout_thread: Some(stdout_thread),
+        spawned: Instant::now(),
+        last_probe: Instant::now(),
+        stats: Vec::new(),
+    })
+}
+
+/// True (once) when the child has exited; reaps it.
+fn child_exited(p: &mut Proc) -> bool {
+    let exited = match p.child.as_mut() {
+        Some(c) => !matches!(c.try_wait(), Ok(None)),
+        None => return false,
+    };
+    if exited {
+        p.child = None;
+        join_stdout(p);
+    }
+    exited
+}
+
+fn kill_and_reap(p: &mut Proc) {
+    if let Some(mut c) = p.child.take() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+    join_stdout(p);
+}
+
+/// Safe once the child is reaped: the pipe is at EOF, the thread exits.
+fn join_stdout(p: &mut Proc) {
+    if let Some(t) = p.stdout_thread.take() {
+        let _ = t.join();
+    }
+}
+
+/// One monitor step. Lock discipline: `state` and `procs` are never held
+/// together, and nothing blocking (probes, spawns) runs under a lock
+/// that a connection thread needs.
+fn tick(sup: &Arc<Sup>, now: Instant) {
+    let phases = lock(&sup.state).phases();
+    let mut readies = Vec::new();
+    let mut deaths: Vec<(usize, &'static str)> = Vec::new();
+    let mut probes = Vec::new();
+    {
+        let mut procs = lock(&sup.procs);
+        for (i, p) in procs.iter_mut().enumerate() {
+            match phases[i] {
+                WorkerPhase::Starting => {
+                    if let Some(addr) = p.addr_rx.as_ref().and_then(|rx| rx.try_recv().ok()) {
+                        p.addr = Some(addr);
+                        println!("fleet: worker {i} pid={} ready at {addr}", p.pid);
+                        readies.push(i);
+                    } else if child_exited(p) {
+                        deaths.push((i, "exited during startup"));
+                    } else if now.duration_since(p.spawned) > sup.opts.startup_timeout {
+                        kill_and_reap(p);
+                        deaths.push((i, "startup timeout"));
+                    }
+                }
+                WorkerPhase::Live => {
+                    if child_exited(p) {
+                        deaths.push((i, "process exited"));
+                    } else if now.duration_since(p.last_probe) >= sup.opts.probe_interval {
+                        p.last_probe = now;
+                        if let Some(a) = p.addr {
+                            probes.push((i, a));
+                        }
+                    }
+                }
+                WorkerPhase::Backoff { .. } | WorkerPhase::Quarantined => {}
+            }
+        }
+    }
+    for (i, addr) in probes {
+        match probe(addr) {
+            Ok(stats) => lock(&sup.procs)[i].stats = stats,
+            Err(_) => {
+                kill_and_reap(&mut lock(&sup.procs)[i]);
+                deaths.push((i, "failed health probe"));
+            }
+        }
+    }
+    {
+        let mut st = lock(&sup.state);
+        for i in readies {
+            st.on_ready(i);
+        }
+        for (i, why) in deaths {
+            match st.on_death(i, now) {
+                Decision::Restart { after } => println!(
+                    "fleet: worker {i} died ({why}); restart in {}ms",
+                    after.as_millis()
+                ),
+                Decision::Quarantine => println!(
+                    "fleet: worker {i} died ({why}); quarantined ({} deaths in {}ms)",
+                    sup.opts.storm.max_deaths,
+                    sup.opts.storm.window.as_millis()
+                ),
+            }
+        }
+    }
+    let due = lock(&sup.state).due_restarts(now);
+    for i in due {
+        match spawn_worker(&sup.opts, i) {
+            Ok(p) => {
+                let pid = p.pid;
+                let old = std::mem::replace(&mut lock(&sup.procs)[i], p);
+                drop(old);
+                let n = lock(&sup.state).restarts_total();
+                println!("fleet: restarted worker {i} pid={pid} (restart #{n})");
+            }
+            Err(e) => {
+                // Count the failed spawn as another death: back to backoff
+                // (and eventually quarantine) instead of a tight retry loop.
+                eprintln!("fleet: respawn of worker {i} failed: {e}");
+                let _ = lock(&sup.state).on_death(i, now);
+            }
+        }
+    }
+}
+
+/// Health probe: fresh connection, Ping, bounded wait for the Pong.
+fn probe(addr: SocketAddr) -> Result<Vec<ModelStats>> {
+    let mut c = NetClient::connect(addr)?;
+    c.set_read_timeout(Some(PROBE_TIMEOUT))?;
+    c.ping()
+}
+
+fn accept_loop(sup: &Arc<Sup>, listener: &TcpListener) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(_) => {
+                // Transient (ECONNABORTED etc.): keep the front door open.
+                if sup.draining.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if sup.draining.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Ok(c) = stream.try_clone() {
+            lock(&sup.conns).push(c);
+        }
+        let sup = Arc::clone(sup);
+        let _ = std::thread::Builder::new()
+            .name("rt3d-fleet-conn".into())
+            .spawn(move || handle_client(stream, &sup));
+    }
+}
+
+/// Sniff the first bytes of a connection: `GET ` → aggregated metrics,
+/// frame magic → Shutdown check, then hand the prefix to a worker.
+fn handle_client(mut client: TcpStream, sup: &Arc<Sup>) {
+    let _g = ActiveGuard::enter(&sup.active);
+    let _ = client.set_read_timeout(Some(SNIFF_TIMEOUT));
+    let mut first = [0u8; 4];
+    if client.read_exact(&mut first).is_err() {
+        let _ = client.shutdown(Shutdown::Both);
+        return;
+    }
+    if &first == b"GET " {
+        return handle_http(client, sup);
+    }
+    if first != MAGIC {
+        return send_error(client, net::ERR_BAD_FRAME, "bad magic");
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&MAGIC);
+    if client.read_exact(&mut header[4..]).is_err() {
+        let _ = client.shutdown(Shutdown::Both);
+        return;
+    }
+    let _ = client.set_read_timeout(None);
+    // A first-frame Shutdown targets the fleet itself: the 12 header
+    // bytes are the whole frame, so `decode` succeeds exactly for it.
+    if let Ok((Frame::Shutdown, _)) = Frame::decode(&header, net::DEFAULT_MAX_FRAME_BYTES) {
+        if sup.opts.allow_shutdown {
+            let mut scratch = Vec::new();
+            let _ = net::write_frame(&mut client, &Frame::Bye, &mut scratch);
+            let _ = client.shutdown(Shutdown::Both);
+            sup.draining.store(true, Ordering::SeqCst);
+        } else {
+            send_error(
+                client,
+                net::ERR_FORBIDDEN,
+                "shutdown not allowed; start the fleet with --allow-shutdown",
+            );
+        }
+        return;
+    }
+    proxy_to_worker(client, sup, header);
+}
+
+fn send_error(mut stream: TcpStream, code: u8, msg: &str) {
+    let mut scratch = Vec::new();
+    let _ = net::write_frame(
+        &mut stream,
+        &Frame::Error { code, msg: msg.to_string() },
+        &mut scratch,
+    );
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Pick a Live worker and splice the connection onto it, replaying the
+/// sniffed 12-byte prefix first. A worker that dies between pick and
+/// connect is simply skipped — the monitor reaps it independently.
+fn proxy_to_worker(client: TcpStream, sup: &Arc<Sup>, prefix: [u8; HEADER_LEN]) {
+    for _ in 0..sup.opts.workers {
+        let Some(addr) = pick_live(sup) else { break };
+        let Ok(mut upstream) = TcpStream::connect(addr) else { continue };
+        if upstream.write_all(&prefix).is_err() {
+            continue;
+        }
+        splice(client, upstream);
+        return;
+    }
+    send_error(client, net::ERR_INTERNAL, "no live workers");
+}
+
+fn pick_live(sup: &Sup) -> Option<SocketAddr> {
+    let i = lock(&sup.state).pick()?;
+    lock(&sup.procs)[i].addr
+}
+
+/// Bidirectional byte pump with half-close propagation: a client EOF
+/// becomes a worker-side write shutdown (the worker finishes in-flight
+/// responses and closes), and a worker close tears the client down and
+/// unblocks the uplink.
+fn splice(client: TcpStream, upstream: TcpStream) {
+    let (Ok(mut client_r), Ok(mut upstream_r)) = (client.try_clone(), upstream.try_clone())
+    else {
+        let _ = client.shutdown(Shutdown::Both);
+        return;
+    };
+    let mut upstream_w = upstream;
+    let up = std::thread::Builder::new()
+        .name("rt3d-fleet-up".into())
+        .spawn(move || {
+            let _ = std::io::copy(&mut client_r, &mut upstream_w);
+            let _ = upstream_w.shutdown(Shutdown::Write);
+        });
+    let mut client_w = client;
+    let _ = std::io::copy(&mut upstream_r, &mut client_w);
+    let _ = client_w.shutdown(Shutdown::Both);
+    if let Ok(h) = up {
+        let _ = h.join();
+    }
+}
+
+/// Aggregated `/metrics` over the whole fleet (same HTTP shape as the
+/// per-worker endpoint, so scrapers need no fleet awareness).
+fn handle_http(mut stream: TcpStream, sup: &Arc<Sup>) {
+    let mut head = Vec::with_capacity(256);
+    let mut byte = [0u8; 1];
+    while head.len() < 8192 && !head.ends_with(b"\r\n\r\n") {
+        match stream.read(&mut byte) {
+            Ok(1) => head.push(byte[0]),
+            _ => break,
+        }
+    }
+    let path_end = head.iter().position(|&b| b == b' ').unwrap_or(head.len());
+    let path = String::from_utf8_lossy(&head[..path_end]);
+    let (status, body) = if path == "/metrics" {
+        ("200 OK", aggregate_metrics(sup))
+    } else {
+        ("404 Not Found", format!("no route {path}; try GET /metrics\n"))
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(resp.as_bytes());
+    let _ = stream.flush();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Probe every live worker on demand (outside the locks) and render the
+/// fleet-wide page; a worker that does not answer contributes its last
+/// good snapshot.
+fn aggregate_metrics(sup: &Sup) -> String {
+    let (live_idx, quarantined, restarts) = {
+        let st = lock(&sup.state);
+        let live: Vec<usize> = (0..sup.opts.workers)
+            .filter(|&i| st.phase(i) == WorkerPhase::Live)
+            .collect();
+        (live, st.quarantined(), st.restarts_total())
+    };
+    let addrs: Vec<(usize, Option<SocketAddr>)> = {
+        let procs = lock(&sup.procs);
+        live_idx.iter().map(|&i| (i, procs[i].addr)).collect()
+    };
+    let mut per_worker = Vec::with_capacity(addrs.len());
+    for (i, addr) in addrs {
+        let stats = match addr.and_then(|a| probe(a).ok()) {
+            Some(fresh) => {
+                lock(&sup.procs)[i].stats = fresh.clone();
+                fresh
+            }
+            None => lock(&sup.procs)[i].stats.clone(),
+        };
+        per_worker.push((i, stats));
+    }
+    render_fleet_metrics(restarts, live_idx.len(), quarantined, &per_worker)
+}
+
+/// Render the fleet Prometheus page: supervisor-owned gauges/counters,
+/// per-model outcome counters **summed over workers** (label-compatible
+/// with the single-process renderer), and per-worker latency quantiles
+/// (quantiles are not summable across processes, so each worker keeps
+/// its own series under a `worker` label).
+pub fn render_fleet_metrics(
+    restarts: u64,
+    live: usize,
+    quarantined: usize,
+    per_worker: &[(usize, Vec<ModelStats>)],
+) -> String {
+    let mut out = String::with_capacity(1024);
+    out.push_str("# HELP rt3d_workers_live Workers currently serving.\n");
+    out.push_str("# TYPE rt3d_workers_live gauge\n");
+    let _ = writeln!(out, "rt3d_workers_live {live}");
+    out.push_str("# HELP rt3d_workers_quarantined Workers retired by the restart-storm cap.\n");
+    out.push_str("# TYPE rt3d_workers_quarantined gauge\n");
+    let _ = writeln!(out, "rt3d_workers_quarantined {quarantined}");
+    out.push_str("# HELP rt3d_worker_restarts_total Worker respawns performed by the supervisor.\n");
+    out.push_str("# TYPE rt3d_worker_restarts_total counter\n");
+    let _ = writeln!(out, "rt3d_worker_restarts_total {restarts}");
+
+    // ok/failed/shed/deadline/panics/breaker_trips summed per model.
+    let mut models: BTreeMap<&str, [u64; 6]> = BTreeMap::new();
+    for (_, stats) in per_worker {
+        for s in stats {
+            let c = models.entry(s.model.as_str()).or_default();
+            c[0] += s.ok;
+            c[1] += s.failed;
+            c[2] += s.shed;
+            c[3] += s.deadline_miss;
+            c[4] += s.panics;
+            c[5] += s.breaker_trips;
+        }
+    }
+    out.push_str("# HELP rt3d_requests_total Requests by final outcome, summed over live workers.\n");
+    out.push_str("# TYPE rt3d_requests_total counter\n");
+    for (model, c) in &models {
+        for (outcome, n) in [
+            ("ok", c[0]),
+            ("failed", c[1]),
+            ("shed", c[2]),
+            ("deadline_exceeded", c[3]),
+        ] {
+            let _ = writeln!(
+                out,
+                "rt3d_requests_total{{model=\"{model}\",outcome=\"{outcome}\"}} {n}"
+            );
+        }
+    }
+    out.push_str("# HELP rt3d_batch_panics_total Batches that panicked inside Backend::infer, summed over live workers.\n");
+    out.push_str("# TYPE rt3d_batch_panics_total counter\n");
+    for (model, c) in &models {
+        let _ = writeln!(out, "rt3d_batch_panics_total{{model=\"{model}\"}} {}", c[4]);
+    }
+    out.push_str("# HELP rt3d_breaker_trips_total Circuit-breaker trips, summed over live workers.\n");
+    out.push_str("# TYPE rt3d_breaker_trips_total counter\n");
+    for (model, c) in &models {
+        let _ = writeln!(out, "rt3d_breaker_trips_total{{model=\"{model}\"}} {}", c[5]);
+    }
+    out.push_str("# HELP rt3d_request_latency_seconds Per-worker request latency quantiles.\n");
+    out.push_str("# TYPE rt3d_request_latency_seconds gauge\n");
+    for (w, stats) in per_worker {
+        for s in stats {
+            for (q, us) in [("0.5", s.p50_us), ("0.99", s.p99_us), ("0.999", s.p999_us)] {
+                let _ = writeln!(
+                    out,
+                    "rt3d_request_latency_seconds{{model=\"{}\",worker=\"{w}\",quantile=\"{q}\"}} {}",
+                    s.model,
+                    us as f64 / 1e6
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Graceful drain: fan [`Frame::Shutdown`] to every running worker (each
+/// completes in-flight work and exits 0), reap them bounded, give the
+/// connection threads a grace period to forward response tails, then
+/// force-close stragglers.
+fn drain(sup: &Arc<Sup>) {
+    println!("fleet: draining");
+    let targets: Vec<SocketAddr> = {
+        let procs = lock(&sup.procs);
+        procs
+            .iter()
+            .filter(|p| p.child.is_some())
+            .filter_map(|p| p.addr)
+            .collect()
+    };
+    for addr in targets {
+        if let Ok(mut c) = NetClient::connect(addr) {
+            let _ = c.set_read_timeout(Some(Duration::from_secs(5)));
+            let _ = c.send(&Frame::Shutdown);
+            let _ = c.recv(); // Bye, best effort
+        }
+    }
+    let deadline = Instant::now() + Duration::from_secs(15);
+    {
+        let mut procs = lock(&sup.procs);
+        for (i, p) in procs.iter_mut().enumerate() {
+            loop {
+                match p.child.as_mut().map(Child::try_wait) {
+                    None => break,
+                    Some(Ok(Some(status))) => {
+                        println!("fleet: worker {i} exited ({status})");
+                        p.child = None;
+                        break;
+                    }
+                    Some(Ok(None)) => {
+                        if Instant::now() > deadline {
+                            eprintln!("fleet: worker {i} did not drain in time; killing");
+                            kill_and_reap(p);
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Some(Err(_)) => {
+                        p.child = None;
+                        break;
+                    }
+                }
+            }
+            join_stdout(p);
+        }
+    }
+    // Workers flushed before exiting; let proxies forward the tail.
+    let grace = Instant::now() + Duration::from_secs(5);
+    while sup.active.load(Ordering::SeqCst) > 0 && Instant::now() < grace {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    for c in lock(&sup.conns).drain(..) {
+        let _ = c.shutdown(Shutdown::Both);
+    }
+    println!(
+        "fleet: drained ({} restarts total)",
+        lock(&sup.state).restarts_total()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    fn state(workers: usize, max_deaths: usize) -> FleetState {
+        FleetState::new(
+            workers,
+            BackoffConfig::from_base(ms(100)),
+            StormConfig { max_deaths, window: Duration::from_secs(10) },
+        )
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let mut s = FleetState::new(
+            1,
+            BackoffConfig::from_base(ms(100)),
+            StormConfig { max_deaths: 1000, window: Duration::from_secs(100_000) },
+        );
+        let t0 = Instant::now();
+        s.on_ready(0);
+        assert_eq!(s.on_death(0, t0), Decision::Restart { after: ms(100) });
+        assert!(s.due_restarts(t0 + ms(99)).is_empty(), "not due early");
+        assert_eq!(s.due_restarts(t0 + ms(100)), vec![0]);
+        assert_eq!(s.restarts_total(), 1);
+        // Keeps dying without ever reaching Live: 200, 400, ... capped at
+        // 32x base = 3200ms.
+        let mut t = t0 + ms(100);
+        for k in 1..10u32 {
+            let expect = ms(100 << k.min(5)).min(ms(3200));
+            assert_eq!(s.on_death(0, t), Decision::Restart { after: expect });
+            t += expect;
+            assert_eq!(s.due_restarts(t), vec![0]);
+        }
+        assert_eq!(s.restarts_total(), 10);
+    }
+
+    #[test]
+    fn ready_resets_backoff_streak() {
+        let mut s = state(1, 1000);
+        let t0 = Instant::now();
+        s.on_ready(0);
+        assert_eq!(s.on_death(0, t0), Decision::Restart { after: ms(100) });
+        s.due_restarts(t0 + ms(100));
+        assert_eq!(
+            s.on_death(0, t0 + ms(150)),
+            Decision::Restart { after: ms(200) },
+            "second death in a row doubles"
+        );
+        s.due_restarts(t0 + ms(400));
+        s.on_ready(0); // handshake succeeded: streak resets
+        assert_eq!(
+            s.on_death(0, t0 + ms(500)),
+            Decision::Restart { after: ms(100) },
+            "death after a successful handshake starts at the base again"
+        );
+    }
+
+    #[test]
+    fn storm_cap_quarantines() {
+        let mut s = state(2, 3);
+        let t0 = Instant::now();
+        s.on_ready(0);
+        s.on_ready(1);
+        assert!(matches!(s.on_death(0, t0), Decision::Restart { .. }));
+        s.due_restarts(t0 + ms(100));
+        s.on_ready(0);
+        assert!(matches!(s.on_death(0, t0 + ms(500)), Decision::Restart { .. }));
+        s.due_restarts(t0 + ms(600));
+        s.on_ready(0);
+        // Third death inside the 10s window: quarantine, never restarted.
+        assert_eq!(s.on_death(0, t0 + ms(900)), Decision::Quarantine);
+        assert_eq!(s.phase(0), WorkerPhase::Quarantined);
+        assert_eq!(s.live(), 1);
+        assert_eq!(s.quarantined(), 1);
+        assert!(s.due_restarts(t0 + Duration::from_secs(1000)).is_empty());
+        assert_eq!(s.restarts_total(), 2);
+        // Its share redistributes: pick only ever returns the survivor.
+        for _ in 0..4 {
+            assert_eq!(s.pick(), Some(1));
+        }
+    }
+
+    #[test]
+    fn deaths_outside_window_never_quarantine() {
+        let mut s = state(1, 3);
+        let t0 = Instant::now();
+        for k in 0..6u64 {
+            // One death every 20s: only ever one inside the 10s window.
+            let now = t0 + Duration::from_secs(20 * k);
+            s.on_ready(0);
+            assert!(
+                matches!(s.on_death(0, now), Decision::Restart { .. }),
+                "death {k} must restart, not quarantine"
+            );
+            s.due_restarts(now + ms(100));
+        }
+    }
+
+    #[test]
+    fn pick_round_robins_live_workers_and_rebalances() {
+        let mut s = state(3, 1000);
+        assert_eq!(s.pick(), None, "nothing live yet");
+        for i in 0..3 {
+            s.on_ready(i);
+        }
+        assert_eq!(
+            (s.pick(), s.pick(), s.pick(), s.pick()),
+            (Some(0), Some(1), Some(2), Some(0))
+        );
+        // Worker 1 dies: the rotation closes over the survivors.
+        s.on_death(1, Instant::now());
+        let picks: Vec<_> = (0..4).map(|_| s.pick().unwrap()).collect();
+        assert!(!picks.contains(&1), "dead worker picked: {picks:?}");
+        assert!(picks.contains(&0) && picks.contains(&2), "{picks:?}");
+    }
+
+    #[test]
+    fn reuseport_allows_double_bind() {
+        let addr: SocketAddr = "127.0.0.1:0".parse().unwrap();
+        // Portable fallback platforms have nothing to assert.
+        let Some(a) = reuseport_listener(addr) else { return };
+        let got = a.local_addr().unwrap();
+        let b = reuseport_listener(got)
+            .expect("second SO_REUSEPORT bind of the same port must succeed");
+        assert_eq!(b.local_addr().unwrap().port(), got.port());
+        // A plain bind (no SO_REUSEPORT) of the same port must fail.
+        assert!(TcpListener::bind(got).is_err());
+        // The raw-syscall listener actually accepts.
+        drop(b);
+        let client = TcpStream::connect(got).unwrap();
+        let (srv, _) = a.accept().unwrap();
+        drop((client, srv));
+    }
+
+    #[test]
+    fn fleet_metrics_aggregate_and_label_shape() {
+        let w0 = ModelStats {
+            model: "c3d".into(),
+            ok: 5,
+            shed: 1,
+            p50_us: 1000,
+            ..Default::default()
+        };
+        let w1 = ModelStats {
+            model: "c3d".into(),
+            ok: 7,
+            panics: 2,
+            p50_us: 2000,
+            ..Default::default()
+        };
+        let page =
+            render_fleet_metrics(3, 2, 1, &[(0, vec![w0]), (1, vec![w1])]);
+        for needle in [
+            "rt3d_worker_restarts_total 3",
+            "rt3d_workers_live 2",
+            "rt3d_workers_quarantined 1",
+            "rt3d_requests_total{model=\"c3d\",outcome=\"ok\"} 12",
+            "rt3d_requests_total{model=\"c3d\",outcome=\"shed\"} 1",
+            "rt3d_requests_total{model=\"c3d\",outcome=\"failed\"} 0",
+            "rt3d_batch_panics_total{model=\"c3d\"} 2",
+            "rt3d_breaker_trips_total{model=\"c3d\"} 0",
+            "rt3d_request_latency_seconds{model=\"c3d\",worker=\"0\",quantile=\"0.5\"} 0.001",
+            "rt3d_request_latency_seconds{model=\"c3d\",worker=\"1\",quantile=\"0.5\"} 0.002",
+        ] {
+            assert!(page.contains(needle), "missing {needle:?} in:\n{page}");
+        }
+    }
+}

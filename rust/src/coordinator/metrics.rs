@@ -14,6 +14,9 @@ pub struct LatencyStats {
     pub p50_s: f64,
     pub p95_s: f64,
     pub p99_s: f64,
+    /// p99.9 — the tail the fleet bench gates on; with fewer than ~1000
+    /// samples it degenerates toward `max_s`, which is the honest reading.
+    pub p999_s: f64,
     pub max_s: f64,
 }
 
@@ -34,6 +37,7 @@ impl LatencyStats {
             p50_s: pct(0.50),
             p95_s: pct(0.95),
             p99_s: pct(0.99),
+            p999_s: pct(0.999),
             max_s: samples[n - 1],
         }
     }
@@ -217,7 +221,7 @@ impl Metrics {
 /// (version 0.0.4): one `rt3d_requests_total{model,outcome}` counter per
 /// [`super::Outcome`] class, panic / breaker-trip counters, shed / failed
 /// rate gauges, and the served-latency distribution as a summary with
-/// p50/p95/p99 quantiles. This is exactly [`Metrics::snapshot`] +
+/// p50/p95/p99/p99.9 quantiles. This is exactly [`Metrics::snapshot`] +
 /// [`Metrics::latency`] — the CLI summary, the bench JSON and the
 /// `/metrics` endpoint all read the same counters, so they cannot
 /// disagree.
@@ -300,9 +304,12 @@ pub fn render_prometheus(models: &[(String, Arc<Metrics>)]) -> String {
     for (model, m) in models {
         let lat = m.latency();
         let model = esc(model);
-        for (q, v) in
-            [("0.5", lat.p50_s), ("0.95", lat.p95_s), ("0.99", lat.p99_s)]
-        {
+        for (q, v) in [
+            ("0.5", lat.p50_s),
+            ("0.95", lat.p95_s),
+            ("0.99", lat.p99_s),
+            ("0.999", lat.p999_s),
+        ] {
             let _ = writeln!(
                 out,
                 "rt3d_request_latency_seconds{{model=\"{model}\",quantile=\"{q}\"}} {v}"
@@ -330,8 +337,23 @@ mod tests {
     fn percentiles_ordered() {
         let s = LatencyStats::from_samples((1..=100).map(|i| i as f64).collect());
         assert_eq!(s.count, 100);
-        assert!(s.p50_s <= s.p95_s && s.p95_s <= s.p99_s && s.p99_s <= s.max_s);
+        assert!(s.p50_s <= s.p95_s && s.p95_s <= s.p99_s);
+        assert!(s.p99_s <= s.p999_s && s.p999_s <= s.max_s);
         assert_eq!(s.max_s, 100.0);
+    }
+
+    #[test]
+    fn p999_separates_from_p99_with_enough_samples() {
+        // 1000 samples with a 1% outlier tail: the p99 index (989) still
+        // reads the bulk, the p99.9 index (998) lands inside the tail.
+        let mut samples: Vec<f64> = vec![1.0; 990];
+        samples.extend([1000.0; 10]);
+        let s = LatencyStats::from_samples(samples);
+        assert_eq!(s.p99_s, 1.0);
+        assert_eq!(s.p999_s, 1000.0);
+        // Small sample counts degenerate to max, never past it.
+        let tiny = LatencyStats::from_samples(vec![0.1, 0.2, 0.3]);
+        assert_eq!(tiny.p999_s, tiny.max_s);
     }
 
     #[test]
@@ -350,6 +372,9 @@ mod tests {
         assert_eq!(s.count, 3);
         assert_eq!(s.p50_s, 0.2, "finite percentiles stay ordered");
         assert!(s.max_s.is_nan(), "NaN sorts last under total_cmp");
+        // The p99.9 index rounds to the same (NaN) slot — it must follow
+        // the same never-panic contract as the rest of the stats path.
+        assert!(s.p999_s.is_nan());
     }
 
     #[test]
@@ -418,6 +443,7 @@ mod tests {
             "rt3d_failed_rate{model=\"c3d\"} 0.25",
             "# TYPE rt3d_request_latency_seconds summary",
             "rt3d_request_latency_seconds{model=\"c3d\",quantile=\"0.95\"} 0.03",
+            "rt3d_request_latency_seconds{model=\"c3d\",quantile=\"0.999\"} 0.03",
             "rt3d_request_latency_seconds_count{model=\"c3d\"} 2",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");

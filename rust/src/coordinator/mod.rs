@@ -46,6 +46,13 @@
 //!   `/metrics` thin layer on the same socket, and the hot-swap control
 //!   frame driving [`Router::stage`]. See the crate-level "Wire
 //!   protocol" section.
+//! * [`fleet`] — crash isolation beyond the process boundary
+//!   (`rt3d fleet -n P`): a supervisor owning the public listener and
+//!   `P` worker processes (each a full `serve` re-invocation on a
+//!   loopback port), with wire-protocol health probes, backoff restarts
+//!   with a restart-storm quarantine, connection-level balancing,
+//!   aggregated `/metrics` and graceful drain. See the crate-level
+//!   "Fleet supervision" section.
 //!
 //! # Fault model
 //!
@@ -67,6 +74,7 @@
 
 pub mod batcher;
 pub mod faults;
+pub mod fleet;
 pub mod metrics;
 pub mod net;
 pub mod router;
@@ -75,6 +83,7 @@ pub mod session;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use faults::{Fault, FaultBackend, FaultPlan};
+pub use fleet::{run_fleet, BackoffConfig, FleetOptions, FleetState, StormConfig};
 pub use metrics::{render_prometheus, LatencyStats, Metrics, MetricsSnapshot};
 pub use net::{BackendFactory, Frame, NetClient, NetServer, NetServerConfig};
 pub use router::{Deployment, Policy, Router};

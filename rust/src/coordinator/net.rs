@@ -37,6 +37,8 @@
 //! | 5    | Error      | code u8 · msg_len u16 + UTF-8 (server closes the connection after sending) |
 //! | 6    | Shutdown   | (empty) request server shutdown (honored only with `--allow-shutdown`) |
 //! | 7    | Bye        | (empty) shutdown acknowledged |
+//! | 8    | Ping       | (empty) health probe — the fleet supervisor's liveness check |
+//! | 9    | Pong       | n_models u16, then per model: model_len u16 + UTF-8 · ok/failed/shed/deadline/panics/breaker_trips u64×6 · p50/p99/p99.9 latency µs u64×3 |
 //!
 //! `Outcome` tags: 0 = Ok, 1 = Failed, 2 = Shed, 3 = DeadlineExceeded.
 //!
@@ -95,6 +97,8 @@ const FT_SWAP_DONE: u8 = 4;
 const FT_ERROR: u8 = 5;
 const FT_SHUTDOWN: u8 = 6;
 const FT_BYE: u8 = 7;
+const FT_PING: u8 = 8;
+const FT_PONG: u8 = 9;
 
 // Error frame codes.
 /// Malformed / oversize / unparseable frame.
@@ -164,6 +168,58 @@ pub enum Frame {
     Shutdown,
     /// Server → client: shutdown acknowledged.
     Bye,
+    /// Client → server: health probe. Any live server answers with one
+    /// [`Frame::Pong`]; the fleet supervisor treats a timeout or error as
+    /// a dead worker.
+    Ping,
+    /// Server → client: per-model outcome counters + latency quantiles —
+    /// the same numbers `/metrics` renders, in wire form so the fleet
+    /// supervisor can aggregate them without HTTP parsing.
+    Pong { stats: Vec<ModelStats> },
+}
+
+/// One model's serving counters as carried by [`Frame::Pong`] — a wire
+/// projection of [`super::metrics::MetricsSnapshot`] +
+/// [`super::metrics::LatencyStats`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ModelStats {
+    pub model: String,
+    pub ok: u64,
+    pub failed: u64,
+    pub shed: u64,
+    pub deadline_miss: u64,
+    pub panics: u64,
+    pub breaker_trips: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+}
+
+impl ModelStats {
+    /// Snapshot one model's live metrics into wire form.
+    pub fn capture(model: &str, m: &super::metrics::Metrics) -> Self {
+        let s = m.snapshot();
+        let lat = m.latency();
+        let us = |secs: f64| {
+            if secs.is_finite() && secs > 0.0 {
+                (secs * 1e6) as u64
+            } else {
+                0
+            }
+        };
+        Self {
+            model: model.to_string(),
+            ok: s.ok as u64,
+            failed: s.failed as u64,
+            shed: s.shed as u64,
+            deadline_miss: s.deadline_miss as u64,
+            panics: s.panics as u64,
+            breaker_trips: s.breaker_trips as u64,
+            p50_us: us(lat.p50_s),
+            p99_us: us(lat.p99_s),
+            p999_us: us(lat.p999_s),
+        }
+    }
 }
 
 impl Frame {
@@ -176,6 +232,8 @@ impl Frame {
             Frame::Error { .. } => FT_ERROR,
             Frame::Shutdown => FT_SHUTDOWN,
             Frame::Bye => FT_BYE,
+            Frame::Ping => FT_PING,
+            Frame::Pong { .. } => FT_PONG,
         }
     }
 
@@ -224,7 +282,28 @@ impl Frame {
                 out.push(*code);
                 put_str16(out, msg);
             }
-            Frame::Shutdown | Frame::Bye => {}
+            Frame::Pong { stats } => {
+                out.extend_from_slice(
+                    &(stats.len().min(u16::MAX as usize) as u16).to_le_bytes(),
+                );
+                for s in stats.iter().take(u16::MAX as usize) {
+                    put_str16(out, &s.model);
+                    for v in [
+                        s.ok,
+                        s.failed,
+                        s.shed,
+                        s.deadline_miss,
+                        s.panics,
+                        s.breaker_trips,
+                        s.p50_us,
+                        s.p99_us,
+                        s.p999_us,
+                    ] {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+            Frame::Shutdown | Frame::Bye | Frame::Ping => {}
         }
         let payload_len = (out.len() - HEADER_LEN) as u32;
         out[8..12].copy_from_slice(&payload_len.to_le_bytes());
@@ -304,6 +383,26 @@ impl Frame {
             FT_ERROR => Frame::Error { code: r.u8()?, msg: r.str16()? },
             FT_SHUTDOWN => Frame::Shutdown,
             FT_BYE => Frame::Bye,
+            FT_PING => Frame::Ping,
+            FT_PONG => {
+                let n = r.u16()? as usize;
+                let mut stats = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    stats.push(ModelStats {
+                        model: r.str16()?,
+                        ok: r.u64()?,
+                        failed: r.u64()?,
+                        shed: r.u64()?,
+                        deadline_miss: r.u64()?,
+                        panics: r.u64()?,
+                        breaker_trips: r.u64()?,
+                        p50_us: r.u64()?,
+                        p99_us: r.u64()?,
+                        p999_us: r.u64()?,
+                    });
+                }
+                Frame::Pong { stats }
+            }
             t => return Err(anyhow!("unknown frame type {t}")),
         };
         if r.pos != payload.len() {
@@ -362,6 +461,11 @@ impl Cursor<'_> {
 
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
     fn u32(&mut self) -> Result<u32> {
@@ -491,6 +595,7 @@ enum ConnOut {
     SwapDone { ok: bool, msg: String },
     Error { code: u8, msg: String },
     Bye,
+    Pong(Vec<ModelStats>),
 }
 
 /// Where a routed response should be delivered: which connection, and
@@ -830,6 +935,18 @@ fn handle_binary(stream: TcpStream, shared: &Arc<Shared>) {
                     Err(e) => ConnOut::SwapDone { ok: false, msg: e.to_string() },
                 });
             }
+            Frame::Ping => {
+                // Health probe: answer with every model's live counters.
+                // Cheap enough for a per-second supervisor probe loop
+                // (snapshot + one latency sort per model).
+                let stats = shared
+                    .router
+                    .metrics_all()
+                    .iter()
+                    .map(|(model, m)| ModelStats::capture(model, m))
+                    .collect();
+                let _ = out_tx.send(ConnOut::Pong(stats));
+            }
             Frame::Shutdown => {
                 if shared.cfg.allow_shutdown {
                     let _ = out_tx.send(ConnOut::Bye);
@@ -850,7 +967,8 @@ fn handle_binary(stream: TcpStream, shared: &Arc<Shared>) {
             Frame::Response { .. }
             | Frame::SwapDone { .. }
             | Frame::Error { .. }
-            | Frame::Bye => {
+            | Frame::Bye
+            | Frame::Pong { .. } => {
                 let _ = out_tx.send(ConnOut::Error {
                     code: ERR_BAD_FRAME,
                     msg: "unexpected server-to-client frame type".into(),
@@ -918,6 +1036,7 @@ fn writer_loop(stream: TcpStream, rx: &Receiver<ConnOut>) {
             ConnOut::SwapDone { ok, msg } => Frame::SwapDone { ok, msg },
             ConnOut::Error { code, msg } => Frame::Error { code, msg },
             ConnOut::Bye => Frame::Bye,
+            ConnOut::Pong(stats) => Frame::Pong { stats },
         };
         if write_frame(&mut w, &frame, &mut buf).is_err() {
             return;
@@ -986,6 +1105,24 @@ impl NetClient {
         self.stream.shutdown(Shutdown::Write)?;
         Ok(())
     }
+
+    /// Bound how long [`Self::recv`] (and everything built on it) blocks.
+    /// `None` restores the default blocking reads.
+    pub fn set_read_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(t)?;
+        Ok(())
+    }
+
+    /// Health probe: one [`Frame::Ping`] → the server's per-model stats.
+    /// Anything other than a Pong is an error (the fleet supervisor
+    /// treats it as a dead worker).
+    pub fn ping(&mut self) -> Result<Vec<ModelStats>> {
+        self.send(&Frame::Ping)?;
+        match self.recv()? {
+            Frame::Pong { stats } => Ok(stats),
+            other => Err(anyhow!("expected Pong, got {other:?}")),
+        }
+    }
 }
 
 /// One-shot HTTP scrape of `/metrics` from a listening net server.
@@ -1031,6 +1168,47 @@ mod tests {
         Frame::Error { code: 1, msg: "x".repeat(100) }.encode_into(&mut buf);
         let err = Frame::decode(&buf, 16).unwrap_err();
         assert!(err.to_string().contains("oversize"), "err: {err}");
+    }
+
+    #[test]
+    fn ping_pong_round_trip() {
+        let mut buf = Vec::new();
+        Frame::Ping.encode_into(&mut buf);
+        assert_eq!(Frame::decode(&buf, usize::MAX).unwrap().0, Frame::Ping);
+
+        let pong = Frame::Pong {
+            stats: vec![
+                ModelStats {
+                    model: "c3d".into(),
+                    ok: 7,
+                    failed: 1,
+                    shed: 2,
+                    deadline_miss: 3,
+                    panics: 4,
+                    breaker_trips: 5,
+                    p50_us: 1_000,
+                    p99_us: 9_000,
+                    p999_us: 99_000,
+                },
+                ModelStats { model: "s3d".into(), ..Default::default() },
+            ],
+        };
+        pong.encode_into(&mut buf);
+        let (back, used) = Frame::decode(&buf, usize::MAX).unwrap();
+        assert_eq!(used, buf.len());
+        assert_eq!(back, pong);
+    }
+
+    #[test]
+    fn pong_captures_live_metrics() {
+        let m = super::super::metrics::Metrics::default();
+        m.record(0.010, 1, None);
+        m.record(0.020, 1, None);
+        m.record_shed();
+        let s = ModelStats::capture("c3d", &m);
+        assert_eq!((s.ok, s.shed), (2, 1));
+        assert_eq!(s.p99_us, 20_000);
+        assert_eq!(s.p999_us, 20_000);
     }
 
     #[test]

@@ -109,6 +109,33 @@
 //! ([`coordinator::render_prometheus`]) on the same listener. Frames
 //! above `RT3D_MAX_FRAME_MB` (default 64) are rejected per connection.
 //!
+//! # Fleet supervision
+//!
+//! `rt3d fleet -n P` (or `RT3D_FLEET` ≥ 2 with `serve --listen`) moves
+//! crash isolation past the batch boundary to the **process** boundary
+//! ([`coordinator::fleet`]). A supervisor owns the public listener and
+//! spawns `P` worker processes — each a full `serve` re-invocation with
+//! its own engine and [`coordinator::NetServer`] on a loopback ephemeral
+//! port, announced back over a `listening on ADDR` stdout handshake.
+//! Client connections are balanced round-robin across live workers and
+//! proxied byte-for-byte, so the wire protocol (and the bit-identity
+//! invariant) is unchanged; where available the listener binds with
+//! `SO_REUSEPORT` via a raw syscall (no libc dependency), falling back
+//! to a portable bind elsewhere. Supervision is wire-native: periodic
+//! Ping/Pong health probes plus child exit detection, restart with
+//! exponential backoff (`RT3D_RESTART_BACKOFF_MS`), and a restart-storm
+//! cap (`RT3D_RESTART_STORM`, `K@WINDOW_MS`) that quarantines a
+//! crash-looping worker and redistributes its share. `GET /metrics` on
+//! the public listener merges every live worker's snapshot and adds
+//! `rt3d_worker_restarts_total` / `rt3d_workers_live` /
+//! `rt3d_workers_quarantined`; a Shutdown frame (with
+//! `--allow-shutdown`) fans out to all workers, lets in-flight work
+//! drain, and exits 0. Proven end to end by `tests/fleet.rs` (kill -9 a
+//! worker, the sibling keeps serving bit-identically, the supervisor
+//! restarts the casualty) and the open-loop trace-replay harness
+//! ([`workload::replay`], `examples/trace_replay.rs`, gated via
+//! `BENCH_fleet.json`).
+//!
 //! # Layers
 //!
 //! * `runtime` — PJRT client loading the AOT HLO artifacts produced by
@@ -126,8 +153,11 @@
 //!   (the off-the-shelf-mobile substitute, DESIGN.md §2).
 //! * [`coordinator`] — the backend-agnostic serving runtime: request
 //!   router, clip batcher, pipelined multi-worker server, streaming
-//!   sessions, metrics, and the TCP front door (`net`).
-//! * [`workload`] — synthetic clip + request-trace generators for benches.
+//!   sessions, metrics, the TCP front door (`net`) and the multi-process
+//!   fleet supervisor (`fleet`).
+//! * [`workload`] — synthetic clip + request-trace generators and the
+//!   open-loop trace-replay load harness (`replay`) for benches and the
+//!   fleet tests.
 
 pub mod codegen;
 pub mod coordinator;

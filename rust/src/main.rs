@@ -5,8 +5,9 @@
 //! the request path).
 
 use rt3d::coordinator::{
-    Backend, BackendFactory, Deployment, FaultBackend, FaultPlan, NetServer,
-    NetServerConfig, Policy, Router, ServerConfig,
+    run_fleet, Backend, BackendFactory, BackoffConfig, Deployment, FaultBackend,
+    FaultPlan, FleetOptions, NetServer, NetServerConfig, Policy, Router,
+    ServerConfig, StormConfig,
 };
 use rt3d::device::ExecutorClass;
 use rt3d::executors::{EngineKind, NaiveBackend, NativeEngine};
@@ -18,12 +19,15 @@ use std::sync::Arc;
 const USAGE: &str = "\
 rt3d — RT3D (AAAI'21) reproduction runtime
 
-USAGE: rt3d [--artifacts DIR] <serve|bench|tune|inspect|env> [options]
+USAGE: rt3d [--artifacts DIR] <serve|fleet|bench|tune|inspect|env> [options]
 
   serve    --model c3d --backend rt3d|naive|untuned|pjrt [--sparse] \
            [--requests 32] [--max-batch 4] [--threads N] [--workers W] \
            [--variant dense_xla_b1] [--faults PLAN] [--listen ADDR] \
-           [--swap-artifacts DIR] [--allow-shutdown]
+           [--swap-artifacts DIR] [--allow-shutdown] \
+           [--synthetic tiny|default]
+  fleet    -n P [--listen ADDR] [--allow-shutdown] [--backoff-ms MS] \
+           [--storm K@WINDOW_MS] [+ serve flags, forwarded to workers]
   bench    --table 2|3|cache
   tune     --model c3d [--reps 3]
   inspect  --model c3d
@@ -47,6 +51,18 @@ a client stop the server with a Shutdown frame (CI teardown).
 load from (and, in self-drive mode, triggers one mid-stream swap).
 Without artifacts the synthetic in-memory C3D model serves instead.
 
+fleet runs P crash-isolated worker processes — each a full `serve` on
+a loopback ephemeral port — behind one supervisor-owned public
+listener: round-robin connection balancing, wire-protocol health
+probes, exponential-backoff restarts (RT3D_RESTART_BACKOFF_MS, doubled
+per consecutive death, capped at 32x) with a restart-storm quarantine
+(RT3D_RESTART_STORM, K@WINDOW_MS), fleet-aggregated GET /metrics
+(adds rt3d_worker_restarts_total / rt3d_workers_live), and graceful
+drain on a Shutdown frame. -n wins over RT3D_FLEET; RT3D_FLEET >= 2
+makes `serve --listen` itself delegate to fleet mode. --synthetic
+tiny|default serves the in-memory synthetic model unconditionally
+(tiny is the fast preset the integration tests use).
+
 --faults PLAN (or RT3D_FAULTS; --faults wins) wraps the backend in the
 deterministic fault injector, e.g. panic@0.02,slow=5ms@0.1,seed=7 —
 injected panics become per-request failed responses, not crashes; the
@@ -66,7 +82,7 @@ fn main() -> rt3d::Result<()> {
                 .or_else(|| args.get("engine"))
                 .unwrap_or(if args.flag("pjrt") { "pjrt" } else { "rt3d" })
                 .to_string();
-            serve(ServeOpts {
+            let opts = ServeOpts {
                 artifacts: artifacts.clone(),
                 model: args.get_or("model", "c3d"),
                 backend,
@@ -87,8 +103,19 @@ fn main() -> rt3d::Result<()> {
                     .or_else(rt3d::util::env::listen),
                 swap_artifacts: args.get("swap-artifacts").map(str::to_string),
                 allow_shutdown: args.flag("allow-shutdown"),
-            })
+                synthetic: args.get("synthetic").map(str::to_string),
+            };
+            // RT3D_FLEET >= 2 in network mode delegates to the fleet
+            // supervisor; it strips the knob when spawning workers, so
+            // they land back here and serve directly.
+            if opts.listen.is_some()
+                && rt3d::util::env::fleet().is_some_and(|n| n >= 2)
+            {
+                return fleet_cmd(&args);
+            }
+            serve(opts)
         }
+        Some("fleet") => fleet_cmd(&args),
         Some("bench") => match args.get_or("table", "2").as_str() {
             "2" => rt3d_bench::table2(&artifacts),
             "3" => rt3d_bench::table3(&artifacts),
@@ -110,6 +137,65 @@ fn main() -> rt3d::Result<()> {
             Ok(())
         }
     }
+}
+
+/// `rt3d fleet`: resolve CLI > env into [`FleetOptions`] and run the
+/// supervisor until drained. Worker processes get the relevant `serve`
+/// flags forwarded verbatim (never `--listen`: workers always bind
+/// loopback ephemeral ports).
+fn fleet_cmd(args: &Args) -> rt3d::Result<()> {
+    let n = match args.get_usize("n", 0) {
+        0 => rt3d::util::env::fleet().unwrap_or(2),
+        n => n,
+    };
+    let listen = args
+        .get("listen")
+        .map(str::to_string)
+        .or_else(rt3d::util::env::listen)
+        .unwrap_or_else(|| "127.0.0.1:0".into());
+    let mut worker_args = Vec::new();
+    for key in [
+        "artifacts",
+        "model",
+        "backend",
+        "engine",
+        "max-batch",
+        "threads",
+        "workers",
+        "variant",
+        "faults",
+        "synthetic",
+        "swap-artifacts",
+        "requests",
+    ] {
+        if let Some(v) = args.get(key) {
+            worker_args.push(format!("--{key}"));
+            worker_args.push(v.to_string());
+        }
+    }
+    if args.flag("sparse") {
+        worker_args.push("--sparse".into());
+    }
+    let backoff_ms = args
+        .get("backoff-ms")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(rt3d::util::env::restart_backoff_ms);
+    let (max_deaths, window_ms) = args
+        .get("storm")
+        .and_then(rt3d::util::env::parse_storm)
+        .unwrap_or_else(rt3d::util::env::restart_storm);
+    let opts = FleetOptions::new(std::env::current_exe()?, n)
+        .listen(listen)
+        .worker_args(worker_args)
+        .backoff(BackoffConfig::from_base(std::time::Duration::from_millis(
+            backoff_ms,
+        )))
+        .storm(StormConfig {
+            max_deaths,
+            window: std::time::Duration::from_millis(window_ms),
+        })
+        .allow_shutdown(args.flag("allow-shutdown"));
+    run_fleet(opts)
 }
 
 /// Construct the named backend over the loaded model — the CLI face of
@@ -160,6 +246,10 @@ struct ServeOpts {
     listen: Option<String>,
     swap_artifacts: Option<String>,
     allow_shutdown: bool,
+    /// Force the in-memory synthetic model (`tiny` or `default`) instead
+    /// of artifacts — fleet integration tests need workers that come up
+    /// in milliseconds even in debug builds.
+    synthetic: Option<String>,
 }
 
 /// Load the named model, falling back to the in-memory synthetic C3D when
@@ -179,11 +269,25 @@ fn load_or_synthetic(dir: &str, name: &str) -> rt3d::Result<Model> {
     }
 }
 
+/// Model resolution with the `--synthetic` override: a named preset
+/// serves the in-memory model unconditionally; otherwise artifacts with
+/// the synthetic-C3D fallback.
+fn load_model(opts: &ServeOpts, dir: &str) -> rt3d::Result<Model> {
+    match opts.synthetic.as_deref() {
+        Some("tiny") => Ok(Model::synthetic_c3d(SyntheticC3d::tiny())),
+        Some("default") => Ok(Model::synthetic_c3d(SyntheticC3d::default())),
+        Some(other) => Err(rt3d::anyhow!(
+            "unknown --synthetic preset {other:?} (expected tiny|default)"
+        )),
+        None => load_or_synthetic(dir, &opts.model),
+    }
+}
+
 /// One *unfaulted* deployment of the configured backend — used for the
 /// deployments hot swaps stage in (a swap is the operator's remediation
 /// path, so the fault injector never wraps them).
 fn build_deployment(opts: &ServeOpts, dir: &str, name: &str) -> rt3d::Result<Deployment> {
-    let model = load_or_synthetic(dir, &opts.model)?;
+    let model = load_model(opts, dir)?;
     let eng = build_backend(
         &model,
         &opts.backend,
@@ -200,7 +304,7 @@ fn build_deployment(opts: &ServeOpts, dir: &str, name: &str) -> rt3d::Result<Dep
 }
 
 fn serve(opts: ServeOpts) -> rt3d::Result<()> {
-    let model = load_or_synthetic(&opts.artifacts, &opts.model)?;
+    let model = load_model(&opts, &opts.artifacts)?;
     let in_dims = model.manifest.input;
     let mut eng = build_backend(
         &model,
@@ -328,11 +432,12 @@ fn print_summary(m: &rt3d::coordinator::Metrics) {
         println!("batches per worker: {wb:?}");
     }
     println!(
-        "latency ms: mean={:.1} p50={:.1} p95={:.1} p99={:.1}",
+        "latency ms: mean={:.1} p50={:.1} p95={:.1} p99={:.1} p99.9={:.1}",
         lat.mean_s * 1e3,
         lat.p50_s * 1e3,
         lat.p95_s * 1e3,
-        lat.p99_s * 1e3
+        lat.p99_s * 1e3,
+        lat.p999_s * 1e3
     );
     if let Some(acc) = m.accuracy() {
         println!("serving accuracy: {:.3}", acc);

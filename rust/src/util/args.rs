@@ -1,6 +1,8 @@
 //! Tiny CLI argument helper — replaces `clap` in the offline build.
 //!
-//! Syntax: `rt3d <subcommand> [--flag] [--key value] ...`
+//! Syntax: `rt3d <subcommand> [--flag] [--key value] [-k value] ...`
+//! Short options (`-n 2`) parse like long ones; a leading `-` followed by
+//! a digit (`-5`) stays a value/positional so negative numbers survive.
 
 use std::collections::HashMap;
 
@@ -13,6 +15,18 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
+/// A short option is `-` plus a non-digit (so `-5` / `-0.3` remain
+/// values) and not `--anything` (long options have their own branch).
+fn is_short_opt(tok: &str) -> bool {
+    match tok.strip_prefix('-') {
+        Some(rest) if !rest.starts_with('-') => rest
+            .chars()
+            .next()
+            .is_some_and(|c| !c.is_ascii_digit() && c != '.'),
+        _ => false,
+    }
+}
+
 impl Args {
     pub fn parse_env() -> Self {
         Self::parse(std::env::args().skip(1))
@@ -22,11 +36,14 @@ impl Args {
         let mut out = Args::default();
         let mut it = items.into_iter().peekable();
         while let Some(a) = it.next() {
-            if let Some(key) = a.strip_prefix("--") {
-                // `--key value` unless the next token is another option or
-                // missing -> boolean flag.
+            if let Some(key) = a
+                .strip_prefix("--")
+                .or_else(|| a.strip_prefix('-').filter(|_| is_short_opt(&a)))
+            {
+                // `--key value` / `-k value` unless the next token is
+                // another option or missing -> boolean flag.
                 match it.peek() {
-                    Some(next) if !next.starts_with("--") => {
+                    Some(next) if !next.starts_with("--") && !is_short_opt(next) => {
                         let v = it.next().unwrap();
                         out.opts.insert(key.to_string(), v);
                     }
@@ -91,5 +108,25 @@ mod tests {
     fn trailing_flag() {
         let a = parse("serve --sparse");
         assert!(a.flag("sparse"));
+    }
+
+    #[test]
+    fn short_options() {
+        let a = parse("fleet -n 2 --listen 127.0.0.1:0 -v");
+        assert_eq!(a.subcommand.as_deref(), Some("fleet"));
+        assert_eq!(a.get_usize("n", 0), 2);
+        assert_eq!(a.get("listen"), Some("127.0.0.1:0"));
+        assert!(a.flag("v"));
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_options() {
+        let a = parse("bench --offset -5 --scale -0.25");
+        assert_eq!(a.get("offset"), Some("-5"));
+        assert_eq!(a.get_f64("scale", 0.0), -0.25);
+        // A short option right after a long key turns the key into a flag.
+        let b = parse("fleet --verbose -n 2");
+        assert!(b.flag("verbose"));
+        assert_eq!(b.get_usize("n", 0), 2);
     }
 }

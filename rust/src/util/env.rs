@@ -32,6 +32,9 @@ pub const PREFETCH: &str = "RT3D_PREFETCH";
 pub const FAULTS: &str = "RT3D_FAULTS";
 pub const LISTEN: &str = "RT3D_LISTEN";
 pub const MAX_FRAME_MB: &str = "RT3D_MAX_FRAME_MB";
+pub const FLEET: &str = "RT3D_FLEET";
+pub const RESTART_BACKOFF_MS: &str = "RT3D_RESTART_BACKOFF_MS";
+pub const RESTART_STORM: &str = "RT3D_RESTART_STORM";
 
 /// One registered environment knob.
 pub struct Knob {
@@ -180,6 +183,40 @@ const KNOBS: &[Knob] = &[
             None => format!("{DEFAULT_MAX_FRAME_MB} MiB (default)"),
         },
     },
+    Knob {
+        name: FLEET,
+        help: "worker process count for fleet mode: `rt3d fleet` spawns \
+               this many crash-isolated serving processes (`-n` wins); \
+               `rt3d serve --listen` with this >= 2 delegates to fleet mode",
+        render: |raw| match parse_usize(raw).filter(|&n| n > 0) {
+            Some(n) => format!("{n} workers"),
+            None => "unset (single-process serving)".to_string(),
+        },
+    },
+    Knob {
+        name: RESTART_BACKOFF_MS,
+        help: "base delay before restarting a dead fleet worker; doubles \
+               per consecutive death, capped at 32x the base",
+        render: |raw| match parse_usize(raw).filter(|&n| n > 0) {
+            Some(n) => format!("{n} ms"),
+            None => format!("{DEFAULT_RESTART_BACKOFF_MS} ms (default)"),
+        },
+    },
+    Knob {
+        name: RESTART_STORM,
+        help: "restart-storm cap as K@WINDOW_MS: a fleet worker that dies \
+               K times inside the window is quarantined (its share moves \
+               to the survivors)",
+        render: |raw| match raw.map(str::trim) {
+            None | Some("") => {
+                format!("{DEFAULT_RESTART_STORM} (default)")
+            }
+            Some(spec) => match parse_storm(spec) {
+                Some((k, ms)) => format!("{k} deaths / {ms} ms"),
+                None => format!("{spec:?} (invalid: want K@WINDOW_MS)"),
+            },
+        },
+    },
 ];
 
 /// Default pre-park spin budget (see `util::pool`).
@@ -187,6 +224,13 @@ pub const DEFAULT_SPIN: usize = 4096;
 
 /// Default wire-frame payload cap in MiB (see [`crate::coordinator::net`]).
 pub const DEFAULT_MAX_FRAME_MB: usize = 64;
+
+/// Default fleet restart backoff base in ms (see
+/// [`crate::coordinator::fleet`]).
+pub const DEFAULT_RESTART_BACKOFF_MS: u64 = 200;
+
+/// Default restart-storm cap: 5 deaths inside 30 s quarantines the worker.
+pub const DEFAULT_RESTART_STORM: &str = "5@30000";
 
 /// The single raw read point for `RT3D_*` environment variables. Every
 /// other module resolves knobs through the typed accessors below, which
@@ -282,6 +326,40 @@ pub fn max_frame_bytes() -> usize {
         * 1024
 }
 
+/// Parse a `K@WINDOW_MS` restart-storm spec. `None` on any malformed
+/// input (zero counts/windows included — a 0-death cap would quarantine
+/// instantly and a 0 ms window never would).
+pub fn parse_storm(spec: &str) -> Option<(usize, u64)> {
+    let (k, ms) = spec.trim().split_once('@')?;
+    let k: usize = k.trim().parse().ok().filter(|&k| k > 0)?;
+    let ms: u64 = ms.trim().parse().ok().filter(|&ms| ms > 0)?;
+    Some((k, ms))
+}
+
+/// `RT3D_FLEET` when set and positive: the fleet worker-process count.
+pub fn fleet() -> Option<usize> {
+    parse_usize(var(FLEET).as_deref()).filter(|&n| n > 0)
+}
+
+/// Fleet restart backoff base ([`RESTART_BACKOFF_MS`], default
+/// [`DEFAULT_RESTART_BACKOFF_MS`]).
+pub fn restart_backoff_ms() -> u64 {
+    parse_usize(var(RESTART_BACKOFF_MS).as_deref())
+        .filter(|&n| n > 0)
+        .map(|n| n as u64)
+        .unwrap_or(DEFAULT_RESTART_BACKOFF_MS)
+}
+
+/// Restart-storm cap as `(deaths, window_ms)` ([`RESTART_STORM`], default
+/// [`DEFAULT_RESTART_STORM`]; malformed specs fall back to the default).
+pub fn restart_storm() -> (usize, u64) {
+    var(RESTART_STORM)
+        .as_deref()
+        .and_then(parse_storm)
+        .or_else(|| parse_storm(DEFAULT_RESTART_STORM))
+        .expect("default storm spec parses")
+}
+
 /// `RT3D_TUNE_DB` when set and non-empty.
 pub fn tune_db_path() -> Option<std::path::PathBuf> {
     var(TUNE_DB)
@@ -362,11 +440,22 @@ mod tests {
         // (the debug_assert in `var` enforces this at runtime too).
         for name in [
             THREADS, SIMD, FUSE, POOL, SPIN, TUNE_DB, BENCH_BUDGET_MS,
-            PRECISION, PREFETCH, FAULTS, LISTEN, MAX_FRAME_MB,
+            PRECISION, PREFETCH, FAULTS, LISTEN, MAX_FRAME_MB, FLEET,
+            RESTART_BACKOFF_MS, RESTART_STORM,
         ] {
             assert!(knobs().iter().any(|k| k.name == name), "{name} unregistered");
         }
-        assert_eq!(knobs().len(), 12, "new knob? register + document it");
+        assert_eq!(knobs().len(), 15, "new knob? register + document it");
+    }
+
+    #[test]
+    fn storm_spec_parses_and_rejects() {
+        assert_eq!(parse_storm("5@30000"), Some((5, 30000)));
+        assert_eq!(parse_storm(" 3 @ 1000 "), Some((3, 1000)));
+        assert_eq!(parse_storm(DEFAULT_RESTART_STORM), Some((5, 30000)));
+        for bad in ["", "5", "@", "0@1000", "5@0", "x@y", "5@30000@9"] {
+            assert_eq!(parse_storm(bad), None, "{bad:?} should not parse");
+        }
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Workload generators: synthetic action-recognition clips (the rust port
-//! of `python/compile/data.py`, same eight motion classes) and Poisson
-//! request traces for the serving benchmarks.
+//! of `python/compile/data.py`, same eight motion classes), Poisson request
+//! traces with bursty/diurnal rate modulation, and the open-loop
+//! trace-replay engine that drives a fleet over the wire.
 
 pub mod clips;
+pub mod replay;
 mod trace;
 
 pub use clips::{batch_clip_refs, batch_clips, make_clip, ClassId, NUM_CLASSES};
-pub use trace::{RequestTrace, TraceConfig};
+pub use replay::{replay, ReplayConfig, ReplayReport};
+pub use trace::{Modulation, RequestTrace, TraceConfig, TraceEntry};

@@ -1,0 +1,347 @@
+//! Open-loop trace replay over the wire — the load harness that proves
+//! the fleet.
+//!
+//! A [`RequestTrace`] (optionally bursty/diurnal via [`Modulation`]) is
+//! replayed against a serving endpoint **open-loop**: the pacer sends
+//! each request at its scheduled arrival instant regardless of whether
+//! earlier responses came back, and a response's latency is measured
+//! from the *scheduled* arrival — not from the send — so a stalled
+//! server honestly inflates the tail instead of silently slowing the
+//! offered load (no coordinated omission).
+//!
+//! Requests fan out over `sessions` persistent connections
+//! round-robin. Sessions alternate between two stream shapes, mirroring
+//! the session API's mixed workloads: even sessions submit fresh
+//! per-request clips (the trace's own clip seeds); odd sessions replay
+//! **windowed** streams — a rolling clip seed advanced by `stride` per
+//! request, i.e. successive windows of one longer synthetic video.
+//!
+//! The report separates the failure modes the fleet tests gate on:
+//! `lost` (connection died — e.g. a killed worker — with responses still
+//! owed) vs `unanswered` (a connection closed *cleanly* while still
+//! owing responses — a protocol violation that must always be 0).
+
+use super::trace::{Modulation, RequestTrace, TraceConfig};
+use crate::coordinator::metrics::LatencyStats;
+use crate::coordinator::net::{self, Frame};
+use crate::coordinator::Outcome;
+use crate::util::error::Result;
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Everything one replay run needs, resolved by the caller.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Serving endpoint (a worker or a fleet supervisor — the wire
+    /// semantics are identical).
+    pub addr: String,
+    pub model: String,
+    /// Mean offered arrival rate (requests/s) before modulation.
+    pub rate_hz: f64,
+    pub requests: usize,
+    pub seed: u64,
+    pub modulation: Modulation,
+    /// Persistent connections to spread the trace over.
+    pub sessions: usize,
+    /// Clip geometry — must match the served model's input.
+    pub frames: usize,
+    pub size: usize,
+    /// Per-request deadline in ms; 0 = none.
+    pub deadline_ms: u32,
+    /// Window advance for the odd (windowed) sessions' rolling seed.
+    pub stride: u64,
+    /// A reader with responses still owed that sees no bytes for this
+    /// long gives up and counts the remainder as lost.
+    pub stall_timeout: Duration,
+}
+
+impl ReplayConfig {
+    pub fn new(addr: impl Into<String>) -> Self {
+        Self {
+            addr: addr.into(),
+            model: "c3d".into(),
+            rate_hz: 50.0,
+            requests: 200,
+            seed: 1,
+            modulation: Modulation::None,
+            sessions: 2,
+            frames: 16,
+            size: 32,
+            deadline_ms: 0,
+            stride: 2,
+            stall_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What came back, in the units the bench gate records.
+#[derive(Debug, Clone, Default)]
+pub struct ReplayReport {
+    /// Requests actually written to a live connection.
+    pub sent: usize,
+    /// Requests skipped because their session was already dead.
+    pub skipped: usize,
+    pub ok: usize,
+    pub failed: usize,
+    pub shed: usize,
+    pub deadline_miss: usize,
+    /// Owed responses on connections that died (I/O error mid-run).
+    pub lost: usize,
+    /// Owed responses on connections that closed cleanly — exactly-one-
+    /// response violated; must be 0 against any correct server.
+    pub unanswered: usize,
+    /// Quantiles over Ok responses, scheduled-arrival-relative (ms).
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub max_ms: f64,
+    pub mean_ms: f64,
+    pub shed_rate: f64,
+    pub wall_s: f64,
+    /// Trace-intrinsic offered rate (requests / trace duration).
+    pub offered_rate_hz: f64,
+    /// Ok responses per wall second.
+    pub achieved_rate_hz: f64,
+}
+
+impl ReplayReport {
+    pub fn completed(&self) -> usize {
+        self.ok + self.failed + self.shed + self.deadline_miss
+    }
+}
+
+/// Per-session shared state between the pacer and that session's reader.
+struct SessionState {
+    /// Request ids written but not yet answered.
+    pending: Mutex<HashMap<u64, ()>>,
+    /// Reader exited on an I/O error (vs a clean post-EOF return).
+    errored: AtomicBool,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Replay the trace; returns when every session has drained (all
+/// responses in, or the connection died, or the stall timeout fired).
+pub fn replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
+    let trace = RequestTrace::poisson_modulated(
+        &TraceConfig { rate_hz: cfg.rate_hz, count: cfg.requests, seed: cfg.seed },
+        cfg.modulation,
+    );
+    let n_sessions = cfg.sessions.max(1);
+    let max_frame = net::DEFAULT_MAX_FRAME_BYTES;
+
+    // Shared bookkeeping: scheduled arrival instants (latency base) and
+    // completed outcomes.
+    let arrivals: Arc<Mutex<HashMap<u64, Instant>>> =
+        Arc::new(Mutex::new(HashMap::with_capacity(cfg.requests)));
+    let completed: Arc<Mutex<Vec<(Outcome, f64)>>> =
+        Arc::new(Mutex::new(Vec::with_capacity(cfg.requests)));
+    let writes_done = Arc::new(AtomicBool::new(false));
+
+    let mut writers: Vec<Option<TcpStream>> = Vec::with_capacity(n_sessions);
+    let mut states: Vec<Arc<SessionState>> = Vec::with_capacity(n_sessions);
+    let mut readers = Vec::with_capacity(n_sessions);
+    for _ in 0..n_sessions {
+        let stream = TcpStream::connect(&cfg.addr)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(cfg.stall_timeout))?;
+        let read_half = stream.try_clone()?;
+        let state = Arc::new(SessionState {
+            pending: Mutex::new(HashMap::new()),
+            errored: AtomicBool::new(false),
+        });
+        let (st, arr, comp, done) = (
+            Arc::clone(&state),
+            Arc::clone(&arrivals),
+            Arc::clone(&completed),
+            Arc::clone(&writes_done),
+        );
+        readers.push(
+            std::thread::Builder::new()
+                .name("rt3d-replay-read".into())
+                .spawn(move || reader_loop(read_half, &st, &arr, &comp, &done, max_frame))?,
+        );
+        writers.push(Some(stream));
+        states.push(state);
+    }
+
+    // Pacer: open-loop send at each scheduled arrival.
+    let t0 = Instant::now();
+    let mut scratch = Vec::new();
+    let mut window_seed: Vec<u64> =
+        (0..n_sessions).map(|k| cfg.seed.wrapping_mul(7919).wrapping_add(k as u64)).collect();
+    let mut report = ReplayReport::default();
+    for (i, e) in trace.entries.iter().enumerate() {
+        let due = t0 + Duration::from_secs_f64(e.arrival_s);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let k = i % n_sessions;
+        let Some(w) = writers[k].as_mut() else {
+            report.skipped += 1;
+            continue;
+        };
+        let id = i as u64;
+        // Windowed sessions advance a rolling seed; fresh sessions use
+        // the trace's per-request clip seed.
+        let clip_seed = if k % 2 == 1 {
+            let s = window_seed[k];
+            window_seed[k] = s.wrapping_add(cfg.stride);
+            s
+        } else {
+            e.clip_seed
+        };
+        let clip = super::make_clip(e.label, clip_seed, cfg.frames, cfg.size);
+        // Register before sending so a fast response never races its slot.
+        lock(&arrivals).insert(id, due);
+        lock(&states[k].pending).insert(id, ());
+        let frame = Frame::Request {
+            id,
+            model: cfg.model.clone(),
+            deadline_ms: cfg.deadline_ms,
+            label: Some(e.label as u32),
+            clip,
+        };
+        let wrote = net::write_frame(w, &frame, &mut scratch).is_ok();
+        if wrote {
+            report.sent += 1;
+        } else {
+            // Session died under us (e.g. its worker was killed).
+            lock(&arrivals).remove(&id);
+            lock(&states[k].pending).remove(&id);
+            report.skipped += 1;
+            let _ = w.shutdown(Shutdown::Both);
+            writers[k] = None;
+        }
+    }
+    writes_done.store(true, Ordering::SeqCst);
+    // Half-close every session: the server drains in-flight responses,
+    // then closes, which ends that session's reader at a clean EOF.
+    for w in writers.iter().flatten() {
+        let _ = w.shutdown(Shutdown::Write);
+    }
+    for r in readers {
+        let _ = r.join();
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+
+    for st in &states {
+        let owed = lock(&st.pending).len();
+        if st.errored.load(Ordering::SeqCst) {
+            report.lost += owed;
+        } else {
+            report.unanswered += owed;
+        }
+    }
+    let mut ok_lat = Vec::new();
+    for (outcome, lat_s) in lock(&completed).iter() {
+        match outcome {
+            Outcome::Ok => {
+                report.ok += 1;
+                ok_lat.push(*lat_s);
+            }
+            Outcome::Failed => report.failed += 1,
+            Outcome::Shed => report.shed += 1,
+            Outcome::DeadlineExceeded => report.deadline_miss += 1,
+        }
+    }
+    let lat = LatencyStats::from_samples(ok_lat);
+    report.p50_ms = lat.p50_s * 1e3;
+    report.p99_ms = lat.p99_s * 1e3;
+    report.p999_ms = lat.p999_s * 1e3;
+    report.max_ms = lat.max_s * 1e3;
+    report.mean_ms = lat.mean_s * 1e3;
+    let done = report.completed();
+    report.shed_rate = if done > 0 { report.shed as f64 / done as f64 } else { 0.0 };
+    report.offered_rate_hz = if trace.duration() > 0.0 {
+        trace.entries.len() as f64 / trace.duration()
+    } else {
+        0.0
+    };
+    report.achieved_rate_hz =
+        if report.wall_s > 0.0 { report.ok as f64 / report.wall_s } else { 0.0 };
+    Ok(report)
+}
+
+/// Drain responses for one session until EOF/error; latency is measured
+/// against the scheduled arrival instant registered by the pacer.
+fn reader_loop(
+    stream: TcpStream,
+    st: &SessionState,
+    arrivals: &Mutex<HashMap<u64, Instant>>,
+    completed: &Mutex<Vec<(Outcome, f64)>>,
+    writes_done: &AtomicBool,
+    max_frame: usize,
+) {
+    let mut reader = BufReader::new(stream);
+    let mut scratch = Vec::new();
+    loop {
+        match net::read_frame(&mut reader, &mut scratch, max_frame) {
+            Ok(Frame::Response { id, outcome, .. }) => {
+                let due = lock(arrivals).remove(&id);
+                lock(&st.pending).remove(&id);
+                if let Some(due) = due {
+                    let lat = Instant::now().saturating_duration_since(due);
+                    lock(completed).push((outcome, lat.as_secs_f64()));
+                }
+            }
+            // Error frame: the server is closing this connection on us.
+            Ok(Frame::Error { .. }) => {
+                st.errored.store(true, Ordering::SeqCst);
+                return;
+            }
+            Ok(_) => {}
+            Err(_) => {
+                // EOF after our half-close with nothing owed is the clean
+                // path; anything else (reset, stall timeout, early EOF
+                // from a killed worker) marks the session errored.
+                let clean =
+                    writes_done.load(Ordering::SeqCst) && lock(&st.pending).is_empty();
+                if !clean {
+                    st.errored.store(true, Ordering::SeqCst);
+                }
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let c = ReplayConfig::new("127.0.0.1:0");
+        assert!(c.sessions >= 1 && c.rate_hz > 0.0 && c.requests > 0);
+        assert_eq!(c.modulation, Modulation::None);
+    }
+
+    #[test]
+    fn report_accounting() {
+        let r = ReplayReport {
+            ok: 8,
+            shed: 2,
+            ..Default::default()
+        };
+        assert_eq!(r.completed(), 10);
+    }
+
+    #[test]
+    fn replay_against_dead_endpoint_errors() {
+        // Nothing listens on a fresh ephemeral port that we bind and drop.
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let cfg = ReplayConfig { requests: 3, ..ReplayConfig::new(addr) };
+        assert!(replay(&cfg).is_err(), "connect must fail, not hang");
+    }
+}

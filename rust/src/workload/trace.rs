@@ -1,7 +1,64 @@
 //! Poisson request traces for the serving benchmarks (Table 2's workload is
-//! a single clip; the coordinator benches additionally sweep arrival rates).
+//! a single clip; the coordinator benches additionally sweep arrival rates),
+//! plus deterministic rate **modulation** for the fleet load harness:
+//! [`Modulation`] shapes the base Poisson process into bursty or diurnal
+//! arrivals via Lewis thinning, seeded and replayable like everything else.
 
 use crate::util::Rng;
+
+/// Time-varying rate shape applied on top of [`TraceConfig::rate_hz`].
+///
+/// The instantaneous rate at time `t` is `rate_hz * factor(t)`; arrivals
+/// are drawn by thinning a homogeneous Poisson process at the peak rate
+/// (Lewis & Shedler), so the output is an exact inhomogeneous Poisson
+/// process and fully determined by the trace seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Modulation {
+    /// Homogeneous Poisson at the base rate (bit-identical to
+    /// [`RequestTrace::poisson`]).
+    None,
+    /// Square-wave bursts: the first `duty` fraction of every `period_s`
+    /// window runs at `factor` x the base rate, the rest at 1x.
+    Bursty { period_s: f64, duty: f64, factor: f64 },
+    /// A day's traffic curve compressed into `period_s`: the rate swings
+    /// sinusoidally by `amplitude` (0..=1) around the base — mean rate
+    /// over a full period stays the base rate.
+    Diurnal { period_s: f64, amplitude: f64 },
+}
+
+impl Modulation {
+    /// Rate multiplier at time `t` (seconds from trace start). Always
+    /// finite and non-negative.
+    pub fn factor(&self, t: f64) -> f64 {
+        match *self {
+            Modulation::None => 1.0,
+            Modulation::Bursty { period_s, duty, factor } => {
+                let phase = (t / period_s).fract();
+                if phase < duty.clamp(0.0, 1.0) {
+                    factor.max(0.0)
+                } else {
+                    1.0
+                }
+            }
+            Modulation::Diurnal { period_s, amplitude } => {
+                let w = std::f64::consts::TAU / period_s;
+                (1.0 + amplitude.clamp(0.0, 1.0) * (w * t).sin()).max(0.0)
+            }
+        }
+    }
+
+    /// Upper bound of [`Modulation::factor`] over all `t` — the thinning
+    /// envelope rate.
+    pub fn peak(&self) -> f64 {
+        match *self {
+            Modulation::None => 1.0,
+            Modulation::Bursty { factor, .. } => factor.max(0.0).max(1.0),
+            Modulation::Diurnal { amplitude, .. } => {
+                1.0 + amplitude.clamp(0.0, 1.0)
+            }
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct TraceConfig {
@@ -28,20 +85,36 @@ pub struct RequestTrace {
 
 impl RequestTrace {
     pub fn poisson(cfg: &TraceConfig) -> Self {
+        Self::poisson_modulated(cfg, Modulation::None)
+    }
+
+    /// Inhomogeneous Poisson arrivals: a homogeneous process at the peak
+    /// rate, thinned down to `rate_hz * m.factor(t)`. With
+    /// [`Modulation::None`] the accept draw is skipped, so the generated
+    /// stream is bit-identical to the pre-modulation [`Self::poisson`].
+    pub fn poisson_modulated(cfg: &TraceConfig, m: Modulation) -> Self {
+        let peak = m.peak();
+        let lambda_max = cfg.rate_hz * peak;
         let mut rng = Rng::new(cfg.seed);
         let mut t = 0.0;
-        let entries = (0..cfg.count)
-            .map(|i| {
-                // Exponential inter-arrival.
-                let u = rng.f64().max(1e-12);
-                t += -u.ln() / cfg.rate_hz;
-                TraceEntry {
+        let mut entries = Vec::with_capacity(cfg.count);
+        while entries.len() < cfg.count {
+            // Exponential inter-arrival at the envelope rate.
+            let u = rng.f64().max(1e-12);
+            t += -u.ln() / lambda_max;
+            let accept = match m {
+                Modulation::None => true,
+                _ => rng.f64() * peak <= m.factor(t),
+            };
+            if accept {
+                let i = entries.len() as u64;
+                entries.push(TraceEntry {
                     arrival_s: t,
                     label: rng.below(super::NUM_CLASSES),
-                    clip_seed: cfg.seed.wrapping_mul(1000) + i as u64,
-                }
-            })
-            .collect();
+                    clip_seed: cfg.seed.wrapping_mul(1000) + i,
+                });
+            }
+        }
         Self { entries }
     }
 
@@ -83,5 +156,92 @@ mod tests {
         assert_eq!(a.entries.len(), b.entries.len());
         assert_eq!(a.entries[10].clip_seed, b.entries[10].clip_seed);
         assert_eq!(a.entries[10].label, b.entries[10].label);
+    }
+
+    /// Fraction of trace time `pred(t)` holds, and the arrival rate inside
+    /// vs outside that region.
+    fn split_rate(
+        tr: &RequestTrace,
+        pred: impl Fn(f64) -> bool,
+    ) -> (f64, f64) {
+        let total = tr.duration();
+        let step = total / 10_000.0;
+        let frac_in = (0..10_000)
+            .filter(|i| pred(*i as f64 * step))
+            .count() as f64
+            / 10_000.0;
+        let n_in = tr.entries.iter().filter(|e| pred(e.arrival_s)).count();
+        let n_out = tr.entries.len() - n_in;
+        let rate_in = n_in as f64 / (total * frac_in);
+        let rate_out = n_out as f64 / (total * (1.0 - frac_in));
+        (rate_in, rate_out)
+    }
+
+    #[test]
+    fn modulated_none_is_bitwise_poisson() {
+        let cfg = TraceConfig { rate_hz: 20.0, count: 200, seed: 11 };
+        let a = RequestTrace::poisson(&cfg);
+        let b = RequestTrace::poisson_modulated(&cfg, Modulation::None);
+        for (x, y) in a.entries.iter().zip(&b.entries) {
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert_eq!((x.label, x.clip_seed), (y.label, y.clip_seed));
+        }
+    }
+
+    #[test]
+    fn bursty_mean_rate_and_shape() {
+        // duty=0.2 at 5x + 0.8 at 1x => mean factor 1.8.
+        let m = Modulation::Bursty { period_s: 4.0, duty: 0.2, factor: 5.0 };
+        let cfg = TraceConfig { rate_hz: 50.0, count: 8000, seed: 7 };
+        let tr = RequestTrace::poisson_modulated(&cfg, m);
+        let measured = tr.entries.len() as f64 / tr.duration();
+        let expect = 50.0 * 1.8;
+        assert!(
+            (measured - expect).abs() < 0.15 * expect,
+            "mean rate {measured} vs {expect}"
+        );
+        // Burst windows must actually be denser: in-burst rate near 5x the
+        // off-burst rate (loose band — it's a stochastic draw).
+        let (rate_in, rate_out) =
+            split_rate(&tr, |t| (t / 4.0).fract() < 0.2);
+        let ratio = rate_in / rate_out;
+        assert!((3.5..=6.5).contains(&ratio), "burst ratio {ratio}");
+        for w in tr.entries.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+    }
+
+    #[test]
+    fn diurnal_mean_rate_preserved() {
+        // The sinusoid integrates to zero over a full period: amplitude
+        // changes the shape, not the mean.
+        let m = Modulation::Diurnal { period_s: 10.0, amplitude: 0.8 };
+        let cfg = TraceConfig { rate_hz: 40.0, count: 8000, seed: 13 };
+        let tr = RequestTrace::poisson_modulated(&cfg, m);
+        let measured = tr.entries.len() as f64 / tr.duration();
+        assert!(
+            (measured - 40.0).abs() < 0.15 * 40.0,
+            "diurnal mean rate {measured}"
+        );
+        // Rising half-period (sin > 0) must be denser than the falling one.
+        let (rate_up, rate_down) =
+            split_rate(&tr, |t| (t / 10.0).fract() < 0.5);
+        assert!(rate_up > rate_down * 1.5, "{rate_up} vs {rate_down}");
+    }
+
+    #[test]
+    fn modulated_deterministic_per_seed() {
+        let m = Modulation::Bursty { period_s: 2.0, duty: 0.3, factor: 8.0 };
+        let cfg = TraceConfig { rate_hz: 30.0, count: 500, seed: 21 };
+        let a = RequestTrace::poisson_modulated(&cfg, m);
+        let b = RequestTrace::poisson_modulated(&cfg, m);
+        assert_eq!(a.entries.len(), b.entries.len());
+        for (x, y) in a.entries.iter().zip(&b.entries) {
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+        }
+        // Factor envelope sanity.
+        assert_eq!(Modulation::None.peak(), 1.0);
+        assert_eq!(m.peak(), 8.0);
+        assert!(m.factor(0.1) > m.factor(1.9));
     }
 }

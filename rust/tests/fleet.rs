@@ -1,0 +1,325 @@
+//! Fleet supervision E2E: a real 2-worker `rt3d fleet` on loopback,
+//! exercised through the public listener like any wire client.
+//!
+//! * both workers serve, and their logits are **bit-identical** to an
+//!   in-process forward of the same synthetic tiny model — two process
+//!   boundaries (client -> supervisor proxy -> worker) add zero numeric
+//!   surface;
+//! * `kill -9` of one worker kills only that worker's connection: the
+//!   sibling keeps answering every id exactly once, the supervisor
+//!   restarts the dead worker (aggregated `/metrics` reports
+//!   `rt3d_worker_restarts_total 1` with zero failed responses), and a
+//!   fresh connection is served again afterwards;
+//! * a Shutdown frame drains the whole fleet: Bye to the client, workers
+//!   reaped, supervisor exit status 0;
+//! * without `--allow-shutdown`, Shutdown gets the typed `ERR_FORBIDDEN`.
+#![cfg(unix)]
+
+use rt3d::coordinator::net::{fetch_metrics, ERR_FORBIDDEN};
+use rt3d::coordinator::{Frame, NetClient, Outcome};
+use rt3d::executors::{EngineKind, NativeEngine};
+use rt3d::model::{Model, SyntheticC3d};
+use rt3d::workload;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A spawned fleet supervisor whose stdout is captured line-by-line so
+/// the test can wait on the handshake / ready / restart announcements.
+struct FleetProc {
+    child: Child,
+    lines: Arc<Mutex<Vec<String>>>,
+}
+
+impl FleetProc {
+    fn spawn(extra: &[&str], backoff_ms: &str) -> Self {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_rt3d"));
+        cmd.args(["fleet", "--listen", "127.0.0.1:0", "--synthetic", "tiny"])
+            .args(extra)
+            .env("RT3D_RESTART_BACKOFF_MS", backoff_ms)
+            .env_remove("RT3D_FLEET")
+            .env_remove("RT3D_LISTEN")
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .stdin(Stdio::null());
+        let mut child = cmd.spawn().expect("spawn rt3d fleet");
+        let stdout = child.stdout.take().expect("stdout piped");
+        let lines = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&lines);
+        std::thread::spawn(move || {
+            for line in BufReader::new(stdout).lines().map_while(|l| l.ok()) {
+                println!("[fleet] {line}");
+                sink.lock().unwrap().push(line);
+            }
+        });
+        FleetProc { child, lines }
+    }
+
+    /// First line (by arrival order, from `skip` on) matching `pred`,
+    /// waiting up to `timeout` for it to appear.
+    fn wait_line<F: Fn(&str) -> bool>(
+        &self,
+        skip: usize,
+        pred: F,
+        timeout: Duration,
+    ) -> String {
+        let t0 = Instant::now();
+        loop {
+            {
+                let lines = self.lines.lock().unwrap();
+                if let Some(l) = lines.iter().skip(skip).find(|l| pred(l)) {
+                    return l.clone();
+                }
+            }
+            assert!(
+                t0.elapsed() < timeout,
+                "fleet never printed the expected line; log so far:\n{}",
+                self.lines.lock().unwrap().join("\n")
+            );
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+
+    /// The supervisor's public address from the `listening on` handshake.
+    fn public_addr(&self) -> String {
+        let line = self.wait_line(0, |l| l.starts_with("listening on "), READ_TIMEOUT);
+        line.trim_start_matches("listening on ").trim().to_string()
+    }
+
+    /// (worker index -> pid) from the `ready at` announcements.
+    fn ready_workers(&self, n: usize) -> Vec<(usize, u32)> {
+        let t0 = Instant::now();
+        loop {
+            let found: Vec<(usize, u32)> = {
+                let lines = self.lines.lock().unwrap();
+                lines
+                    .iter()
+                    .filter(|l| l.starts_with("fleet: worker") && l.contains(" ready at "))
+                    .filter_map(|l| {
+                        let w: Vec<&str> = l.split_whitespace().collect();
+                        // "fleet: worker {i} pid={pid} ready at {addr}"
+                        let i = w.get(2)?.parse().ok()?;
+                        let pid = w.get(3)?.strip_prefix("pid=")?.parse().ok()?;
+                        Some((i, pid))
+                    })
+                    .collect()
+            };
+            if found.len() >= n {
+                return found;
+            }
+            assert!(
+                t0.elapsed() < READ_TIMEOUT,
+                "only {} of {n} workers became ready; log:\n{}",
+                found.len(),
+                self.lines.lock().unwrap().join("\n")
+            );
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+}
+
+impl Drop for FleetProc {
+    fn drop(&mut self) {
+        // Idempotent backstop: a passing test has already waited the
+        // child out; a failing one must not leak the process tree. A
+        // SIGKILLed supervisor orphans its workers, so also kill every
+        // pid the log announced (ready/restarted lines) — no-ops for
+        // processes that already exited.
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        let pids: Vec<String> = self
+            .lines
+            .lock()
+            .unwrap()
+            .iter()
+            .flat_map(|l| l.split_whitespace())
+            .filter_map(|w| w.strip_prefix("pid="))
+            .filter(|p| p.chars().all(|c| c.is_ascii_digit()))
+            .map(str::to_string)
+            .collect();
+        for pid in pids {
+            let _ = Command::new("kill").args(["-9", &pid]).status();
+        }
+    }
+}
+
+fn connect(addr: &str) -> NetClient {
+    let mut c = NetClient::connect(addr).expect("connect to fleet");
+    c.set_read_timeout(Some(READ_TIMEOUT)).expect("set read timeout");
+    c
+}
+
+/// Submit `ids` on one connection, then read until each is answered.
+/// Returns the logits per id, or `Err` when the connection died (the
+/// killed worker's path) — never panics on I/O.
+fn round_trip(
+    client: &mut NetClient,
+    ids: std::ops::Range<u64>,
+    frames: usize,
+    size: usize,
+) -> rt3d::Result<Vec<(u64, Vec<f32>)>> {
+    let mut expect = std::collections::HashSet::new();
+    for id in ids {
+        let label = (id as usize) % workload::NUM_CLASSES;
+        let clip = workload::make_clip(label, 4242 + id, frames, size);
+        client.request(id, "c3d", clip, Some(label as u32), 0)?;
+        expect.insert(id);
+    }
+    let mut out = Vec::new();
+    while !expect.is_empty() {
+        match client.recv()? {
+            Frame::Response { id, outcome, logits, .. } => {
+                assert!(expect.remove(&id), "duplicate or unknown id {id}");
+                assert_eq!(outcome, Outcome::Ok, "id {id} not served");
+                out.push((id, logits));
+            }
+            Frame::Error { code, msg } => {
+                rt3d::bail!("server error (code {code}): {msg}")
+            }
+            other => rt3d::bail!("unexpected frame {other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+/// Poll the supervisor's aggregated `/metrics` until `pred` holds.
+fn wait_metrics<F: Fn(&str) -> bool>(addr: &str, pred: F, what: &str) -> String {
+    let t0 = Instant::now();
+    let mut last = String::new();
+    while t0.elapsed() < READ_TIMEOUT {
+        if let Ok(body) = fetch_metrics(addr) {
+            if pred(&body) {
+                return body;
+            }
+            last = body;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    panic!("/metrics never showed {what}; last scrape:\n{last}");
+}
+
+#[test]
+fn two_worker_fleet_survives_kill_dash_nine_and_drains_cleanly() {
+    let mut fleet = FleetProc::spawn(&["-n", "2", "--allow-shutdown"], "100");
+    let addr = fleet.public_addr();
+    let workers = fleet.ready_workers(2);
+
+    // In-process reference for bit-identity: the workers were told
+    // `--synthetic tiny` with the default native backend, so the same
+    // deterministic model + any thread count must reproduce their logits
+    // bit for bit.
+    let model = Model::synthetic_c3d(SyntheticC3d::tiny());
+    let input = model.manifest.input;
+    let (frames, size) = (input[1], input[2]);
+    let engine = NativeEngine::builder(&model).kind(EngineKind::Rt3d).threads(2).build();
+    let reference = |id: u64| -> Vec<f32> {
+        let label = (id as usize) % workload::NUM_CLASSES;
+        engine.forward(&workload::make_clip(label, 4242 + id, frames, size)).row(0).to_vec()
+    };
+    let assert_bits = |got: &[(u64, Vec<f32>)]| {
+        for (id, logits) in got {
+            let want = reference(*id);
+            assert_eq!(logits.len(), want.len(), "id {id}: logit width");
+            for (a, b) in logits.iter().zip(&want) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "id {id}: fleet logits diverged from the direct forward"
+                );
+            }
+        }
+    };
+
+    // Two connections: consecutive round-robin picks land them on the
+    // two distinct workers. Both serve while everything is alive.
+    let mut conn_a = connect(&addr);
+    let mut conn_b = connect(&addr);
+    assert_bits(&round_trip(&mut conn_a, 0..4, frames, size).expect("conn A pre-kill"));
+    assert_bits(&round_trip(&mut conn_b, 100..104, frames, size).expect("conn B pre-kill"));
+
+    // SIGKILL worker 0 — no drain, no goodbye. Exactly one of the two
+    // connections was proxied to it and must die; the sibling must keep
+    // answering every id exactly once.
+    let (_, pid0) = workers.iter().copied().find(|&(i, _)| i == 0).expect("worker 0 ready");
+    let killed = Command::new("kill")
+        .args(["-9", &pid0.to_string()])
+        .status()
+        .expect("run kill");
+    assert!(killed.success(), "kill -9 {pid0} failed");
+
+    let a = round_trip(&mut conn_a, 4..8, frames, size);
+    let b = round_trip(&mut conn_b, 104..108, frames, size);
+    assert_eq!(
+        usize::from(a.is_ok()) + usize::from(b.is_ok()),
+        1,
+        "exactly one connection must survive the kill (a: {a:?}, b: {b:?})"
+    );
+    assert_bits(&a.or(b).expect("the surviving connection's responses"));
+
+    // The supervisor notices the death, restarts after backoff, and the
+    // aggregated metrics tell the story: one restart, two live workers,
+    // zero failed responses anywhere in the fleet.
+    fleet.wait_line(
+        0,
+        |l| l.starts_with("fleet: worker 0 died"),
+        READ_TIMEOUT,
+    );
+    fleet.wait_line(
+        0,
+        |l| l.starts_with("fleet: restarted worker 0"),
+        READ_TIMEOUT,
+    );
+    let body = wait_metrics(
+        &addr,
+        |b| {
+            b.contains("rt3d_worker_restarts_total 1")
+                && b.contains("rt3d_workers_live 2")
+        },
+        "restarts_total 1 with 2 live workers",
+    );
+    assert!(
+        body.contains("outcome=\"failed\"} 0"),
+        "no failed responses on the survivors:\n{body}"
+    );
+    assert!(body.contains("rt3d_workers_quarantined 0"), "metrics:\n{body}");
+
+    // Fresh connection after the restart: the fleet serves again at full
+    // strength, still bit-identical.
+    let mut conn_c = connect(&addr);
+    assert_bits(&round_trip(&mut conn_c, 200..204, frames, size).expect("post-restart"));
+
+    // Graceful drain: Shutdown -> Bye, workers reaped, exit 0.
+    let mut closer = connect(&addr);
+    closer.send(&Frame::Shutdown).expect("send Shutdown");
+    match closer.recv().expect("recv after Shutdown") {
+        Frame::Bye => {}
+        other => panic!("expected Bye, got {other:?}"),
+    }
+    let status = fleet.child.wait().expect("wait supervisor");
+    assert!(status.success(), "supervisor must drain to exit 0, got {status}");
+    fleet.wait_line(0, |l| l.starts_with("fleet: drained"), Duration::from_secs(5));
+}
+
+#[test]
+fn shutdown_without_allow_flag_is_forbidden() {
+    let fleet = FleetProc::spawn(&["-n", "1"], "100");
+    let addr = fleet.public_addr();
+    fleet.ready_workers(1);
+
+    let mut client = connect(&addr);
+    client.send(&Frame::Shutdown).expect("send Shutdown");
+    match client.recv().expect("recv after Shutdown") {
+        Frame::Error { code, .. } => assert_eq!(code, ERR_FORBIDDEN),
+        other => panic!("expected ERR_FORBIDDEN, got {other:?}"),
+    }
+    // The refusal must not have drained anything: the fleet still serves.
+    let model = Model::synthetic_c3d(SyntheticC3d::tiny());
+    let input = model.manifest.input;
+    let mut conn = connect(&addr);
+    let got = round_trip(&mut conn, 0..2, input[1], input[2]).expect("still serving");
+    assert_eq!(got.len(), 2);
+    // FleetProc::drop kills the supervisor (no graceful path here).
+}

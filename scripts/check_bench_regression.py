@@ -42,10 +42,16 @@ UPDATE_TOLERANCE = 1.5  # tolerance stamped into refreshed baselines
 # shed_rate is bounded by 1.0 (so with the committed 0.7 baseline at 1.5x
 # tolerance it can never warn spuriously — it is tracking data), and
 # failed_rate's baseline of 0.0 skips the ratio check by design; a
-# fault-free serving bench asserts failed_rate == 0 itself.
+# fault-free serving bench asserts failed_rate == 0 itself. The fleet_*
+# keys come from the fleet bench (open-loop bursty replay through the
+# 2-worker supervisor, scheduled-arrival latency — BENCH_fleet.json);
+# fleet_shed_rate's 0.0 baseline likewise skips the ratio check, and the
+# fleet bench itself asserts lost == unanswered == failed == 0.
 LATENCY_KEYS = ("p95_ms", "p50_ms", "p95_ms_1t", "p50_ms_1t",
                 "fused_peak_scratch_mb", "materialized_peak_scratch_mb",
-                "shed_rate", "failed_rate", "net_p95_ms")
+                "shed_rate", "failed_rate", "net_p95_ms",
+                "fleet_p50_ms", "fleet_p99_ms", "fleet_p999_ms",
+                "fleet_shed_rate")
 # Throughput-style keys: smaller is worse. The int8 keys gate the
 # quantized GEMM path: int8_best_gflops is its raw throughput and
 # int8_speedup_vs_f32 its advantage over the f32 SIMD kernels — the
@@ -57,7 +63,8 @@ THROUGHPUT_KEYS = ("saturation_clips_per_s", "fused_best_gflops",
                    "net_clips_per_s")
 # Context carried into a refreshed baseline from the first run.
 CONTEXT_KEYS = ("bench", "model", "threads", "isa_detected", "kernel",
-                "simd_lanes", "workers_best")
+                "simd_lanes", "workers_best", "workers", "sessions",
+                "rate_hz", "modulation")
 
 
 def load(path):
