@@ -74,8 +74,23 @@ def build_sparse_forward(specs, params, unit_masks, scheme_name, g_m, g_n):
 
     Compaction happens here (export time); the index/weight constants are
     baked into the lowered HLO — the moral equivalent of the paper's
-    compiler-generated weight layout.
+    compiler-generated weight layout. The pattern / block-punched schemes
+    have no dedicated compacted Pallas kernel (their compaction lives in
+    the rust ``codegen`` module); they lower through the masked-dense
+    Pallas path, which is numerically identical to the compacted plans.
     """
+    if scheme_name in ("pattern", "block_punched"):
+        from .pruning.schemes import make_scheme
+
+        scheme = make_scheme(scheme_name, g_m, g_n)
+        wm = {
+            s["name"]: scheme.expand(
+                unit_masks[s["name"]], params[s["name"]]["w"].shape
+            )
+            for s in nn.walk_convs(specs)
+            if s["name"] in unit_masks
+        }
+        return lambda x: nn.forward(specs, params, x, mode="pallas", masks=wm)
     compacted = {}
     for s in nn.walk_convs(specs):
         name = s["name"]
@@ -135,6 +150,53 @@ def lower_sparse_forward(specs, params, unit_masks, scheme_name, g_m, g_n,
     fwd = build_sparse_forward(specs, params, unit_masks, scheme_name, g_m, g_n)
     spec = jax.ShapeDtypeStruct((batch, *in_shape), jnp.float32)
     return to_hlo_text(jax.jit(lambda x: (fwd(x),)).lower(spec))
+
+
+# ---------------------------------------------------------------------------
+# Static int8 calibration capture
+# ---------------------------------------------------------------------------
+
+
+def capture_calibration(specs, params, x, *, masks=None):
+    """Run a calibration batch through the model and record every conv3d
+    node's **input** activation, keyed by conv name — exactly the dict
+    ``export_model(calibration=...)`` / ``annotate_ir`` expect for pinning
+    static int8 input scales (non-null ``in_scale`` in each conv's
+    ``"quant"`` block).
+
+    Mirrors :func:`nn.forward`'s recursion so convs nested in residual /
+    concat nodes see precisely the tensor the runtime will feed them;
+    ``masks`` (OIDHW weight masks) reproduce the sparse deployment's
+    activation distribution when calibrating a pruned model.
+    """
+    captured = {}
+
+    def run(ss, x):
+        for s in ss:
+            k = s["kind"]
+            if k == "conv3d":
+                captured[s["name"]] = x
+                p = params[s["name"]]
+                if masks and s["name"] in masks:
+                    p = {
+                        "w": p["w"] * masks[s["name"]].astype(p["w"].dtype),
+                        "b": p["b"],
+                    }
+                x = nn._conv_apply(s, p, x, "train")
+            elif k == "residual":
+                y = run(s["body"], x)
+                sc = run(s["shortcut"], x) if s["shortcut"] else x
+                x = jax.nn.relu(y + sc)
+            elif k == "concat":
+                x = jnp.concatenate(
+                    [run(b, x) for b in s["branches"]], axis=1
+                )
+            else:
+                x = nn.forward([s], params, x, mode="train")
+        return x
+
+    run(specs, jnp.asarray(x))
+    return captured
 
 
 # ---------------------------------------------------------------------------

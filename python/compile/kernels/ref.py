@@ -146,6 +146,33 @@ def vanilla_mask_to_weight_mask(mask, M, C, kernel, g_m, g_n):
     return jnp.broadcast_to(full[:, :, None, None, None], (M, C, Kd, Kh, Kw))
 
 
+def pattern_mask_to_weight_mask(mask, M, C, kernel):
+    """Expand a per-kernel pattern mask (M, C, Ks) into an OIDHW weight mask.
+
+    Pattern sparsity (PatDNN-style) is per-element at mask granularity —
+    the structure lives in the *values* (every kernel's Ks-slice equals
+    one of a small dictionary of tap patterns), so expansion is a reshape.
+    """
+    Kd, Kh, Kw = kernel
+    assert mask.shape == (M, C, Kd * Kh * Kw), (mask.shape, (M, C, Kd * Kh * Kw))
+    return jnp.reshape(mask, (M, C, Kd, Kh, Kw))
+
+
+def block_punched_mask_to_weight_mask(mask, M, C, kernel, g_m):
+    """Expand a block-punched mask (P, C, Ks) into an OIDHW weight mask.
+
+    PCONV/GRIM block punching: all g_m filters of a block share one
+    punched (channel, tap) hole map, so each block row broadcasts over
+    its filters.
+    """
+    Kd, Kh, Kw = kernel
+    P = -(-M // g_m)
+    assert mask.shape == (P, C, Kd * Kh * Kw), (mask.shape, (P, C, Kd * Kh * Kw))
+    m_idx = jnp.arange(M) // g_m  # block row of each filter
+    full = mask[m_idx]  # (M, C, Ks)
+    return full.reshape(M, C, Kd, Kh, Kw)
+
+
 def filter_mask_to_weight_mask(mask, M, C, kernel):
     """Expand a filter mask (M,) boolean into an OIDHW weight mask."""
     Kd, Kh, Kw = kernel

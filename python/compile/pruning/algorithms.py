@@ -92,7 +92,12 @@ def prune_to_flops_target(specs, params, scheme, rate, *, in_ch=3,
         out[name] = jnp.asarray(
             unit_masks[name].reshape(scheme.unit_shape(w.shape))
         )
-    return out
+    # Snap onto the scheme's structural constraint (identity for most
+    # schemes; the pattern scheme projects every kernel onto its tap
+    # dictionary here — PatDNN's pattern-assignment step).
+    return scheme.project_unit_masks(
+        out, {s["name"]: params[s["name"]]["w"] for s in convs}
+    )
 
 
 def expand_masks(specs, params, scheme, unit_masks):

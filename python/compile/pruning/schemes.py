@@ -1,7 +1,10 @@
-"""The paper's structured sparsity schemes as pluggable objects (§3).
+"""The paper's structured sparsity schemes as pluggable objects (§3),
+plus the sibling schemes of the same mobile-inference family: pattern
+(PatDNN dictionary kernels) and block-punched (PCONV/GRIM shared holes).
 
 Each scheme defines, for one conv layer's 5-D weight tensor:
-  * the prunable *unit* (filter / kernel-group / KGS location),
+  * the prunable *unit* (filter / kernel-group / KGS location /
+    per-kernel tap / punched block column),
   * ``group_norms``  — per-unit mixed L1/L2 norm (the paper's "best
     combination of l1 and l2"),
   * ``mask_from_keep`` — structural mask given a per-unit keep decision,
@@ -68,6 +71,19 @@ class Scheme:
         wf = jnp.reshape(w, (M, C, Ks))
         wf = jnp.pad(wf, ((0, P * self.g_m - M), (0, Q * self.g_n - C), (0, 0)))
         return wf.reshape(P, self.g_m, Q, self.g_n, Ks)
+
+    # -- constraint projection ----------------------------------------------
+    def project_unit_masks(self, unit_masks, weights):
+        """Snap freely-selected unit masks onto the scheme's structural
+        constraint. Identity for schemes whose unit geometry already
+        encodes the constraint (filter / vanilla / kgs / block_punched);
+        the pattern scheme overrides it to project every kernel onto a
+        small shared tap-pattern dictionary (PatDNN).
+
+        ``weights``: {conv_name: OIDHW weight tensor} at projection time.
+        """
+        del weights
+        return unit_masks
 
 
 class FilterScheme(Scheme):
@@ -143,10 +159,112 @@ class KGSScheme(Scheme):
         return 2 * self.g_m * self.g_n * int(np.prod(out_spatial))
 
 
+class PatternScheme(Scheme):
+    """Pattern-based kernel sparsity (PatDNN): every 3x3x3 kernel keeps
+    one of a small dictionary of tap patterns.
+
+    The prunable unit is a single weight (M, C, Ks) so the reweighted
+    regularizer pushes individual taps to zero; the dictionary constraint
+    is enforced afterwards by :meth:`project_unit_masks`, which (a) picks
+    a per-kernel tap budget ``t`` from the freely-selected masks (their
+    mean kept count — the global FLOPs target decides it), (b) extracts
+    the ``num_patterns`` most frequent natural top-``t`` tap sets as the
+    layer's dictionary, and (c) assigns every kernel the dictionary entry
+    retaining the most weight magnitude. The projected masks are what the
+    exporter ships and the rust ``ConvKind::Pattern`` compiler compacts
+    into per-filter gather schedules.
+    """
+
+    name = "pattern"
+
+    def __init__(self, g_m=4, g_n=4, num_patterns=8):
+        super().__init__(g_m=g_m, g_n=g_n)
+        self.num_patterns = num_patterns
+
+    def unit_shape(self, w_shape):
+        M, C, Kd, Kh, Kw = w_shape
+        return (M, C, Kd * Kh * Kw)
+
+    def group_norms(self, w):
+        # Singleton groups: the mixed norm of one weight is |w|.
+        M, C = w.shape[0], w.shape[1]
+        return jnp.abs(jnp.reshape(w, (M, C, -1)))
+
+    def expand(self, unit_mask, w_shape):
+        return kref.pattern_mask_to_weight_mask(
+            jnp.asarray(unit_mask), w_shape[0], w_shape[1], w_shape[2:]
+        )
+
+    def unit_flops(self, w_shape, out_spatial):
+        return 2 * int(np.prod(out_spatial))
+
+    def project_unit_masks(self, unit_masks, weights):
+        out = {}
+        for name, um in unit_masks.items():
+            w = np.asarray(weights[name], dtype=np.float32)
+            M, C = w.shape[0], w.shape[1]
+            Ks = int(np.prod(w.shape[2:]))
+            um = np.asarray(um).reshape(M, C, Ks)
+            mags = np.abs(w.reshape(M, C, Ks))
+            # Tap budget from the free selection (>= 1 so no kernel dies).
+            t = int(np.clip(round(float(um.sum(axis=2).mean())), 1, Ks))
+            # Candidate pattern per kernel: its top-t taps by magnitude.
+            order = np.argsort(-mags.reshape(M * C, Ks), axis=1)[:, :t]
+            cand = np.zeros((M * C, Ks), dtype=bool)
+            cand[np.arange(M * C)[:, None], order] = True
+            # Dictionary: the num_patterns most frequent candidates.
+            uniq, counts = np.unique(cand, axis=0, return_counts=True)
+            top = uniq[np.argsort(-counts)[: self.num_patterns]]
+            # Assign each kernel the entry retaining the most magnitude.
+            retained = mags.reshape(M * C, Ks) @ top.astype(np.float64).T
+            proj = top[np.argmax(retained, axis=1)].reshape(M, C, Ks)
+            out[name] = jnp.asarray(proj)
+        return out
+
+
+class BlockPunchedScheme(Scheme):
+    """Block-punched fine-grained sparsity (PCONV/GRIM): every block of
+    g_m consecutive filters shares one punched (channel, tap) hole map,
+    so the compiled plan keeps dense panels over a compacted K with one
+    shared index map per block (rust ``ConvKind::BlockPunched``).
+
+    The unit is one (block, channel, tap) column — pruning it zeroes the
+    same weight in all g_m filters of the block, so the uniform-holes
+    constraint is structural and needs no projection.
+    """
+
+    name = "block_punched"
+
+    def unit_shape(self, w_shape):
+        M, C, Kd, Kh, Kw = w_shape
+        P = -(-M // self.g_m)
+        return (P, C, Kd * Kh * Kw)
+
+    def group_norms(self, w):
+        M, C, Kd, Kh, Kw = w.shape
+        Ks = Kd * Kh * Kw
+        P = -(-M // self.g_m)
+        wf = jnp.reshape(w, (M, C, Ks))
+        wf = jnp.pad(wf, ((0, P * self.g_m - M), (0, 0), (0, 0)))
+        g = wf.reshape(P, self.g_m, C, Ks)
+        return _mixed_norm(jnp.transpose(g, (0, 2, 3, 1)), axis=3)
+
+    def expand(self, unit_mask, w_shape):
+        return kref.block_punched_mask_to_weight_mask(
+            jnp.asarray(unit_mask), w_shape[0], w_shape[1], w_shape[2:],
+            self.g_m,
+        )
+
+    def unit_flops(self, w_shape, out_spatial):
+        return 2 * self.g_m * int(np.prod(out_spatial))
+
+
 SCHEMES = {
     "filter": FilterScheme,
     "vanilla": VanillaScheme,
     "kgs": KGSScheme,
+    "pattern": PatternScheme,
+    "block_punched": BlockPunchedScheme,
 }
 
 

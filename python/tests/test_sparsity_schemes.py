@@ -1,0 +1,178 @@
+# Pattern (PatDNN) + block-punched (PCONV/GRIM) schemes: structural
+# constraints, projection, sparse forward, and static int8 calibration.
+# (Deliberately hypothesis-free so it runs in minimal environments.)
+import json
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import models, nn, quantize
+from compile.export import (
+    TensorPool,
+    annotate_ir,
+    build_sparse_forward,
+    capture_calibration,
+    export_model,
+)
+from compile.kernels import ref as kref
+from compile.pruning import algorithms as alg
+from compile.pruning.schemes import make_scheme
+
+KERNEL = (3, 3, 3)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    specs = models.build("c3d", width=4, frames=8, size=16)
+    params = nn.init_params(specs, seed=0)
+    return specs, params
+
+
+def rand_w(M, C, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((M, C) + KERNEL, np.float32))
+
+
+@pytest.mark.parametrize("name", ["pattern", "block_punched"])
+def test_unit_shape_and_norms_agree(name):
+    sch = make_scheme(name)
+    w = rand_w(8, 12)
+    norms = sch.group_norms(w)
+    assert norms.shape == sch.unit_shape(w.shape)
+    assert bool(jnp.all(norms >= 0))
+
+
+@pytest.mark.parametrize("name", ["pattern", "block_punched"])
+def test_expand_all_true_keeps_everything(name):
+    sch = make_scheme(name)
+    w = rand_w(8, 8)
+    um = jnp.ones(sch.unit_shape(w.shape), dtype=bool)
+    assert bool(jnp.all(sch.expand(um, w.shape)))
+
+
+def test_pattern_masks_come_from_a_small_dictionary(tiny_model):
+    # The PatDNN constraint: after projection, every kernel's tap mask is
+    # one of at most num_patterns dictionary patterns, all of the same
+    # cardinality (the per-kernel tap budget).
+    specs, params = tiny_model
+    sch = make_scheme("pattern")
+    um = alg.prune_to_flops_target(
+        specs, params, sch, 3.0, in_spatial=(8, 16, 16)
+    )
+    for name, m in um.items():
+        m = np.asarray(m)
+        M, C, Ks = m.shape
+        kernels = m.reshape(M * C, Ks)
+        patterns = np.unique(kernels, axis=0)
+        assert len(patterns) <= sch.num_patterns, (
+            f"{name}: {len(patterns)} distinct patterns"
+        )
+        counts = kernels.sum(axis=1)
+        assert counts.min() == counts.max() >= 1, (
+            f"{name}: non-uniform tap budget"
+        )
+
+
+def test_block_punched_holes_uniform_across_each_block(tiny_model):
+    # The PCONV/GRIM constraint: every filter of a g_m block shares the
+    # same punched (channel, tap) holes.
+    specs, params = tiny_model
+    sch = make_scheme("block_punched", g_m=4)
+    um = alg.prune_to_flops_target(
+        specs, params, sch, 3.0, in_spatial=(8, 16, 16)
+    )
+    wm = alg.expand_masks(specs, params, sch, um)
+    for name, m in wm.items():
+        m = np.asarray(m)
+        M, C = m.shape[0], m.shape[1]
+        flat = m.reshape(M, C, -1)
+        for m0 in range(0, M, 4):
+            block = flat[m0 : min(m0 + 4, M)]
+            assert (block == block[0]).all(), (
+                f"{name}: block at filter {m0} has non-uniform holes"
+            )
+
+
+def test_pattern_expand_is_reshape_and_block_broadcast():
+    M, C = 6, 4
+    Ks = 27
+    rng = np.random.default_rng(3)
+    pat = jnp.asarray(rng.random((M, C, Ks)) < 0.4)
+    wm = kref.pattern_mask_to_weight_mask(pat, M, C, KERNEL)
+    np.testing.assert_array_equal(
+        np.asarray(wm).reshape(M, C, Ks), np.asarray(pat)
+    )
+    P = 2  # ceil(6/4)
+    bp = jnp.asarray(rng.random((P, C, Ks)) < 0.4)
+    wm = kref.block_punched_mask_to_weight_mask(bp, M, C, KERNEL, 4)
+    full = np.asarray(wm).reshape(M, C, Ks)
+    for mi in range(M):
+        np.testing.assert_array_equal(full[mi], np.asarray(bp)[mi // 4])
+
+
+@pytest.mark.parametrize("name", ["pattern", "block_punched"])
+def test_sparse_forward_matches_masked_dense(tiny_model, name):
+    specs, params = tiny_model
+    sch = make_scheme(name)
+    um = alg.prune_to_flops_target(
+        specs, params, sch, 2.0, in_spatial=(8, 16, 16)
+    )
+    wm = alg.expand_masks(specs, params, sch, um)
+    fwd = build_sparse_forward(specs, params, um, name, 4, 4)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 3, 8, 16, 16), np.float32))
+    got = fwd(x)
+    want = nn.forward(specs, params, x, masks=wm)
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+def test_capture_calibration_records_every_conv_input(tiny_model):
+    specs, params = tiny_model
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 3, 8, 16, 16), np.float32))
+    calib = capture_calibration(specs, params, x)
+    conv_names = [s["name"] for s in nn.walk_convs(specs)]
+    assert sorted(calib) == sorted(conv_names)
+    # The first conv sees the raw input batch itself.
+    np.testing.assert_array_equal(np.asarray(calib[conv_names[0]]), x)
+    # Later convs see post-relu activations (non-negative).
+    assert float(jnp.min(calib[conv_names[1]])) >= 0.0
+
+
+def test_calibration_round_trips_to_static_in_scale(tiny_model, tmp_path):
+    specs, params = tiny_model
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((2, 3, 8, 16, 16), np.float32))
+    calib = capture_calibration(specs, params, x)
+
+    # annotate_ir pins non-null scales matching the reference quantizer.
+    pool = TensorPool()
+    ir = annotate_ir(specs, params, pool, calibration=calib)
+    for s in ir:
+        if s["kind"] != "conv3d":
+            continue
+        scale = s["quant"]["in_scale"]
+        assert scale is not None and scale > 0.0
+        assert scale == pytest.approx(
+            float(quantize.input_scale(calib[s["name"]]))
+        )
+
+    # ...and the full exporter writes them into the manifest JSON.
+    export_model(
+        str(tmp_path), "calib", specs, params, in_shape=(3, 8, 16, 16),
+        batches=(1,), pallas_batches=(), calibration=calib,
+    )
+    m = json.load(open(os.path.join(tmp_path, "calib.manifest.json")))
+    convs = [l for l in m["layers"] if l["kind"] == "conv3d"]
+    assert convs
+    for conv in convs:
+        assert conv["quant"]["in_scale"] is not None
+        assert conv["quant"]["in_scale"] > 0.0
+
+    # Without calibration the block stays dynamic (null in_scale).
+    pool = TensorPool()
+    ir = annotate_ir(specs, params, pool)
+    conv = next(l for l in ir if l["kind"] == "conv3d")
+    assert conv["quant"]["in_scale"] is None

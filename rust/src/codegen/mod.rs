@@ -6,7 +6,10 @@
 //! * **weight layout reorganization** — compact the weight matrix so the
 //!   remaining computation is a set of *smaller dense* GEMM panels
 //!   ([`CompiledConv`]): KGS keeps per-group column lists, Vanilla keeps
-//!   per-filter-group channel-group lists, Filter keeps surviving rows;
+//!   per-filter-group channel-group lists, Pattern keeps one fixed gather
+//!   schedule per filter (PatDNN dictionary patterns), BlockPunched keeps
+//!   one shared kept-K-column map per filter block (PCONV/GRIM punched
+//!   holes), Filter keeps surviving rows;
 //! * **computation regularization** — padding-free nonuniform group sizes
 //!   are supported (unlike the HLO path which pads to the max group width);
 //! * **configuration tuning** — [`tuner`] searches tile/register-block
@@ -31,6 +34,12 @@ pub enum Scheme {
     Filter,
     Vanilla,
     Kgs,
+    /// Pattern-based kernel sparsity (PatDNN): per-kernel element mask
+    /// drawn from a small pattern dictionary.
+    Pattern,
+    /// Block-punched fine-grained sparsity (PCONV/GRIM): per-block kept
+    /// K-column map shared by every kernel in the block.
+    BlockPunched,
 }
 
 impl Scheme {
@@ -39,6 +48,8 @@ impl Scheme {
             "filter" => Some(Scheme::Filter),
             "vanilla" => Some(Scheme::Vanilla),
             "kgs" => Some(Scheme::Kgs),
+            "pattern" => Some(Scheme::Pattern),
+            "block_punched" => Some(Scheme::BlockPunched),
             _ => None,
         }
     }
@@ -133,6 +144,10 @@ pub fn compile_conv_sparse(
         Scheme::Kgs => compile_kgs(layer, geom, w, bias, mask, g_m, g_n),
         Scheme::Vanilla => compile_vanilla(layer, geom, w, bias, mask, g_m, g_n),
         Scheme::Filter => compile_filter(layer, geom, w, bias, mask),
+        Scheme::Pattern => compile_pattern(layer, geom, w, bias, mask),
+        Scheme::BlockPunched => {
+            compile_block_punched(layer, geom, w, bias, mask, g_m)
+        }
     }
 }
 
@@ -278,6 +293,127 @@ fn compile_vanilla(
     cc
 }
 
+/// Pattern (PatDNN): the mask is per weight element, `(M, C*Ks)` flat,
+/// with every kernel `(m, c)` keeping one of a small dictionary of tap
+/// patterns (the pruner guarantees the dictionary property; compilation
+/// only needs the element mask). Each filter becomes one `m_eff == 1`
+/// group whose `cols` are the kept `(c*Ks + loc)` patch rows in ascending
+/// order — a fixed gather schedule per filter, zero per-element branching
+/// in the inner loop. Filters with no kept taps emit no group (the
+/// schedule's bias/ReLU epilogue still covers their rows).
+fn compile_pattern(
+    layer: &ConvLayer,
+    geom: &Conv3dGeometry,
+    w: &[f32],
+    bias: Vec<f32>,
+    mask: &[bool],
+) -> CompiledConv {
+    let (m, c) = (layer.out_ch, layer.in_ch);
+    let ks: usize = layer.kernel.iter().product();
+    let k = c * ks;
+    assert_eq!(mask.len(), m * k, "pattern mask shape");
+    let mut groups = Vec::with_capacity(m);
+    let mut kept_weights = 0usize;
+    for row in 0..m {
+        // Ascending (c, loc) column order == ascending patchesT row index:
+        // the fixed K accumulation order the parity invariant requires.
+        let mut cols = Vec::new();
+        let mut panel = Vec::new();
+        for ki in 0..k {
+            if mask[row * k + ki] {
+                cols.push(ki as u32);
+                panel.push(w[row * k + ki]);
+            }
+        }
+        if cols.is_empty() {
+            continue;
+        }
+        kept_weights += panel.len();
+        groups.push(KgsGroup::new(row, 1, cols, panel));
+    }
+    let r = geom.rows(1);
+    let mut cc = CompiledConv {
+        name: layer.name.clone(),
+        geom: *geom,
+        relu: layer.relu,
+        bias,
+        flops: 2 * kept_weights * r,
+        kind: ConvKind::Pattern { groups },
+        tile: GemmTile::default(),
+        packed: None,
+        sched: None,
+        kernel: None,
+        threads: 0,
+        fused: None,
+        int8: None,
+    };
+    cc.finalize();
+    cc
+}
+
+/// BlockPunched (PCONV/GRIM): the mask is one kept-K-column map per
+/// `g_m`-filter block, `(PP, C*Ks)` flat with `PP = ceil(M/g_m)` — the
+/// punched holes are uniform across every kernel in the block, so the
+/// block compiles to one dense `(m_eff, kept)` panel over a compacted K
+/// with a single shared column index map (no row compaction, fully
+/// vectorizable: the same gathered-panel kernels KGS streams, at block
+/// width instead of per-group width).
+fn compile_block_punched(
+    layer: &ConvLayer,
+    geom: &Conv3dGeometry,
+    w: &[f32],
+    bias: Vec<f32>,
+    mask: &[bool],
+    g_m: usize,
+) -> CompiledConv {
+    let (m, c) = (layer.out_ch, layer.in_ch);
+    let ks: usize = layer.kernel.iter().product();
+    let k = c * ks;
+    let pp = ceil_div(m, g_m);
+    assert_eq!(mask.len(), pp * k, "block_punched mask shape");
+    let mut groups = Vec::with_capacity(pp);
+    let mut kept_weights = 0usize;
+    for p in 0..pp {
+        let m0 = p * g_m;
+        let m_eff = g_m.min(m - m0);
+        // Shared kept-column map for the whole block, ascending K order.
+        let cols: Vec<u32> = (0..k)
+            .filter(|&ki| mask[p * k + ki])
+            .map(|ki| ki as u32)
+            .collect();
+        if cols.is_empty() {
+            continue;
+        }
+        let mut panel = Vec::with_capacity(m_eff * cols.len());
+        for im in 0..m_eff {
+            let base = (m0 + im) * k;
+            for &ki in &cols {
+                panel.push(w[base + ki as usize]);
+            }
+        }
+        kept_weights += panel.len();
+        groups.push(KgsGroup::new(m0, m_eff, cols, panel));
+    }
+    let r = geom.rows(1);
+    let mut cc = CompiledConv {
+        name: layer.name.clone(),
+        geom: *geom,
+        relu: layer.relu,
+        bias,
+        flops: 2 * kept_weights * r,
+        kind: ConvKind::BlockPunched { groups },
+        tile: GemmTile::default(),
+        packed: None,
+        sched: None,
+        kernel: None,
+        threads: 0,
+        fused: None,
+        int8: None,
+    };
+    cc.finalize();
+    cc
+}
+
 /// Filter: keep surviving rows of the dense weight matrix.
 fn compile_filter(
     layer: &ConvLayer,
@@ -372,6 +508,86 @@ mod tests {
         }
         // FLOPs reduced 3x vs dense.
         assert_eq!(cc.flops * 3, g.flops(1));
+    }
+
+    #[test]
+    fn pattern_compaction_per_filter_gather() {
+        let l = layer(4, 2, [3, 3, 3]);
+        let g = geom_for(&l, [4, 4, 4]);
+        let k = 2 * 27;
+        let w: Vec<f32> = (0..4 * k).map(|i| i as f32).collect();
+        // Every kernel keeps the same 9-tap "pattern"; filter 2 keeps none.
+        let mut mask = vec![false; 4 * k];
+        for row in [0usize, 1, 3] {
+            for c in 0..2 {
+                for loc in 0..9 {
+                    mask[row * k + c * 27 + loc * 3] = true;
+                }
+            }
+        }
+        let cc = compile_pattern(&l, &g, &w, vec![0.0; 4], &mask);
+        match &cc.kind {
+            ConvKind::Pattern { groups } => {
+                assert_eq!(groups.len(), 3, "empty filter emits no group");
+                for grp in groups {
+                    assert_eq!(grp.m_eff, 1);
+                    assert_eq!(grp.cols.len(), 2 * 9);
+                    // Ascending fixed gather schedule.
+                    assert!(grp.cols.windows(2).all(|w| w[0] < w[1]));
+                }
+                assert_eq!(groups[0].m0, 0);
+                assert_eq!(groups[2].m0, 3);
+                // Panel holds the kept weights in column order.
+                assert_eq!(groups[0].panel[0], w[0]);
+                assert_eq!(groups[0].panel[1], w[3]);
+            }
+            _ => panic!("expected pattern"),
+        }
+        assert_eq!(cc.flops, 2 * 3 * 18 * g.rows(1));
+    }
+
+    #[test]
+    fn block_punched_shared_column_map() {
+        let l = layer(6, 2, [3, 3, 3]);
+        let g = geom_for(&l, [4, 4, 4]);
+        let k = 2 * 27;
+        let w: Vec<f32> = (0..6 * k).map(|i| i as f32).collect();
+        // pp = ceil(6/4) = 2 blocks; each keeps every third K column.
+        let pp = 2;
+        let mask: Vec<bool> = (0..pp * k).map(|i| (i % k) % 3 == 0).collect();
+        let cc = compile_block_punched(&l, &g, &w, vec![0.0; 6], &mask, 4);
+        match &cc.kind {
+            ConvKind::BlockPunched { groups } => {
+                assert_eq!(groups.len(), 2);
+                assert_eq!((groups[0].m0, groups[0].m_eff), (0, 4));
+                assert_eq!((groups[1].m0, groups[1].m_eff), (4, 2), "ragged block");
+                let kept = k / 3;
+                for grp in &groups[..] {
+                    assert_eq!(grp.cols.len(), kept, "shared map per block");
+                    assert_eq!(grp.panel.len(), grp.m_eff * kept);
+                }
+                // Dense panel over the compacted K: row 1 of block 0 holds
+                // filter 1's weights at the shared kept columns.
+                assert_eq!(groups[0].panel[kept], w[k]);
+                assert_eq!(groups[0].panel[kept + 1], w[k + 3]);
+            }
+            _ => panic!("expected block_punched"),
+        }
+        assert_eq!(cc.flops, 2 * 6 * (k / 3) * g.rows(1));
+    }
+
+    #[test]
+    fn scheme_names_round_trip() {
+        for (name, sch) in [
+            ("filter", Scheme::Filter),
+            ("vanilla", Scheme::Vanilla),
+            ("kgs", Scheme::Kgs),
+            ("pattern", Scheme::Pattern),
+            ("block_punched", Scheme::BlockPunched),
+        ] {
+            assert_eq!(Scheme::parse(name), Some(sch));
+        }
+        assert_eq!(Scheme::parse("nope"), None);
     }
 
     #[test]

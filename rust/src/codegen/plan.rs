@@ -498,8 +498,8 @@ pub struct Int8Plan {
     pub provided: bool,
     /// mr-major quantized panels for Dense/Filter plans.
     pub packed: Option<PackedDenseI8>,
-    /// Quantized group panels for Kgs/Vanilla plans, parallel to the f32
-    /// group list.
+    /// Quantized group panels for the sparse group plans
+    /// (Kgs/Vanilla/Pattern/BlockPunched), parallel to the f32 group list.
     pub groups: Vec<GroupI8>,
 }
 
@@ -513,6 +513,19 @@ pub enum ConvKind {
     /// Per-filter-group kept channel-group panels, flattened p-major — the
     /// schedule re-splits them into filter-group row buckets.
     Vanilla { groups: Vec<KgsGroup> },
+    /// Pattern-based kernel sparsity (PatDNN): every 3×3×3 kernel keeps one
+    /// of a small dictionary of tap patterns, compiled into one fixed
+    /// gather schedule per filter — a single `m_eff == 1` group whose
+    /// `cols` list the kept `(channel, tap)` patch rows in ascending order.
+    /// The inner loop has zero per-element branching: it streams the same
+    /// gathered-panel kernels as KGS.
+    Pattern { groups: Vec<KgsGroup> },
+    /// Block-punched fine-grained sparsity (PCONV/GRIM): uniform punched
+    /// tap/channel holes shared by every kernel in a `g_m`-filter block,
+    /// executed as one dense `(m_eff, kept_k)` panel over a compacted K
+    /// with one shared column index map per block — vectorizable without
+    /// row compaction.
+    BlockPunched { groups: Vec<KgsGroup> },
     /// Surviving filter rows only (`rows[i]` = original filter index).
     Filter { rows: Vec<u32>, wmat: Vec<f32> },
 }
@@ -531,7 +544,8 @@ pub struct CompiledConv {
     /// kernel streams). Built by [`Self::finalize`]; `None` only for
     /// hand-rolled plans, which fall back to packing on the fly.
     pub packed: Option<PackedDense>,
-    /// Bucket schedule for Kgs/Vanilla plans (zero-allocation dispatch).
+    /// Bucket schedule for the sparse group plans — Kgs/Vanilla/Pattern/
+    /// BlockPunched (zero-allocation dispatch).
     pub sched: Option<PanelSchedule>,
     /// Tuned kernel-variant override; `None` = [`KernelArch::active`].
     pub kernel: Option<KernelArch>,
@@ -728,7 +742,10 @@ impl CompiledConv {
                     self.tile.mr,
                 ));
             }
-            ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => {
+            ConvKind::Kgs { groups }
+            | ConvKind::Vanilla { groups }
+            | ConvKind::Pattern { groups }
+            | ConvKind::BlockPunched { groups } => {
                 self.sched = Some(PanelSchedule::build(groups, self.geom.out_ch));
             }
         }
@@ -754,7 +771,10 @@ impl CompiledConv {
             ConvKind::Filter { rows, wmat } => {
                 (0..rows.len()).map(|i| absmax(&wmat[i * k..(i + 1) * k])).collect()
             }
-            ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => {
+            ConvKind::Kgs { groups }
+            | ConvKind::Vanilla { groups }
+            | ConvKind::Pattern { groups }
+            | ConvKind::BlockPunched { groups } => {
                 let mut maxes = vec![0.0f32; self.geom.out_ch];
                 for g in groups {
                     let ncols = g.cols.len();
@@ -805,7 +825,10 @@ impl CompiledConv {
                 }
                 (Some(PackedDenseI8::pack(&q, m, k, self.tile.mr)), Vec::new())
             }
-            ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => {
+            ConvKind::Kgs { groups }
+            | ConvKind::Vanilla { groups }
+            | ConvKind::Pattern { groups }
+            | ConvKind::BlockPunched { groups } => {
                 assert_eq!(scales.len(), self.geom.out_ch);
                 let qgroups = groups
                     .iter()
@@ -874,7 +897,10 @@ impl CompiledConv {
     pub fn weight_bytes(&self) -> usize {
         let f = match &self.kind {
             ConvKind::Dense { wmat } => wmat.len(),
-            ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => groups
+            ConvKind::Kgs { groups }
+            | ConvKind::Vanilla { groups }
+            | ConvKind::Pattern { groups }
+            | ConvKind::BlockPunched { groups } => groups
                 .iter()
                 .map(|g| g.panel.len() + g.cols.len())
                 .sum(),

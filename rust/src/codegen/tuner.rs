@@ -247,8 +247,13 @@ pub fn tune_conv_prec(
     for t in candidates() {
         // mr only changes the dense packing; sparse panels use their own
         // per-group walk, so skip the redundant mr sweep there.
-        if matches!(cc.kind, ConvKind::Kgs { .. } | ConvKind::Vanilla { .. })
-            && t.mr != GemmTile::default().mr
+        if matches!(
+            cc.kind,
+            ConvKind::Kgs { .. }
+                | ConvKind::Vanilla { .. }
+                | ConvKind::Pattern { .. }
+                | ConvKind::BlockPunched { .. }
+        ) && t.mr != GemmTile::default().mr
         {
             continue;
         }
@@ -393,6 +398,8 @@ impl TuneDb {
             ConvKind::Dense { .. } => "dense",
             ConvKind::Kgs { .. } => "kgs",
             ConvKind::Vanilla { .. } => "vanilla",
+            ConvKind::Pattern { .. } => "pattern",
+            ConvKind::BlockPunched { .. } => "block_punched",
             ConvKind::Filter { .. } => "filter",
         };
         format!(

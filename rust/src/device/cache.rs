@@ -94,6 +94,28 @@ pub fn conv_cache_stats(cc: &CompiledConv, _llc: usize, b: usize) -> CacheStats 
             let misses = kept_cols * r / k.max(1) + cc.weight_bytes() / 4;
             CacheStats { loads, hits: loads.saturating_sub(misses), misses }
         }
+        ConvKind::Pattern { groups } => {
+            // Like KGS, a gather plan: only the union of kept patch rows
+            // over all per-filter schedules is ever touched.
+            let kept_cols: usize = groups.iter().map(|gr| gr.cols.len()).sum();
+            let touched_rows: std::collections::HashSet<u32> = groups
+                .iter()
+                .flat_map(|gr| gr.cols.iter().copied())
+                .collect();
+            let misses = touched_rows.len() * r / r.max(1) * r
+                / g.kernel.iter().product::<usize>().max(1)
+                + cc.weight_bytes() / 4;
+            let loads = kept_cols * (r / 512).max(1) * 2;
+            CacheStats { loads, hits: loads.saturating_sub(misses), misses }
+        }
+        ConvKind::BlockPunched { groups } => {
+            // Like Vanilla, dense panels over a compacted K: each block
+            // streams its shared kept columns once per rc tile.
+            let kept_cols: usize = groups.iter().map(|gr| gr.cols.len()).sum();
+            let loads = kept_cols * (r / 512).max(1) * 2;
+            let misses = kept_cols * r / k.max(1) + cc.weight_bytes() / 4;
+            CacheStats { loads, hits: loads.saturating_sub(misses), misses }
+        }
         ConvKind::Filter { rows, .. } => {
             let loads = rows.len() * k * (r / 512).max(1) * 2;
             let misses = k * r + cc.weight_bytes() / 4;

@@ -385,8 +385,9 @@ pub fn run_compiled_conv(cc: &CompiledConv, patches_t: &Mat, out: &mut Mat) {
 /// initialization of `out` (the buffer may hold a previous layer's data).
 ///
 /// Parallel structure: Dense/Filter plans split into `mr`-row panels of
-/// the prepacked layout inside [`gemm::gemm_dense_packed`]; KGS/Vanilla
-/// plans run their *precompiled* bucket schedule — one pool task per
+/// the prepacked layout inside [`gemm::gemm_dense_packed`]; the sparse
+/// group plans (KGS/Vanilla/Pattern/BlockPunched)
+/// run their *precompiled* bucket schedule — one pool task per
 /// filter-group row bucket, groups within a bucket in the serial q-order,
 /// so accumulation order per output element is unchanged — bit-identical
 /// across thread counts, kernel on/off, and pool modes. Steady state does
@@ -415,7 +416,10 @@ pub fn run_conv_bound(
             // Hand-rolled plan without `finalize()`: pack on the fly.
             None => gemm::gemm_dense_ctx(wmat, call.geom.out_ch, patches_t, out, &ctx),
         },
-        ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => {
+        ConvKind::Kgs { groups }
+        | ConvKind::Vanilla { groups }
+        | ConvKind::Pattern { groups }
+        | ConvKind::BlockPunched { groups } => {
             // Sparse panels accumulate and may not cover every row.
             out.data.fill(0.0);
             match &cc.sched {
@@ -488,7 +492,10 @@ pub fn run_conv_fused(
                 gemm::gemm_dense_fused(&packed, x, g, out, &ctx)
             }
         },
-        ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => {
+        ConvKind::Kgs { groups }
+        | ConvKind::Vanilla { groups }
+        | ConvKind::Pattern { groups }
+        | ConvKind::BlockPunched { groups } => {
             let max_m_eff = match &cc.sched {
                 Some(sched) => sched.max_m_eff,
                 None => groups.iter().map(|grp| grp.m_eff).max().unwrap_or(1),
@@ -555,7 +562,10 @@ pub fn run_conv_bound_i8(
                 packed, &plan.scales, in_scale, qpatches, out, &ctx,
             );
         }
-        ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => {
+        ConvKind::Kgs { groups }
+        | ConvKind::Vanilla { groups }
+        | ConvKind::Pattern { groups }
+        | ConvKind::BlockPunched { groups } => {
             out.data.fill(0.0);
             match &cc.sched {
                 Some(sched) => run_panel_buckets_i8(
@@ -612,7 +622,10 @@ pub fn run_conv_fused_i8(
                 packed, &plan.scales, in_scale, x, g, out, &ctx,
             );
         }
-        ConvKind::Kgs { groups } | ConvKind::Vanilla { groups } => {
+        ConvKind::Kgs { groups }
+        | ConvKind::Vanilla { groups }
+        | ConvKind::Pattern { groups }
+        | ConvKind::BlockPunched { groups } => {
             let max_m_eff = match &cc.sched {
                 Some(sched) => sched.max_m_eff,
                 None => groups.iter().map(|grp| grp.m_eff).max().unwrap_or(1),

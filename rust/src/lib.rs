@@ -38,6 +38,55 @@
 //!                                └─ Session::push_frames -> windowed logits
 //! ```
 //!
+//! # Sparsity schemes
+//!
+//! Four structured-sparsity plan kinds flow through the one
+//! compile→prepack→execute pipeline ([`codegen::Scheme`] names them in
+//! manifests; [`codegen::ConvKind`] is the compiled form). All sparse
+//! kinds compile to the same `Vec<KgsGroup>` shape — a group is
+//! `(m0, m_eff, cols, panel)`: `m_eff` consecutive filters sharing one
+//! ascending kept-column list into the patch matrix, with a prepacked
+//! dense panel — so SIMD kernels, fused/materialized drivers, int8
+//! sidecars and the bit-identity invariant are shared, not re-derived:
+//!
+//! ```text
+//! vanilla        kgs              pattern          block_punched
+//! (paper §3a)    (paper §3b)      (PatDNN)         (PCONV/GRIM)
+//! ┌────┬────┐    ┌────┬────┐      ┌─┬─┬─┬─┐        ┌─────────┐
+//! │████│    │    │█ ██│█ ██│      │▚│▞│▚│▞│        │█ █ ██ █ │ g_m
+//! │████│    │    │█ ██│█ ██│      ├─┼─┼─┼─┤        │█ █ ██ █ │ rows,
+//! ├────┼────┤    ├────┼────┤      │▞│▚│▞│▚│        │█ █ ██ █ │ same
+//! │    │████│    │ ██ │ ██ │      ├─┼─┼─┼─┤        │█ █ ██ █ │ holes
+//! │    │████│    │ ██ │ ██ │      │▚│▚│▞│▞│        └─────────┘
+//! └────┴────┘    └────┴────┘      └─┴─┴─┴─┘
+//! whole g_M×g_N  one tap across   each kernel =    one punched
+//! kernel groups  a kernel group   a dictionary     (c,tap) map per
+//! kept/dropped   kept/dropped     pattern          g_m-filter block
+//! ```
+//!
+//! * **Vanilla** — coarsest: few large `m_eff = g_M` groups, densest
+//!   panels, best GFLOP/s at a given FLOP rate, worst achievable
+//!   accuracy (the paper's finding).
+//! * **KGS** — per-(group, tap) granularity; the paper's sweet spot:
+//!   near-Vanilla throughput, much better accuracy at matched rate.
+//! * **Pattern** — per-kernel freedom (best accuracy of the four at a
+//!   matched rate) compiled to one fixed gather schedule per filter
+//!   (`m_eff == 1`, zero per-element branching); narrow panels cost the
+//!   most latency — it wins when accuracy is the binding constraint.
+//! * **BlockPunched** — fine-grained holes, but *uniform across every
+//!   filter of a block*: dense `m_eff`-tall panels over a compacted K
+//!   with one shared index map, so it keeps Vanilla-class throughput
+//!   while pruning at tap granularity — the middle of the frontier.
+//!
+//! `benches/table3.rs` publishes the four-scheme frontier (per-scheme
+//! layer latency + GFLOP/s at matched ~3x FLOP rates, plus end-to-end
+//! synthetic-C3D latency) into `BENCH_table3.json`; the python side
+//! (`compile/pruning/schemes.py`) prunes all four with the paper's
+//! reweighted regularization (pattern adds a PatDNN dictionary
+//! projection). No new knobs: the scheme rides the manifest's
+//! `sparsity.scheme` string, and `Model::synthetic_c3d_scheme` builds
+//! artifact-free pattern / block-punched models for tests and benches.
+//!
 //! # Precision
 //!
 //! Every compiled conv plan carries a quantized int8 sidecar next to its
@@ -147,7 +196,7 @@
 //! * [`codegen`] — the paper's "compiler" contribution: sparsity-pattern →
 //!   compacted weight layout + tuned execution plan.
 //! * [`executors`] — baseline (naive, untuned-GEMM) and RT3D-optimized
-//!   (blocked SIMD GEMM, dense / KGS-sparse / Vanilla-sparse) conv
+//!   (blocked SIMD GEMM; dense and all four sparse plan kinds) conv
 //!   engines behind the options builder.
 //! * [`device`] — analytical Snapdragon-865-class CPU/GPU cost model
 //!   (the off-the-shelf-mobile substitute, DESIGN.md §2).

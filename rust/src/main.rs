@@ -596,29 +596,47 @@ mod rt3d_bench {
         Ok(())
     }
 
-    /// Table 3: Vanilla vs KGS at matched accuracy.
+    /// Table 3 (extended): the sparsity-scheme frontier — exported
+    /// artifacts first, then the artifact-free synthetic models across
+    /// the KGS / Pattern / BlockPunched schemes at one matched rate.
     pub fn table3(artifacts: &str) -> rt3d::Result<()> {
-        println!("== Table 3 reproduction: Vanilla vs KGS at matched accuracy");
-        println!("(see cargo bench --bench table3 for the measured version)");
+        println!("== Table 3 reproduction: sparsity-scheme frontier");
+        println!("(see cargo bench --bench table3 for the measured four-scheme version)");
+        let cpu = device::DeviceProfile::mobile_cpu();
+        let gpu = device::DeviceProfile::mobile_gpu();
         for name in ["c3d", "r2plus1d"] {
             let model = match Model::load(artifacts, name) {
                 Ok(m) => m,
                 Err(_) => continue,
             };
             let convs_s = codegen::compile_model(&model, true);
-            let cpu = device::DeviceProfile::mobile_cpu();
-            let gpu = device::DeviceProfile::mobile_gpu();
             let (cs, _) = device::model_cost(&convs_s, ExecutorClass::Rt3d, &cpu, 1);
             let (gs, _) = device::model_cost(&convs_s, ExecutorClass::Rt3d, &gpu, 1);
-            let rate = model
-                .manifest
-                .sparsity
-                .as_ref()
-                .map(|s| s.rate)
-                .unwrap_or(1.0);
+            let sp = model.manifest.sparsity.as_ref();
             println!(
-                "{:<10} kgs rate={:.1}x  simCPU={:.0}ms simGPU={:.0}ms",
+                "{:<10} {:<13} rate={:.1}x  simCPU={:.0}ms simGPU={:.0}ms",
                 name,
+                sp.map(|s| s.scheme.as_str()).unwrap_or("dense"),
+                sp.map(|s| s.rate).unwrap_or(1.0),
+                cs * 1e3,
+                gs * 1e3
+            );
+        }
+        // Artifact-free frontier: same synthetic C3D, three schemes at
+        // one matched FLOP rate (Vanilla has no synthetic variant).
+        for scheme in ["kgs", "pattern", "block_punched"] {
+            let model = Model::synthetic_c3d_scheme(
+                rt3d::model::SyntheticC3d::default(),
+                scheme,
+            );
+            let convs_s = codegen::compile_model(&model, true);
+            let (cs, _) = device::model_cost(&convs_s, ExecutorClass::Rt3d, &cpu, 1);
+            let (gs, _) = device::model_cost(&convs_s, ExecutorClass::Rt3d, &gpu, 1);
+            let rate = model.manifest.sparsity.as_ref().unwrap().rate;
+            println!(
+                "{:<10} {:<13} rate={:.1}x  simCPU={:.0}ms simGPU={:.0}ms",
+                "synthetic",
+                scheme,
                 rate,
                 cs * 1e3,
                 gs * 1e3

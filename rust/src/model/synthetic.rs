@@ -69,6 +69,7 @@ fn conv(
     cin: usize,
     cout: usize,
     keep_locs: usize,
+    scheme: &str,
     seed: u64,
 ) -> Layer {
     let w = Tensor5::random([cout, cin, 3, 3, 3], seed).data;
@@ -77,17 +78,54 @@ fn conv(
         w: pb.f32s(vec![cout, cin, 3, 3, 3], &w),
         b: pb.f32s(vec![cout], &b),
     };
-    // KGS mask over (4x4) kernel groups: keep `keep_locs` of 27 taps per
-    // group, spread deterministically (gcd(7, 27) = 1 → distinct).
+    // Every scheme keeps `keep_locs` of 27 taps per kernel, spread
+    // deterministically (gcd(7, 27) = 1 → distinct), so the three
+    // synthetic variants land on the exact same FLOP pruning rate — the
+    // matched-rate frontier the table-3 bench measures.
     let (g_m, g_n, ks) = (4usize, 4usize, 27usize);
-    let (pp, qq) = (cout.div_ceil(g_m), cin.div_ceil(g_n));
-    let mut mask = vec![false; pp * qq * ks];
-    for g in 0..pp * qq {
-        for i in 0..keep_locs.min(ks) {
-            mask[g * ks + (i * 7 + g) % ks] = true;
+    let keep = keep_locs.min(ks);
+    let unit_mask = Some(match scheme {
+        // Pattern (PatDNN): per-element mask; each kernel (m, c) picks one
+        // of an 8-entry tap-pattern dictionary.
+        "pattern" => {
+            let mut mask = vec![false; cout * cin * ks];
+            for m in 0..cout {
+                for c in 0..cin {
+                    let pat = (m * 5 + c * 3) % 8;
+                    for i in 0..keep {
+                        mask[(m * cin + c) * ks + (i * 7 + pat) % ks] = true;
+                    }
+                }
+            }
+            pb.mask(vec![cout, cin, 3, 3, 3], &mask)
         }
-    }
-    let unit_mask = Some(pb.mask(vec![pp, qq, ks], &mask));
+        // BlockPunched (PCONV/GRIM): one kept-K-column map per 4-filter
+        // block, holes uniform across the block's kernels.
+        "block_punched" => {
+            let pp = cout.div_ceil(g_m);
+            let k = cin * ks;
+            let mut mask = vec![false; pp * k];
+            for p in 0..pp {
+                for (ki, v) in mask[p * k..(p + 1) * k].iter_mut().enumerate() {
+                    // loc → (loc*7 + p) % 27 is a bijection per channel, so
+                    // exactly `keep` of every kernel's 27 taps survive.
+                    *v = ((ki % ks) * 7 + p) % ks < keep;
+                }
+            }
+            pb.mask(vec![pp, cin, 3, 3, 3], &mask)
+        }
+        // KGS (default): mask over (4x4) kernel groups.
+        _ => {
+            let (pp, qq) = (cout.div_ceil(g_m), cin.div_ceil(g_n));
+            let mut mask = vec![false; pp * qq * ks];
+            for g in 0..pp * qq {
+                for i in 0..keep {
+                    mask[g * ks + (i * 7 + g) % ks] = true;
+                }
+            }
+            pb.mask(vec![pp, qq, ks], &mask)
+        }
+    });
     Layer::Conv3d(ConvLayer {
         name: name.into(),
         in_ch: cin,
@@ -131,17 +169,30 @@ impl Model {
     /// Deterministic for a given config, so engines built from the same
     /// config produce bit-identical logits.
     pub fn synthetic_c3d(cfg: SyntheticC3d) -> Model {
+        Model::synthetic_c3d_scheme(cfg, "kgs")
+    }
+
+    /// [`Model::synthetic_c3d`] with a chosen sparsity scheme — `"kgs"`,
+    /// `"pattern"` (PatDNN dictionary masks) or `"block_punched"`
+    /// (PCONV/GRIM shared punched-column maps). All three keep the same
+    /// per-kernel tap count, so benches and tests compare schemes at a
+    /// matched FLOP pruning rate, artifact-free.
+    pub fn synthetic_c3d_scheme(cfg: SyntheticC3d, scheme: &str) -> Model {
+        assert!(
+            matches!(scheme, "kgs" | "pattern" | "block_punched"),
+            "unsupported synthetic scheme {scheme:?}"
+        );
         let [w1, w2, w3, w4] = cfg.widths;
         let mut pb = PoolBuilder { bytes: Vec::new() };
         let layers = vec![
-            conv(&mut pb, "conv1", 3, w1, cfg.keep_locs, 11),
+            conv(&mut pb, "conv1", 3, w1, cfg.keep_locs, scheme, 11),
             Layer::MaxPool3d { kernel: [1, 2, 2], stride: [1, 2, 2] },
-            conv(&mut pb, "conv2", w1, w2, cfg.keep_locs, 12),
+            conv(&mut pb, "conv2", w1, w2, cfg.keep_locs, scheme, 12),
             Layer::MaxPool3d { kernel: [2, 2, 2], stride: [2, 2, 2] },
-            conv(&mut pb, "conv3a", w2, w3, cfg.keep_locs, 13),
-            conv(&mut pb, "conv3b", w3, w3, cfg.keep_locs, 14),
+            conv(&mut pb, "conv3a", w2, w3, cfg.keep_locs, scheme, 13),
+            conv(&mut pb, "conv3b", w3, w3, cfg.keep_locs, scheme, 14),
             Layer::MaxPool3d { kernel: [2, 2, 2], stride: [2, 2, 2] },
-            conv(&mut pb, "conv4", w3, w4, cfg.keep_locs, 15),
+            conv(&mut pb, "conv4", w3, w4, cfg.keep_locs, scheme, 15),
             Layer::AvgPoolGlobal,
             dense(&mut pb, "fc1", w4, 2 * w4, true, 16),
             dense(&mut pb, "fc2", 2 * w4, cfg.classes, false, 17),
@@ -156,7 +207,7 @@ impl Model {
             bin: "<in-memory>".into(),
             eval_acc: None,
             sparsity: Some(SparsityInfo {
-                scheme: "kgs".into(),
+                scheme: scheme.into(),
                 g_m: 4,
                 g_n: 4,
                 rate: 27.0 / cfg.keep_locs.max(1) as f64,
@@ -187,18 +238,18 @@ impl Model {
         let [w1, w2, ..] = cfg.widths;
         let mut pb = PoolBuilder { bytes: Vec::new() };
         let layers = vec![
-            conv(&mut pb, "stem", 3, w1, cfg.keep_locs, 21),
+            conv(&mut pb, "stem", 3, w1, cfg.keep_locs, "kgs", 21),
             Layer::Residual {
                 name: "res1".into(),
-                body: vec![conv(&mut pb, "res1_conv", w1, w1, cfg.keep_locs, 22)],
+                body: vec![conv(&mut pb, "res1_conv", w1, w1, cfg.keep_locs, "kgs", 22)],
                 shortcut: vec![],
             },
             Layer::MaxPool3d { kernel: [1, 2, 2], stride: [1, 2, 2] },
             Layer::Concat {
                 name: "mix".into(),
                 branches: vec![
-                    vec![conv(&mut pb, "mix_a", w1, w2, cfg.keep_locs, 23)],
-                    vec![conv(&mut pb, "mix_b", w1, w2, cfg.keep_locs, 24)],
+                    vec![conv(&mut pb, "mix_a", w1, w2, cfg.keep_locs, "kgs", 23)],
+                    vec![conv(&mut pb, "mix_b", w1, w2, cfg.keep_locs, "kgs", 24)],
                 ],
             },
             Layer::AvgPoolGlobal,
@@ -258,6 +309,39 @@ mod tests {
         for c in m.conv_layers() {
             assert_eq!(m.pool.f32(&c.weights.w).len(), c.out_ch * c.in_ch * 27);
             assert!(c.unit_mask.is_some());
+        }
+    }
+
+    #[test]
+    fn scheme_variants_shapes_and_rates() {
+        let kgs = Model::synthetic_c3d_scheme(SyntheticC3d::tiny(), "kgs");
+        let pat = Model::synthetic_c3d_scheme(SyntheticC3d::tiny(), "pattern");
+        let bp = Model::synthetic_c3d_scheme(SyntheticC3d::tiny(), "block_punched");
+        assert_eq!(pat.manifest.sparsity.as_ref().unwrap().scheme, "pattern");
+        assert_eq!(
+            bp.manifest.sparsity.as_ref().unwrap().scheme,
+            "block_punched"
+        );
+        // Matched FLOP rate across schemes by construction.
+        assert_eq!(
+            kgs.manifest.sparsity.as_ref().unwrap().flops_sparse,
+            pat.manifest.sparsity.as_ref().unwrap().flops_sparse,
+        );
+        for c in pat.conv_layers() {
+            let mask = pat.pool.bool(c.unit_mask.as_ref().unwrap());
+            assert_eq!(mask.len(), c.out_ch * c.in_ch * 27, "per-element mask");
+            // Every kernel keeps exactly keep_locs taps.
+            for kern in mask.chunks(27) {
+                assert_eq!(kern.iter().filter(|&&b| b).count(), 9);
+            }
+        }
+        for c in bp.conv_layers() {
+            let mask = bp.pool.bool(c.unit_mask.as_ref().unwrap());
+            let k = c.in_ch * 27;
+            assert_eq!(mask.len(), c.out_ch.div_ceil(4) * k, "per-block map");
+            for block in mask.chunks(k) {
+                assert_eq!(block.iter().filter(|&&b| b).count(), c.in_ch * 9);
+            }
         }
     }
 

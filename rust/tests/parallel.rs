@@ -164,6 +164,113 @@ fn vanilla_conv_bit_identical_across_threads() {
 }
 
 #[test]
+fn pattern_conv_bit_identical_across_threads() {
+    let (m, c) = (13usize, 8usize); // ragged M vs g_m=4
+    let sp = [3usize, 5, 5];
+    let layer = conv_layer(m, c);
+    let g = geom(m, c, sp);
+    let w = Tensor5::random([m, c, 3, 3, 3], 251);
+    // Per-kernel dictionary masks: kernel (mi, ci) keeps one of 4 patterns.
+    let ks = 27usize;
+    let mut mask = vec![false; m * c * ks];
+    for mi in 0..m {
+        for ci in 0..c {
+            let pat = (mi + 2 * ci) % 4;
+            for i in 0..9 {
+                mask[(mi * c + ci) * ks + (i * 7 + pat) % ks] = true;
+            }
+        }
+    }
+    let bias: Vec<f32> = (0..m).map(|i| 0.02 * i as f32).collect();
+    let cc = codegen::compile_conv_sparse(
+        &layer, &g, &w.data, bias, &mask, Scheme::Pattern, 4, 4,
+    );
+    let x = Tensor5::random([2, c, sp[0], sp[1], sp[2]], 252);
+    let pt = executors::im2col_t(&x, &g);
+    let serial = run_threads(&cc, &pt, 1);
+    for threads in [2usize, 4, 8] {
+        assert_eq!(serial.data, run_threads(&cc, &pt, threads).data, "t={threads}");
+    }
+}
+
+#[test]
+fn block_punched_conv_bit_identical_across_threads() {
+    let (m, c) = (10usize, 6usize); // ragged M vs g_m=4
+    let sp = [3usize, 4, 4];
+    let layer = conv_layer(m, c);
+    let g = geom(m, c, sp);
+    let w = Tensor5::random([m, c, 3, 3, 3], 261);
+    let (pp, k) = (m.div_ceil(4), c * 27);
+    let mask: Vec<bool> = (0..pp * k).map(|i| (i * 17) % 3 != 0).collect();
+    let cc = codegen::compile_conv_sparse(
+        &layer, &g, &w.data, vec![0.0; m], &mask, Scheme::BlockPunched, 4, 4,
+    );
+    let x = Tensor5::random([1, c, sp[0], sp[1], sp[2]], 262);
+    let pt = executors::im2col_t(&x, &g);
+    let serial = run_threads(&cc, &pt, 1);
+    for threads in [3usize, 6] {
+        assert_eq!(serial.data, run_threads(&cc, &pt, threads).data, "t={threads}");
+    }
+}
+
+/// Pattern / BlockPunched differential vs the naive dense-with-zeros
+/// oracle (the central correctness claim for the two new plan kinds):
+/// compile with the scheme mask, zero the same weights in a dense copy,
+/// run the naive interpreter on it, compare.
+#[test]
+fn pattern_block_punched_match_masked_dense_oracle() {
+    let (m, c) = (13usize, 8usize);
+    let sp = [3usize, 5, 5];
+    let ks = 27usize;
+    let layer = conv_layer(m, c);
+    let g = geom(m, c, sp);
+    let w = Tensor5::random([m, c, 3, 3, 3], 271);
+    let x = Tensor5::random([1, c, sp[0], sp[1], sp[2]], 272);
+    let pp = m.div_ceil(4);
+    let pat_mask: Vec<bool> =
+        (0..m * c * ks).map(|i| (i * 7) % 3 != 1).collect();
+    let bp_mask: Vec<bool> =
+        (0..pp * c * ks).map(|i| (i * 13) % 4 != 2).collect();
+    for (label, scheme) in [
+        ("pattern", Scheme::Pattern),
+        ("block_punched", Scheme::BlockPunched),
+    ] {
+        let mask = match scheme {
+            Scheme::Pattern => &pat_mask,
+            _ => &bp_mask,
+        };
+        let cc = codegen::compile_conv_sparse(
+            &layer, &g, &w.data, vec![0.0; m], mask, scheme, 4, 4,
+        );
+        // Dense-with-zeros oracle weights.
+        let mut wm = w.data.clone();
+        for mi in 0..m {
+            for ci in 0..c {
+                for loc in 0..ks {
+                    let kept = match scheme {
+                        Scheme::Pattern => pat_mask[(mi * c + ci) * ks + loc],
+                        _ => bp_mask[((mi / 4) * c + ci) * ks + loc],
+                    };
+                    if !kept {
+                        wm[(mi * c + ci) * ks + loc] = 0.0;
+                    }
+                }
+            }
+        }
+        let bias = vec![0.0; m];
+        let want = executors::naive::conv3d_naive(&x, &wm, &bias, &g, false);
+        let pt = executors::im2col_t(&x, &g);
+        let mut out = Mat::zeros(m, pt.cols);
+        executors::run_compiled_conv(&cc, &pt, &mut out);
+        let got = executors::mat_to_tensor(&out, 1, g.out_spatial());
+        assert!(
+            got.max_abs_diff(&want) < 1e-3,
+            "{label} diverges from the masked dense oracle"
+        );
+    }
+}
+
+#[test]
 fn filter_conv_bit_identical_across_threads() {
     let (m, c) = (6usize, 4usize);
     let sp = [4usize, 4, 4];
@@ -329,7 +436,7 @@ fn per_layer_thread_cap_keeps_parity() {
 }
 
 /// The fused implicit-GEMM path must reproduce the materialized
-/// im2col+GEMM path bit for bit — across all four plan kinds, sparsity
+/// im2col+GEMM path bit for bit — across all six plan kinds, sparsity
 /// schemes, tiles (the kc block walk is part of the accumulation-order
 /// contract), thread counts and kernel variants, with a multi-clip batch
 /// so the on-the-fly patch formation crosses clip boundaries.
@@ -345,6 +452,8 @@ fn fused_matches_materialized_all_plan_kinds() {
     let kgs_mask: Vec<bool> = (0..pp * qq * ks).map(|i| (i * 11) % 3 != 0).collect();
     let van_mask: Vec<bool> = (0..pp * qq).map(|i| i % 4 != 1).collect();
     let fil_mask: Vec<bool> = (0..m).map(|i| i % 3 != 1).collect();
+    let pat_mask: Vec<bool> = (0..m * c * ks).map(|i| (i * 7) % 3 != 1).collect();
+    let bp_mask: Vec<bool> = (0..pp * c * ks).map(|i| (i * 13) % 4 != 2).collect();
     let plans = [
         ("dense", codegen::compile_conv_dense(&layer, &g, &w.data, bias.clone())),
         (
@@ -357,6 +466,19 @@ fn fused_matches_materialized_all_plan_kinds() {
             "vanilla",
             codegen::compile_conv_sparse(
                 &layer, &g, &w.data, bias.clone(), &van_mask, Scheme::Vanilla, 4, 4,
+            ),
+        ),
+        (
+            "pattern",
+            codegen::compile_conv_sparse(
+                &layer, &g, &w.data, bias.clone(), &pat_mask, Scheme::Pattern, 4, 4,
+            ),
+        ),
+        (
+            "block_punched",
+            codegen::compile_conv_sparse(
+                &layer, &g, &w.data, bias.clone(), &bp_mask,
+                Scheme::BlockPunched, 4, 4,
             ),
         ),
         (

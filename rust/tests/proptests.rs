@@ -109,10 +109,17 @@ fn prop_sparse_executor_equals_masked_dense() {
         let w = Tensor5::random([m, c, 3, 3, 3], 900 + case).data;
         let pp = m.div_ceil(g_m);
         let qq = c.div_ceil(g_n);
-        let scheme = [Scheme::Kgs, Scheme::Vanilla][rng.below(2)];
+        let scheme = [
+            Scheme::Kgs,
+            Scheme::Vanilla,
+            Scheme::Pattern,
+            Scheme::BlockPunched,
+        ][rng.below(4)];
         let units = match scheme {
             Scheme::Kgs => pp * qq * ks,
             Scheme::Vanilla => pp * qq,
+            Scheme::Pattern => m * c * ks,
+            Scheme::BlockPunched => pp * c * ks,
             Scheme::Filter => m,
         };
         let mask: Vec<bool> = (0..units).map(|_| rng.bool(0.6)).collect();
@@ -136,6 +143,10 @@ fn prop_sparse_executor_equals_masked_dense() {
                             mask[((mi / g_m) * qq + ci / g_n) * ks + loc]
                         }
                         Scheme::Vanilla => mask[(mi / g_m) * qq + ci / g_n],
+                        Scheme::Pattern => mask[(mi * c + ci) * ks + loc],
+                        Scheme::BlockPunched => {
+                            mask[((mi / g_m) * c + ci) * ks + loc]
+                        }
                         Scheme::Filter => mask[mi],
                     };
                     if !keep {

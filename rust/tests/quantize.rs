@@ -212,6 +212,85 @@ fn artifact_scales_round_trip_through_repacks() {
     assert_eq!(want.data, got.data, "executor ignored the provided grid");
 }
 
+/// Static calibration scales win over dynamic absmax: with a `"quant"`
+/// manifest block carrying a non-null `in_scale`, `layer_input_scale`
+/// must return exactly the calibrated value — regardless of the
+/// activation tensor — and fall back to the dynamic symmetric absmax
+/// scale only when the exporter provided none.
+#[test]
+fn static_in_scale_preferred_over_dynamic_absmax() {
+    use rt3d::model::{ConvLayer, TensorRef, WeightRefs};
+    let dummy = TensorRef { offset: 0, shape: vec![], dtype: "f32".into() };
+    let layer = ConvLayer {
+        name: "cal".into(),
+        in_ch: 2,
+        out_ch: 4,
+        kernel: [3, 3, 3],
+        stride: [1, 1, 1],
+        padding: [1, 1, 1],
+        relu: false,
+        weights: WeightRefs { w: dummy.clone(), b: dummy },
+        weights_sparse: None,
+        unit_mask: None,
+        quant: None,
+    };
+    let geom = rt3d::tensor::Conv3dGeometry {
+        in_ch: 2,
+        out_ch: 4,
+        kernel: [3, 3, 3],
+        stride: [1, 1, 1],
+        padding: [1, 1, 1],
+        in_spatial: [3, 4, 4],
+    };
+    let w = Tensor5::random([4, 2, 3, 3, 3], 21).data;
+    let mut cc = codegen::compile_conv_dense(&layer, &geom, &w, vec![0.0; 4]);
+    let x = Tensor5::random([1, 2, 3, 4, 4], 22);
+
+    // No calibration: dynamic absmax fallback, input-dependent.
+    let plan = cc.int8.as_ref().unwrap();
+    assert_eq!(plan.in_scale, None);
+    let dynamic = rt3d::executors::layer_input_scale(plan, &x);
+    assert_eq!(
+        dynamic,
+        codegen::quant_scale(codegen::absmax(&x.data)),
+        "without calibration the scale must be the dynamic absmax scale"
+    );
+
+    // Calibrated: the static scale wins even though it disagrees with
+    // the activation's own absmax.
+    let scales = plan.scales.clone();
+    let static_scale = dynamic * 3.0;
+    cc.apply_quant(&scales, Some(static_scale));
+    let plan = cc.int8.as_ref().unwrap();
+    assert_eq!(
+        rt3d::executors::layer_input_scale(plan, &x),
+        static_scale,
+        "calibrated in_scale must be preferred over dynamic absmax"
+    );
+    // And it actually changes the executed quantization grid.
+    let call = cc.bind_exec(geom.in_spatial, None, None, Precision::Int8);
+    let patches = rt3d::executors::im2col_t(&x, &geom);
+    let run = |scale: f32| {
+        let mut qp = rt3d::tensor::MatI8::zeros(patches.rows, patches.cols);
+        codegen::quantize_span(&patches.data, 1.0 / scale, &mut qp.data);
+        let mut out = Mat::zeros(4, patches.cols);
+        rt3d::executors::run_conv_bound_i8(
+            &call,
+            scale,
+            &qp,
+            &mut out,
+            &rt3d::util::pool::ThreadPool::new(1),
+            &rt3d::executors::AccSlabs::new(1),
+        );
+        out
+    };
+    assert_ne!(
+        run(static_scale).data,
+        run(dynamic).data,
+        "static and dynamic grids must be distinguishable in the output"
+    );
+}
+
 /// Steady state allocates nothing: after the first forward warmed every
 /// int8 buffer (i32 accumulator slabs, i8 panels, the quantized patch
 /// matrix), further forwards must not grow the arena, the recycler, or

@@ -51,7 +51,14 @@ LATENCY_KEYS = ("p95_ms", "p50_ms", "p95_ms_1t", "p50_ms_1t",
                 "fused_peak_scratch_mb", "materialized_peak_scratch_mb",
                 "shed_rate", "failed_rate", "net_p95_ms",
                 "fleet_p50_ms", "fleet_p99_ms", "fleet_p999_ms",
-                "fleet_shed_rate")
+                "fleet_shed_rate",
+                # table3 four-scheme frontier: per-scheme single-layer
+                # latency at matched ~3x FLOP rates, plus end-to-end
+                # synthetic-C3D forward latency for the schemes that have
+                # artifact-free synthetic variants (Vanilla is layer-level
+                # only). BENCH_table3.json.
+                "vanilla_ms", "kgs_ms", "pattern_ms", "block_punched_ms",
+                "kgs_e2e_ms", "pattern_e2e_ms", "block_punched_e2e_ms")
 # Throughput-style keys: smaller is worse. The int8 keys gate the
 # quantized GEMM path: int8_best_gflops is its raw throughput and
 # int8_speedup_vs_f32 its advantage over the f32 SIMD kernels — the
@@ -60,7 +67,12 @@ LATENCY_KEYS = ("p95_ms", "p50_ms", "p95_ms_1t", "p50_ms_1t",
 # track what the wire front door adds on top of the in-process pipeline.
 THROUGHPUT_KEYS = ("saturation_clips_per_s", "fused_best_gflops",
                    "int8_best_gflops", "int8_speedup_vs_f32",
-                   "net_clips_per_s")
+                   "net_clips_per_s",
+                   # table3 per-scheme effective GFLOP/s (kept FLOPs over
+                   # median layer latency) — the throughput side of the
+                   # four-scheme frontier.
+                   "vanilla_gflops", "kgs_gflops", "pattern_gflops",
+                   "block_punched_gflops")
 # Context carried into a refreshed baseline from the first run.
 CONTEXT_KEYS = ("bench", "model", "threads", "isa_detected", "kernel",
                 "simd_lanes", "workers_best", "workers", "sessions",
